@@ -1,0 +1,43 @@
+//! Quickstart: the three-layer stack in ~40 lines.
+//!
+//! Loads the AOT artifacts (JAX/Pallas tiny MLLM lowered to HLO text),
+//! verifies the rust path reproduces the python golden generation
+//! bit-exactly, then serves one multimodal and one text-only request.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use epd_serve::engine::RealEngine;
+use epd_serve::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = RealEngine::load("artifacts")?;
+    println!("platform       : {}", engine.platform());
+    let m = engine.manifest().clone();
+    println!(
+        "model          : tiny-mllm  ({} layers, dim {}, {} visual + {} text tokens, vocab {})",
+        m.layers, m.dim, m.vis, m.txt, m.vocab
+    );
+
+    // Layer-1/2/3 integrity: rust must reproduce python's golden generation.
+    engine.self_check()?;
+    println!("self-check     : golden tokens reproduced ✓");
+
+    // A multimodal request: random image + short prompt (E → P → D path).
+    let mut rng = Rng::new(1);
+    let image: Vec<f32> =
+        (0..m.img * m.img * 3).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let prompt = [12, 77, 300];
+    let t0 = std::time::Instant::now();
+    let tokens = engine.generate(Some(&image), &prompt, 8)?;
+    println!("multimodal gen : {tokens:?}  ({:.1} ms)", t0.elapsed().as_secs_f64() * 1e3);
+
+    // A text-only request (P → D path, visual slots masked out).
+    let t0 = std::time::Instant::now();
+    let tokens = engine.generate(None, &prompt, 8)?;
+    println!("text-only gen  : {tokens:?}  ({:.1} ms)", t0.elapsed().as_secs_f64() * 1e3);
+
+    println!("\nNext: cargo run --release --example serve_workload");
+    Ok(())
+}

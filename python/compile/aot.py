@@ -1,0 +1,134 @@
+"""AOT lowering: jit the three stage functions and dump HLO **text**.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowering uses ``return_tuple=True`` so the rust side
+unwraps one tuple per executable.
+
+Outputs (under ``--out-dir``, default ``artifacts/``):
+
+* ``encoder.hlo.txt``      — image → visual features,
+* ``prefill.hlo.txt``      — (visual, text, lens) → first token + KV state,
+* ``decode_step.hlo.txt``  — one autoregressive step,
+* ``manifest.json``        — static shapes + golden outputs for the rust
+  runtime's self-check.
+
+Run via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default elides weight
+    # constants as `constant({...})`, which the rust-side text parser reads
+    # back as zeros — silently zeroing the model.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="(compat) single-artifact path; ignored")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.CFG
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = M.init_params(cfg, seed=args.seed)
+
+    # --- encoder -----------------------------------------------------------
+    def encoder_fn(image):
+        return (M.encode(params, image, cfg),)
+
+    img_spec = jax.ShapeDtypeStruct((cfg.img, cfg.img, 3), jnp.float32)
+    enc_lowered = jax.jit(encoder_fn).lower(img_spec)
+    with open(f"{out_dir}/encoder.hlo.txt", "w") as f:
+        f.write(to_hlo_text(enc_lowered))
+
+    # --- prefill ------------------------------------------------------------
+    def prefill_fn(visual, text_ids, vis_len, txt_len):
+        return M.prefill(params, visual, text_ids, vis_len, txt_len, cfg)
+
+    vis_spec = jax.ShapeDtypeStruct((cfg.vis, cfg.dim), jnp.float32)
+    txt_spec = jax.ShapeDtypeStruct((cfg.txt,), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pre_lowered = jax.jit(prefill_fn).lower(vis_spec, txt_spec, len_spec, len_spec)
+    with open(f"{out_dir}/prefill.hlo.txt", "w") as f:
+        f.write(to_hlo_text(pre_lowered))
+
+    # --- decode step ---------------------------------------------------------
+    def decode_fn(token, k_cache, v_cache, bias_cache, write_pos):
+        return M.decode_step(params, token, k_cache, v_cache, bias_cache, write_pos, cfg)
+
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    kv_spec = jax.ShapeDtypeStruct((cfg.layers, cfg.cache, cfg.heads, cfg.head_dim), jnp.float32)
+    bias_spec = jax.ShapeDtypeStruct((cfg.cache,), jnp.float32)
+    dec_lowered = jax.jit(decode_fn).lower(tok_spec, kv_spec, kv_spec, bias_spec, len_spec)
+    with open(f"{out_dir}/decode_step.hlo.txt", "w") as f:
+        f.write(to_hlo_text(dec_lowered))
+
+    # --- golden vector + manifest -------------------------------------------
+    rng = np.random.default_rng(7)
+    image_np = rng.uniform(-1, 1, size=(cfg.img, cfg.img, 3)).astype(np.float32)
+    image = jnp.asarray(image_np)
+    # The exact golden image ships as raw little-endian f32 so the rust
+    # runtime's self-check uses bit-identical input (numpy's PCG64 is not
+    # reproduced cross-language).
+    image_np.tofile(f"{out_dir}/golden_image.f32")
+    text = jnp.zeros((cfg.txt,), jnp.int32).at[:4].set(jnp.array([5, 17, 101, 3]))
+    golden_tokens = M.generate(params, image, text, jnp.int32(4), steps=6, cfg=cfg)
+
+    manifest = {
+        "model": "tiny-mllm",
+        "dtype": "f32",
+        "img": cfg.img,
+        "patch": cfg.patch,
+        "vis": cfg.vis,
+        "txt": cfg.txt,
+        "prompt": cfg.prompt,
+        "gen": cfg.gen,
+        "cache": cfg.cache,
+        "dim": cfg.dim,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "head_dim": cfg.head_dim,
+        "vocab": cfg.vocab,
+        "seed": args.seed,
+        "golden": {
+            "image_seed": 7,
+            "image_file": "golden_image.f32",
+            "text_ids": [5, 17, 101, 3],
+            "txt_len": 4,
+            "tokens": [int(t) for t in golden_tokens],
+        },
+        "artifacts": ["encoder.hlo.txt", "prefill.hlo.txt", "decode_step.hlo.txt"],
+    }
+    with open(f"{out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+    sizes = {
+        name: os.path.getsize(f"{out_dir}/{name}")
+        for name in manifest["artifacts"]
+    }
+    print(f"wrote artifacts to {out_dir}: {sizes}; golden tokens {manifest['golden']['tokens']}")
+
+
+if __name__ == "__main__":
+    main()

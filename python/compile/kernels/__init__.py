@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the EPD-Serve tiny multimodal model.
+
+Kernels (all authored for the TPU memory hierarchy, executed with
+``interpret=True`` so the CPU PJRT client can run the lowered HLO — real-TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot execute):
+
+* :func:`flash_attention.flash_attention` — tiled online-softmax attention
+  (the Encode/Prefill hot-spot; Fig 2's quadratic term lives here).
+* :func:`decode_attention.decode_attention` — single-token attention over a
+  padded KV cache (the Decode hot-spot).
+
+``ref.py`` holds the pure-jnp oracles every kernel is pytest-verified
+against.
+"""
+
+from . import decode_attention, flash_attention, ref, rmsnorm  # noqa: F401

@@ -1,0 +1,65 @@
+"""Single-token (decode) attention over a padded KV cache, as a Pallas
+kernel.
+
+The Decode stage's hot-spot: one query token per step attends to the whole
+cache. On Ascend this is the memory-bandwidth-bound operator that makes
+Decode complementary to Encode under co-location (§3.5); in the TPU model it
+is an HBM→VMEM streaming reduction — each grid step loads one head's cache
+slab and keeps only ``[C]``-sized score vectors live.
+
+A per-position additive ``bias`` vector masks padded/unwritten cache slots,
+so one AOT-compiled executable serves every context length up to the cache
+capacity (essential for the AOT architecture: shapes must be static) *and*
+tolerates non-contiguous validity (text-only requests leave the visual slots
+masked).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(bias_ref, q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0, :]  # [dh]
+    k = k_ref[0, :, :]  # [c, dh] (head-major cache slab)
+    v = v_ref[0, :, :]
+    dh = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))).astype(q.dtype)
+    s = jnp.dot(k, q) * scale + bias_ref[...]  # [c] — streaming reduction
+    m = s.max()
+    p = jnp.exp(s - m)
+    l = p.sum()
+    o_ref[0, :] = jnp.dot(p, v) / l
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, bias):
+    """Attention for one new token.
+
+    Args:
+      q: ``[H, Dh]`` query.
+      k_cache, v_cache: ``[C, H, Dh]`` padded caches.
+      bias: ``[C]`` additive bias; ``NEG_INF`` masks invalid/unwritten slots.
+
+    Returns:
+      ``[H, Dh]``.
+    """
+    c, h, dh = k_cache.shape
+    kh = jnp.swapaxes(k_cache, 0, 1)  # [H, C, Dh]
+    vh = jnp.swapaxes(v_cache, 0, 1)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda hh: (0,)),
+            pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+            pl.BlockSpec((1, c, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, c, dh), lambda hh: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda hh: (hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        interpret=True,
+    )(bias, q, kh, vh)
+    return out

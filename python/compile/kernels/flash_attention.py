@@ -1,0 +1,95 @@
+"""Tiled online-softmax (flash) attention as a Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Encode and
+Prefill hot-spots run as cube-engine matmuls on Ascend. Here the same
+structure targets the TPU model Pallas exposes:
+
+* the grid iterates ``(head, q-block)``; each step streams K/V blocks from
+  HBM into VMEM via ``BlockSpec``-shaped tiles,
+* the two block matmuls (``q·kᵀ`` and ``p·v``) map onto the MXU,
+* the running row-max/row-sum softmax statistics stay in registers/VMEM
+  (the VPU side), so no ``[S, S]`` score matrix ever materializes.
+
+VMEM footprint per grid step = ``BQ·Dh + 2·S·Dh + BQ·BK`` floats — with the
+default 64-wide blocks and ``Dh ≤ 128`` this is well under the ≈16 MB VMEM
+budget (see DESIGN.md §Perf for the roofline estimate).
+
+``interpret=True`` is mandatory on CPU: real-TPU lowering produces a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(bias_ref, q_ref, k_ref, v_ref, o_ref, *, bq, bk, causal, seq_len):
+    """One (head, q-block) grid step: stream K/V blocks, online softmax."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :]  # [bq, dh]
+    dh = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))).astype(q.dtype)
+
+    n_kblocks = seq_len // bk
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)  # absolute q positions
+
+    def body(ki, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None)))  # [bk, dh]
+        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None)))
+        s = jnp.dot(q, k.T) * scale  # [bq, bk] — MXU matmul
+        k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
+        s = s + pl.load(bias_ref, (pl.dslice(ki * bk, bk),))[None, :]
+        if causal:
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
+        # Online softmax update (VPU side).
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)  # MXU matmul
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros_like(q)
+    m0 = jnp.full((bq,), NEG_INF, dtype=q.dtype)
+    l0 = jnp.zeros((bq,), dtype=q.dtype)
+    acc, _, l = jax.lax.fori_loop(0, n_kblocks, body, (acc0, m0, l0))
+    o_ref[0, :, :] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, bias, *, causal: bool, block_q: int = 64, block_k: int = 64):
+    """Flash attention over ``[S, H, Dh]`` tensors with a ``[S]`` key bias.
+
+    ``bias`` is an additive per-key bias (``NEG_INF`` masks padding keys).
+    ``S`` must be divisible by the block sizes (the model pads to this).
+    Returns ``[S, H, Dh]``.
+    """
+    s, h, dh = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, f"S={s} not divisible by blocks {bq}/{bk}"
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal, seq_len=s)
+    # Heads to the front so each grid step sees clean per-head tiles.
+    qh = jnp.swapaxes(q, 0, 1)  # [H, S, Dh]
+    kh = jnp.swapaxes(k, 0, 1)
+    vh = jnp.swapaxes(v, 0, 1)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((s,), lambda hh, qq: (0,)),  # bias: whole row
+            pl.BlockSpec((1, bq, dh), lambda hh, qq: (hh, qq, 0)),  # q tile
+            pl.BlockSpec((1, s, dh), lambda hh, qq: (hh, 0, 0)),  # k head slab
+            pl.BlockSpec((1, s, dh), lambda hh, qq: (hh, 0, 0)),  # v head slab
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, dh), q.dtype),
+        interpret=True,
+    )(bias, qh, kh, vh)
+    return jnp.swapaxes(out, 0, 1)  # back to [S, H, Dh]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: simple, obviously-right attention
+implementations that the kernels must match to float tolerance under pytest
+(and hypothesis shape sweeps).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool, bias=None):
+    """Reference multi-head attention.
+
+    Args:
+      q, k, v: ``[S, H, Dh]`` arrays (same sequence length for q and k/v).
+      causal: apply a lower-triangular mask.
+      bias: optional ``[S]`` additive key bias (``NEG_INF`` masks a key).
+
+    Returns:
+      ``[S, H, Dh]`` attention output.
+    """
+    s, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    # [H, S, S]
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    if bias is not None:
+        logits = logits + bias[None, None, :]
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, bias):
+    """Reference single-token attention over a padded cache.
+
+    Args:
+      q: ``[H, Dh]`` query for the new token.
+      k_cache, v_cache: ``[C, H, Dh]`` padded caches.
+      bias: ``[C]`` additive bias (``NEG_INF`` masks invalid slots).
+
+    Returns:
+      ``[H, Dh]`` attention output.
+    """
+    c, h, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(dh, dtype=q.dtype))
+    logits = jnp.einsum("hd,chd->hc", q, k_cache) * scale + bias[None, :]
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hc,chd->hd", probs, v_cache)
+
+
+def length_bias(c: int, cur_len) -> jnp.ndarray:
+    """Bias vector masking everything at or beyond ``cur_len``."""
+    return jnp.where(jnp.arange(c) < cur_len, 0.0, NEG_INF).astype(jnp.float32)

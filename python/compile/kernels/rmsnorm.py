@@ -1,0 +1,49 @@
+"""Fused RMSNorm as a Pallas kernel.
+
+RMSNorm appears before every attention and MLP block (2·layers instances per
+forward). On Ascend it is a vector-engine operator (Fig 6's `Norm` class —
+vector + bandwidth, nearly free to co-locate with cube-bound matmuls); in
+the TPU model it is a VPU row reduction fused with the scale multiply, one
+``[block, D]`` tile per grid step so the row statistics never leave VMEM.
+
+Used by the L2 model optionally (the jnp version lowers to the same fused
+HLO on CPU); kept primarily as an L1 building block with its own oracle
+tests, mirroring how the paper's operator taxonomy treats Norm separately.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...]  # [block, d]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * w_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "eps"))
+def rmsnorm(x, weight, *, block: int = 32, eps: float = 1e-6):
+    """Row-wise RMSNorm of ``[S, D]`` with a ``[D]`` scale."""
+    s, d = x.shape
+    b = min(block, s)
+    assert s % b == 0, f"S={s} not divisible by block {b}"
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(s // b,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=True,
+    )(x, weight)
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-6):
+    """Pure-jnp oracle."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight

@@ -1,0 +1,247 @@
+"""Layer-2: the tiny multimodal model (ViT encoder + decoder LM) in JAX.
+
+This is the *real-execution* counterpart of the analytic cost model: an
+openPangu-7B-VL-shaped architecture scaled to ~8 M parameters so the CPU
+PJRT client can serve it interactively. Structure mirrors Fig 1:
+
+* :func:`encode`      — ViT over an image → visual token features (Eq. 1),
+* :func:`prefill`     — LM over [visual ⊕ text] → first token + KV (Eq. 2),
+* :func:`decode_step` — autoregressive single-token step (Eq. 3).
+
+All three call the Layer-1 Pallas kernels, so they lower into the same HLO
+the rust runtime executes. Shapes are static (AOT requirement); validity is
+carried by additive bias vectors, letting one compiled executable serve any
+(visual, text, generated) length mix. Weights are baked into the HLO as
+constants — the artifact is fully self-contained.
+"""
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.flash_attention import NEG_INF, flash_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static dimensions of the tiny MLLM (and its AOT artifacts)."""
+
+    img: int = 64          # image side, pixels
+    patch: int = 8         # ViT patch side
+    vit_dim: int = 128
+    vit_layers: int = 2
+    vit_heads: int = 4
+    dim: int = 256         # LM hidden
+    layers: int = 4
+    heads: int = 4
+    vocab: int = 512
+    inter: int = 512       # MLP intermediate
+    txt: int = 32          # max text tokens
+    gen: int = 64          # max generated tokens
+    block: int = 32        # pallas block size for prefill attention
+
+    @property
+    def vis(self) -> int:  # visual tokens
+        return (self.img // self.patch) ** 2
+
+    @property
+    def prompt(self) -> int:
+        return self.vis + self.txt
+
+    @property
+    def cache(self) -> int:
+        return self.prompt + self.gen
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def vit_head_dim(self) -> int:
+        return self.vit_dim // self.vit_heads
+
+
+CFG = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig = CFG, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic ~8 M-parameter initialization."""
+    rng = np.random.default_rng(seed)
+
+    def w(*shape):
+        return jnp.asarray(rng.normal(0.0, 0.02, size=shape), jnp.float32)
+
+    p = {
+        # ViT
+        "vit_patch_w": w(cfg.patch * cfg.patch * 3, cfg.vit_dim),
+        "vit_pos": w(cfg.vis, cfg.vit_dim),
+        "vit_out": w(cfg.vit_dim, cfg.dim),
+        # LM
+        "embed": w(cfg.vocab, cfg.dim),
+        "pos": w(cfg.cache, cfg.dim),
+        "final_norm": jnp.ones((cfg.dim,), jnp.float32),
+    }
+    for l in range(cfg.vit_layers):
+        p[f"vit{l}_norm1"] = jnp.ones((cfg.vit_dim,), jnp.float32)
+        p[f"vit{l}_qkv"] = w(cfg.vit_dim, 3 * cfg.vit_dim)
+        p[f"vit{l}_o"] = w(cfg.vit_dim, cfg.vit_dim)
+        p[f"vit{l}_norm2"] = jnp.ones((cfg.vit_dim,), jnp.float32)
+        p[f"vit{l}_up"] = w(cfg.vit_dim, 2 * cfg.vit_dim)
+        p[f"vit{l}_down"] = w(2 * cfg.vit_dim, cfg.vit_dim)
+    for l in range(cfg.layers):
+        p[f"lm{l}_norm1"] = jnp.ones((cfg.dim,), jnp.float32)
+        p[f"lm{l}_qkv"] = w(cfg.dim, 3 * cfg.dim)
+        p[f"lm{l}_o"] = w(cfg.dim, cfg.dim)
+        p[f"lm{l}_norm2"] = jnp.ones((cfg.dim,), jnp.float32)
+        p[f"lm{l}_gate"] = w(cfg.dim, cfg.inter)
+        p[f"lm{l}_up"] = w(cfg.dim, cfg.inter)
+        p[f"lm{l}_down"] = w(cfg.inter, cfg.dim)
+    return p
+
+
+def rms_norm(x, weight):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * weight
+
+
+# ---------------------------------------------------------------------------
+# Encode (Eq. 1): image -> visual features
+# ---------------------------------------------------------------------------
+
+def encode(params, image, cfg: ModelConfig = CFG):
+    """ViT: ``[img, img, 3]`` → ``[vis, dim]`` visual features."""
+    n = cfg.img // cfg.patch
+    patches = image.reshape(n, cfg.patch, n, cfg.patch, 3)
+    patches = patches.transpose(0, 2, 1, 3, 4).reshape(cfg.vis, -1)
+    x = patches @ params["vit_patch_w"] + params["vit_pos"]
+    zero_bias = jnp.zeros((cfg.vis,), jnp.float32)
+    for l in range(cfg.vit_layers):
+        h = rms_norm(x, params[f"vit{l}_norm1"])
+        qkv = h @ params[f"vit{l}_qkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(cfg.vis, cfg.vit_heads, cfg.vit_head_dim)
+        k = k.reshape(cfg.vis, cfg.vit_heads, cfg.vit_head_dim)
+        v = v.reshape(cfg.vis, cfg.vit_heads, cfg.vit_head_dim)
+        attn = flash_attention(q, k, v, zero_bias, causal=False, block_q=cfg.block, block_k=cfg.block)
+        x = x + attn.reshape(cfg.vis, cfg.vit_dim) @ params[f"vit{l}_o"]
+        h = rms_norm(x, params[f"vit{l}_norm2"])
+        up = h @ params[f"vit{l}_up"]
+        x = x + jax.nn.gelu(up) @ params[f"vit{l}_down"]
+    return x @ params["vit_out"]  # [vis, dim]
+
+
+# ---------------------------------------------------------------------------
+# Prefill (Eq. 2): [visual ⊕ text] -> first token + KV cache
+# ---------------------------------------------------------------------------
+
+def prefill(params, visual, text_ids, vis_len, txt_len, cfg: ModelConfig = CFG):
+    """Prefill the prompt.
+
+    Args:
+      visual: ``[vis, dim]`` encoder features (zeros for text-only).
+      text_ids: ``[txt]`` int32 token ids (padded).
+      vis_len: scalar int32 — valid visual tokens (0 for text-only).
+      txt_len: scalar int32 — valid text tokens (≥ 1).
+
+    Returns:
+      ``(first_token i32, k_cache [L,C,H,Dh], v_cache, bias_cache [C],
+      write_pos i32)``.
+    """
+    s, c = cfg.prompt, cfg.cache
+    text_emb = params["embed"][text_ids]  # [txt, dim]
+    x = jnp.concatenate([visual, text_emb], axis=0) + params["pos"][:s]
+
+    idx = jnp.arange(s)
+    valid = jnp.where(idx < cfg.vis, idx < vis_len, idx - cfg.vis < txt_len)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+    k_cache = jnp.zeros((cfg.layers, c, cfg.heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for l in range(cfg.layers):
+        h = rms_norm(x, params[f"lm{l}_norm1"])
+        qkv = h @ params[f"lm{l}_qkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(s, cfg.heads, cfg.head_dim)
+        k = k.reshape(s, cfg.heads, cfg.head_dim)
+        v = v.reshape(s, cfg.heads, cfg.head_dim)
+        k_cache = k_cache.at[l, :s].set(k)
+        v_cache = v_cache.at[l, :s].set(v)
+        attn = flash_attention(q, k, v, bias, causal=True, block_q=cfg.block, block_k=cfg.block)
+        x = x + attn.reshape(s, cfg.dim) @ params[f"lm{l}_o"]
+        h = rms_norm(x, params[f"lm{l}_norm2"])
+        gate = jax.nn.silu(h @ params[f"lm{l}_gate"])
+        x = x + (gate * (h @ params[f"lm{l}_up"])) @ params[f"lm{l}_down"]
+
+    # Logits at the last valid (text) position.
+    last = cfg.vis + txt_len - 1
+    h_last = rms_norm(x[last], params["final_norm"])
+    logits = h_last @ params["embed"].T
+    first_token = jnp.argmax(logits).astype(jnp.int32)
+
+    bias_cache = jnp.concatenate([bias, jnp.full((c - s,), NEG_INF, jnp.float32)])
+    write_pos = jnp.asarray(s, jnp.int32)
+    return first_token, k_cache, v_cache, bias_cache, write_pos
+
+
+# ---------------------------------------------------------------------------
+# Decode (Eq. 3): one autoregressive step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, token, k_cache, v_cache, bias_cache, write_pos, cfg: ModelConfig = CFG):
+    """One decode step: consume ``token``, emit the next.
+
+    Returns ``(next_token, k_cache', v_cache', bias_cache', write_pos+1)``.
+    """
+    x = params["embed"][token] + params["pos"][write_pos]  # [dim]
+    # The new token's KV slot becomes visible to itself.
+    bias_cache = bias_cache.at[write_pos].set(0.0)
+    for l in range(cfg.layers):
+        h = rms_norm(x, params[f"lm{l}_norm1"])
+        qkv = h @ params[f"lm{l}_qkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(cfg.heads, cfg.head_dim)
+        k = k.reshape(cfg.heads, cfg.head_dim)
+        v = v.reshape(cfg.heads, cfg.head_dim)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, None], (l, write_pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, None], (l, write_pos, 0, 0)
+        )
+        attn = decode_attention(q, k_cache[l], v_cache[l], bias_cache)
+        x = x + attn.reshape(cfg.dim) @ params[f"lm{l}_o"]
+        h = rms_norm(x, params[f"lm{l}_norm2"])
+        gate = jax.nn.silu(h @ params[f"lm{l}_gate"])
+        x = x + (gate * (h @ params[f"lm{l}_up"])) @ params[f"lm{l}_down"]
+    h_last = rms_norm(x, params["final_norm"])
+    logits = h_last @ params["embed"].T
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return next_token, k_cache, v_cache, bias_cache, write_pos + 1
+
+
+# ---------------------------------------------------------------------------
+# Reference end-to-end generation (used by pytest to validate the AOT path)
+# ---------------------------------------------------------------------------
+
+def generate(params, image, text_ids, txt_len, steps: int, cfg: ModelConfig = CFG):
+    """Full pipeline in one place: encode → prefill → N decode steps."""
+    if image is not None:
+        visual = encode(params, image, cfg)
+        vis_len = jnp.asarray(cfg.vis, jnp.int32)
+    else:
+        visual = jnp.zeros((cfg.vis, cfg.dim), jnp.float32)
+        vis_len = jnp.asarray(0, jnp.int32)
+    tok, kc, vc, bias, pos = prefill(params, visual, text_ids, vis_len, txt_len, cfg)
+    out = [int(tok)]
+    for _ in range(steps - 1):
+        tok, kc, vc, bias, pos = decode_step(params, tok, kc, vc, bias, pos, cfg)
+        out.append(int(tok))
+    return out

@@ -1,0 +1,59 @@
+"""RMSNorm Pallas kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("s,d", [(32, 64), (96, 256), (128, 16)])
+def test_matches_ref(s, d):
+    x = rand((s, d), 0)
+    w = rand((d,), 1)
+    np.testing.assert_allclose(rmsnorm(x, w), rmsnorm_ref(x, w), rtol=2e-6, atol=2e-6)
+
+
+def test_block_size_invariance():
+    x = rand((128, 64), 2)
+    w = rand((64,), 3)
+    a = rmsnorm(x, w, block=32)
+    b = rmsnorm(x, w, block=128)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_unit_rows_are_fixed_points():
+    # A row with RMS 1 and unit weight passes through unchanged.
+    d = 64
+    x = jnp.ones((32, d), jnp.float32)
+    w = jnp.ones((d,), jnp.float32)
+    out = rmsnorm(x, w)
+    np.testing.assert_allclose(out, x, rtol=1e-5, atol=1e-5)
+
+
+def test_scale_applies_per_channel():
+    x = rand((32, 8), 5)
+    w = jnp.arange(8, dtype=jnp.float32)
+    out = np.asarray(rmsnorm(x, w))
+    base = np.asarray(rmsnorm(x, jnp.ones(8, jnp.float32)))
+    np.testing.assert_allclose(out, base * np.arange(8), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(blocks, d, seed):
+    s = 32 * blocks
+    x = rand((s, d), seed)
+    w = rand((d,), seed + 1)
+    np.testing.assert_allclose(rmsnorm(x, w), rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5)

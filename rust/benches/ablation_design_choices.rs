@@ -1,0 +1,121 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **KV group size** (§3.3 "dynamically determined"): sweep g = 1…32 and
+//!    show the auto-selected size sits in the flat optimum of the exposed-
+//!    latency curve at both calibration lengths.
+//! 2. **Decode batch cap**: continuous-batching size vs TPOT/throughput
+//!    trade-off (the knob behind the paper's TPOT SLO).
+//! 3. **Prefill batch cap**: fused-prefill head-of-line blocking vs launch
+//!    overhead.
+
+use epd_serve::bench::serving::Point;
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::config::{HardwareDesc, ModelDesc, PdMode};
+use epd_serve::npu::CostModel;
+use epd_serve::transport::pd::plan_kv_transmission;
+use epd_serve::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let mut dump = Json::obj();
+
+    // --- 1. KV group-size sweep --------------------------------------------
+    let cm = CostModel::new(ModelDesc::openpangu_7b_vl(), HardwareDesc::ascend_910b_profiled());
+    for tokens in [1024usize, 2048] {
+        let mut rows = Vec::new();
+        let auto = plan_kv_transmission(&cm, PdMode::Grouped, 16, tokens, 0);
+        let mut best_exposed = f64::INFINITY;
+        let mut series = Vec::new();
+        for g in [1usize, 2, 4, 8, 16, 32] {
+            let r = plan_kv_transmission(&cm, PdMode::Grouped, 16, tokens, g);
+            best_exposed = best_exposed.min(r.exposed);
+            rows.push(vec![
+                format!("{g}{}", if g == auto.group_layers { " (auto)" } else { "" }),
+                format!("{:.1}", r.kv_latency * 1e3),
+                format!("{:.1}", r.exposed * 1e3),
+                format!("{:.2}", r.bandwidth / 1e9),
+            ]);
+            series.push(r.exposed * 1e3);
+        }
+        print_table(
+            &format!("ablation: KV group size @16×{tokens} tokens (auto = {})", auto.group_layers),
+            &["group layers", "KV ms", "exposed ms", "BW GB/s"],
+            &rows,
+        );
+        // The auto choice must sit within 2× of the best exposed latency —
+        // i.e. inside the flat optimum, not on a cliff.
+        assert!(
+            auto.exposed <= best_exposed * 2.0 + 5e-3,
+            "auto group size off the optimum: {} vs {}",
+            auto.exposed,
+            best_exposed
+        );
+        dump.set(&format!("group_sweep_{tokens}"), series);
+    }
+
+    // --- 2. Decode batch cap -------------------------------------------------
+    let mut rows = Vec::new();
+    let mut tpots = Vec::new();
+    for cap in [4usize, 16, 64, 128] {
+        let mut p = Point::new("EP-D", 4.0).with_requests(192);
+        let m = {
+            // Reach into the config through a bespoke run.
+            let mut cfg = epd_serve::config::Config::default();
+            cfg.deployment = p.deployment.clone();
+            cfg.rate = p.total_rate()?;
+            cfg.workload = p.workload.clone();
+            cfg.workload.num_requests = p.requests;
+            cfg.scheduler.max_decode_batch = cap;
+            cfg.seed = p.seed;
+            epd_serve::coordinator::simserve::run_serving(&cfg)?.metrics
+        };
+        p.requests = 0; // silence unused-mut lint path
+        rows.push(vec![
+            format!("{cap}"),
+            format!("{:.2}", m.mean_tpot_ms()),
+            format!("{:.1}", m.throughput()),
+            format!("{:.1}", m.mean_ttft_ms()),
+        ]);
+        tpots.push(m.mean_tpot_ms());
+    }
+    print_table(
+        "ablation: decode continuous-batch cap (EP-D @4 req/s/NPU)",
+        &["max_decode_batch", "TPOT ms", "thr tok/s", "TTFT ms"],
+        &rows,
+    );
+    // Small caps starve the continuous batch (many serialized small steps);
+    // raising the cap must monotonically help until it saturates.
+    assert!(
+        tpots[tpots.len() - 1] <= tpots[0] + 1e-9,
+        "raising the decode-batch cap must not worsen TPOT: {tpots:?}"
+    );
+    dump.set("decode_batch_tpot_ms", tpots);
+
+    // --- 3. Prefill batch cap -----------------------------------------------
+    let mut rows = Vec::new();
+    let mut ttfts = Vec::new();
+    for cap in [1usize, 4, 8, 16] {
+        let mut cfg = epd_serve::config::Config::default();
+        cfg.deployment = "(E-P)-D".to_string();
+        cfg.rate = 8.0;
+        cfg.workload.num_requests = 192;
+        cfg.scheduler.max_prefill_batch = cap;
+        let m = epd_serve::coordinator::simserve::run_serving(&cfg)?.metrics;
+        rows.push(vec![
+            format!("{cap}"),
+            format!("{:.1}", m.mean_ttft_ms()),
+            format!("{:.1}", m.ttft_samples().p99()),
+            format!("{:.1}", m.throughput()),
+        ]);
+        ttfts.push(m.mean_ttft_ms());
+    }
+    print_table(
+        "ablation: prefill batch cap ((E-P)-D @8 req/s total)",
+        &["max_prefill_batch", "TTFT mean ms", "TTFT p99 ms", "thr tok/s"],
+        &rows,
+    );
+    dump.set("prefill_batch_ttft_ms", ttfts);
+
+    let path = save_json("ablation_design_choices", &dump)?;
+    println!("\nresults saved to {path}");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! **Figure 16**: request-level TTFT and TPOT distributions across
+//! deployments as the injection rate rises — which deployments hit their
+//! processing limit first (overload onset ordering).
+//!
+//! Paper shape: TP2 backs up first, then E-PD and TP1; at 12 req/s only
+//! the Decode-disaggregated deployments ((E-P)-D, (E-D)-P, EP-D) keep a
+//! low-TPOT cluster.
+
+use epd_serve::bench::serving::Point;
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::util::json::Json;
+
+const DEPLOYMENTS: [&str; 7] = ["TP1", "TP2", "E-PD", "(E-PD)", "EP-D", "(E-P)-D", "(E-D)-P"];
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rates: &[f64] = if quick { &[4.0, 12.0] } else { &[2.0, 4.0, 8.0, 12.0] };
+    let requests = if quick { 192 } else { 384 };
+    let mut dump = Json::obj();
+
+    for &rate in rates {
+        let mut rows = Vec::new();
+        let mut tpot_ok: Vec<(String, f64)> = Vec::new();
+        for dep in DEPLOYMENTS {
+            let m = Point::new(dep, rate).with_requests(requests).metrics()?;
+            // Scatter summarized as occupancy of the "good" regions.
+            let ttft_low =
+                m.records.iter().filter(|r| r.ttft.map(|t| t < 2.0).unwrap_or(false)).count();
+            let tpot_low =
+                m.records.iter().filter(|r| r.tpot.map(|t| t < 0.05).unwrap_or(false)).count();
+            let n = m.records.len();
+            rows.push(vec![
+                dep.to_string(),
+                format!("{:.0}%", ttft_low as f64 / n as f64 * 100.0),
+                format!("{:.0}%", tpot_low as f64 / n as f64 * 100.0),
+                format!("{:.1}", m.ttft_samples().p99()),
+                format!("{:.1}", m.tpot_samples().p99()),
+            ]);
+            tpot_ok.push((dep.to_string(), tpot_low as f64 / n as f64));
+
+            // Full scatter points for plotting.
+            let pts: Vec<Json> = m
+                .records
+                .iter()
+                .map(|r| {
+                    let mut o = Json::obj();
+                    o.set("arrival", r.arrival)
+                        .set("ttft_ms", r.ttft.map(|t| t * 1e3).unwrap_or(f64::NAN))
+                        .set("tpot_ms", r.tpot.map(|t| t * 1e3).unwrap_or(f64::NAN));
+                    o
+                })
+                .collect();
+            dump.set(&format!("{dep}|{rate}"), Json::Arr(pts));
+        }
+        print_table(
+            &format!("Fig 16 — request-level distribution summary @ {rate} req/s/NPU"),
+            &["deployment", "TTFT<2s", "TPOT<50ms", "TTFT p99 ms", "TPOT p99 ms"],
+            &rows,
+        );
+        if rate >= 12.0 {
+            // Decode-disaggregated deployments keep the low-TPOT cluster.
+            for d in ["EP-D", "(E-P)-D", "(E-D)-P"] {
+                let frac = tpot_ok.iter().find(|(n, _)| n == d).unwrap().1;
+                assert!(frac > 0.9, "{d} must keep TPOT<50ms cluster at 12 req/s: {frac}");
+            }
+            for d in ["TP1", "TP2", "E-PD"] {
+                let frac = tpot_ok.iter().find(|(n, _)| n == d).unwrap().1;
+                assert!(frac < 0.5, "{d} must lose the low-TPOT cluster at 12 req/s: {frac}");
+            }
+        }
+    }
+    let path = save_json("fig16_scatter", &dump)?;
+    println!("\nscatter points saved to {path}");
+    Ok(())
+}

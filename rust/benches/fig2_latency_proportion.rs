@@ -1,0 +1,65 @@
+//! **Figure 2**: latency proportion of mainstream MLLMs as encoder sequence
+//! length increases — the encode share grows with resolution and eventually
+//! exceeds the LLM prefill time, motivating Encode disaggregation.
+//!
+//! Regenerates the figure's series from the calibrated cost model for the
+//! three models of Table 1.
+
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::config::{HardwareDesc, ModelDesc};
+use epd_serve::npu::CostModel;
+use epd_serve::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let models =
+        [ModelDesc::openpangu_7b_vl(), ModelDesc::qwen3_vl_8b(), ModelDesc::internvl3_78b()];
+    let seq_lens = [256usize, 512, 1024, 2048, 4096, 8192, 16206];
+    let mut dump = Json::obj();
+
+    for model in &models {
+        let cm = CostModel::new(model.clone(), HardwareDesc::ascend_910b());
+        let mut rows = Vec::new();
+        let mut series = Vec::new();
+        let mut crossover: Option<usize> = None;
+        for &n in &seq_lens {
+            let enc = cm.encode_time(n);
+            // The same visual tokens also enter prefill (plus a small text
+            // prompt, negligible at these lengths).
+            let pre = cm.prefill_time(n, 0);
+            let share = enc / (enc + pre);
+            if enc > pre && crossover.is_none() {
+                crossover = Some(n);
+            }
+            rows.push(vec![
+                format!("{n}"),
+                format!("{:.1}", enc * 1e3),
+                format!("{:.1}", pre * 1e3),
+                format!("{:.1}%", share * 100.0),
+            ]);
+            series.push(share);
+        }
+        print_table(
+            &format!("Fig 2 — {} encode vs prefill latency", model.name),
+            &["visual tokens", "encode ms", "prefill ms", "encode share"],
+            &rows,
+        );
+        match crossover {
+            Some(n) => println!("  encode exceeds prefill from {n} visual tokens"),
+            None => println!("  encode never exceeds prefill in this range"),
+        }
+        // Paper's qualitative claim: the share grows monotonically and the
+        // encode stage can dominate at high resolution.
+        assert!(
+            series.windows(2).all(|w| w[1] >= w[0] - 1e-9),
+            "encode share must grow with sequence length"
+        );
+        dump.set(&model.name, series);
+    }
+    // openPangu-7B-VL (small LLM, quadratic ViT) must cross over by 4K.
+    let cm = CostModel::new(ModelDesc::openpangu_7b_vl(), HardwareDesc::ascend_910b());
+    assert!(cm.encode_time(16206) > cm.prefill_time(16206, 0), "Fig 2 crossover missing");
+
+    let path = save_json("fig2_latency_proportion", &dump)?;
+    println!("\nresults saved to {path}");
+    Ok(())
+}

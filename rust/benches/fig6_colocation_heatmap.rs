@@ -1,0 +1,61 @@
+//! **Figure 6**: operator-level hardware co-location — resource profiles
+//! (left panel) and the pairwise interference heatmap (right panel).
+//!
+//! Shape to reproduce: operators with *similar* resource demands interfere
+//! strongly; *disjoint* demands co-locate nearly free.
+
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::npu::op::OpClass;
+use epd_serve::npu::pairwise_interference;
+use epd_serve::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // Left panel: resource profiles.
+    let mut rows = Vec::new();
+    for op in OpClass::ALL {
+        let p = op.profile();
+        rows.push(vec![
+            op.name().to_string(),
+            format!("{:.2}", p.demand.cube),
+            format!("{:.2}", p.demand.vector),
+            format!("{:.2}", p.demand.bw),
+            format!("{:.0}%", p.compute_fraction * 100.0),
+        ]);
+    }
+    print_table(
+        "Fig 6 (left) — operator resource profiles",
+        &["operator", "AI Core", "AI Vector", "HBM BW", "compute fraction"],
+        &rows,
+    );
+
+    // Right panel: interference heatmap.
+    let mut rows = Vec::new();
+    let mut dump = Json::obj();
+    for a in OpClass::ALL {
+        let mut row = vec![a.name().to_string()];
+        let mut series = Vec::new();
+        for b in OpClass::ALL {
+            let x = pairwise_interference(&a.profile().demand, &b.profile().demand);
+            row.push(format!("{x:>5.1}"));
+            series.push(x);
+        }
+        dump.set(a.name(), series);
+        rows.push(row);
+    }
+    let names: Vec<&str> = OpClass::ALL.iter().map(|o| o.name()).collect();
+    let mut header = vec!["victim \\ bg"];
+    header.extend(names.iter());
+    print_table("Fig 6 (right) — co-location latency increase, %", &header, &rows);
+
+    // Shape assertions (the paper's stated law).
+    let mm = OpClass::MatMul.profile().demand;
+    let cp = OpClass::Copy.profile().demand;
+    let ar = OpClass::AllReduce.profile().demand;
+    assert!(pairwise_interference(&mm, &mm) > 3.0 * pairwise_interference(&mm, &cp));
+    assert!(pairwise_interference(&cp, &ar) > pairwise_interference(&cp, &mm));
+    println!("\nlaw holds: similar-demand pairs interfere ≫ disjoint-demand pairs");
+
+    let path = save_json("fig6_colocation_heatmap", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

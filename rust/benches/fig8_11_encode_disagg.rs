@@ -1,0 +1,92 @@
+//! **Figures 8–11**: benefits of Encode disaggregation — SLO attainment,
+//! throughput, TTFT and TPOT vs per-NPU request rate for TP1, TP2, (E-PD)
+//! and E-PD, on both datasets and both models.
+//!
+//! Paper shape to reproduce: (E-PD) ≥ TP1 on every metric under load;
+//! E-PD (dedicated encode NPU) wastes hardware and trails per-NPU metrics;
+//! TP2 is the worst (synchronization overhead).
+
+use epd_serve::bench::serving::{Point, RATE_GRID};
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::config::{ModelDesc, SloSpec, WorkloadSpec};
+use epd_serve::util::json::Json;
+use epd_serve::util::stats::{fmt_ms, fmt_pct};
+
+const DEPLOYMENTS: [&str; 4] = ["TP1", "TP2", "(E-PD)", "E-PD"];
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rates: &[f64] = if quick { &[2.0, 8.0, 12.0] } else { &RATE_GRID };
+    let requests = if quick { 192 } else { 384 };
+    let mut dump = Json::obj();
+
+    let workloads = [WorkloadSpec::visualwebinstruct(), WorkloadSpec::sharegpt4o()];
+    let models = [ModelDesc::openpangu_7b_vl(), ModelDesc::qwen3_vl_8b()];
+    for model in &models {
+        for wl in &workloads {
+            let mut rows = Vec::new();
+            let mut results = Vec::new();
+            for dep in DEPLOYMENTS {
+                for &rate in rates {
+                    let m = Point::new(dep, rate)
+                        .with_model(model.clone())
+                        .with_workload(wl.clone())
+                        .with_requests(requests)
+                        .with_slo(SloSpec::encode_disagg()) // TTFT 2000 / TPOT 80
+                        .metrics()?;
+                    rows.push(vec![
+                        dep.to_string(),
+                        format!("{rate}"),
+                        fmt_pct(m.slo_attainment()),
+                        format!("{:.1}", m.per_npu_effective_throughput()),
+                        fmt_ms(m.mean_ttft_ms()),
+                        fmt_ms(m.mean_tpot_ms()),
+                    ]);
+                    let mut o = Json::obj();
+                    o.set("slo", m.slo_attainment())
+                        .set("eff_thr_per_npu", m.per_npu_effective_throughput())
+                        .set("ttft_ms", m.mean_ttft_ms())
+                        .set("tpot_ms", m.mean_tpot_ms());
+                    dump.set(&format!("{}|{}|{dep}|{rate}", model.name, wl.name), o);
+                    results.push((dep, rate, m));
+                }
+            }
+            print_table(
+                &format!("Figs 8–11 — encode disaggregation, {} / {}", model.name, wl.name),
+                &["deployment", "rate/NPU", "SLO", "eff-thr/NPU", "TTFT ms", "TPOT ms"],
+                &rows,
+            );
+
+            // Shape checks at the highest rate (§4.3).
+            let hi = *rates.last().unwrap();
+            let get = |d: &str| {
+                results
+                    .iter()
+                    .find(|(dep, r, _)| *dep == d && *r == hi)
+                    .map(|(_, _, m)| m.clone())
+                    .unwrap()
+            };
+            let tp1 = get("TP1");
+            let col = get("(E-PD)");
+            let sep = get("E-PD");
+            let tp2 = get("TP2");
+            assert!(
+                col.per_npu_effective_throughput() >= tp1.per_npu_effective_throughput() * 0.95,
+                "(E-PD) must match/beat TP1 throughput under load"
+            );
+            assert!(
+                sep.per_npu_effective_throughput()
+                    <= col.per_npu_effective_throughput() + 1e-9,
+                "dedicated-encode E-PD wastes an NPU vs (E-PD)"
+            );
+            assert!(
+                tp2.per_npu_effective_throughput()
+                    <= tp1.per_npu_effective_throughput() + 1e-9,
+                "TP2 sync overhead must not beat TP1 per-NPU"
+            );
+        }
+    }
+    let path = save_json("fig8_11_encode_disagg", &dump)?;
+    println!("\nresults saved to {path}");
+    Ok(())
+}

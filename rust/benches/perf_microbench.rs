@@ -1,0 +1,110 @@
+//! Performance microbenches for the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Targets (DESIGN.md §9): the sim engine must process ≥1 M events/s so the
+//! simulator is never the bottleneck of a bench sweep; allocator, RNG and
+//! JSON are supporting hot paths.
+
+use epd_serve::bench::{bench, print_table};
+use epd_serve::bench::serving::Point;
+use epd_serve::kvcache::BlockAllocator;
+use epd_serve::npu::op::StageKind;
+use epd_serve::sim::engine::{self, EventQueue, SimModel};
+use epd_serve::sim::PsNpu;
+use epd_serve::util::json::Json;
+use epd_serve::util::rng::Rng;
+
+struct Ping {
+    left: u64,
+}
+impl SimModel for Ping {
+    type Event = ();
+    fn handle(&mut self, _now: f64, _ev: (), q: &mut EventQueue<()>) {
+        if self.left > 0 {
+            self.left -= 1;
+            q.after(0.001, ());
+        }
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // 1. Raw event throughput: schedule→pop→handle→schedule chain.
+    let s = bench("sim_engine_100k_events", 0.2, 1.0, 3, || {
+        let mut q = EventQueue::new();
+        q.at(0.0, ());
+        let mut m = Ping { left: 100_000 };
+        engine::run(&mut m, &mut q, f64::INFINITY);
+    });
+    let events_per_s = 100_000.0 / s.mean_s;
+    rows.push(vec![
+        s.name.clone(),
+        format!("{:.2} ms", s.mean_ms()),
+        format!("{:.2} M events/s", events_per_s / 1e6),
+    ]);
+
+    // 2. Full serving simulation (512-request Table 5 style run).
+    let s = bench("serving_sim_512req_epd", 0.2, 2.0, 3, || {
+        let out = Point::new("E-P-D", 10.0 / 3.0).with_requests(512).run().unwrap();
+        std::hint::black_box(out.events_processed);
+    });
+    rows.push(vec![s.name.clone(), format!("{:.1} ms", s.mean_ms()), String::new()]);
+
+    // 3. Processor-sharing NPU churn.
+    let s = bench("psnpu_start_finish_1k", 0.1, 0.5, 10, || {
+        let mut npu = PsNpu::new();
+        let mut t = 0.0;
+        for i in 0..1000u64 {
+            let id = npu.start(t, StageKind::Decode.demand(), 0.01);
+            t += 0.001;
+            if i % 2 == 0 {
+                npu.finish(t, id);
+            }
+        }
+        std::hint::black_box(npu.active_tasks());
+    });
+    rows.push(vec![s.name.clone(), format!("{:.2} ms", s.mean_ms()), String::new()]);
+
+    // 4. KV block allocator churn.
+    let s = bench("kv_alloc_free_10k", 0.1, 0.5, 10, || {
+        let mut a = BlockAllocator::new(4096, 16, 1 << 20);
+        for _ in 0..10_000 {
+            let blocks = a.allocate(4).unwrap();
+            for b in blocks {
+                a.release(b).unwrap();
+            }
+        }
+    });
+    rows.push(vec![s.name.clone(), format!("{:.2} ms", s.mean_ms()), String::new()]);
+
+    // 5. RNG and JSON supporting paths.
+    let s = bench("rng_1m_draws", 0.1, 0.5, 5, || {
+        let mut r = Rng::new(1);
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += r.f64();
+        }
+        std::hint::black_box(acc);
+    });
+    rows.push(vec![s.name.clone(), format!("{:.2} ms", s.mean_ms()), String::new()]);
+
+    let s = bench("json_roundtrip_1k_records", 0.1, 0.5, 5, || {
+        let mut arr = Vec::new();
+        for i in 0..1000u64 {
+            let mut o = Json::obj();
+            o.set("id", i).set("ttft", 0.123).set("tpot", 0.045);
+            arr.push(o);
+        }
+        let text = Json::Arr(arr).to_string_compact();
+        std::hint::black_box(Json::parse(&text).unwrap());
+    });
+    rows.push(vec![s.name.clone(), format!("{:.2} ms", s.mean_ms()), String::new()]);
+
+    print_table("L3 perf microbenches", &["bench", "mean", "derived"], &rows);
+
+    assert!(
+        events_per_s > 1_000_000.0,
+        "sim engine below the 1 M events/s target: {events_per_s:.0}"
+    );
+    println!("\nsim engine target (≥1 M events/s): met");
+}

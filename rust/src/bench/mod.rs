@@ -1,0 +1,116 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! Provides the two things every per-table/figure bench binary needs:
+//!
+//! * [`Timer`]-based micro-benchmark runner with warmup, adaptive iteration
+//!   counts and mean/p50/σ reporting — used by the perf pass.
+//! * Result emission: consistent stdout tables (via
+//!   [`crate::util::stats::ascii_table`]) plus machine-readable JSON dumps
+//!   under `bench_results/` so EXPERIMENTS.md numbers are regenerable.
+
+pub mod serving;
+
+use crate::util::json::Json;
+use crate::util::stats::{ascii_table, Samples};
+use std::time::Instant;
+
+/// Measured statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Run `f` repeatedly: warm up for ~`warmup_s`, then measure for at least
+/// `measure_s` seconds or `min_iters` iterations, whichever is more.
+pub fn bench<F: FnMut()>(name: &str, warmup_s: f64, measure_s: f64, min_iters: usize, mut f: F) -> BenchStats {
+    let warm_end = Instant::now();
+    while warm_end.elapsed().as_secs_f64() < warmup_s {
+        f();
+    }
+    let mut samples = Samples::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < measure_s || samples.len() < min_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 5_000_000 {
+            break;
+        }
+    }
+    let mut s2 = samples.clone();
+    let mean = samples.mean();
+    let var = samples.values().iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+        / samples.len().max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: s2.p50(),
+        std_s: var.sqrt(),
+    }
+}
+
+/// Print a paper-style table with a caption.
+pub fn print_table(caption: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {caption} ===");
+    print!("{}", ascii_table(header, rows));
+}
+
+/// Write a JSON result file under `bench_results/` (created on demand).
+pub fn save_json(name: &str, value: &Json) -> std::io::Result<String> {
+    std::fs::create_dir_all("bench_results")?;
+    let path = format!("bench_results/{name}.json");
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Format helper: `"57.4%"` style relative change vs a baseline.
+pub fn pct_change(new: f64, baseline: f64) -> String {
+    if baseline == 0.0 || !new.is_finite() || !baseline.is_finite() {
+        return "-".to_string();
+    }
+    format!("{:+.1}%", (new - baseline) / baseline * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let s = bench("noop", 0.0, 0.01, 10, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(s.iters >= 10);
+        assert!(s.mean_s >= 0.0 && s.mean_s < 0.1);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn pct_change_formats() {
+        assert_eq!(pct_change(157.0, 100.0), "+57.0%");
+        assert_eq!(pct_change(70.0, 100.0), "-30.0%");
+        assert_eq!(pct_change(1.0, 0.0), "-");
+    }
+
+    #[test]
+    fn save_json_round_trips() {
+        let mut o = Json::obj();
+        o.set("x", 1u64);
+        let path = save_json("_test_bench_save", &o).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), o);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,111 @@
+//! Shared helpers for the per-table/figure serving benches.
+
+use crate::config::{Config, ModelDesc, PdMode, SloSpec, WorkloadSpec};
+use crate::coordinator::deployment::Deployment;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::simserve::{run_serving, SimOutcome};
+use anyhow::Result;
+
+/// One serving experiment point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub deployment: String,
+    pub model: ModelDesc,
+    pub workload: WorkloadSpec,
+    /// Per-NPU request rate (the figures' x-axis); total injection is
+    /// `rate_per_npu × num_npus` per §4.1's normalization.
+    pub rate_per_npu: f64,
+    pub requests: usize,
+    pub seed: u64,
+    pub slo: SloSpec,
+    pub ep_async_prefetch: bool,
+    pub pd_mode: PdMode,
+}
+
+impl Point {
+    pub fn new(deployment: &str, rate_per_npu: f64) -> Self {
+        Self {
+            deployment: deployment.to_string(),
+            model: ModelDesc::openpangu_7b_vl(),
+            workload: WorkloadSpec::sharegpt4o(),
+            rate_per_npu,
+            requests: 512,
+            seed: 42,
+            slo: SloSpec::decode_disagg(),
+            ep_async_prefetch: true,
+            pd_mode: PdMode::Grouped,
+        }
+    }
+
+    pub fn with_workload(mut self, w: WorkloadSpec) -> Self {
+        self.workload = w;
+        self
+    }
+    pub fn with_model(mut self, m: ModelDesc) -> Self {
+        self.model = m;
+        self
+    }
+    pub fn with_requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+    pub fn with_slo(mut self, slo: SloSpec) -> Self {
+        self.slo = slo;
+        self
+    }
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.ep_async_prefetch = on;
+        self
+    }
+    pub fn with_pd_mode(mut self, mode: PdMode) -> Self {
+        self.pd_mode = mode;
+        self
+    }
+
+    /// Total injection rate for this deployment.
+    pub fn total_rate(&self) -> Result<f64> {
+        Ok(self.rate_per_npu * Deployment::parse(&self.deployment)?.num_npus() as f64)
+    }
+
+    /// Run the simulation.
+    pub fn run(&self) -> Result<SimOutcome> {
+        let mut cfg = Config::default();
+        cfg.model = self.model.clone();
+        cfg.workload = self.workload.clone();
+        cfg.workload.num_requests = self.requests;
+        cfg.deployment = self.deployment.clone();
+        cfg.rate = self.total_rate()?;
+        cfg.seed = self.seed;
+        cfg.slo = self.slo;
+        cfg.scheduler.ep_async_prefetch = self.ep_async_prefetch;
+        cfg.scheduler.pd_mode = self.pd_mode;
+        run_serving(&cfg)
+    }
+
+    /// Run and return just the metrics.
+    pub fn metrics(&self) -> Result<RunMetrics> {
+        Ok(self.run()?.metrics)
+    }
+}
+
+/// The figures' standard per-NPU rate grid (1–12 req/s, §4.1).
+pub const RATE_GRID: [f64; 7] = [1.0, 2.0, 4.0, 6.0, 8.0, 10.0, 12.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_total_rate_scales_with_npus() {
+        let p = Point::new("E-P-D", 4.0);
+        assert_eq!(p.total_rate().unwrap(), 12.0);
+        let p1 = Point::new("TP1", 4.0);
+        assert_eq!(p1.total_rate().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn point_runs() {
+        let m = Point::new("TP1", 1.0).with_requests(16).metrics().unwrap();
+        assert_eq!(m.records.len(), 16);
+    }
+}

@@ -1,0 +1,119 @@
+//! Global instance status table + least-loaded-first dispatch
+//! (§3.4 "Instance-Level Dynamic Load Balancing").
+//!
+//! > "A global instance status table tracks metrics such as queue length,
+//! > pending requests, and resource usage for each stage instance in real
+//! > time. New requests are dispatched to the instance with the lowest load
+//! > based on a least-loaded-first strategy."
+
+/// Live load metrics for one instance, updated by the serving loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstanceStatus {
+    /// Requests waiting in this instance's stage queues.
+    pub queue_len: usize,
+    /// Requests currently executing or resident (decode batch size).
+    pub active: usize,
+    /// Pending work volume, in prompt tokens (weighs large requests more).
+    pub pending_tokens: usize,
+    /// KV-cache utilization in [0, 1] (decode instances).
+    pub kv_utilization: f64,
+}
+
+impl InstanceStatus {
+    /// Scalar load score for least-loaded-first comparison. Queue depth and
+    /// token volume dominate; KV pressure is a tie-breaking penalty that
+    /// grows steeply near exhaustion.
+    pub fn load_score(&self) -> f64 {
+        let kv_penalty = if self.kv_utilization > 0.9 {
+            50.0 * (self.kv_utilization - 0.9)
+        } else {
+            0.0
+        };
+        self.queue_len as f64 + self.active as f64 * 0.5 + self.pending_tokens as f64 / 4096.0
+            + kv_penalty
+    }
+}
+
+/// The global status table.
+#[derive(Debug, Default)]
+pub struct StatusTable {
+    statuses: Vec<InstanceStatus>,
+}
+
+impl StatusTable {
+    pub fn new(n_instances: usize) -> Self {
+        Self { statuses: vec![InstanceStatus::default(); n_instances] }
+    }
+
+    pub fn update(&mut self, instance: usize, status: InstanceStatus) {
+        self.statuses[instance] = status;
+    }
+
+    pub fn get(&self, instance: usize) -> InstanceStatus {
+        self.statuses[instance]
+    }
+
+    /// Least-loaded instance among `candidates`. Ties break on the lower
+    /// index for determinism. Returns `None` for an empty candidate set.
+    pub fn least_loaded(&self, candidates: &[usize]) -> Option<usize> {
+        candidates
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                self.statuses[a]
+                    .load_score()
+                    .partial_cmp(&self.statuses[b].load_score())
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_picks_lowest_score() {
+        let mut t = StatusTable::new(3);
+        t.update(0, InstanceStatus { queue_len: 5, ..Default::default() });
+        t.update(1, InstanceStatus { queue_len: 1, ..Default::default() });
+        t.update(2, InstanceStatus { queue_len: 3, ..Default::default() });
+        assert_eq!(t.least_loaded(&[0, 1, 2]), Some(1));
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let t = StatusTable::new(4);
+        assert_eq!(t.least_loaded(&[3, 1, 2]), Some(1));
+    }
+
+    #[test]
+    fn empty_candidates_none() {
+        let t = StatusTable::new(2);
+        assert_eq!(t.least_loaded(&[]), None);
+    }
+
+    #[test]
+    fn pending_tokens_weigh_in() {
+        let mut t = StatusTable::new(2);
+        t.update(0, InstanceStatus { queue_len: 1, pending_tokens: 40_000, ..Default::default() });
+        t.update(1, InstanceStatus { queue_len: 2, pending_tokens: 0, ..Default::default() });
+        // 1 + 9.77 > 2 → instance 1 wins despite longer queue.
+        assert_eq!(t.least_loaded(&[0, 1]), Some(1));
+    }
+
+    #[test]
+    fn kv_pressure_penalizes_near_exhaustion() {
+        let mut t = StatusTable::new(2);
+        t.update(0, InstanceStatus { kv_utilization: 0.99, ..Default::default() });
+        t.update(1, InstanceStatus { queue_len: 3, kv_utilization: 0.2, ..Default::default() });
+        assert_eq!(t.least_loaded(&[0, 1]), Some(1));
+    }
+
+    #[test]
+    fn kv_below_threshold_is_free() {
+        let s = InstanceStatus { kv_utilization: 0.5, ..Default::default() };
+        assert_eq!(s.load_score(), 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-stage batch formation policies.
+//!
+//! Encode and Prefill use bounded greedy FCFS batching (count + token caps);
+//! Decode uses continuous batching (sequences join/leave at step
+//! boundaries). These are pure policies over queues — the serving loop
+//! (simulated or real) owns the queues and calls in when an instance frees
+//! up.
+
+use crate::config::SchedulerSpec;
+use std::collections::VecDeque;
+
+/// Items a prefill batcher considers: request id + its prompt token count
+/// (+ visual tokens to recompute locally after an MM-Store miss).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillItem {
+    pub req: u64,
+    pub prompt_tokens: usize,
+    /// Visual tokens to re-encode locally before prefill (recompute path).
+    pub recompute_tokens: usize,
+}
+
+/// Items an encode batcher considers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeItem {
+    pub req: u64,
+    pub visual_tokens: usize,
+}
+
+/// Pop an encode batch: up to `max_encode_batch` images FCFS.
+pub fn form_encode_batch(queue: &mut VecDeque<EncodeItem>, cfg: &SchedulerSpec) -> Vec<EncodeItem> {
+    let n = queue.len().min(cfg.max_encode_batch.max(1));
+    queue.drain(..n).collect()
+}
+
+/// Pop a prefill batch: FCFS until the request cap or token cap is hit.
+/// Always admits at least one request (an oversized single request must not
+/// deadlock — it runs alone).
+pub fn form_prefill_batch(
+    queue: &mut VecDeque<PrefillItem>,
+    cfg: &SchedulerSpec,
+) -> Vec<PrefillItem> {
+    let mut batch = Vec::new();
+    let mut tokens = 0usize;
+    while let Some(&item) = queue.front() {
+        let would = tokens + item.prompt_tokens;
+        if !batch.is_empty()
+            && (batch.len() >= cfg.max_prefill_batch.max(1) || would > cfg.max_prefill_tokens)
+        {
+            break;
+        }
+        tokens = would;
+        batch.push(item);
+        queue.pop_front();
+        if batch.len() >= cfg.max_prefill_batch.max(1) {
+            break;
+        }
+    }
+    batch
+}
+
+/// How many waiting sequences a decode step can admit, given the current
+/// batch size and cap (KV admission is checked separately by the caller).
+pub fn decode_admission_quota(active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize {
+    cfg.max_decode_batch.max(1).saturating_sub(active).min(waiting)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedulerSpec {
+        SchedulerSpec { max_prefill_batch: 4, max_prefill_tokens: 1000, max_encode_batch: 3, ..Default::default() }
+    }
+
+    fn pi(req: u64, tokens: usize) -> PrefillItem {
+        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0 }
+    }
+
+    #[test]
+    fn encode_batch_respects_cap_and_order() {
+        let mut q: VecDeque<EncodeItem> =
+            (0..5).map(|i| EncodeItem { req: i, visual_tokens: 100 }).collect();
+        let b = form_encode_batch(&mut q, &cfg());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn prefill_token_cap_enforced() {
+        let mut q: VecDeque<PrefillItem> = [pi(0, 600), pi(1, 300), pi(2, 300)].into();
+        let b = form_prefill_batch(&mut q, &cfg());
+        // 600 + 300 = 900 ≤ 1000; adding 300 more would exceed.
+        assert_eq!(b.len(), 2);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn prefill_count_cap_enforced() {
+        let mut q: VecDeque<PrefillItem> = (0..10).map(|i| pi(i, 10)).collect();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn oversized_single_request_still_admitted() {
+        let mut q: VecDeque<PrefillItem> = [pi(0, 99_999)].into();
+        let b = form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.len(), 1, "must not deadlock on an oversized request");
+    }
+
+    #[test]
+    fn empty_queues_yield_empty_batches() {
+        let mut eq: VecDeque<EncodeItem> = VecDeque::new();
+        let mut pq: VecDeque<PrefillItem> = VecDeque::new();
+        assert!(form_encode_batch(&mut eq, &cfg()).is_empty());
+        assert!(form_prefill_batch(&mut pq, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn decode_quota_math() {
+        let c = SchedulerSpec { max_decode_batch: 8, ..Default::default() };
+        assert_eq!(decode_admission_quota(5, 10, &c), 3);
+        assert_eq!(decode_admission_quota(8, 10, &c), 0);
+        assert_eq!(decode_admission_quota(0, 2, &c), 2);
+    }
+}

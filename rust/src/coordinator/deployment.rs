@@ -1,0 +1,370 @@
+//! Deployment notation parser and topology builder (§4.1 "Baseline and
+//! Deployment Notation").
+//!
+//! Grammar (paper's notation, extended with replication):
+//!
+//! * `-` separates **NPUs** (disaggregated stages on separate hardware).
+//! * `(..)` groups **co-located instances** on one NPU: inside parentheses,
+//!   `-` separates logically-isolated instances that physically share the
+//!   NPU (spatial multiplexing).
+//! * A letter run (`E`, `PD`, `EP`, `EPD`) is one **monolithic instance**
+//!   executing those stages serially (stage-coupled, like vLLM).
+//! * `TPn` = the monolithic baseline: one `EPD` instance tensor-parallel
+//!   over `n` NPUs.
+//! * A `xN` / `×N` suffix replicates the whole deployment N times.
+//!
+//! Examples: `TP1`, `TP2`, `E-PD` (2 NPUs), `(E-PD)` (1 NPU, E and PD
+//! isolated-but-co-located), `EP-D`, `(E-P)-D`, `(E-D)-P`, `E-P-D` (3 NPUs),
+//! `(E-PD)x2`.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Which stages a single instance executes (coupled, serially).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageSet {
+    pub encode: bool,
+    pub prefill: bool,
+    pub decode: bool,
+}
+
+impl StageSet {
+    pub const E: StageSet = StageSet { encode: true, prefill: false, decode: false };
+    pub const P: StageSet = StageSet { encode: false, prefill: true, decode: false };
+    pub const D: StageSet = StageSet { encode: false, prefill: false, decode: true };
+    pub const EP: StageSet = StageSet { encode: true, prefill: true, decode: false };
+    pub const ED: StageSet = StageSet { encode: true, prefill: false, decode: true };
+    pub const PD: StageSet = StageSet { encode: false, prefill: true, decode: true };
+    pub const EPD: StageSet = StageSet { encode: true, prefill: true, decode: true };
+
+    fn from_letters(s: &str) -> Result<StageSet> {
+        let mut set = StageSet { encode: false, prefill: false, decode: false };
+        for c in s.chars() {
+            match c {
+                'E' | 'e' => set.encode = true,
+                'P' | 'p' => set.prefill = true,
+                'D' | 'd' => set.decode = true,
+                _ => bail!("invalid stage letter '{c}' in '{s}'"),
+            }
+        }
+        if !(set.encode || set.prefill || set.decode) {
+            bail!("empty stage set");
+        }
+        Ok(set)
+    }
+
+    pub fn is_monolithic_epd(&self) -> bool {
+        self.encode && self.prefill && self.decode
+    }
+}
+
+impl fmt::Display for StageSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.encode {
+            write!(f, "E")?;
+        }
+        if self.prefill {
+            write!(f, "P")?;
+        }
+        if self.decode {
+            write!(f, "D")?;
+        }
+        Ok(())
+    }
+}
+
+/// One scheduling instance: a stage set bound to an NPU of a replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstanceSpec {
+    pub stages: StageSet,
+    /// Physical NPU index (within the whole deployment).
+    pub npu: usize,
+    /// Replica this instance belongs to.
+    pub replica: usize,
+    /// Tensor-parallel degree of its NPU group (>1 only for TPn).
+    pub tp: usize,
+}
+
+/// A parsed deployment: physical NPUs + instances.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Deployment {
+    pub name: String,
+    pub replicas: usize,
+    /// NPUs **per replica** (TP groups count as `tp` NPUs).
+    pub npus_per_replica: usize,
+    pub instances: Vec<InstanceSpec>,
+    pub tp: usize,
+}
+
+impl Deployment {
+    /// Parse the paper's notation.
+    pub fn parse(s: &str) -> Result<Deployment> {
+        let s = s.trim();
+        // Replication suffix.
+        let (body, replicas) = match s.rsplit_once(['x', '×']) {
+            Some((b, n)) if n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+                (b.trim(), n.parse::<usize>()?)
+            }
+            _ => (s, 1),
+        };
+        if replicas == 0 {
+            bail!("0 replicas");
+        }
+
+        // TPn special form.
+        if let Some(n) = body.strip_prefix("TP").or_else(|| body.strip_prefix("tp")) {
+            let tp: usize = n.parse().map_err(|_| anyhow::anyhow!("bad TP degree '{n}'"))?;
+            if tp == 0 || tp > 16 {
+                bail!("TP degree {tp} out of range");
+            }
+            let mut instances = Vec::new();
+            for r in 0..replicas {
+                instances.push(InstanceSpec { stages: StageSet::EPD, npu: r * tp, replica: r, tp });
+            }
+            return Ok(Deployment {
+                name: s.to_string(),
+                replicas,
+                npus_per_replica: tp,
+                instances,
+                tp,
+            });
+        }
+
+        // General notation: split on top-level '-'.
+        let mut groups: Vec<Vec<StageSet>> = Vec::new();
+        let mut depth = 0usize;
+        let mut cur = String::new();
+        let mut push_group = |text: &str, groups: &mut Vec<Vec<StageSet>>| -> Result<()> {
+            let text = text.trim();
+            if text.is_empty() {
+                bail!("empty NPU group in '{body}'");
+            }
+            if let Some(inner) = text.strip_prefix('(').and_then(|t| t.strip_suffix(')')) {
+                let mut insts = Vec::new();
+                for part in inner.split('-') {
+                    insts.push(StageSet::from_letters(part.trim())?);
+                }
+                if insts.is_empty() {
+                    bail!("empty co-location group");
+                }
+                groups.push(insts);
+            } else {
+                groups.push(vec![StageSet::from_letters(text)?]);
+            }
+            Ok(())
+        };
+        for c in body.chars() {
+            match c {
+                '(' => {
+                    depth += 1;
+                    cur.push(c);
+                }
+                ')' => {
+                    if depth == 0 {
+                        bail!("unbalanced ')' in '{body}'");
+                    }
+                    depth -= 1;
+                    cur.push(c);
+                }
+                '-' if depth == 0 => {
+                    push_group(&cur, &mut groups)?;
+                    cur.clear();
+                }
+                c if c.is_whitespace() => {}
+                _ => cur.push(c),
+            }
+        }
+        if depth != 0 {
+            bail!("unbalanced '(' in '{body}'");
+        }
+        push_group(&cur, &mut groups)?;
+
+        // Validate coverage: the union of stages must be E+P+D able to serve
+        // multimodal requests (P and D mandatory; E optional only if no
+        // encode stage is ever needed — we require it, matching the paper).
+        let mut union = StageSet { encode: false, prefill: false, decode: false };
+        for g in &groups {
+            for s in g {
+                union.encode |= s.encode;
+                union.prefill |= s.prefill;
+                union.decode |= s.decode;
+            }
+        }
+        if !union.prefill || !union.decode {
+            bail!("deployment '{body}' lacks prefill or decode");
+        }
+
+        let npus_per_replica = groups.len();
+        let mut instances = Vec::new();
+        for r in 0..replicas {
+            for (g_idx, g) in groups.iter().enumerate() {
+                for s in g {
+                    instances.push(InstanceSpec {
+                        stages: *s,
+                        npu: r * npus_per_replica + g_idx,
+                        replica: r,
+                        tp: 1,
+                    });
+                }
+            }
+        }
+        Ok(Deployment { name: s.to_string(), replicas, npus_per_replica, instances, tp: 1 })
+    }
+
+    /// Total physical NPUs.
+    pub fn num_npus(&self) -> usize {
+        self.replicas * self.npus_per_replica
+    }
+
+    /// Instance indices able to run `pred` within a replica.
+    pub fn instances_where(&self, replica: usize, pred: impl Fn(&StageSet) -> bool) -> Vec<usize> {
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.replica == replica && pred(&i.stages))
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// Does any instance couple prefill+decode (no P→D transfer needed)?
+    pub fn decode_disaggregated(&self) -> bool {
+        self.instances.iter().filter(|i| i.stages.decode).all(|i| !i.stages.prefill)
+    }
+
+    /// Does any instance couple encode+prefill (no E→P transfer needed)?
+    pub fn encode_disaggregated(&self) -> bool {
+        self.instances.iter().filter(|i| i.stages.encode).all(|i| !i.stages.prefill)
+    }
+}
+
+impl fmt::Display for Deployment {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tp1_is_monolithic() {
+        let d = Deployment::parse("TP1").unwrap();
+        assert_eq!(d.num_npus(), 1);
+        assert_eq!(d.instances.len(), 1);
+        assert!(d.instances[0].stages.is_monolithic_epd());
+        assert!(!d.decode_disaggregated());
+        assert!(!d.encode_disaggregated());
+    }
+
+    #[test]
+    fn tp2_spans_two_npus() {
+        let d = Deployment::parse("TP2").unwrap();
+        assert_eq!(d.num_npus(), 2);
+        assert_eq!(d.instances.len(), 1);
+        assert_eq!(d.instances[0].tp, 2);
+    }
+
+    #[test]
+    fn e_pd_two_npus_disaggregated_encode() {
+        let d = Deployment::parse("E-PD").unwrap();
+        assert_eq!(d.num_npus(), 2);
+        assert_eq!(d.instances.len(), 2);
+        assert_eq!(d.instances[0].stages, StageSet::E);
+        assert_eq!(d.instances[1].stages, StageSet::PD);
+        assert_eq!(d.instances[0].npu, 0);
+        assert_eq!(d.instances[1].npu, 1);
+        assert!(d.encode_disaggregated());
+        assert!(!d.decode_disaggregated());
+    }
+
+    #[test]
+    fn colocated_e_pd_single_npu() {
+        let d = Deployment::parse("(E-PD)").unwrap();
+        assert_eq!(d.num_npus(), 1);
+        assert_eq!(d.instances.len(), 2, "two logically isolated instances");
+        assert_eq!(d.instances[0].npu, d.instances[1].npu);
+        assert!(d.encode_disaggregated());
+    }
+
+    #[test]
+    fn ep_d_couples_encode_prefill() {
+        let d = Deployment::parse("EP-D").unwrap();
+        assert_eq!(d.num_npus(), 2);
+        assert_eq!(d.instances[0].stages, StageSet::EP);
+        assert_eq!(d.instances[1].stages, StageSet::D);
+        assert!(d.decode_disaggregated());
+        assert!(!d.encode_disaggregated());
+    }
+
+    #[test]
+    fn e_p_colocated_d_separate() {
+        let d = Deployment::parse("(E-P)-D").unwrap();
+        assert_eq!(d.num_npus(), 2);
+        assert_eq!(d.instances.len(), 3);
+        assert_eq!(d.instances[0].npu, 0);
+        assert_eq!(d.instances[1].npu, 0);
+        assert_eq!(d.instances[2].npu, 1);
+        assert!(d.decode_disaggregated() && d.encode_disaggregated());
+    }
+
+    #[test]
+    fn e_d_colocated_p_separate() {
+        let d = Deployment::parse("(E-D)-P").unwrap();
+        assert_eq!(d.num_npus(), 2);
+        let stages: Vec<StageSet> = d.instances.iter().map(|i| i.stages).collect();
+        assert_eq!(stages, vec![StageSet::E, StageSet::D, StageSet::P]);
+        assert_eq!(d.instances[0].npu, 0);
+        assert_eq!(d.instances[2].npu, 1);
+    }
+
+    #[test]
+    fn full_epd_three_npus() {
+        let d = Deployment::parse("E-P-D").unwrap();
+        assert_eq!(d.num_npus(), 3);
+        assert_eq!(d.instances.len(), 3);
+        let npus: Vec<usize> = d.instances.iter().map(|i| i.npu).collect();
+        assert_eq!(npus, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn replication_suffix() {
+        let d = Deployment::parse("(E-PD)x2").unwrap();
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.num_npus(), 2);
+        assert_eq!(d.instances.len(), 4);
+        assert_eq!(d.instances[2].replica, 1);
+        assert_eq!(d.instances[2].npu, 1);
+        let tp = Deployment::parse("TP1×2").unwrap();
+        assert_eq!(tp.num_npus(), 2);
+        assert_eq!(tp.instances.len(), 2);
+    }
+
+    #[test]
+    fn instances_where_filters_by_replica_and_stage() {
+        let d = Deployment::parse("(E-P)-D x2").unwrap();
+        let encoders_r0 = d.instances_where(0, |s| s.encode);
+        let decoders_r1 = d.instances_where(1, |s| s.decode);
+        assert_eq!(encoders_r0.len(), 1);
+        assert_eq!(decoders_r1.len(), 1);
+        assert_eq!(d.instances[decoders_r1[0]].replica, 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Deployment::parse("").is_err());
+        assert!(Deployment::parse("E-P").is_err(), "no decode");
+        assert!(Deployment::parse("(E-P").is_err(), "unbalanced");
+        assert!(Deployment::parse("X-PD").is_err(), "bad letter");
+        assert!(Deployment::parse("TP0").is_err());
+        assert!(Deployment::parse("E--PD").is_err(), "empty group");
+    }
+
+    #[test]
+    fn ed_p_variant_from_abstract() {
+        // The abstract also mentions ED-P (coupled encode+decode).
+        let d = Deployment::parse("ED-P").unwrap();
+        assert_eq!(d.instances[0].stages, StageSet::ED);
+        assert_eq!(d.num_npus(), 2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Serving metrics matching the paper's definitions (§4.1):
+//! SLO attainment rate, throughput, effective (SLO-qualified) throughput,
+//! TTFT, TPOT — plus per-request records for the Fig 16 scatter plots.
+
+use crate::config::SloSpec;
+use crate::util::clock::s_to_ms;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// Immutable per-request outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub multimodal: bool,
+    pub arrival: f64,
+    /// TTFT in seconds; `None` if the request never produced a token within
+    /// the simulation horizon (counts as an SLO miss).
+    pub ttft: Option<f64>,
+    pub tpot: Option<f64>,
+    pub output_tokens: usize,
+    pub finish: Option<f64>,
+    pub recomputed: bool,
+    pub feature_reused: bool,
+}
+
+impl RequestRecord {
+    /// Did this request meet both SLO constraints?
+    pub fn meets_slo(&self, slo: &SloSpec) -> bool {
+        match (self.ttft, self.tpot) {
+            (Some(ttft), Some(tpot)) => {
+                s_to_ms(ttft) <= slo.ttft_ms && s_to_ms(tpot) <= slo.tpot_ms
+            }
+            // Single-token outputs have no TPOT; judge on TTFT alone.
+            (Some(ttft), None) if self.output_tokens <= 1 => s_to_ms(ttft) <= slo.ttft_ms,
+            _ => false,
+        }
+    }
+}
+
+/// Aggregated run metrics.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub records: Vec<RequestRecord>,
+    /// Wall span of the run: first arrival → last finish (or horizon).
+    pub makespan: f64,
+    pub num_npus: usize,
+    pub slo: SloSpec,
+}
+
+impl RunMetrics {
+    pub fn new(records: Vec<RequestRecord>, makespan: f64, num_npus: usize, slo: SloSpec) -> Self {
+        Self { records, makespan, num_npus, slo }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.finish.is_some()).count()
+    }
+
+    /// Fraction of all injected requests meeting both SLOs.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        let met = self.records.iter().filter(|r| r.meets_slo(&self.slo)).count();
+        met as f64 / self.records.len() as f64
+    }
+
+    /// Output tokens/s over the makespan (completed requests).
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return f64::NAN;
+        }
+        let tokens: usize =
+            self.records.iter().filter(|r| r.finish.is_some()).map(|r| r.output_tokens).sum();
+        tokens as f64 / self.makespan
+    }
+
+    /// Output tokens/s counting only SLO-meeting requests (the paper's
+    /// "effective throughput", §4.4/§4.5).
+    pub fn effective_throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return f64::NAN;
+        }
+        let tokens: usize = self
+            .records
+            .iter()
+            .filter(|r| r.meets_slo(&self.slo))
+            .map(|r| r.output_tokens)
+            .sum();
+        tokens as f64 / self.makespan
+    }
+
+    /// Effective throughput normalized per NPU (Table 5's last column).
+    pub fn per_npu_effective_throughput(&self) -> f64 {
+        self.effective_throughput() / self.num_npus as f64
+    }
+
+    pub fn ttft_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.records {
+            if let Some(t) = r.ttft {
+                s.push(s_to_ms(t));
+            }
+        }
+        s
+    }
+
+    pub fn tpot_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.records {
+            if let Some(t) = r.tpot {
+                s.push(s_to_ms(t));
+            }
+        }
+        s
+    }
+
+    /// Mean TTFT in ms (the paper reports means in Tables 2 and 5).
+    pub fn mean_ttft_ms(&self) -> f64 {
+        self.ttft_samples().mean()
+    }
+
+    pub fn mean_tpot_ms(&self) -> f64 {
+        self.tpot_samples().mean()
+    }
+
+    /// JSON summary (for bench result files).
+    pub fn summary_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests", self.records.len())
+            .set("completed", self.completed())
+            .set("makespan_s", self.makespan)
+            .set("num_npus", self.num_npus)
+            .set("slo_attainment", self.slo_attainment())
+            .set("throughput_tok_s", self.throughput())
+            .set("effective_throughput_tok_s", self.effective_throughput())
+            .set("per_npu_effective_throughput", self.per_npu_effective_throughput())
+            .set("ttft", self.ttft_samples().summary_json())
+            .set("tpot", self.tpot_samples().summary_json());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, ttft_ms: f64, tpot_ms: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            multimodal: true,
+            arrival: 0.0,
+            ttft: Some(ttft_ms / 1e3),
+            tpot: Some(tpot_ms / 1e3),
+            output_tokens: 64,
+            finish: Some(10.0),
+            recomputed: false,
+            feature_reused: false,
+        }
+    }
+
+    fn failed(id: u64) -> RequestRecord {
+        RequestRecord {
+            id,
+            multimodal: false,
+            arrival: 0.0,
+            ttft: None,
+            tpot: None,
+            output_tokens: 64,
+            finish: None,
+            recomputed: false,
+            feature_reused: false,
+        }
+    }
+
+    #[test]
+    fn slo_check_both_constraints() {
+        let slo = SloSpec::decode_disagg(); // 2000 / 50
+        assert!(rec(1, 1999.0, 49.0).meets_slo(&slo));
+        assert!(!rec(1, 2001.0, 49.0).meets_slo(&slo));
+        assert!(!rec(1, 1999.0, 51.0).meets_slo(&slo));
+        assert!(!failed(1).meets_slo(&slo));
+    }
+
+    #[test]
+    fn attainment_counts_unfinished_as_miss() {
+        let m = RunMetrics::new(
+            vec![rec(1, 100.0, 30.0), rec(2, 100.0, 30.0), failed(3), rec(4, 5000.0, 30.0)],
+            100.0,
+            2,
+            SloSpec::decode_disagg(),
+        );
+        assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = RunMetrics::new(
+            vec![rec(1, 100.0, 30.0), failed(2), rec(3, 9000.0, 30.0)],
+            64.0,
+            2,
+            SloSpec::decode_disagg(),
+        );
+        // completed: 2 × 64 tokens over 64 s = 2 tok/s.
+        assert!((m.throughput() - 2.0).abs() < 1e-12);
+        // effective: only rec 1 meets SLO → 1 tok/s; per NPU 0.5.
+        assert!((m.effective_throughput() - 1.0).abs() < 1e-12);
+        assert!((m.per_npu_effective_throughput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_exclude_missing() {
+        let m = RunMetrics::new(
+            vec![rec(1, 100.0, 30.0), failed(2)],
+            10.0,
+            1,
+            SloSpec::decode_disagg(),
+        );
+        assert_eq!(m.ttft_samples().len(), 1);
+        assert!((m.mean_ttft_ms() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_summary_has_fields() {
+        let m = RunMetrics::new(vec![rec(1, 10.0, 5.0)], 1.0, 1, SloSpec::strict());
+        let j = m.summary_json();
+        assert!(j.get("slo_attainment").is_some());
+        assert!(j.get("ttft").unwrap().get("p99").is_some());
+    }
+}

@@ -1,0 +1,37 @@
+//! The EPD-Serve coordinator — the paper's system contribution (§3.1, §3.4,
+//! §3.5).
+//!
+//! * [`deployment`] — the deployment-notation parser and topology builder:
+//!   `-` separates NPUs, `(..)` co-locates logically-isolated instances on
+//!   one NPU, letter runs (`EP`, `PD`, `EPD`) couple stages into one
+//!   monolithic instance, `TPn` is the tensor-parallel monolithic baseline,
+//!   `×N`/`xN` replicates.
+//! * [`request`] — per-request lifecycle state machine + timestamps.
+//! * [`balancer`] — the global instance status table and least-loaded-first
+//!   dispatch (§3.4 "Instance-Level Dynamic Load Balancing").
+//! * [`router`] — modality-aware multi-path routing: text-only → P-D path,
+//!   multimodal → E-P-D path, with MM-Store reuse short-circuiting (§3.4).
+//! * [`batcher`] — per-stage batch formation policies (encode batch, fused
+//!   prefill batch with a token cap, decode continuous batch).
+//! * [`metrics`] — TTFT / TPOT / throughput / SLO-attainment accounting
+//!   matching the paper's definitions (§4.1).
+//! * [`adaptive`] — SLO-driven dynamic deployment selection with
+//!   hysteresis (the §3.5 / §4.7 extension).
+//! * [`simserve`] — the full serving system wired onto the discrete-event
+//!   simulator: instances on processor-shared NPUs, MM-Store E-P handoff,
+//!   grouped P-D KV transmission on shared FIFO links, continuous-batching
+//!   decode. This is what every deployment-comparison bench runs.
+
+pub mod adaptive;
+pub mod balancer;
+pub mod batcher;
+pub mod deployment;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod simserve;
+
+pub use deployment::{Deployment, InstanceSpec, StageSet};
+pub use metrics::{RequestRecord, RunMetrics};
+pub use request::{ReqState, Request};
+pub use simserve::{ServingSim, SimOutcome};

@@ -1,0 +1,146 @@
+//! Request lifecycle state machine and timestamps.
+
+use crate::workload::RequestSpec;
+
+/// Lifecycle states through the EPD pipeline (Fig 1 / §3.1). Text-only
+/// requests skip the Encode states (§3.4 multi-path scheduling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// Arrived, waiting in an Encode queue.
+    EncodeQueued,
+    /// Being encoded.
+    Encoding,
+    /// Feature in flight E→P (async prefetch window).
+    FeatureTransfer,
+    /// Ready for prefill (feature local or text-only), in a Prefill queue.
+    PrefillQueued,
+    /// Being prefilled (may include local feature recomputation).
+    Prefilling,
+    /// KV in flight P→D.
+    KvTransfer,
+    /// Waiting for Decode-side KV admission.
+    AwaitAdmission,
+    /// In a decode continuous batch, generating.
+    Decoding,
+    /// All output tokens produced.
+    Finished,
+}
+
+/// A live request inside the serving system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub spec: RequestSpec,
+    pub state: ReqState,
+    pub arrival: f64,
+    pub encode_start: Option<f64>,
+    pub encode_end: Option<f64>,
+    pub prefill_start: Option<f64>,
+    pub prefill_end: Option<f64>,
+    /// First token visible to the client (TTFT reference point).
+    pub first_token: Option<f64>,
+    pub finish: Option<f64>,
+    pub tokens_generated: usize,
+    /// Whether the MM-Store GET missed and the feature was recomputed
+    /// locally on the prefill instance (§3.2 fault tolerance).
+    pub recomputed: bool,
+    /// Whether the encode stage was skipped due to an MM-Store hit from an
+    /// earlier request (cross-request reuse).
+    pub feature_reused: bool,
+    /// Instance ids this request was routed through (for balance metrics).
+    pub route: Vec<usize>,
+}
+
+impl Request {
+    pub fn new(spec: RequestSpec, arrival: f64) -> Self {
+        let state = if spec.is_multimodal() { ReqState::EncodeQueued } else { ReqState::PrefillQueued };
+        Self {
+            spec,
+            state,
+            arrival,
+            encode_start: None,
+            encode_end: None,
+            prefill_start: None,
+            prefill_end: None,
+            first_token: None,
+            finish: None,
+            tokens_generated: 0,
+            recomputed: false,
+            feature_reused: false,
+            route: Vec::new(),
+        }
+    }
+
+    /// Context tokens currently in KV (prompt + generated).
+    pub fn ctx_tokens(&self) -> usize {
+        self.spec.prompt_tokens() + self.tokens_generated
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+
+    /// Mean time per output token after the first (paper's TPOT).
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token, self.finish) {
+            (Some(first), Some(fin)) if self.spec.output_tokens > 1 => {
+                Some((fin - first) / (self.spec.output_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == ReqState::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ImageInput, RequestSpec};
+
+    fn text_spec() -> RequestSpec {
+        RequestSpec { id: 1, image: None, text_tokens: 10, output_tokens: 64 }
+    }
+
+    fn mm_spec() -> RequestSpec {
+        RequestSpec {
+            id: 2,
+            image: Some(ImageInput { width: 280, height: 280, key: "k".into(), visual_tokens: 100 }),
+            text_tokens: 10,
+            output_tokens: 64,
+        }
+    }
+
+    #[test]
+    fn initial_state_depends_on_modality() {
+        assert_eq!(Request::new(text_spec(), 0.0).state, ReqState::PrefillQueued);
+        assert_eq!(Request::new(mm_spec(), 0.0).state, ReqState::EncodeQueued);
+    }
+
+    #[test]
+    fn ttft_tpot_math() {
+        let mut r = Request::new(text_spec(), 10.0);
+        r.first_token = Some(10.5);
+        r.finish = Some(10.5 + 63.0 * 0.04);
+        r.tokens_generated = 64;
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_none_until_finished() {
+        let mut r = Request::new(text_spec(), 0.0);
+        assert_eq!(r.tpot(), None);
+        r.first_token = Some(1.0);
+        assert_eq!(r.tpot(), None);
+    }
+
+    #[test]
+    fn ctx_grows_with_generation() {
+        let mut r = Request::new(mm_spec(), 0.0);
+        assert_eq!(r.ctx_tokens(), 110);
+        r.tokens_generated = 5;
+        assert_eq!(r.ctx_tokens(), 115);
+    }
+}

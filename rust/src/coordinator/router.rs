@@ -1,0 +1,145 @@
+//! Modality-aware multi-path routing (§3.4).
+//!
+//! > "multimodal requests are processed through the E-P-D pipeline, while
+//! > text-only requests follow the P-D pipeline … preventing high-load
+//! > multimodal requests from preempting resources required by text tasks"
+//!
+//! The router also short-circuits the Encode stage entirely when the MM
+//! Store already holds the input's features (cross-request reuse, §3.2).
+
+use crate::coordinator::balancer::StatusTable;
+use crate::coordinator::deployment::Deployment;
+use crate::workload::RequestSpec;
+use anyhow::{bail, Result};
+
+/// Where a new request goes first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Multimodal request → this encode-capable instance.
+    Encode(usize),
+    /// Text-only (or feature-reused) request → this prefill instance.
+    Prefill { instance: usize, feature_reused: bool },
+}
+
+/// Routing policy: replica choice + modality path + least-loaded instance.
+pub struct Router {
+    /// Candidate encode instances per replica.
+    enc: Vec<Vec<usize>>,
+    /// Candidate prefill instances per replica.
+    pre: Vec<Vec<usize>>,
+    replicas: usize,
+}
+
+impl Router {
+    pub fn new(dep: &Deployment) -> Self {
+        let mut enc = Vec::new();
+        let mut pre = Vec::new();
+        for r in 0..dep.replicas {
+            enc.push(dep.instances_where(r, |s| s.encode));
+            pre.push(dep.instances_where(r, |s| s.prefill));
+        }
+        Self { enc, pre, replicas: dep.replicas }
+    }
+
+    /// Route one request. `feature_resident` = the MM Store already holds
+    /// this request's image features.
+    pub fn route(
+        &self,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        table: &StatusTable,
+    ) -> Result<Route> {
+        // Pick the replica whose relevant entry instances are least loaded.
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let candidates: Vec<usize> = (0..self.replicas)
+            .flat_map(|r| {
+                let set = if want_encode { &self.enc[r] } else { &self.pre[r] };
+                set.iter().copied()
+            })
+            .collect();
+        if candidates.is_empty() {
+            bail!(
+                "no {} instance available",
+                if want_encode { "encode-capable" } else { "prefill-capable" }
+            );
+        }
+        let instance = table.least_loaded(&candidates).expect("non-empty");
+        Ok(if want_encode {
+            Route::Encode(instance)
+        } else {
+            Route::Prefill { instance, feature_reused: spec.is_multimodal() && feature_resident }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::balancer::InstanceStatus;
+    use crate::workload::ImageInput;
+
+    fn text() -> RequestSpec {
+        RequestSpec { id: 1, image: None, text_tokens: 8, output_tokens: 64 }
+    }
+
+    fn mm() -> RequestSpec {
+        RequestSpec {
+            id: 2,
+            image: Some(ImageInput { width: 560, height: 560, key: "k".into(), visual_tokens: 400 }),
+            text_tokens: 8,
+            output_tokens: 64,
+        }
+    }
+
+    #[test]
+    fn text_goes_to_prefill_mm_goes_to_encode() {
+        let dep = Deployment::parse("E-P-D").unwrap();
+        let router = Router::new(&dep);
+        let table = StatusTable::new(3);
+        assert_eq!(router.route(&text(), false, &table).unwrap(), Route::Prefill { instance: 1, feature_reused: false });
+        assert_eq!(router.route(&mm(), false, &table).unwrap(), Route::Encode(0));
+    }
+
+    #[test]
+    fn resident_feature_skips_encode() {
+        let dep = Deployment::parse("E-P-D").unwrap();
+        let router = Router::new(&dep);
+        let table = StatusTable::new(3);
+        assert_eq!(
+            router.route(&mm(), true, &table).unwrap(),
+            Route::Prefill { instance: 1, feature_reused: true }
+        );
+    }
+
+    #[test]
+    fn monolithic_tp1_routes_everything_to_instance0() {
+        let dep = Deployment::parse("TP1").unwrap();
+        let router = Router::new(&dep);
+        let table = StatusTable::new(1);
+        assert_eq!(router.route(&mm(), false, &table).unwrap(), Route::Encode(0));
+        assert_eq!(
+            router.route(&text(), false, &table).unwrap(),
+            Route::Prefill { instance: 0, feature_reused: false }
+        );
+    }
+
+    #[test]
+    fn replicas_balance_by_load() {
+        let dep = Deployment::parse("(E-PD)x2").unwrap();
+        let router = Router::new(&dep);
+        let mut table = StatusTable::new(4);
+        // Load up replica 0's encoder (instance 0); replica 1's encoder is 2.
+        table.update(0, InstanceStatus { queue_len: 10, ..Default::default() });
+        assert_eq!(router.route(&mm(), false, &table).unwrap(), Route::Encode(2));
+    }
+
+    #[test]
+    fn missing_encode_instance_errors() {
+        // PD-only deployment can't take multimodal requests needing encode.
+        let dep = Deployment::parse("P-D").unwrap();
+        let router = Router::new(&dep);
+        let table = StatusTable::new(2);
+        assert!(router.route(&mm(), false, &table).is_err());
+        assert!(router.route(&text(), false, &table).is_ok());
+    }
+}

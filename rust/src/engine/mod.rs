@@ -1,0 +1,346 @@
+//! Real serving engine: the EPD pipeline executing the AOT tiny-MLLM
+//! artifacts on the CPU PJRT client.
+//!
+//! This is the end-to-end proof that all three layers compose: the same
+//! coordinator policies as the simulator (FCFS encode/prefill queues with a
+//! prefill-priority stage scheduler, round-robin continuous decode), but
+//! every stage executes a *real* compiled model. The PJRT client is not
+//! `Send` (it models one device stream, exactly like a single NPU), so the
+//! engine runs a single device loop with logically isolated stage queues —
+//! the real-machine analogue of the paper's monolithic `TP1` baseline, with
+//! the E/P/D stage structure made explicit.
+//!
+//! Metrics are wall-clock TTFT / TPOT / throughput, reported as JSON; the
+//! quickstart and `serve_workload` examples (and `epd-serve serve`) print
+//! them, and EXPERIMENTS.md §E2E records a reference run.
+
+pub mod server;
+
+use crate::config::Config;
+use crate::runtime::{tensor, Manifest, Runtime};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+/// Per-sequence decode state (literals stay on the device thread).
+struct SeqState {
+    id: u64,
+    token: i32,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    bias: xla::Literal,
+    pos: i32,
+    tokens: Vec<i32>,
+    target: usize,
+    t_arrival: Instant,
+    t_first: Option<Instant>,
+}
+
+/// A request for the real engine.
+pub struct RealRequest {
+    pub id: u64,
+    /// Flat `[img, img, 3]` f32 image; `None` = text-only.
+    pub image: Option<Vec<f32>>,
+    pub text_ids: Vec<i32>,
+    pub output_tokens: usize,
+}
+
+/// Timing record for one served request.
+#[derive(Debug, Clone)]
+pub struct RealRecord {
+    pub id: u64,
+    pub multimodal: bool,
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub tokens: Vec<i32>,
+}
+
+/// The engine: runtime + loaded executables + manifest.
+pub struct RealEngine {
+    runtime: Runtime,
+    manifest: Manifest,
+    dir: String,
+}
+
+impl RealEngine {
+    /// Load all three artifacts from `dir`.
+    pub fn load(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut runtime = Runtime::cpu()?;
+        for name in ["encoder.hlo.txt", "prefill.hlo.txt", "decode_step.hlo.txt"] {
+            runtime.load(&format!("{dir}/{name}"))?;
+        }
+        Ok(Self { runtime, manifest, dir: dir.to_string() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn art(&self, name: &str) -> String {
+        format!("{}/{name}", self.dir)
+    }
+
+    /// Encode an image to visual features (Eq. 1).
+    pub fn encode(&mut self, image: &[f32]) -> Result<xla::Literal> {
+        let m = &self.manifest;
+        let img = tensor::f32(image, &[m.img as i64, m.img as i64, 3])?;
+        let path = self.art("encoder.hlo.txt");
+        let mut out = self.runtime.load(&path)?.run(&[img])?;
+        Ok(out.remove(0))
+    }
+
+    /// Prefill (Eq. 2): returns `(first_token, seq-state literals)`.
+    #[allow(clippy::type_complexity)]
+    pub fn prefill(
+        &mut self,
+        visual: xla::Literal,
+        text_ids: &[i32],
+        vis_len: i32,
+        txt_len: i32,
+    ) -> Result<(i32, xla::Literal, xla::Literal, xla::Literal, i32)> {
+        let m = &self.manifest;
+        if text_ids.len() > m.txt {
+            bail!("text too long: {} > {}", text_ids.len(), m.txt);
+        }
+        let mut padded = text_ids.to_vec();
+        padded.resize(m.txt, 0);
+        let path = self.art("prefill.hlo.txt");
+        let out = self.runtime.load(&path)?.run(&[
+            visual,
+            tensor::i32_vec(&padded),
+            tensor::i32_scalar(vis_len),
+            tensor::i32_scalar(txt_len),
+        ])?;
+        let mut it = out.into_iter();
+        let tok = tensor::as_i32(&it.next().context("prefill: token")?)?;
+        let k = it.next().context("prefill: k")?;
+        let v = it.next().context("prefill: v")?;
+        let bias = it.next().context("prefill: bias")?;
+        let pos = tensor::as_i32(&it.next().context("prefill: pos")?)?;
+        Ok((tok, k, v, bias, pos))
+    }
+
+    /// One decode step (Eq. 3).
+    #[allow(clippy::type_complexity)]
+    pub fn decode_step(
+        &mut self,
+        token: i32,
+        k: xla::Literal,
+        v: xla::Literal,
+        bias: xla::Literal,
+        pos: i32,
+    ) -> Result<(i32, xla::Literal, xla::Literal, xla::Literal, i32)> {
+        let path = self.art("decode_step.hlo.txt");
+        let out = self.runtime.load(&path)?.run(&[
+            tensor::i32_scalar(token),
+            k,
+            v,
+            bias,
+            tensor::i32_scalar(pos),
+        ])?;
+        let mut it = out.into_iter();
+        let tok = tensor::as_i32(&it.next().context("decode: token")?)?;
+        let k = it.next().context("decode: k")?;
+        let v = it.next().context("decode: v")?;
+        let bias = it.next().context("decode: bias")?;
+        let pos = tensor::as_i32(&it.next().context("decode: pos")?)?;
+        Ok((tok, k, v, bias, pos))
+    }
+
+    /// Full single-request generation (encode → prefill → steps).
+    pub fn generate(
+        &mut self,
+        image: Option<&[f32]>,
+        text_ids: &[i32],
+        steps: usize,
+    ) -> Result<Vec<i32>> {
+        let m_vis = self.manifest.vis;
+        let m_dim = self.manifest.dim;
+        let (visual, vis_len) = match image {
+            Some(img) => (self.encode(img)?, m_vis as i32),
+            None => (
+                tensor::f32(&vec![0.0; m_vis * m_dim], &[m_vis as i64, m_dim as i64])?,
+                0,
+            ),
+        };
+        let (mut tok, mut k, mut v, mut bias, mut pos) =
+            self.prefill(visual, text_ids, vis_len, text_ids.len() as i32)?;
+        let mut out = vec![tok];
+        for _ in 1..steps {
+            let (t2, k2, v2, b2, p2) = self.decode_step(tok, k, v, bias, pos)?;
+            tok = t2;
+            k = k2;
+            v = v2;
+            bias = b2;
+            pos = p2;
+            out.push(tok);
+        }
+        Ok(out)
+    }
+
+    /// Verify the rust path reproduces the python golden generation exactly.
+    pub fn self_check(&mut self) -> Result<()> {
+        let img_path = Path::new(&self.dir).join("golden_image.f32");
+        let bytes = std::fs::read(&img_path)
+            .with_context(|| format!("reading {} (re-run `make artifacts`)", img_path.display()))?;
+        let image: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expect = self.manifest.golden_tokens.clone();
+        let text = self.manifest.golden_text_ids.clone();
+        let got = self.generate(Some(&image), &text, expect.len())?;
+        if got != expect {
+            bail!("golden mismatch: rust {got:?} vs python {expect:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Serve `n` generated requests through an explicit E→P→D pipeline with
+/// prefill-priority scheduling and round-robin continuous decode; report
+/// wall-clock metrics as JSON.
+pub fn serve_real_workload(dir: &str, cfg: &Config, n: usize) -> Result<Json> {
+    let mut engine = RealEngine::load(dir)?;
+    engine.self_check()?;
+    let m = engine.manifest().clone();
+    let mut rng = Rng::with_stream(cfg.seed, 0xe2e);
+
+    // Sample tiny-model-sized requests mirroring the workload's modality mix.
+    struct Pending {
+        req: RealRequest,
+        arrival: Instant,
+    }
+    let mut encode_q: VecDeque<Pending> = VecDeque::new();
+    let mut prefill_q: VecDeque<(Pending, Option<xla::Literal>)> = VecDeque::new();
+    let mut decoding: VecDeque<SeqState> = VecDeque::new();
+    let mut records: Vec<RealRecord> = Vec::new();
+
+    let t0 = Instant::now();
+    for id in 0..n as u64 {
+        let multimodal = rng.chance(cfg.workload.image_fraction);
+        let image = if multimodal {
+            Some((0..m.img * m.img * 3).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+        } else {
+            None
+        };
+        let text_len = rng.range_u64(1, m.txt as u64 / 2) as usize;
+        let text_ids: Vec<i32> =
+            (0..text_len).map(|_| rng.below(m.vocab as u64) as i32).collect();
+        let output_tokens = (cfg.workload.output_tokens).min(m.gen);
+        let p = Pending {
+            req: RealRequest { id, image, text_ids, output_tokens },
+            arrival: Instant::now(),
+        };
+        if p.req.image.is_some() {
+            encode_q.push_back(p);
+        } else {
+            prefill_q.push_back((p, None));
+        }
+    }
+
+    // Device loop: prefill > encode > one decode step, until drained.
+    let mut encode_time = 0.0f64;
+    let mut prefill_time = 0.0f64;
+    let mut decode_time = 0.0f64;
+    let mut decode_steps = 0u64;
+    while !(encode_q.is_empty() && prefill_q.is_empty() && decoding.is_empty()) {
+        if let Some((p, visual)) = prefill_q.pop_front() {
+            let t = Instant::now();
+            let vis_len = if visual.is_some() { m.vis as i32 } else { 0 };
+            let visual = match visual {
+                Some(v) => v,
+                None => tensor::f32(
+                    &vec![0.0; m.vis * m.dim],
+                    &[m.vis as i64, m.dim as i64],
+                )?,
+            };
+            let txt_len = p.req.text_ids.len() as i32;
+            let (tok, k, v, bias, pos) = engine.prefill(visual, &p.req.text_ids, vis_len, txt_len)?;
+            prefill_time += t.elapsed().as_secs_f64();
+            decoding.push_back(SeqState {
+                id: p.req.id,
+                token: tok,
+                k_cache: k,
+                v_cache: v,
+                bias,
+                pos,
+                tokens: vec![tok],
+                target: p.req.output_tokens,
+                t_arrival: p.arrival,
+                t_first: Some(Instant::now()),
+            });
+            continue;
+        }
+        if let Some(p) = encode_q.pop_front() {
+            let t = Instant::now();
+            let visual = engine.encode(p.req.image.as_ref().expect("queued with image"))?;
+            encode_time += t.elapsed().as_secs_f64();
+            prefill_q.push_back((p, Some(visual)));
+            continue;
+        }
+        if let Some(mut s) = decoding.pop_front() {
+            let t = Instant::now();
+            let (tok, k, v, bias, pos) =
+                engine.decode_step(s.token, s.k_cache, s.v_cache, s.bias, s.pos)?;
+            decode_time += t.elapsed().as_secs_f64();
+            decode_steps += 1;
+            s.token = tok;
+            s.k_cache = k;
+            s.v_cache = v;
+            s.bias = bias;
+            s.pos = pos;
+            s.tokens.push(tok);
+            if s.tokens.len() >= s.target {
+                let first = s.t_first.expect("set at prefill");
+                let ttft = (first - s.t_arrival).as_secs_f64();
+                let tpot = if s.tokens.len() > 1 {
+                    first.elapsed().as_secs_f64() / (s.tokens.len() - 1) as f64
+                } else {
+                    0.0
+                };
+                records.push(RealRecord {
+                    id: s.id,
+                    multimodal: false,
+                    ttft_s: ttft,
+                    tpot_s: tpot,
+                    tokens: s.tokens,
+                });
+            } else {
+                decoding.push_back(s); // round-robin continuous batching
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = records.iter().map(|r| r.tokens.len()).sum();
+
+    let mut ttft = crate::util::stats::Samples::new();
+    let mut tpot = crate::util::stats::Samples::new();
+    for r in &records {
+        ttft.push(r.ttft_s * 1e3);
+        tpot.push(r.tpot_s * 1e3);
+    }
+    let mut out = Json::obj();
+    out.set("platform", engine.platform())
+        .set("requests", records.len())
+        .set("wall_s", wall)
+        .set("throughput_tok_s", total_tokens as f64 / wall)
+        .set("decode_steps", decode_steps)
+        .set("stage_seconds", {
+            let mut s = Json::obj();
+            s.set("encode", encode_time).set("prefill", prefill_time).set("decode", decode_time);
+            s
+        })
+        .set("ttft_ms", ttft.summary_json())
+        .set("tpot_ms", tpot.summary_json())
+        .set("self_check", "golden tokens reproduced");
+    Ok(out)
+}

@@ -1,0 +1,133 @@
+//! API server + proxy front-end (Fig 3's entry components).
+//!
+//! A TCP JSON-lines protocol: each request line is
+//! `{"text_ids": [..], "image_seed": 7}` (omit `image_seed` for text-only)
+//! and the response line is
+//! `{"id": n, "tokens": [..], "ttft_ms": .., "total_ms": ..}`.
+//!
+//! The PJRT client is not `Send` (one device stream), so the architecture
+//! mirrors a real leader/worker split: acceptor threads parse requests and
+//! forward plain data over an mpsc channel to the single **device loop**
+//! (the worker owning the engine); responses travel back over per-request
+//! channels. The modality split of §3.4 happens in the device loop's queue
+//! discipline: text-only requests skip the encode step entirely.
+
+use crate::engine::RealEngine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A parsed API request.
+struct ApiRequest {
+    text_ids: Vec<i32>,
+    image_seed: Option<u64>,
+    steps: usize,
+    reply: mpsc::Sender<Json>,
+}
+
+/// Serve `max_requests` requests on `addr` (e.g. `"127.0.0.1:0"`), then
+/// shut down. Returns the bound address through `on_ready` as soon as the
+/// listener is up (tests use port 0 + this callback).
+pub fn serve(
+    dir: &str,
+    addr: &str,
+    max_requests: usize,
+    on_ready: impl FnOnce(std::net::SocketAddr) + Send + 'static,
+) -> Result<usize> {
+    let mut engine = RealEngine::load(dir)?;
+    let m = engine.manifest().clone();
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    on_ready(local);
+
+    let (tx, rx) = mpsc::channel::<ApiRequest>();
+
+    // Acceptor thread: parse lines, forward plain data to the device loop.
+    let max = max_requests;
+    let acceptor = std::thread::spawn(move || -> Result<()> {
+        let mut served = 0;
+        while served < max {
+            let (stream, _) = listener.accept()?;
+            served += handle_conn(stream, &tx, max - served)?;
+        }
+        Ok(())
+    });
+
+    // Device loop: the single PJRT owner.
+    let mut done = 0usize;
+    let mut id = 0u64;
+    while done < max_requests {
+        let Ok(req) = rx.recv() else { break };
+        let t0 = Instant::now();
+        let image: Option<Vec<f32>> = req.image_seed.map(|seed| {
+            let mut rng = Rng::with_stream(seed, IMAGE_STREAM);
+            (0..m.img * m.img * 3).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+        });
+        let steps = req.steps.clamp(1, m.gen);
+        let result = engine.generate(image.as_deref(), &req.text_ids, steps);
+        let mut resp = Json::obj();
+        match result {
+            Ok(tokens) => {
+                resp.set("id", id)
+                    .set("tokens", tokens.iter().map(|&t| t as i64).collect::<Vec<_>>())
+                    .set("total_ms", t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Err(e) => {
+                resp.set("id", id).set("error", format!("{e:#}"));
+            }
+        }
+        let _ = req.reply.send(resp);
+        id += 1;
+        done += 1;
+    }
+    drop(rx);
+    let _ = acceptor.join();
+    Ok(done)
+}
+
+/// RNG stream id for synthetic request images.
+const IMAGE_STREAM: u64 = 0x1a9e;
+
+fn handle_conn(stream: TcpStream, tx: &mpsc::Sender<ApiRequest>, budget: usize) -> Result<usize> {
+    let mut out = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut served = 0usize;
+    // Check the budget BEFORE blocking on the next line, so the connection
+    // handler returns as soon as its quota is filled (no shutdown hang).
+    while served < budget {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break; // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                let mut err = Json::obj();
+                err.set("error", format!("bad request: {e}"));
+                writeln!(out, "{}", err.to_string_compact())?;
+                continue;
+            }
+        };
+        let text_ids: Vec<i32> = parsed
+            .get("text_ids")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as i32).collect())
+            .unwrap_or_default();
+        let image_seed = parsed.get("image_seed").and_then(Json::as_f64).map(|x| x as u64);
+        let steps = parsed.get("steps").and_then(Json::as_f64).map(|x| x as usize).unwrap_or(8);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(ApiRequest { text_ids, image_seed, steps, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("device loop gone"))?;
+        let resp = reply_rx.recv().map_err(|_| anyhow::anyhow!("device loop gone"))?;
+        writeln!(out, "{}", resp.to_string_compact())?;
+        served += 1;
+    }
+    Ok(served)
+}

@@ -1,0 +1,194 @@
+//! Fixed-size KV block allocator with ref-counting.
+//!
+//! Blocks are the allocation granule of the paged KV cache (16 tokens per
+//! block by default, as in PagedAttention). Ref-counting lets two sequence
+//! views share prefix blocks — used during P→D migration where the Decode
+//! instance adopts the Prefill instance's blocks before the transfer
+//! completes logically.
+
+use std::collections::VecDeque;
+use thiserror::Error;
+
+/// Index of a block within the pool.
+pub type BlockId = u32;
+
+/// Allocation failures.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum BlockError {
+    #[error("out of KV blocks: requested {requested}, free {free}")]
+    OutOfBlocks { requested: usize, free: usize },
+    #[error("block {0} double free")]
+    DoubleFree(BlockId),
+    #[error("block {0} not allocated")]
+    NotAllocated(BlockId),
+}
+
+/// Fixed-capacity ref-counted block pool.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    refcounts: Vec<u32>,
+    free: VecDeque<BlockId>,
+    block_tokens: usize,
+    block_bytes: usize,
+}
+
+impl BlockAllocator {
+    /// Create a pool with `num_blocks` blocks of `block_tokens` tokens,
+    /// `block_bytes` device bytes each.
+    pub fn new(num_blocks: usize, block_tokens: usize, block_bytes: usize) -> Self {
+        assert!(block_tokens > 0);
+        Self {
+            refcounts: vec![0; num_blocks],
+            free: (0..num_blocks as BlockId).collect(),
+            block_tokens,
+            block_bytes,
+        }
+    }
+
+    /// Size a pool from a byte budget and per-token KV bytes.
+    pub fn for_capacity(capacity_bytes: f64, kv_bytes_per_token: usize, block_tokens: usize) -> Self {
+        let block_bytes = kv_bytes_per_token * block_tokens;
+        let num_blocks = (capacity_bytes / block_bytes as f64).floor().max(0.0) as usize;
+        Self::new(num_blocks, block_tokens, block_bytes)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refcounts.len()
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks() - self.free_blocks()
+    }
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can `tokens` more tokens be allocated right now?
+    pub fn can_allocate_tokens(&self, tokens: usize) -> bool {
+        self.blocks_for_tokens(tokens) <= self.free_blocks()
+    }
+
+    /// Allocate `n` blocks (refcount 1 each).
+    pub fn allocate(&mut self, n: usize) -> Result<Vec<BlockId>, BlockError> {
+        if n > self.free.len() {
+            return Err(BlockError::OutOfBlocks { requested: n, free: self.free.len() });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.free.pop_front().expect("checked len");
+            debug_assert_eq!(self.refcounts[id as usize], 0);
+            self.refcounts[id as usize] = 1;
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    /// Increase the refcount (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) -> Result<(), BlockError> {
+        let rc = self.refcounts.get_mut(id as usize).ok_or(BlockError::NotAllocated(id))?;
+        if *rc == 0 {
+            return Err(BlockError::NotAllocated(id));
+        }
+        *rc += 1;
+        Ok(())
+    }
+
+    /// Decrease the refcount; the block returns to the free list at zero.
+    pub fn release(&mut self, id: BlockId) -> Result<(), BlockError> {
+        let rc = self.refcounts.get_mut(id as usize).ok_or(BlockError::NotAllocated(id))?;
+        if *rc == 0 {
+            return Err(BlockError::DoubleFree(id));
+        }
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push_back(id);
+        }
+        Ok(())
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.num_blocks() == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.num_blocks() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_round_trip() {
+        let mut a = BlockAllocator::new(8, 16, 1024);
+        let blocks = a.allocate(5).unwrap();
+        assert_eq!(blocks.len(), 5);
+        assert_eq!(a.free_blocks(), 3);
+        for b in &blocks {
+            a.release(*b).unwrap();
+        }
+        assert_eq!(a.free_blocks(), 8);
+    }
+
+    #[test]
+    fn exhaustion_is_reported_not_panicked() {
+        let mut a = BlockAllocator::new(4, 16, 1024);
+        a.allocate(4).unwrap();
+        assert_eq!(a.allocate(1), Err(BlockError::OutOfBlocks { requested: 1, free: 0 }));
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut a = BlockAllocator::new(2, 16, 1024);
+        let b = a.allocate(1).unwrap()[0];
+        a.release(b).unwrap();
+        assert_eq!(a.release(b), Err(BlockError::DoubleFree(b)));
+    }
+
+    #[test]
+    fn refcounted_sharing() {
+        let mut a = BlockAllocator::new(2, 16, 1024);
+        let b = a.allocate(1).unwrap()[0];
+        a.retain(b).unwrap();
+        a.release(b).unwrap();
+        assert_eq!(a.free_blocks(), 1, "still held by the second ref");
+        a.release(b).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let a = BlockAllocator::new(10, 16, 1024);
+        assert_eq!(a.blocks_for_tokens(0), 0);
+        assert_eq!(a.blocks_for_tokens(1), 1);
+        assert_eq!(a.blocks_for_tokens(16), 1);
+        assert_eq!(a.blocks_for_tokens(17), 2);
+    }
+
+    #[test]
+    fn for_capacity_sizes_pool() {
+        // 1 MB budget, 1 KB per token, 16-token blocks → 64 blocks.
+        let a = BlockAllocator::for_capacity(1e6, 1000, 16);
+        assert_eq!(a.num_blocks(), 62); // floor(1e6 / 16000)
+        assert_eq!(a.block_bytes(), 16_000);
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut a = BlockAllocator::new(4, 16, 1);
+        assert_eq!(a.utilization(), 0.0);
+        let _ = a.allocate(2).unwrap();
+        assert_eq!(a.utilization(), 0.5);
+    }
+}

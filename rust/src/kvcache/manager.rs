@@ -1,0 +1,172 @@
+//! Per-instance KV manager: sequence table over the block allocator.
+
+use crate::kvcache::block::{BlockAllocator, BlockError, BlockId};
+use std::collections::HashMap;
+use thiserror::Error;
+
+/// Request identifier as used across the coordinator.
+pub type SeqId = u64;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("sequence {0} already registered")]
+    Duplicate(SeqId),
+    #[error("sequence {0} unknown")]
+    Unknown(SeqId),
+    #[error(transparent)]
+    Block(#[from] BlockError),
+}
+
+#[derive(Debug)]
+struct SeqEntry {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+}
+
+/// Sequence-level KV accounting on one instance.
+#[derive(Debug)]
+pub struct KvManager {
+    alloc: BlockAllocator,
+    seqs: HashMap<SeqId, SeqEntry>,
+    /// High-water mark of block utilization, for metrics.
+    peak_used: usize,
+}
+
+impl KvManager {
+    pub fn new(alloc: BlockAllocator) -> Self {
+        Self { alloc, seqs: HashMap::new(), peak_used: 0 }
+    }
+
+    /// Admission check: can a sequence of `tokens` context be admitted?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.alloc.can_allocate_tokens(tokens)
+    }
+
+    /// Register a new sequence with `tokens` of initial context (prefill).
+    pub fn register(&mut self, id: SeqId, tokens: usize) -> Result<(), KvError> {
+        if self.seqs.contains_key(&id) {
+            return Err(KvError::Duplicate(id));
+        }
+        let n = self.alloc.blocks_for_tokens(tokens);
+        let blocks = self.alloc.allocate(n)?;
+        self.seqs.insert(id, SeqEntry { blocks, tokens });
+        self.peak_used = self.peak_used.max(self.alloc.used_blocks());
+        Ok(())
+    }
+
+    /// Append `n` generated tokens (decode step), growing blocks as needed.
+    pub fn append(&mut self, id: SeqId, n: usize) -> Result<(), KvError> {
+        let entry = self.seqs.get_mut(&id).ok_or(KvError::Unknown(id))?;
+        let need = (entry.tokens + n).div_ceil(self.alloc.block_tokens());
+        if need > entry.blocks.len() {
+            let extra = self.alloc.allocate(need - entry.blocks.len())?;
+            entry.blocks.extend(extra);
+        }
+        entry.tokens += n;
+        self.peak_used = self.peak_used.max(self.alloc.used_blocks());
+        Ok(())
+    }
+
+    /// Free a completed sequence.
+    pub fn free(&mut self, id: SeqId) -> Result<(), KvError> {
+        let entry = self.seqs.remove(&id).ok_or(KvError::Unknown(id))?;
+        for b in entry.blocks {
+            self.alloc.release(b)?;
+        }
+        Ok(())
+    }
+
+    pub fn tokens_of(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|e| e.tokens)
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Σ context tokens of all resident sequences (drives decode-step cost).
+    pub fn total_tokens(&self) -> usize {
+        self.seqs.values().map(|e| e.tokens).sum()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.alloc.utilization()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(blocks: usize) -> KvManager {
+        KvManager::new(BlockAllocator::new(blocks, 16, 1024))
+    }
+
+    #[test]
+    fn lifecycle_register_append_free() {
+        let mut m = mgr(16);
+        m.register(1, 40).unwrap(); // 3 blocks
+        assert_eq!(m.tokens_of(1), Some(40));
+        assert_eq!(m.free_blocks(), 13);
+        m.append(1, 8).unwrap(); // 48 tokens → still 3 blocks
+        assert_eq!(m.free_blocks(), 13);
+        m.append(1, 1).unwrap(); // 49 → 4 blocks
+        assert_eq!(m.free_blocks(), 12);
+        m.free(1).unwrap();
+        assert_eq!(m.free_blocks(), 16);
+        assert_eq!(m.num_seqs(), 0);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        let mut m = mgr(8);
+        m.register(1, 10).unwrap();
+        assert_eq!(m.register(1, 10), Err(KvError::Duplicate(1)));
+        assert_eq!(m.free(99), Err(KvError::Unknown(99)));
+        assert_eq!(m.append(99, 1), Err(KvError::Unknown(99)));
+    }
+
+    #[test]
+    fn admission_control_reflects_capacity() {
+        let mut m = mgr(4);
+        assert!(m.can_admit(64));
+        assert!(!m.can_admit(65));
+        m.register(1, 48).unwrap(); // 3 blocks
+        assert!(m.can_admit(16));
+        assert!(!m.can_admit(17));
+    }
+
+    #[test]
+    fn exhaustion_propagates_cleanly() {
+        let mut m = mgr(2);
+        m.register(1, 32).unwrap();
+        let err = m.register(2, 16).unwrap_err();
+        assert!(matches!(err, KvError::Block(_)));
+        // Failed registration must not leak a partial sequence.
+        assert_eq!(m.num_seqs(), 1);
+    }
+
+    #[test]
+    fn total_tokens_and_peak_tracking() {
+        let mut m = mgr(32);
+        m.register(1, 100).unwrap();
+        m.register(2, 60).unwrap();
+        assert_eq!(m.total_tokens(), 160);
+        let peak = m.peak_used_blocks();
+        m.free(1).unwrap();
+        assert_eq!(m.total_tokens(), 60);
+        assert_eq!(m.peak_used_blocks(), peak, "peak is a high-water mark");
+    }
+}

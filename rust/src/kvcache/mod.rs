@@ -1,0 +1,15 @@
+//! Paged KV-cache management (vLLM-style), used by Prefill and Decode
+//! instances for admission control and memory accounting.
+//!
+//! * [`BlockAllocator`] — fixed-size block pool with ref-counting (prefix
+//!   blocks can be shared when a Prefill instance hands a sequence to a
+//!   Decode instance during migration).
+//! * [`KvManager`] — per-instance sequence table mapping request → block
+//!   list, with grow-on-decode and capacity queries the schedulers use to
+//!   decide admission.
+
+pub mod block;
+pub mod manager;
+
+pub use block::{BlockAllocator, BlockId};
+pub use manager::KvManager;

@@ -1,0 +1,41 @@
+//! # EPD-Serve
+//!
+//! A flexible multimodal **E**ncode–**P**refill–**D**ecode disaggregated
+//! inference serving system, reproducing Bai et al., *"EPD-Serve: A Flexible
+//! Multimodal EPD Disaggregation Inference Serving System On Ascend"*
+//! (CS.DC 2026).
+//!
+//! The library is organized in three layers (see `DESIGN.md`):
+//!
+//! * **Layer 3** (this crate): the serving coordinator — modality-aware
+//!   routing, instance-level load balancing, continuous batching, paged KV
+//!   cache management, the MM-Store multimodal feature pool, and the two
+//!   cross-stage transmission engines (E-P asynchronous feature prefetching,
+//!   P-D hierarchically grouped KV transmission). Because the paper's Ascend
+//!   testbed is not available, stage execution is pluggable: either a
+//!   calibrated discrete-event **NPU simulator** ([`npu`], [`sim`]) or a
+//!   **real CPU-PJRT engine** ([`engine`], [`runtime`]) running a tiny
+//!   JAX/Pallas multimodal model AOT-compiled to HLO.
+//! * **Layer 2** (`python/compile/model.py`): the JAX model (ViT encoder +
+//!   decoder LM) lowered once at build time.
+//! * **Layer 1** (`python/compile/kernels/`): Pallas attention kernels.
+//!
+//! Entry points: the `epd-serve` binary (`rust/src/main.rs`), the examples
+//! under `examples/`, and the per-table/figure benches under `rust/benches/`.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod mmstore;
+pub mod npu;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod transport;
+pub mod util;
+pub mod workload;
+
+/// Crate version, re-exported for the CLI banner.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,179 @@
+//! `epd-serve` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!
+//! * `simulate` — run one simulated serving experiment (deployment × rate ×
+//!   workload) on the calibrated Ascend model and print the paper's metrics.
+//! * `sweep`    — sweep request rates over one or more deployments.
+//! * `serve`    — real-path serving: load the AOT artifacts (tiny MLLM) via
+//!   CPU-PJRT and serve a generated workload with the same coordinator
+//!   policies (see also `examples/serve_workload.rs`).
+//! * `trace`    — sample a workload and write it as a JSON-lines trace.
+
+use anyhow::{bail, Result};
+use epd_serve::config::Config;
+use epd_serve::coordinator::simserve::run_serving;
+use epd_serve::util::cli::Cli;
+use epd_serve::util::stats::{fmt_ms, fmt_pct};
+use epd_serve::workload;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let cli = Cli::new(
+        "epd-serve",
+        "flexible multimodal EPD-disaggregated inference serving (Ascend-simulated / CPU-PJRT)",
+    )
+    .opt("config", "TOML config file (configs/*.toml)")
+    .opt_default("deployment", "E-P-D", "deployment notation, e.g. TP1, (E-P)-D")
+    .opt_default("rate", "2.0", "request rate, req/s")
+    .opt_default("workload", "sharegpt4o", "workload: sharegpt4o | vwi")
+    .opt_default("model", "openpangu-7b-vl", "model: openpangu-7b-vl | qwen3-vl-8b")
+    .opt_default("requests", "512", "number of requests")
+    .opt_default("seed", "42", "random seed")
+    .opt("rates", "comma-separated rates for `sweep`")
+    .opt("out", "output path (trace subcommand)")
+    .opt_default("artifacts", "artifacts", "AOT artifact directory (serve subcommand)")
+    .flag("per-npu-rate", "interpret --rate as per-NPU and scale by NPU count")
+    .flag("no-prefetch", "disable E-P asynchronous feature prefetching")
+    .flag("layerwise-kv", "use layer-wise (non-grouped) P-D KV transmission")
+    .flag("json", "emit JSON instead of a table");
+    let args = cli.parse_env();
+
+    let sub = args.positionals().first().map(|s| s.as_str()).unwrap_or("simulate");
+
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    if args.get("config").is_none() {
+        cfg.model = epd_serve::config::ModelDesc::by_name(args.get("model").unwrap())?;
+        cfg.workload = epd_serve::config::WorkloadSpec::by_name(args.get("workload").unwrap())?;
+        cfg.deployment = args.get("deployment").unwrap().to_string();
+        cfg.rate = args.get_f64("rate").unwrap();
+        cfg.seed = args.get_u64("seed").unwrap();
+        cfg.workload.num_requests = args.get_usize("requests").unwrap();
+    }
+    if args.flag("no-prefetch") {
+        cfg.scheduler.ep_async_prefetch = false;
+    }
+    if args.flag("layerwise-kv") {
+        cfg.scheduler.pd_mode = epd_serve::config::PdMode::LayerWise;
+    }
+
+    match sub {
+        "simulate" => simulate(&cfg, &args),
+        "sweep" => sweep(&cfg, &args),
+        "trace" => trace(&cfg, &args),
+        "serve" => serve(&cfg, &args),
+        other => bail!("unknown subcommand '{other}' (use simulate | sweep | trace | serve)"),
+    }
+}
+
+fn effective_rate(cfg: &Config, per_npu: bool) -> Result<f64> {
+    if per_npu {
+        let dep = epd_serve::coordinator::deployment::Deployment::parse(&cfg.deployment)?;
+        Ok(cfg.rate * dep.num_npus() as f64)
+    } else {
+        Ok(cfg.rate)
+    }
+}
+
+fn simulate(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
+    let mut cfg = cfg.clone();
+    cfg.rate = effective_rate(&cfg, args.flag("per-npu-rate"))?;
+    let out = run_serving(&cfg)?;
+    let m = &out.metrics;
+    if args.flag("json") {
+        println!("{}", m.summary_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("deployment      : {}", cfg.deployment);
+    println!("workload        : {} ({} requests)", cfg.workload.name, cfg.workload.num_requests);
+    println!("rate            : {:.2} req/s", cfg.rate);
+    println!("completed       : {}/{}", m.completed(), m.records.len());
+    println!("SLO attainment  : {}", fmt_pct(m.slo_attainment()));
+    println!("throughput      : {:.2} tok/s", m.throughput());
+    println!(
+        "eff. throughput : {:.2} tok/s ({:.2} per NPU)",
+        m.effective_throughput(),
+        m.per_npu_effective_throughput()
+    );
+    println!(
+        "TTFT mean/p99   : {} / {} ms",
+        fmt_ms(m.mean_ttft_ms()),
+        fmt_ms(m.ttft_samples().p99())
+    );
+    println!(
+        "TPOT mean/p99   : {} / {} ms",
+        fmt_ms(m.mean_tpot_ms()),
+        fmt_ms(m.tpot_samples().p99())
+    );
+    println!("MM-Store        : {:?}", out.store_stats);
+    println!("events          : {}", out.events_processed);
+    Ok(())
+}
+
+fn sweep(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(s) => s.split(',').map(|x| x.trim().parse().unwrap()).collect(),
+        None => vec![1.0, 2.0, 4.0, 6.0, 8.0, 10.0, 12.0],
+    };
+    let deployments: Vec<String> = {
+        let ds = args.get_all("deployment");
+        if ds.is_empty() {
+            vec![cfg.deployment.clone()]
+        } else {
+            ds.to_vec()
+        }
+    };
+    let mut rows = Vec::new();
+    for dep in &deployments {
+        for &rate in &rates {
+            let mut c = cfg.clone();
+            c.deployment = dep.clone();
+            c.rate = rate;
+            c.rate = effective_rate(&c, args.flag("per-npu-rate"))?;
+            let out = run_serving(&c)?;
+            let m = &out.metrics;
+            rows.push(vec![
+                dep.clone(),
+                format!("{rate}"),
+                fmt_pct(m.slo_attainment()),
+                format!("{:.1}", m.throughput()),
+                format!("{:.1}", m.per_npu_effective_throughput()),
+                fmt_ms(m.mean_ttft_ms()),
+                fmt_ms(m.mean_tpot_ms()),
+            ]);
+        }
+    }
+    epd_serve::bench::print_table(
+        "rate sweep",
+        &["deployment", "rate", "SLO", "thr tok/s", "eff/NPU", "TTFT ms", "TPOT ms"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn trace(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
+    let out_path = args.get("out").unwrap_or("trace.jsonl");
+    let specs = workload::generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+    let arrivals =
+        workload::injector::inject(&specs, cfg.rate, workload::injector::Arrival::Poisson, cfg.seed);
+    workload::trace::save(out_path, &arrivals)?;
+    println!("wrote {} requests to {out_path}", arrivals.len());
+    Ok(())
+}
+
+fn serve(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap();
+    let n = args.get_usize("requests").unwrap_or(16).min(64);
+    let report = epd_serve::engine::serve_real_workload(dir, cfg, n)?;
+    println!("{}", report.to_string_pretty());
+    Ok(())
+}

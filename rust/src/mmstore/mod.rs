@@ -1,0 +1,233 @@
+//! MM Store — the shared multimodal feature cache pool (§3.2).
+//!
+//! The paper stores encoded multimodal features in a Mooncake-style
+//! distributed object store, keyed by the hash of the multimodal input:
+//!
+//! > "a shared multimodal cache pool, named MM Store, that stores encoded
+//! > multimodal features using the hash of multimodal inputs as the key …
+//! > avoids duplicate caching and transmission, supports cross-request reuse
+//! > of features"
+//!
+//! This implementation is a capacity-bounded LRU keyed by content hash with
+//! full hit/miss/eviction accounting. Transfer *timing* is the transport
+//! layer's job ([`crate::transport::ep`] uses the Table 3-calibrated GET
+//! latency fit); this module is the metadata + residency authority. It also
+//! backs the **fault-tolerant recomputation** path: a `get` miss after a
+//! `put` (evicted, or simulated store failure) tells the Prefill instance to
+//! locally re-encode (§3.2).
+
+use std::collections::HashMap;
+
+/// Stored feature metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub bytes: f64,
+    pub visual_tokens: usize,
+    last_access: u64,
+}
+
+/// Hit/miss statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    pub puts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub dedup_puts: u64,
+}
+
+impl StoreStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            f64::NAN
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Capacity-bounded content-addressed feature pool.
+#[derive(Debug)]
+pub struct MmStore {
+    entries: HashMap<String, Entry>,
+    capacity_bytes: f64,
+    used_bytes: f64,
+    tick: u64,
+    stats: StoreStats,
+    /// Injected failure probability for the fault-tolerance path
+    /// (0.0 in normal operation; benches and tests raise it).
+    fail_prob: f64,
+    fail_rng: crate::util::rng::Rng,
+}
+
+impl MmStore {
+    pub fn new(capacity_bytes: f64) -> Self {
+        assert!(capacity_bytes > 0.0);
+        Self {
+            entries: HashMap::new(),
+            capacity_bytes,
+            used_bytes: 0.0,
+            tick: 0,
+            stats: StoreStats::default(),
+            fail_prob: 0.0,
+            fail_rng: crate::util::rng::Rng::with_stream(0, 0xfa11),
+        }
+    }
+
+    /// Enable injected GET failures with the given probability (failure
+    /// injection for §3.2's recomputation fallback).
+    pub fn with_failures(mut self, prob: f64, seed: u64) -> Self {
+        self.fail_prob = prob;
+        self.fail_rng = crate::util::rng::Rng::with_stream(seed, 0xfa11);
+        self
+    }
+
+    /// Insert a feature blob. Duplicate puts of the same key are dedup'd
+    /// (counted, not stored twice) — "avoids duplicate caching".
+    /// Returns true if the blob was newly stored.
+    pub fn put(&mut self, key: &str, bytes: f64, visual_tokens: usize) -> bool {
+        self.tick += 1;
+        self.stats.puts += 1;
+        if let Some(e) = self.entries.get_mut(key) {
+            e.last_access = self.tick;
+            self.stats.dedup_puts += 1;
+            return false;
+        }
+        // Evict LRU entries until the new blob fits.
+        while self.used_bytes + bytes > self.capacity_bytes && !self.entries.is_empty() {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_access)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            let e = self.entries.remove(&victim).expect("present");
+            self.used_bytes -= e.bytes;
+            self.stats.evictions += 1;
+        }
+        if bytes > self.capacity_bytes {
+            // Blob larger than the whole store: reject (caller recomputes).
+            return false;
+        }
+        self.used_bytes += bytes;
+        self.entries.insert(key.to_string(), Entry { bytes, visual_tokens, last_access: self.tick });
+        true
+    }
+
+    /// Fetch feature metadata. `None` = miss (never stored, evicted, or an
+    /// injected store failure) → caller must trigger local recomputation.
+    pub fn get(&mut self, key: &str) -> Option<Entry> {
+        self.tick += 1;
+        if self.fail_prob > 0.0 && self.fail_rng.chance(self.fail_prob) {
+            self.stats.misses += 1;
+            return None;
+        }
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_access = self.tick;
+                self.stats.hits += 1;
+                Some(e.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Residency check without stats impact (used by the router to predict
+    /// reuse before dispatch).
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+    pub fn used_bytes(&self) -> f64 {
+        self.used_bytes
+    }
+    pub fn capacity_bytes(&self) -> f64 {
+        self.capacity_bytes
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_round_trip() {
+        let mut s = MmStore::new(1e9);
+        assert!(s.put("k1", 1e6, 100));
+        let e = s.get("k1").unwrap();
+        assert_eq!(e.visual_tokens, 100);
+        assert_eq!(e.bytes, 1e6);
+        assert_eq!(s.stats().hits, 1);
+    }
+
+    #[test]
+    fn miss_counts() {
+        let mut s = MmStore::new(1e9);
+        assert!(s.get("nope").is_none());
+        assert_eq!(s.stats().misses, 1);
+        assert!(s.stats().hit_rate() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_put_dedups() {
+        let mut s = MmStore::new(1e9);
+        assert!(s.put("k", 5e5, 50));
+        assert!(!s.put("k", 5e5, 50));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.used_bytes(), 5e5);
+        assert_eq!(s.stats().dedup_puts, 1);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let mut s = MmStore::new(3e6);
+        s.put("a", 1e6, 1);
+        s.put("b", 1e6, 2);
+        s.put("c", 1e6, 3);
+        // Touch "a" so "b" becomes LRU.
+        s.get("a").unwrap();
+        s.put("d", 1e6, 4);
+        assert!(s.contains("a"));
+        assert!(!s.contains("b"), "LRU victim");
+        assert!(s.contains("c") && s.contains("d"));
+        assert_eq!(s.stats().evictions, 1);
+        assert!(s.used_bytes() <= s.capacity_bytes());
+    }
+
+    #[test]
+    fn oversized_blob_rejected() {
+        let mut s = MmStore::new(1e6);
+        assert!(!s.put("huge", 2e6, 999));
+        assert!(!s.contains("huge"));
+        assert_eq!(s.used_bytes(), 0.0);
+    }
+
+    #[test]
+    fn injected_failures_force_misses() {
+        let mut s = MmStore::new(1e9).with_failures(1.0, 7);
+        s.put("k", 1e5, 10);
+        assert!(s.get("k").is_none(), "100% failure injection");
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn partial_failure_rate_roughly_respected() {
+        let mut s = MmStore::new(1e9).with_failures(0.3, 9);
+        s.put("k", 1e5, 10);
+        let misses = (0..1000).filter(|_| s.get("k").is_none()).count();
+        assert!((200..400).contains(&misses), "misses={misses}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Co-location interference model (paper Fig 6, right panel; §3.5).
+//!
+//! When two workloads share one NPU ("physical co-location with logical
+//! isolation"), each hardware resource — cube engine, vector engine, HBM
+//! bandwidth — is shared proportionally. A workload slows down by the
+//! saturation factor of the resource it depends on most:
+//!
+//! > "operators with significant differences in resource requirements exhibit
+//! > minimal mutual interference when co-located, whereas operators with
+//! > similar resource demands generate more pronounced performance
+//! > interference" (Fig 6 caption)
+//!
+//! Model: given demand vectors `a` (the victim) and `B = Σ other active
+//! demands`, each resource `i` has total demand `d_i = a_i + B_i`. If
+//! `d_i ≤ 1` the resource is unsaturated and contributes no slowdown; if
+//! saturated, work on it stretches by `d_i`. The victim's overall slowdown is
+//! the demand-weighted blend of its per-resource stretches — a workload that
+//! barely touches a saturated resource barely feels it.
+
+/// Fractional demand on each NPU hardware resource, each in [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceVec {
+    /// AI Core (cube / matrix engine).
+    pub cube: f64,
+    /// AI Vector engine.
+    pub vector: f64,
+    /// HBM bandwidth.
+    pub bw: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec = ResourceVec { cube: 0.0, vector: 0.0, bw: 0.0 };
+
+    pub fn add(&self, other: &ResourceVec) -> ResourceVec {
+        ResourceVec {
+            cube: self.cube + other.cube,
+            vector: self.vector + other.vector,
+            bw: self.bw + other.bw,
+        }
+    }
+
+    pub fn as_array(&self) -> [f64; 3] {
+        [self.cube, self.vector, self.bw]
+    }
+
+    /// Total demand mass (used as the weighting denominator).
+    pub fn mass(&self) -> f64 {
+        self.cube + self.vector + self.bw
+    }
+}
+
+/// Slowdown factor (≥ 1) experienced by a workload with demand `victim`
+/// when sharing the NPU with aggregate background demand `others`.
+pub fn colocated_slowdown(victim: &ResourceVec, others: &ResourceVec) -> f64 {
+    let v = victim.as_array();
+    let o = others.as_array();
+    let mass = victim.mass();
+    if mass <= 0.0 {
+        return 1.0;
+    }
+    let mut acc = 0.0;
+    for i in 0..3 {
+        let total = v[i] + o[i];
+        // Per-resource stretch: 1 if unsaturated, else proportional-share.
+        let stretch = total.max(1.0);
+        acc += v[i] / mass * stretch;
+    }
+    acc.max(1.0)
+}
+
+/// Symmetric pairwise interference for the Fig 6 heatmap: the percentage
+/// latency increase of `a` when run concurrently with `b`.
+pub fn pairwise_interference(a: &ResourceVec, b: &ResourceVec) -> f64 {
+    (colocated_slowdown(a, b) - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::op::{OpClass, StageKind};
+
+    #[test]
+    fn no_background_no_slowdown() {
+        let v = StageKind::Prefill.demand();
+        assert!((colocated_slowdown(&v, &ResourceVec::ZERO) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn similar_ops_interfere_more_than_disjoint_ops() {
+        let mm = OpClass::MatMul.profile().demand;
+        let cp = OpClass::Copy.profile().demand;
+        let mm_mm = pairwise_interference(&mm, &mm);
+        let mm_cp = pairwise_interference(&mm, &cp);
+        let cp_cp = pairwise_interference(&cp, &cp);
+        // Fig 6: same-kind co-location hurts, disjoint-kind is near-free.
+        assert!(mm_mm > 50.0, "MatMul||MatMul should contend heavily: {mm_mm}");
+        assert!(cp_cp > 50.0, "Copy||Copy saturates bandwidth: {cp_cp}");
+        assert!(mm_cp < 15.0, "MatMul||Copy nearly free: {mm_cp}");
+        assert!(mm_mm > 3.0 * mm_cp);
+    }
+
+    #[test]
+    fn encode_decode_complementary_encode_prefill_not() {
+        let e = StageKind::Encode.demand();
+        let p = StageKind::Prefill.demand();
+        let d = StageKind::Decode.demand();
+        let ed = pairwise_interference(&e, &d);
+        let ep = pairwise_interference(&e, &p);
+        // §4.4: "(E-D)-P … resource complementarity formed by the
+        // compute-intensive nature of Encode and the memory-intensive nature
+        // of Decode"; (E-P) co-locates two compute-intensive stages.
+        assert!(ed < ep, "E||D ({ed}) should interfere less than E||P ({ep})");
+        assert!(ep > 25.0);
+        assert!(ed < 20.0);
+    }
+
+    #[test]
+    fn slowdown_is_at_least_one_and_monotone() {
+        let v = StageKind::Decode.demand();
+        let mut prev = 1.0;
+        for k in 0..4 {
+            let mut bg = ResourceVec::ZERO;
+            for _ in 0..k {
+                bg = bg.add(&StageKind::Decode.demand());
+            }
+            let s = colocated_slowdown(&v, &bg);
+            assert!(s >= prev - 1e-12, "slowdown must not decrease with load");
+            prev = s;
+        }
+        assert!(prev > 2.0, "3 extra decode stages must saturate bandwidth: {prev}");
+    }
+
+    #[test]
+    fn victim_ignores_saturation_it_does_not_use() {
+        // Pure-bandwidth victim vs pure-cube background: no interference.
+        let victim = ResourceVec { cube: 0.0, vector: 0.0, bw: 0.8 };
+        let bg = ResourceVec { cube: 5.0, vector: 0.0, bw: 0.0 };
+        assert!((colocated_slowdown(&victim, &bg) - 1.0).abs() < 1e-12);
+    }
+}

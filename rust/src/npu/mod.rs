@@ -1,0 +1,23 @@
+//! Ascend NPU device model.
+//!
+//! The paper's testbed (Atlas 800I A2) is unavailable, so every latency the
+//! benchmarks report comes from this analytic model (see DESIGN.md §2/§5 for
+//! the substitution argument and calibration):
+//!
+//! * [`op`] — operator taxonomy with per-operator **resource vectors** over
+//!   {AI Core (cube), AI Vector, HBM bandwidth}, following Fig 6's premise
+//!   that different operators stress different hardware components.
+//! * [`colocation`] — the interference law: operators/stages co-located on
+//!   one NPU share each resource proportionally; overlapping demand on the
+//!   same resource inflates latency, disjoint demand co-exists almost freely.
+//! * [`costmodel`] — stage latency functions (encode vs resolution, prefill
+//!   vs tokens, decode per step) and transfer-time fits calibrated against
+//!   the paper's own Tables 2–4.
+
+pub mod colocation;
+pub mod costmodel;
+pub mod op;
+
+pub use colocation::{colocated_slowdown, pairwise_interference, ResourceVec};
+pub use costmodel::CostModel;
+pub use op::{OpClass, OpProfile, StageKind};

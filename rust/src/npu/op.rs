@@ -1,0 +1,146 @@
+//! Operator taxonomy and resource vectors (paper Fig 6, left panel).
+//!
+//! Fig 6 profiles representative operators by how much of each hardware
+//! component they occupy (AI Core / AI Vector) and their compute-vs-data-move
+//! split. We encode each operator as a [`ResourceVec`] — fractional demand on
+//! {cube, vector, HBM-bandwidth} while the operator is running — from which
+//! the co-location heatmap (Fig 6 right) and stage-level interference both
+//! derive.
+
+use crate::npu::colocation::ResourceVec;
+
+/// Operator classes profiled in Fig 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Dense GEMM — saturates the cube (matrix) engine.
+    MatMul,
+    /// Fused attention — cube-heavy with a vector-engine softmax component.
+    FlashAttention,
+    /// Collective communication — link + HBM bandwidth, little compute.
+    AllReduce,
+    /// Device-to-device / host copy — pure bandwidth.
+    Copy,
+    /// Elementwise / activation (GeLU, residual add) — vector engine.
+    Elementwise,
+    /// Normalization (LayerNorm/RMSNorm) + softmax — vector + bandwidth.
+    Norm,
+}
+
+/// An operator with its resource demand profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpProfile {
+    pub class: OpClass,
+    pub demand: ResourceVec,
+    /// Fraction of the operator's time that is computation (vs data movement)
+    /// — the left panel's second axis.
+    pub compute_fraction: f64,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 6] = [
+        OpClass::MatMul,
+        OpClass::FlashAttention,
+        OpClass::AllReduce,
+        OpClass::Copy,
+        OpClass::Elementwise,
+        OpClass::Norm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::MatMul => "MatMul",
+            OpClass::FlashAttention => "FlashAttention",
+            OpClass::AllReduce => "AllReduce",
+            OpClass::Copy => "Copy",
+            OpClass::Elementwise => "Elementwise",
+            OpClass::Norm => "Norm",
+        }
+    }
+
+    /// Resource profile. Values are occupancies in [0, 1] of each engine
+    /// while the op runs, chosen to express Fig 6's qualitative structure:
+    /// MatMul/FlashAttention are cube-dominant, AllReduce/Copy are
+    /// bandwidth-dominant, Elementwise/Norm are vector-dominant.
+    pub fn profile(&self) -> OpProfile {
+        let (cube, vector, bw, compute_fraction) = match self {
+            OpClass::MatMul => (0.95, 0.10, 0.35, 0.90),
+            OpClass::FlashAttention => (0.80, 0.45, 0.30, 0.85),
+            OpClass::AllReduce => (0.02, 0.15, 0.85, 0.10),
+            OpClass::Copy => (0.00, 0.05, 0.95, 0.02),
+            OpClass::Elementwise => (0.02, 0.90, 0.45, 0.55),
+            OpClass::Norm => (0.02, 0.75, 0.60, 0.45),
+        };
+        OpProfile { class: *self, demand: ResourceVec { cube, vector, bw }, compute_fraction }
+    }
+}
+
+/// Stage-level aggregate resource vectors: the time-averaged demand each
+/// inference stage places on an NPU while it has work. These drive the
+/// simulator's processor-sharing model for physically co-located stages
+/// (§3.5: "operators such as MatMul and AllReduce utilize different hardware
+/// components … when one stage is waiting on communication, another stage can
+/// leverage idle compute cycles").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    Encode,
+    Prefill,
+    Decode,
+}
+
+impl StageKind {
+    pub const ALL: [StageKind; 3] = [StageKind::Encode, StageKind::Prefill, StageKind::Decode];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Encode => "encode",
+            StageKind::Prefill => "prefill",
+            StageKind::Decode => "decode",
+        }
+    }
+
+    /// Time-averaged resource demand of the stage.
+    ///
+    /// * Encode: ViT — dense GEMM bursts, compute-intensive (paper §4.4:
+    ///   "the compute-intensive nature of Encode").
+    /// * Prefill: dense GEMMs over long sequences — the most cube-hungry.
+    /// * Decode: autoregressive, weight-streaming — memory-bandwidth-bound
+    ///   (paper §4.4: "the memory-intensive nature of Decode").
+    pub fn demand(&self) -> ResourceVec {
+        match self {
+            StageKind::Encode => ResourceVec { cube: 0.75, vector: 0.30, bw: 0.30 },
+            StageKind::Prefill => ResourceVec { cube: 0.90, vector: 0.35, bw: 0.40 },
+            StageKind::Decode => ResourceVec { cube: 0.15, vector: 0.35, bw: 0.90 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_fig6_structure() {
+        let mm = OpClass::MatMul.profile();
+        let ar = OpClass::AllReduce.profile();
+        let cp = OpClass::Copy.profile();
+        let ew = OpClass::Elementwise.profile();
+        // MatMul is cube-dominant and compute-heavy.
+        assert!(mm.demand.cube > 0.9 && mm.compute_fraction > 0.8);
+        // AllReduce/Copy are bandwidth-dominant data movers.
+        assert!(ar.demand.bw > ar.demand.cube && ar.compute_fraction < 0.2);
+        assert!(cp.demand.bw > 0.9 && cp.demand.cube == 0.0);
+        // Elementwise is vector-dominant.
+        assert!(ew.demand.vector > ew.demand.cube && ew.demand.vector > ew.demand.bw);
+    }
+
+    #[test]
+    fn stage_demands_express_complementarity() {
+        let e = StageKind::Encode.demand();
+        let p = StageKind::Prefill.demand();
+        let d = StageKind::Decode.demand();
+        // Encode+Prefill overlap on cube; Encode+Decode are complementary.
+        assert!(e.cube + p.cube > 1.0, "E and P should contend on cube");
+        assert!(e.cube + d.cube <= 1.0, "E and D should fit on cube");
+        assert!(d.bw > d.cube, "decode is bandwidth-bound");
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin) exactly as
+//! `/opt/xla-example/load_hlo` demonstrates:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. Python only runs at build time (`make artifacts`); this
+//! module is the entire model-execution surface of the request path.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled, loaded executable plus its name (for errors/metrics).
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given inputs; unwraps the AOT `return_tuple=True`
+    /// tuple into its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        literal.to_tuple().with_context(|| format!("untupling result of {}", self.name))
+    }
+}
+
+/// Static model dimensions read from `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub img: usize,
+    pub vis: usize,
+    pub txt: usize,
+    pub prompt: usize,
+    pub gen: usize,
+    pub cache: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    /// Golden generation for the self-check.
+    pub golden_image_seed: u64,
+    pub golden_text_ids: Vec<i32>,
+    pub golden_txt_len: i32,
+    pub golden_tokens: Vec<i32>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let num = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let golden = v.get("golden").ok_or_else(|| anyhow!("manifest missing 'golden'"))?;
+        let ids = |k: &str| -> Result<Vec<i32>> {
+            Ok(golden
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("golden missing '{k}'"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .map(|x| x as i32)
+                .collect())
+        };
+        Ok(Self {
+            img: num("img")?,
+            vis: num("vis")?,
+            txt: num("txt")?,
+            prompt: num("prompt")?,
+            gen: num("gen")?,
+            cache: num("cache")?,
+            dim: num("dim")?,
+            layers: num("layers")?,
+            heads: num("heads")?,
+            head_dim: num("head_dim")?,
+            vocab: num("vocab")?,
+            golden_image_seed: golden
+                .get("image_seed")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("golden missing image_seed"))? as u64,
+            golden_text_ids: ids("text_ids")?,
+            golden_txt_len: golden
+                .get("txt_len")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("golden missing txt_len"))? as i32,
+            golden_tokens: ids("tokens")?,
+        })
+    }
+}
+
+/// The PJRT runtime: client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(path) {
+            if !Path::new(path).exists() {
+                bail!("artifact {path} not found — run `make artifacts`");
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+            self.cache.insert(
+                path.to_string(),
+                Executable { name: path.to_string(), exe },
+            );
+        }
+        Ok(&self.cache[path])
+    }
+}
+
+/// Literal helpers for the fixed dtypes the model uses.
+pub mod tensor {
+    use super::*;
+
+    /// f32 literal of the given shape from a flat slice.
+    pub fn f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != data.len() {
+            bail!("shape {dims:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// i32 vector literal.
+    pub fn i32_vec(data: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// i32 scalar literal.
+    pub fn i32_scalar(x: i32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+
+    /// Extract an i32 scalar.
+    pub fn as_i32(lit: &xla::Literal) -> Result<i32> {
+        Ok(lit.get_first_element::<i32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in rust/tests/ (they skip
+    // when artifacts are absent); here we test the manifest parser.
+
+    #[test]
+    fn manifest_parses_round_trip() {
+        let doc = r#"{
+          "img": 64, "vis": 64, "txt": 32, "prompt": 96, "gen": 64,
+          "cache": 160, "dim": 256, "layers": 4, "heads": 4,
+          "head_dim": 64, "vocab": 512, "seed": 0,
+          "golden": {"image_seed": 7, "text_ids": [5, 17], "txt_len": 2,
+                      "tokens": [1, 2, 3]},
+          "artifacts": ["encoder.hlo.txt"]
+        }"#;
+        let dir = "/tmp/epd_manifest_test";
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(format!("{dir}/manifest.json"), doc).unwrap();
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.cache, 160);
+        assert_eq!(m.golden_tokens, vec![1, 2, 3]);
+        assert_eq!(m.golden_text_ids, vec![5, 17]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load("/tmp/definitely_missing_dir_xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn tensor_f32_shape_check() {
+        assert!(tensor::f32(&[1.0, 2.0], &[3]).is_err());
+        let l = tensor::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+}

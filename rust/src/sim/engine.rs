@@ -1,0 +1,241 @@
+//! Deterministic discrete-event engine.
+//!
+//! Events are ordered by `(time, sequence)`: ties break in scheduling order,
+//! so runs are bit-reproducible under a fixed seed. Time is kept as integer
+//! nanoseconds internally to make the ordering total (no NaN/epsilon traps);
+//! the public API speaks f64 seconds.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Internal heap entry. Ordering is manual so `E` needs no trait bounds.
+#[derive(Debug, Clone)]
+struct Entry<E> {
+    time_ns: u64,
+    seq: u64,
+    event: EventBox<E>,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_ns == other.time_ns && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_ns.cmp(&other.time_ns).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Wrapper so the event payload never participates in ordering.
+#[derive(Debug, Clone)]
+struct EventBox<E>(E);
+
+impl<E> PartialEq for EventBox<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventBox<E> {}
+impl<E> PartialOrd for EventBox<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for EventBox<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+/// The pending-event set plus virtual clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    now_ns: u64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now_ns: 0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time, seconds.
+    pub fn now(&self) -> f64 {
+        self.now_ns as f64 / 1e9
+    }
+
+    /// Total events processed so far (perf counter).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule at an absolute time (clamped to now — events may not be
+    /// scheduled in the past).
+    pub fn at(&mut self, t: f64, event: E) {
+        let t_ns = (t.max(0.0) * 1e9).round() as u64;
+        let t_ns = t_ns.max(self.now_ns);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time_ns: t_ns, seq: self.seq, event: EventBox(event) }));
+    }
+
+    /// Schedule after a delay from now.
+    pub fn after(&mut self, dt: f64, event: E) {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        self.at(self.now() + dt.max(0.0), event);
+    }
+
+    fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|Reverse(e)| {
+            debug_assert!(e.time_ns >= self.now_ns, "time went backwards");
+            self.now_ns = e.time_ns;
+            self.processed += 1;
+            (self.now_ns as f64 / 1e9, e.event.0)
+        })
+    }
+}
+
+/// A simulation model: reacts to events, schedules follow-ups.
+pub trait SimModel {
+    type Event;
+
+    /// Handle one event at virtual time `now`.
+    fn handle(&mut self, now: f64, event: Self::Event, q: &mut EventQueue<Self::Event>);
+
+    /// Optional early-termination check, polled after every event.
+    fn done(&self) -> bool {
+        false
+    }
+}
+
+/// Run until the queue drains, `until` is passed, or the model says done.
+/// Returns the final virtual time.
+pub fn run<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, until: f64) -> f64 {
+    while let Some(Reverse(head)) = q.heap.peek() {
+        if head.time_ns as f64 / 1e9 > until {
+            break;
+        }
+        let (now, ev) = q.pop().expect("peeked");
+        model.handle(now, ev, q);
+        if model.done() {
+            break;
+        }
+    }
+    q.now()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Tick(u32),
+        Spawn,
+    }
+
+    struct Recorder {
+        seen: Vec<(f64, u32)>,
+        stop_after: usize,
+    }
+
+    impl SimModel for Recorder {
+        type Event = Ev;
+        fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
+            match ev {
+                Ev::Tick(n) => self.seen.push((now, n)),
+                Ev::Spawn => {
+                    q.after(1.0, Ev::Tick(100));
+                    q.after(0.5, Ev::Tick(50));
+                }
+            }
+        }
+        fn done(&self) -> bool {
+            self.stop_after > 0 && self.seen.len() >= self.stop_after
+        }
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut q = EventQueue::new();
+        q.at(2.0, Ev::Tick(2));
+        q.at(1.0, Ev::Tick(1));
+        q.at(3.0, Ev::Tick(3));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        let end = run(&mut m, &mut q, f64::INFINITY);
+        assert_eq!(m.seen, vec![(1.0, 1), (2.0, 2), (3.0, 3)]);
+        assert_eq!(end, 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_in_schedule_order() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.at(1.0, Ev::Tick(i));
+        }
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 10.0);
+        let order: Vec<u32> = m.seen.iter().map(|&(_, n)| n).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule() {
+        let mut q = EventQueue::new();
+        q.at(0.0, Ev::Spawn);
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 10.0);
+        assert_eq!(m.seen, vec![(0.5, 50), (1.0, 100)]);
+    }
+
+    #[test]
+    fn until_bound_respected() {
+        let mut q = EventQueue::new();
+        q.at(1.0, Ev::Tick(1));
+        q.at(100.0, Ev::Tick(2));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 50.0);
+        assert_eq!(m.seen.len(), 1);
+        assert_eq!(q.pending(), 1, "the out-of-horizon event stays queued");
+    }
+
+    #[test]
+    fn done_stops_early() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.at(i as f64, Ev::Tick(i));
+        }
+        let mut m = Recorder { seen: vec![], stop_after: 3 };
+        run(&mut m, &mut q, f64::INFINITY);
+        assert_eq!(m.seen.len(), 3);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        q.at(5.0, Ev::Tick(1));
+        let (now, _) = q.pop().unwrap();
+        assert_eq!(now, 5.0);
+        q.at(1.0, Ev::Tick(2)); // in the past — clamped
+        let (now2, _) = q.pop().unwrap();
+        assert_eq!(now2, 5.0);
+    }
+}

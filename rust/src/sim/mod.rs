@@ -1,0 +1,16 @@
+//! Discrete-event simulation substrate.
+//!
+//! * [`engine`] — a deterministic event queue + virtual clock. The serving
+//!   simulation is a [`engine::SimModel`] whose `handle` reacts to events and
+//!   schedules more.
+//! * [`psnpu`] — a processor-sharing NPU executor implementing §3.5's
+//!   physical co-location: concurrently active tasks on one NPU share the
+//!   {cube, vector, bandwidth} resources per the interference law in
+//!   [`crate::npu::colocation`], so task rates change as co-located load
+//!   comes and goes (spatial multiplexing).
+
+pub mod engine;
+pub mod psnpu;
+
+pub use engine::{EventQueue, SimModel};
+pub use psnpu::PsNpu;

@@ -1,0 +1,236 @@
+//! Processor-sharing NPU executor — the mechanism behind §3.5's physical
+//! co-location and spatial multiplexing.
+//!
+//! Each NPU runs any number of concurrent *tasks* (one per actively executing
+//! stage batch). A task carries a [`ResourceVec`] demand and an amount of
+//! *work* expressed in seconds-at-full-speed. While co-located tasks are
+//! active, every task progresses at rate `1 / slowdown(own demand, Σ others)`
+//! — disjoint demands run at full speed side by side (Encode ∥ Decode), while
+//! overlapping demands stretch (Encode ∥ Prefill), exactly Fig 6's law.
+//!
+//! The executor is driven by the event queue: whenever the active set
+//! changes, rates change, so the owner must re-query [`PsNpu::next_completion`]
+//! and re-arm a completion event. Stale events are detected via the `epoch`
+//! counter.
+
+use crate::npu::colocation::{colocated_slowdown, ResourceVec};
+
+/// Task handle, unique per NPU.
+pub type TaskId = u64;
+
+#[derive(Debug, Clone)]
+struct Task {
+    id: TaskId,
+    demand: ResourceVec,
+    /// Remaining work, in seconds at rate 1.0.
+    remaining: f64,
+    /// Current execution rate (recomputed on every set change).
+    rate: f64,
+}
+
+/// One NPU with processor-shared resources.
+#[derive(Debug)]
+pub struct PsNpu {
+    tasks: Vec<Task>,
+    last_update: f64,
+    next_id: TaskId,
+    /// Bumped on every active-set change; completion events scheduled under
+    /// an older epoch are stale and must be ignored by the caller.
+    pub epoch: u64,
+    /// Cumulative busy time (≥1 active task) for utilization metrics.
+    busy_time: f64,
+    /// Integral of Σ task-seconds (for average-occupancy metrics).
+    work_done: f64,
+}
+
+impl Default for PsNpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PsNpu {
+    pub fn new() -> Self {
+        Self { tasks: Vec::new(), last_update: 0.0, next_id: 0, epoch: 0, busy_time: 0.0, work_done: 0.0 }
+    }
+
+    /// Advance internal progress to `now` (must be called with monotone
+    /// times; the sim engine guarantees this).
+    fn advance(&mut self, now: f64) {
+        let dt = now - self.last_update;
+        debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
+        if dt > 0.0 {
+            if !self.tasks.is_empty() {
+                self.busy_time += dt;
+            }
+            for t in &mut self.tasks {
+                let progressed = t.rate * dt;
+                t.remaining = (t.remaining - progressed).max(0.0);
+                self.work_done += progressed;
+            }
+        }
+        self.last_update = now;
+    }
+
+    fn recompute_rates(&mut self) {
+        // O(n): each task's background demand is (Σ all demands) − its own.
+        // (The naive per-pair sum was O(n²) per set change and dominated the
+        // perf microbench at high task counts — see EXPERIMENTS.md §Perf.)
+        let total = self.tasks.iter().fold(ResourceVec::ZERO, |acc, t| acc.add(&t.demand));
+        for t in &mut self.tasks {
+            let others = ResourceVec {
+                cube: total.cube - t.demand.cube,
+                vector: total.vector - t.demand.vector,
+                bw: total.bw - t.demand.bw,
+            };
+            t.rate = 1.0 / colocated_slowdown(&t.demand, &others);
+        }
+        self.epoch += 1;
+    }
+
+    /// Start a task needing `work` seconds at full speed. Returns its id.
+    pub fn start(&mut self, now: f64, demand: ResourceVec, work: f64) -> TaskId {
+        self.advance(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tasks.push(Task { id, demand, remaining: work.max(0.0), rate: 1.0 });
+        self.recompute_rates();
+        id
+    }
+
+    /// Remove a task (normally after its completion event fires). Returns
+    /// true if it existed.
+    pub fn finish(&mut self, now: f64, id: TaskId) -> bool {
+        self.advance(now);
+        let before = self.tasks.len();
+        self.tasks.retain(|t| t.id != id);
+        let removed = self.tasks.len() != before;
+        if removed {
+            self.recompute_rates();
+        }
+        removed
+    }
+
+    /// Earliest completion among active tasks: `(absolute time, task id)`.
+    pub fn next_completion(&mut self, now: f64) -> Option<(f64, TaskId)> {
+        self.advance(now);
+        self.tasks
+            .iter()
+            .map(|t| {
+                let dt = if t.rate > 0.0 { t.remaining / t.rate } else { f64::INFINITY };
+                (now + dt, t.id)
+            })
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    pub fn active_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Aggregate demand currently on the NPU.
+    pub fn total_demand(&self) -> ResourceVec {
+        self.tasks.iter().fold(ResourceVec::ZERO, |acc, t| acc.add(&t.demand))
+    }
+
+    /// Busy fraction over `[0, now]`.
+    pub fn utilization(&mut self, now: f64) -> f64 {
+        self.advance(now);
+        if now > 0.0 {
+            self.busy_time / now
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::op::StageKind;
+
+    #[test]
+    fn lone_task_runs_at_full_rate() {
+        let mut npu = PsNpu::new();
+        let id = npu.start(0.0, StageKind::Prefill.demand(), 2.0);
+        let (t, cid) = npu.next_completion(0.0).unwrap();
+        assert_eq!(cid, id);
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complementary_stages_barely_interfere() {
+        let mut npu = PsNpu::new();
+        npu.start(0.0, StageKind::Encode.demand(), 1.0);
+        npu.start(0.0, StageKind::Decode.demand(), 1.0);
+        let (t, _) = npu.next_completion(0.0).unwrap();
+        // Encode+Decode overlap only mildly (bw 0.3+0.9 = 1.2 on a minor
+        // axis); completion should be well under 2× serial.
+        assert!(t < 1.25, "E||D completion at {t}");
+    }
+
+    #[test]
+    fn contending_stages_stretch() {
+        let mut npu = PsNpu::new();
+        npu.start(0.0, StageKind::Prefill.demand(), 1.0);
+        npu.start(0.0, StageKind::Prefill.demand(), 1.0);
+        let (t, _) = npu.next_completion(0.0).unwrap();
+        // Two prefill tasks saturate the cube (1.8 demand) → ≈1.44× blended.
+        assert!(t > 1.35, "P||P completion at {t}");
+    }
+
+    #[test]
+    fn rates_rescale_when_task_departs() {
+        let mut npu = PsNpu::new();
+        let a = npu.start(0.0, StageKind::Prefill.demand(), 1.0);
+        let _b = npu.start(0.0, StageKind::Prefill.demand(), 10.0);
+        // Run until a completes.
+        let (ta, id) = npu.next_completion(0.0).unwrap();
+        assert_eq!(id, a);
+        assert!(ta > 1.35);
+        npu.finish(ta, a);
+        // b now runs alone at full rate: total elapsed ≈ ta + remaining.
+        let (tb, _) = npu.next_completion(ta).unwrap();
+        let b_progress_during_contention = ta / (ta / 1.0) * 0.0; // b ran at reduced rate
+        let _ = b_progress_during_contention;
+        // b did ta * rate_contended work; remaining = 10 - that; at rate 1.
+        assert!(tb > ta && tb < ta + 10.0);
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_change() {
+        let mut npu = PsNpu::new();
+        let e0 = npu.epoch;
+        let id = npu.start(0.0, StageKind::Encode.demand(), 1.0);
+        assert!(npu.epoch > e0);
+        let e1 = npu.epoch;
+        npu.finish(0.5, id);
+        assert!(npu.epoch > e1);
+    }
+
+    #[test]
+    fn work_conservation_under_contention() {
+        // Two identical tasks of work w sharing a fully-saturated resource
+        // finish together at 2w × stretch⁻¹-adjusted... — exact law: each
+        // runs at rate 1/s where s = slowdown(d, d); both complete at w·s.
+        let mut npu = PsNpu::new();
+        let d = ResourceVec { cube: 1.0, vector: 0.0, bw: 0.0 };
+        npu.start(0.0, d, 1.0);
+        npu.start(0.0, d, 1.0);
+        let (t, _) = npu.next_completion(0.0).unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "full contention halves rate: {t}");
+    }
+
+    #[test]
+    fn utilization_tracks_busy_time() {
+        let mut npu = PsNpu::new();
+        let id = npu.start(0.0, StageKind::Encode.demand(), 1.0);
+        npu.finish(1.0, id);
+        assert!((npu.utilization(2.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finish_unknown_task_is_false() {
+        let mut npu = PsNpu::new();
+        assert!(!npu.finish(0.0, 999));
+    }
+}

@@ -1,0 +1,69 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` randomly generated cases from a
+//! seeded [`Rng`]; on failure it panics with the case index and the seed
+//! that reproduces it. No shrinking — cases are kept small instead.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `n` random cases. `gen` builds a case from the RNG;
+/// `prop` returns `Err(reason)` to fail. Deterministic under `seed`.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..n {
+        let mut rng = Rng::with_stream(seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  input: {input:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 1, 64, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            ensure(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed on case 0")]
+    fn failing_property_reports_case_and_seed() {
+        check("always-fails", 7, 10, |r| r.below(10), |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut seen_a = Vec::new();
+        check("collect-a", 42, 8, |r| r.next_u64(), |&x| {
+            seen_a.push(x);
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check("collect-b", 42, 8, |r| r.next_u64(), |&x| {
+            seen_b.push(x);
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

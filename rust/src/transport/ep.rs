@@ -1,0 +1,141 @@
+//! E-P disaggregated transmission: event-driven asynchronous feature
+//! prefetching (§3.2, Table 2 col 2, Table 3).
+//!
+//! Mechanism (paper): after Encode finishes, only the **feature hash** is
+//! sent to the target Prefill instance; the feature tensor itself travels
+//! Encode → MM Store → Prefill in the background while the system performs
+//! inter/intra-instance scheduling (queueing, batch formation). The transfer
+//! is *exposed* (adds to TTFT) only to the extent it outlasts that
+//! scheduling window. Without prefetching, the feature moves synchronously
+//! on the critical path (PUT + GET before prefill may start).
+//!
+//! Fault tolerance: if the Prefill-side GET misses (eviction or store
+//! failure), the Prefill instance locally **recomputes** the encoding
+//! (§3.2), paying the encode cost on its own NPU instead of failing the
+//! request.
+
+use crate::npu::CostModel;
+
+/// Timing plan for one E→P feature handoff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpReport {
+    pub visual_tokens: usize,
+    pub feature_bytes: f64,
+    /// MM-Store transfer latency (GET path, Table 3 "Transmission Latency").
+    pub transfer_time: f64,
+    /// Scheduling window the transfer hides behind (Table 3 "Scheduling
+    /// Latency").
+    pub scheduling_time: f64,
+    /// Critical-path delay added between Encode end and Prefill start.
+    pub exposed: f64,
+    /// Fraction of the transfer hidden by scheduling (Table 3 "Overlap
+    /// Ratio" — reported relative to the *window*, i.e. 100% when fully
+    /// hidden).
+    pub overlap_ratio: f64,
+}
+
+/// Plan the E→P handoff for a feature of `visual_tokens`.
+///
+/// `async_prefetch = true` → the paper's mechanism: transfer overlaps the
+/// scheduling window. `false` → synchronous baseline: PUT + GET serialize on
+/// the critical path *in addition to* the scheduling window.
+pub fn plan_ep_transfer(cm: &CostModel, visual_tokens: usize, async_prefetch: bool) -> EpReport {
+    let feature_bytes = cm.feature_bytes(visual_tokens);
+    let transfer = cm.mmstore_get_time(feature_bytes);
+    let sched = cm.ep_scheduling_time(visual_tokens);
+    if async_prefetch {
+        let exposed = (transfer - sched).max(0.0);
+        let hidden = transfer.min(sched);
+        // Paper reports overlap as hidden/transfer (100% when transfer fits
+        // entirely inside the scheduling window).
+        let overlap_ratio = if transfer > 0.0 { hidden / transfer } else { 1.0 };
+        EpReport {
+            visual_tokens,
+            feature_bytes,
+            transfer_time: transfer,
+            scheduling_time: sched,
+            exposed: sched + exposed,
+            overlap_ratio,
+        }
+    } else {
+        // Synchronous: PUT by Encode, then GET by Prefill, both exposed.
+        let put = cm.mmstore_put_time(feature_bytes);
+        EpReport {
+            visual_tokens,
+            feature_bytes,
+            transfer_time: transfer,
+            scheduling_time: sched,
+            exposed: sched + put + transfer,
+            overlap_ratio: 0.0,
+        }
+    }
+}
+
+/// Cost of the fault-tolerant recomputation path: the Prefill instance
+/// re-encodes locally. Returns the extra critical-path time (the encode cost
+/// on the Prefill NPU; co-location slowdown is applied by the simulator).
+pub fn recompute_cost(cm: &CostModel, visual_tokens: usize) -> f64 {
+    cm.encode_time(visual_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareDesc, ModelDesc};
+
+    fn cm() -> CostModel {
+        CostModel::new(ModelDesc::openpangu_7b_vl(), HardwareDesc::ascend_910b())
+    }
+
+    #[test]
+    fn table3_mainstream_resolutions_fully_overlap() {
+        let cm = cm();
+        // Table 3: at ≤ FHD resolutions the overlap ratio is 100 %.
+        for tokens in [100usize, 400, 529, 1196, 2691] {
+            let r = plan_ep_transfer(&cm, tokens, true);
+            assert!(
+                r.overlap_ratio > 0.999,
+                "{tokens} tokens should fully overlap: {}",
+                r.overlap_ratio
+            );
+            assert!((r.exposed - r.scheduling_time).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn table3_4k_partially_exposed() {
+        let cm = cm();
+        // 4096×3112 → 16206 tokens: transfer ≈ scheduling, overlap ≈ 99.78 %.
+        let r = plan_ep_transfer(&cm, 16206, true);
+        assert!(r.overlap_ratio < 1.0, "4K must not fully overlap");
+        assert!(r.overlap_ratio > 0.95, "but nearly so: {}", r.overlap_ratio);
+        assert!(r.exposed > r.scheduling_time);
+    }
+
+    #[test]
+    fn sync_baseline_strictly_worse() {
+        let cm = cm();
+        for tokens in [100usize, 1196, 16206] {
+            let async_r = plan_ep_transfer(&cm, tokens, true);
+            let sync_r = plan_ep_transfer(&cm, tokens, false);
+            assert!(sync_r.exposed > async_r.exposed, "{tokens} tokens");
+            assert_eq!(sync_r.overlap_ratio, 0.0);
+        }
+    }
+
+    #[test]
+    fn exposed_grows_with_resolution() {
+        let cm = cm();
+        let small = plan_ep_transfer(&cm, 100, true);
+        let big = plan_ep_transfer(&cm, 16206, true);
+        assert!(big.exposed > small.exposed);
+        assert!(big.transfer_time > small.transfer_time * 50.0);
+    }
+
+    #[test]
+    fn recompute_cost_is_encode_cost() {
+        let cm = cm();
+        assert_eq!(recompute_cost(&cm, 1196), cm.encode_time(1196));
+        assert!(recompute_cost(&cm, 1196) > 0.0);
+    }
+}

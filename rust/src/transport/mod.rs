@@ -1,0 +1,21 @@
+//! Cross-stage tensor transmission (§3.2, §3.3) — the paper's two
+//! communication contributions.
+//!
+//! * [`link`] — a FIFO interconnect resource (HCCS intra-node / RoCE
+//!   inter-node) used by the discrete-event simulator to serialize
+//!   concurrent transfers and model contention.
+//! * [`ep`] — E-P disaggregated transmission: event-driven asynchronous
+//!   feature prefetching through the MM Store, with overlap accounting
+//!   against the stage-scheduling window (Table 3) and the fault-tolerant
+//!   recomputation path.
+//! * [`pd`] — P-D disaggregated transmission: synchronous one-shot,
+//!   layer-wise, and hierarchically grouped KV-cache transfer planning with
+//!   communication/computation overlap accounting (Table 4, Fig 7).
+
+pub mod ep;
+pub mod link;
+pub mod pd;
+
+pub use ep::{plan_ep_transfer, EpReport};
+pub use link::Link;
+pub use pd::{plan_kv_transmission, KvReport};

@@ -1,0 +1,273 @@
+//! P-D disaggregated KV-cache transmission (§3.3, Table 2 col 3, Table 4,
+//! Fig 7).
+//!
+//! Three strategies over the same FIFO link model:
+//!
+//! * **Synchronous** — all layers' KV moves after prefill completes: fully
+//!   exposed (this is what "communication congestion … significantly
+//!   increases TTFT" refers to).
+//! * **Layer-wise** — each layer's KV is enqueued when that layer finishes.
+//!   On the paper's testbed the *synchronous transfer issue path* can only
+//!   pump data in the narrow inter-layer gaps, so only a small fraction
+//!   `F_LAYERWISE` of prefill compute is usable for transfer; the rest of
+//!   the KV drains after prefill ends (Table 4 baseline: 15.27 % / 25.08 %
+//!   overlap at 1024 / 2048 tokens).
+//! * **Hierarchically grouped** — adjacent layers are packaged per group
+//!   (size auto-derived from MLP compute vs handshake latency), transfers
+//!   ride an event-driven queue fully concurrent with compute, and the final
+//!   group is flushed layer-by-layer so its tail hides behind the host-side
+//!   sampling window ("precise scheduling"). Table 4 optimized: 98.78 % /
+//!   99.92 % overlap.
+//!
+//! The module is a *planner*: given a prefill batch it returns the link
+//! occupancy, exposed (critical-path) latency and achieved bandwidth. The
+//! full simulator additionally serializes concurrent requests' exposed
+//! transfers on the shared inter-instance [`super::link::Link`].
+
+use crate::config::PdMode;
+use crate::npu::CostModel;
+
+/// Fraction of prefill compute during which the layer-wise baseline's
+/// synchronous issue path can drive the link (inter-layer gaps only).
+/// Calibrated against Table 4: overlapped ≈ 0.028 × prefill-time reproduces
+/// both the 1024-token (15.27 %) and 2048-token (25.08 %) baseline overlap
+/// ratios, including their growth with sequence length.
+pub const F_LAYERWISE: f64 = 0.028;
+
+/// Timing report for one prefill batch's KV handoff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvReport {
+    pub mode: PdMode,
+    /// Layers per group (1 for layer-wise; `layers` for synchronous).
+    pub group_layers: usize,
+    pub n_transfers: usize,
+    pub kv_bytes: f64,
+    pub prefill_time: f64,
+    /// Total link occupancy (handshakes + wire), the paper's "KV Latency".
+    pub kv_latency: f64,
+    /// Critical-path time after prefill end before Decode owns the KV
+    /// (the paper's "Exposed Latency").
+    pub exposed: f64,
+    /// 1 − exposed/kv_latency (the paper's "Overlap Ratio").
+    pub overlap_ratio: f64,
+    /// kv_bytes / kv_latency (the paper's "Bandwidth").
+    pub bandwidth: f64,
+}
+
+/// Plan KV transmission for a fused prefill batch of `batch_seqs` sequences
+/// of `tokens_per_seq` tokens each. `group_layers = 0` selects the group
+/// size automatically (§3.3: "dynamically determined based on MLP compute
+/// load and handshake latency").
+pub fn plan_kv_transmission(
+    cm: &CostModel,
+    mode: PdMode,
+    batch_seqs: usize,
+    tokens_per_seq: usize,
+    group_layers: usize,
+) -> KvReport {
+    let layers = cm.model.llm.layers;
+    let total_tokens = batch_seqs * tokens_per_seq;
+    let kv_bytes = cm.kv_bytes(total_tokens);
+    let prefill_time = cm.prefill_time_uniform(batch_seqs, tokens_per_seq);
+    let h = cm.hw.handshake_s;
+    let per_seq_layer_bytes = cm.kv_bytes_layer(tokens_per_seq);
+
+    let (g, n_transfers) = match mode {
+        PdMode::Synchronous => (layers, batch_seqs),
+        PdMode::LayerWise => (1, batch_seqs * layers),
+        PdMode::Grouped => {
+            let g = if group_layers == 0 {
+                cm.auto_group_layers(total_tokens)
+            } else {
+                group_layers.clamp(1, layers)
+            };
+            (g, batch_seqs * layers.div_ceil(g))
+        }
+    };
+
+    let wire = cm.kv_wire_time(kv_bytes);
+    let kv_latency = n_transfers as f64 * h + wire;
+
+    let exposed = match mode {
+        PdMode::Synchronous => kv_latency,
+        PdMode::LayerWise => (kv_latency - F_LAYERWISE * prefill_time).max(0.0),
+        PdMode::Grouped => {
+            let pipelined = grouped_exposed(cm, batch_seqs, per_seq_layer_bytes, g, prefill_time);
+            // "Precise scheduling" (§3.3) also means NOT pipelining when it
+            // cannot win: for tiny payloads on fast prefills the per-group
+            // handshakes outweigh the overlap, and the scheduler degrades to
+            // a single bulk transfer after prefill (one handshake per seq).
+            let bulk = batch_seqs as f64 * h + wire;
+            pipelined.min(bulk)
+        }
+    };
+    // Exposed can never exceed the total link time.
+    let exposed = exposed.min(kv_latency);
+    let overlap_ratio = if kv_latency > 0.0 { 1.0 - exposed / kv_latency } else { 1.0 };
+    let bandwidth = if kv_latency > 0.0 { kv_bytes / kv_latency } else { f64::NAN };
+
+    KvReport {
+        mode,
+        group_layers: g,
+        n_transfers,
+        kv_bytes,
+        prefill_time,
+        kv_latency,
+        exposed,
+        overlap_ratio,
+        bandwidth,
+    }
+}
+
+/// FIFO queue simulation of grouped transmission against the compute
+/// pipeline. Group *i* becomes ready when its last layer finishes
+/// (`i·g/L` of the pre-tail compute); the final group is flushed
+/// layer-by-layer so its residue hides behind the host sampling tail.
+fn grouped_exposed(
+    cm: &CostModel,
+    batch_seqs: usize,
+    per_seq_layer_bytes: f64,
+    g: usize,
+    prefill_time: f64,
+) -> f64 {
+    let layers = cm.model.llm.layers;
+    let h = cm.hw.handshake_s;
+    let tail = cm.prefill_tail(batch_seqs);
+    let compute_end_of_layer = |l: usize| (prefill_time - tail) * l as f64 / layers as f64;
+
+    // Full groups cover layers [0, flush_start); the last group is flushed
+    // layer-by-layer ("precise scheduling" so its tail rides the host
+    // sampling window).
+    let n_full_groups = if layers > g { (layers - 1) / g } else { 0 };
+    let flush_start = n_full_groups * g;
+
+    let mut link_free = 0.0f64;
+    for i in 1..=n_full_groups {
+        let group_bytes = per_seq_layer_bytes * (g * batch_seqs) as f64;
+        let occupancy = batch_seqs as f64 * h + group_bytes / cm.kv_link_bw();
+        let ready = compute_end_of_layer(i * g);
+        let start = ready.max(link_free);
+        link_free = start + occupancy;
+    }
+    for l in (flush_start + 1)..=layers {
+        let bytes = per_seq_layer_bytes * batch_seqs as f64;
+        let occupancy = batch_seqs as f64 * h + bytes / cm.kv_link_bw();
+        let ready = compute_end_of_layer(l);
+        let start = ready.max(link_free);
+        link_free = start + occupancy;
+    }
+    (link_free - prefill_time).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareDesc, ModelDesc};
+
+    fn cm() -> CostModel {
+        // Table 4's absolute numbers reproduce under the profiled hardware
+        // conditions (see HardwareDesc::ascend_910b_profiled docs).
+        CostModel::new(ModelDesc::openpangu_7b_vl(), HardwareDesc::ascend_910b_profiled())
+    }
+
+    /// Table 4 row 1: layer-wise baseline, 16×1024 tokens.
+    #[test]
+    fn table4_layerwise_1024() {
+        let r = plan_kv_transmission(&cm(), PdMode::LayerWise, 16, 1024, 0);
+        // Paper: KV 1127 ms, exposed 955 ms, overlap 15.27 %, bw 7.98 GB/s.
+        assert!((1.0..1.35).contains(&r.kv_latency), "kv_latency={}", r.kv_latency);
+        assert!((0.80..1.15).contains(&r.exposed), "exposed={}", r.exposed);
+        assert!((0.10..0.22).contains(&(r.overlap_ratio)), "overlap={}", r.overlap_ratio);
+        assert!((5.5e9..9.5e9).contains(&r.bandwidth), "bw={}", r.bandwidth);
+    }
+
+    /// Table 4 row 2: grouped, 16×1024 tokens.
+    #[test]
+    fn table4_grouped_1024() {
+        let r = plan_kv_transmission(&cm(), PdMode::Grouped, 16, 1024, 0);
+        // Paper: KV 715 ms, exposed 8.76 ms, overlap 98.78 %, bw 12.58 GB/s.
+        assert!((0.55..0.95).contains(&r.kv_latency), "kv_latency={}", r.kv_latency);
+        assert!(r.exposed < 0.060, "exposed={}", r.exposed);
+        assert!(r.overlap_ratio > 0.93, "overlap={}", r.overlap_ratio);
+        assert!(r.bandwidth > 9.5e9, "bw={}", r.bandwidth);
+    }
+
+    /// Table 4 rows 3–4: 16×2048 tokens.
+    #[test]
+    fn table4_2048() {
+        let base = plan_kv_transmission(&cm(), PdMode::LayerWise, 16, 2048, 0);
+        let opt = plan_kv_transmission(&cm(), PdMode::Grouped, 16, 2048, 0);
+        // Paper: baseline overlap 25.08 % (grows vs 1024), optimized 99.92 %.
+        let base_1024 = plan_kv_transmission(&cm(), PdMode::LayerWise, 16, 1024, 0);
+        assert!(
+            base.overlap_ratio > base_1024.overlap_ratio,
+            "baseline overlap grows with seq length: {} vs {}",
+            base.overlap_ratio,
+            base_1024.overlap_ratio
+        );
+        assert!(base.overlap_ratio < 0.35);
+        assert!(opt.overlap_ratio > 0.97, "overlap={}", opt.overlap_ratio);
+        assert!(opt.exposed < 0.05, "exposed={}", opt.exposed);
+    }
+
+    /// Fig 7 / Table 4: grouped bandwidth gain is larger at 1024 than 2048
+    /// (+58 % vs +10 % in the paper).
+    #[test]
+    fn bandwidth_gain_larger_for_small_payloads() {
+        let m = cm();
+        let gain = |tokens: usize| {
+            let b = plan_kv_transmission(&m, PdMode::LayerWise, 16, tokens, 0);
+            let o = plan_kv_transmission(&m, PdMode::Grouped, 16, tokens, 0);
+            o.bandwidth / b.bandwidth
+        };
+        let g1024 = gain(1024);
+        let g2048 = gain(2048);
+        assert!(g1024 > 1.3, "1024 gain {g1024}");
+        assert!(g2048 > 1.02, "2048 gain {g2048}");
+        assert!(g1024 > g2048, "gain must shrink with payload: {g1024} vs {g2048}");
+    }
+
+    #[test]
+    fn synchronous_fully_exposed() {
+        let r = plan_kv_transmission(&cm(), PdMode::Synchronous, 16, 1024, 0);
+        assert_eq!(r.exposed, r.kv_latency);
+        assert!(r.overlap_ratio.abs() < 1e-12);
+        // One blob per sequence → few handshakes → good raw bandwidth.
+        assert_eq!(r.n_transfers, 16);
+    }
+
+    #[test]
+    fn mode_ordering_exposed() {
+        // Grouped never exposes more than either alternative, at any size.
+        let m = cm();
+        for tokens in [256usize, 1024, 4096] {
+            let s = plan_kv_transmission(&m, PdMode::Synchronous, 8, tokens, 0);
+            let l = plan_kv_transmission(&m, PdMode::LayerWise, 8, tokens, 0);
+            let g = plan_kv_transmission(&m, PdMode::Grouped, 8, tokens, 0);
+            assert!(g.exposed <= l.exposed + 1e-9, "tokens={tokens}");
+            assert!(g.exposed <= s.exposed + 1e-9, "tokens={tokens}");
+        }
+        // Synchronous is always fully exposed; layer-wise always overlaps a
+        // non-zero fraction (its TTFT advantage under load comes from lower
+        // peak link demand, which the full simulator models via the shared
+        // FIFO link).
+        let s = plan_kv_transmission(&m, PdMode::Synchronous, 16, 1024, 0);
+        let l = plan_kv_transmission(&m, PdMode::LayerWise, 16, 1024, 0);
+        assert!(s.overlap_ratio.abs() < 1e-12);
+        assert!(l.overlap_ratio > 0.05);
+    }
+
+    #[test]
+    fn explicit_group_size_respected() {
+        let r = plan_kv_transmission(&cm(), PdMode::Grouped, 4, 512, 8);
+        assert_eq!(r.group_layers, 8);
+        assert_eq!(r.n_transfers, 4 * 4); // 32 layers / 8 per group × 4 seqs
+    }
+
+    #[test]
+    fn single_seq_tiny_batch_works() {
+        let r = plan_kv_transmission(&cm(), PdMode::Grouped, 1, 16, 0);
+        assert!(r.exposed >= 0.0 && r.kv_latency > 0.0);
+        assert!(r.overlap_ratio <= 1.0);
+    }
+}

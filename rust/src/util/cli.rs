@@ -1,0 +1,237 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated options,
+//! positionals, subcommands (first positional), and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Last value of `--name`, or its default.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated `--name`.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+}
+
+/// Parser builder.
+pub struct Cli {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+}
+
+/// Parse failure (unknown option, missing value, …).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    Unknown(String),
+    MissingValue(String),
+    Help(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(o) => write!(f, "unknown option: {o}"),
+            CliError::MissingValue(o) => write!(f, "option {o} requires a value"),
+            CliError::Help(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    /// Declare `--name <value>`.
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt_default(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default.to_string()) });
+        self
+    }
+
+    /// Declare boolean `--name`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let def = o.default.as_deref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<26} {}{def}", o.help);
+        }
+        let _ = writeln!(s, "  {:<26} print this help", "--help");
+        s
+    }
+
+    /// Parse an argv-style iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), vec![d.clone()]);
+            }
+        }
+        // Defaults must not count as user-provided repeats; track which keys
+        // still hold only their default.
+        let mut defaulted: Vec<String> =
+            self.opts.iter().filter(|o| o.default.is_some()).map(|o| o.name.to_string()).collect();
+
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.help_text()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(format!("--{key}")))?;
+                if opt.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(format!("--{key}")))?,
+                    };
+                    if defaulted.iter().any(|d| d == &key) {
+                        defaulted.retain(|d| d != &key);
+                        args.values.insert(key, vec![val]);
+                    } else {
+                        args.values.entry(key).or_default().push(val);
+                    }
+                } else {
+                    args.flags.insert(key, true);
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); on `--help` print and exit.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(CliError::Help(h)) => {
+                println!("{h}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.help_text());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let cli = Cli::new("t", "test").opt("rate", "req/s").flag("verbose", "verbose").opt_default("seed", "42", "seed");
+        let a = cli.parse(argv("serve --rate 3.5 --verbose extra")).unwrap();
+        assert_eq!(a.positionals(), &["serve".to_string(), "extra".to_string()]);
+        assert_eq!(a.get_f64("rate"), Some(3.5));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("seed"), Some(42));
+    }
+
+    #[test]
+    fn equals_syntax_and_override_default() {
+        let cli = Cli::new("t", "test").opt_default("seed", "42", "seed");
+        let a = cli.parse(argv("--seed=7")).unwrap();
+        assert_eq!(a.get_u64("seed"), Some(7));
+        assert_eq!(a.get_all("seed").len(), 1);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let cli = Cli::new("t", "test").opt("deploy", "deployment");
+        let a = cli.parse(argv("--deploy TP1 --deploy EP-D")).unwrap();
+        assert_eq!(a.get_all("deploy"), &["TP1".to_string(), "EP-D".to_string()]);
+        assert_eq!(a.get("deploy"), Some("EP-D"));
+    }
+
+    #[test]
+    fn unknown_and_missing() {
+        let cli = Cli::new("t", "test").opt("rate", "req/s");
+        assert!(matches!(cli.parse(argv("--bogus")), Err(CliError::Unknown(_))));
+        assert!(matches!(cli.parse(argv("--rate")), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let cli = Cli::new("t", "about me").opt("rate", "req/s").flag("quiet", "quiet");
+        match cli.parse(argv("--help")) {
+            Err(CliError::Help(h)) => {
+                assert!(h.contains("about me") && h.contains("--rate") && h.contains("--quiet"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Time abstraction shared by the simulator and the real engine.
+//!
+//! All serving metrics (TTFT, TPOT, throughput) are computed from a [`Clock`]
+//! so the same coordinator/metrics code runs under virtual (discrete-event)
+//! and wall-clock time. Times are `f64` **seconds**; the paper reports ms, so
+//! formatting helpers convert at the edge.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A time source. Implementations: [`WallClock`], [`VirtualClock`].
+pub trait Clock: Send + Sync {
+    /// Current time in seconds since the clock's epoch.
+    fn now(&self) -> f64;
+}
+
+/// Wall clock anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual clock advanced by the discrete-event engine. Stored as integer
+/// nanoseconds in an atomic so it can be shared across threads (the simulator
+/// itself is single-threaded; sharing is for metric sinks).
+#[derive(Clone)]
+pub struct VirtualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self { nanos: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Advance to an absolute time (seconds). Panics if time would go
+    /// backwards — event-queue ordering bugs must not be silent.
+    pub fn advance_to(&self, t: f64) {
+        let new = (t * 1e9).round() as u64;
+        let old = self.nanos.load(Ordering::Relaxed);
+        assert!(new + 1 >= old, "virtual clock moved backwards: {old} -> {new}");
+        self.nanos.store(new.max(old), Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// Seconds → milliseconds (metric formatting).
+pub fn s_to_ms(s: f64) -> f64 {
+    s * 1e3
+}
+
+/// Milliseconds → seconds (SLO configs are given in ms like the paper).
+pub fn ms_to_s(ms: f64) -> f64 {
+    ms / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        let c2 = c.clone();
+        c2.advance_to(2.0);
+        assert!((c.now() - 2.0).abs() < 1e-9, "clone shares state");
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn virtual_clock_rejects_backwards() {
+        let c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.advance_to(1.0);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(s_to_ms(1.5), 1500.0);
+        assert_eq!(ms_to_s(2000.0), 2.0);
+    }
+}

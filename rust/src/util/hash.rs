@@ -1,0 +1,81 @@
+//! Hashing helpers.
+//!
+//! The MM Store keys multimodal inputs by content hash (paper §3.2: "the hash
+//! of multimodal inputs as the key"). We use SHA-256 (available in the vendor
+//! set) for content keys — collision-safe across requests — and FNV-1a for
+//! cheap in-process hashing.
+
+use sha2::{Digest, Sha256};
+
+/// 64-bit FNV-1a. Fast, non-cryptographic.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Content key: first 16 bytes of SHA-256, hex-encoded (32 chars).
+/// Stable across runs — suitable as an MM-Store key and wire identifier.
+pub fn content_key(bytes: &[u8]) -> String {
+    let digest = Sha256::digest(bytes);
+    hex(&digest[..16])
+}
+
+/// Content key for a synthetic image described by (dataset id, image id,
+/// width, height). Real deployments hash pixels; the simulator hashes the
+/// descriptor, which has the same dedup semantics (identical inputs collide).
+pub fn image_key(dataset: &str, image_id: u64, width: u32, height: u32) -> String {
+    let mut buf = Vec::with_capacity(dataset.len() + 16);
+    buf.extend_from_slice(dataset.as_bytes());
+    buf.extend_from_slice(&image_id.to_le_bytes());
+    buf.extend_from_slice(&width.to_le_bytes());
+    buf.extend_from_slice(&height.to_le_bytes());
+    content_key(&buf)
+}
+
+/// Lower-case hex encoding.
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn content_key_stable_and_distinct() {
+        let a = content_key(b"hello");
+        let b = content_key(b"hello");
+        let c = content_key(b"world");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 32);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn image_key_dedups_identical_inputs() {
+        let k1 = image_key("sharegpt4o", 7, 802, 652);
+        let k2 = image_key("sharegpt4o", 7, 802, 652);
+        let k3 = image_key("sharegpt4o", 8, 802, 652);
+        let k4 = image_key("vwi", 7, 802, 652);
+        assert_eq!(k1, k2);
+        assert_ne!(k1, k3);
+        assert_ne!(k1, k4);
+    }
+}

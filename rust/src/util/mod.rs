@@ -1,0 +1,24 @@
+//! Substrate utilities.
+//!
+//! This environment has no network access to crates.io, so the usual serving
+//! toolbox (`rand`, `serde`, `clap`, `criterion`, …) is unavailable. Every
+//! submodule here is a small, fully tested stand-in that the rest of the
+//! system builds on:
+//!
+//! * [`rng`] — PCG-based deterministic PRNG with the distributions a workload
+//!   injector needs (uniform, exponential, Poisson, normal, Zipf).
+//! * [`json`] — minimal JSON value model, writer and parser (metrics dumps,
+//!   bench results, trace files).
+//! * [`toml`] — TOML-subset parser backing the config system.
+//! * [`stats`] — streaming summaries, percentiles, histograms.
+//! * [`cli`] — tiny declarative argument parser for the binary and benches.
+//! * [`hash`] — FNV-1a fast hashing + hex helpers (content keys use `sha2`).
+//! * [`clock`] — wall/virtual time abstraction shared by sim and real engine.
+
+pub mod cli;
+pub mod clock;
+pub mod hash;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,328 @@
+//! Streaming statistics, percentiles and histograms for serving metrics.
+
+use crate::util::json::Json;
+
+/// Welford streaming mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A sample set with exact percentiles (keeps all values; serving runs here
+/// are ≤ a few hundred thousand samples, so exactness is affordable).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile with linear interpolation; `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Fraction of samples ≤ `threshold` (SLO attainment helper).
+    pub fn frac_below(&self, threshold: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().filter(|&&x| x <= threshold).count() as f64 / self.xs.len() as f64
+    }
+
+    /// Summary snapshot as JSON (mean/p50/p90/p99/min/max/count).
+    pub fn summary_json(&mut self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.len())
+            .set("mean", self.mean())
+            .set("p50", self.p50())
+            .set("p90", self.p90())
+            .set("p99", self.p99())
+            .set("min", self.min())
+            .set("max", self.max());
+        o
+    }
+}
+
+/// Fixed-bucket linear histogram, used for scatter/heatmap style outputs.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Self { lo, hi, buckets: vec![0; n], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.buckets
+    }
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bucket midpoints, for plotting.
+    pub fn midpoints(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        (0..self.buckets.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+}
+
+/// Render an ASCII table: header row + data rows, columns padded.
+pub fn ascii_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        out.push('|');
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            out.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Format a millisecond quantity with sensible precision.
+pub fn fmt_ms(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else if x >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Format a percentage.
+pub fn fmt_pct(x: f64) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.2}%", x * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_moments() {
+        let mut o = Online::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            o.push(x);
+        }
+        assert_eq!(o.count(), 4);
+        assert!((o.mean() - 2.5).abs() < 1e-12);
+        assert!((o.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn frac_below() {
+        let mut s = Samples::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert!((s.frac_below(2.0) - 0.5).abs() < 1e-12);
+        assert!((s.frac_below(0.5) - 0.0).abs() < 1e-12);
+        assert!((s.frac_below(10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.99, -1.0, 10.0] {
+            h.push(x);
+        }
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[1], 2);
+        assert_eq!(h.counts()[9], 1);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = ascii_table(
+            &["a", "metric"],
+            &[vec!["1".into(), "2.5".into()], vec!["long-row".into(), "x".into()]],
+        );
+        assert!(t.contains("| a        | metric |"));
+        assert!(t.lines().count() == 4);
+    }
+
+    #[test]
+    fn empty_samples_are_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+}

@@ -1,0 +1,285 @@
+//! TOML-subset parser backing the config system.
+//!
+//! Supported grammar (everything `configs/*.toml` uses):
+//! `[table]` and `[table.sub]` headers, `[[array-of-tables]]`,
+//! `key = value` with string / integer / float / bool / inline array values,
+//! `#` comments, bare or quoted keys.
+//!
+//! Values land in the same [`Json`] model as everything else, so config files
+//! and JSON dumps share accessors.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML text to a JSON object.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root = BTreeMap::new();
+    // Path of the currently open table; empty = root.
+    let mut current: Vec<String> = Vec::new();
+    // Whether `current` refers to the latest element of an array-of-tables.
+    let mut current_is_aot = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            current = split_key_path(inner).map_err(|m| err(&m))?;
+            current_is_aot = true;
+            let arr = resolve_array(&mut root, &current).map_err(|m| err(&m))?;
+            arr.push(Json::obj());
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            current = split_key_path(inner).map_err(|m| err(&m))?;
+            current_is_aot = false;
+            resolve_table(&mut root, &current, false).map_err(|m| err(&m))?;
+        } else {
+            let (k, v) = line.split_once('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = parse_key(k.trim()).map_err(|m| err(&m))?;
+            let val = parse_value(v.trim()).map_err(|m| err(&m))?;
+            let table = if current_is_aot {
+                let arr = resolve_array(&mut root, &current).map_err(|m| err(&m))?;
+                match arr.last_mut() {
+                    Some(Json::Obj(m)) => m,
+                    _ => return Err(err("internal: AoT element is not a table")),
+                }
+            } else {
+                resolve_table(&mut root, &current, false).map_err(|m| err(&m))?
+            };
+            if table.contains_key(&key) {
+                return Err(err(&format!("duplicate key '{key}'")));
+            }
+            table.insert(key, val);
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_key_path(s: &str) -> Result<Vec<String>, String> {
+    s.split('.').map(|part| parse_key(part.trim())).collect()
+}
+
+fn parse_key(s: &str) -> Result<String, String> {
+    if s.is_empty() {
+        return Err("empty key".to_string());
+    }
+    if let Some(q) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(q.to_string());
+    }
+    if s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        Ok(s.to_string())
+    } else {
+        Err(format!("invalid bare key '{s}'"))
+    }
+}
+
+/// Navigate (creating as needed) to the table at `path`.
+fn resolve_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    _create_only: bool,
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur.entry(part.clone()).or_insert_with(Json::obj);
+        cur = match entry {
+            Json::Obj(m) => m,
+            Json::Arr(v) => match v.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => return Err(format!("'{part}' is not a table")),
+            },
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+/// Navigate to the array-of-tables at `path`, creating it if absent.
+fn resolve_array<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut Vec<Json>, String> {
+    let (last, prefix) = path.split_last().ok_or("empty table path")?;
+    let parent = resolve_table(root, prefix, false)?;
+    let entry = parent.entry(last.clone()).or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(v) => Ok(v),
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let q = q.strip_suffix('"').ok_or("unterminated string")?;
+        // Basic escapes.
+        let mut out = String::new();
+        let mut chars = q.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape: \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')).ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Numbers (allow underscores like 1_000_000).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned.parse::<f64>().map(Json::Num).map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_values() {
+        let doc = r#"
+# comment
+title = "EPD" # trailing comment
+rate = 3.5
+n = 42
+flag = true
+
+[hardware]
+tflops = 350.0
+mem_gb = 64
+
+[hardware.link]
+kind = "hccs"
+gbps = 56.0
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("EPD"));
+        assert_eq!(v.get("rate").unwrap().as_f64(), Some(3.5));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        let hw = v.get("hardware").unwrap();
+        assert_eq!(hw.get("mem_gb").unwrap().as_f64(), Some(64.0));
+        assert_eq!(hw.get("link").unwrap().get("kind").unwrap().as_str(), Some("hccs"));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("rates = [1, 2, 3.5]\nnames = [\"a\", \"b\"]").unwrap();
+        let rates = v.get("rates").unwrap().as_arr().unwrap();
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[2].as_f64(), Some(3.5));
+        assert_eq!(v.get("names").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = r#"
+[[instance]]
+stage = "encode"
+npu = 0
+
+[[instance]]
+stage = "decode"
+npu = 1
+"#;
+        let v = parse(doc).unwrap();
+        let arr = v.get("instance").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("stage").unwrap().as_str(), Some("encode"));
+        assert_eq!(arr[1].get("npu").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("nonsense").is_err());
+        assert!(parse("x = ").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse("s = \"a#b\"").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let v = parse("big = 1_000_000").unwrap();
+        assert_eq!(v.get("big").unwrap().as_f64(), Some(1e6));
+    }
+}

@@ -1,0 +1,184 @@
+//! Workload generation: synthetic datasets + open-loop injector + traces.
+//!
+//! The paper evaluates on 512-request subsets of VisualWebInstruct and
+//! ShareGPT-4o, injected by AISBench at 1–12 req/s (§4.1). Neither dataset's
+//! images are needed — only their distributional properties (modality mix,
+//! resolution → visual-token count, text length), which
+//! [`crate::config::WorkloadSpec`] captures and [`generate`] samples.
+
+pub mod injector;
+pub mod trace;
+
+use crate::config::{VitDesc, WorkloadSpec};
+use crate::util::hash;
+use crate::util::rng::Rng;
+
+/// A multimodal input attached to a request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageInput {
+    pub width: u32,
+    pub height: u32,
+    /// Content key for MM-Store dedup (identical images share a key).
+    pub key: String,
+    /// Visual tokens this image encodes to (`round(w/28)·round(h/28)`).
+    pub visual_tokens: usize,
+}
+
+/// One inference request, before arrival-time assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub image: Option<ImageInput>,
+    pub text_tokens: usize,
+    pub output_tokens: usize,
+}
+
+impl RequestSpec {
+    pub fn is_multimodal(&self) -> bool {
+        self.image.is_some()
+    }
+
+    /// Total prompt tokens entering prefill (visual ⊕ text, Eq. 2).
+    pub fn prompt_tokens(&self) -> usize {
+        self.text_tokens + self.image.as_ref().map_or(0, |i| i.visual_tokens)
+    }
+}
+
+/// A request with its injection time (seconds from run start).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivedRequest {
+    pub spec: RequestSpec,
+    pub arrival: f64,
+}
+
+/// Sample `spec.num_requests` requests matching the dataset statistics.
+///
+/// Image ids are Zipf-distributed over a pool so a tunable fraction of
+/// multimodal requests reuse an earlier image (exercising MM-Store
+/// cross-request reuse, §3.2). Deterministic under `seed`.
+pub fn generate(spec: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::with_stream(seed, 0x10ad);
+    let mut out = Vec::with_capacity(spec.num_requests);
+    // Pool size chosen so Zipf head-mass ≈ requested reuse probability.
+    let pool = ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64;
+    for id in 0..spec.num_requests as u64 {
+        let has_image = rng.chance(spec.image_fraction);
+        let image = if has_image {
+            let image_id = rng.zipf(pool, 1.2);
+            let (w, h) = if spec.fixed_resolution {
+                (spec.image_width, spec.image_height)
+            } else {
+                // Mild log-normal jitter around the dataset's mean
+                // resolution — derived from the *image id*, so repeated
+                // images keep their resolution (and thus their content key,
+                // enabling MM-Store cross-request reuse).
+                let mut jrng = Rng::with_stream(seed ^ image_id.wrapping_mul(0x9e3779b9), 0x1e5);
+                let jw = jrng.lognormal(0.0, 0.25);
+                let jh = jrng.lognormal(0.0, 0.25);
+                let w = ((spec.image_width as f64 * jw) as u32).clamp(140, 4096);
+                let h = ((spec.image_height as f64 * jh) as u32).clamp(140, 4096);
+                (w / 14 * 14, h / 14 * 14)
+            };
+            let key = hash::image_key(&spec.name, image_id, w, h);
+            let visual_tokens = vit.visual_tokens(w, h);
+            Some(ImageInput { width: w, height: h, key, visual_tokens })
+        } else {
+            None
+        };
+        // Text length: log-normal with the dataset mean, ≥1 token.
+        let sigma: f64 = 0.6;
+        let mu = spec.text_tokens_mean.ln() - sigma * sigma / 2.0;
+        let text_tokens = rng.lognormal(mu, sigma).round().max(1.0) as usize;
+        out.push(RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, WorkloadSpec};
+
+    fn vit() -> VitDesc {
+        ModelDesc::openpangu_7b_vl().vit
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let a = generate(&spec, &vit(), 1);
+        let b = generate(&spec, &vit(), 1);
+        let c = generate(&spec, &vit(), 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn vwi_statistics_match_spec() {
+        let spec = WorkloadSpec::visualwebinstruct();
+        let reqs = generate(&spec, &vit(), 7);
+        assert_eq!(reqs.len(), 512);
+        let mm = reqs.iter().filter(|r| r.is_multimodal()).count();
+        // 50 % multimodal ± sampling noise.
+        assert!((200..=312).contains(&mm), "multimodal count {mm}");
+        // Fixed resolution → every image is 1280×720 → 1196 visual tokens.
+        for r in reqs.iter().filter(|r| r.is_multimodal()) {
+            let img = r.image.as_ref().unwrap();
+            assert_eq!((img.width, img.height), (1280, 720));
+            assert_eq!(img.visual_tokens, 1196);
+        }
+        let mean_text: f64 =
+            reqs.iter().map(|r| r.text_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((40.0..90.0).contains(&mean_text), "mean text {mean_text}");
+        assert!(reqs.iter().all(|r| r.output_tokens == 64));
+    }
+
+    #[test]
+    fn sharegpt4o_is_fully_multimodal_with_jitter() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let reqs = generate(&spec, &vit(), 3);
+        assert!(reqs.iter().all(|r| r.is_multimodal()));
+        let mean_w: f64 = reqs
+            .iter()
+            .map(|r| r.image.as_ref().unwrap().width as f64)
+            .sum::<f64>()
+            / reqs.len() as f64;
+        assert!((650.0..950.0).contains(&mean_w), "mean width {mean_w}");
+        // Jitter produces varied resolutions.
+        let distinct: std::collections::HashSet<_> = reqs
+            .iter()
+            .map(|r| {
+                let i = r.image.as_ref().unwrap();
+                (i.width, i.height)
+            })
+            .collect();
+        assert!(distinct.len() > 50);
+    }
+
+    #[test]
+    fn image_reuse_produces_key_collisions() {
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.image_reuse = 0.3;
+        spec.fixed_resolution = true; // isolate key reuse from resolution jitter
+        let reqs = generate(&spec, &vit(), 11);
+        let keys: Vec<&str> =
+            reqs.iter().filter_map(|r| r.image.as_ref()).map(|i| i.key.as_str()).collect();
+        let distinct: std::collections::HashSet<_> = keys.iter().collect();
+        assert!(
+            distinct.len() < keys.len(),
+            "Zipf sampling should repeat some images: {} vs {}",
+            distinct.len(),
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn prompt_tokens_sum_visual_and_text() {
+        let spec = WorkloadSpec::visualwebinstruct();
+        let reqs = generate(&spec, &vit(), 5);
+        for r in &reqs {
+            let expect = r.text_tokens + r.image.as_ref().map_or(0, |i| i.visual_tokens);
+            assert_eq!(r.prompt_tokens(), expect);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Trace record / replay.
+//!
+//! Workloads (request specs + arrival times) serialize to JSON-lines so a
+//! sampled workload can be replayed bit-exactly across deployments — the
+//! paper's comparisons hold the workload fixed while varying the deployment.
+
+use crate::util::json::Json;
+use crate::workload::{ArrivedRequest, ImageInput, RequestSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+
+/// Serialize one arrived request to a JSON object.
+pub fn to_json(r: &ArrivedRequest) -> Json {
+    let mut o = Json::obj();
+    o.set("id", r.spec.id)
+        .set("arrival", r.arrival)
+        .set("text_tokens", r.spec.text_tokens)
+        .set("output_tokens", r.spec.output_tokens);
+    if let Some(img) = &r.spec.image {
+        let mut im = Json::obj();
+        im.set("width", img.width as u64)
+            .set("height", img.height as u64)
+            .set("key", img.key.as_str())
+            .set("visual_tokens", img.visual_tokens);
+        o.set("image", im);
+    }
+    o
+}
+
+/// Parse one arrived request back.
+pub fn from_json(v: &Json) -> Result<ArrivedRequest> {
+    let get_num = |k: &str| {
+        v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace: missing number '{k}'"))
+    };
+    let image = match v.get("image") {
+        Some(im) => {
+            let g = |k: &str| {
+                im.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace: image '{k}'"))
+            };
+            Some(ImageInput {
+                width: g("width")? as u32,
+                height: g("height")? as u32,
+                key: im
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("trace: image key"))?
+                    .to_string(),
+                visual_tokens: g("visual_tokens")? as usize,
+            })
+        }
+        None => None,
+    };
+    Ok(ArrivedRequest {
+        spec: RequestSpec {
+            id: get_num("id")? as u64,
+            image,
+            text_tokens: get_num("text_tokens")? as usize,
+            output_tokens: get_num("output_tokens")? as usize,
+        },
+        arrival: get_num("arrival")?,
+    })
+}
+
+/// Write a trace file (one JSON object per line).
+pub fn save(path: &str, reqs: &[ArrivedRequest]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    for r in reqs {
+        writeln!(f, "{}", to_json(r).to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Read a trace file.
+pub fn load(path: &str) -> Result<Vec<ArrivedRequest>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
+        out.push(from_json(&v)?);
+    }
+    if out.is_empty() {
+        bail!("{path}: empty trace");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelDesc, WorkloadSpec};
+    use crate::workload::injector::{inject, Arrival};
+    use crate::workload::generate;
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let specs = generate(&WorkloadSpec::sharegpt4o(), &ModelDesc::openpangu_7b_vl().vit, 3);
+        let arrived = inject(&specs, 2.0, Arrival::Poisson, 3);
+        for r in arrived.iter().take(32) {
+            let back = from_json(&to_json(r)).unwrap();
+            assert_eq!(&back, r);
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let specs = generate(&WorkloadSpec::visualwebinstruct(), &ModelDesc::openpangu_7b_vl().vit, 4);
+        let arrived = inject(&specs[..16], 1.0, Arrival::Uniform, 0);
+        let path = "/tmp/epd_trace_test.jsonl";
+        save(path, &arrived).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back, arrived);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = "/tmp/epd_trace_bad.jsonl";
+        std::fs::write(path, "not json\n").unwrap();
+        assert!(load(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

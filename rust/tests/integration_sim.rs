@@ -1,0 +1,177 @@
+//! Integration tests across the simulated serving stack: workload → router
+//! → instances → transports → metrics, for every paper deployment.
+
+use epd_serve::bench::serving::Point;
+use epd_serve::config::{Config, PdMode, SloSpec, WorkloadSpec};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::workload::injector::{inject, Arrival};
+use epd_serve::workload::{generate, trace};
+
+const ALL_DEPLOYMENTS: [&str; 9] =
+    ["TP1", "TP2", "E-PD", "(E-PD)", "EP-D", "(E-P)-D", "(E-D)-P", "E-P-D", "ED-P"];
+
+#[test]
+fn all_deployments_complete_mixed_workload() {
+    for dep in ALL_DEPLOYMENTS {
+        let m = Point::new(dep, 1.0)
+            .with_workload(WorkloadSpec::visualwebinstruct())
+            .with_requests(48)
+            .metrics()
+            .unwrap();
+        assert_eq!(m.completed(), 48, "{dep}");
+        // Every record has coherent timestamps.
+        for r in &m.records {
+            let ttft = r.ttft.unwrap();
+            let tpot = r.tpot.unwrap();
+            assert!(ttft > 0.0 && ttft < 100.0, "{dep} ttft {ttft}");
+            assert!(tpot > 0.0 && tpot < 2.0, "{dep} tpot {tpot}");
+            assert!(r.finish.unwrap() > r.arrival, "{dep}");
+        }
+    }
+}
+
+#[test]
+fn trace_replay_reproduces_run_exactly() {
+    let cfg = {
+        let mut c = Config::default();
+        c.deployment = "(E-P)-D".into();
+        c.rate = 3.0;
+        c.workload.num_requests = 64;
+        c
+    };
+    let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+    let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
+    let path = "/tmp/epd_it_trace.jsonl";
+    trace::save(path, &arrivals).unwrap();
+    let replayed = trace::load(path).unwrap();
+    std::fs::remove_file(path).ok();
+
+    let a = ServingSim::new(cfg.clone(), arrivals).unwrap().run();
+    let b = ServingSim::new(cfg, replayed).unwrap().run();
+    assert_eq!(a.metrics.records, b.metrics.records);
+}
+
+#[test]
+fn per_request_pipeline_ordering_holds() {
+    let out = Point::new("E-P-D", 2.0).with_requests(64).run().unwrap();
+    for r in &out.metrics.records {
+        if let (Some(ttft), Some(fin)) = (r.ttft, r.finish) {
+            assert!(fin >= r.arrival + ttft, "finish after first token");
+        }
+    }
+}
+
+#[test]
+fn text_heavy_workload_unaffected_by_prefetch_toggle() {
+    // E-P transmission only exists for multimodal requests.
+    let mut wl = WorkloadSpec::visualwebinstruct();
+    wl.image_fraction = 0.0;
+    let a = Point::new("E-P-D", 2.0)
+        .with_workload(wl.clone())
+        .with_requests(48)
+        .with_prefetch(true)
+        .metrics()
+        .unwrap();
+    let b = Point::new("E-P-D", 2.0)
+        .with_workload(wl)
+        .with_requests(48)
+        .with_prefetch(false)
+        .metrics()
+        .unwrap();
+    assert_eq!(a.records, b.records, "text-only traffic never touches the MM Store");
+}
+
+#[test]
+fn kv_mode_only_matters_when_decode_disaggregated() {
+    // Coupled PD never transfers KV: pd_mode must be a no-op.
+    let a = Point::new("(E-PD)", 2.0).with_requests(48).with_pd_mode(PdMode::Grouped).metrics().unwrap();
+    let b =
+        Point::new("(E-PD)", 2.0).with_requests(48).with_pd_mode(PdMode::Synchronous).metrics().unwrap();
+    assert_eq!(a.records, b.records);
+    // Disaggregated decode: synchronous transfer must hurt TTFT.
+    let g = Point::new("EP-D", 3.0).with_requests(96).with_pd_mode(PdMode::Grouped).metrics().unwrap();
+    let s = Point::new("EP-D", 3.0)
+        .with_requests(96)
+        .with_pd_mode(PdMode::Synchronous)
+        .metrics()
+        .unwrap();
+    assert!(
+        s.mean_ttft_ms() > g.mean_ttft_ms(),
+        "synchronous KV must inflate TTFT: {} vs {}",
+        s.mean_ttft_ms(),
+        g.mean_ttft_ms()
+    );
+}
+
+#[test]
+fn replicas_double_capacity() {
+    let one = Point::new("(E-PD)", 8.0).with_requests(128).metrics().unwrap();
+    // Same per-NPU rate on two replicas: per-NPU metrics should be similar,
+    // total throughput roughly double.
+    let two = Point::new("(E-PD)x2", 8.0).with_requests(128).metrics().unwrap();
+    assert!(two.throughput() > one.throughput() * 1.4);
+}
+
+#[test]
+fn slo_spec_changes_attainment_not_latency() {
+    let loose = Point::new("TP1", 4.0).with_requests(96).with_slo(SloSpec::encode_disagg()).metrics().unwrap();
+    let strict = Point::new("TP1", 4.0).with_requests(96).with_slo(SloSpec::strict()).metrics().unwrap();
+    assert_eq!(loose.mean_ttft_ms(), strict.mean_ttft_ms(), "latencies independent of SLO");
+    assert!(loose.slo_attainment() >= strict.slo_attainment());
+}
+
+#[test]
+fn qwen_model_runs_all_deployments() {
+    use epd_serve::config::ModelDesc;
+    for dep in ["TP1", "(E-P)-D"] {
+        let m = Point::new(dep, 1.0)
+            .with_model(ModelDesc::qwen3_vl_8b())
+            .with_requests(24)
+            .metrics()
+            .unwrap();
+        assert_eq!(m.completed(), 24, "{dep}");
+    }
+}
+
+#[test]
+fn run_serving_smoke_via_config() {
+    let mut cfg = Config::default();
+    cfg.workload.num_requests = 24;
+    cfg.rate = 2.0;
+    let out = run_serving(&cfg).unwrap();
+    assert!(out.events_processed > 100);
+    assert_eq!(out.npu_utilization.len(), 3); // E-P-D default
+    for u in out.npu_utilization {
+        assert!((0.0..=1.0).contains(&u));
+    }
+}
+
+#[test]
+fn overload_backlog_is_graceful_not_divergent() {
+    // 20 req/s on one NPU is far past saturation; the sim must still finish
+    // all requests within the horizon and report sane (large) latencies.
+    let m = Point::new("TP1", 20.0).with_requests(128).metrics().unwrap();
+    assert_eq!(m.completed(), 128);
+    assert!(m.mean_ttft_ms() > 1000.0, "overload must show as queueing delay");
+    assert!(m.slo_attainment() < 0.5);
+}
+
+#[test]
+fn shipped_config_files_load_and_run() {
+    for name in
+        ["table5_epd", "strict_slo", "ablation_baseline", "throughput_colocated"]
+    {
+        let path = format!("configs/{name}.toml");
+        let mut cfg = Config::load(&path).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        cfg.workload.num_requests = 24; // keep the smoke run short
+        let out = run_serving(&cfg).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        assert_eq!(out.metrics.completed(), 24, "{path}");
+    }
+    // Spot-check a couple of decoded fields.
+    let strict = Config::load("configs/strict_slo.toml").unwrap();
+    assert_eq!(strict.slo.ttft_ms, 800.0);
+    assert_eq!(strict.deployment, "(E-P)-D");
+    let ablate = Config::load("configs/ablation_baseline.toml").unwrap();
+    assert!(!ablate.scheduler.ep_async_prefetch);
+    assert_eq!(ablate.scheduler.pd_mode, epd_serve::config::PdMode::LayerWise);
+}

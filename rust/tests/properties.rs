@@ -1,0 +1,245 @@
+//! Property-based tests (via the in-tree `testkit` mini-harness) over the
+//! coordinator invariants: KV accounting, routing, balancing, transmission
+//! planning, and the event engine.
+
+use epd_serve::config::{HardwareDesc, ModelDesc, PdMode};
+use epd_serve::coordinator::balancer::{InstanceStatus, StatusTable};
+use epd_serve::coordinator::deployment::Deployment;
+use epd_serve::kvcache::{BlockAllocator, KvManager};
+use epd_serve::npu::colocation::{colocated_slowdown, ResourceVec};
+use epd_serve::npu::CostModel;
+use epd_serve::sim::engine::{EventQueue, SimModel};
+use epd_serve::testkit::{check, ensure};
+use epd_serve::transport::pd::plan_kv_transmission;
+
+fn cm() -> CostModel {
+    CostModel::new(ModelDesc::openpangu_7b_vl(), HardwareDesc::ascend_910b())
+}
+
+#[test]
+fn prop_kv_allocator_conserves_blocks() {
+    check(
+        "kv-conservation",
+        11,
+        200,
+        |r| {
+            let ops: Vec<(u64, usize, u8)> = (0..r.below(40) + 1)
+                .map(|i| (i, r.below(200) as usize + 1, r.below(3) as u8))
+                .collect();
+            ops
+        },
+        |ops| {
+            let total = 64;
+            let mut m = KvManager::new(BlockAllocator::new(total, 16, 1024));
+            let mut live: Vec<u64> = Vec::new();
+            for (id, tokens, op) in ops {
+                match op {
+                    0 => {
+                        if m.register(*id, *tokens).is_ok() {
+                            live.push(*id);
+                        }
+                    }
+                    1 => {
+                        if let Some(&id) = live.first() {
+                            let _ = m.append(id, 5);
+                        }
+                    }
+                    _ => {
+                        if let Some(id) = live.pop() {
+                            m.free(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                ensure(
+                    m.free_blocks() <= total,
+                    format!("free {} exceeds pool {total}", m.free_blocks()),
+                )?;
+            }
+            for id in live {
+                m.free(id).map_err(|e| e.to_string())?;
+            }
+            ensure(m.free_blocks() == total, "all blocks must return to the pool")
+        },
+    );
+}
+
+#[test]
+fn prop_least_loaded_is_minimal() {
+    check(
+        "least-loaded",
+        13,
+        300,
+        |r| {
+            let n = r.below(8) as usize + 2;
+            (0..n)
+                .map(|_| InstanceStatus {
+                    queue_len: r.below(20) as usize,
+                    active: r.below(10) as usize,
+                    pending_tokens: r.below(50_000) as usize,
+                    kv_utilization: r.f64(),
+                })
+                .collect::<Vec<_>>()
+        },
+        |statuses| {
+            let mut t = StatusTable::new(statuses.len());
+            for (i, s) in statuses.iter().enumerate() {
+                t.update(i, *s);
+            }
+            let cands: Vec<usize> = (0..statuses.len()).collect();
+            let chosen = t.least_loaded(&cands).unwrap();
+            let min = statuses.iter().map(|s| s.load_score()).fold(f64::INFINITY, f64::min);
+            ensure(
+                (statuses[chosen].load_score() - min).abs() < 1e-12,
+                "chosen instance must carry the minimal load score",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_grouped_transmission_covers_all_layers_once() {
+    check(
+        "kv-grouping-coverage",
+        17,
+        200,
+        |r| {
+            let batch = r.below(16) as usize + 1;
+            let tokens = (r.below(4096) as usize + 16) & !15;
+            let g = r.below(40) as usize; // 0 = auto, may exceed layers (clamped)
+            (batch, tokens, g)
+        },
+        |&(batch, tokens, g)| {
+            let cm = cm();
+            let layers = cm.model.llm.layers;
+            let r = plan_kv_transmission(&cm, PdMode::Grouped, batch, tokens, g);
+            // n_transfers must cover every layer of every sequence exactly
+            // once: batch × ceil(layers / group).
+            let expect = batch * layers.div_ceil(r.group_layers);
+            ensure(r.n_transfers == expect, format!("{} != {expect}", r.n_transfers))?;
+            ensure(r.group_layers >= 1 && r.group_layers <= layers, "group size in range")?;
+            ensure(r.exposed >= 0.0 && r.exposed <= r.kv_latency + 1e-9, "exposed bounded")?;
+            ensure((0.0..=1.0 + 1e-9).contains(&r.overlap_ratio), "overlap ratio in [0,1]")
+        },
+    );
+}
+
+#[test]
+fn prop_pd_modes_ordering_and_bandwidth() {
+    check(
+        "pd-mode-order",
+        19,
+        150,
+        |r| {
+            let batch = r.below(16) as usize + 1;
+            let tokens = r.below(4000) as usize + 64;
+            (batch, tokens)
+        },
+        |&(batch, tokens)| {
+            let cm = cm();
+            let s = plan_kv_transmission(&cm, PdMode::Synchronous, batch, tokens, 0);
+            let l = plan_kv_transmission(&cm, PdMode::LayerWise, batch, tokens, 0);
+            let g = plan_kv_transmission(&cm, PdMode::Grouped, batch, tokens, 0);
+            ensure(g.exposed <= l.exposed + 1e-9, "grouped ≤ layerwise exposed")?;
+            ensure(g.exposed <= s.exposed + 1e-9, "grouped ≤ synchronous exposed")?;
+            ensure(
+                g.bandwidth >= l.bandwidth - 1e-9,
+                "grouping must not reduce achieved bandwidth",
+            )?;
+            ensure(
+                (s.kv_bytes - l.kv_bytes).abs() < 1.0 && (l.kv_bytes - g.kv_bytes).abs() < 1.0,
+                "same payload in every mode",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_slowdown_monotone_in_background() {
+    check(
+        "slowdown-monotone",
+        23,
+        300,
+        |r| {
+            let v = ResourceVec { cube: r.f64(), vector: r.f64(), bw: r.f64() };
+            let a = ResourceVec { cube: r.f64(), vector: r.f64(), bw: r.f64() };
+            let extra = ResourceVec { cube: r.f64(), vector: r.f64(), bw: r.f64() };
+            (v, a, extra)
+        },
+        |&(v, a, extra)| {
+            let s1 = colocated_slowdown(&v, &a);
+            let s2 = colocated_slowdown(&v, &a.add(&extra));
+            ensure(s1 >= 1.0 - 1e-12, "slowdown ≥ 1")?;
+            ensure(s2 >= s1 - 1e-12, "more background can never speed the victim up")
+        },
+    );
+}
+
+#[test]
+fn prop_deployment_parse_roundtrip_structure() {
+    check(
+        "deployment-structure",
+        29,
+        100,
+        |r| {
+            let notations =
+                ["TP1", "TP2", "E-PD", "(E-PD)", "EP-D", "(E-P)-D", "(E-D)-P", "E-P-D", "ED-P"];
+            let base = notations[r.below(notations.len() as u64) as usize];
+            let reps = r.below(3) + 1;
+            (base.to_string(), reps as usize)
+        },
+        |(base, reps)| {
+            let s = if *reps > 1 { format!("{base}x{reps}") } else { base.clone() };
+            let d = Deployment::parse(&s).map_err(|e| e.to_string())?;
+            ensure(d.replicas == *reps, "replica count")?;
+            ensure(d.num_npus() == d.npus_per_replica * reps, "npu math")?;
+            // Every replica must be able to serve a multimodal request.
+            for rep in 0..*reps {
+                ensure(!d.instances_where(rep, |s| s.prefill).is_empty(), "prefill per replica")?;
+                ensure(!d.instances_where(rep, |s| s.decode).is_empty(), "decode per replica")?;
+            }
+            // Instances land on valid NPUs.
+            for i in &d.instances {
+                ensure(i.npu < d.num_npus(), "npu index bound")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_total_order() {
+    struct Collect {
+        seen: Vec<u64>,
+    }
+    impl SimModel for Collect {
+        type Event = (u64, u64); // (time bucket, payload)
+        fn handle(&mut self, now: f64, ev: (u64, u64), _q: &mut EventQueue<(u64, u64)>) {
+            assert!((now * 1000.0).round() as u64 >= *self.seen.last().unwrap_or(&0) / 1_000_000);
+            self.seen.push(ev.0 * 1_000_000 + ev.1);
+        }
+    }
+    check(
+        "event-order",
+        31,
+        100,
+        |r| (0..200).map(|i| (r.below(50), i)).collect::<Vec<(u64, u64)>>(),
+        |evs| {
+            let mut q = EventQueue::new();
+            for &(t, i) in evs {
+                q.at(t as f64 / 1000.0, (t, i));
+            }
+            let mut m = Collect { seen: Vec::new() };
+            epd_serve::sim::engine::run(&mut m, &mut q, f64::INFINITY);
+            ensure(m.seen.len() == evs.len(), "all events delivered")?;
+            // Same-time events keep schedule order; times never regress.
+            let times: Vec<u64> = m.seen.iter().map(|x| x / 1_000_000).collect();
+            ensure(times.windows(2).all(|w| w[1] >= w[0]), "monotone time")?;
+            for w in m.seen.windows(2) {
+                if w[0] / 1_000_000 == w[1] / 1_000_000 {
+                    ensure(w[1] % 1_000_000 > w[0] % 1_000_000, "FIFO within a timestamp")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
