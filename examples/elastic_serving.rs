@@ -1,0 +1,94 @@
+//! Runtime elastic re-provisioning walkthrough.
+//!
+//! Serves a phase-shifting workload (text-heavy ⇄ image-heavy) on a 4-NPU
+//! `E-P-D-D` deployment twice: once with the topology frozen, once with the
+//! in-flight [`Reconfigurer`] enabled — and prints the switch timeline plus
+//! the side-by-side metrics, showing capacity following the traffic while
+//! requests are in flight.
+//!
+//! ```bash
+//! cargo run --release --example elastic_serving -- --phase-s 60 --cycles 2
+//! ```
+//!
+//! [`Reconfigurer`]: epd_serve::coordinator::reconfig::Reconfigurer
+
+use epd_serve::bench::print_table;
+use epd_serve::config::{Config, ReconfigSpec};
+use epd_serve::coordinator::simserve::ServingSim;
+use epd_serve::util::cli::Cli;
+use epd_serve::util::stats::{fmt_ms, fmt_pct};
+use epd_serve::workload::phases::{generate_phased, PhasePlan};
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("elastic_serving", "in-flight elastic re-provisioning demo")
+        .opt_default("phase-s", "60", "phase length, seconds")
+        .opt_default("text-rate", "6.5", "text-heavy phase rate, req/s")
+        .opt_default("image-rate", "11", "image-heavy phase rate, req/s")
+        .opt_default("cycles", "2", "text+image cycles")
+        .opt_default("seed", "42", "seed")
+        .parse_env();
+    let plan = PhasePlan::text_image_alternating(
+        args.get_f64("phase-s").unwrap(),
+        args.get_f64("text-rate").unwrap(),
+        args.get_f64("image-rate").unwrap(),
+        args.get_usize("cycles").unwrap(),
+    );
+    let seed = args.get_u64("seed").unwrap();
+
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-D".to_string();
+    cfg.scheduler.max_encode_batch = 2;
+    cfg.seed = seed;
+    let arrivals = generate_phased(&cfg.workload, &cfg.model.vit, &plan, seed);
+    println!(
+        "workload: {} requests over {:.0} s — text-heavy (decode-bound) ⇄ image-heavy (encode-bound)\n",
+        arrivals.len(),
+        plan.total_s()
+    );
+
+    let frozen = ServingSim::new(cfg.clone(), arrivals.clone())?.run();
+    cfg.reconfig = ReconfigSpec { enabled: true, min_backlog_tokens: 6144, ..Default::default() };
+    let elastic = ServingSim::new(cfg, arrivals)?.run();
+
+    println!("elastic switch timeline (instance roles follow the traffic):");
+    if elastic.reconfig_switches.is_empty() {
+        println!("  (no switches — try longer phases or higher rates)");
+    }
+    for s in &elastic.reconfig_switches {
+        let phase = if s.t % plan.cycle_s() < plan.phases[0].duration_s {
+            "text-heavy"
+        } else {
+            "image-heavy"
+        };
+        println!(
+            "  t={:7.1}s  [{phase:>11} phase]  instance {}: {} -> {}",
+            s.t, s.inst, s.from, s.to
+        );
+    }
+
+    let mut rows = Vec::new();
+    for (name, out) in [("frozen E-P-D-D", &frozen), ("elastic E-P-D-D", &elastic)] {
+        let m = &out.metrics;
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", m.completed()),
+            fmt_ms(m.mean_ttft_ms()),
+            fmt_ms(m.mean_tpot_ms()),
+            fmt_pct(m.slo_attainment()),
+            format!("{:.1}", m.throughput()),
+            format!("{:.1}", m.effective_throughput()),
+        ]);
+    }
+    print_table(
+        "frozen vs elastic topology on the phase-shifting workload",
+        &["topology", "done", "TTFT ms", "TPOT ms", "SLO", "thr tok/s", "eff-thr"],
+        &rows,
+    );
+    println!(
+        "\nThe frozen topology starves its single encoder during image bursts and idles it\n\
+         during text bursts; the elastic controller retasks the spare instance in flight\n\
+         (D->E at image-burst onset, E->D when decode saturates), draining queues and\n\
+         migrating waiting requests over the E-P / P-D transport paths."
+    );
+    Ok(())
+}

@@ -39,11 +39,11 @@ def _flash_kernel(bias_ref, q_ref, k_ref, v_ref, o_ref, *, bq, bk, causal, seq_l
 
     def body(ki, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None)))  # [bk, dh]
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None)))
+        k = k_ref[0, pl.ds(ki * bk, bk), :]  # [bk, dh]
+        v = v_ref[0, pl.ds(ki * bk, bk), :]
         s = jnp.dot(q, k.T) * scale  # [bq, bk] — MXU matmul
         k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
-        s = s + pl.load(bias_ref, (pl.dslice(ki * bk, bk),))[None, :]
+        s = s + bias_ref[pl.ds(ki * bk, bk)][None, :]
         if causal:
             s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
         # Online softmax update (VPU side).

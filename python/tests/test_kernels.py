@@ -8,8 +8,8 @@ shapes.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from compile.kernels import ref
 from compile.kernels.decode_attention import decode_attention

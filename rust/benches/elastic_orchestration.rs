@@ -1,0 +1,174 @@
+//! **Elastic orchestration**: runtime in-flight re-provisioning vs every
+//! static disaggregated deployment on a phase-shifting workload.
+//!
+//! The workload alternates 75 s **text-heavy** phases (no images, short
+//! prompts, 512-token generations — decode-bound) with 75 s **image-heavy**
+//! phases (every request carries a ShareGPT-4o-sized image, 64-token
+//! outputs — encoder-bound), over two cycles on a 4-NPU budget. No fixed
+//! topology is right in both phases: `E-P-D-D` starves its single encoder
+//! in image phases, `E-E-P-D` drowns its single decoder in text phases. The
+//! elastic system starts as `E-P-D-D` and retasks its spare instance at
+//! runtime (D→E when the encoder starves, E→D when the decoder saturates),
+//! draining queues and migrating waiting requests over the standing E-P /
+//! P-D transport paths.
+//!
+//! A stationary control run shows the hysteresis keeping the controller
+//! silent (zero switches, bit-identical records) when there is nothing to
+//! win.
+
+use epd_serve::bench::{pct_change, print_table, save_json};
+use epd_serve::config::{Config, ReconfigSpec};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim, SimOutcome};
+use epd_serve::util::json::Json;
+use epd_serve::util::stats::{fmt_ms, fmt_pct};
+use epd_serve::workload::phases::{generate_phased, PhasePlan};
+
+/// Static 4-NPU candidates (the elastic run starts from the first).
+const STATICS: [&str; 4] = ["E-P-D-D", "E-E-P-D", "E-P-P-D", "(E-P)-D-D"];
+
+fn cfg_for(deployment: &str, elastic: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = deployment.to_string();
+    // Cap encode batching: the ViT's joint-attention cost is quadratic in
+    // batch tokens, so unbounded batching collapses encoder capacity under
+    // exactly the backlog the experiment creates.
+    cfg.scheduler.max_encode_batch = 2;
+    cfg.reconfig = ReconfigSpec {
+        enabled: elastic,
+        min_backlog_tokens: 6144,
+        ..ReconfigSpec::default()
+    };
+    cfg
+}
+
+fn run_phased(deployment: &str, elastic: bool, plan: &PhasePlan) -> anyhow::Result<SimOutcome> {
+    let cfg = cfg_for(deployment, elastic);
+    let arrivals = generate_phased(&cfg.workload, &cfg.model.vit, plan, cfg.seed);
+    Ok(ServingSim::new(cfg, arrivals)?.run())
+}
+
+fn main() -> anyhow::Result<()> {
+    let plan = PhasePlan::text_image_alternating(75.0, 6.5, 11.0, 2);
+    {
+        let probe = cfg_for("E-P-D-D", false);
+        let arrivals = generate_phased(&probe.workload, &probe.model.vit, &plan, probe.seed);
+        println!(
+            "phase-shifting workload: {} requests over {:.0} s \
+             (75 s text-heavy @6.5 req/s ⇄ 75 s image-heavy @11 req/s, ×2 cycles)",
+            arrivals.len(),
+            plan.total_s()
+        );
+    }
+
+    let mut rows = Vec::new();
+    let mut dump = Json::obj();
+    let mut results: Vec<(String, SimOutcome)> = Vec::new();
+    for dep in STATICS {
+        let out = run_phased(dep, false, &plan)?;
+        results.push((format!("{dep} (static)"), out));
+    }
+    let elastic = run_phased("E-P-D-D", true, &plan)?;
+    results.push(("E-P-D-D (elastic)".to_string(), elastic));
+
+    for (name, out) in &results {
+        let m = &out.metrics;
+        rows.push(vec![
+            name.clone(),
+            format!("{}", m.completed()),
+            fmt_ms(m.mean_ttft_ms()),
+            fmt_ms(m.mean_tpot_ms()),
+            fmt_pct(m.slo_attainment()),
+            format!("{:.1}", m.throughput()),
+            format!("{:.1}", m.effective_throughput()),
+            format!("{}", out.reconfig_switches.len()),
+        ]);
+        let mut o = Json::obj();
+        o.set("completed", m.completed())
+            .set("ttft_ms", m.mean_ttft_ms())
+            .set("tpot_ms", m.mean_tpot_ms())
+            .set("slo", m.slo_attainment())
+            .set("throughput", m.throughput())
+            .set("effective_throughput", m.effective_throughput())
+            .set("switches", out.reconfig_switches.len());
+        dump.set(name, o);
+    }
+    print_table(
+        "elastic in-flight re-provisioning vs static deployments, phase-shifting workload (4 NPUs)",
+        &["deployment", "done", "TTFT ms", "TPOT ms", "SLO", "thr tok/s", "eff-thr", "switches"],
+        &rows,
+    );
+
+    let elastic = &results.last().unwrap().1;
+    println!("\nelastic switch timeline:");
+    for s in &elastic.reconfig_switches {
+        println!("  t={:7.1}s  instance {} : {} -> {}", s.t, s.inst, s.from, s.to);
+    }
+
+    // ---- Shape assertions -------------------------------------------------
+    let n = results[0].1.metrics.records.len();
+    for (name, out) in &results {
+        assert_eq!(out.metrics.completed(), n, "{name} must complete the whole workload");
+    }
+    assert!(
+        elastic.reconfig_switches.len() >= 2,
+        "each phase flip past the first must re-provision (got {})",
+        elastic.reconfig_switches.len()
+    );
+    let (best_name, best_static) = results[..STATICS.len()]
+        .iter()
+        .max_by(|a, b| {
+            a.1.metrics.throughput().partial_cmp(&b.1.metrics.throughput()).unwrap()
+        })
+        .map(|(n, o)| (n.clone(), o))
+        .unwrap();
+    let e = &elastic.metrics;
+    println!(
+        "\nelastic vs best static ({best_name}): throughput {} , effective throughput {}",
+        pct_change(e.throughput(), best_static.metrics.throughput()),
+        pct_change(e.effective_throughput(), best_static.metrics.effective_throughput()),
+    );
+    assert!(
+        e.throughput() > best_static.metrics.throughput(),
+        "elastic must beat the best static deployment end-to-end: {} vs {}",
+        e.throughput(),
+        best_static.metrics.throughput()
+    );
+    let best_static_eff = results[..STATICS.len()]
+        .iter()
+        .map(|(_, o)| o.metrics.effective_throughput())
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        e.effective_throughput() > best_static_eff,
+        "elastic must beat every static on SLO-qualified throughput: {} vs {}",
+        e.effective_throughput(),
+        best_static_eff
+    );
+
+    // ---- Stationary control: hysteresis prevents thrashing ---------------
+    let mut stat_cfg = cfg_for("E-P-D-D", false);
+    stat_cfg.rate = 3.0;
+    stat_cfg.workload.num_requests = 256;
+    let baseline = run_serving(&stat_cfg)?;
+    stat_cfg.reconfig.enabled = true;
+    let controlled = run_serving(&stat_cfg)?;
+    assert!(
+        controlled.reconfig_switches.is_empty(),
+        "stationary traffic must not trigger switches"
+    );
+    assert_eq!(
+        baseline.metrics.records, controlled.metrics.records,
+        "a silent controller must not perturb the run"
+    );
+    println!(
+        "\nstationary control (3 req/s, 256 requests): {} switches, records identical — no regression",
+        controlled.reconfig_switches.len()
+    );
+
+    let mut o = Json::obj();
+    o.set("stationary_switches", controlled.reconfig_switches.len() as u64)
+        .set("stationary_throughput", controlled.metrics.throughput());
+    dump.set("stationary_control", o);
+    let path = save_json("elastic_orchestration", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

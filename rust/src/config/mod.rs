@@ -20,10 +20,12 @@ pub struct LlmDesc {
     /// Hidden width; also the feature width the encoder emits (Table 3 shows
     /// `[n, 3584]` features for openPangu-7B-VL).
     pub hidden: usize,
+    /// Attention head count.
     pub heads: usize,
     /// KV heads (= heads for full MHA; fewer for GQA). Calibration against
     /// Table 4 shows the paper's KV footprint matches full-width KV.
     pub kv_heads: usize,
+    /// Per-head dimension (`hidden = heads × head_dim` for standard MHA).
     pub head_dim: usize,
     /// MLP intermediate width.
     pub intermediate: usize,
@@ -51,9 +53,13 @@ impl LlmDesc {
 /// Vision-encoder descriptor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct VitDesc {
+    /// Total encoder parameter count.
     pub params: f64,
+    /// Encoder transformer layer count.
     pub layers: usize,
+    /// Encoder hidden width.
     pub hidden: usize,
+    /// Encoder attention head count.
     pub heads: usize,
     /// Effective pixels per output visual token edge (patch size × spatial
     /// merge). 28 reproduces every Table 3 row (`round(w/28)·round(h/28)`).
@@ -61,6 +67,7 @@ pub struct VitDesc {
     /// Patch tokens per output token (2×2 spatial merge in Qwen-style ViTs):
     /// the encoder runs attention over `merge × visual_tokens` patches.
     pub merge: usize,
+    /// Bytes per element of encoder weights/activations (2 = fp16/bf16).
     pub dtype_bytes: usize,
 }
 
@@ -76,8 +83,11 @@ impl VitDesc {
 /// Full multimodal model descriptor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelDesc {
+    /// Human-readable model name (Table 1 rows).
     pub name: String,
+    /// The autoregressive decoder LM.
     pub llm: LlmDesc,
+    /// The vision encoder.
     pub vit: VitDesc,
 }
 
@@ -174,6 +184,7 @@ impl ModelDesc {
 /// calibrated efficiency factors documented in DESIGN.md §5.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HardwareDesc {
+    /// Human-readable hardware profile name.
     pub name: String,
     /// Peak cube-engine (matrix) throughput, FLOP/s, fp16.
     pub cube_flops: f64,
@@ -248,7 +259,9 @@ impl HardwareDesc {
 /// SLO constraint pair, ms (paper §4.1: varies by disaggregation strategy).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloSpec {
+    /// Time-to-first-token ceiling, milliseconds.
     pub ttft_ms: f64,
+    /// Time-per-output-token ceiling, milliseconds.
     pub tpot_ms: f64,
 }
 
@@ -270,6 +283,7 @@ impl SloSpec {
 /// Workload descriptor (dataset statistics from §4.1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
+    /// Dataset name (for reports and trace headers).
     pub name: String,
     /// Number of requests in the run (paper: 512).
     pub num_requests: usize,
@@ -376,19 +390,76 @@ impl Default for SchedulerSpec {
     }
 }
 
+/// Runtime elastic re-provisioning policy (the in-flight extension of the
+/// paper's "dynamic orchestration" claim; see
+/// [`crate::coordinator::reconfig`]).
+///
+/// When enabled, a [`crate::coordinator::reconfig::Reconfigurer`] ticks
+/// inside the serving loop, watches the global status table for stage
+/// imbalance (one stage's queues starving while another's saturate — e.g. a
+/// bursty image-heavy phase drowning Encode while a Decode instance idles),
+/// and retasks a single-stage instance to the pressured stage at runtime:
+/// draining its queues, migrating waiting requests over the existing E-P /
+/// P-D transport paths, and updating the router's candidate sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigSpec {
+    /// Master switch. Off by default: every paper-reproduction bench runs a
+    /// fixed topology.
+    pub enabled: bool,
+    /// Controller tick interval, seconds of simulated time.
+    pub tick_s: f64,
+    /// Consecutive imbalanced ticks required before a switch fires
+    /// (hysteresis against transient bursts).
+    pub hysteresis_ticks: usize,
+    /// Minimum ratio of the most-pressured stage's per-instance backlog to
+    /// the least-pressured stage's before the imbalance counts.
+    pub imbalance_ratio: f64,
+    /// Minimum per-instance backlog (tokens) of the pressured stage before
+    /// the imbalance counts — keeps the controller quiet at low load.
+    pub min_backlog_tokens: usize,
+    /// Migration cost model: time a retasked instance is offline while it
+    /// reloads stage weights / reshapes memory pools, seconds.
+    pub drain_s: f64,
+    /// Minimum time between two switches anywhere in the cluster, seconds
+    /// (prevents thrashing between complementary imbalances).
+    pub min_dwell_s: f64,
+}
+
+impl Default for ReconfigSpec {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            tick_s: 2.0,
+            hysteresis_ticks: 2,
+            imbalance_ratio: 3.0,
+            min_backlog_tokens: 4096,
+            drain_s: 1.0,
+            min_dwell_s: 10.0,
+        }
+    }
+}
+
 /// Top-level experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Multimodal model being served.
     pub model: ModelDesc,
+    /// Calibrated NPU hardware profile.
     pub hardware: HardwareDesc,
+    /// Workload distribution the injector samples.
     pub workload: WorkloadSpec,
+    /// Batching / transmission policy knobs.
     pub scheduler: SchedulerSpec,
+    /// Elastic in-flight re-provisioning policy.
+    pub reconfig: ReconfigSpec,
+    /// SLO constraints used for attainment accounting.
     pub slo: SloSpec,
     /// Deployment notation string, e.g. `"(E-P)-D"`.
     pub deployment: String,
     /// Open-loop request rate, req/s (per the whole deployment; benches
     /// normalize per NPU as §4.1 prescribes).
     pub rate: f64,
+    /// Master RNG seed; every run is deterministic under it.
     pub seed: u64,
 }
 
@@ -399,6 +470,7 @@ impl Default for Config {
             hardware: HardwareDesc::ascend_910b(),
             workload: WorkloadSpec::sharegpt4o(),
             scheduler: SchedulerSpec::default(),
+            reconfig: ReconfigSpec::default(),
             slo: SloSpec::decode_disagg(),
             deployment: "E-P-D".to_string(),
             rate: 2.0,
@@ -506,6 +578,48 @@ impl Config {
                 };
             }
         }
+        if let Some(rc) = doc.get("reconfig") {
+            let r = &mut cfg.reconfig;
+            if let Some(v) = rc.get("enabled").and_then(Json::as_bool) {
+                r.enabled = v;
+            }
+            if let Some(v) = rc.get("tick_s").and_then(Json::as_f64) {
+                if v <= 0.0 {
+                    bail!("reconfig.tick_s must be positive, got {v}");
+                }
+                r.tick_s = v;
+            }
+            if let Some(v) = rc.get("hysteresis_ticks").and_then(Json::as_f64) {
+                if v < 1.0 || v.fract() != 0.0 {
+                    bail!("reconfig.hysteresis_ticks must be a positive integer, got {v}");
+                }
+                r.hysteresis_ticks = v as usize;
+            }
+            if let Some(v) = rc.get("imbalance_ratio").and_then(Json::as_f64) {
+                if v <= 0.0 {
+                    bail!("reconfig.imbalance_ratio must be positive, got {v}");
+                }
+                r.imbalance_ratio = v;
+            }
+            if let Some(v) = rc.get("min_backlog_tokens").and_then(Json::as_f64) {
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("reconfig.min_backlog_tokens must be a non-negative integer, got {v}");
+                }
+                r.min_backlog_tokens = v as usize;
+            }
+            if let Some(v) = rc.get("drain_s").and_then(Json::as_f64) {
+                if v < 0.0 {
+                    bail!("reconfig.drain_s must be >= 0, got {v}");
+                }
+                r.drain_s = v;
+            }
+            if let Some(v) = rc.get("min_dwell_s").and_then(Json::as_f64) {
+                if v < 0.0 {
+                    bail!("reconfig.min_dwell_s must be >= 0, got {v}");
+                }
+                r.min_dwell_s = v;
+            }
+        }
         Ok(cfg)
     }
 }
@@ -590,5 +704,53 @@ ep_async_prefetch = false
         assert_eq!(c.deployment, "E-P-D");
         assert!(c.model.llm.kv_bytes_per_token() > 0);
         assert_eq!(c.slo.tpot_ms, 50.0);
+        assert!(!c.reconfig.enabled, "elasticity must be opt-in");
+    }
+
+    #[test]
+    fn reconfig_section_decodes() {
+        let doc = crate::util::toml::parse(
+            r#"
+[reconfig]
+enabled = true
+tick_s = 0.5
+hysteresis_ticks = 4
+imbalance_ratio = 2.5
+min_backlog_tokens = 1024
+drain_s = 0.25
+min_dwell_s = 5
+"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&doc).unwrap();
+        let r = &cfg.reconfig;
+        assert!(r.enabled);
+        assert_eq!(r.tick_s, 0.5);
+        assert_eq!(r.hysteresis_ticks, 4);
+        assert_eq!(r.imbalance_ratio, 2.5);
+        assert_eq!(r.min_backlog_tokens, 1024);
+        assert_eq!(r.drain_s, 0.25);
+        assert_eq!(r.min_dwell_s, 5.0);
+    }
+
+    #[test]
+    fn reconfig_rejects_bad_knobs_at_parse_time() {
+        for bad in [
+            "[reconfig]\ntick_s = 0.0\n",
+            "[reconfig]\ntick_s = -1.0\n",
+            "[reconfig]\nhysteresis_ticks = 0\n",
+            "[reconfig]\nhysteresis_ticks = 2.7\n",
+            "[reconfig]\nmin_backlog_tokens = 4096.5\n",
+            "[reconfig]\nimbalance_ratio = -1.0\n",
+            "[reconfig]\nmin_backlog_tokens = -5\n",
+            "[reconfig]\ndrain_s = -0.5\n",
+            "[reconfig]\nmin_dwell_s = -1\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(
+                Config::from_json(&doc).is_err(),
+                "'{bad}' must be a parse error, not a panic or silent thrash"
+            );
+        }
     }
 }

@@ -13,6 +13,11 @@
 //! * [`AdaptiveController`] wraps it with hysteresis so a running system
 //!   only switches when the projected gain clears a threshold (switching
 //!   deployments costs a drain + weight reload in practice).
+//!
+//! This controller operates **between** runs (it re-plans the whole
+//! topology). Its in-flight counterpart is
+//! [`crate::coordinator::reconfig`], which retasks individual instances
+//! while requests are being served.
 
 use crate::config::{Config, ModelDesc, SloSpec, WorkloadSpec};
 use crate::coordinator::deployment::Deployment;

@@ -116,4 +116,35 @@ mod tests {
         let s = InstanceStatus { kv_utilization: 0.5, ..Default::default() };
         assert_eq!(s.load_score(), 0.0);
     }
+
+    #[test]
+    fn equal_scores_from_different_load_shapes_still_tie_break_on_index() {
+        let mut t = StatusTable::new(3);
+        // queue_len 2 ≡ active 4 ≡ pending 8192: all score 2.0.
+        t.update(0, InstanceStatus { pending_tokens: 8192, ..Default::default() });
+        t.update(1, InstanceStatus { active: 4, ..Default::default() });
+        t.update(2, InstanceStatus { queue_len: 2, ..Default::default() });
+        assert_eq!(t.get(0).load_score(), t.get(1).load_score());
+        assert_eq!(t.get(1).load_score(), t.get(2).load_score());
+        assert_eq!(t.least_loaded(&[2, 1, 0]), Some(0), "lowest index wins ties");
+        assert_eq!(t.least_loaded(&[2, 1]), Some(1));
+    }
+
+    #[test]
+    fn tie_break_is_by_index_not_candidate_order() {
+        let t = StatusTable::new(5);
+        // All defaults score 0: whatever order candidates arrive in, the
+        // numerically lowest index must win (determinism across callers
+        // that build candidate sets differently).
+        assert_eq!(t.least_loaded(&[4, 2, 3]), Some(2));
+        assert_eq!(t.least_loaded(&[3, 2, 4]), Some(2));
+        assert_eq!(t.least_loaded(&[2, 3, 4]), Some(2));
+    }
+
+    #[test]
+    fn single_candidate_is_returned_even_when_loaded() {
+        let mut t = StatusTable::new(2);
+        t.update(1, InstanceStatus { queue_len: 99, kv_utilization: 0.99, ..Default::default() });
+        assert_eq!(t.least_loaded(&[1]), Some(1));
+    }
 }

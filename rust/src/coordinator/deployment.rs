@@ -367,4 +367,73 @@ mod tests {
         assert_eq!(d.instances[0].stages, StageSet::ED);
         assert_eq!(d.num_npus(), 2);
     }
+
+    #[test]
+    fn rejects_more_malformed_notation() {
+        for bad in [
+            "E-P-D-",      // trailing empty NPU group
+            "-E-P-D",      // leading empty NPU group
+            "()",          // empty co-location group
+            "(E-P))-D",    // unbalanced closing paren
+            "((E-P))-D",   // nested parens are not part of the grammar
+            "E-PDx0",      // zero replicas
+            "TP17",        // TP degree out of range
+            "TPx",         // TP without a degree
+            "E-PDx",       // dangling replication suffix ('x' is no stage)
+            "D",           // decode alone: no prefill anywhere
+            "P",           // prefill alone: no decode anywhere
+        ] {
+            assert!(Deployment::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn whitespace_and_case_are_tolerated() {
+        let d = Deployment::parse("  (e-p) - d x2 ").unwrap();
+        assert_eq!(d.replicas, 2);
+        assert_eq!(d.npus_per_replica, 2);
+        assert_eq!(d.instances.len(), 6);
+        let tp = Deployment::parse("tp2").unwrap();
+        assert_eq!(tp.tp, 2);
+        // Unicode multiplication sign works like 'x'.
+        assert_eq!(Deployment::parse("E-PD×3").unwrap().replicas, 3);
+    }
+
+    #[test]
+    fn monolithic_vs_disaggregated_detection() {
+        // A bare EPD letter run is a 1-NPU monolith without tensor
+        // parallelism — same coupling as TP1, different notation.
+        let epd = Deployment::parse("EPD").unwrap();
+        assert_eq!(epd.num_npus(), 1);
+        assert_eq!(epd.tp, 1);
+        assert!(epd.instances[0].stages.is_monolithic_epd());
+        assert!(!epd.decode_disaggregated() && !epd.encode_disaggregated());
+
+        // Partial couplings disaggregate exactly one boundary.
+        assert!(Deployment::parse("EP-D").unwrap().decode_disaggregated());
+        assert!(!Deployment::parse("EP-D").unwrap().encode_disaggregated());
+        assert!(Deployment::parse("E-PD").unwrap().encode_disaggregated());
+        assert!(!Deployment::parse("E-PD").unwrap().decode_disaggregated());
+
+        // Full disaggregation severs both, co-located or not.
+        for dep in ["E-P-D", "(E-P)-D", "(E-D)-P", "E-P-D-D"] {
+            let d = Deployment::parse(dep).unwrap();
+            assert!(d.decode_disaggregated() && d.encode_disaggregated(), "{dep}");
+        }
+
+        // A mixed fleet with any coupled-PD instance is not
+        // decode-disaggregated: some decodes bypass the P→D transfer.
+        let mixed = Deployment::parse("E-PD-D").unwrap();
+        assert!(!mixed.decode_disaggregated());
+    }
+
+    #[test]
+    fn replicated_instances_keep_replica_local_npu_indices() {
+        let d = Deployment::parse("E-P-D x3").unwrap();
+        assert_eq!(d.num_npus(), 9);
+        for (idx, inst) in d.instances.iter().enumerate() {
+            assert_eq!(inst.replica, idx / 3);
+            assert_eq!(inst.npu, idx, "E-P-D places one instance per NPU");
+        }
+    }
 }

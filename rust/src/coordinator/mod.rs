@@ -17,6 +17,9 @@
 //!   matching the paper's definitions (§4.1).
 //! * [`adaptive`] — SLO-driven dynamic deployment selection with
 //!   hysteresis (the §3.5 / §4.7 extension).
+//! * [`reconfig`] — runtime elastic re-provisioning: the in-flight
+//!   controller that retasks instances between stage roles while requests
+//!   are being served (drain + migrate + router update).
 //! * [`simserve`] — the full serving system wired onto the discrete-event
 //!   simulator: instances on processor-shared NPUs, MM-Store E-P handoff,
 //!   grouped P-D KV transmission on shared FIFO links, continuous-batching
@@ -27,6 +30,7 @@ pub mod balancer;
 pub mod batcher;
 pub mod deployment;
 pub mod metrics;
+pub mod reconfig;
 pub mod request;
 pub mod router;
 pub mod simserve;

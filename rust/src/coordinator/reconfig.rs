@@ -1,0 +1,485 @@
+//! Runtime elastic stage re-provisioning — in-flight dynamic orchestration.
+//!
+//! The paper's headline flexibility claim is that stage-level disaggregation
+//! lets instances be *dynamically orchestrated*; the [`adaptive`] module
+//! chooses a deployment **between** runs, but nothing in the seed system
+//! could change shape while requests were in flight. This module closes that
+//! gap (in the spirit of ElasticMM's elastic multimodal parallelism and
+//! RServe's overlapped stage transitions): a [`Reconfigurer`] ticks
+//! periodically inside the serving loop, reads per-instance load snapshots
+//! derived from the global status table, and decides when to **retask** a
+//! single-stage instance to a different stage role at runtime.
+//!
+//! The controller is deliberately decoupled from the serving loop — it maps
+//! a slice of [`InstLoad`] snapshots to an optional [`SwitchPlan`] — so its
+//! policy (imbalance detection, hysteresis, dwell) is unit-testable without
+//! a simulation. The serving loop ([`crate::coordinator::simserve`]) owns
+//! the mechanism: queue draining, migrating waiting requests over the
+//! existing E-P / P-D transport paths, router/status-table updates, and the
+//! drain/reload window during which the instance is offline.
+//!
+//! Policy, per tick and per replica:
+//!
+//! 1. Compute each stage's **pressure** = queued-but-unserviceable tokens
+//!    per instance serving that stage (encode: queued visual tokens;
+//!    prefill: queued prompt tokens; decode: context tokens awaiting KV
+//!    admission).
+//! 2. The **target** is the highest-pressure stage, if its pressure clears
+//!    [`ReconfigSpec::min_backlog_tokens`].
+//! 3. The **donor** is the lowest-pressure other stage that still has an
+//!    *idle, retaskable* instance to give — and would retain at least one
+//!    instance afterwards (the router must always find every stage).
+//! 4. The imbalance must persist for
+//!    [`ReconfigSpec::hysteresis_ticks`] consecutive ticks, the
+//!    target/donor pressure ratio must clear
+//!    [`ReconfigSpec::imbalance_ratio`], and at least
+//!    [`ReconfigSpec::min_dwell_s`] must have passed since the last switch.
+//!
+//! [`adaptive`]: crate::coordinator::adaptive
+
+use crate::config::ReconfigSpec;
+use crate::coordinator::deployment::StageSet;
+use crate::npu::StageKind;
+
+/// Per-instance load snapshot the controller reads each tick.
+#[derive(Debug, Clone, Copy)]
+pub struct InstLoad {
+    /// Replica this instance belongs to (switches never cross replicas:
+    /// the E-P and P-D transport paths are per-replica).
+    pub replica: usize,
+    /// The instance's current role in the routed topology.
+    pub stages: StageSet,
+    /// An encode/prefill batch is executing on it right now.
+    pub busy: bool,
+    /// Sequences resident in its decode continuous batch.
+    pub decode_active: usize,
+    /// Queued visual tokens awaiting Encode on this instance.
+    pub encode_backlog: usize,
+    /// Queued prompt tokens awaiting Prefill on this instance.
+    pub prefill_backlog: usize,
+    /// Outstanding decode work parked here: context tokens plus remaining
+    /// output tokens of sequences whose KV arrived but which are not yet
+    /// admitted to the decode batch.
+    pub decode_backlog: usize,
+    /// Mid-switch (draining in-flight work or reloading stage weights).
+    pub switching: bool,
+}
+
+impl InstLoad {
+    /// Total queued work parked on this instance.
+    fn own_backlog(&self) -> usize {
+        self.encode_backlog + self.prefill_backlog + self.decode_backlog
+    }
+
+    /// Eligible to be retasked right now: a settled single-stage instance
+    /// with no batch executing. Queued work and in-flight decode sequences
+    /// are allowed — the serving loop migrates the queues and drains the
+    /// residents overlapped with the switch.
+    fn retaskable(&self) -> bool {
+        let s = self.stages;
+        let single = (s.encode as u8 + s.prefill as u8 + s.decode as u8) == 1;
+        single && !self.busy && !self.switching
+    }
+}
+
+/// A decided role switch, to be executed by the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwitchPlan {
+    /// Instance to retask.
+    pub inst: usize,
+    /// Replica it lives in.
+    pub replica: usize,
+    /// Its current role.
+    pub from: StageSet,
+    /// Its new (single-stage) role.
+    pub to: StageSet,
+}
+
+/// A committed switch, for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchRecord {
+    /// Simulated time the switch started.
+    pub t: f64,
+    /// Instance retasked.
+    pub inst: usize,
+    /// Role before.
+    pub from: StageSet,
+    /// Role after.
+    pub to: StageSet,
+}
+
+/// The elastic re-provisioning controller.
+#[derive(Debug)]
+pub struct Reconfigurer {
+    policy: ReconfigSpec,
+    /// Consecutive ticks the *same* imbalance (keyed below) has persisted.
+    streak: usize,
+    /// Identity of the imbalance the streak counts: (replica, target role).
+    /// A different replica or target stage showing up restarts the streak —
+    /// unrelated transients must not accumulate into one.
+    pending: Option<(usize, StageSet)>,
+    /// Time of the last committed switch.
+    last_switch: f64,
+    /// Every committed switch, in order.
+    pub history: Vec<SwitchRecord>,
+}
+
+const STAGES: [StageKind; 3] = StageKind::ALL;
+
+fn has_stage(s: &StageSet, k: StageKind) -> bool {
+    match k {
+        StageKind::Encode => s.encode,
+        StageKind::Prefill => s.prefill,
+        StageKind::Decode => s.decode,
+    }
+}
+
+fn backlog_for(l: &InstLoad, k: StageKind) -> usize {
+    match k {
+        StageKind::Encode => l.encode_backlog,
+        StageKind::Prefill => l.prefill_backlog,
+        StageKind::Decode => l.decode_backlog,
+    }
+}
+
+fn single_stage_set(k: StageKind) -> StageSet {
+    match k {
+        StageKind::Encode => StageSet::E,
+        StageKind::Prefill => StageSet::P,
+        StageKind::Decode => StageSet::D,
+    }
+}
+
+impl Reconfigurer {
+    pub fn new(policy: ReconfigSpec) -> Self {
+        Self {
+            policy,
+            streak: 0,
+            pending: None,
+            last_switch: f64::NEG_INFINITY,
+            history: Vec::new(),
+        }
+    }
+
+    /// The policy this controller runs.
+    pub fn policy(&self) -> &ReconfigSpec {
+        &self.policy
+    }
+
+    /// Number of committed switches so far.
+    pub fn switches(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Evaluate one controller tick over the cluster snapshot. Returns a
+    /// plan once the imbalance has persisted long enough; the caller must
+    /// execute the migration and then call [`Reconfigurer::committed`].
+    pub fn tick(&mut self, now: f64, loads: &[InstLoad]) -> Option<SwitchPlan> {
+        let replicas = loads.iter().map(|l| l.replica + 1).max().unwrap_or(0);
+        let plan = (0..replicas).find_map(|r| self.eval_replica(r, loads));
+        match plan {
+            None => {
+                self.streak = 0;
+                self.pending = None;
+                None
+            }
+            Some(plan) => {
+                // The streak only counts the SAME imbalance persisting: a
+                // different replica or target stage is a fresh observation.
+                let key = (plan.replica, plan.to);
+                if self.pending == Some(key) {
+                    self.streak += 1;
+                } else {
+                    self.pending = Some(key);
+                    self.streak = 1;
+                }
+                if self.streak < self.policy.hysteresis_ticks {
+                    return None;
+                }
+                // Dwell: keep the streak (the imbalance is real) but hold
+                // fire until the cluster has settled from the last switch.
+                if now - self.last_switch < self.policy.min_dwell_s {
+                    return None;
+                }
+                Some(plan)
+            }
+        }
+    }
+
+    /// Record that the serving loop executed `plan` at time `now`.
+    pub fn committed(&mut self, now: f64, plan: &SwitchPlan) {
+        self.streak = 0;
+        self.pending = None;
+        self.last_switch = now;
+        self.history.push(SwitchRecord { t: now, inst: plan.inst, from: plan.from, to: plan.to });
+    }
+
+    /// Find an imbalance-resolving switch within one replica.
+    fn eval_replica(&self, replica: usize, loads: &[InstLoad]) -> Option<SwitchPlan> {
+        let members: Vec<(usize, &InstLoad)> =
+            loads.iter().enumerate().filter(|(_, l)| l.replica == replica).collect();
+        // Per-stage capacity (instances serving it) and total backlog.
+        let mut capacity = [0usize; 3];
+        let mut backlog = [0usize; 3];
+        for &(_, l) in &members {
+            for (si, &k) in STAGES.iter().enumerate() {
+                if has_stage(&l.stages, k) {
+                    capacity[si] += 1;
+                }
+                backlog[si] += backlog_for(l, k);
+            }
+        }
+        let pressure = |si: usize| -> f64 {
+            if capacity[si] == 0 {
+                0.0
+            } else {
+                backlog[si] as f64 / capacity[si] as f64
+            }
+        };
+
+        // Target: the most-pressured stage with real backlog.
+        let target = (0..3)
+            .filter(|&si| capacity[si] > 0)
+            .max_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(b.cmp(&a)))?;
+        if pressure(target) < self.policy.min_backlog_tokens as f64 {
+            return None;
+        }
+
+        // Donor: the least-pressured other stage that can spare an idle
+        // instance and would keep serving with at least one.
+        let donor_stage = (0..3)
+            .filter(|&si| si != target && capacity[si] >= 2)
+            .filter(|&si| {
+                members.iter().any(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[si]))
+            })
+            .min_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(a.cmp(&b)))?;
+        if pressure(target) < self.policy.imbalance_ratio * pressure(donor_stage).max(1.0) {
+            return None;
+        }
+
+        // Donor instance: least parked work, fewest in-flight decode
+        // sequences, lowest index (determinism).
+        let (inst, load) = members
+            .iter()
+            .filter(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[donor_stage]))
+            .min_by_key(|(i, l)| (l.own_backlog(), l.decode_active, *i))?;
+        Some(SwitchPlan {
+            inst: *inst,
+            replica,
+            from: load.stages,
+            to: single_stage_set(STAGES[target]),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(replica: usize, stages: StageSet) -> InstLoad {
+        InstLoad {
+            replica,
+            stages,
+            busy: false,
+            decode_active: 0,
+            encode_backlog: 0,
+            prefill_backlog: 0,
+            decode_backlog: 0,
+            switching: false,
+        }
+    }
+
+    fn policy() -> ReconfigSpec {
+        ReconfigSpec {
+            enabled: true,
+            tick_s: 1.0,
+            hysteresis_ticks: 2,
+            imbalance_ratio: 3.0,
+            min_backlog_tokens: 1000,
+            drain_s: 0.5,
+            min_dwell_s: 5.0,
+        }
+    }
+
+    /// E-P-D-D with a big encode backlog and an idle second decoder.
+    fn encode_pressured() -> Vec<InstLoad> {
+        let mut v = vec![
+            idle(0, StageSet::E),
+            idle(0, StageSet::P),
+            idle(0, StageSet::D),
+            idle(0, StageSet::D),
+        ];
+        v[0].encode_backlog = 10_000;
+        v
+    }
+
+    #[test]
+    fn hysteresis_delays_then_fires_on_persistent_imbalance() {
+        let mut rc = Reconfigurer::new(policy());
+        let loads = encode_pressured();
+        assert_eq!(rc.tick(0.0, &loads), None, "first imbalanced tick only arms the streak");
+        let plan = rc.tick(1.0, &loads).expect("second consecutive tick fires");
+        assert_eq!(plan.to, StageSet::E);
+        assert_eq!(plan.from, StageSet::D);
+        assert_eq!(plan.inst, 2, "lowest-index idle decoder donates");
+        rc.committed(1.0, &plan);
+        assert_eq!(rc.switches(), 1);
+    }
+
+    #[test]
+    fn transient_spike_resets_the_streak() {
+        let mut rc = Reconfigurer::new(policy());
+        let loads = encode_pressured();
+        assert_eq!(rc.tick(0.0, &loads), None);
+        let calm: Vec<InstLoad> = encode_pressured()
+            .into_iter()
+            .map(|mut l| {
+                l.encode_backlog = 0;
+                l
+            })
+            .collect();
+        assert_eq!(rc.tick(1.0, &calm), None, "imbalance vanished");
+        assert_eq!(rc.tick(2.0, &loads), None, "streak restarted from zero");
+    }
+
+    #[test]
+    fn balanced_or_light_load_never_switches() {
+        let mut rc = Reconfigurer::new(policy());
+        // Light: backlog below the floor.
+        let mut light = encode_pressured();
+        light[0].encode_backlog = 500;
+        for t in 0..10 {
+            assert_eq!(rc.tick(t as f64, &light), None);
+        }
+        // Balanced: everything pressured alike — ratio can't clear.
+        let mut even = encode_pressured();
+        even[1].prefill_backlog = 9_000;
+        even[2].decode_backlog = 9_000;
+        even[3].decode_backlog = 9_000;
+        for t in 0..10 {
+            assert_eq!(rc.tick(t as f64, &even), None);
+        }
+        assert_eq!(rc.switches(), 0);
+    }
+
+    #[test]
+    fn never_donates_the_last_instance_of_a_stage() {
+        let mut rc = Reconfigurer::new(policy());
+        // E-P-D: every stage has exactly one instance — no donor exists.
+        let mut loads =
+            vec![idle(0, StageSet::E), idle(0, StageSet::P), idle(0, StageSet::D)];
+        loads[1].prefill_backlog = 50_000;
+        for t in 0..10 {
+            assert_eq!(rc.tick(t as f64, &loads), None);
+        }
+    }
+
+    #[test]
+    fn dwell_blocks_back_to_back_switches() {
+        let mut rc = Reconfigurer::new(policy());
+        let loads = encode_pressured();
+        rc.tick(0.0, &loads);
+        let plan = rc.tick(1.0, &loads).unwrap();
+        rc.committed(1.0, &plan);
+        // Same persistent imbalance immediately after: dwell must hold fire
+        // even though the hysteresis streak refills.
+        assert_eq!(rc.tick(2.0, &loads), None);
+        assert_eq!(rc.tick(3.0, &loads), None, "streak full but inside dwell");
+        assert!(rc.tick(7.0, &loads).is_some(), "fires again after the dwell window");
+    }
+
+    #[test]
+    fn busy_instances_are_not_donors_but_queued_ones_are() {
+        let mut rc = Reconfigurer::new(policy());
+        let mut loads = encode_pressured();
+        loads[2].busy = true; // decoder 2 mid-batch: untouchable
+        loads[3].decode_backlog = 10; // decoder 3 only has queued work
+        rc.tick(0.0, &loads);
+        let plan = rc.tick(1.0, &loads).expect("queued work migrates, busy work does not");
+        assert_eq!(plan.inst, 3);
+    }
+
+    #[test]
+    fn donor_with_least_parked_work_is_preferred() {
+        let mut rc = Reconfigurer::new(policy());
+        let mut loads = encode_pressured();
+        loads[2].decode_backlog = 500;
+        loads[3].decode_backlog = 5;
+        rc.tick(0.0, &loads);
+        let plan = rc.tick(1.0, &loads).unwrap();
+        assert_eq!(plan.inst, 3, "migrating 5 tokens beats migrating 500");
+    }
+
+    #[test]
+    fn alternating_imbalances_do_not_share_a_streak() {
+        // hysteresis_ticks = 2: one tick of imbalance A followed by one
+        // tick of unrelated imbalance B must NOT fire — the streak is keyed
+        // to (replica, target), not a global counter.
+        let mut rc = Reconfigurer::new(policy());
+        let base = || {
+            vec![
+                idle(0, StageSet::E),
+                idle(0, StageSet::P),
+                idle(0, StageSet::D),
+                idle(0, StageSet::D),
+                idle(1, StageSet::E),
+                idle(1, StageSet::P),
+                idle(1, StageSet::D),
+                idle(1, StageSet::D),
+            ]
+        };
+        let mut a = base();
+        a[0].encode_backlog = 10_000; // replica 0 imbalance
+        let mut b = base();
+        b[4].encode_backlog = 10_000; // replica 1 imbalance
+        assert_eq!(rc.tick(0.0, &a), None, "first tick of A arms A's streak");
+        assert_eq!(rc.tick(1.0, &b), None, "B is one tick old — must not inherit A's streak");
+        let plan = rc.tick(2.0, &b).expect("B persisted for two ticks of its own");
+        assert_eq!(plan.replica, 1);
+    }
+
+    #[test]
+    fn switches_stay_within_a_replica() {
+        let mut rc = Reconfigurer::new(policy());
+        // Replica 0 pressured on encode but has no spare; replica 1 has a
+        // spare decoder but no pressure. Nothing may move across.
+        let mut loads = vec![
+            idle(0, StageSet::E),
+            idle(0, StageSet::P),
+            idle(0, StageSet::D),
+            idle(1, StageSet::E),
+            idle(1, StageSet::P),
+            idle(1, StageSet::D),
+            idle(1, StageSet::D),
+        ];
+        loads[0].encode_backlog = 50_000;
+        for t in 0..10 {
+            assert_eq!(rc.tick(t as f64, &loads), None);
+        }
+        // Pressure replica 1's encoder instead: its own spare decoder moves.
+        loads[0].encode_backlog = 0;
+        loads[3].encode_backlog = 50_000;
+        rc.tick(20.0, &loads);
+        let plan = rc.tick(21.0, &loads).unwrap();
+        assert_eq!(plan.replica, 1);
+        assert_eq!(plan.inst, 5);
+    }
+
+    #[test]
+    fn decode_pressure_pulls_capacity_in() {
+        let mut rc = Reconfigurer::new(policy());
+        // E-E-P-D: image phase ended, decode now drowning, an encoder idles.
+        let mut loads = vec![
+            idle(0, StageSet::E),
+            idle(0, StageSet::E),
+            idle(0, StageSet::P),
+            idle(0, StageSet::D),
+        ];
+        loads[3].decode_backlog = 20_000;
+        rc.tick(0.0, &loads);
+        let plan = rc.tick(1.0, &loads).unwrap();
+        assert_eq!(plan.from, StageSet::E);
+        assert_eq!(plan.to, StageSet::D);
+        assert_eq!(plan.inst, 0);
+    }
+}

@@ -18,6 +18,14 @@
 //!   shared FIFO link (§3.3): under concurrency, exposed transfers contend —
 //!   the congestion the paper's grouped mode avoids.
 //! * **Decode** runs continuous batching with paged-KV admission control.
+//! * When [`crate::config::ReconfigSpec::enabled`] is set, a periodic
+//!   **elastic re-provisioning** tick ([`crate::coordinator::reconfig`])
+//!   watches stage imbalance and retasks instances at runtime: the donor's
+//!   queues drain, waiting requests migrate over the standing E-P (MM-Store
+//!   re-fetch) and P-D (KV link re-transmission) paths, the router's
+//!   candidate sets update immediately, and in-flight decode sequences
+//!   finish on the old role before the instance reloads into the new one
+//!   (an overlapped transition).
 //!
 //! The simulation is deterministic under the config seed.
 
@@ -26,14 +34,15 @@ use crate::coordinator::balancer::{InstanceStatus, StatusTable};
 use crate::coordinator::batcher::{
     decode_admission_quota, form_encode_batch, form_prefill_batch, EncodeItem, PrefillItem,
 };
-use crate::coordinator::deployment::{Deployment, InstanceSpec};
+use crate::coordinator::deployment::{Deployment, InstanceSpec, StageSet};
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
+use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchPlan, SwitchRecord};
 use crate::coordinator::request::{ReqState, Request};
 use crate::coordinator::router::{Route, Router};
 use crate::kvcache::{BlockAllocator, KvManager};
 use crate::mmstore::MmStore;
 use crate::npu::{CostModel, StageKind};
-use crate::sim::engine::{self, EventQueue, SimModel};
+use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::sim::psnpu::{PsNpu, TaskId};
 use crate::transport::ep::{plan_ep_transfer, recompute_cost};
 use crate::transport::link::Link;
@@ -62,6 +71,13 @@ struct Inst {
     /// Incrementally maintained Σ tokens of queued work (avoids an O(queue)
     /// scan on every status-table refresh — see EXPERIMENTS.md §Perf).
     pending_tokens: usize,
+    /// Elastic switch in progress: the role this instance will assume once
+    /// its in-flight work drains (new arrivals already route per the new
+    /// role; the reload happens at drain completion).
+    draining_to: Option<StageSet>,
+    /// Until this time the instance is offline reloading stage weights
+    /// after a completed role switch.
+    offline_until: f64,
 }
 
 impl Inst {
@@ -84,6 +100,13 @@ impl Inst {
     }
 }
 
+/// Size a decode instance's paged-KV pool — one formula shared by boot-time
+/// construction and elastic switches into the decode role.
+fn make_kv(cm: &CostModel, kv_bytes_per_token: usize, tp: usize) -> KvManager {
+    let cap = cm.kv_capacity_bytes(1.0 / tp as f64) * tp as f64;
+    KvManager::new(BlockAllocator::for_capacity(cap, kv_bytes_per_token, 16))
+}
+
 /// Work executing on an NPU.
 enum TaskKind {
     EncodeBatch { inst: usize, reqs: Vec<u64> },
@@ -103,6 +126,8 @@ pub enum Ev {
     KvDelivered { reqs: Vec<u64>, inst: usize },
     /// Try to start work on an instance.
     Kick { inst: usize },
+    /// Periodic elastic re-provisioning controller tick.
+    ReconfigTick,
 }
 
 /// Outcome of a simulated serving run.
@@ -112,6 +137,9 @@ pub struct SimOutcome {
     pub events_processed: u64,
     pub npu_utilization: Vec<f64>,
     pub kv_link_stats: Vec<(f64, f64)>, // (bytes carried, busy time) per replica
+    /// Elastic role switches committed during the run (empty when
+    /// re-provisioning is disabled).
+    pub reconfig_switches: Vec<SwitchRecord>,
 }
 
 /// The serving simulation world.
@@ -132,6 +160,10 @@ pub struct ServingSim {
     done: usize,
     /// Injected MM-Store failure probability (tests/benches).
     store_fail_prob: f64,
+    /// Elastic re-provisioning controller (None when disabled).
+    reconfigurer: Option<Reconfigurer>,
+    /// Its tick source.
+    ticker: Option<Ticker>,
 }
 
 impl ServingSim {
@@ -143,12 +175,7 @@ impl ServingSim {
         let mut instances = Vec::new();
         for spec in &dep.instances {
             let kv = if spec.stages.decode {
-                let cap = cm.kv_capacity_bytes(1.0 / spec.tp as f64) * spec.tp as f64;
-                Some(KvManager::new(BlockAllocator::for_capacity(
-                    cap,
-                    cfg.model.llm.kv_bytes_per_token(),
-                    16,
-                )))
+                Some(make_kv(&cm, cfg.model.llm.kv_bytes_per_token(), spec.tp))
             } else {
                 None
             };
@@ -162,6 +189,8 @@ impl ServingSim {
                 busy: false,
                 decode_running: false,
                 pending_tokens: 0,
+                draining_to: None,
+                offline_until: 0.0,
             });
         }
         let npus = (0..dep.num_npus()).map(|_| PsNpu::new()).collect();
@@ -170,6 +199,14 @@ impl ServingSim {
         let table = StatusTable::new(instances.len());
         let store = MmStore::new(32e9); // 32 GB pooled DRAM/SSD store
         let reqs = arrivals.iter().map(|a| Request::new(a.spec.clone(), a.arrival)).collect();
+        let (reconfigurer, ticker) = if cfg.reconfig.enabled {
+            (
+                Some(Reconfigurer::new(cfg.reconfig.clone())),
+                Some(Ticker::new(cfg.reconfig.tick_s, cfg.reconfig.tick_s)),
+            )
+        } else {
+            (None, None)
+        };
         Ok(Self {
             cfg,
             cm,
@@ -185,6 +222,8 @@ impl ServingSim {
             arrivals,
             done: 0,
             store_fail_prob: 0.0,
+            reconfigurer,
+            ticker,
         })
     }
 
@@ -200,6 +239,9 @@ impl ServingSim {
         let mut q = EventQueue::new();
         for i in 0..self.arrivals.len() {
             q.at(self.arrivals[i].arrival, Ev::Arrive(i));
+        }
+        if let Some(t) = &mut self.ticker {
+            t.arm(&mut q, Ev::ReconfigTick);
         }
         let last_arrival = self.arrivals.last().map(|a| a.arrival).unwrap_or(0.0);
         let horizon = last_arrival + 3600.0;
@@ -238,6 +280,7 @@ impl ServingSim {
             events_processed: q.processed(),
             npu_utilization,
             kv_link_stats: self.kv_links.iter().map(|l| (l.bytes_carried(), l.busy_time())).collect(),
+            reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
         }
     }
 
@@ -300,6 +343,180 @@ impl ServingSim {
         self.table.least_loaded(&cands).expect("deployment validated at parse time")
     }
 
+    /// Is the instance offline reloading stage weights after a role switch?
+    /// (The ns-rounded event clock can land up to half a nanosecond before
+    /// the unrounded deadline, hence the tolerance.)
+    fn offline(&self, inst: usize, now: f64) -> bool {
+        now < self.instances[inst].offline_until - 1e-9
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic re-provisioning (runtime dynamic orchestration)
+    // ------------------------------------------------------------------
+
+    /// One controller tick: snapshot per-instance load, ask the
+    /// [`Reconfigurer`] for a plan, execute it, re-arm the ticker.
+    ///
+    /// The snapshot walks every queue (O(total queued) per tick) rather
+    /// than maintaining per-stage incremental counters like
+    /// `pending_tokens` does for the status table: ticks fire every
+    /// `tick_s` *simulated* seconds (hundreds per run, vs. a table refresh
+    /// per scheduling decision), so the scan is off every hot path and not
+    /// worth three more push/drain-balanced counters.
+    fn on_reconfig_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        let loads: Vec<InstLoad> = self
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| InstLoad {
+                replica: inst.spec.replica,
+                // The routed (desired) role, which may already differ from
+                // the executing role while the instance drains.
+                stages: self.dep.instances[i].stages,
+                busy: inst.busy,
+                decode_active: inst.decode_active.len(),
+                encode_backlog: inst.encode_q.iter().map(|e| e.visual_tokens).sum(),
+                prefill_backlog: inst.prefill_q.iter().map(|p| p.prompt_tokens).sum(),
+                // Waiting decode work = resident context plus the output
+                // tokens still to generate (short-prompt/long-output
+                // traffic is decode work even though its context is tiny).
+                decode_backlog: inst
+                    .decode_waiting
+                    .iter()
+                    .map(|&r| {
+                        let req = &self.reqs[r as usize];
+                        req.ctx_tokens()
+                            + req.spec.output_tokens.saturating_sub(req.tokens_generated)
+                    })
+                    .sum(),
+                switching: inst.draining_to.is_some() || self.offline(i, now),
+            })
+            .collect();
+        let plan = self.reconfigurer.as_mut().expect("tick implies controller").tick(now, &loads);
+        if let Some(plan) = plan {
+            self.apply_switch(&plan, now, q);
+        }
+        self.ticker.as_mut().expect("tick implies ticker").arm(q, Ev::ReconfigTick);
+    }
+
+    /// Execute a role switch: reshape the routed topology, drain the
+    /// donor's queues by migrating waiting work over the standing E-P /
+    /// P-D transport paths, and either complete immediately or let
+    /// in-flight decode sequences finish first (overlapped transition).
+    fn apply_switch(&mut self, plan: &SwitchPlan, now: f64, q: &mut EventQueue<Ev>) {
+        let inst = plan.inst;
+        let replica = self.instances[inst].spec.replica;
+
+        // 1. New arrivals route to the reshaped topology from this instant:
+        //    the deployment's instance table is the routing authority, and
+        //    the router's candidate sets are rebuilt from it.
+        self.dep.instances[inst].stages = plan.to;
+        self.router = Router::new(&self.dep);
+
+        // 2. Drain the donor's queues. Queued encodes only carry request
+        //    metadata (raw inputs are host-side), so they re-queue directly
+        //    on another encoder.
+        let enc_items: Vec<EncodeItem> = self.instances[inst].encode_q.drain(..).collect();
+        for item in enc_items {
+            self.instances[inst].drained(item.visual_tokens);
+            let e_inst = self.pick_instance(replica, |s| s.encode);
+            self.instances[e_inst].push_encode(item);
+            q.at(now, Ev::Kick { inst: e_inst });
+        }
+        //    Queued prefills re-fetch their features at the new prefill
+        //    instance through the MM-Store E-P path (prefetch-overlapped);
+        //    text-only items move as pure metadata.
+        let pre_items: Vec<PrefillItem> = self.instances[inst].prefill_q.drain(..).collect();
+        for item in pre_items {
+            self.instances[inst].drained(item.prompt_tokens);
+            let p_inst = self.pick_instance(replica, |s| s.prefill);
+            let visual = self.reqs[item.req as usize]
+                .spec
+                .image
+                .as_ref()
+                .map(|i| i.visual_tokens)
+                .unwrap_or(0);
+            let delay = if visual > 0 {
+                plan_ep_transfer(&self.cm, visual, self.cfg.scheduler.ep_async_prefetch).exposed
+            } else {
+                0.0
+            };
+            q.at(now + delay, Ev::FeatureReady { req: item.req, inst: p_inst });
+        }
+        //    Sequences whose KV already landed here re-transmit their
+        //    context over the replica's P-D link to the adopting decoder.
+        let waiting: Vec<u64> = self.instances[inst].decode_waiting.drain(..).collect();
+        self.migrate_kv(waiting, replica, now, q);
+
+        // 3. In-flight work (a running E/P batch, resident decode
+        //    sequences) finishes under the old role; the reload happens
+        //    when the last of it drains.
+        self.reconfigurer.as_mut().expect("switch implies controller").committed(now, plan);
+        let busy_now = {
+            let i = &self.instances[inst];
+            i.busy || i.decode_running || !i.decode_active.is_empty()
+        };
+        if busy_now {
+            self.instances[inst].draining_to = Some(plan.to);
+        } else {
+            self.complete_switch(inst, plan.to, now, q);
+        }
+    }
+
+    /// Finish a role switch once the instance has no in-flight work: swap
+    /// the executing role, reshape the KV pool, and take the instance
+    /// offline for the configured reload window.
+    fn complete_switch(&mut self, inst: usize, to: StageSet, now: f64, q: &mut EventQueue<Ev>) {
+        let drain_s = self.cfg.reconfig.drain_s;
+        let kv_bytes_per_token = self.cfg.model.llm.kv_bytes_per_token();
+        let tp = self.instances[inst].spec.tp;
+        let i = &mut self.instances[inst];
+        i.draining_to = None;
+        i.spec.stages = to;
+        if to.decode {
+            if i.kv.is_none() {
+                i.kv = Some(make_kv(&self.cm, kv_bytes_per_token, tp));
+            }
+        } else if let Some(kv) = &i.kv {
+            debug_assert_eq!(kv.num_seqs(), 0, "role switch completed with resident sequences");
+            i.kv = None;
+        }
+        i.offline_until = now + drain_s;
+        q.at(i.offline_until, Ev::Kick { inst });
+    }
+
+    /// Re-transmit the full contexts of `reqs` over the replica's P-D link
+    /// to a freshly chosen decoder. Shared by the switch-time migration of
+    /// decode-waiting sequences and the in-flight `KvDelivered` redirect.
+    fn migrate_kv(&mut self, reqs: Vec<u64>, replica: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let d_inst = self.pick_instance(replica, |s| s.decode);
+        let bytes: f64 = reqs
+            .iter()
+            .map(|&r| {
+                (self.reqs[r as usize].ctx_tokens() * self.cm.model.llm.kv_bytes_per_token())
+                    as f64
+            })
+            .sum();
+        let (_, end) = self.kv_links[replica].enqueue(now, bytes);
+        for &rid in &reqs {
+            self.reqs[rid as usize].state = ReqState::KvTransfer;
+        }
+        q.at(end, Ev::KvDelivered { reqs, inst: d_inst });
+    }
+
+    /// Called whenever in-flight work completes on a draining instance.
+    fn maybe_complete_switch(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if let Some(to) = self.instances[inst].draining_to {
+            let i = &self.instances[inst];
+            if !i.busy && !i.decode_running && i.decode_active.is_empty() {
+                self.complete_switch(inst, to, now, q);
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // Stage dispatch
     // ------------------------------------------------------------------
@@ -309,7 +526,7 @@ impl ServingSim {
     /// decode priority, the vLLM-style policy whose interference the paper
     /// §1 describes); a disaggregated instance only ever has its own stage.
     fn kick(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if self.instances[inst].busy {
+        if self.instances[inst].busy || self.offline(inst, now) {
             return;
         }
         let multi_stage = {
@@ -372,7 +589,10 @@ impl ServingSim {
     }
 
     fn maybe_start_decode_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if !self.instances[inst].spec.stages.decode || self.instances[inst].decode_running {
+        if !self.instances[inst].spec.stages.decode
+            || self.instances[inst].decode_running
+            || self.offline(inst, now)
+        {
             return;
         }
         let multi_stage = {
@@ -455,9 +675,19 @@ impl ServingSim {
             }
         }
         q.at(now, Ev::Kick { inst });
+        self.maybe_complete_switch(inst, now, q);
     }
 
     fn on_feature_ready(&mut self, rid: u64, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        // The target may have been retasked away from Prefill while the
+        // feature was in flight: hand the request to a current prefill
+        // instance instead (the feature travels via the MM Store either way).
+        let inst = if self.dep.instances[inst].stages.prefill {
+            inst
+        } else {
+            let replica = self.instances[inst].spec.replica;
+            self.pick_instance(replica, |s| s.prefill)
+        };
         let r = &mut self.reqs[rid as usize];
         let recompute_tokens = match &r.spec.image {
             Some(img) => {
@@ -547,14 +777,26 @@ impl ServingSim {
             }
         }
         q.at(now, Ev::Kick { inst });
+        self.maybe_complete_switch(inst, now, q);
     }
 
     fn on_kv_delivered(&mut self, reqs: Vec<u64>, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if !self.dep.instances[inst].stages.decode {
+            // The target was retasked away from Decode while the KV was in
+            // flight: re-transmit the contexts over the replica link to an
+            // adopting decoder.
+            let replica = self.instances[inst].spec.replica;
+            self.migrate_kv(reqs, replica, now, q);
+            return;
+        }
         for rid in reqs {
             // First token visible once the decode instance owns the context
             // (disaggregated-path TTFT semantics, matching Table 2's
-            // sensitivity of TTFT to KV transmission).
-            self.reqs[rid as usize].first_token = Some(now);
+            // sensitivity of TTFT to KV transmission). A migrated sequence
+            // keeps its original first-token time.
+            if self.reqs[rid as usize].first_token.is_none() {
+                self.reqs[rid as usize].first_token = Some(now);
+            }
             self.reqs[rid as usize].state = ReqState::AwaitAdmission;
             self.instances[inst].decode_waiting.push_back(rid);
         }
@@ -586,6 +828,7 @@ impl ServingSim {
         }
         self.instances[inst].decode_active = still;
         q.at(now, Ev::Kick { inst });
+        self.maybe_complete_switch(inst, now, q);
     }
 
     fn on_npu_check(&mut self, npu: usize, epoch: u64, now: f64, q: &mut EventQueue<Ev>) {
@@ -657,6 +900,7 @@ impl SimModel for ServingSim {
                 // A freed coupled instance may also resume decode.
                 self.maybe_start_decode_step(inst, now, q);
             }
+            Ev::ReconfigTick => self.on_reconfig_tick(now, q),
         }
     }
 
@@ -808,5 +1052,57 @@ mod tests {
         let disagg = run("EP-D", 2.0, 24);
         assert_eq!(coupled.kv_link_stats[0].0, 0.0, "coupled PD must not use the link");
         assert!(disagg.kv_link_stats[0].0 > 0.0, "EP-D must move KV over the link");
+    }
+
+    #[test]
+    fn reconfig_noop_on_stationary_traffic() {
+        // Stationary moderate load: the controller must stay quiet, and an
+        // enabled-but-silent controller must not perturb the simulation.
+        let mut cfg = quick_cfg("E-P-D-D", 2.0, 48);
+        let baseline = run_serving(&cfg).unwrap();
+        cfg.reconfig.enabled = true;
+        let elastic = run_serving(&cfg).unwrap();
+        assert!(elastic.reconfig_switches.is_empty(), "stationary load must not switch");
+        assert_eq!(baseline.metrics.records, elastic.metrics.records);
+    }
+
+    #[test]
+    fn reconfig_never_fires_on_minimal_deployments() {
+        // E-P-D has exactly one instance per stage: the last-instance guard
+        // must make elasticity a structural no-op even under overload.
+        let mut cfg = quick_cfg("E-P-D", 8.0, 96);
+        cfg.reconfig.enabled = true;
+        let out = run_serving(&cfg).unwrap();
+        assert_eq!(out.metrics.completed(), 96);
+        assert!(out.reconfig_switches.is_empty());
+    }
+
+    #[test]
+    fn phase_shift_triggers_in_flight_reprovisioning() {
+        use crate::coordinator::deployment::StageSet;
+        use crate::workload::phases::{generate_phased, PhasePlan};
+        let mut cfg = Config::default();
+        cfg.deployment = "E-P-D-D".to_string();
+        // Cap encode batches: the ViT's joint-attention cost is quadratic
+        // in batch tokens, and the controller should see queue pressure,
+        // not batching-induced capacity collapse.
+        cfg.scheduler.max_encode_batch = 2;
+        cfg.reconfig.enabled = true;
+        cfg.reconfig.min_backlog_tokens = 6144;
+        // Text-heavy (decode-bound) 60 s, then image-heavy (encode-bound)
+        // 60 s. The first phase fits the initial two decoders; the image
+        // burst then overwhelms the single encoder.
+        let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+        let arrivals = generate_phased(&cfg.workload, &cfg.model.vit, &plan, cfg.seed);
+        let n = arrivals.len();
+        let out = ServingSim::new(cfg, arrivals).unwrap().run();
+        assert_eq!(out.metrics.completed(), n, "migration must not lose requests");
+        assert!(
+            !out.reconfig_switches.is_empty(),
+            "the image burst must trigger in-flight re-provisioning"
+        );
+        let first = &out.reconfig_switches[0];
+        assert_eq!(first.to, StageSet::E, "capacity must move toward the starved encoder");
+        assert!(first.t >= 60.0, "the stationary text phase must not switch");
     }
 }

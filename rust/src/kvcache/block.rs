@@ -7,21 +7,32 @@
 //! completes logically.
 
 use std::collections::VecDeque;
-use thiserror::Error;
+use std::fmt;
 
 /// Index of a block within the pool.
 pub type BlockId = u32;
 
 /// Allocation failures.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum BlockError {
-    #[error("out of KV blocks: requested {requested}, free {free}")]
     OutOfBlocks { requested: usize, free: usize },
-    #[error("block {0} double free")]
     DoubleFree(BlockId),
-    #[error("block {0} not allocated")]
     NotAllocated(BlockId),
 }
+
+impl fmt::Display for BlockError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlockError::OutOfBlocks { requested, free } => {
+                write!(f, "out of KV blocks: requested {requested}, free {free}")
+            }
+            BlockError::DoubleFree(b) => write!(f, "block {b} double free"),
+            BlockError::NotAllocated(b) => write!(f, "block {b} not allocated"),
+        }
+    }
+}
+
+impl std::error::Error for BlockError {}
 
 /// Fixed-capacity ref-counted block pool.
 #[derive(Debug)]

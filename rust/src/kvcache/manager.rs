@@ -2,19 +2,37 @@
 
 use crate::kvcache::block::{BlockAllocator, BlockError, BlockId};
 use std::collections::HashMap;
-use thiserror::Error;
+use std::fmt;
 
 /// Request identifier as used across the coordinator.
 pub type SeqId = u64;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("sequence {0} already registered")]
     Duplicate(SeqId),
-    #[error("sequence {0} unknown")]
     Unknown(SeqId),
-    #[error(transparent)]
-    Block(#[from] BlockError),
+    Block(BlockError),
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::Duplicate(id) => write!(f, "sequence {id} already registered"),
+            KvError::Unknown(id) => write!(f, "sequence {id} unknown"),
+            KvError::Block(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+// The `Block` variant is transparent: its Display IS the inner error's, so
+// it deliberately reports no `source()` (which would duplicate the message
+// in context chains).
+impl std::error::Error for KvError {}
+
+impl From<BlockError> for KvError {
+    fn from(e: BlockError) -> Self {
+        KvError::Block(e)
+    }
 }
 
 #[derive(Debug)]

@@ -5,31 +5,37 @@
 //! Multimodal EPD Disaggregation Inference Serving System On Ascend"*
 //! (CS.DC 2026).
 //!
-//! The library is organized in three layers (see `DESIGN.md`):
+//! The library is organized in three layers (see `docs/ARCHITECTURE.md` for
+//! the full request lifecycle and the paper-section → module map):
 //!
 //! * **Layer 3** (this crate): the serving coordinator — modality-aware
 //!   routing, instance-level load balancing, continuous batching, paged KV
-//!   cache management, the MM-Store multimodal feature pool, and the two
+//!   cache management, the MM-Store multimodal feature pool, the two
 //!   cross-stage transmission engines (E-P asynchronous feature prefetching,
-//!   P-D hierarchically grouped KV transmission). Because the paper's Ascend
-//!   testbed is not available, stage execution is pluggable: either a
-//!   calibrated discrete-event **NPU simulator** ([`npu`], [`sim`]) or a
-//!   **real CPU-PJRT engine** ([`engine`], [`runtime`]) running a tiny
-//!   JAX/Pallas multimodal model AOT-compiled to HLO.
+//!   P-D hierarchically grouped KV transmission), and runtime **elastic
+//!   stage re-provisioning** ([`coordinator::reconfig`]). Because the
+//!   paper's Ascend testbed is not available, stage execution is pluggable:
+//!   either a calibrated discrete-event **NPU simulator** ([`npu`], [`sim`])
+//!   or a **real CPU-PJRT engine** (`engine`/`runtime`, behind the `pjrt`
+//!   feature) running a tiny JAX/Pallas multimodal model AOT-compiled to
+//!   HLO.
 //! * **Layer 2** (`python/compile/model.py`): the JAX model (ViT encoder +
 //!   decoder LM) lowered once at build time.
 //! * **Layer 1** (`python/compile/kernels/`): Pallas attention kernels.
 //!
 //! Entry points: the `epd-serve` binary (`rust/src/main.rs`), the examples
-//! under `examples/`, and the per-table/figure benches under `rust/benches/`.
+//! under `examples/`, and the per-table/figure benches under `rust/benches/`
+//! (the README tables map each bench to the paper artifact it reproduces).
 
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kvcache;
 pub mod mmstore;
 pub mod npu;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod testkit;

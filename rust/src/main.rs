@@ -170,10 +170,19 @@ fn trace(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn serve(cfg: &Config, args: &epd_serve::util::cli::Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap();
     let n = args.get_usize("requests").unwrap_or(16).min(64);
     let report = epd_serve::engine::serve_real_workload(dir, cfg, n)?;
     println!("{}", report.to_string_pretty());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve(_cfg: &Config, _args: &epd_serve::util::cli::Args) -> Result<()> {
+    bail!(
+        "the real-engine path is not compiled in; rebuild with `--features pjrt` \
+         (requires a local `xla` PJRT crate — see README \"Real-engine path\")"
+    )
 }

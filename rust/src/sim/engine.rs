@@ -112,6 +112,49 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// A recurring control-plane event source (e.g. the elastic-reconfiguration
+/// tick): each call to [`Ticker::arm`] schedules the event at the next slot
+/// of a fixed phase grid, so tick boundaries stay periodic no matter how
+/// long the handler takes or how late it re-arms.
+///
+/// The model owns the `Ticker` and re-arms it from its event handler; the
+/// queue itself never clones events, so recurrence stays a model-side
+/// decision (and naturally stops when the model stops re-arming, e.g. once
+/// [`SimModel::done`] is about to hold).
+#[derive(Debug, Clone)]
+pub struct Ticker {
+    period_ns: u64,
+    next_ns: u64,
+}
+
+impl Ticker {
+    /// A ticker firing at `start + k·period` seconds, `k = 0, 1, 2, …`.
+    pub fn new(start: f64, period: f64) -> Self {
+        assert!(period > 0.0, "tick period must be positive");
+        Self {
+            period_ns: (period * 1e9).round().max(1.0) as u64,
+            next_ns: (start.max(0.0) * 1e9).round() as u64,
+        }
+    }
+
+    /// Next fire time, seconds.
+    pub fn next(&self) -> f64 {
+        self.next_ns as f64 / 1e9
+    }
+
+    /// Schedule `event` at the next grid slot not earlier than the queue's
+    /// current time, then advance the grid. Returns the scheduled time.
+    pub fn arm<E>(&mut self, q: &mut EventQueue<E>, event: E) -> f64 {
+        while self.next_ns < q.now_ns {
+            self.next_ns += self.period_ns;
+        }
+        let t = self.next_ns as f64 / 1e9;
+        q.at(t, event);
+        self.next_ns += self.period_ns;
+        t
+    }
+}
+
 /// A simulation model: reacts to events, schedules follow-ups.
 pub trait SimModel {
     type Event;
@@ -226,6 +269,44 @@ mod tests {
         let mut m = Recorder { seen: vec![], stop_after: 3 };
         run(&mut m, &mut q, f64::INFINITY);
         assert_eq!(m.seen.len(), 3);
+    }
+
+    #[test]
+    fn ticker_fires_on_a_fixed_grid() {
+        struct Periodic {
+            ticker: Ticker,
+            fired: Vec<f64>,
+            limit: usize,
+        }
+        impl SimModel for Periodic {
+            type Event = Ev;
+            fn handle(&mut self, now: f64, _ev: Ev, q: &mut EventQueue<Ev>) {
+                self.fired.push(now);
+                if self.fired.len() < self.limit {
+                    self.ticker.arm(q, Ev::Tick(0));
+                }
+            }
+        }
+        let mut q = EventQueue::new();
+        let mut m = Periodic { ticker: Ticker::new(0.5, 2.0), fired: vec![], limit: 4 };
+        m.ticker.arm(&mut q, Ev::Tick(0));
+        run(&mut m, &mut q, f64::INFINITY);
+        assert_eq!(m.fired, vec![0.5, 2.5, 4.5, 6.5]);
+    }
+
+    #[test]
+    fn ticker_skips_missed_slots_without_bunching() {
+        // If the model re-arms late (virtual time already past several
+        // slots), the ticker must jump to the next future slot rather than
+        // deliver a burst of stale ticks.
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        q.at(10.0, Ev::Tick(1));
+        let (now, _) = q.pop().unwrap();
+        assert_eq!(now, 10.0);
+        let mut t = Ticker::new(0.0, 3.0);
+        let fired_at = t.arm(&mut q, Ev::Tick(2));
+        assert_eq!(fired_at, 12.0, "next grid slot after t=10 on a 3s grid");
+        assert_eq!(t.next(), 15.0);
     }
 
     #[test]

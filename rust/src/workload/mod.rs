@@ -7,6 +7,7 @@
 //! [`crate::config::WorkloadSpec`] captures and [`generate`] samples.
 
 pub mod injector;
+pub mod phases;
 pub mod trace;
 
 use crate::config::{VitDesc, WorkloadSpec};
@@ -62,36 +63,51 @@ pub fn generate(spec: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Vec<RequestSpe
     // Pool size chosen so Zipf head-mass ≈ requested reuse probability.
     let pool = ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64;
     for id in 0..spec.num_requests as u64 {
-        let has_image = rng.chance(spec.image_fraction);
-        let image = if has_image {
-            let image_id = rng.zipf(pool, 1.2);
-            let (w, h) = if spec.fixed_resolution {
-                (spec.image_width, spec.image_height)
-            } else {
-                // Mild log-normal jitter around the dataset's mean
-                // resolution — derived from the *image id*, so repeated
-                // images keep their resolution (and thus their content key,
-                // enabling MM-Store cross-request reuse).
-                let mut jrng = Rng::with_stream(seed ^ image_id.wrapping_mul(0x9e3779b9), 0x1e5);
-                let jw = jrng.lognormal(0.0, 0.25);
-                let jh = jrng.lognormal(0.0, 0.25);
-                let w = ((spec.image_width as f64 * jw) as u32).clamp(140, 4096);
-                let h = ((spec.image_height as f64 * jh) as u32).clamp(140, 4096);
-                (w / 14 * 14, h / 14 * 14)
-            };
-            let key = hash::image_key(&spec.name, image_id, w, h);
-            let visual_tokens = vit.visual_tokens(w, h);
-            Some(ImageInput { width: w, height: h, key, visual_tokens })
-        } else {
-            None
-        };
-        // Text length: log-normal with the dataset mean, ≥1 token.
-        let sigma: f64 = 0.6;
-        let mu = spec.text_tokens_mean.ln() - sigma * sigma / 2.0;
-        let text_tokens = rng.lognormal(mu, sigma).round().max(1.0) as usize;
-        out.push(RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens });
+        out.push(sample_spec(id, &mut rng, spec, vit, pool, seed));
     }
     out
+}
+
+/// Sample one request from the dataset statistics. Shared by [`generate`]
+/// and the phase-shifting generator ([`phases::generate_phased`]); the RNG
+/// draw order is part of the determinism contract, so both produce the same
+/// stream-stable results.
+pub(crate) fn sample_spec(
+    id: u64,
+    rng: &mut Rng,
+    spec: &WorkloadSpec,
+    vit: &VitDesc,
+    pool: u64,
+    seed: u64,
+) -> RequestSpec {
+    let has_image = rng.chance(spec.image_fraction);
+    let image = if has_image {
+        let image_id = rng.zipf(pool, 1.2);
+        let (w, h) = if spec.fixed_resolution {
+            (spec.image_width, spec.image_height)
+        } else {
+            // Mild log-normal jitter around the dataset's mean
+            // resolution — derived from the *image id*, so repeated
+            // images keep their resolution (and thus their content key,
+            // enabling MM-Store cross-request reuse).
+            let mut jrng = Rng::with_stream(seed ^ image_id.wrapping_mul(0x9e3779b9), 0x1e5);
+            let jw = jrng.lognormal(0.0, 0.25);
+            let jh = jrng.lognormal(0.0, 0.25);
+            let w = ((spec.image_width as f64 * jw) as u32).clamp(140, 4096);
+            let h = ((spec.image_height as f64 * jh) as u32).clamp(140, 4096);
+            (w / 14 * 14, h / 14 * 14)
+        };
+        let key = hash::image_key(&spec.name, image_id, w, h);
+        let visual_tokens = vit.visual_tokens(w, h);
+        Some(ImageInput { width: w, height: h, key, visual_tokens })
+    } else {
+        None
+    };
+    // Text length: log-normal with the dataset mean, ≥1 token.
+    let sigma: f64 = 0.6;
+    let mu = spec.text_tokens_mean.ln() - sigma * sigma / 2.0;
+    let text_tokens = rng.lognormal(mu, sigma).round().max(1.0) as usize;
+    RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens }
 }
 
 #[cfg(test)]

@@ -1,0 +1,268 @@
+//! Phase-shifting bursty workloads — non-stationary traffic for the elastic
+//! orchestration experiments.
+//!
+//! The paper's datasets are stationary mixes; real multimodal traffic is
+//! not (ElasticMM's motivating observation). This generator produces
+//! open-loop arrivals whose **modality mix, rate, prompt length, and output
+//! length all shift between phases** — e.g. alternating text-heavy
+//! (decode-bound: short prompts, long generations) and image-heavy
+//! (encode-bound: every request carries an image) phases — so a fixed
+//! topology is wrong in at least one phase and runtime re-provisioning
+//! ([`crate::coordinator::reconfig`]) has something to win.
+//!
+//! Deterministic under the seed, like every other generator in this crate.
+
+use crate::config::{VitDesc, WorkloadSpec};
+use crate::util::rng::Rng;
+use crate::workload::{sample_spec, ArrivedRequest};
+
+/// One traffic phase: a stretch of Poisson arrivals with its own rate and
+/// request-shape overrides on top of the base dataset statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    /// Phase length, seconds.
+    pub duration_s: f64,
+    /// Offered load during the phase, req/s.
+    pub rate: f64,
+    /// Fraction of requests carrying an image (overrides the base spec).
+    pub image_fraction: f64,
+    /// Override of the mean text prompt length, tokens.
+    pub text_tokens_mean: Option<f64>,
+    /// Override of the output length, tokens.
+    pub output_tokens: Option<usize>,
+}
+
+/// A cyclic schedule of phases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhasePlan {
+    /// Phases of one cycle, in order.
+    pub phases: Vec<Phase>,
+    /// How many times the cycle repeats.
+    pub cycles: usize,
+}
+
+impl PhasePlan {
+    /// The canonical elastic-orchestration scenario: alternating
+    /// **text-heavy** phases (no images, short prompts, long 512-token
+    /// generations — decode-bound) and **image-heavy** phases (every
+    /// request carries an image, dataset-default prompt/output — bound by
+    /// the encoder).
+    pub fn text_image_alternating(
+        phase_s: f64,
+        text_rate: f64,
+        image_rate: f64,
+        cycles: usize,
+    ) -> Self {
+        Self {
+            phases: vec![
+                Phase {
+                    duration_s: phase_s,
+                    rate: text_rate,
+                    image_fraction: 0.0,
+                    text_tokens_mean: Some(30.0),
+                    output_tokens: Some(512),
+                },
+                Phase {
+                    duration_s: phase_s,
+                    rate: image_rate,
+                    image_fraction: 1.0,
+                    text_tokens_mean: None,
+                    output_tokens: None,
+                },
+            ],
+            cycles,
+        }
+    }
+
+    /// Length of one cycle, seconds.
+    pub fn cycle_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration_s).sum()
+    }
+
+    /// Total schedule length, seconds.
+    pub fn total_s(&self) -> f64 {
+        self.cycle_s() * self.cycles as f64
+    }
+
+    /// Expected number of arrivals over the whole schedule.
+    pub fn expected_requests(&self) -> usize {
+        let per_cycle: f64 = self.phases.iter().map(|p| p.rate * p.duration_s).sum();
+        (per_cycle * self.cycles as f64).round() as usize
+    }
+}
+
+/// Sample the phased arrival stream. Request ids are assigned in arrival
+/// order (the serving simulator indexes requests by id). The Zipf image
+/// pool is sized from the expected request count exactly like
+/// [`crate::workload::generate`] sizes it from `num_requests`, so
+/// cross-request MM-Store reuse statistics carry over.
+pub fn generate_phased(
+    base: &WorkloadSpec,
+    vit: &VitDesc,
+    plan: &PhasePlan,
+    seed: u64,
+) -> Vec<ArrivedRequest> {
+    let mut rng = Rng::with_stream(seed, 0x9a5e);
+    let pool =
+        ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
+    let mut out = Vec::with_capacity(plan.expected_requests());
+    let mut phase_start = 0.0f64;
+    let mut id = 0u64;
+    for _ in 0..plan.cycles {
+        for phase in &plan.phases {
+            let mut spec = base.clone();
+            spec.image_fraction = phase.image_fraction;
+            if let Some(m) = phase.text_tokens_mean {
+                spec.text_tokens_mean = m;
+            }
+            if let Some(o) = phase.output_tokens {
+                spec.output_tokens = o;
+            }
+            // A zero-rate phase is a quiet interval: no arrivals, just time.
+            if phase.rate <= 0.0 {
+                phase_start += phase.duration_s;
+                continue;
+            }
+            let mut t = phase_start;
+            loop {
+                t += rng.exp(phase.rate);
+                if t >= phase_start + phase.duration_s {
+                    break;
+                }
+                out.push(ArrivedRequest {
+                    spec: sample_spec(id, &mut rng, &spec, vit, pool, seed),
+                    arrival: t,
+                });
+                id += 1;
+            }
+            phase_start += phase.duration_s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+
+    fn vit() -> VitDesc {
+        ModelDesc::openpangu_7b_vl().vit
+    }
+
+    fn plan() -> PhasePlan {
+        PhasePlan::text_image_alternating(30.0, 6.0, 8.0, 2)
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let base = WorkloadSpec::sharegpt4o();
+        let a = generate_phased(&base, &vit(), &plan(), 7);
+        let b = generate_phased(&base, &vit(), &plan(), 7);
+        let c = generate_phased(&base, &vit(), &plan(), 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_with_sequential_ids() {
+        let arrived = generate_phased(&WorkloadSpec::sharegpt4o(), &vit(), &plan(), 3);
+        for w in arrived.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for (i, a) in arrived.iter().enumerate() {
+            assert_eq!(a.spec.id, i as u64, "ids must follow arrival order");
+        }
+        assert!(arrived.last().unwrap().arrival < plan().total_s());
+    }
+
+    #[test]
+    fn phases_shape_the_traffic() {
+        let p = plan();
+        let arrived = generate_phased(&WorkloadSpec::sharegpt4o(), &vit(), &p, 11);
+        // Text phases: [0,30) and [60,90) — no images, long outputs.
+        // Image phases: [30,60) and [90,120) — all images, default outputs.
+        for a in &arrived {
+            let in_text = (a.arrival % p.cycle_s()) < 30.0;
+            if in_text {
+                assert!(a.spec.image.is_none(), "text phase carries no images");
+                assert_eq!(a.spec.output_tokens, 512);
+            } else {
+                assert!(a.spec.image.is_some(), "image phase is fully multimodal");
+                assert_eq!(a.spec.output_tokens, 64);
+            }
+        }
+        let texts = arrived.iter().filter(|a| a.spec.image.is_none()).count();
+        let images = arrived.len() - texts;
+        // 6 req/s × 60 s vs 8 req/s × 60 s, ± Poisson noise.
+        assert!((250..=470).contains(&texts), "text count {texts}");
+        assert!((350..=610).contains(&images), "image count {images}");
+    }
+
+    #[test]
+    fn expected_requests_matches_rates() {
+        let p = plan();
+        assert_eq!(p.expected_requests(), (6.0 * 60.0 + 8.0 * 60.0) as usize);
+        assert_eq!(p.total_s(), 120.0);
+        let n = generate_phased(&WorkloadSpec::sharegpt4o(), &vit(), &p, 5).len();
+        let expect = p.expected_requests();
+        assert!(
+            (n as f64 - expect as f64).abs() < expect as f64 * 0.25,
+            "sampled {n} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn zero_rate_phase_is_a_quiet_interval() {
+        let p = PhasePlan {
+            phases: vec![
+                Phase {
+                    duration_s: 10.0,
+                    rate: 5.0,
+                    image_fraction: 0.0,
+                    text_tokens_mean: None,
+                    output_tokens: None,
+                },
+                Phase {
+                    duration_s: 20.0,
+                    rate: 0.0,
+                    image_fraction: 0.0,
+                    text_tokens_mean: None,
+                    output_tokens: None,
+                },
+            ],
+            cycles: 2,
+        };
+        let arrived = generate_phased(&WorkloadSpec::sharegpt4o(), &vit(), &p, 13);
+        assert!(!arrived.is_empty());
+        // Quiet windows [10,30) and [40,60) must contain no arrivals.
+        for a in &arrived {
+            let in_cycle = a.arrival % 30.0;
+            assert!(in_cycle < 10.0, "arrival at {} falls in a quiet phase", a.arrival);
+        }
+    }
+
+    #[test]
+    fn stationary_plan_matches_dataset_statistics() {
+        // A one-phase plan is just an open-loop Poisson run of the base
+        // dataset (modulo the phase's image fraction).
+        let p = PhasePlan {
+            phases: vec![Phase {
+                duration_s: 100.0,
+                rate: 4.0,
+                image_fraction: 1.0,
+                text_tokens_mean: None,
+                output_tokens: None,
+            }],
+            cycles: 1,
+        };
+        let arrived = generate_phased(&WorkloadSpec::sharegpt4o(), &vit(), &p, 9);
+        assert!(arrived.iter().all(|a| a.spec.image.is_some()));
+        let mean_w: f64 = arrived
+            .iter()
+            .map(|a| a.spec.image.as_ref().unwrap().width as f64)
+            .sum::<f64>()
+            / arrived.len() as f64;
+        assert!((650.0..950.0).contains(&mean_w), "mean width {mean_w}");
+    }
+}

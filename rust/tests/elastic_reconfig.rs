@@ -1,0 +1,130 @@
+//! Integration tests for runtime elastic re-provisioning: phase-shifting
+//! traffic through the full simulated serving stack, with in-flight role
+//! switches, queue draining, and request migration.
+
+use epd_serve::config::{Config, ReconfigSpec};
+use epd_serve::coordinator::deployment::StageSet;
+use epd_serve::coordinator::simserve::{ServingSim, SimOutcome};
+use epd_serve::workload::phases::{generate_phased, PhasePlan};
+use epd_serve::workload::ArrivedRequest;
+
+fn phased_cfg(elastic: bool) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-D".to_string();
+    cfg.scheduler.max_encode_batch = 2;
+    cfg.reconfig = ReconfigSpec {
+        enabled: elastic,
+        min_backlog_tokens: 6144,
+        ..ReconfigSpec::default()
+    };
+    cfg
+}
+
+fn phased_arrivals(cfg: &Config, plan: &PhasePlan) -> Vec<ArrivedRequest> {
+    generate_phased(&cfg.workload, &cfg.model.vit, plan, cfg.seed)
+}
+
+fn run(elastic: bool, plan: &PhasePlan) -> SimOutcome {
+    let cfg = phased_cfg(elastic);
+    let arrivals = phased_arrivals(&cfg, plan);
+    ServingSim::new(cfg, arrivals).unwrap().run()
+}
+
+#[test]
+fn elastic_adapts_across_phase_flips_without_losing_requests() {
+    // [text 45 s, image 45 s] × 2: the text phases fit the initial two
+    // decoders; each image burst starves the single encoder; the following
+    // text burst then saturates the single remaining decoder.
+    let plan = PhasePlan::text_image_alternating(45.0, 6.5, 11.0, 2);
+    let out = run(true, &plan);
+    assert_eq!(
+        out.metrics.completed(),
+        out.metrics.records.len(),
+        "migration across switches must not lose or deadlock requests"
+    );
+    assert!(
+        out.reconfig_switches.len() >= 2,
+        "expected at least one switch per direction, got {:?}",
+        out.reconfig_switches
+    );
+    // The first switch reacts to the first image burst: capacity moves to
+    // the encoder, donated by one of the two decoders.
+    let first = &out.reconfig_switches[0];
+    assert_eq!(first.to, StageSet::E);
+    assert_eq!(first.from, StageSet::D);
+    assert!(
+        first.t >= 45.0,
+        "the in-capacity text phase must not trigger: t={}",
+        first.t
+    );
+    // Some later switch must move capacity back toward decode.
+    assert!(
+        out.reconfig_switches.iter().any(|s| s.to == StageSet::D),
+        "the text phase after a donation must pull decode capacity back: {:?}",
+        out.reconfig_switches
+    );
+    // Switches respect the configured dwell.
+    let policy = ReconfigSpec::default();
+    for w in out.reconfig_switches.windows(2) {
+        assert!(
+            w[1].t - w[0].t >= policy.min_dwell_s - 1e-9,
+            "dwell violated: {:?}",
+            out.reconfig_switches
+        );
+    }
+}
+
+#[test]
+fn elastic_runs_are_deterministic() {
+    let plan = PhasePlan::text_image_alternating(40.0, 6.5, 11.0, 1);
+    let a = run(true, &plan);
+    let b = run(true, &plan);
+    assert_eq!(a.metrics.records, b.metrics.records);
+    assert_eq!(a.reconfig_switches, b.reconfig_switches);
+    assert_eq!(a.events_processed, b.events_processed);
+}
+
+#[test]
+fn elasticity_beats_the_frozen_topology_on_phase_shifts() {
+    let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 2);
+    let frozen = run(false, &plan);
+    let elastic = run(true, &plan);
+    let n = frozen.metrics.records.len();
+    assert_eq!(frozen.metrics.completed(), n);
+    assert_eq!(elastic.metrics.completed(), n);
+    // The frozen topology's single encoder backlogs through every image
+    // burst; the elastic one reshapes. SLO-qualified throughput is the
+    // paper's end-to-end metric and must improve decisively; raw
+    // throughput must not regress.
+    assert!(
+        elastic.metrics.effective_throughput() > frozen.metrics.effective_throughput(),
+        "elastic {} vs frozen {}",
+        elastic.metrics.effective_throughput(),
+        frozen.metrics.effective_throughput()
+    );
+    assert!(
+        elastic.metrics.throughput() >= frozen.metrics.throughput() * 0.98,
+        "elastic raw throughput must not regress: {} vs {}",
+        elastic.metrics.throughput(),
+        frozen.metrics.throughput()
+    );
+    assert!(
+        elastic.metrics.mean_ttft_ms() < frozen.metrics.mean_ttft_ms(),
+        "shedding the encode backlog must show up in TTFT: {} vs {}",
+        elastic.metrics.mean_ttft_ms(),
+        frozen.metrics.mean_ttft_ms()
+    );
+}
+
+#[test]
+fn trace_replay_is_exact_with_elasticity_enabled() {
+    // The elastic path must preserve the replayability contract: same
+    // arrivals, same config → identical records and switch history.
+    let plan = PhasePlan::text_image_alternating(30.0, 6.5, 11.0, 1);
+    let cfg = phased_cfg(true);
+    let arrivals = phased_arrivals(&cfg, &plan);
+    let a = ServingSim::new(cfg.clone(), arrivals.clone()).unwrap().run();
+    let b = ServingSim::new(cfg, arrivals).unwrap().run();
+    assert_eq!(a.metrics.records, b.metrics.records);
+    assert_eq!(a.reconfig_switches, b.reconfig_switches);
+}
