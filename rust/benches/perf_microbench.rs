@@ -1,4 +1,4 @@
-//! Performance microbenches for the L3 hot paths (EXPERIMENTS.md §Perf).
+//! Performance microbenches for the L3 hot paths (docs/PERFORMANCE.md).
 //!
 //! Targets (DESIGN.md §9): the sim engine must process ≥1 M events/s so the
 //! simulator is never the bottleneck of a bench sweep; allocator, RNG and

@@ -1,0 +1,159 @@
+//! **Simulator hot-path throughput**: drive a ≥1M-request trace through a
+//! Table 5-style `E-P-D` deployment and measure how fast the discrete-event
+//! core itself runs — wall-clock seconds, events/s, events-per-request —
+//! plus a decode-heavy fused-vs-unfused comparison that quantifies what
+//! decode macro-stepping saves (`docs/PERFORMANCE.md`).
+//!
+//! Unlike the per-table/figure benches (which reproduce paper artifacts and
+//! dump under `bench_results/`), this bench *additionally* writes
+//! `BENCH_sim_throughput.json` at the repository root: the perf trajectory
+//! file CI and future optimization PRs track.
+//!
+//! Flags: `--requests N` (default 1 000 000), `--ratio-requests N`
+//! (default 10 000), `--deployment D` (default `E-P-D`).
+
+use epd_serve::bench::{print_table, save_json};
+use epd_serve::config::Config;
+use epd_serve::coordinator::simserve::{run_serving, SimOutcome};
+use epd_serve::util::cli::Cli;
+use epd_serve::util::json::Json;
+use std::time::Instant;
+
+/// Walk up from the working directory to the repository root (the directory
+/// holding ROADMAP.md); fall back to the working directory.
+fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
+fn timed(cfg: &Config) -> anyhow::Result<(SimOutcome, f64)> {
+    let t0 = Instant::now();
+    let out = run_serving(cfg)?;
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "sim_throughput",
+        "million-request hot-path throughput of the serving simulator",
+    )
+    .opt_default("requests", "1000000", "requests in the main throughput run")
+    .opt_default("ratio-requests", "10000", "requests in the fused-vs-baseline comparison")
+    .opt_default("deployment", "E-P-D", "deployment notation for the main run")
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .parse_env();
+    let requests = args.get_usize("requests").unwrap();
+    let ratio_requests = args.get_usize("ratio-requests").unwrap();
+    let deployment = args.get("deployment").unwrap().to_string();
+
+    // ------------------------------------------------------------------
+    // 1. Main run: Table 5 champion shape (E-P-D, ShareGPT-4o, 10 req/s
+    //    total) scaled from 512 requests to `requests`.
+    // ------------------------------------------------------------------
+    let mut cfg = Config::default();
+    cfg.deployment = deployment.clone();
+    cfg.rate = 10.0;
+    cfg.workload.num_requests = requests;
+    let (main_out, main_wall) = timed(&cfg)?;
+    assert_eq!(
+        main_out.metrics.completed(),
+        requests,
+        "the trace must complete inside the horizon"
+    );
+    let main_epr = main_out.events_processed as f64 / requests as f64;
+    let main_eps = main_out.events_processed as f64 / main_wall.max(1e-9);
+
+    // ------------------------------------------------------------------
+    // 2. Decode-heavy fused-vs-baseline: long generations at light load,
+    //    where per-token heap events dominate the unfused simulator.
+    // ------------------------------------------------------------------
+    let mut heavy = Config::default();
+    heavy.deployment = "E-P-D".to_string();
+    heavy.rate = 2.0;
+    heavy.workload.num_requests = ratio_requests;
+    heavy.workload.image_fraction = 0.0; // text-only: isolates the P→D→decode path
+    heavy.workload.output_tokens = 256;
+    let (fused_out, fused_wall) = timed(&heavy)?;
+    heavy.scheduler.fuse_decode_steps = false;
+    let (unfused_out, unfused_wall) = timed(&heavy)?;
+    assert_eq!(
+        fused_out.metrics.records, unfused_out.metrics.records,
+        "macro-stepping must be record-bit-identical to the per-token baseline"
+    );
+    let fused_epr = fused_out.events_processed as f64 / ratio_requests as f64;
+    let unfused_epr = unfused_out.events_processed as f64 / ratio_requests as f64;
+    let ratio = unfused_epr / fused_epr.max(1e-9);
+
+    print_table(
+        &format!("sim_throughput — {deployment}, {requests} requests @ 10 req/s"),
+        &["metric", "value"],
+        &[
+            vec!["wall-clock".into(), format!("{main_wall:.2} s")],
+            vec!["events processed".into(), format!("{}", main_out.events_processed)],
+            vec!["events/s".into(), format!("{:.2} M", main_eps / 1e6)],
+            vec!["events/request".into(), format!("{main_epr:.1}")],
+            vec!["fused decode steps".into(), format!("{}", main_out.fused_decode_steps)],
+            vec!["requests/s (wall)".into(), format!("{:.0}", requests as f64 / main_wall.max(1e-9))],
+        ],
+    );
+    print_table(
+        &format!("decode-heavy macro-stepping ({ratio_requests} requests, 256 output tokens)"),
+        &["mode", "events/request", "wall s"],
+        &[
+            vec!["fused (default)".into(), format!("{fused_epr:.1}"), format!("{fused_wall:.2}")],
+            vec!["per-token baseline".into(), format!("{unfused_epr:.1}"), format!("{unfused_wall:.2}")],
+            vec!["reduction".into(), format!("{ratio:.1}×"), String::new()],
+        ],
+    );
+    assert!(
+        ratio >= 3.0,
+        "events-per-request must drop ≥3× on decode-heavy traffic (got {ratio:.2}×)"
+    );
+
+    // ------------------------------------------------------------------
+    // 3. Emit the perf-trajectory file at the repo root + the standard
+    //    bench_results/ dump.
+    // ------------------------------------------------------------------
+    let mut main_j = Json::obj();
+    main_j
+        .set("deployment", deployment.as_str())
+        .set("requests", requests)
+        .set("rate_req_s", 10.0)
+        .set("wall_s", main_wall)
+        .set("events", main_out.events_processed)
+        .set("events_per_sec", main_eps)
+        .set("events_per_request", main_epr)
+        .set("fused_decode_steps", main_out.fused_decode_steps)
+        .set("requests_per_wall_sec", requests as f64 / main_wall.max(1e-9))
+        .set("completed", main_out.metrics.completed());
+    let mut ratio_j = Json::obj();
+    ratio_j
+        .set("requests", ratio_requests)
+        .set("output_tokens", 256u64)
+        .set("fused_events_per_request", fused_epr)
+        .set("unfused_events_per_request", unfused_epr)
+        .set("events_per_request_reduction", ratio)
+        .set("fused_wall_s", fused_wall)
+        .set("unfused_wall_s", unfused_wall)
+        .set("records_identical", true);
+    let mut dump = Json::obj();
+    dump.set("bench", "sim_throughput")
+        .set("main", main_j)
+        .set("decode_heavy_ratio", ratio_j);
+
+    let root = repo_root().join("BENCH_sim_throughput.json");
+    std::fs::write(&root, dump.to_string_pretty())?;
+    println!("\nperf trajectory written to {}", root.display());
+    let path = save_json("sim_throughput", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

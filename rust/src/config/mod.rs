@@ -363,6 +363,13 @@ pub struct SchedulerSpec {
     /// KV group size for [`PdMode::Grouped`]; 0 = auto from MLP compute vs
     /// handshake latency (§3.3 "dynamically determined").
     pub kv_group_layers: usize,
+    /// Fuse decode token steps into macro-steps that run until the next
+    /// state-changing event instead of one heap event per token (the
+    /// simulator hot-path optimization, `docs/PERFORMANCE.md`). Results are
+    /// bit-identical either way (`tests/determinism_golden.rs` proves it);
+    /// the switch exists so benches can measure the unfused baseline and
+    /// regressions can bisect it.
+    pub fuse_decode_steps: bool,
 }
 
 /// P-D KV transmission strategy.
@@ -386,6 +393,7 @@ impl Default for SchedulerSpec {
             ep_async_prefetch: true,
             pd_mode: PdMode::Grouped,
             kv_group_layers: 0,
+            fuse_decode_steps: true,
         }
     }
 }
@@ -569,6 +577,9 @@ impl Config {
             if let Some(v) = sc.get("kv_group_layers").and_then(Json::as_f64) {
                 s.kv_group_layers = v as usize;
             }
+            if let Some(v) = sc.get("fuse_decode_steps").and_then(Json::as_bool) {
+                s.fuse_decode_steps = v;
+            }
             if let Some(v) = sc.get("pd_mode").and_then(Json::as_str) {
                 s.pd_mode = match v {
                     "synchronous" | "sync" => PdMode::Synchronous,
@@ -682,6 +693,7 @@ handshake_ms = 2.5
 pd_mode = "layerwise"
 max_decode_batch = 32
 ep_async_prefetch = false
+fuse_decode_steps = false
 "#,
         )
         .unwrap();
@@ -696,6 +708,8 @@ ep_async_prefetch = false
         assert_eq!(cfg.scheduler.pd_mode, PdMode::LayerWise);
         assert_eq!(cfg.scheduler.max_decode_batch, 32);
         assert!(!cfg.scheduler.ep_async_prefetch);
+        assert!(!cfg.scheduler.fuse_decode_steps);
+        assert!(SchedulerSpec::default().fuse_decode_steps, "fusing is the default");
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! > pending requests, and resource usage for each stage instance in real
 //! > time. New requests are dispatched to the instance with the lowest load
 //! > based on a least-loaded-first strategy."
+//!
+//! The table is **incrementally maintained**: the serving loop pushes an
+//! updated [`InstanceStatus`] whenever an instance's queues, running set, or
+//! KV pool mutate, so routing decisions read the table directly instead of
+//! rebuilding it per decision (the pre-overhaul `refresh_table()` full
+//! rebuild — see `docs/PERFORMANCE.md`). In debug builds the serving loop
+//! cross-checks the table against recomputed ground truth at every
+//! decision, so a missed update site fails `cargo test` loudly.
 
 /// Live load metrics for one instance, updated by the serving loop.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

@@ -106,7 +106,7 @@ mod tests {
     fn mm_spec() -> RequestSpec {
         RequestSpec {
             id: 2,
-            image: Some(ImageInput { width: 280, height: 280, key: "k".into(), visual_tokens: 100 }),
+            image: Some(ImageInput { width: 280, height: 280, key: 0xbeef, visual_tokens: 100 }),
             text_tokens: 10,
             output_tokens: 64,
         }

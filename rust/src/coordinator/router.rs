@@ -85,7 +85,7 @@ mod tests {
     fn mm() -> RequestSpec {
         RequestSpec {
             id: 2,
-            image: Some(ImageInput { width: 560, height: 560, key: "k".into(), visual_tokens: 400 }),
+            image: Some(ImageInput { width: 560, height: 560, key: 0xfeed, visual_tokens: 400 }),
             text_tokens: 8,
             output_tokens: 64,
         }

@@ -28,6 +28,31 @@
 //!   (an overlapped transition).
 //!
 //! The simulation is deterministic under the config seed.
+//!
+//! ## Hot-path architecture (million-request overhaul)
+//!
+//! Four structural decisions keep a 1M-request trace in the
+//! seconds-of-wall-clock range (`docs/PERFORMANCE.md` has measurements and
+//! invariants; `tests/determinism_golden.rs` proves all of them
+//! record-bit-identical to the straightforward implementations):
+//!
+//! 1. **Incremental status table** — every queue/KV mutation pushes the
+//!    owning instance's [`InstanceStatus`]; routing reads the table
+//!    directly instead of rebuilding it per decision. Debug builds
+//!    cross-check the table against recomputed ground truth on every pick.
+//! 2. **Cached candidate sets** — per-replica encode/prefill/decode
+//!    instance lists are materialized once (and on every elastic switch)
+//!    instead of filtered per decision.
+//! 3. **Fused decode macro-steps** — on a pure-Decode instance whose NPU is
+//!    otherwise idle, token steps run inline until the next pending event
+//!    (or the run horizon) could observe the NPU, instead of one
+//!    `NpuCheck` + `Kick` heap round-trip per token. A step that could
+//!    overlap a pending event falls back to the event path, so mid-step
+//!    co-location interference stays possible exactly as before.
+//! 4. **Streamed arrivals** — requests are pulled lazily from an
+//!    [`ArrivalSource`] with one pending arrival-class event at a time;
+//!    live request state is dropped to a compact record at finish, keeping
+//!    memory O(in-flight) rather than O(trace).
 
 use crate::config::Config;
 use crate::coordinator::balancer::{InstanceStatus, StatusTable};
@@ -42,13 +67,16 @@ use crate::coordinator::router::{Route, Router};
 use crate::kvcache::{BlockAllocator, KvManager};
 use crate::mmstore::MmStore;
 use crate::npu::{CostModel, StageKind};
-use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
+use crate::sim::engine::{self, sec_to_ns, EventQueue, SimModel, Ticker};
 use crate::sim::psnpu::{PsNpu, TaskId};
 use crate::transport::ep::{plan_ep_transfer, recompute_cost};
 use crate::transport::link::Link;
 use crate::transport::pd::plan_kv_transmission;
+use crate::workload::injector::Arrival;
+use crate::workload::stream::{ArrivalSource, WorkloadStream};
+use crate::workload::ArrivedRequest;
 use anyhow::Result;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// Tensor-parallel execution efficiency (fraction of linear scaling
 /// achieved) and per-layer synchronization cost — why TP2 loses (§4.3:
@@ -69,8 +97,12 @@ struct Inst {
     busy: bool,
     decode_running: bool,
     /// Incrementally maintained Σ tokens of queued work (avoids an O(queue)
-    /// scan on every status-table refresh — see EXPERIMENTS.md §Perf).
+    /// scan on every status-table update — see docs/PERFORMANCE.md).
     pending_tokens: usize,
+    /// Incrementally maintained Σ `ctx_tokens` over `decode_active` (avoids
+    /// an O(batch) request-map walk per decode step: +ctx on admission,
+    /// +batch per step, −ctx on finish).
+    active_ctx: usize,
     /// Elastic switch in progress: the role this instance will assume once
     /// its in-flight work drains (new arrivals already route per the new
     /// role; the reload happens at drain completion).
@@ -98,6 +130,16 @@ impl Inst {
     fn drained(&mut self, tokens: usize) {
         self.pending_tokens = self.pending_tokens.saturating_sub(tokens);
     }
+
+    /// The status-table row this instance's current state implies.
+    fn status(&self) -> InstanceStatus {
+        InstanceStatus {
+            queue_len: self.queue_len(),
+            active: self.decode_active.len() + usize::from(self.busy),
+            pending_tokens: self.pending_tokens,
+            kv_utilization: self.kv.as_ref().map_or(0.0, |k| k.utilization()),
+        }
+    }
 }
 
 /// Size a decode instance's paged-KV pool — one formula shared by boot-time
@@ -105,6 +147,46 @@ impl Inst {
 fn make_kv(cm: &CostModel, kv_bytes_per_token: usize, tp: usize) -> KvManager {
     let cap = cm.kv_capacity_bytes(1.0 / tp as f64) * tp as f64;
     KvManager::new(BlockAllocator::for_capacity(cap, kv_bytes_per_token, 16))
+}
+
+/// Which stage capability a routing decision needs. Selecting via this enum
+/// hits the pre-materialized per-replica candidate cache instead of
+/// filtering the deployment's instance list per decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StageNeed {
+    Encode,
+    Prefill,
+    Decode,
+}
+
+/// Per-replica candidate sets, rebuilt only when the routed topology
+/// changes (boot + elastic switches).
+struct StageCands {
+    enc: Vec<Vec<usize>>,
+    pre: Vec<Vec<usize>>,
+    dec: Vec<Vec<usize>>,
+}
+
+impl StageCands {
+    fn build(dep: &Deployment) -> Self {
+        let mut enc = Vec::with_capacity(dep.replicas);
+        let mut pre = Vec::with_capacity(dep.replicas);
+        let mut dec = Vec::with_capacity(dep.replicas);
+        for r in 0..dep.replicas {
+            enc.push(dep.instances_where(r, |s| s.encode));
+            pre.push(dep.instances_where(r, |s| s.prefill));
+            dec.push(dep.instances_where(r, |s| s.decode));
+        }
+        Self { enc, pre, dec }
+    }
+
+    fn get(&self, replica: usize, need: StageNeed) -> &[usize] {
+        match need {
+            StageNeed::Encode => &self.enc[replica],
+            StageNeed::Prefill => &self.pre[replica],
+            StageNeed::Decode => &self.dec[replica],
+        }
+    }
 }
 
 /// Work executing on an NPU.
@@ -117,7 +199,9 @@ enum TaskKind {
 /// Simulation events.
 #[doc(hidden)]
 pub enum Ev {
-    Arrive(usize),
+    /// A request enters the system (arrival-class: the serving loop keeps
+    /// exactly one pending arrival and schedules the next on delivery).
+    Arrive(ArrivedRequest),
     /// Feature available (or found missing) at the prefill instance.
     FeatureReady { req: u64, inst: usize },
     /// A task may have completed on this NPU (stale if epoch mismatches).
@@ -135,6 +219,9 @@ pub struct SimOutcome {
     pub metrics: RunMetrics,
     pub store_stats: crate::mmstore::StoreStats,
     pub events_processed: u64,
+    /// Decode steps executed inline by the macro-stepping fast path (each
+    /// saved one `NpuCheck` + one `Kick` heap event).
+    pub fused_decode_steps: u64,
     pub npu_utilization: Vec<f64>,
     pub kv_link_stats: Vec<(f64, f64)>, // (bytes carried, busy time) per replica
     /// Elastic role switches committed during the run (empty when
@@ -147,17 +234,40 @@ pub struct ServingSim {
     cfg: Config,
     cm: CostModel,
     dep: Deployment,
-    reqs: Vec<Request>,
+    /// Live (arrived, unfinished) requests, keyed by arrival index.
+    reqs: HashMap<u64, Request>,
+    /// Finished/retired request records, tagged with the arrival index so
+    /// the final report restores trace order.
+    records: Vec<(u64, RequestRecord)>,
     instances: Vec<Inst>,
     npus: Vec<PsNpu>,
     tasks: HashMap<(usize, TaskId), TaskKind>,
     table: StatusTable,
     router: Router,
+    cands: StageCands,
     store: MmStore,
     /// One P→D KV link per replica.
     kv_links: Vec<Link>,
-    arrivals: Vec<crate::workload::ArrivedRequest>,
+    /// Lazy arrival source (replayed vector or streaming generator).
+    source: ArrivalSource,
+    /// Arrival time of the source's final request (horizon anchor).
+    last_arrival: f64,
+    /// The engine's exact integer-ns run cutoff; the fused decode loop may
+    /// not complete a step past it (set once in [`Self::run`]).
+    horizon_ns: u64,
+    /// An elastic switch is mid-migration: the donor's `pending_tokens`
+    /// intentionally lags its (already bulk-drained) queues while items
+    /// re-route one at a time, so the strict counter-vs-queue debug
+    /// invariant is suspended for the duration (the table-vs-status check
+    /// still runs).
+    migrating: bool,
+    /// Requests delivered so far.
+    arrived: usize,
+    /// The source has no further arrivals.
+    stream_done: bool,
     done: usize,
+    /// Decode steps executed inline by the fused fast path.
+    fused_steps: u64,
     /// Injected MM-Store failure probability (tests/benches).
     store_fail_prob: f64,
     /// Elastic re-provisioning controller (None when disabled).
@@ -167,11 +277,30 @@ pub struct ServingSim {
 }
 
 impl ServingSim {
-    /// Build a simulation from a config and a pre-sampled workload.
-    pub fn new(cfg: Config, arrivals: Vec<crate::workload::ArrivedRequest>) -> Result<Self> {
+    /// Build a simulation replaying a pre-sampled workload.
+    pub fn new(cfg: Config, arrivals: Vec<ArrivedRequest>) -> Result<Self> {
+        Self::with_source(cfg, ArrivalSource::replay(arrivals))
+    }
+
+    /// Build a simulation that samples the configured workload lazily —
+    /// O(in-flight) memory, bit-identical to materializing the trace first.
+    pub fn streamed(cfg: Config) -> Result<Self> {
+        let stream = WorkloadStream::new(
+            &cfg.workload,
+            &cfg.model.vit,
+            cfg.rate,
+            Arrival::Poisson,
+            cfg.seed,
+        );
+        Self::with_source(cfg, ArrivalSource::Stream(stream))
+    }
+
+    /// Build a simulation from a config and any arrival source.
+    pub fn with_source(cfg: Config, source: ArrivalSource) -> Result<Self> {
         let dep = Deployment::parse(&cfg.deployment)?;
         let cm = CostModel::new(cfg.model.clone(), cfg.hardware.clone());
         let router = Router::new(&dep);
+        let cands = StageCands::build(&dep);
         let mut instances = Vec::new();
         for spec in &dep.instances {
             let kv = if spec.stages.decode {
@@ -189,6 +318,7 @@ impl ServingSim {
                 busy: false,
                 decode_running: false,
                 pending_tokens: 0,
+                active_ctx: 0,
                 draining_to: None,
                 offline_until: 0.0,
             });
@@ -198,7 +328,7 @@ impl ServingSim {
             (0..dep.replicas).map(|_| Link::new(cm.kv_link_bw(), cm.hw.handshake_s)).collect();
         let table = StatusTable::new(instances.len());
         let store = MmStore::new(32e9); // 32 GB pooled DRAM/SSD store
-        let reqs = arrivals.iter().map(|a| Request::new(a.spec.clone(), a.arrival)).collect();
+        let last_arrival = source.last_arrival();
         let (reconfigurer, ticker) = if cfg.reconfig.enabled {
             (
                 Some(Reconfigurer::new(cfg.reconfig.clone())),
@@ -211,16 +341,24 @@ impl ServingSim {
             cfg,
             cm,
             dep,
-            reqs,
+            reqs: HashMap::with_capacity(256),
+            records: Vec::new(),
             instances,
             npus,
             tasks: HashMap::with_capacity(64),
             table,
             router,
+            cands,
             store,
             kv_links,
-            arrivals,
+            source,
+            last_arrival,
+            horizon_ns: u64::MAX,
+            migrating: false,
+            arrived: 0,
+            stream_done: false,
             done: 0,
+            fused_steps: 0,
             store_fail_prob: 0.0,
             reconfigurer,
             ticker,
@@ -237,47 +375,46 @@ impl ServingSim {
     /// Run to completion (or the horizon) and report.
     pub fn run(mut self) -> SimOutcome {
         let mut q = EventQueue::new();
-        for i in 0..self.arrivals.len() {
-            q.at(self.arrivals[i].arrival, Ev::Arrive(i));
+        match self.source.next() {
+            Some(first) => q.at_arrival(first.arrival, Ev::Arrive(first)),
+            None => self.stream_done = true,
         }
         if let Some(t) = &mut self.ticker {
             t.arm(&mut q, Ev::ReconfigTick);
         }
-        let last_arrival = self.arrivals.last().map(|a| a.arrival).unwrap_or(0.0);
-        let horizon = last_arrival + 3600.0;
+        let horizon = self.last_arrival + 3600.0;
+        self.horizon_ns = engine::horizon_ns(horizon).unwrap_or(0);
         let end = engine::run(&mut self, &mut q, horizon);
 
-        let records: Vec<RequestRecord> = self
-            .reqs
-            .iter()
-            .map(|r| RequestRecord {
-                id: r.spec.id,
-                multimodal: r.spec.is_multimodal(),
-                arrival: r.arrival,
-                ttft: r.ttft(),
-                tpot: r.tpot(),
-                output_tokens: r.spec.output_tokens,
-                finish: r.finish,
-                recomputed: r.recomputed,
-                feature_reused: r.feature_reused,
-            })
-            .collect();
-        let makespan = self
-            .reqs
+        // Retire whatever is still live (horizon cutoff) and restore trace
+        // order: retired-at-finish records are in completion order.
+        let mut leftovers: Vec<u64> = self.reqs.keys().copied().collect();
+        leftovers.sort_unstable();
+        for rid in leftovers {
+            self.retire(rid);
+        }
+        self.records.sort_unstable_by_key(|&(rid, _)| rid);
+        let records: Vec<RequestRecord> = self.records.drain(..).map(|(_, r)| r).collect();
+
+        let makespan = records
             .iter()
             .filter_map(|r| r.finish)
             .fold(0.0f64, f64::max)
-            .max(last_arrival)
+            .max(self.last_arrival)
             .max(f64::MIN_POSITIVE);
         let num_npus = self.dep.num_npus();
+        // Fused decode steps can advance an NPU's clock past the last
+        // processed event; the utilization window must cover them.
+        let util_end = end.max(makespan).max(1e-9);
         let mut npu_utilization = Vec::new();
         for n in &mut self.npus {
-            npu_utilization.push(n.utilization(end.max(1e-9)));
+            npu_utilization.push(n.utilization(util_end));
         }
         SimOutcome {
             metrics: RunMetrics::new(records, makespan, num_npus, self.cfg.slo),
             store_stats: self.store.stats(),
             events_processed: q.processed(),
+            fused_decode_steps: self.fused_steps,
             npu_utilization,
             kv_link_stats: self.kv_links.iter().map(|l| (l.bytes_carried(), l.busy_time())).collect(),
             reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
@@ -300,17 +437,37 @@ impl ServingSim {
         }
     }
 
-    fn refresh_table(&mut self) {
+    /// Push instance `inst`'s current state into the status table. Called
+    /// at every mutation site; routing reads the table without rebuilding
+    /// it ([`Self::debug_check_table`] enforces coverage in debug builds).
+    fn sync_status(&mut self, inst: usize) {
+        let status = self.instances[inst].status();
+        self.table.update(inst, status);
+    }
+
+    /// Debug-build ground-truth check: the incrementally maintained table
+    /// must equal a full recomputation at every routing decision — and the
+    /// `pending_tokens` counter must equal a fresh walk over the queues
+    /// (so a missed `sync_status`, `push_*` or `drained` site fails
+    /// `cargo test` here instead of silently changing load-balancing
+    /// decisions).
+    fn debug_check_table(&self) {
         for (i, inst) in self.instances.iter().enumerate() {
-            self.table.update(
-                i,
-                InstanceStatus {
-                    queue_len: inst.queue_len(),
-                    active: inst.decode_active.len() + usize::from(inst.busy),
-                    pending_tokens: inst.pending_tokens,
-                    kv_utilization: inst.kv.as_ref().map_or(0.0, |k| k.utilization()),
-                },
+            let want = inst.status();
+            let got = self.table.get(i);
+            assert!(
+                got == want,
+                "status table stale for instance {i}: table {got:?} vs actual {want:?}"
             );
+            if !self.migrating {
+                let queue_tokens: usize = inst.encode_q.iter().map(|e| e.visual_tokens).sum::<usize>()
+                    + inst.prefill_q.iter().map(|p| p.prompt_tokens).sum::<usize>();
+                assert!(
+                    inst.pending_tokens == queue_tokens,
+                    "pending_tokens counter drifted on instance {i}: {} vs queues {queue_tokens}",
+                    inst.pending_tokens
+                );
+            }
         }
     }
 
@@ -336,11 +493,15 @@ impl ServingSim {
         self.arm_npu(npu, now, q);
     }
 
-    /// Pick the least-loaded instance with `pred` in this replica.
-    fn pick_instance(&mut self, replica: usize, pred: impl Fn(&crate::coordinator::deployment::StageSet) -> bool) -> usize {
-        self.refresh_table();
-        let cands = self.dep.instances_where(replica, pred);
-        self.table.least_loaded(&cands).expect("deployment validated at parse time")
+    /// Pick the least-loaded instance with the needed stage in this replica
+    /// from the cached candidate sets and the live status table.
+    fn pick_instance(&self, replica: usize, need: StageNeed) -> usize {
+        if cfg!(debug_assertions) {
+            self.debug_check_table();
+        }
+        self.table
+            .least_loaded(self.cands.get(replica, need))
+            .expect("deployment validated at parse time")
     }
 
     /// Is the instance offline reloading stage weights after a role switch?
@@ -348,6 +509,25 @@ impl ServingSim {
     /// the unrounded deadline, hence the tolerance.)
     fn offline(&self, inst: usize, now: f64) -> bool {
         now < self.instances[inst].offline_until - 1e-9
+    }
+
+    /// Drop a request's live state, keeping only its immutable record.
+    fn retire(&mut self, rid: u64) {
+        let r = self.reqs.remove(&rid).expect("live request");
+        self.records.push((
+            rid,
+            RequestRecord {
+                id: r.spec.id,
+                multimodal: r.spec.is_multimodal(),
+                arrival: r.arrival,
+                ttft: r.ttft(),
+                tpot: r.tpot(),
+                output_tokens: r.spec.output_tokens,
+                finish: r.finish,
+                recomputed: r.recomputed,
+                feature_reused: r.feature_reused,
+            },
+        ));
     }
 
     // ------------------------------------------------------------------
@@ -360,8 +540,8 @@ impl ServingSim {
     /// The snapshot walks every queue (O(total queued) per tick) rather
     /// than maintaining per-stage incremental counters like
     /// `pending_tokens` does for the status table: ticks fire every
-    /// `tick_s` *simulated* seconds (hundreds per run, vs. a table refresh
-    /// per scheduling decision), so the scan is off every hot path and not
+    /// `tick_s` *simulated* seconds (hundreds per run, vs. a table update
+    /// per queue mutation), so the scan is off every hot path and not
     /// worth three more push/drain-balanced counters.
     fn on_reconfig_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
         let loads: Vec<InstLoad> = self
@@ -384,7 +564,7 @@ impl ServingSim {
                     .decode_waiting
                     .iter()
                     .map(|&r| {
-                        let req = &self.reqs[r as usize];
+                        let req = self.reqs.get(&r).expect("queued request is live");
                         req.ctx_tokens()
                             + req.spec.output_tokens.saturating_sub(req.tokens_generated)
                     })
@@ -406,12 +586,15 @@ impl ServingSim {
     fn apply_switch(&mut self, plan: &SwitchPlan, now: f64, q: &mut EventQueue<Ev>) {
         let inst = plan.inst;
         let replica = self.instances[inst].spec.replica;
+        self.migrating = true;
 
         // 1. New arrivals route to the reshaped topology from this instant:
         //    the deployment's instance table is the routing authority, and
-        //    the router's candidate sets are rebuilt from it.
+        //    the router's (and pick cache's) candidate sets are rebuilt
+        //    from it.
         self.dep.instances[inst].stages = plan.to;
         self.router = Router::new(&self.dep);
+        self.cands = StageCands::build(&self.dep);
 
         // 2. Drain the donor's queues. Queued encodes only carry request
         //    metadata (raw inputs are host-side), so they re-queue directly
@@ -419,8 +602,10 @@ impl ServingSim {
         let enc_items: Vec<EncodeItem> = self.instances[inst].encode_q.drain(..).collect();
         for item in enc_items {
             self.instances[inst].drained(item.visual_tokens);
-            let e_inst = self.pick_instance(replica, |s| s.encode);
+            self.sync_status(inst);
+            let e_inst = self.pick_instance(replica, StageNeed::Encode);
             self.instances[e_inst].push_encode(item);
+            self.sync_status(e_inst);
             q.at(now, Ev::Kick { inst: e_inst });
         }
         //    Queued prefills re-fetch their features at the new prefill
@@ -429,8 +614,12 @@ impl ServingSim {
         let pre_items: Vec<PrefillItem> = self.instances[inst].prefill_q.drain(..).collect();
         for item in pre_items {
             self.instances[inst].drained(item.prompt_tokens);
-            let p_inst = self.pick_instance(replica, |s| s.prefill);
-            let visual = self.reqs[item.req as usize]
+            self.sync_status(inst);
+            let p_inst = self.pick_instance(replica, StageNeed::Prefill);
+            let visual = self
+                .reqs
+                .get(&item.req)
+                .expect("queued request is live")
                 .spec
                 .image
                 .as_ref()
@@ -446,6 +635,7 @@ impl ServingSim {
         //    Sequences whose KV already landed here re-transmit their
         //    context over the replica's P-D link to the adopting decoder.
         let waiting: Vec<u64> = self.instances[inst].decode_waiting.drain(..).collect();
+        self.sync_status(inst);
         self.migrate_kv(waiting, replica, now, q);
 
         // 3. In-flight work (a running E/P batch, resident decode
@@ -461,6 +651,7 @@ impl ServingSim {
         } else {
             self.complete_switch(inst, plan.to, now, q);
         }
+        self.migrating = false;
     }
 
     /// Finish a role switch once the instance has no in-flight work: swap
@@ -481,8 +672,14 @@ impl ServingSim {
             debug_assert_eq!(kv.num_seqs(), 0, "role switch completed with resident sequences");
             i.kv = None;
         }
+        debug_assert!(
+            i.decode_active.is_empty() && i.active_ctx == 0,
+            "role switch completed with a non-empty decode batch"
+        );
         i.offline_until = now + drain_s;
-        q.at(i.offline_until, Ev::Kick { inst });
+        let kick_at = i.offline_until;
+        self.sync_status(inst);
+        q.at(kick_at, Ev::Kick { inst });
     }
 
     /// Re-transmit the full contexts of `reqs` over the replica's P-D link
@@ -492,17 +689,18 @@ impl ServingSim {
         if reqs.is_empty() {
             return;
         }
-        let d_inst = self.pick_instance(replica, |s| s.decode);
+        let d_inst = self.pick_instance(replica, StageNeed::Decode);
         let bytes: f64 = reqs
             .iter()
             .map(|&r| {
-                (self.reqs[r as usize].ctx_tokens() * self.cm.model.llm.kv_bytes_per_token())
-                    as f64
+                (self.reqs.get(&r).expect("migrating request is live").ctx_tokens()
+                    * self.cm.model.llm.kv_bytes_per_token()) as f64
             })
             .sum();
         let (_, end) = self.kv_links[replica].enqueue(now, bytes);
         for &rid in &reqs {
-            self.reqs[rid as usize].state = ReqState::KvTransfer;
+            self.reqs.get_mut(&rid).expect("migrating request is live").state =
+                ReqState::KvTransfer;
         }
         q.at(end, Ev::KvDelivered { reqs, inst: d_inst });
     }
@@ -557,10 +755,12 @@ impl ServingSim {
                 let work = self.tp_scale(inst, work, self.cm.model.llm.layers);
                 let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
                 for &r in &reqs {
-                    self.reqs[r as usize].state = ReqState::Prefilling;
-                    self.reqs[r as usize].prefill_start = Some(now);
+                    let req = self.reqs.get_mut(&r).expect("batched request is live");
+                    req.state = ReqState::Prefilling;
+                    req.prefill_start = Some(now);
                 }
                 self.instances[inst].busy = true;
+                self.sync_status(inst);
                 self.start_task(inst, TaskKind::PrefillBatch { inst, reqs }, StageKind::Prefill, work, now, q);
                 return;
             }
@@ -576,16 +776,67 @@ impl ServingSim {
                     self.tp_scale(inst, self.cm.encode_time(tokens), self.cm.model.vit.layers);
                 let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
                 for &r in &reqs {
-                    self.reqs[r as usize].state = ReqState::Encoding;
-                    self.reqs[r as usize].encode_start = Some(now);
+                    let req = self.reqs.get_mut(&r).expect("batched request is live");
+                    req.state = ReqState::Encoding;
+                    req.encode_start = Some(now);
                 }
                 self.instances[inst].busy = true;
+                self.sync_status(inst);
                 self.start_task(inst, TaskKind::EncodeBatch { inst, reqs }, StageKind::Encode, work, now, q);
                 return;
             }
         }
         // 3. Decode step.
         self.maybe_start_decode_step(inst, now, q);
+    }
+
+    /// Admit waiting sequences into the decode batch (continuous batching
+    /// + paged-KV admission), FCFS until the batch cap or KV pressure.
+    fn admit_decode(&mut self, inst: usize) {
+        let quota = decode_admission_quota(
+            self.instances[inst].decode_active.len(),
+            self.instances[inst].decode_waiting.len(),
+            &self.cfg.scheduler,
+        );
+        for _ in 0..quota {
+            let Some(&rid) = self.instances[inst].decode_waiting.front() else { break };
+            let (ctx, need) = {
+                let r = self.reqs.get(&rid).expect("waiting request is live");
+                (r.ctx_tokens(), r.ctx_tokens() + r.spec.output_tokens)
+            };
+            let admitted = {
+                let kv = self.instances[inst].kv.as_mut().expect("decode instance has KV");
+                if kv.can_admit(need) {
+                    kv.register(rid, ctx).is_ok()
+                } else {
+                    false
+                }
+            };
+            if !admitted {
+                break; // KV pressure: stop admitting until sequences free.
+            }
+            self.instances[inst].decode_waiting.pop_front();
+            self.instances[inst].decode_active.push(rid);
+            self.instances[inst].active_ctx += ctx;
+            self.reqs.get_mut(&rid).expect("admitted request is live").state = ReqState::Decoding;
+        }
+    }
+
+    /// Full-speed work of one decode step over the current batch. Batch
+    /// context comes from the incrementally maintained `active_ctx` sum —
+    /// no per-step walk over the request map (debug builds cross-check).
+    fn decode_step_work(&self, inst: usize) -> f64 {
+        let batch = self.instances[inst].decode_active.len();
+        let total_ctx = self.instances[inst].active_ctx;
+        if cfg!(debug_assertions) {
+            let recomputed: usize = self.instances[inst]
+                .decode_active
+                .iter()
+                .map(|&r| self.reqs.get(&r).expect("active request is live").ctx_tokens())
+                .sum();
+            assert_eq!(total_ctx, recomputed, "active_ctx counter drifted on instance {inst}");
+        }
+        self.tp_scale(inst, self.cm.decode_step_time(batch, total_ctx), self.cm.model.llm.layers)
     }
 
     fn maybe_start_decode_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
@@ -602,46 +853,67 @@ impl ServingSim {
         if multi_stage && self.instances[inst].busy {
             return;
         }
-        // Admit waiting sequences (continuous batching + KV admission).
-        let quota = decode_admission_quota(
-            self.instances[inst].decode_active.len(),
-            self.instances[inst].decode_waiting.len(),
-            &self.cfg.scheduler,
-        );
-        for _ in 0..quota {
-            let Some(&rid) = self.instances[inst].decode_waiting.front() else { break };
-            let need = self.reqs[rid as usize].ctx_tokens() + self.reqs[rid as usize].spec.output_tokens;
-            let admitted = {
-                let kv = self.instances[inst].kv.as_mut().expect("decode instance has KV");
-                if kv.can_admit(need) {
-                    kv.register(rid, self.reqs[rid as usize].ctx_tokens()).is_ok()
-                } else {
-                    false
-                }
-            };
-            if !admitted {
-                break; // KV pressure: stop admitting until sequences free.
-            }
-            self.instances[inst].decode_waiting.pop_front();
-            self.instances[inst].decode_active.push(rid);
-            self.reqs[rid as usize].state = ReqState::Decoding;
-        }
+        self.admit_decode(inst);
+        self.sync_status(inst);
         if self.instances[inst].decode_active.is_empty() {
             return;
         }
-        let batch = self.instances[inst].decode_active.len();
-        let total_ctx: usize = self.instances[inst]
-            .decode_active
-            .iter()
-            .map(|&r| self.reqs[r as usize].ctx_tokens())
-            .sum();
-        let work = self.tp_scale(
-            inst,
-            self.cm.decode_step_time(batch, total_ctx),
-            self.cm.model.llm.layers,
-        );
+        // Fast path: on a pure-Decode instance whose NPU is otherwise idle,
+        // fuse token steps inline (no co-located task can change execution
+        // rates mid-step, and any pending event bounds the fusion below).
+        if self.cfg.scheduler.fuse_decode_steps
+            && !multi_stage
+            && self.npus[self.instances[inst].spec.npu].active_tasks() == 0
+        {
+            self.run_decode_macro_step(inst, now, q);
+            return;
+        }
+        let work = self.decode_step_work(inst);
         self.instances[inst].decode_running = true;
         self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, now, q);
+    }
+
+    /// Execute decode steps inline until the next pending event (or the run
+    /// horizon) could observe the NPU, then hand the step in flight back to
+    /// the event path.
+    ///
+    /// **Macro-stepping invariant** (docs/PERFORMANCE.md): the fused loop
+    /// reproduces the per-token event path bit-exactly — every step end
+    /// lands on the same integer-ns grid [`sec_to_ns`] the event scheduler
+    /// uses, admission and token bookkeeping run at every step boundary
+    /// exactly as the `Kick` handler would, and any step whose completion
+    /// would not strictly precede the earliest pending event is *not* fused
+    /// but scheduled as a real [`PsNpu`] task (so a same-timestamp or
+    /// mid-step event interleaves — and contends — exactly as before).
+    fn run_decode_macro_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        debug_assert_eq!(sec_to_ns(now), q.now_ns(), "macro-step must start at queue time");
+        let npu = self.instances[inst].spec.npu;
+        let mut cur_ns = q.now_ns();
+        loop {
+            let t = cur_ns as f64 / 1e9;
+            let work = self.decode_step_work(inst).max(1e-7);
+            let end_ns = sec_to_ns(t + work).max(cur_ns);
+            let next_ev = q.next_event_ns().unwrap_or(u64::MAX);
+            if end_ns >= next_ev || end_ns > self.horizon_ns {
+                // A pending event (or the horizon) could observe this step:
+                // run it through the normal task path instead.
+                self.instances[inst].decode_running = true;
+                self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, t, q);
+                self.sync_status(inst);
+                return;
+            }
+            let end = end_ns as f64 / 1e9;
+            self.npus[npu].run_exclusive(t, end, work);
+            self.fused_steps += 1;
+            cur_ns = end_ns;
+            self.finish_decode_step_tokens(inst, end);
+            self.admit_decode(inst);
+            if self.instances[inst].decode_active.is_empty() {
+                break;
+            }
+        }
+        self.sync_status(inst);
+        self.maybe_complete_switch(inst, cur_ns as f64 / 1e9, q);
     }
 
     // ------------------------------------------------------------------
@@ -650,17 +922,20 @@ impl ServingSim {
 
     fn on_encode_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
         self.instances[inst].busy = false;
+        self.sync_status(inst);
         let replica = self.instances[inst].spec.replica;
         for rid in reqs {
-            let r = &mut self.reqs[rid as usize];
-            r.encode_end = Some(now);
-            let img = r.spec.image.clone().expect("encoded request has an image");
+            let img = {
+                let r = self.reqs.get_mut(&rid).expect("encoded request is live");
+                r.encode_end = Some(now);
+                r.spec.image.expect("encoded request has an image")
+            };
             // PUT the feature into the MM Store (asynchronously — off the
             // critical path under prefetching).
-            self.store.put(&img.key, self.cm.feature_bytes(img.visual_tokens), img.visual_tokens);
+            self.store.put(img.key, self.cm.feature_bytes(img.visual_tokens), img.visual_tokens);
             // Choose the prefill instance (least-loaded in this replica).
-            let p_inst = self.pick_instance(replica, |s| s.prefill);
-            self.reqs[rid as usize].route.push(p_inst);
+            let p_inst = self.pick_instance(replica, StageNeed::Prefill);
+            self.reqs.get_mut(&rid).expect("encoded request is live").route.push(p_inst);
             if p_inst == inst {
                 // E and P coupled on the same instance: feature is local.
                 q.at(now, Ev::FeatureReady { req: rid, inst: p_inst });
@@ -670,7 +945,8 @@ impl ServingSim {
                     img.visual_tokens,
                     self.cfg.scheduler.ep_async_prefetch,
                 );
-                self.reqs[rid as usize].state = ReqState::FeatureTransfer;
+                self.reqs.get_mut(&rid).expect("encoded request is live").state =
+                    ReqState::FeatureTransfer;
                 q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: p_inst });
             }
         }
@@ -686,9 +962,9 @@ impl ServingSim {
             inst
         } else {
             let replica = self.instances[inst].spec.replica;
-            self.pick_instance(replica, |s| s.prefill)
+            self.pick_instance(replica, StageNeed::Prefill)
         };
-        let r = &mut self.reqs[rid as usize];
+        let r = self.reqs.get_mut(&rid).expect("transferring request is live");
         let recompute_tokens = match &r.spec.image {
             Some(img) => {
                 // Same-instance features are always local; remote fetches may
@@ -699,7 +975,7 @@ impl ServingSim {
                     && !r.feature_reused;
                 if local && self.store_fail_prob == 0.0 {
                     0
-                } else if self.store.get(&img.key).is_some() {
+                } else if self.store.get(img.key).is_some() {
                     0
                 } else {
                     r.recomputed = true;
@@ -715,32 +991,38 @@ impl ServingSim {
             recompute_tokens,
         };
         self.instances[inst].push_prefill(item);
+        self.sync_status(inst);
         q.at(now, Ev::Kick { inst });
     }
 
     fn on_prefill_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
         self.instances[inst].busy = false;
+        self.sync_status(inst);
         let replica = self.instances[inst].spec.replica;
-        // Split the batch by destination decode instance.
-        let mut by_dst: HashMap<usize, Vec<u64>> = HashMap::new();
+        // Split the batch by destination decode instance. BTreeMap: the
+        // delivery order below reaches the replica's FIFO KV link, so it
+        // must be deterministic.
+        let mut by_dst: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
         for rid in &reqs {
-            self.reqs[*rid as usize].prefill_end = Some(now);
+            self.reqs.get_mut(rid).expect("prefilled request is live").prefill_end = Some(now);
             let d_inst = if self.instances[inst].spec.stages.decode {
                 inst // PD coupled: no transfer.
             } else {
-                self.pick_instance(replica, |s| s.decode)
+                self.pick_instance(replica, StageNeed::Decode)
             };
-            self.reqs[*rid as usize].route.push(d_inst);
+            self.reqs.get_mut(rid).expect("prefilled request is live").route.push(d_inst);
             by_dst.entry(d_inst).or_default().push(*rid);
         }
         for (d_inst, rids) in by_dst {
             if d_inst == inst {
                 // Local handoff: first token is the prefill output (Eq. 2).
                 for &rid in &rids {
-                    self.reqs[rid as usize].first_token = Some(now);
-                    self.reqs[rid as usize].state = ReqState::AwaitAdmission;
+                    let r = self.reqs.get_mut(&rid).expect("prefilled request is live");
+                    r.first_token = Some(now);
+                    r.state = ReqState::AwaitAdmission;
                     self.instances[inst].decode_waiting.push_back(rid);
                 }
+                self.sync_status(inst);
                 q.at(now, Ev::Kick { inst: d_inst });
             } else {
                 // P→D KV transmission: the planner gives the exposed residue;
@@ -748,7 +1030,7 @@ impl ServingSim {
                 // concurrent prefill batches (congestion under load).
                 let avg_tokens = (rids
                     .iter()
-                    .map(|&r| self.reqs[r as usize].ctx_tokens())
+                    .map(|&r| self.reqs.get(&r).expect("prefilled request is live").ctx_tokens())
                     .sum::<usize>()
                     / rids.len())
                 .max(1);
@@ -771,7 +1053,8 @@ impl ServingSim {
                     now
                 };
                 for &rid in &rids {
-                    self.reqs[rid as usize].state = ReqState::KvTransfer;
+                    self.reqs.get_mut(&rid).expect("prefilled request is live").state =
+                        ReqState::KvTransfer;
                 }
                 q.at(delivered, Ev::KvDelivered { reqs: rids, inst: d_inst });
             }
@@ -794,31 +1077,45 @@ impl ServingSim {
             // (disaggregated-path TTFT semantics, matching Table 2's
             // sensitivity of TTFT to KV transmission). A migrated sequence
             // keeps its original first-token time.
-            if self.reqs[rid as usize].first_token.is_none() {
-                self.reqs[rid as usize].first_token = Some(now);
+            let r = self.reqs.get_mut(&rid).expect("delivered request is live");
+            if r.first_token.is_none() {
+                r.first_token = Some(now);
             }
-            self.reqs[rid as usize].state = ReqState::AwaitAdmission;
+            r.state = ReqState::AwaitAdmission;
             self.instances[inst].decode_waiting.push_back(rid);
         }
+        self.sync_status(inst);
         q.at(now, Ev::Kick { inst });
     }
 
-    fn on_decode_step_done(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        self.instances[inst].decode_running = false;
+    /// Post-step bookkeeping shared by the event path and the fused
+    /// macro-step path: every active sequence gains one token; finished
+    /// sequences free their KV and retire to the record list.
+    fn finish_decode_step_tokens(&mut self, inst: usize, now: f64) {
         let active = std::mem::take(&mut self.instances[inst].decode_active);
+        // Every member generated one token, growing its context by one.
+        self.instances[inst].active_ctx += active.len();
         let mut still = Vec::with_capacity(active.len());
         for rid in active {
-            let r = &mut self.reqs[rid as usize];
-            r.tokens_generated += 1;
-            if r.tokens_generated == 1 && r.first_token.is_none() {
-                r.first_token = Some(now);
-            }
-            if r.tokens_generated >= r.spec.output_tokens {
-                r.finish = Some(now);
-                r.state = ReqState::Finished;
+            let (finished, ctx_now) = {
+                let r = self.reqs.get_mut(&rid).expect("active request is live");
+                r.tokens_generated += 1;
+                if r.tokens_generated == 1 && r.first_token.is_none() {
+                    r.first_token = Some(now);
+                }
+                (r.tokens_generated >= r.spec.output_tokens, r.ctx_tokens())
+            };
+            if finished {
+                {
+                    let r = self.reqs.get_mut(&rid).expect("active request is live");
+                    r.finish = Some(now);
+                    r.state = ReqState::Finished;
+                }
                 self.done += 1;
+                self.instances[inst].active_ctx -= ctx_now;
                 let kv = self.instances[inst].kv.as_mut().expect("decode instance");
                 kv.free(rid).expect("active sequence registered");
+                self.retire(rid);
             } else {
                 let kv = self.instances[inst].kv.as_mut().expect("decode instance");
                 // Grow KV by the generated token; admission reserved room.
@@ -827,6 +1124,12 @@ impl ServingSim {
             }
         }
         self.instances[inst].decode_active = still;
+    }
+
+    fn on_decode_step_done(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        self.instances[inst].decode_running = false;
+        self.finish_decode_step_tokens(inst, now);
+        self.sync_status(inst);
         q.at(now, Ev::Kick { inst });
         self.maybe_complete_switch(inst, now, q);
     }
@@ -848,6 +1151,49 @@ impl ServingSim {
             self.arm_npu(npu, now, q);
         }
     }
+
+    fn on_arrive(&mut self, arrived: ArrivedRequest, now: f64, q: &mut EventQueue<Ev>) {
+        // Internal request ids are arrival indices (== spec ids for
+        // generated workloads; trace replays may carry arbitrary spec ids).
+        let rid = self.arrived as u64;
+        self.arrived += 1;
+        let spec = arrived.spec;
+        self.reqs.insert(rid, Request::new(spec, arrived.arrival));
+        let resident = spec.image.as_ref().map(|i| self.store.contains(i.key)).unwrap_or(false);
+        if cfg!(debug_assertions) {
+            self.debug_check_table();
+        }
+        let route = self.router.route(&spec, resident, &self.table).expect("deployment validated");
+        match route {
+            Route::Encode(inst) => {
+                let img = spec.image.expect("multimodal");
+                let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
+                self.reqs.get_mut(&rid).expect("just inserted").route.push(inst);
+                self.instances[inst].push_encode(item);
+                self.sync_status(inst);
+                q.at(now, Ev::Kick { inst });
+            }
+            Route::Prefill { instance, feature_reused } => {
+                self.reqs.get_mut(&rid).expect("just inserted").route.push(instance);
+                if feature_reused {
+                    // Cross-request reuse: skip Encode, fetch the
+                    // resident feature (prefetch-overlapped).
+                    self.reqs.get_mut(&rid).expect("just inserted").feature_reused = true;
+                    let tokens = spec.image.as_ref().map(|i| i.visual_tokens).unwrap_or(0);
+                    let plan =
+                        plan_ep_transfer(&self.cm, tokens, self.cfg.scheduler.ep_async_prefetch);
+                    q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: instance });
+                } else {
+                    q.at(now, Ev::FeatureReady { req: rid, inst: instance });
+                }
+            }
+        }
+        // Keep exactly one pending arrival: schedule the next one now.
+        match self.source.next() {
+            Some(next) => q.at_arrival(next.arrival, Ev::Arrive(next)),
+            None => self.stream_done = true,
+        }
+    }
 }
 
 impl SimModel for ServingSim {
@@ -855,43 +1201,7 @@ impl SimModel for ServingSim {
 
     fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
-            Ev::Arrive(idx) => {
-                let rid = idx as u64;
-                let resident = self.reqs[idx]
-                    .spec
-                    .image
-                    .as_ref()
-                    .map(|i| self.store.contains(&i.key))
-                    .unwrap_or(false);
-                self.refresh_table();
-                let route = self
-                    .router
-                    .route(&self.reqs[idx].spec.clone(), resident, &self.table)
-                    .expect("deployment validated");
-                match route {
-                    Route::Encode(inst) => {
-                        let img = self.reqs[idx].spec.image.as_ref().expect("multimodal");
-                        let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
-                        self.reqs[idx].route.push(inst);
-                        self.instances[inst].push_encode(item);
-                        q.at(now, Ev::Kick { inst });
-                    }
-                    Route::Prefill { instance, feature_reused } => {
-                        self.reqs[idx].route.push(instance);
-                        if feature_reused {
-                            // Cross-request reuse: skip Encode, fetch the
-                            // resident feature (prefetch-overlapped).
-                            self.reqs[idx].feature_reused = true;
-                            let tokens =
-                                self.reqs[idx].spec.image.as_ref().map(|i| i.visual_tokens).unwrap_or(0);
-                            let plan = plan_ep_transfer(&self.cm, tokens, self.cfg.scheduler.ep_async_prefetch);
-                            q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: instance });
-                        } else {
-                            q.at(now, Ev::FeatureReady { req: rid, inst: instance });
-                        }
-                    }
-                }
-            }
+            Ev::Arrive(arrived) => self.on_arrive(arrived, now, q),
             Ev::FeatureReady { req, inst } => self.on_feature_ready(req, inst, now, q),
             Ev::NpuCheck { npu, epoch } => self.on_npu_check(npu, epoch, now, q),
             Ev::KvDelivered { reqs, inst } => self.on_kv_delivered(reqs, inst, now, q),
@@ -905,20 +1215,15 @@ impl SimModel for ServingSim {
     }
 
     fn done(&self) -> bool {
-        self.done == self.reqs.len()
+        self.stream_done && self.done == self.arrived
     }
 }
 
-/// Convenience: sample the configured workload, inject at `cfg.rate`, run.
+/// Convenience: stream the configured workload at `cfg.rate`, run.
+/// (Bit-identical to materializing the trace first — see
+/// `tests/determinism_golden.rs` — but O(in-flight) memory.)
 pub fn run_serving(cfg: &Config) -> Result<SimOutcome> {
-    let specs = crate::workload::generate(&cfg.workload, &cfg.model.vit, cfg.seed);
-    let arrivals = crate::workload::injector::inject(
-        &specs,
-        cfg.rate,
-        crate::workload::injector::Arrival::Poisson,
-        cfg.seed,
-    );
-    Ok(ServingSim::new(cfg.clone(), arrivals)?.run())
+    Ok(ServingSim::streamed(cfg.clone())?.run())
 }
 
 #[cfg(test)]
@@ -965,6 +1270,45 @@ mod tests {
         let b = run("(E-P)-D", 2.0, 32);
         assert_eq!(a.metrics.records, b.metrics.records);
         assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.fused_decode_steps, b.fused_decode_steps);
+    }
+
+    #[test]
+    fn streamed_matches_replayed_workload() {
+        // The lazy arrival source must reproduce the materialized trace
+        // path record for record.
+        let cfg = quick_cfg("E-P-D", 3.0, 64);
+        let specs = crate::workload::generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+        let arrivals = crate::workload::injector::inject(
+            &specs,
+            cfg.rate,
+            crate::workload::injector::Arrival::Poisson,
+            cfg.seed,
+        );
+        let replayed = ServingSim::new(cfg.clone(), arrivals).unwrap().run();
+        let streamed = ServingSim::streamed(cfg).unwrap().run();
+        assert_eq!(replayed.metrics.records, streamed.metrics.records);
+        assert_eq!(replayed.events_processed, streamed.events_processed);
+    }
+
+    #[test]
+    fn fused_and_unfused_decode_are_bit_identical() {
+        // The macro-stepping invariant, at unit-test scale: identical
+        // per-request records, far fewer processed events.
+        let mut cfg = quick_cfg("E-P-D", 2.0, 48);
+        cfg.workload.output_tokens = 128; // decode-heavy
+        let fused = run_serving(&cfg).unwrap();
+        cfg.scheduler.fuse_decode_steps = false;
+        let unfused = run_serving(&cfg).unwrap();
+        assert_eq!(fused.metrics.records, unfused.metrics.records);
+        assert_eq!(unfused.fused_decode_steps, 0);
+        assert!(fused.fused_decode_steps > 0, "decode-heavy run must fuse steps");
+        assert!(
+            fused.events_processed * 2 < unfused.events_processed,
+            "fusing must shed most decode events: {} vs {}",
+            fused.events_processed,
+            unfused.events_processed
+        );
     }
 
     #[test]

@@ -8,22 +8,32 @@
 //! > avoids duplicate caching and transmission, supports cross-request reuse
 //! > of features"
 //!
-//! This implementation is a capacity-bounded LRU keyed by content hash with
-//! full hit/miss/eviction accounting. Transfer *timing* is the transport
-//! layer's job ([`crate::transport::ep`] uses the Table 3-calibrated GET
-//! latency fit); this module is the metadata + residency authority. It also
-//! backs the **fault-tolerant recomputation** path: a `get` miss after a
-//! `put` (evicted, or simulated store failure) tells the Prefill instance to
+//! This implementation is a capacity-bounded LRU keyed by an interned
+//! 64-bit content hash ([`crate::util::hash::image_key`]) with full
+//! hit/miss/eviction accounting. Transfer *timing* is the transport layer's
+//! job ([`crate::transport::ep`] uses the Table 3-calibrated GET latency
+//! fit); this module is the metadata + residency authority. It also backs
+//! the **fault-tolerant recomputation** path: a `get` miss after a `put`
+//! (evicted, or simulated store failure) tells the Prefill instance to
 //! locally re-encode (§3.2).
+//!
+//! ## Hot-path design (see `docs/PERFORMANCE.md`)
+//!
+//! Every operation is O(1): residency lives in a `HashMap<u64, u32>` into a
+//! slab of nodes threaded on an intrusive doubly-linked recency list
+//! (head = most recent, tail = LRU victim). The pre-overhaul store paid an
+//! O(n) `min_by_key` scan plus a `String` key clone per eviction; at
+//! million-request scale that dominated the E-P path. A naive reference
+//! model is kept under `#[cfg(test)]` and a randomized differential test
+//! pins the two implementations together operation by operation.
 
 use std::collections::HashMap;
 
 /// Stored feature metadata.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Entry {
     pub bytes: f64,
     pub visual_tokens: usize,
-    last_access: u64,
 }
 
 /// Hit/miss statistics.
@@ -47,13 +57,32 @@ impl StoreStats {
     }
 }
 
-/// Capacity-bounded content-addressed feature pool.
+/// Sentinel for "no node" in the intrusive list.
+const NIL: u32 = u32::MAX;
+
+/// One slab slot: an entry threaded on the recency list. Freed slots are
+/// recycled through a free list so the slab never grows past the peak
+/// resident count.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    key: u64,
+    entry: Entry,
+    prev: u32,
+    next: u32,
+}
+
+/// Capacity-bounded content-addressed feature pool with O(1) put/get/evict.
 #[derive(Debug)]
 pub struct MmStore {
-    entries: HashMap<String, Entry>,
+    index: HashMap<u64, u32>,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    /// Most-recently-used node (list head), or `NIL` when empty.
+    head: u32,
+    /// Least-recently-used node (list tail, the eviction victim), or `NIL`.
+    tail: u32,
     capacity_bytes: f64,
     used_bytes: f64,
-    tick: u64,
     stats: StoreStats,
     /// Injected failure probability for the fault-tolerance path
     /// (0.0 in normal operation; benches and tests raise it).
@@ -65,10 +94,13 @@ impl MmStore {
     pub fn new(capacity_bytes: f64) -> Self {
         assert!(capacity_bytes > 0.0);
         Self {
-            entries: HashMap::new(),
+            index: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
             capacity_bytes,
             used_bytes: 0.0,
-            tick: 0,
             stats: StoreStats::default(),
             fail_prob: 0.0,
             fail_rng: crate::util::rng::Rng::with_stream(0, 0xfa11),
@@ -83,51 +115,112 @@ impl MmStore {
         self
     }
 
+    // -- intrusive-list plumbing ---------------------------------------
+
+    /// Unlink a node from the recency list (it stays in the slab).
+    fn unlink(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.nodes[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Link a node at the head (most-recently-used position).
+    fn link_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Move an existing node to the head.
+    fn touch(&mut self, idx: u32) {
+        if self.head != idx {
+            self.unlink(idx);
+            self.link_front(idx);
+        }
+    }
+
+    /// Evict the LRU victim (list tail). Caller guarantees non-empty.
+    fn evict_lru(&mut self) {
+        let victim = self.tail;
+        debug_assert_ne!(victim, NIL, "evict on empty store");
+        self.unlink(victim);
+        let node = self.nodes[victim as usize];
+        self.index.remove(&node.key);
+        self.free.push(victim);
+        self.used_bytes -= node.entry.bytes;
+        self.stats.evictions += 1;
+    }
+
+    // -- public API -----------------------------------------------------
+
     /// Insert a feature blob. Duplicate puts of the same key are dedup'd
     /// (counted, not stored twice) — "avoids duplicate caching".
     /// Returns true if the blob was newly stored.
-    pub fn put(&mut self, key: &str, bytes: f64, visual_tokens: usize) -> bool {
-        self.tick += 1;
+    ///
+    /// A blob larger than the whole store is rejected **before** any
+    /// eviction happens (the caller recomputes); it must not flush resident
+    /// entries it can never replace.
+    pub fn put(&mut self, key: u64, bytes: f64, visual_tokens: usize) -> bool {
         self.stats.puts += 1;
-        if let Some(e) = self.entries.get_mut(key) {
-            e.last_access = self.tick;
+        if let Some(&idx) = self.index.get(&key) {
+            self.touch(idx);
             self.stats.dedup_puts += 1;
             return false;
         }
-        // Evict LRU entries until the new blob fits.
-        while self.used_bytes + bytes > self.capacity_bytes && !self.entries.is_empty() {
-            let victim = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_access)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty");
-            let e = self.entries.remove(&victim).expect("present");
-            self.used_bytes -= e.bytes;
-            self.stats.evictions += 1;
-        }
         if bytes > self.capacity_bytes {
-            // Blob larger than the whole store: reject (caller recomputes).
             return false;
         }
+        // Evict LRU entries until the new blob fits.
+        while self.used_bytes + bytes > self.capacity_bytes && self.tail != NIL {
+            self.evict_lru();
+        }
+        let entry = Entry { bytes, visual_tokens };
+        let idx = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = Node { key, entry, prev: NIL, next: NIL };
+                slot
+            }
+            None => {
+                assert!(self.nodes.len() < NIL as usize, "MM-Store slab overflow");
+                self.nodes.push(Node { key, entry, prev: NIL, next: NIL });
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        self.link_front(idx);
+        self.index.insert(key, idx);
         self.used_bytes += bytes;
-        self.entries.insert(key.to_string(), Entry { bytes, visual_tokens, last_access: self.tick });
         true
     }
 
     /// Fetch feature metadata. `None` = miss (never stored, evicted, or an
     /// injected store failure) → caller must trigger local recomputation.
-    pub fn get(&mut self, key: &str) -> Option<Entry> {
-        self.tick += 1;
+    pub fn get(&mut self, key: u64) -> Option<Entry> {
         if self.fail_prob > 0.0 && self.fail_rng.chance(self.fail_prob) {
             self.stats.misses += 1;
             return None;
         }
-        match self.entries.get_mut(key) {
-            Some(e) => {
-                e.last_access = self.tick;
+        match self.index.get(&key) {
+            Some(&idx) => {
+                self.touch(idx);
                 self.stats.hits += 1;
-                Some(e.clone())
+                Some(self.nodes[idx as usize].entry)
             }
             None => {
                 self.stats.misses += 1;
@@ -136,10 +229,10 @@ impl MmStore {
         }
     }
 
-    /// Residency check without stats impact (used by the router to predict
-    /// reuse before dispatch).
-    pub fn contains(&self, key: &str) -> bool {
-        self.entries.contains_key(key)
+    /// Residency check without stats or recency impact (used by the router
+    /// to predict reuse before dispatch).
+    pub fn contains(&self, key: u64) -> bool {
+        self.index.contains_key(&key)
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -152,10 +245,107 @@ impl MmStore {
         self.capacity_bytes
     }
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
+    }
+}
+
+/// Naive reference model: the semantics `MmStore` must match, written for
+/// obviousness rather than speed (O(n) eviction scan over explicit access
+/// ticks). The randomized differential test below drives both models with
+/// identical operation sequences and compares every observable after every
+/// operation.
+#[cfg(test)]
+mod reference {
+    use super::{Entry, StoreStats};
+    use std::collections::HashMap;
+
+    struct Slot {
+        entry: Entry,
+        last_access: u64,
+    }
+
+    pub struct NaiveLru {
+        entries: HashMap<u64, Slot>,
+        capacity_bytes: f64,
+        used_bytes: f64,
+        tick: u64,
+        stats: StoreStats,
+    }
+
+    impl NaiveLru {
+        pub fn new(capacity_bytes: f64) -> Self {
+            Self {
+                entries: HashMap::new(),
+                capacity_bytes,
+                used_bytes: 0.0,
+                tick: 0,
+                stats: StoreStats::default(),
+            }
+        }
+
+        pub fn put(&mut self, key: u64, bytes: f64, visual_tokens: usize) -> bool {
+            self.tick += 1;
+            self.stats.puts += 1;
+            if let Some(s) = self.entries.get_mut(&key) {
+                s.last_access = self.tick;
+                self.stats.dedup_puts += 1;
+                return false;
+            }
+            if bytes > self.capacity_bytes {
+                return false;
+            }
+            while self.used_bytes + bytes > self.capacity_bytes && !self.entries.is_empty() {
+                let victim = *self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, s)| s.last_access)
+                    .map(|(k, _)| k)
+                    .expect("non-empty");
+                let s = self.entries.remove(&victim).expect("present");
+                self.used_bytes -= s.entry.bytes;
+                self.stats.evictions += 1;
+            }
+            self.used_bytes += bytes;
+            self.entries.insert(
+                key,
+                Slot { entry: Entry { bytes, visual_tokens }, last_access: self.tick },
+            );
+            true
+        }
+
+        /// No failure injection in the reference — the differential test
+        /// runs both models without it (the injection path is orthogonal
+        /// to LRU bookkeeping and covered by its own tests).
+        pub fn get(&mut self, key: u64) -> Option<Entry> {
+            self.tick += 1;
+            match self.entries.get_mut(&key) {
+                Some(s) => {
+                    s.last_access = self.tick;
+                    self.stats.hits += 1;
+                    Some(s.entry)
+                }
+                None => {
+                    self.stats.misses += 1;
+                    None
+                }
+            }
+        }
+
+        pub fn contains(&self, key: u64) -> bool {
+            self.entries.contains_key(&key)
+        }
+        pub fn stats(&self) -> StoreStats {
+            self.stats
+        }
+        pub fn used_bytes(&self) -> f64 {
+            self.used_bytes
+        }
+        pub fn len(&self) -> usize {
+            self.entries.len()
+        }
     }
 }
 
@@ -166,8 +356,8 @@ mod tests {
     #[test]
     fn put_get_round_trip() {
         let mut s = MmStore::new(1e9);
-        assert!(s.put("k1", 1e6, 100));
-        let e = s.get("k1").unwrap();
+        assert!(s.put(1, 1e6, 100));
+        let e = s.get(1).unwrap();
         assert_eq!(e.visual_tokens, 100);
         assert_eq!(e.bytes, 1e6);
         assert_eq!(s.stats().hits, 1);
@@ -176,7 +366,7 @@ mod tests {
     #[test]
     fn miss_counts() {
         let mut s = MmStore::new(1e9);
-        assert!(s.get("nope").is_none());
+        assert!(s.get(404).is_none());
         assert_eq!(s.stats().misses, 1);
         assert!(s.stats().hit_rate() < 1e-9);
     }
@@ -184,8 +374,8 @@ mod tests {
     #[test]
     fn duplicate_put_dedups() {
         let mut s = MmStore::new(1e9);
-        assert!(s.put("k", 5e5, 50));
-        assert!(!s.put("k", 5e5, 50));
+        assert!(s.put(7, 5e5, 50));
+        assert!(!s.put(7, 5e5, 50));
         assert_eq!(s.len(), 1);
         assert_eq!(s.used_bytes(), 5e5);
         assert_eq!(s.stats().dedup_puts, 1);
@@ -194,40 +384,149 @@ mod tests {
     #[test]
     fn lru_eviction_under_pressure() {
         let mut s = MmStore::new(3e6);
-        s.put("a", 1e6, 1);
-        s.put("b", 1e6, 2);
-        s.put("c", 1e6, 3);
-        // Touch "a" so "b" becomes LRU.
-        s.get("a").unwrap();
-        s.put("d", 1e6, 4);
-        assert!(s.contains("a"));
-        assert!(!s.contains("b"), "LRU victim");
-        assert!(s.contains("c") && s.contains("d"));
+        s.put(1, 1e6, 1);
+        s.put(2, 1e6, 2);
+        s.put(3, 1e6, 3);
+        // Touch key 1 so key 2 becomes LRU.
+        s.get(1).unwrap();
+        s.put(4, 1e6, 4);
+        assert!(s.contains(1));
+        assert!(!s.contains(2), "LRU victim");
+        assert!(s.contains(3) && s.contains(4));
         assert_eq!(s.stats().evictions, 1);
         assert!(s.used_bytes() <= s.capacity_bytes());
     }
 
     #[test]
+    fn eviction_order_follows_recency_exactly() {
+        let mut s = MmStore::new(4e6);
+        for k in 1..=4u64 {
+            s.put(k, 1e6, k as usize);
+        }
+        // Recency (old → new) is now 1,2,3,4. Touch 2 then 1: 3,4,2,1.
+        s.get(2).unwrap();
+        s.get(1).unwrap();
+        s.put(5, 1e6, 5); // evicts 3
+        assert!(!s.contains(3));
+        s.put(6, 1e6, 6); // evicts 4
+        assert!(!s.contains(4));
+        s.put(7, 1e6, 7); // evicts 2
+        assert!(!s.contains(2));
+        assert!(s.contains(1) && s.contains(5) && s.contains(6) && s.contains(7));
+        assert_eq!(s.stats().evictions, 3);
+    }
+
+    #[test]
     fn oversized_blob_rejected() {
         let mut s = MmStore::new(1e6);
-        assert!(!s.put("huge", 2e6, 999));
-        assert!(!s.contains("huge"));
+        assert!(!s.put(99, 2e6, 999));
+        assert!(!s.contains(99));
         assert_eq!(s.used_bytes(), 0.0);
+    }
+
+    #[test]
+    fn oversized_blob_does_not_flush_resident_entries() {
+        // Regression: the pre-overhaul store evicted the ENTIRE pool before
+        // noticing the blob could never fit. The size check must come first.
+        let mut s = MmStore::new(3e6);
+        s.put(1, 1e6, 1);
+        s.put(2, 1e6, 2);
+        s.put(3, 1e6, 3);
+        assert!(!s.put(666, 5e6, 666), "oversized blob must be rejected");
+        assert_eq!(s.len(), 3, "resident entries must survive an oversized put");
+        assert!(s.contains(1) && s.contains(2) && s.contains(3));
+        assert_eq!(s.stats().evictions, 0, "no eviction for an impossible fit");
+        assert_eq!(s.used_bytes(), 3e6);
+    }
+
+    #[test]
+    fn slab_slots_are_recycled() {
+        let mut s = MmStore::new(2e6);
+        for k in 0..100u64 {
+            s.put(k, 1e6, 1);
+        }
+        // At most 2 resident at a time → the slab must not have grown to 100.
+        assert_eq!(s.len(), 2);
+        assert!(s.nodes.len() <= 3, "slab len {} — free-list recycling broken", s.nodes.len());
+        assert_eq!(s.stats().evictions, 98);
     }
 
     #[test]
     fn injected_failures_force_misses() {
         let mut s = MmStore::new(1e9).with_failures(1.0, 7);
-        s.put("k", 1e5, 10);
-        assert!(s.get("k").is_none(), "100% failure injection");
+        s.put(5, 1e5, 10);
+        assert!(s.get(5).is_none(), "100% failure injection");
         assert_eq!(s.stats().misses, 1);
     }
 
     #[test]
     fn partial_failure_rate_roughly_respected() {
         let mut s = MmStore::new(1e9).with_failures(0.3, 9);
-        s.put("k", 1e5, 10);
-        let misses = (0..1000).filter(|_| s.get("k").is_none()).count();
+        s.put(5, 1e5, 10);
+        let misses = (0..1000).filter(|_| s.get(5).is_none()).count();
         assert!((200..400).contains(&misses), "misses={misses}");
+    }
+
+    /// Differential property test: the O(1) intrusive-LRU store and the
+    /// naive reference model must agree on every observable — return
+    /// values, residency of every key in the universe, `used_bytes`, `len`,
+    /// and the full stats counters — after every operation of randomized
+    /// put/get sequences that force plenty of evictions.
+    #[test]
+    fn differential_vs_naive_reference_model() {
+        use crate::testkit::{check, ensure};
+
+        // (is_put, key, size_units, visual_tokens)
+        check(
+            "mmstore-differential",
+            0x11f,
+            150,
+            |r| {
+                let ops: Vec<(bool, u64, u64, usize)> = (0..r.below(120) + 20)
+                    .map(|_| {
+                        (
+                            r.chance(0.6),
+                            r.below(12),             // small key universe → collisions + reuse
+                            r.below(5) + 1,          // 1..=5 capacity units
+                            r.below(1000) as usize,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                // Capacity of 8 units: most puts fit, sequences overflow.
+                let unit = 1e5;
+                let mut fast = MmStore::new(8.0 * unit);
+                let mut slow = reference::NaiveLru::new(8.0 * unit);
+                for &(is_put, key, units, vt) in ops {
+                    if is_put {
+                        let a = fast.put(key, units as f64 * unit, vt);
+                        let b = slow.put(key, units as f64 * unit, vt);
+                        ensure(a == b, format!("put({key}) returned {a} vs {b}"))?;
+                    } else {
+                        let a = fast.get(key);
+                        let b = slow.get(key);
+                        ensure(a == b, format!("get({key}) returned {a:?} vs {b:?}"))?;
+                    }
+                    ensure(
+                        fast.stats() == slow.stats(),
+                        format!("stats diverged: {:?} vs {:?}", fast.stats(), slow.stats()),
+                    )?;
+                    ensure(
+                        (fast.used_bytes() - slow.used_bytes()).abs() < 1e-6,
+                        format!("used {} vs {}", fast.used_bytes(), slow.used_bytes()),
+                    )?;
+                    ensure(fast.len() == slow.len(), "len diverged")?;
+                    for k in 0..12u64 {
+                        ensure(
+                            fast.contains(k) == slow.contains(k),
+                            format!("residency of {k} diverged"),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,24 +1,43 @@
 //! Deterministic discrete-event engine.
 //!
-//! Events are ordered by `(time, sequence)`: ties break in scheduling order,
-//! so runs are bit-reproducible under a fixed seed. Time is kept as integer
-//! nanoseconds internally to make the ordering total (no NaN/epsilon traps);
-//! the public API speaks f64 seconds.
+//! Events are ordered by `(time, class, sequence)`: at equal times,
+//! **arrival-class** events ([`EventQueue::at_arrival`]) fire before normal
+//! ones, and ties within a class break in scheduling order — so runs are
+//! bit-reproducible under a fixed seed, and a lazily-scheduled arrival
+//! stream orders exactly like the old schedule-everything-up-front pattern
+//! (where arrivals held the lowest sequence numbers by construction). Time
+//! is kept as integer nanoseconds internally to make the ordering total (no
+//! NaN/epsilon traps) and the run loop compares in integer ns (no ns→f64
+//! conversion per peek); the public API speaks f64 seconds.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+/// Same-timestamp scheduling class of arrival events (fire first).
+const CLASS_ARRIVAL: u8 = 0;
+/// Same-timestamp scheduling class of ordinary events.
+const CLASS_NORMAL: u8 = 1;
+
+/// Round seconds to the engine's integer-nanosecond grid — exactly the
+/// rounding [`EventQueue::at`] applies, exposed so models that fuse work
+/// inline (macro-stepping) land on the same timestamps the event path
+/// would have produced.
+pub fn sec_to_ns(t: f64) -> u64 {
+    (t.max(0.0) * 1e9).round() as u64
+}
 
 /// Internal heap entry. Ordering is manual so `E` needs no trait bounds.
 #[derive(Debug, Clone)]
 struct Entry<E> {
     time_ns: u64,
+    class: u8,
     seq: u64,
     event: EventBox<E>,
 }
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time_ns == other.time_ns && self.seq == other.seq
+        self.time_ns == other.time_ns && self.class == other.class && self.seq == other.seq
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -29,7 +48,10 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time_ns.cmp(&other.time_ns).then(self.seq.cmp(&other.seq))
+        self.time_ns
+            .cmp(&other.time_ns)
+            .then(self.class.cmp(&other.class))
+            .then(self.seq.cmp(&other.seq))
     }
 }
 
@@ -78,6 +100,18 @@ impl<E> EventQueue<E> {
         self.now_ns as f64 / 1e9
     }
 
+    /// Current virtual time on the integer-nanosecond grid.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Timestamp (ns) of the earliest pending event, if any. Models that
+    /// fuse work inline (decode macro-stepping) use this to bound how far
+    /// they may run without an event observing intermediate state.
+    pub fn next_event_ns(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse(e)| e.time_ns)
+    }
+
     /// Total events processed so far (perf counter).
     pub fn processed(&self) -> u64 {
         self.processed
@@ -87,13 +121,25 @@ impl<E> EventQueue<E> {
         self.heap.len()
     }
 
+    fn push(&mut self, t: f64, class: u8, event: E) {
+        let t_ns = sec_to_ns(t).max(self.now_ns);
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time_ns: t_ns, class, seq: self.seq, event: EventBox(event) }));
+    }
+
     /// Schedule at an absolute time (clamped to now — events may not be
     /// scheduled in the past).
     pub fn at(&mut self, t: f64, event: E) {
-        let t_ns = (t.max(0.0) * 1e9).round() as u64;
-        let t_ns = t_ns.max(self.now_ns);
-        self.seq += 1;
-        self.heap.push(Reverse(Entry { time_ns: t_ns, seq: self.seq, event: EventBox(event) }));
+        self.push(t, CLASS_NORMAL, event);
+    }
+
+    /// Schedule an **arrival-class** event: at equal timestamps it fires
+    /// before every normal event, regardless of when it was scheduled.
+    /// This lets an arrival stream be scheduled lazily (one pending arrival
+    /// at a time) while keeping the event order of the eager pattern that
+    /// pushed all arrivals first.
+    pub fn at_arrival(&mut self, t: f64, event: E) {
+        self.push(t, CLASS_ARRIVAL, event);
     }
 
     /// Schedule after a delay from now.
@@ -168,11 +214,41 @@ pub trait SimModel {
     }
 }
 
+/// Largest integer-ns timestamp still inside the horizon `until`
+/// (seconds): the u64 `h` such that events fire iff `time_ns <= h` —
+/// equivalent to the old per-event `time_ns as f64 / 1e9 > until` check,
+/// hoisted out of the loop so the hot peek compares integers. `None` means
+/// no timestamp is inside the horizon. Public so models that fuse work
+/// inline (decode macro-stepping) can bound themselves by the exact same
+/// cutoff [`run`] applies.
+pub fn horizon_ns(until: f64) -> Option<u64> {
+    if until.is_nan() || until >= u64::MAX as f64 / 1e9 {
+        // NaN never compares greater (the old check processed everything);
+        // +inf and anything past the representable grid mean "no bound".
+        return Some(u64::MAX);
+    }
+    if until < 0.0 {
+        return None; // every timestamp (≥ 0) is already past the horizon
+    }
+    let mut n = (until * 1e9).round() as u64;
+    // Correct the f64 round-trip at the boundary in either direction.
+    while n > 0 && (n as f64) / 1e9 > until {
+        n -= 1;
+    }
+    while n < u64::MAX && ((n + 1) as f64) / 1e9 <= until {
+        n += 1;
+    }
+    Some(n)
+}
+
 /// Run until the queue drains, `until` is passed, or the model says done.
 /// Returns the final virtual time.
 pub fn run<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, until: f64) -> f64 {
+    let Some(until_ns) = horizon_ns(until) else {
+        return q.now();
+    };
     while let Some(Reverse(head)) = q.heap.peek() {
-        if head.time_ns as f64 / 1e9 > until {
+        if head.time_ns > until_ns {
             break;
         }
         let (now, ev) = q.pop().expect("peeked");
@@ -307,6 +383,69 @@ mod tests {
         let fired_at = t.arm(&mut q, Ev::Tick(2));
         assert_eq!(fired_at, 12.0, "next grid slot after t=10 on a 3s grid");
         assert_eq!(t.next(), 15.0);
+    }
+
+    #[test]
+    fn arrival_class_fires_before_same_time_normal_events() {
+        // Schedule a normal event FIRST, then an arrival at the same time:
+        // the arrival must still fire first — reproducing the ordering of
+        // the eager pattern where all arrivals were scheduled up-front.
+        let mut q = EventQueue::new();
+        q.at(1.0, Ev::Tick(99));
+        q.at_arrival(1.0, Ev::Tick(1));
+        q.at_arrival(1.0, Ev::Tick(2)); // arrivals keep schedule order among themselves
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 10.0);
+        let order: Vec<u32> = m.seen.iter().map(|&(_, n)| n).collect();
+        assert_eq!(order, vec![1, 2, 99]);
+    }
+
+    #[test]
+    fn next_event_ns_tracks_head() {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        assert_eq!(q.next_event_ns(), None);
+        q.at(2.0, Ev::Tick(2));
+        q.at(1.0, Ev::Tick(1));
+        assert_eq!(q.next_event_ns(), Some(1_000_000_000));
+        q.pop().unwrap();
+        assert_eq!(q.next_event_ns(), Some(2_000_000_000));
+    }
+
+    #[test]
+    fn sec_to_ns_matches_at_rounding() {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        for t in [0.0, 1.5e-9, 0.123456789, 7.0 / 3.0, 1e6] {
+            q.at(t, Ev::Tick(0));
+            let (fired, _) = q.pop().unwrap();
+            assert_eq!(sec_to_ns(t), (fired * 1e9).round() as u64, "t={t}");
+        }
+        assert_eq!(sec_to_ns(-1.0), 0, "negative times clamp like at()");
+    }
+
+    #[test]
+    fn horizon_boundary_is_inclusive_in_ns() {
+        // An event exactly on the horizon fires; one a nanosecond past does
+        // not — the integer comparison must reproduce the old f64 check.
+        let mut q = EventQueue::new();
+        q.at(5.0, Ev::Tick(1));
+        q.at(5.0 + 1e-9, Ev::Tick(2));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 5.0);
+        assert_eq!(m.seen, vec![(5.0, 1)]);
+        assert_eq!(q.pending(), 1);
+        // Infinite horizon drains everything.
+        run(&mut m, &mut q, f64::INFINITY);
+        assert_eq!(m.seen.len(), 2);
+    }
+
+    #[test]
+    fn negative_horizon_processes_nothing() {
+        let mut q = EventQueue::new();
+        q.at(0.0, Ev::Tick(1));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, -1.0);
+        assert!(m.seen.is_empty());
+        assert_eq!(q.pending(), 1);
     }
 
     #[test]

@@ -75,7 +75,7 @@ impl PsNpu {
     fn recompute_rates(&mut self) {
         // O(n): each task's background demand is (Σ all demands) − its own.
         // (The naive per-pair sum was O(n²) per set change and dominated the
-        // perf microbench at high task counts — see EXPERIMENTS.md §Perf.)
+        // perf microbench at high task counts — see docs/PERFORMANCE.md.)
         let total = self.tasks.iter().fold(ResourceVec::ZERO, |acc, t| acc.add(&t.demand));
         for t in &mut self.tasks {
             let others = ResourceVec {
@@ -121,6 +121,23 @@ impl PsNpu {
                 (now + dt, t.id)
             })
             .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    /// Account an exclusive busy interval `[from, to]` executed *outside*
+    /// the task list — the serving loop's fused decode macro-steps
+    /// (`docs/PERFORMANCE.md`). The caller guarantees the NPU is otherwise
+    /// idle and that no event can observe the NPU inside the interval;
+    /// busy-time and work accounting advance exactly as if a lone rate-1.0
+    /// task had started at `from` and completed at `to`.
+    pub fn run_exclusive(&mut self, from: f64, to: f64, work: f64) {
+        debug_assert!(self.tasks.is_empty(), "run_exclusive on a busy NPU");
+        debug_assert!(to >= from - 1e-9, "exclusive interval reversed");
+        self.advance(from);
+        if to > self.last_update {
+            self.last_update = to;
+        }
+        self.busy_time += (to - from).max(0.0);
+        self.work_done += work.max(0.0);
     }
 
     pub fn active_tasks(&self) -> usize {
@@ -232,5 +249,21 @@ mod tests {
     fn finish_unknown_task_is_false() {
         let mut npu = PsNpu::new();
         assert!(!npu.finish(0.0, 999));
+    }
+
+    #[test]
+    fn run_exclusive_accounts_like_a_lone_task() {
+        // A real lone task over [0,1] and an exclusive interval over [2,3]
+        // must contribute identical busy time.
+        let mut npu = PsNpu::new();
+        let id = npu.start(0.0, StageKind::Decode.demand(), 1.0);
+        npu.finish(1.0, id);
+        npu.run_exclusive(2.0, 3.0, 1.0);
+        assert!((npu.utilization(4.0) - 0.5).abs() < 1e-9);
+        // Subsequent task starts continue from the advanced clock.
+        let id2 = npu.start(4.0, StageKind::Decode.demand(), 0.5);
+        let (t, cid) = npu.next_completion(4.0).unwrap();
+        assert_eq!(cid, id2);
+        assert!((t - 4.5).abs() < 1e-9);
     }
 }

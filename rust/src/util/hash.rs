@@ -1,11 +1,15 @@
 //! Hashing helpers.
 //!
 //! The MM Store keys multimodal inputs by content hash (paper §3.2: "the hash
-//! of multimodal inputs as the key"). We use SHA-256 (available in the vendor
-//! set) for content keys — collision-safe across requests — and FNV-1a for
-//! cheap in-process hashing.
-
-use sha2::{Digest, Sha256};
+//! of multimodal inputs as the key"). Content keys are **interned 64-bit
+//! fingerprints** (FNV-1a strengthened with a SplitMix64 avalanche finisher):
+//! `Copy`, allocation-free, and directly usable as hash-map keys on the
+//! serving hot path — unlike the hex `String` keys the store used before the
+//! million-request overhaul (see `docs/PERFORMANCE.md`). Real deployments
+//! would hash pixel data with a cryptographic digest; the simulator hashes
+//! the input descriptor, which has the same dedup semantics (identical
+//! inputs collide, distinct inputs do not, up to the 64-bit birthday bound —
+//! negligible at simulated pool sizes).
 
 /// 64-bit FNV-1a. Fast, non-cryptographic.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -17,23 +21,33 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Content key: first 16 bytes of SHA-256, hex-encoded (32 chars).
-/// Stable across runs — suitable as an MM-Store key and wire identifier.
-pub fn content_key(bytes: &[u8]) -> String {
-    let digest = Sha256::digest(bytes);
-    hex(&digest[..16])
+/// SplitMix64 finalizer: full-avalanche bit mix. FNV-1a alone diffuses the
+/// low bits poorly for short inputs; the finisher makes every output bit
+/// depend on every input bit, which matters when the value seeds hash maps.
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^= x >> 31;
+    x
+}
+
+/// 64-bit content fingerprint: FNV-1a + avalanche. Stable across runs —
+/// suitable as an MM-Store key and wire identifier.
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    mix64(fnv1a(bytes))
 }
 
 /// Content key for a synthetic image described by (dataset id, image id,
-/// width, height). Real deployments hash pixels; the simulator hashes the
-/// descriptor, which has the same dedup semantics (identical inputs collide).
-pub fn image_key(dataset: &str, image_id: u64, width: u32, height: u32) -> String {
+/// width, height).
+pub fn image_key(dataset: &str, image_id: u64, width: u32, height: u32) -> u64 {
     let mut buf = Vec::with_capacity(dataset.len() + 16);
     buf.extend_from_slice(dataset.as_bytes());
     buf.extend_from_slice(&image_id.to_le_bytes());
     buf.extend_from_slice(&width.to_le_bytes());
     buf.extend_from_slice(&height.to_le_bytes());
-    content_key(&buf)
+    content_hash(&buf)
 }
 
 /// Lower-case hex encoding.
@@ -58,14 +72,21 @@ mod tests {
     }
 
     #[test]
-    fn content_key_stable_and_distinct() {
-        let a = content_key(b"hello");
-        let b = content_key(b"hello");
-        let c = content_key(b"world");
+    fn content_hash_stable_and_distinct() {
+        let a = content_hash(b"hello");
+        let b = content_hash(b"hello");
+        let c = content_hash(b"world");
         assert_eq!(a, b);
         assert_ne!(a, c);
-        assert_eq!(a.len(), 32);
-        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn mix64_changes_low_bits_on_high_bit_flip() {
+        // The property FNV alone lacks: flipping a high input bit must
+        // perturb the low output bits (they index hash-map buckets).
+        let a = mix64(1u64 << 60);
+        let b = mix64(1u64 << 61);
+        assert_ne!(a & 0xffff, b & 0xffff);
     }
 
     #[test]
@@ -77,5 +98,10 @@ mod tests {
         assert_eq!(k1, k2);
         assert_ne!(k1, k3);
         assert_ne!(k1, k4);
+    }
+
+    #[test]
+    fn hex_encodes() {
+        assert_eq!(hex(&[0x0f, 0xa0]), "0fa0");
     }
 }

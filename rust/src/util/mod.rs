@@ -12,7 +12,7 @@
 //! * [`toml`] — TOML-subset parser backing the config system.
 //! * [`stats`] — streaming summaries, percentiles, histograms.
 //! * [`cli`] — tiny declarative argument parser for the binary and benches.
-//! * [`hash`] — FNV-1a fast hashing + hex helpers (content keys use `sha2`).
+//! * [`hash`] — FNV-1a fast hashing, interned 64-bit content keys, hex.
 //! * [`clock`] — wall/virtual time abstraction shared by sim and real engine.
 
 pub mod cli;

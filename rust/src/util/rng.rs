@@ -131,8 +131,11 @@ impl Rng {
         self.normal(mu, sigma).exp()
     }
 
-    /// Zipf-distributed rank in [1, n] with exponent `s` (inverse-CDF over a
-    /// precomputed normalizer would be faster; n here is small).
+    /// Zipf-distributed rank in [1, n] with exponent `s`, by linear scan —
+    /// O(n) **per draw**, fine for one-off draws over small pools. Repeated
+    /// sampling from one pool (the workload generator's image ids) must use
+    /// [`ZipfTable`] instead: the scan made million-request workload
+    /// sampling O(n²) and dominated the throughput bench's setup.
     pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
         debug_assert!(n >= 1);
         let h: f64 = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum();
@@ -171,6 +174,39 @@ impl Rng {
             let j = self.below(i as u64 + 1) as usize;
             xs.swap(i, j);
         }
+    }
+}
+
+/// Precomputed inverse-CDF sampler for Zipf(n, s): O(n) once to build,
+/// one uniform draw + an O(log n) binary search per sample. Consumes
+/// exactly one [`Rng::f64`] per draw — the same stream advancement as
+/// [`Rng::zipf`] — so swapping sampler implementations never perturbs
+/// other draws taken from the same generator.
+#[derive(Debug, Clone)]
+pub struct ZipfTable {
+    /// `cdf[k-1] = Σ_{i=1..k} i^-s`, accumulated in ascending-k order
+    /// (the same summation order the scan sampler uses).
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "Zipf pool must be non-empty");
+        let mut cdf = Vec::with_capacity(n as usize);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        Self { cdf }
+    }
+
+    /// Sample a rank in `[1, n]`.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64() * self.cdf[self.cdf.len() - 1];
+        // First k with cdf[k-1] >= u (the scan's `u - prefix <= 0`).
+        let idx = self.cdf.partition_point(|&c| c < u);
+        (idx.min(self.cdf.len() - 1) + 1) as u64
     }
 }
 
@@ -260,6 +296,35 @@ mod tests {
         let mut counts = [0u32; 10];
         for _ in 0..20_000 {
             counts[(r.zipf(10, 1.1) - 1) as usize] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn zipf_table_matches_scan_sampler() {
+        // Same RNG state → same rank, across pool sizes and many draws
+        // (the two compute the same comparison in different orders; on
+        // non-knife-edge uniforms — i.e. all of them at these sizes —
+        // results coincide, and each consumes exactly one f64).
+        for n in [1u64, 2, 7, 50, 500] {
+            let table = ZipfTable::new(n, 1.2);
+            let mut a = Rng::new(99 + n);
+            let mut b = Rng::new(99 + n);
+            for _ in 0..2000 {
+                assert_eq!(table.sample(&mut a), b.zipf(n, 1.2), "pool {n}");
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "stream advancement must match");
+        }
+    }
+
+    #[test]
+    fn zipf_table_distribution_is_head_heavy() {
+        let table = ZipfTable::new(10, 1.1);
+        let mut r = Rng::new(8);
+        let mut counts = [0u32; 10];
+        for _ in 0..20_000 {
+            counts[(table.sample(&mut r) - 1) as usize] += 1;
         }
         assert!(counts[0] > counts[4]);
         assert!(counts[4] > counts[9]);

@@ -16,6 +16,24 @@ pub enum Arrival {
     Uniform,
 }
 
+impl Arrival {
+    /// Sample one inter-arrival gap. The RNG draw order is part of the
+    /// determinism contract: [`inject`] and the lazy
+    /// [`super::stream::WorkloadStream`] both call this once per request,
+    /// so materialized and streamed arrival times are bit-identical.
+    pub(crate) fn sample_dt(&self, rng: &mut Rng, rate: f64) -> f64 {
+        match self {
+            Arrival::Poisson => rng.exp(rate),
+            Arrival::Uniform => 1.0 / rate,
+        }
+    }
+}
+
+/// The dedicated RNG stream id for arrival-time draws (independent of the
+/// request-shape stream, so interleaving the two draws per request — as the
+/// lazy generator does — cannot perturb either sequence).
+pub(crate) const ARRIVAL_STREAM: u64 = 0x1a11;
+
 /// Assign arrival times at `rate` req/s starting from t=0.
 pub fn inject(
     specs: &[RequestSpec],
@@ -24,17 +42,13 @@ pub fn inject(
     seed: u64,
 ) -> Vec<ArrivedRequest> {
     assert!(rate > 0.0, "rate must be positive");
-    let mut rng = Rng::with_stream(seed, 0x1a11);
+    let mut rng = Rng::with_stream(seed, ARRIVAL_STREAM);
     let mut t = 0.0;
     specs
         .iter()
         .map(|spec| {
-            let dt = match process {
-                Arrival::Poisson => rng.exp(rate),
-                Arrival::Uniform => 1.0 / rate,
-            };
-            t += dt;
-            ArrivedRequest { spec: spec.clone(), arrival: t }
+            t += process.sample_dt(&mut rng, rate);
+            ArrivedRequest { spec: *spec, arrival: t }
         })
         .collect()
 }

@@ -8,25 +8,31 @@
 
 pub mod injector;
 pub mod phases;
+pub mod stream;
 pub mod trace;
 
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::hash;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, ZipfTable};
 
 /// A multimodal input attached to a request.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Copy`: request specs are plain data — no heap allocation per request,
+/// which is what lets the simulator stream million-request traces with
+/// O(in-flight) memory (see `docs/PERFORMANCE.md`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ImageInput {
     pub width: u32,
     pub height: u32,
-    /// Content key for MM-Store dedup (identical images share a key).
-    pub key: String,
+    /// Interned 64-bit content key for MM-Store dedup (identical images
+    /// share a key; [`crate::util::hash::image_key`]).
+    pub key: u64,
     /// Visual tokens this image encodes to (`round(w/28)·round(h/28)`).
     pub visual_tokens: usize,
 }
 
 /// One inference request, before arrival-time assignment.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestSpec {
     pub id: u64,
     pub image: Option<ImageInput>,
@@ -46,11 +52,15 @@ impl RequestSpec {
 }
 
 /// A request with its injection time (seconds from run start).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ArrivedRequest {
     pub spec: RequestSpec,
     pub arrival: f64,
 }
+
+/// The dedicated RNG stream id for request-shape draws (see
+/// [`injector::ARRIVAL_STREAM`] for why the two streams are separate).
+pub(crate) const SPEC_STREAM: u64 = 0x10ad;
 
 /// Sample `spec.num_requests` requests matching the dataset statistics.
 ///
@@ -58,14 +68,24 @@ pub struct ArrivedRequest {
 /// multimodal requests reuse an earlier image (exercising MM-Store
 /// cross-request reuse, §3.2). Deterministic under `seed`.
 pub fn generate(spec: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Vec<RequestSpec> {
-    let mut rng = Rng::with_stream(seed, 0x10ad);
+    let mut rng = Rng::with_stream(seed, SPEC_STREAM);
     let mut out = Vec::with_capacity(spec.num_requests);
-    // Pool size chosen so Zipf head-mass ≈ requested reuse probability.
-    let pool = ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64;
+    let zipf = image_pool(spec);
     for id in 0..spec.num_requests as u64 {
-        out.push(sample_spec(id, &mut rng, spec, vit, pool, seed));
+        out.push(sample_spec(id, &mut rng, spec, vit, &zipf, seed));
     }
     out
+}
+
+/// Zipf image-id sampler for a workload — pool sized so Zipf head-mass ≈
+/// the requested reuse probability, precomputed once (O(pool)) so each
+/// draw is O(log pool) instead of the O(pool) scan that made
+/// million-request sampling quadratic. Shared by [`generate`], the phased
+/// generator and the lazy [`stream::WorkloadStream`] so all sample
+/// identical request sequences.
+pub(crate) fn image_pool(spec: &WorkloadSpec) -> ZipfTable {
+    let pool = ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64;
+    ZipfTable::new(pool, 1.2)
 }
 
 /// Sample one request from the dataset statistics. Shared by [`generate`]
@@ -77,12 +97,12 @@ pub(crate) fn sample_spec(
     rng: &mut Rng,
     spec: &WorkloadSpec,
     vit: &VitDesc,
-    pool: u64,
+    zipf: &ZipfTable,
     seed: u64,
 ) -> RequestSpec {
     let has_image = rng.chance(spec.image_fraction);
     let image = if has_image {
-        let image_id = rng.zipf(pool, 1.2);
+        let image_id = zipf.sample(rng);
         let (w, h) = if spec.fixed_resolution {
             (spec.image_width, spec.image_height)
         } else {
@@ -177,8 +197,8 @@ mod tests {
         spec.image_reuse = 0.3;
         spec.fixed_resolution = true; // isolate key reuse from resolution jitter
         let reqs = generate(&spec, &vit(), 11);
-        let keys: Vec<&str> =
-            reqs.iter().filter_map(|r| r.image.as_ref()).map(|i| i.key.as_str()).collect();
+        let keys: Vec<u64> =
+            reqs.iter().filter_map(|r| r.image.as_ref()).map(|i| i.key).collect();
         let distinct: std::collections::HashSet<_> = keys.iter().collect();
         assert!(
             distinct.len() < keys.len(),

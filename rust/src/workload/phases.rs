@@ -13,7 +13,7 @@
 //! Deterministic under the seed, like every other generator in this crate.
 
 use crate::config::{VitDesc, WorkloadSpec};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, ZipfTable};
 use crate::workload::{sample_spec, ArrivedRequest};
 
 /// One traffic phase: a stretch of Poisson arrivals with its own rate and
@@ -105,6 +105,7 @@ pub fn generate_phased(
     let mut rng = Rng::with_stream(seed, 0x9a5e);
     let pool =
         ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
+    let zipf = ZipfTable::new(pool, 1.2);
     let mut out = Vec::with_capacity(plan.expected_requests());
     let mut phase_start = 0.0f64;
     let mut id = 0u64;
@@ -130,7 +131,7 @@ pub fn generate_phased(
                     break;
                 }
                 out.push(ArrivedRequest {
-                    spec: sample_spec(id, &mut rng, &spec, vit, pool, seed),
+                    spec: sample_spec(id, &mut rng, &spec, vit, &zipf, seed),
                     arrival: t,
                 });
                 id += 1;

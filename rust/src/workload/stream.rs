@@ -1,0 +1,241 @@
+//! Lazy workload streaming — O(in-flight) memory for million-request runs.
+//!
+//! [`super::generate`] + [`super::injector::inject`] materialize the whole
+//! trace (`Vec<RequestSpec>` then `Vec<ArrivedRequest>`) before the
+//! simulation starts. At paper scale (512 requests) that is free; at the
+//! 1M-request scale the throughput bench drives (`benches/sim_throughput.rs`)
+//! it is two full-trace allocations plus one heap entry per arrival in the
+//! event queue. [`WorkloadStream`] instead yields arrivals one at a time,
+//! drawing from the **same two RNG streams in the same per-request order**
+//! as the materialized path, so streamed and materialized runs are
+//! bit-identical (asserted by `tests/determinism_golden.rs`).
+//!
+//! [`ArrivalSource`] is the serving loop's uniform view: a replayed vector
+//! (traces, phased workloads, tests) or a lazy stream, either way exposing
+//! the last arrival time up-front so the simulation horizon stays exactly
+//! what it was before streaming existed.
+
+use crate::config::{VitDesc, WorkloadSpec};
+use crate::util::rng::{Rng, ZipfTable};
+use crate::workload::injector::{Arrival, ARRIVAL_STREAM};
+use crate::workload::{image_pool, sample_spec, ArrivedRequest, SPEC_STREAM};
+
+/// Lazily samples the exact request sequence of
+/// `inject(&generate(spec, vit, seed), rate, process, seed)`.
+///
+/// Shape draws and arrival-gap draws come from independent RNG streams
+/// ([`SPEC_STREAM`] / [`ARRIVAL_STREAM`]), so interleaving them per request
+/// — rather than running each stream to exhaustion like the materialized
+/// path does — produces identical values.
+pub struct WorkloadStream {
+    spec: WorkloadSpec,
+    vit: VitDesc,
+    seed: u64,
+    rate: f64,
+    process: Arrival,
+    zipf: ZipfTable,
+    spec_rng: Rng,
+    arrival_rng: Rng,
+    next_id: u64,
+    t: f64,
+}
+
+impl WorkloadStream {
+    pub fn new(spec: &WorkloadSpec, vit: &VitDesc, rate: f64, process: Arrival, seed: u64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Self {
+            spec: spec.clone(),
+            vit: vit.clone(),
+            seed,
+            rate,
+            process,
+            zipf: image_pool(spec),
+            spec_rng: Rng::with_stream(seed, SPEC_STREAM),
+            arrival_rng: Rng::with_stream(seed, ARRIVAL_STREAM),
+            next_id: 0,
+            t: 0.0,
+        }
+    }
+
+    /// Requests this stream will yield in total.
+    pub fn len_total(&self) -> usize {
+        self.spec.num_requests
+    }
+
+    /// The arrival time of the **last** request, computed by replaying only
+    /// the arrival-gap RNG stream (no request shapes are sampled). O(n)
+    /// cheap draws, no allocation — lets the caller fix the simulation
+    /// horizon before consuming a single request.
+    pub fn last_arrival(&self) -> f64 {
+        let mut rng = Rng::with_stream(self.seed, ARRIVAL_STREAM);
+        let mut t = 0.0;
+        for _ in 0..self.spec.num_requests {
+            t += self.process.sample_dt(&mut rng, self.rate);
+        }
+        t
+    }
+}
+
+impl Iterator for WorkloadStream {
+    type Item = ArrivedRequest;
+
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        if self.next_id >= self.spec.num_requests as u64 {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let spec =
+            sample_spec(id, &mut self.spec_rng, &self.spec, &self.vit, &self.zipf, self.seed);
+        self.t += self.process.sample_dt(&mut self.arrival_rng, self.rate);
+        Some(ArrivedRequest { spec, arrival: self.t })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.spec.num_requests - self.next_id as usize;
+        (left, Some(left))
+    }
+}
+
+/// What the serving loop draws arrivals from: a pre-materialized replay or
+/// a lazy generator. Both report `last_arrival` up-front (the horizon
+/// anchor) without holding more than O(in-flight) extra state in the lazy
+/// case.
+pub enum ArrivalSource {
+    /// Replay of an explicit arrival list (traces, phased workloads, tests).
+    Replay(std::vec::IntoIter<ArrivedRequest>),
+    /// Lazy generation (the default serving path).
+    Stream(WorkloadStream),
+}
+
+impl ArrivalSource {
+    /// Replay an explicit arrival list. The list is stable-sorted by
+    /// arrival time: the serving loop keeps exactly one pending arrival
+    /// event, so out-of-order timestamps would otherwise be silently
+    /// clamped forward to the previous arrival's delivery time (the
+    /// pre-streaming simulator scheduled all arrivals up-front and honored
+    /// out-of-order timestamps via heap order; sorting reproduces that
+    /// delivery order, with ties keeping list order).
+    pub fn replay(mut arrivals: Vec<ArrivedRequest>) -> Self {
+        arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        ArrivalSource::Replay(arrivals.into_iter())
+    }
+
+    /// Arrival time of the final request (0.0 for an empty source).
+    pub fn last_arrival(&self) -> f64 {
+        match self {
+            ArrivalSource::Replay(it) => it.as_slice().last().map(|a| a.arrival).unwrap_or(0.0),
+            ArrivalSource::Stream(s) => {
+                if s.len_total() == 0 {
+                    0.0
+                } else {
+                    s.last_arrival()
+                }
+            }
+        }
+    }
+
+    /// Total requests the source will yield (including already-yielded ones
+    /// for a fresh source; the serving loop reads this before consuming).
+    pub fn len_total(&self) -> usize {
+        match self {
+            ArrivalSource::Replay(it) => it.as_slice().len(),
+            ArrivalSource::Stream(s) => s.len_total(),
+        }
+    }
+}
+
+impl Iterator for ArrivalSource {
+    type Item = ArrivedRequest;
+
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        match self {
+            ArrivalSource::Replay(it) => it.next(),
+            ArrivalSource::Stream(s) => s.next(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+    use crate::workload::injector::inject;
+    use crate::workload::generate;
+
+    fn vit() -> VitDesc {
+        ModelDesc::openpangu_7b_vl().vit
+    }
+
+    #[test]
+    fn stream_matches_materialized_path_bit_exactly() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let materialized = inject(&generate(&spec, &vit(), 42), 3.0, Arrival::Poisson, 42);
+        let streamed: Vec<ArrivedRequest> =
+            WorkloadStream::new(&spec, &vit(), 3.0, Arrival::Poisson, 42).collect();
+        assert_eq!(materialized, streamed);
+    }
+
+    #[test]
+    fn last_arrival_prescan_matches_final_yield() {
+        let spec = WorkloadSpec::visualwebinstruct();
+        let s = WorkloadStream::new(&spec, &vit(), 2.0, Arrival::Poisson, 7);
+        let predicted = s.last_arrival();
+        let last = s.last().unwrap().arrival;
+        assert_eq!(predicted, last, "pre-scan must replay the gap stream exactly");
+    }
+
+    #[test]
+    fn replay_source_reports_last_arrival_and_yields_in_order() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let arrivals = inject(&generate(&spec, &vit(), 1), 4.0, Arrival::Uniform, 1);
+        let expect_last = arrivals.last().unwrap().arrival;
+        let src = ArrivalSource::replay(arrivals.clone());
+        assert_eq!(src.last_arrival(), expect_last);
+        assert_eq!(src.len_total(), arrivals.len());
+        let back: Vec<ArrivedRequest> = src.collect();
+        assert_eq!(back, arrivals);
+    }
+
+    #[test]
+    fn unsorted_replay_is_delivered_in_time_order() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let mut arrivals = inject(&generate(&spec, &vit(), 2), 4.0, Arrival::Poisson, 2);
+        arrivals.truncate(8);
+        arrivals.swap(1, 5); // deliberately out of order
+        let src = ArrivalSource::replay(arrivals.clone());
+        assert_eq!(src.last_arrival(), arrivals.iter().map(|a| a.arrival).fold(0.0, f64::max));
+        let yielded: Vec<ArrivedRequest> = src.collect();
+        for w in yielded.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "replay must deliver in time order");
+        }
+        assert_eq!(yielded.len(), arrivals.len());
+    }
+
+    #[test]
+    fn empty_source_is_sane() {
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.num_requests = 0;
+        let src = ArrivalSource::Stream(WorkloadStream::new(
+            &spec,
+            &vit(),
+            1.0,
+            Arrival::Poisson,
+            0,
+        ));
+        assert_eq!(src.last_arrival(), 0.0);
+        assert_eq!(src.len_total(), 0);
+        assert_eq!(src.count(), 0);
+        assert_eq!(ArrivalSource::replay(Vec::new()).last_arrival(), 0.0);
+    }
+
+    #[test]
+    fn stream_size_hint_tracks_consumption() {
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.num_requests = 5;
+        let mut s = WorkloadStream::new(&spec, &vit(), 1.0, Arrival::Poisson, 3);
+        assert_eq!(s.size_hint(), (5, Some(5)));
+        s.next().unwrap();
+        assert_eq!(s.size_hint(), (4, Some(4)));
+    }
+}

@@ -18,9 +18,11 @@ pub fn to_json(r: &ArrivedRequest) -> Json {
         .set("output_tokens", r.spec.output_tokens);
     if let Some(img) = &r.spec.image {
         let mut im = Json::obj();
+        // The interned u64 key is serialized as fixed-width hex: JSON
+        // numbers are f64 and would silently round keys above 2^53.
         im.set("width", img.width as u64)
             .set("height", img.height as u64)
-            .set("key", img.key.as_str())
+            .set("key", format!("{:016x}", img.key).as_str())
             .set("visual_tokens", img.visual_tokens);
         o.set("image", im);
     }
@@ -37,14 +39,16 @@ pub fn from_json(v: &Json) -> Result<ArrivedRequest> {
             let g = |k: &str| {
                 im.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace: image '{k}'"))
             };
+            let key_hex = im
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace: image key"))?;
+            let key = u64::from_str_radix(key_hex, 16)
+                .map_err(|_| anyhow!("trace: image key '{key_hex}' is not 64-bit hex"))?;
             Some(ImageInput {
                 width: g("width")? as u32,
                 height: g("height")? as u32,
-                key: im
-                    .get("key")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("trace: image key"))?
-                    .to_string(),
+                key,
                 visual_tokens: g("visual_tokens")? as usize,
             })
         }
@@ -113,6 +117,45 @@ mod tests {
         let back = load(path).unwrap();
         assert_eq!(back, arrived);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn key_survives_json_as_hex() {
+        // A key above 2^53 would be corrupted by f64 JSON numbers; the hex
+        // string path must preserve all 64 bits.
+        let r = ArrivedRequest {
+            spec: RequestSpec {
+                id: 1,
+                image: Some(ImageInput {
+                    width: 280,
+                    height: 280,
+                    key: 0xfedc_ba98_7654_3210,
+                    visual_tokens: 100,
+                }),
+                text_tokens: 4,
+                output_tokens: 8,
+            },
+            arrival: 0.5,
+        };
+        let back = from_json(&to_json(&r)).unwrap();
+        assert_eq!(back.spec.image.unwrap().key, 0xfedc_ba98_7654_3210);
+    }
+
+    #[test]
+    fn bad_key_hex_is_rejected() {
+        let mut o = to_json(&ArrivedRequest {
+            spec: RequestSpec {
+                id: 2,
+                image: Some(ImageInput { width: 28, height: 28, key: 7, visual_tokens: 1 }),
+                text_tokens: 1,
+                output_tokens: 1,
+            },
+            arrival: 0.0,
+        });
+        let mut img = o.get("image").unwrap().clone();
+        img.set("key", "not-hex");
+        o.set("image", img);
+        assert!(from_json(&o).is_err());
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Determinism regression tests for the simulator hot-path overhaul.
+//!
+//! Three layers of protection for the per-request record trajectory:
+//!
+//! 1. **Fused vs per-token decode**: the macro-stepping fast path must be
+//!    record-bit-identical to the one-event-per-token baseline it replaced
+//!    (the baseline is still runnable via
+//!    `scheduler.fuse_decode_steps = false`).
+//! 2. **Streamed vs materialized workload**: the lazy arrival source must
+//!    reproduce the generate→inject→replay path exactly.
+//! 3. **Golden digests**: an FNV-1a digest over the full bit pattern of
+//!    every record, snapshotted under `tests/golden/`. On first run (or
+//!    after an intentional behavior change, by deleting the file) the
+//!    digest is written; afterwards any drift — scheduling, routing,
+//!    timing, RNG — fails here with both values.
+//!
+//!    NOTE: layer 3 only *arms* once the bootstrapped `.digest` files are
+//!    **committed** — a fresh checkout without them re-bootstraps and
+//!    passes. Layers 1 and 2 carry the equivalence proof unconditionally;
+//!    commit `tests/golden/` after the first toolchain run to pin the
+//!    trajectory across checkouts.
+//!
+//! Scenarios are the two shipped configs the README's bench table anchors
+//! on: `table5_epd` (full disaggregation) and `throughput_colocated`
+//! (single-NPU co-location), at reduced request counts.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::RequestRecord;
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::util::hash::fnv1a;
+use epd_serve::workload::injector::{inject, Arrival};
+use epd_serve::workload::generate;
+use std::path::Path;
+
+/// Canonical, bit-exact serialization of a record set: every f64 by its
+/// raw bit pattern, every field in a fixed order.
+fn digest(records: &[RequestRecord]) -> u64 {
+    let mut buf = String::new();
+    for r in records {
+        let opt = |v: Option<f64>| v.map(|x| format!("{:016x}", x.to_bits())).unwrap_or("-".into());
+        buf.push_str(&format!(
+            "{}|{}|{:016x}|{}|{}|{}|{}|{}|{};",
+            r.id,
+            r.multimodal as u8,
+            r.arrival.to_bits(),
+            opt(r.ttft),
+            opt(r.tpot),
+            r.output_tokens,
+            opt(r.finish),
+            r.recomputed as u8,
+            r.feature_reused as u8,
+        ));
+    }
+    fnv1a(buf.as_bytes())
+}
+
+fn load_scenario(name: &str, requests: usize) -> Config {
+    let mut cfg = Config::load(&format!("configs/{name}.toml"))
+        .unwrap_or_else(|e| panic!("configs/{name}.toml: {e:#}"));
+    cfg.workload.num_requests = requests;
+    cfg
+}
+
+/// Snapshot check: compare against `tests/golden/<name>.digest`, creating
+/// it on first run (insta-style bootstrap — commit the generated file).
+fn assert_golden(name: &str, got: u64) {
+    let dir = Path::new("tests/golden");
+    let path = dir.join(format!("{name}.digest"));
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let want = text.trim();
+            let got_hex = format!("{got:016x}");
+            assert_eq!(
+                want, got_hex,
+                "golden digest drift for '{name}' — per-request records changed. \
+                 If intentional, delete {} and re-run.",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(dir).expect("create tests/golden");
+            std::fs::write(&path, format!("{got:016x}\n")).expect("write golden digest");
+            eprintln!(
+                "golden digest for '{name}' bootstrapped at {} — COMMIT this file: \
+                 until it is in the tree, fresh checkouts re-bootstrap and layer 3 \
+                 cannot detect drift",
+                path.display()
+            );
+        }
+    }
+}
+
+/// Full equivalence + snapshot run for one scenario.
+fn check_scenario(name: &str, requests: usize) {
+    let cfg = load_scenario(name, requests);
+
+    // Layer 1: fused decode ≡ per-token decode.
+    let fused = run_serving(&cfg).unwrap();
+    let mut unfused_cfg = cfg.clone();
+    unfused_cfg.scheduler.fuse_decode_steps = false;
+    let unfused = run_serving(&unfused_cfg).unwrap();
+    assert_eq!(
+        fused.metrics.records, unfused.metrics.records,
+        "{name}: macro-stepped records must be bit-identical to per-token baseline"
+    );
+    assert!(
+        fused.events_processed <= unfused.events_processed,
+        "{name}: fusing must never add events"
+    );
+
+    // Layer 2: streamed workload ≡ materialized trace replay.
+    let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+    let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
+    let replayed = ServingSim::new(cfg.clone(), arrivals).unwrap().run();
+    assert_eq!(
+        fused.metrics.records, replayed.metrics.records,
+        "{name}: lazy arrival stream must replay the materialized trace exactly"
+    );
+
+    // Layer 3: pinned trajectory.
+    let d = digest(&fused.metrics.records);
+    assert_eq!(d, digest(&unfused.metrics.records), "digest function must be deterministic");
+    assert_golden(name, d);
+}
+
+#[test]
+fn table5_epd_trajectory_pinned() {
+    check_scenario("table5_epd", 256);
+}
+
+#[test]
+fn throughput_colocated_trajectory_pinned() {
+    check_scenario("throughput_colocated", 128);
+}
+
+#[test]
+fn digest_is_sensitive_to_any_field() {
+    let cfg = load_scenario("table5_epd", 32);
+    let out = run_serving(&cfg).unwrap();
+    let base = digest(&out.metrics.records);
+    let mut tweaked = out.metrics.records.clone();
+    tweaked[7].ttft = tweaked[7].ttft.map(|t| t + 1e-12);
+    assert_ne!(base, digest(&tweaked), "a 1 ps TTFT shift must change the digest");
+    let mut flagged = out.metrics.records.clone();
+    flagged[3].recomputed = !flagged[3].recomputed;
+    assert_ne!(base, digest(&flagged));
+}
+
+#[test]
+fn repeated_runs_share_one_digest() {
+    let cfg = load_scenario("throughput_colocated", 64);
+    let a = run_serving(&cfg).unwrap();
+    let b = run_serving(&cfg).unwrap();
+    assert_eq!(digest(&a.metrics.records), digest(&b.metrics.records));
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.fused_decode_steps, b.fused_decode_steps);
+}

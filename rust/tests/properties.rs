@@ -207,6 +207,64 @@ fn prop_deployment_parse_roundtrip_structure() {
 }
 
 #[test]
+fn prop_arrival_class_orders_before_normal_at_equal_times() {
+    // Mixed arrival-class and normal events: delivery must sort by
+    // (time, class, schedule order) — the invariant that makes lazy
+    // arrival streaming bit-compatible with eager up-front scheduling.
+    struct Collect {
+        seen: Vec<(u64, bool, u64)>, // (time bucket, is_arrival, payload)
+    }
+    impl SimModel for Collect {
+        type Event = (u64, bool, u64);
+        fn handle(
+            &mut self,
+            _now: f64,
+            ev: (u64, bool, u64),
+            _q: &mut EventQueue<(u64, bool, u64)>,
+        ) {
+            self.seen.push(ev);
+        }
+    }
+    epd_serve::testkit::check(
+        "arrival-class-order",
+        37,
+        100,
+        |r| {
+            (0..150)
+                .map(|i| (r.below(20), r.chance(0.3), i))
+                .collect::<Vec<(u64, bool, u64)>>()
+        },
+        |evs| {
+            let mut q = EventQueue::new();
+            for &(t, arrival, i) in evs {
+                if arrival {
+                    q.at_arrival(t as f64 / 100.0, (t, true, i));
+                } else {
+                    q.at(t as f64 / 100.0, (t, false, i));
+                }
+            }
+            let mut m = Collect { seen: Vec::new() };
+            epd_serve::sim::engine::run(&mut m, &mut q, f64::INFINITY);
+            ensure(m.seen.len() == evs.len(), "all events delivered")?;
+            for w in m.seen.windows(2) {
+                let (t0, a0, i0) = w[0];
+                let (t1, a1, i1) = w[1];
+                ensure(t1 >= t0, "monotone time")?;
+                if t0 == t1 {
+                    // Within a timestamp: arrivals strictly first, then
+                    // schedule order inside each class.
+                    ensure(a0 >= a1, "arrival class must precede normal")?;
+                    if a0 == a1 {
+                        ensure(i1 > i0, "FIFO within class at a timestamp")?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_event_queue_total_order() {
     struct Collect {
         seen: Vec<u64>,
