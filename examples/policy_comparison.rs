@@ -1,0 +1,68 @@
+//! Compare scheduling policies on one deterministic trace.
+//!
+//! The scheduling-policy API (`coordinator::policy`) makes every decision
+//! point of the coordinator — routing, load scoring, batching — a
+//! config-selectable trait. This example replays the *same* arrivals
+//! through a few illustrative combinations and prints what each choice
+//! does to TTFT, TPOT and SLO attainment:
+//!
+//! ```text
+//! cargo run --release --example policy_comparison
+//! ```
+//!
+//! For the exhaustive registry sweep (and the `BENCH_policy_sweep.json`
+//! trajectory artifact) run `cargo bench --bench policy_sweep`.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::simserve::ServingSim;
+use epd_serve::workload::injector::{inject, Arrival};
+use epd_serve::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx2".to_string(); // two replicas: routing matters
+    cfg.rate = 8.0;
+    cfg.workload.num_requests = 2000;
+    cfg.workload.image_reuse = 0.3; // repeated images: affinity matters
+
+    let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+    let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
+
+    // (route, balance, batch) triples to contrast. The first is the paper's
+    // default behavior; each subsequent row changes one decision.
+    let combos = [
+        ("modality_path", "least_loaded", "fcfs"),
+        ("modality_path", "round_robin", "fcfs"),
+        ("cache_affinity", "least_loaded", "fcfs"),
+        ("slo_aware", "least_loaded", "fcfs"),
+        ("modality_path", "least_loaded", "sjf_prefill"),
+    ];
+
+    println!(
+        "{:<14} {:<12} {:<12} | {:>8} {:>12} {:>12} {:>12}",
+        "route", "balance", "batch", "SLO", "TTFT p99 ms", "TPOT p99 ms", "eff tok/s"
+    );
+    for (route, balance, batch) in combos {
+        let mut c = cfg.clone();
+        c.scheduler.route_policy = route.to_string();
+        c.scheduler.balance_policy = balance.to_string();
+        c.scheduler.batch_policy = batch.to_string();
+        let out = ServingSim::new(c, arrivals.clone())?.run();
+        let m = out.metrics;
+        println!(
+            "{:<14} {:<12} {:<12} | {:>8.3} {:>12.0} {:>12.1} {:>12.0}",
+            route,
+            balance,
+            batch,
+            m.slo_attainment(),
+            m.ttft_samples().p99(),
+            m.tpot_samples().p99(),
+            m.effective_throughput(),
+        );
+    }
+    println!(
+        "\nstore reuse with cache_affinity pins repeated image keys to one replica;\n\
+         see docs/ARCHITECTURE.md \"Scheduling policy layer\" for how to add a policy."
+    );
+    Ok(())
+}

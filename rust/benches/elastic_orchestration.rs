@@ -21,7 +21,7 @@ use epd_serve::config::{Config, ReconfigSpec};
 use epd_serve::coordinator::simserve::{run_serving, ServingSim, SimOutcome};
 use epd_serve::util::json::Json;
 use epd_serve::util::stats::{fmt_ms, fmt_pct};
-use epd_serve::workload::phases::{generate_phased, PhasePlan};
+use epd_serve::workload::phases::PhasePlan;
 
 /// Static 4-NPU candidates (the elastic run starts from the first).
 const STATICS: [&str; 4] = ["E-P-D-D", "E-E-P-D", "E-P-P-D", "(E-P)-D-D"];
@@ -42,23 +42,20 @@ fn cfg_for(deployment: &str, elastic: bool) -> Config {
 }
 
 fn run_phased(deployment: &str, elastic: bool, plan: &PhasePlan) -> anyhow::Result<SimOutcome> {
-    let cfg = cfg_for(deployment, elastic);
-    let arrivals = generate_phased(&cfg.workload, &cfg.model.vit, plan, cfg.seed);
-    Ok(ServingSim::new(cfg, arrivals)?.run())
+    // The streamed phased source: O(in-flight) memory however long the
+    // phase schedule runs (bit-identical to materialize-then-replay —
+    // tests/policy_layer.rs pins it).
+    Ok(ServingSim::phased(cfg_for(deployment, elastic), plan)?.run())
 }
 
 fn main() -> anyhow::Result<()> {
     let plan = PhasePlan::text_image_alternating(75.0, 6.5, 11.0, 2);
-    {
-        let probe = cfg_for("E-P-D-D", false);
-        let arrivals = generate_phased(&probe.workload, &probe.model.vit, &plan, probe.seed);
-        println!(
-            "phase-shifting workload: {} requests over {:.0} s \
-             (75 s text-heavy @6.5 req/s ⇄ 75 s image-heavy @11 req/s, ×2 cycles)",
-            arrivals.len(),
-            plan.total_s()
-        );
-    }
+    println!(
+        "phase-shifting workload: ~{} requests (expected) over {:.0} s \
+         (75 s text-heavy @6.5 req/s ⇄ 75 s image-heavy @11 req/s, ×2 cycles)",
+        plan.expected_requests(),
+        plan.total_s()
+    );
 
     let mut rows = Vec::new();
     let mut dump = Json::obj();

@@ -1,0 +1,140 @@
+//! **Scheduling-policy sweep**: drive one deterministic trace through every
+//! registered route × balance × batch policy combination
+//! (`coordinator::policy`) and compare throughput, TTFT/TPOT percentiles
+//! and SLO attainment — the experiment surface the policy API redesign
+//! exists for (ElasticMM/RServe-style comparisons under identical traffic).
+//!
+//! Like `sim_throughput`, this bench *additionally* writes
+//! `BENCH_policy_sweep.json` at the repository root: the per-policy
+//! trajectory file future scheduling PRs extend (schema documented in
+//! `docs/PERFORMANCE.md`).
+//!
+//! The default combo (`modality_path`, `least_loaded`, `fcfs`) is asserted
+//! to complete the whole trace; its *bit-equivalence to pre-refactor
+//! behavior* is pinned by `tests/determinism_golden.rs` (the golden-digest
+//! layers), not here — two same-config runs in one binary could not detect
+//! a behavioral cost of the policy indirection.
+//!
+//! Flags: `--requests N` (default 20 000), `--rate R` (default 10),
+//! `--deployment D` (default `E-P-Dx2` — two replicas, so routing policies
+//! have a replica choice to make).
+
+use epd_serve::bench::{print_table, repo_root, save_json};
+use epd_serve::config::Config;
+use epd_serve::coordinator::policy::{BALANCE_POLICIES, BATCH_POLICIES, ROUTE_POLICIES};
+use epd_serve::coordinator::simserve::{ServingSim, SimOutcome};
+use epd_serve::util::cli::Cli;
+use epd_serve::util::json::Json;
+use epd_serve::workload::injector::{inject, Arrival};
+use epd_serve::workload::{generate, ArrivedRequest};
+use std::time::Instant;
+
+fn run_combo(
+    cfg: &Config,
+    arrivals: &[ArrivedRequest],
+    route: &str,
+    balance: &str,
+    batch: &str,
+) -> anyhow::Result<(SimOutcome, f64)> {
+    let mut c = cfg.clone();
+    c.scheduler.route_policy = route.to_string();
+    c.scheduler.balance_policy = balance.to_string();
+    c.scheduler.batch_policy = batch.to_string();
+    let t0 = Instant::now();
+    let out = ServingSim::new(c, arrivals.to_vec())?.run();
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "policy_sweep",
+        "one deterministic trace through every registered scheduling-policy combination",
+    )
+    .opt_default("requests", "20000", "requests in the shared trace")
+    .opt_default("rate", "10", "open-loop arrival rate, req/s")
+    .opt_default("deployment", "E-P-Dx2", "deployment notation (2 replicas by default)")
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .parse_env();
+    let requests = args.get_usize("requests").unwrap();
+    let rate = args.get_f64("rate").unwrap();
+    let deployment = args.get("deployment").unwrap().to_string();
+
+    let mut cfg = Config::default();
+    cfg.deployment = deployment.clone();
+    cfg.rate = rate;
+    cfg.workload.num_requests = requests;
+
+    // One trace, materialized once: every combo replays the same arrivals.
+    let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+    let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
+
+    let mut combos_json = Vec::new();
+    let mut rows = Vec::new();
+    let mut n_combos = 0usize;
+    for &route in ROUTE_POLICIES {
+        for &balance in BALANCE_POLICIES {
+            for &batch in BATCH_POLICIES {
+                let (out, wall) = run_combo(&cfg, &arrivals, route, balance, batch)?;
+                n_combos += 1;
+                let m = &out.metrics;
+                assert!(m.completed() > 0, "{route}/{balance}/{batch} completed nothing");
+                let is_default = route == ROUTE_POLICIES[0]
+                    && balance == BALANCE_POLICIES[0]
+                    && batch == BATCH_POLICIES[0];
+                if is_default {
+                    assert_eq!(
+                        m.completed(),
+                        requests,
+                        "the shared trace must complete inside the horizon under default policies"
+                    );
+                }
+                let mut j = Json::obj();
+                j.set("route_policy", route)
+                    .set("balance_policy", balance)
+                    .set("batch_policy", batch)
+                    .set("completed", m.completed())
+                    .set("wall_s", wall)
+                    .set("slo_attainment", m.slo_attainment())
+                    .set("throughput_tok_s", m.throughput())
+                    .set("effective_throughput_tok_s", m.effective_throughput())
+                    .set("per_npu_effective_throughput", m.per_npu_effective_throughput())
+                    .set("ttft_ms", m.ttft_samples().summary_json())
+                    .set("tpot_ms", m.tpot_samples().summary_json());
+                combos_json.push(j);
+                rows.push(vec![
+                    format!("{route} × {balance} × {batch}"),
+                    format!("{:.3}", m.slo_attainment()),
+                    format!("{:.0}", m.ttft_samples().p99()),
+                    format!("{:.1}", m.tpot_samples().p99()),
+                    format!("{:.0}", m.effective_throughput()),
+                    format!("{}", m.completed()),
+                ]);
+            }
+        }
+    }
+    assert!(n_combos >= 4, "the registry must expose at least 4 policy combinations");
+
+    print_table(
+        &format!("policy_sweep — {deployment}, {requests} requests @ {rate} req/s"),
+        &["route × balance × batch", "SLO", "TTFT p99 ms", "TPOT p99 ms", "eff tok/s", "done"],
+        &rows,
+    );
+
+    let mut dump = Json::obj();
+    dump.set("bench", "policy_sweep")
+        .set("deployment", deployment.as_str())
+        .set("requests", requests)
+        .set("rate_req_s", rate)
+        .set("seed", cfg.seed)
+        .set("num_combos", n_combos)
+        .set("slo_ttft_ms", cfg.slo.ttft_ms)
+        .set("slo_tpot_ms", cfg.slo.tpot_ms)
+        .set("combos", Json::Arr(combos_json));
+
+    let root = repo_root().join("BENCH_policy_sweep.json");
+    std::fs::write(&root, dump.to_string_pretty())?;
+    println!("\npolicy trajectory written to {}", root.display());
+    let path = save_json("policy_sweep", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

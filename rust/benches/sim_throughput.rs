@@ -12,28 +12,12 @@
 //! Flags: `--requests N` (default 1 000 000), `--ratio-requests N`
 //! (default 10 000), `--deployment D` (default `E-P-D`).
 
-use epd_serve::bench::{print_table, save_json};
+use epd_serve::bench::{print_table, repo_root, save_json};
 use epd_serve::config::Config;
 use epd_serve::coordinator::simserve::{run_serving, SimOutcome};
 use epd_serve::util::cli::Cli;
 use epd_serve::util::json::Json;
 use std::time::Instant;
-
-/// Walk up from the working directory to the repository root (the directory
-/// holding ROADMAP.md); fall back to the working directory.
-fn repo_root() -> std::path::PathBuf {
-    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
-    for _ in 0..4 {
-        if dir.join("ROADMAP.md").is_file() {
-            return dir;
-        }
-        match dir.parent() {
-            Some(p) => dir = p.to_path_buf(),
-            None => break,
-        }
-    }
-    std::env::current_dir().unwrap_or_else(|_| ".".into())
-}
 
 fn timed(cfg: &Config) -> anyhow::Result<(SimOutcome, f64)> {
     let t0 = Instant::now();

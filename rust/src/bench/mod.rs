@@ -74,6 +74,25 @@ pub fn save_json(name: &str, value: &Json) -> std::io::Result<String> {
     Ok(path)
 }
 
+/// Walk up from the working directory to the repository root (the directory
+/// holding ROADMAP.md); fall back to the working directory. Trajectory
+/// benches (`sim_throughput`, `policy_sweep`) write their `BENCH_*.json`
+/// artifacts here so they land beside the repo docs regardless of whether
+/// cargo runs from the workspace or `rust/`.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    std::env::current_dir().unwrap_or_else(|_| ".".into())
+}
+
 /// Format helper: `"57.4%"` style relative change vs a baseline.
 pub fn pct_change(new: f64, baseline: f64) -> String {
     if baseline == 0.0 || !new.is_finite() || !baseline.is_finite() {

@@ -370,6 +370,37 @@ pub struct SchedulerSpec {
     /// the switch exists so benches can measure the unfused baseline and
     /// regressions can bisect it.
     pub fuse_decode_steps: bool,
+    /// Arrival routing policy (replica + modality-path choice), by registry
+    /// name — see [`crate::coordinator::policy`]. Default `"modality_path"`
+    /// is the paper's §3.4 multi-route scheduling, bit-identical to the
+    /// pre-policy-API behavior. Others: `"cache_affinity"` (image-key →
+    /// replica pinning for §3.2 cross-request reuse), `"slo_aware"` (skips
+    /// replicas projected to bust the TTFT SLO).
+    pub route_policy: String,
+    /// Instance-selection policy among stage candidates, by registry name.
+    /// Default `"least_loaded"` is the paper's §3.4 least-loaded-first rule
+    /// over the global status table. Others: `"round_robin"` (the
+    /// load-oblivious baseline), `"weighted_least_loaded"` (the same score
+    /// with the `balance_*` knobs below instead of hardcoded weights).
+    pub balance_policy: String,
+    /// Batch formation + decode admission policy, by registry name.
+    /// Default `"fcfs"` is bounded greedy FCFS (the reference
+    /// [`crate::coordinator::batcher`] functions). `"sjf_prefill"` drains
+    /// waiting prefills shortest-prompt-first under the same caps.
+    pub batch_policy: String,
+    /// `weighted_least_loaded` score weight of one in-flight work unit
+    /// (decode batch slot / running E-P batch) relative to one queued
+    /// request. Default 0.5 = the hardcoded default-score weight.
+    pub balance_active_weight: f64,
+    /// `weighted_least_loaded`: pending prompt tokens equivalent to one
+    /// queued request. Default 4096 = the hardcoded default-score scale.
+    pub balance_token_scale: f64,
+    /// `weighted_least_loaded`: KV utilization above which the KV penalty
+    /// engages, in [0, 1]. Default 0.9 = the hardcoded default.
+    pub balance_kv_threshold: f64,
+    /// `weighted_least_loaded`: score added per unit of KV utilization in
+    /// excess of the threshold. Default 50 = the hardcoded default.
+    pub balance_kv_penalty: f64,
 }
 
 /// P-D KV transmission strategy.
@@ -394,6 +425,13 @@ impl Default for SchedulerSpec {
             pd_mode: PdMode::Grouped,
             kv_group_layers: 0,
             fuse_decode_steps: true,
+            route_policy: "modality_path".to_string(),
+            balance_policy: "least_loaded".to_string(),
+            batch_policy: "fcfs".to_string(),
+            balance_active_weight: 0.5,
+            balance_token_scale: 4096.0,
+            balance_kv_threshold: 0.9,
+            balance_kv_penalty: 50.0,
         }
     }
 }
@@ -588,6 +626,43 @@ impl Config {
                     _ => bail!("unknown pd_mode '{v}'"),
                 };
             }
+            // Policy names are resolved (and unknown names rejected with the
+            // registered list) when the serving system is constructed —
+            // `coordinator::policy::PolicySet::from_scheduler` — so the
+            // config layer stays decoupled from the registry.
+            if let Some(v) = sc.get("route_policy").and_then(Json::as_str) {
+                s.route_policy = v.to_string();
+            }
+            if let Some(v) = sc.get("balance_policy").and_then(Json::as_str) {
+                s.balance_policy = v.to_string();
+            }
+            if let Some(v) = sc.get("batch_policy").and_then(Json::as_str) {
+                s.batch_policy = v.to_string();
+            }
+            if let Some(v) = sc.get("balance_active_weight").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("scheduler.balance_active_weight must be a finite value >= 0, got {v}");
+                }
+                s.balance_active_weight = v;
+            }
+            if let Some(v) = sc.get("balance_token_scale").and_then(Json::as_f64) {
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("scheduler.balance_token_scale must be a finite value > 0, got {v}");
+                }
+                s.balance_token_scale = v;
+            }
+            if let Some(v) = sc.get("balance_kv_threshold").and_then(Json::as_f64) {
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("scheduler.balance_kv_threshold must be in [0, 1], got {v}");
+                }
+                s.balance_kv_threshold = v;
+            }
+            if let Some(v) = sc.get("balance_kv_penalty").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("scheduler.balance_kv_penalty must be a finite value >= 0, got {v}");
+                }
+                s.balance_kv_penalty = v;
+            }
         }
         if let Some(rc) = doc.get("reconfig") {
             let r = &mut cfg.reconfig;
@@ -710,6 +785,56 @@ fuse_decode_steps = false
         assert!(!cfg.scheduler.ep_async_prefetch);
         assert!(!cfg.scheduler.fuse_decode_steps);
         assert!(SchedulerSpec::default().fuse_decode_steps, "fusing is the default");
+    }
+
+    #[test]
+    fn scheduler_policy_knobs_round_trip() {
+        let doc = crate::util::toml::parse(
+            r#"
+[scheduler]
+route_policy = "slo_aware"
+balance_policy = "weighted_least_loaded"
+batch_policy = "sjf_prefill"
+balance_active_weight = 1.25
+balance_token_scale = 2048
+balance_kv_threshold = 0.8
+balance_kv_penalty = 100
+"#,
+        )
+        .unwrap();
+        let s = Config::from_json(&doc).unwrap().scheduler;
+        assert_eq!(s.route_policy, "slo_aware");
+        assert_eq!(s.balance_policy, "weighted_least_loaded");
+        assert_eq!(s.batch_policy, "sjf_prefill");
+        assert_eq!(s.balance_active_weight, 1.25);
+        assert_eq!(s.balance_token_scale, 2048.0);
+        assert_eq!(s.balance_kv_threshold, 0.8);
+        assert_eq!(s.balance_kv_penalty, 100.0);
+        // Defaults select the pre-policy-API behavior.
+        let d = SchedulerSpec::default();
+        assert_eq!(
+            (d.route_policy.as_str(), d.balance_policy.as_str(), d.batch_policy.as_str()),
+            ("modality_path", "least_loaded", "fcfs")
+        );
+        assert_eq!(d.balance_active_weight, 0.5);
+        assert_eq!(d.balance_token_scale, 4096.0);
+        assert_eq!(d.balance_kv_threshold, 0.9);
+        assert_eq!(d.balance_kv_penalty, 50.0);
+    }
+
+    #[test]
+    fn scheduler_policy_weight_knobs_reject_nonsense() {
+        for bad in [
+            "[scheduler]\nbalance_active_weight = -1\n",
+            "[scheduler]\nbalance_token_scale = 0\n",
+            "[scheduler]\nbalance_token_scale = -5\n",
+            "[scheduler]\nbalance_kv_threshold = 1.5\n",
+            "[scheduler]\nbalance_kv_threshold = -0.1\n",
+            "[scheduler]\nbalance_kv_penalty = -2\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
+        }
     }
 
     #[test]

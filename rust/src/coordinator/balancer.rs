@@ -28,17 +28,41 @@ pub struct InstanceStatus {
 }
 
 impl InstanceStatus {
-    /// Scalar load score for least-loaded-first comparison. Queue depth and
-    /// token volume dominate; KV pressure is a tie-breaking penalty that
-    /// grows steeply near exhaustion.
-    pub fn load_score(&self) -> f64 {
-        let kv_penalty = if self.kv_utilization > 0.9 {
-            50.0 * (self.kv_utilization - 0.9)
+    /// Scalar load score for least-loaded-first comparison, with every
+    /// weight explicit — the parameterization
+    /// [`crate::coordinator::policy::WeightedLeastLoaded`] exposes through
+    /// the `[scheduler] balance_*` config knobs:
+    ///
+    /// * `active_weight` — in-flight work (decode batch slots, a running
+    ///   E/P batch) relative to one queued request,
+    /// * `token_scale` — pending prompt tokens equivalent to one queued
+    ///   request,
+    /// * `kv_threshold` / `kv_penalty` — KV utilization above the threshold
+    ///   adds `kv_penalty × excess` (steep near exhaustion).
+    pub fn weighted_load_score(
+        &self,
+        active_weight: f64,
+        token_scale: f64,
+        kv_threshold: f64,
+        kv_penalty: f64,
+    ) -> f64 {
+        let kv = if self.kv_utilization > kv_threshold {
+            kv_penalty * (self.kv_utilization - kv_threshold)
         } else {
             0.0
         };
-        self.queue_len as f64 + self.active as f64 * 0.5 + self.pending_tokens as f64 / 4096.0
-            + kv_penalty
+        self.queue_len as f64
+            + self.active as f64 * active_weight
+            + self.pending_tokens as f64 / token_scale
+            + kv
+    }
+
+    /// Default load score: queue depth and token volume dominate; KV
+    /// pressure is a tie-breaking penalty that grows steeply near
+    /// exhaustion. These are the default values of the `balance_*` knobs
+    /// ([`crate::config::SchedulerSpec`]).
+    pub fn load_score(&self) -> f64 {
+        self.weighted_load_score(0.5, 4096.0, 0.9, 50.0)
     }
 }
 
@@ -64,16 +88,23 @@ impl StatusTable {
     /// Least-loaded instance among `candidates`. Ties break on the lower
     /// index for determinism. Returns `None` for an empty candidate set.
     pub fn least_loaded(&self, candidates: &[usize]) -> Option<usize> {
-        candidates
-            .iter()
-            .copied()
-            .min_by(|&a, &b| {
-                self.statuses[a]
-                    .load_score()
-                    .partial_cmp(&self.statuses[b].load_score())
-                    .unwrap()
-                    .then(a.cmp(&b))
-            })
+        self.least_by(candidates, InstanceStatus::load_score)
+    }
+
+    /// Minimum-scoring instance under an arbitrary score function, with the
+    /// same lower-index tie-break as [`Self::least_loaded`]. Ordering uses
+    /// [`f64::total_cmp`], so a policy that yields NaN (e.g. a pathological
+    /// weight combination) degrades deterministically — NaN sorts after
+    /// every real score — instead of panicking mid-run the way the old
+    /// `partial_cmp(..).unwrap()` did.
+    pub fn least_by<F: Fn(&InstanceStatus) -> f64>(
+        &self,
+        candidates: &[usize],
+        score: F,
+    ) -> Option<usize> {
+        candidates.iter().copied().min_by(|&a, &b| {
+            score(&self.statuses[a]).total_cmp(&score(&self.statuses[b])).then(a.cmp(&b))
+        })
     }
 }
 
@@ -147,6 +178,46 @@ mod tests {
         assert_eq!(t.least_loaded(&[4, 2, 3]), Some(2));
         assert_eq!(t.least_loaded(&[3, 2, 4]), Some(2));
         assert_eq!(t.least_loaded(&[2, 3, 4]), Some(2));
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_and_lose_to_real_scores() {
+        // Regression: least_loaded used partial_cmp(..).unwrap(), which
+        // panicked the moment any score was NaN (e.g. kv_utilization
+        // poisoned by a 0/0 upstream, or a policy weight combination that
+        // overflows). total_cmp orders NaN after every real number, so the
+        // healthy instance wins and the pick stays deterministic.
+        let mut t = StatusTable::new(3);
+        t.update(0, InstanceStatus { kv_utilization: f64::NAN, ..Default::default() });
+        t.update(1, InstanceStatus { queue_len: 7, ..Default::default() });
+        assert!(t.get(0).load_score().is_nan());
+        assert_eq!(t.least_loaded(&[0, 1]), Some(1), "NaN must lose to a real score");
+        // All-NaN candidate sets fall back to the index tie-break.
+        t.update(2, InstanceStatus { kv_utilization: f64::NAN, ..Default::default() });
+        assert_eq!(t.least_loaded(&[2, 0]), Some(0));
+    }
+
+    #[test]
+    fn least_by_custom_score_keeps_index_tie_break() {
+        let mut t = StatusTable::new(3);
+        t.update(0, InstanceStatus { active: 4, ..Default::default() });
+        t.update(1, InstanceStatus { queue_len: 9, ..Default::default() });
+        // Score only by queue length: 0 and 2 tie at 0 → lower index wins.
+        assert_eq!(t.least_by(&[2, 1, 0], |s| s.queue_len as f64), Some(0));
+        // Weighted score with heavy active weight flips the default choice.
+        assert_eq!(t.least_loaded(&[0, 1]), Some(0));
+        assert_eq!(t.least_by(&[0, 1], |s| s.weighted_load_score(3.0, 4096.0, 0.9, 50.0)), Some(1));
+    }
+
+    #[test]
+    fn weighted_score_with_default_knobs_is_load_score() {
+        let s = InstanceStatus {
+            queue_len: 3,
+            active: 5,
+            pending_tokens: 10_000,
+            kv_utilization: 0.95,
+        };
+        assert_eq!(s.weighted_load_score(0.5, 4096.0, 0.9, 50.0), s.load_score());
     }
 
     #[test]

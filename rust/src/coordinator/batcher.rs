@@ -1,10 +1,17 @@
-//! Per-stage batch formation policies.
+//! Per-stage batch formation — the **reference FCFS implementations**.
 //!
 //! Encode and Prefill use bounded greedy FCFS batching (count + token caps);
 //! Decode uses continuous batching (sequences join/leave at step
-//! boundaries). These are pure policies over queues — the serving loop
+//! boundaries). These are pure functions over queues — the serving loop
 //! (simulated or real) owns the queues and calls in when an instance frees
-//! up.
+//! up, dispatching through the [`BatchPolicy`] trait
+//! (`[scheduler] batch_policy` config knob). The free functions here back
+//! the default `fcfs` policy ([`crate::coordinator::policy::FcfsBatch`])
+//! and stay directly callable for tests and alternative policies that only
+//! override one decision (e.g. `sjf_prefill` reuses the encode/decode
+//! rules).
+//!
+//! [`BatchPolicy`]: crate::coordinator::policy::BatchPolicy
 
 use crate::config::SchedulerSpec;
 use std::collections::VecDeque;

@@ -11,8 +11,12 @@
 //!   dispatch (§3.4 "Instance-Level Dynamic Load Balancing").
 //! * [`router`] — modality-aware multi-path routing: text-only → P-D path,
 //!   multimodal → E-P-D path, with MM-Store reuse short-circuiting (§3.4).
-//! * [`batcher`] — per-stage batch formation policies (encode batch, fused
+//! * [`batcher`] — reference FCFS batch formation (encode batch, fused
 //!   prefill batch with a token cap, decode continuous batch).
+//! * [`policy`] — the pluggable scheduling-policy API: `RoutePolicy` /
+//!   `BalancePolicy` / `BatchPolicy` traits + `PolicyCtx` world view +
+//!   string-keyed registry behind the `[scheduler]`
+//!   `route_policy`/`balance_policy`/`batch_policy` config knobs.
 //! * [`metrics`] — TTFT / TPOT / throughput / SLO-attainment accounting
 //!   matching the paper's definitions (§4.1).
 //! * [`adaptive`] — SLO-driven dynamic deployment selection with
@@ -30,6 +34,7 @@ pub mod balancer;
 pub mod batcher;
 pub mod deployment;
 pub mod metrics;
+pub mod policy;
 pub mod reconfig;
 pub mod request;
 pub mod router;

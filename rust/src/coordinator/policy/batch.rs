@@ -1,0 +1,153 @@
+//! [`BatchPolicy`] implementations — batch formation + decode admission.
+
+use crate::config::SchedulerSpec;
+use crate::coordinator::batcher::{
+    decode_admission_quota, form_encode_batch, form_prefill_batch, EncodeItem, PrefillItem,
+};
+use crate::coordinator::policy::BatchPolicy;
+use std::collections::VecDeque;
+
+/// Default: bounded greedy FCFS batching for Encode/Prefill (count + token
+/// caps) and cap-filling decode admission — the reference free functions in
+/// [`crate::coordinator::batcher`], unchanged. Bit-identical to the
+/// pre-policy-API serving loop.
+pub struct FcfsBatch;
+
+impl BatchPolicy for FcfsBatch {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn form_encode_batch(
+        &mut self,
+        queue: &mut VecDeque<EncodeItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<EncodeItem> {
+        form_encode_batch(queue, cfg)
+    }
+
+    fn form_prefill_batch(
+        &mut self,
+        queue: &mut VecDeque<PrefillItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<PrefillItem> {
+        form_prefill_batch(queue, cfg)
+    }
+
+    fn decode_quota(&mut self, active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize {
+        decode_admission_quota(active, waiting, cfg)
+    }
+}
+
+/// Shortest-job-first **prefill** batching: each batch drains the waiting
+/// prefills in ascending prompt-token order (ties keep queue order) under
+/// the same count/token caps as FCFS. Short prompts stop queueing behind
+/// long ones, trading mean TTFT down at the cost of tail fairness — the
+/// classic SJF trade every batching study compares against. Encode batching
+/// and decode admission stay FCFS.
+///
+/// Selection is O(queue) per admitted request; this policy is for
+/// experiments, not the million-request hot path.
+pub struct SjfPrefillBatch;
+
+impl BatchPolicy for SjfPrefillBatch {
+    fn name(&self) -> &'static str {
+        "sjf_prefill"
+    }
+
+    fn form_encode_batch(
+        &mut self,
+        queue: &mut VecDeque<EncodeItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<EncodeItem> {
+        form_encode_batch(queue, cfg)
+    }
+
+    fn form_prefill_batch(
+        &mut self,
+        queue: &mut VecDeque<PrefillItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<PrefillItem> {
+        let mut batch = Vec::new();
+        let mut tokens = 0usize;
+        loop {
+            // Earliest-queued among the shortest remaining prompts
+            // (min_by_key returns the first minimum, preserving FCFS ties).
+            let best = queue
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, it)| it.prompt_tokens)
+                .map(|(pos, &it)| (pos, it));
+            let Some((pos, item)) = best else { break };
+            let would = tokens + item.prompt_tokens;
+            if !batch.is_empty()
+                && (batch.len() >= cfg.max_prefill_batch.max(1) || would > cfg.max_prefill_tokens)
+            {
+                break;
+            }
+            tokens = would;
+            batch.push(item);
+            queue.remove(pos);
+            if batch.len() >= cfg.max_prefill_batch.max(1) {
+                break;
+            }
+        }
+        batch
+    }
+
+    fn decode_quota(&mut self, active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize {
+        decode_admission_quota(active, waiting, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedulerSpec {
+        SchedulerSpec {
+            max_prefill_batch: 3,
+            max_prefill_tokens: 1000,
+            ..Default::default()
+        }
+    }
+
+    fn pi(req: u64, tokens: usize) -> PrefillItem {
+        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0 }
+    }
+
+    #[test]
+    fn fcfs_delegates_to_reference_functions() {
+        let mut q: VecDeque<PrefillItem> = [pi(0, 600), pi(1, 300), pi(2, 300)].into();
+        let b = FcfsBatch.form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(FcfsBatch.decode_quota(5, 10, &SchedulerSpec::default()), 10);
+        assert_eq!(FcfsBatch.decode_quota(60, 10, &SchedulerSpec::default()), 4);
+    }
+
+    #[test]
+    fn sjf_drains_shortest_prompts_first_with_stable_ties() {
+        let mut q: VecDeque<PrefillItem> = [pi(0, 500), pi(1, 100), pi(2, 100), pi(3, 50)].into();
+        let b = SjfPrefillBatch.form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![3, 1, 2]);
+        assert_eq!(q.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn sjf_honors_token_cap_and_admits_oversized_singleton() {
+        let mut q: VecDeque<PrefillItem> = [pi(0, 900), pi(1, 200)].into();
+        let b = SjfPrefillBatch.form_prefill_batch(&mut q, &cfg());
+        // Shortest first (200), then 900 would exceed the 1000 cap.
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![1]);
+        let mut q: VecDeque<PrefillItem> = [pi(0, 99_999)].into();
+        assert_eq!(SjfPrefillBatch.form_prefill_batch(&mut q, &cfg()).len(), 1);
+    }
+
+    #[test]
+    fn sjf_leaves_encode_fcfs() {
+        let mut q: VecDeque<EncodeItem> =
+            (0..3).map(|i| EncodeItem { req: i, visual_tokens: 10 }).collect();
+        let b = SjfPrefillBatch.form_encode_batch(&mut q, &SchedulerSpec::default());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

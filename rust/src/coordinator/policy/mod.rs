@@ -1,0 +1,377 @@
+//! Pluggable scheduling-policy API — the coordinator's decision surface as
+//! config-selectable traits.
+//!
+//! The paper (§3.4) pitches *multi-route scheduling* and *instance-level
+//! dynamic load balancing* as first-class, swappable mechanisms; related
+//! systems (ElasticMM, RServe — see PAPERS.md) win with *different*
+//! scheduling policies under otherwise-identical serving machinery. This
+//! module is that separation: every decision point the serving loop used to
+//! hardwire is a trait, chosen by name from the `[scheduler]` config table:
+//!
+//! | trait | decision | config knob | default |
+//! |---|---|---|---|
+//! | [`RoutePolicy`] | replica + modality-path for each arrival | `route_policy` | `modality_path` |
+//! | [`BalancePolicy`] | instance selection among candidates | `balance_policy` | `least_loaded` |
+//! | [`BatchPolicy`] | E/P batch formation + decode admission quota | `batch_policy` | `fcfs` |
+//!
+//! All three see the world through [`PolicyCtx`]: the global status table,
+//! MM-Store residency, the (possibly elastically reshaped) deployment with
+//! its cached per-replica candidate sets, and the simulation clock. The
+//! **defaults reproduce the pre-policy-API behavior bit-exactly** — the
+//! `determinism_golden` test layers pin that equivalence.
+//!
+//! ## Registry
+//!
+//! Policies are constructed by name via [`make_route_policy`],
+//! [`make_balance_policy`], [`make_batch_policy`] (or all at once with
+//! [`PolicySet::from_scheduler`]). Unknown names fail with an error listing
+//! every registered name. To add a policy:
+//!
+//! 1. implement the trait (in `route.rs` / `balance.rs` / `batch.rs`),
+//! 2. add its name to the matching `*_POLICIES` slice,
+//! 3. add the constructor arm in the matching `make_*` function.
+//!
+//! `benches/policy_sweep.rs` automatically picks the new name up and drives
+//! it over the shared deterministic trace.
+
+pub mod balance;
+pub mod batch;
+pub mod route;
+
+pub use balance::{LeastLoaded, RoundRobin, WeightedLeastLoaded};
+pub use batch::{FcfsBatch, SjfPrefillBatch};
+pub use route::{CacheAffinity, ModalityPath, SloAware};
+
+use crate::config::{SchedulerSpec, SloSpec};
+use crate::coordinator::balancer::StatusTable;
+use crate::coordinator::batcher::{EncodeItem, PrefillItem};
+use crate::coordinator::deployment::Deployment;
+use crate::coordinator::router::Route;
+use crate::mmstore::MmStore;
+use crate::workload::RequestSpec;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Which stage capability a scheduling decision needs. Selecting via this
+/// enum hits the pre-materialized per-replica candidate cache
+/// ([`StageCands`]) instead of filtering the deployment's instance list per
+/// decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageNeed {
+    Encode,
+    Prefill,
+    Decode,
+}
+
+/// Per-replica candidate instance sets, rebuilt only when the routed
+/// topology changes (boot + elastic switches). This is the hot-path cache
+/// the million-request overhaul introduced; policies read it through
+/// [`PolicyCtx`] instead of walking the deployment.
+pub struct StageCands {
+    enc: Vec<Vec<usize>>,
+    pre: Vec<Vec<usize>>,
+    dec: Vec<Vec<usize>>,
+}
+
+impl StageCands {
+    pub fn build(dep: &Deployment) -> Self {
+        let mut enc = Vec::with_capacity(dep.replicas);
+        let mut pre = Vec::with_capacity(dep.replicas);
+        let mut dec = Vec::with_capacity(dep.replicas);
+        for r in 0..dep.replicas {
+            enc.push(dep.instances_where(r, |s| s.encode));
+            pre.push(dep.instances_where(r, |s| s.prefill));
+            dec.push(dep.instances_where(r, |s| s.decode));
+        }
+        Self { enc, pre, dec }
+    }
+
+    pub fn get(&self, replica: usize, need: StageNeed) -> &[usize] {
+        match need {
+            StageNeed::Encode => &self.enc[replica],
+            StageNeed::Prefill => &self.pre[replica],
+            StageNeed::Decode => &self.dec[replica],
+        }
+    }
+
+    /// Number of replicas the candidate cache covers.
+    pub fn replicas(&self) -> usize {
+        self.enc.len()
+    }
+}
+
+/// The read-only world view every policy decision sees: the incrementally
+/// maintained status table, MM-Store residency, the deployment (as routed —
+/// it reshapes under elastic re-provisioning) with its cached candidate
+/// sets, the active scheduler/SLO config, and the simulation clock.
+pub struct PolicyCtx<'a> {
+    /// Global instance status table (§3.4), incrementally maintained by the
+    /// serving loop at every queue/KV mutation.
+    pub table: &'a StatusTable,
+    /// The routed deployment topology. Under elastic re-provisioning this
+    /// is the *desired* (post-switch) topology from the instant a switch is
+    /// planned.
+    pub dep: &'a Deployment,
+    /// Cached per-replica encode/prefill/decode candidate sets for `dep`.
+    pub cands: &'a StageCands,
+    /// MM Store, for residency probes beyond the routed request's own
+    /// `feature_resident` flag (`None` outside a full serving context).
+    /// The simulator models one *pooled* store, so "is this key resident
+    /// anywhere" is already answered by that flag and no shipped policy
+    /// probes further — the handle exists so a per-replica store tier can
+    /// be policy-visible without an API break ([`CacheAffinity`] documents
+    /// why it hash-pins instead of probing).
+    pub store: Option<&'a MmStore>,
+    /// Active scheduler knobs (batch caps, policy weights).
+    pub scheduler: &'a SchedulerSpec,
+    /// Active SLO constraints (drives [`SloAware`] routing).
+    pub slo: &'a SloSpec,
+    /// Simulation clock, seconds.
+    pub now: f64,
+    /// Estimated steady-state prefill service rate of one instance,
+    /// prompt tokens/s (from the calibrated cost model; 0 when unknown).
+    pub prefill_tok_s: f64,
+    /// Estimated steady-state encode service rate of one instance,
+    /// visual tokens/s (0 when unknown).
+    pub encode_tok_s: f64,
+}
+
+impl PolicyCtx<'_> {
+    /// Does the MM Store currently hold features for this content key?
+    /// `false` when no store is attached.
+    pub fn feature_resident(&self, key: u64) -> bool {
+        self.store.map(|s| s.contains(key)).unwrap_or(false)
+    }
+}
+
+/// Instance selection among a candidate set — subsumes the hardwired
+/// `InstanceStatus::load_score` least-loaded-first rule. Called at every
+/// decision that picks *which* instance gets work: arrival routing (via the
+/// [`RoutePolicy`]), E→P handoff, P→D handoff, and elastic migrations.
+///
+/// Implementations may keep internal state (e.g. [`RoundRobin`]'s cursor);
+/// the serving loop's event order is deterministic, so stateful policies
+/// stay deterministic too. `pick` must return `None` only for an empty
+/// candidate set.
+pub trait BalancePolicy: Send {
+    /// Registry name (what the `balance_policy` config knob selects).
+    fn name(&self) -> &'static str;
+    /// Choose one instance from `candidates`. Must be deterministic given
+    /// the ctx and the policy's own state.
+    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize>;
+}
+
+/// Replica + modality-path choice for an arriving request (§3.4 multi-route
+/// scheduling): decide whether the request enters at Encode or Prefill and
+/// which instance takes it. Instance selection among the chosen candidate
+/// set is delegated to the active [`BalancePolicy`], so route and balance
+/// policies compose freely.
+pub trait RoutePolicy: Send {
+    /// Registry name (what the `route_policy` config knob selects).
+    fn name(&self) -> &'static str;
+    /// Route one request. `feature_resident` = the MM Store already holds
+    /// this request's image features (Encode can be skipped, §3.2).
+    /// Errors only when the deployment has no instance capable of the
+    /// required entry stage.
+    fn route(
+        &mut self,
+        ctx: &PolicyCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route>;
+}
+
+/// Per-stage batch formation + decode admission quota. The serving loop
+/// owns the queues and calls in whenever an instance frees up; the policy
+/// decides what to drain (order and cut-off). Implementations must always
+/// admit at least one request from a non-empty queue (an oversized single
+/// request must run alone, never deadlock).
+pub trait BatchPolicy: Send {
+    /// Registry name (what the `batch_policy` config knob selects).
+    fn name(&self) -> &'static str;
+    /// Pop an encode batch from `queue`, honoring `cfg.max_encode_batch`.
+    fn form_encode_batch(
+        &mut self,
+        queue: &mut VecDeque<EncodeItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<EncodeItem>;
+    /// Pop a prefill batch from `queue`, honoring `cfg.max_prefill_batch`
+    /// and `cfg.max_prefill_tokens`.
+    fn form_prefill_batch(
+        &mut self,
+        queue: &mut VecDeque<PrefillItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<PrefillItem>;
+    /// How many waiting sequences a decode step may admit given the current
+    /// batch size (KV admission is checked separately by the caller).
+    fn decode_quota(&mut self, active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize;
+}
+
+/// Registered [`RoutePolicy`] names, default first.
+pub const ROUTE_POLICIES: &[&str] = &["modality_path", "cache_affinity", "slo_aware"];
+/// Registered [`BalancePolicy`] names, default first.
+pub const BALANCE_POLICIES: &[&str] = &["least_loaded", "round_robin", "weighted_least_loaded"];
+/// Registered [`BatchPolicy`] names, default first.
+pub const BATCH_POLICIES: &[&str] = &["fcfs", "sjf_prefill"];
+
+/// Construct a [`RoutePolicy`] by registry name.
+pub fn make_route_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
+    match name {
+        "modality_path" => Ok(Box::new(ModalityPath)),
+        "cache_affinity" => Ok(Box::new(CacheAffinity)),
+        "slo_aware" => Ok(Box::new(SloAware)),
+        _ => bail!(
+            "unknown route_policy '{name}'; registered: {}",
+            ROUTE_POLICIES.join(", ")
+        ),
+    }
+}
+
+/// Construct a [`BalancePolicy`] by registry name.
+pub fn make_balance_policy(name: &str) -> Result<Box<dyn BalancePolicy>> {
+    match name {
+        "least_loaded" => Ok(Box::new(LeastLoaded)),
+        "round_robin" => Ok(Box::new(RoundRobin::default())),
+        "weighted_least_loaded" => Ok(Box::new(WeightedLeastLoaded)),
+        _ => bail!(
+            "unknown balance_policy '{name}'; registered: {}",
+            BALANCE_POLICIES.join(", ")
+        ),
+    }
+}
+
+/// Construct a [`BatchPolicy`] by registry name.
+pub fn make_batch_policy(name: &str) -> Result<Box<dyn BatchPolicy>> {
+    match name {
+        "fcfs" => Ok(Box::new(FcfsBatch)),
+        "sjf_prefill" => Ok(Box::new(SjfPrefillBatch)),
+        _ => bail!(
+            "unknown batch_policy '{name}'; registered: {}",
+            BATCH_POLICIES.join(", ")
+        ),
+    }
+}
+
+/// The three active policies of a serving run, resolved from the
+/// `[scheduler]` config knobs.
+pub struct PolicySet {
+    pub route: Box<dyn RoutePolicy>,
+    pub balance: Box<dyn BalancePolicy>,
+    pub batch: Box<dyn BatchPolicy>,
+}
+
+impl PolicySet {
+    /// Resolve `route_policy` / `balance_policy` / `batch_policy` from the
+    /// scheduler config. Unknown names error, listing the registered ones.
+    pub fn from_scheduler(s: &SchedulerSpec) -> Result<PolicySet> {
+        Ok(PolicySet {
+            route: make_route_policy(&s.route_policy)?,
+            balance: make_balance_policy(&s.balance_policy)?,
+            batch: make_batch_policy(&s.batch_policy)?,
+        })
+    }
+}
+
+/// All-replica candidate set for a request's entry stage (Encode for
+/// to-be-encoded multimodal requests, Prefill otherwise) — the default
+/// routing pool shared by the route policies.
+pub(crate) fn entry_candidates(ctx: &PolicyCtx, want_encode: bool) -> Vec<usize> {
+    let need = if want_encode { StageNeed::Encode } else { StageNeed::Prefill };
+    (0..ctx.cands.replicas()).flat_map(|r| ctx.cands.get(r, need).iter().copied()).collect()
+}
+
+/// Test scaffold shared by the policy test modules: owns the non-table
+/// pieces a [`PolicyCtx`] borrows.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    pub(crate) struct CtxOwner {
+        pub(crate) dep: Deployment,
+        pub(crate) cands: StageCands,
+        pub(crate) sched: SchedulerSpec,
+        pub(crate) slo: SloSpec,
+        pub(crate) tok_s: (f64, f64),
+    }
+
+    impl CtxOwner {
+        /// `tok_s` = (prefill tokens/s, encode tokens/s) service-rate
+        /// estimates; (0.0, 0.0) disables SLO projections.
+        pub(crate) fn new(dep: &str, tok_s: (f64, f64)) -> Self {
+            let dep = Deployment::parse(dep).unwrap();
+            let cands = StageCands::build(&dep);
+            Self {
+                dep,
+                cands,
+                sched: SchedulerSpec::default(),
+                slo: SloSpec::decode_disagg(),
+                tok_s,
+            }
+        }
+
+        pub(crate) fn ctx<'a>(&'a self, table: &'a StatusTable) -> PolicyCtx<'a> {
+            PolicyCtx {
+                table,
+                dep: &self.dep,
+                cands: &self.cands,
+                store: None,
+                scheduler: &self.sched,
+                slo: &self.slo,
+                now: 0.0,
+                prefill_tok_s: self.tok_s.0,
+                encode_tok_s: self.tok_s.1,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_defaults_resolve_and_lead_the_name_lists() {
+        assert_eq!(make_route_policy(ROUTE_POLICIES[0]).unwrap().name(), "modality_path");
+        assert_eq!(make_balance_policy(BALANCE_POLICIES[0]).unwrap().name(), "least_loaded");
+        assert_eq!(make_batch_policy(BATCH_POLICIES[0]).unwrap().name(), "fcfs");
+        let d = SchedulerSpec::default();
+        assert_eq!(d.route_policy, ROUTE_POLICIES[0]);
+        assert_eq!(d.balance_policy, BALANCE_POLICIES[0]);
+        assert_eq!(d.batch_policy, BATCH_POLICIES[0]);
+    }
+
+    #[test]
+    fn every_registered_name_constructs_and_round_trips() {
+        for &n in ROUTE_POLICIES {
+            assert_eq!(make_route_policy(n).unwrap().name(), n);
+        }
+        for &n in BALANCE_POLICIES {
+            assert_eq!(make_balance_policy(n).unwrap().name(), n);
+        }
+        for &n in BATCH_POLICIES {
+            assert_eq!(make_batch_policy(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn unknown_names_error_listing_registered_policies() {
+        let e = make_route_policy("nope").unwrap_err().to_string();
+        assert!(e.contains("nope") && e.contains("modality_path"), "{e}");
+        assert!(e.contains("cache_affinity") && e.contains("slo_aware"), "{e}");
+        let e = make_balance_policy("nope").unwrap_err().to_string();
+        assert!(e.contains("least_loaded") && e.contains("round_robin"), "{e}");
+        let e = make_batch_policy("nope").unwrap_err().to_string();
+        assert!(e.contains("fcfs") && e.contains("sjf_prefill"), "{e}");
+    }
+
+    #[test]
+    fn stage_cands_cover_the_deployment() {
+        let dep = Deployment::parse("(E-PD)x2").unwrap();
+        let c = StageCands::build(&dep);
+        assert_eq!(c.replicas(), 2);
+        assert_eq!(c.get(0, StageNeed::Encode), &[0]);
+        assert_eq!(c.get(0, StageNeed::Prefill), &[1]);
+        assert_eq!(c.get(1, StageNeed::Decode), &[3]);
+    }
+}

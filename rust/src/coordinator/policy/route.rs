@@ -1,0 +1,266 @@
+//! [`RoutePolicy`] implementations — replica + modality-path choice.
+
+use crate::coordinator::policy::{
+    entry_candidates, BalancePolicy, PolicyCtx, RoutePolicy, StageNeed,
+};
+use crate::coordinator::router::Route;
+use crate::workload::RequestSpec;
+use anyhow::Result;
+
+/// Build the `Route` once the entry instance is chosen.
+fn to_route(
+    spec: &RequestSpec,
+    feature_resident: bool,
+    want_encode: bool,
+    instance: usize,
+) -> Route {
+    if want_encode {
+        Route::Encode(instance)
+    } else {
+        Route::Prefill { instance, feature_reused: spec.is_multimodal() && feature_resident }
+    }
+}
+
+fn no_entry_instance(want_encode: bool) -> anyhow::Error {
+    anyhow::anyhow!(
+        "no {} instance available",
+        if want_encode { "encode-capable" } else { "prefill-capable" }
+    )
+}
+
+/// Default: the paper's modality-aware multi-path routing (§3.4) —
+/// multimodal requests enter at Encode (E-P-D path), text-only and
+/// feature-resident requests enter at Prefill (P-D path), over the entry
+/// candidates of **all** replicas, with instance selection delegated to the
+/// active [`BalancePolicy`]. With the default `least_loaded` balance policy
+/// this reproduces the pre-policy-API router bit-exactly.
+pub struct ModalityPath;
+
+impl RoutePolicy for ModalityPath {
+    fn name(&self) -> &'static str {
+        "modality_path"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &PolicyCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let candidates = entry_candidates(ctx, want_encode);
+        if candidates.is_empty() {
+            return Err(no_entry_instance(want_encode));
+        }
+        let instance = balance.pick(ctx, &candidates).expect("non-empty");
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
+/// Content-affinity routing for §3.2 cross-request reuse: every multimodal
+/// request is pinned to the replica its image key hashes to, so repeated
+/// images land where their features were produced (and where any
+/// replica-local MM-Store tier would hold them), maximizing cross-request
+/// feature reuse and keeping the remaining replicas' encoders free for cold
+/// content. Text-only requests fall back to [`ModalityPath`] behavior.
+/// Instance choice *within* the affine replica is still the active
+/// [`BalancePolicy`]'s.
+///
+/// Affinity is derived from the key hash, not a live
+/// [`PolicyCtx::feature_resident`] probe: the simulator's MM Store is one
+/// pooled tier, so residency is replica-independent — the hash is what
+/// *creates* replica locality (of encoder warmth and any future
+/// replica-local store tier), and it keeps the decision stable across the
+/// key's store-eviction lifecycle.
+pub struct CacheAffinity;
+
+impl RoutePolicy for CacheAffinity {
+    fn name(&self) -> &'static str {
+        "cache_affinity"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &PolicyCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let need = if want_encode { StageNeed::Encode } else { StageNeed::Prefill };
+        let replicas = ctx.cands.replicas();
+        let affine: Option<&[usize]> = match &spec.image {
+            Some(img) if replicas > 1 => {
+                // Fibonacci-hash the content key onto a replica: stable
+                // across the run, uniform over replicas.
+                let r = (img.key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) as usize % replicas;
+                let set = ctx.cands.get(r, need);
+                // An elastic switch can leave a replica without the needed
+                // stage; affinity then yields to the global pool.
+                (!set.is_empty()).then_some(set)
+            }
+            _ => None,
+        };
+        let instance = match affine {
+            Some(set) => balance.pick(ctx, set).expect("non-empty"),
+            None => {
+                let candidates = entry_candidates(ctx, want_encode);
+                if candidates.is_empty() {
+                    return Err(no_entry_instance(want_encode));
+                }
+                balance.pick(ctx, &candidates).expect("non-empty")
+            }
+        };
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
+/// TTFT-SLO-aware admission routing: projects each candidate's
+/// queue-induced wait from its pending-token backlog and the cost model's
+/// steady-state service-rate estimate ([`PolicyCtx::prefill_tok_s`] /
+/// [`PolicyCtx::encode_tok_s`]), and **skips replicas projected to bust the
+/// TTFT SLO** (`slo.ttft_ms`, 2000 ms in the paper's decode-disaggregated
+/// setting). Among the surviving candidates the active [`BalancePolicy`]
+/// picks; if every candidate is projected over budget the full set is used
+/// (the request is late either way — shed nothing, just balance).
+pub struct SloAware;
+
+impl RoutePolicy for SloAware {
+    fn name(&self) -> &'static str {
+        "slo_aware"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &PolicyCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let candidates = entry_candidates(ctx, want_encode);
+        if candidates.is_empty() {
+            return Err(no_entry_instance(want_encode));
+        }
+        let tok_s = if want_encode { ctx.encode_tok_s } else { ctx.prefill_tok_s };
+        let fits: Vec<usize> = if tok_s > 0.0 {
+            candidates
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    let queue_s = ctx.table.get(i).pending_tokens as f64 / tok_s;
+                    queue_s * 1e3 <= ctx.slo.ttft_ms
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let pool = if fits.is_empty() { &candidates } else { &fits };
+        let instance = balance.pick(ctx, pool).expect("non-empty");
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::balancer::{InstanceStatus, StatusTable};
+    use crate::coordinator::policy::testutil::CtxOwner;
+    use crate::coordinator::policy::LeastLoaded;
+    use crate::workload::ImageInput;
+
+    fn mm(key: u64) -> RequestSpec {
+        RequestSpec {
+            id: 1,
+            image: Some(ImageInput { width: 560, height: 560, key, visual_tokens: 400 }),
+            text_tokens: 8,
+            output_tokens: 64,
+        }
+    }
+
+    fn text() -> RequestSpec {
+        RequestSpec { id: 2, image: None, text_tokens: 8, output_tokens: 64 }
+    }
+
+    #[test]
+    fn cache_affinity_pins_repeated_keys_to_one_replica() {
+        let table = StatusTable::new(6);
+        let owner = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+        let ctx = owner.ctx(&table);
+        let a = CacheAffinity.route(&ctx, &mm(0xfeed), false, &mut LeastLoaded).unwrap();
+        let b = CacheAffinity.route(&ctx, &mm(0xfeed), false, &mut LeastLoaded).unwrap();
+        assert_eq!(a, b, "same key must route to the same replica");
+        // Keys spread across replicas under the Fibonacci hash.
+        let routes: Vec<Route> = (0u64..16)
+            .map(|k| CacheAffinity.route(&ctx, &mm(k), false, &mut LeastLoaded).unwrap())
+            .collect();
+        let encoders: std::collections::HashSet<usize> = routes
+            .iter()
+            .map(|r| match r {
+                Route::Encode(i) => *i,
+                _ => panic!("multimodal cold key must enter at Encode"),
+            })
+            .collect();
+        assert_eq!(encoders.len(), 2, "keys must spread over both replicas: {encoders:?}");
+    }
+
+    #[test]
+    fn cache_affinity_still_balances_text_requests() {
+        let mut table = StatusTable::new(6);
+        // Replica 0's entry instances are slammed; text requests (no key
+        // affinity) must balance away to replica 1's prefill (instance 4).
+        table.update(0, InstanceStatus { queue_len: 50, ..Default::default() });
+        table.update(1, InstanceStatus { queue_len: 50, ..Default::default() });
+        let owner = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+        let ctx = owner.ctx(&table);
+        let t = CacheAffinity.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(
+            t,
+            Route::Prefill { instance: 4, feature_reused: false },
+            "text-only requests must still balance to the idle replica"
+        );
+    }
+
+    #[test]
+    fn slo_aware_skips_projected_ttft_busters() {
+        let mut table = StatusTable::new(6);
+        // 3000 pending prompt tokens at 1000 tok/s ⇒ 3 s projected wait >
+        // the 2 s TTFT SLO: instance 1 (replica 0's prefill) must be
+        // skipped even though its load score is lower.
+        table.update(1, InstanceStatus { pending_tokens: 3000, ..Default::default() });
+        table.update(4, InstanceStatus { queue_len: 3, pending_tokens: 100, ..Default::default() });
+        let owner = CtxOwner::new("E-P-Dx2", (1000.0, 1000.0));
+        let ctx = owner.ctx(&table);
+        let r = SloAware.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 4, feature_reused: false });
+        // Least-loaded alone would have picked the token-heavy queue
+        // (score 3000/4096 ≈ 0.73 < 3.02).
+        let ll = ModalityPath.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(ll, Route::Prefill { instance: 1, feature_reused: false });
+    }
+
+    #[test]
+    fn slo_aware_degrades_to_balancing_when_everyone_busts() {
+        let mut table = StatusTable::new(3);
+        table.update(1, InstanceStatus { pending_tokens: 10_000_000, ..Default::default() });
+        let owner = CtxOwner::new("E-P-D", (1000.0, 1000.0));
+        let ctx = owner.ctx(&table);
+        let r = SloAware.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 1, feature_reused: false });
+    }
+
+    #[test]
+    fn all_policies_error_without_an_entry_stage() {
+        let table = StatusTable::new(2);
+        let owner = CtxOwner::new("P-D", (0.0, 0.0));
+        let ctx = owner.ctx(&table);
+        let mut policies: Vec<Box<dyn RoutePolicy>> =
+            vec![Box::new(ModalityPath), Box::new(CacheAffinity), Box::new(SloAware)];
+        for p in &mut policies {
+            let e = p.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap_err().to_string();
+            assert!(e.contains("encode-capable"), "{e}");
+            assert!(p.route(&ctx, &text(), false, &mut LeastLoaded).is_ok());
+        }
+    }
+}

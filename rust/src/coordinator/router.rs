@@ -6,11 +6,23 @@
 //!
 //! The router also short-circuits the Encode stage entirely when the MM
 //! Store already holds the input's features (cross-request reuse, §3.2).
+//!
+//! Since the scheduling-policy API redesign the routing *logic* lives in
+//! [`crate::coordinator::policy::route`] behind the [`RoutePolicy`] trait
+//! (config knob `[scheduler] route_policy`), and the serving loop
+//! dispatches through a [`crate::coordinator::policy::PolicySet`] directly.
+//! [`Router`] remains as the zero-config facade over the **default**
+//! policies (`modality_path` routing × `least_loaded` balancing) for tools
+//! and tests that route against a bare status table.
+//!
+//! [`RoutePolicy`]: crate::coordinator::policy::RoutePolicy
 
+use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::deployment::Deployment;
+use crate::coordinator::policy::{LeastLoaded, ModalityPath, PolicyCtx, RoutePolicy, StageCands};
 use crate::workload::RequestSpec;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Where a new request goes first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,54 +33,46 @@ pub enum Route {
     Prefill { instance: usize, feature_reused: bool },
 }
 
-/// Routing policy: replica choice + modality path + least-loaded instance.
+/// Default-policy routing facade: modality path choice + least-loaded
+/// instance selection, the §3.4 behavior.
 pub struct Router {
-    /// Candidate encode instances per replica.
-    enc: Vec<Vec<usize>>,
-    /// Candidate prefill instances per replica.
-    pre: Vec<Vec<usize>>,
-    replicas: usize,
+    dep: Deployment,
+    cands: StageCands,
+    /// Default specs built once — `route` is called per request.
+    scheduler: SchedulerSpec,
+    slo: SloSpec,
 }
 
 impl Router {
     pub fn new(dep: &Deployment) -> Self {
-        let mut enc = Vec::new();
-        let mut pre = Vec::new();
-        for r in 0..dep.replicas {
-            enc.push(dep.instances_where(r, |s| s.encode));
-            pre.push(dep.instances_where(r, |s| s.prefill));
+        Self {
+            dep: dep.clone(),
+            cands: StageCands::build(dep),
+            scheduler: SchedulerSpec::default(),
+            slo: SloSpec::decode_disagg(),
         }
-        Self { enc, pre, replicas: dep.replicas }
     }
 
-    /// Route one request. `feature_resident` = the MM Store already holds
-    /// this request's image features.
+    /// Route one request through the default policies. `feature_resident` =
+    /// the MM Store already holds this request's image features.
     pub fn route(
         &self,
         spec: &RequestSpec,
         feature_resident: bool,
         table: &StatusTable,
     ) -> Result<Route> {
-        // Pick the replica whose relevant entry instances are least loaded.
-        let want_encode = spec.is_multimodal() && !feature_resident;
-        let candidates: Vec<usize> = (0..self.replicas)
-            .flat_map(|r| {
-                let set = if want_encode { &self.enc[r] } else { &self.pre[r] };
-                set.iter().copied()
-            })
-            .collect();
-        if candidates.is_empty() {
-            bail!(
-                "no {} instance available",
-                if want_encode { "encode-capable" } else { "prefill-capable" }
-            );
-        }
-        let instance = table.least_loaded(&candidates).expect("non-empty");
-        Ok(if want_encode {
-            Route::Encode(instance)
-        } else {
-            Route::Prefill { instance, feature_reused: spec.is_multimodal() && feature_resident }
-        })
+        let ctx = PolicyCtx {
+            table,
+            dep: &self.dep,
+            cands: &self.cands,
+            store: None,
+            scheduler: &self.scheduler,
+            slo: &self.slo,
+            now: 0.0,
+            prefill_tok_s: 0.0,
+            encode_tok_s: 0.0,
+        };
+        ModalityPath.route(&ctx, spec, feature_resident, &mut LeastLoaded)
     }
 }
 

@@ -8,9 +8,13 @@
 //!   spatially per the Fig 6 interference law; monolithic (coupled)
 //!   instances execute their stages serially, reproducing the baseline's
 //!   stage-coupling interference.
-//! * The **router** sends text-only requests down the P-D path and
-//!   multimodal ones down E-P-D, with least-loaded instance selection from
-//!   the global status table (§3.4).
+//! * Every scheduling decision dispatches through the **pluggable policy
+//!   layer** ([`crate::coordinator::policy`]), selected by the
+//!   `[scheduler]` `route_policy`/`balance_policy`/`batch_policy` config
+//!   knobs. The defaults reproduce the paper: text-only requests go down
+//!   the P-D path and multimodal ones down E-P-D, with least-loaded
+//!   instance selection from the global status table (§3.4) and FCFS batch
+//!   formation.
 //! * The **E-P handoff** uses MM-Store asynchronous feature prefetching with
 //!   cross-request reuse and the fault-tolerant local-recompute path (§3.2).
 //! * The **P-D handoff** plans layer-wise / hierarchically grouped KV
@@ -56,14 +60,13 @@
 
 use crate::config::Config;
 use crate::coordinator::balancer::{InstanceStatus, StatusTable};
-use crate::coordinator::batcher::{
-    decode_admission_quota, form_encode_batch, form_prefill_batch, EncodeItem, PrefillItem,
-};
+use crate::coordinator::batcher::{EncodeItem, PrefillItem};
 use crate::coordinator::deployment::{Deployment, InstanceSpec, StageSet};
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
+use crate::coordinator::policy::{PolicyCtx, PolicySet, StageCands, StageNeed};
 use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchPlan, SwitchRecord};
 use crate::coordinator::request::{ReqState, Request};
-use crate::coordinator::router::{Route, Router};
+use crate::coordinator::router::Route;
 use crate::kvcache::{BlockAllocator, KvManager};
 use crate::mmstore::MmStore;
 use crate::npu::{CostModel, StageKind};
@@ -149,44 +152,23 @@ fn make_kv(cm: &CostModel, kv_bytes_per_token: usize, tp: usize) -> KvManager {
     KvManager::new(BlockAllocator::for_capacity(cap, kv_bytes_per_token, 16))
 }
 
-/// Which stage capability a routing decision needs. Selecting via this enum
-/// hits the pre-materialized per-replica candidate cache instead of
-/// filtering the deployment's instance list per decision.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum StageNeed {
-    Encode,
-    Prefill,
-    Decode,
-}
-
-/// Per-replica candidate sets, rebuilt only when the routed topology
-/// changes (boot + elastic switches).
-struct StageCands {
-    enc: Vec<Vec<usize>>,
-    pre: Vec<Vec<usize>>,
-    dec: Vec<Vec<usize>>,
-}
-
-impl StageCands {
-    fn build(dep: &Deployment) -> Self {
-        let mut enc = Vec::with_capacity(dep.replicas);
-        let mut pre = Vec::with_capacity(dep.replicas);
-        let mut dec = Vec::with_capacity(dep.replicas);
-        for r in 0..dep.replicas {
-            enc.push(dep.instances_where(r, |s| s.encode));
-            pre.push(dep.instances_where(r, |s| s.prefill));
-            dec.push(dep.instances_where(r, |s| s.decode));
+/// Construct the policy world view from disjoint field borrows (a method
+/// returning `PolicyCtx` would borrow all of `self` and conflict with the
+/// `&mut` the policy objects need).
+macro_rules! policy_ctx {
+    ($self:ident, $now:expr) => {
+        PolicyCtx {
+            table: &$self.table,
+            dep: &$self.dep,
+            cands: &$self.cands,
+            store: Some(&$self.store),
+            scheduler: &$self.cfg.scheduler,
+            slo: &$self.cfg.slo,
+            now: $now,
+            prefill_tok_s: $self.prefill_tok_s,
+            encode_tok_s: $self.encode_tok_s,
         }
-        Self { enc, pre, dec }
-    }
-
-    fn get(&self, replica: usize, need: StageNeed) -> &[usize] {
-        match need {
-            StageNeed::Encode => &self.enc[replica],
-            StageNeed::Prefill => &self.pre[replica],
-            StageNeed::Decode => &self.dec[replica],
-        }
-    }
+    };
 }
 
 /// Work executing on an NPU.
@@ -243,9 +225,15 @@ pub struct ServingSim {
     npus: Vec<PsNpu>,
     tasks: HashMap<(usize, TaskId), TaskKind>,
     table: StatusTable,
-    router: Router,
+    /// Active route/balance/batch policies, resolved from the
+    /// `[scheduler]` policy knobs at construction.
+    policies: PolicySet,
     cands: StageCands,
     store: MmStore,
+    /// Steady-state per-instance service-rate estimates from the cost
+    /// model, exposed to policies via [`PolicyCtx`] (SLO projections).
+    prefill_tok_s: f64,
+    encode_tok_s: f64,
     /// One P→D KV link per replica.
     kv_links: Vec<Link>,
     /// Lazy arrival source (replayed vector or streaming generator).
@@ -295,12 +283,27 @@ impl ServingSim {
         Self::with_source(cfg, ArrivalSource::Stream(stream))
     }
 
+    /// Build a simulation lazily sampling a phase-shifting workload
+    /// ([`crate::workload::phases`]) — O(in-flight) memory at any trace
+    /// length, bit-identical to materializing
+    /// [`crate::workload::phases::generate_phased`] and replaying it.
+    pub fn phased(cfg: Config, plan: &crate::workload::phases::PhasePlan) -> Result<Self> {
+        let source = ArrivalSource::phased(&cfg.workload, &cfg.model.vit, plan, cfg.seed);
+        Self::with_source(cfg, source)
+    }
+
     /// Build a simulation from a config and any arrival source.
     pub fn with_source(cfg: Config, source: ArrivalSource) -> Result<Self> {
         let dep = Deployment::parse(&cfg.deployment)?;
         let cm = CostModel::new(cfg.model.clone(), cfg.hardware.clone());
-        let router = Router::new(&dep);
+        let policies = PolicySet::from_scheduler(&cfg.scheduler)?;
         let cands = StageCands::build(&dep);
+        // Big-batch service-rate estimates for SLO-aware routing: how many
+        // prompt/visual tokens one instance retires per second at steady
+        // state (TP scaling is a per-instance refinement policies don't
+        // need for a queue-delay projection).
+        let prefill_tok_s = 2048.0 / cm.prefill_time_batch(&[2048]).max(1e-9);
+        let encode_tok_s = 1196.0 / cm.encode_time(1196).max(1e-9);
         let mut instances = Vec::new();
         for spec in &dep.instances {
             let kv = if spec.stages.decode {
@@ -347,9 +350,11 @@ impl ServingSim {
             npus,
             tasks: HashMap::with_capacity(64),
             table,
-            router,
+            policies,
             cands,
             store,
+            prefill_tok_s,
+            encode_tok_s,
             kv_links,
             source,
             last_arrival,
@@ -493,14 +498,17 @@ impl ServingSim {
         self.arm_npu(npu, now, q);
     }
 
-    /// Pick the least-loaded instance with the needed stage in this replica
-    /// from the cached candidate sets and the live status table.
-    fn pick_instance(&self, replica: usize, need: StageNeed) -> usize {
+    /// Pick an instance with the needed stage in this replica via the
+    /// active [`crate::coordinator::policy::BalancePolicy`], from the
+    /// cached candidate sets and the live status table.
+    fn pick_instance(&mut self, replica: usize, need: StageNeed, now: f64) -> usize {
         if cfg!(debug_assertions) {
             self.debug_check_table();
         }
-        self.table
-            .least_loaded(self.cands.get(replica, need))
+        let ctx = policy_ctx!(self, now);
+        self.policies
+            .balance
+            .pick(&ctx, self.cands.get(replica, need))
             .expect("deployment validated at parse time")
     }
 
@@ -590,10 +598,9 @@ impl ServingSim {
 
         // 1. New arrivals route to the reshaped topology from this instant:
         //    the deployment's instance table is the routing authority, and
-        //    the router's (and pick cache's) candidate sets are rebuilt
-        //    from it.
+        //    the candidate cache every policy reads through [`PolicyCtx`]
+        //    is rebuilt from it.
         self.dep.instances[inst].stages = plan.to;
-        self.router = Router::new(&self.dep);
         self.cands = StageCands::build(&self.dep);
 
         // 2. Drain the donor's queues. Queued encodes only carry request
@@ -603,7 +610,7 @@ impl ServingSim {
         for item in enc_items {
             self.instances[inst].drained(item.visual_tokens);
             self.sync_status(inst);
-            let e_inst = self.pick_instance(replica, StageNeed::Encode);
+            let e_inst = self.pick_instance(replica, StageNeed::Encode, now);
             self.instances[e_inst].push_encode(item);
             self.sync_status(e_inst);
             q.at(now, Ev::Kick { inst: e_inst });
@@ -615,7 +622,7 @@ impl ServingSim {
         for item in pre_items {
             self.instances[inst].drained(item.prompt_tokens);
             self.sync_status(inst);
-            let p_inst = self.pick_instance(replica, StageNeed::Prefill);
+            let p_inst = self.pick_instance(replica, StageNeed::Prefill, now);
             let visual = self
                 .reqs
                 .get(&item.req)
@@ -689,7 +696,7 @@ impl ServingSim {
         if reqs.is_empty() {
             return;
         }
-        let d_inst = self.pick_instance(replica, StageNeed::Decode);
+        let d_inst = self.pick_instance(replica, StageNeed::Decode, now);
         let bytes: f64 = reqs
             .iter()
             .map(|&r| {
@@ -739,7 +746,10 @@ impl ServingSim {
 
         // 1. Prefill.
         if self.instances[inst].spec.stages.prefill && !self.instances[inst].prefill_q.is_empty() {
-            let batch = form_prefill_batch(&mut self.instances[inst].prefill_q, &self.cfg.scheduler);
+            let batch = self
+                .policies
+                .batch
+                .form_prefill_batch(&mut self.instances[inst].prefill_q, &self.cfg.scheduler);
             if !batch.is_empty() {
                 let drained: usize = batch.iter().map(|b| b.prompt_tokens).sum();
                 self.instances[inst].drained(drained);
@@ -767,7 +777,10 @@ impl ServingSim {
         }
         // 2. Encode.
         if self.instances[inst].spec.stages.encode && !self.instances[inst].encode_q.is_empty() {
-            let batch = form_encode_batch(&mut self.instances[inst].encode_q, &self.cfg.scheduler);
+            let batch = self
+                .policies
+                .batch
+                .form_encode_batch(&mut self.instances[inst].encode_q, &self.cfg.scheduler);
             if !batch.is_empty() {
                 let drained: usize = batch.iter().map(|b| b.visual_tokens).sum();
                 self.instances[inst].drained(drained);
@@ -793,7 +806,7 @@ impl ServingSim {
     /// Admit waiting sequences into the decode batch (continuous batching
     /// + paged-KV admission), FCFS until the batch cap or KV pressure.
     fn admit_decode(&mut self, inst: usize) {
-        let quota = decode_admission_quota(
+        let quota = self.policies.batch.decode_quota(
             self.instances[inst].decode_active.len(),
             self.instances[inst].decode_waiting.len(),
             &self.cfg.scheduler,
@@ -934,7 +947,7 @@ impl ServingSim {
             // critical path under prefetching).
             self.store.put(img.key, self.cm.feature_bytes(img.visual_tokens), img.visual_tokens);
             // Choose the prefill instance (least-loaded in this replica).
-            let p_inst = self.pick_instance(replica, StageNeed::Prefill);
+            let p_inst = self.pick_instance(replica, StageNeed::Prefill, now);
             self.reqs.get_mut(&rid).expect("encoded request is live").route.push(p_inst);
             if p_inst == inst {
                 // E and P coupled on the same instance: feature is local.
@@ -962,7 +975,7 @@ impl ServingSim {
             inst
         } else {
             let replica = self.instances[inst].spec.replica;
-            self.pick_instance(replica, StageNeed::Prefill)
+            self.pick_instance(replica, StageNeed::Prefill, now)
         };
         let r = self.reqs.get_mut(&rid).expect("transferring request is live");
         let recompute_tokens = match &r.spec.image {
@@ -1008,7 +1021,7 @@ impl ServingSim {
             let d_inst = if self.instances[inst].spec.stages.decode {
                 inst // PD coupled: no transfer.
             } else {
-                self.pick_instance(replica, StageNeed::Decode)
+                self.pick_instance(replica, StageNeed::Decode, now)
             };
             self.reqs.get_mut(rid).expect("prefilled request is live").route.push(d_inst);
             by_dst.entry(d_inst).or_default().push(*rid);
@@ -1163,7 +1176,11 @@ impl ServingSim {
         if cfg!(debug_assertions) {
             self.debug_check_table();
         }
-        let route = self.router.route(&spec, resident, &self.table).expect("deployment validated");
+        let route = {
+            let ctx = policy_ctx!(self, now);
+            let PolicySet { route, balance, .. } = &mut self.policies;
+            route.route(&ctx, &spec, resident, &mut **balance).expect("deployment validated")
+        };
         match route {
             Route::Encode(inst) => {
                 let img = spec.image.expect("multimodal");

@@ -91,27 +91,63 @@ impl PhasePlan {
     }
 }
 
-/// Sample the phased arrival stream. Request ids are assigned in arrival
-/// order (the serving simulator indexes requests by id). The Zipf image
-/// pool is sized from the expected request count exactly like
+/// Lazily samples the phased arrival stream — O(in-flight) memory for
+/// million-request non-stationary traces, the phased counterpart of
+/// [`crate::workload::stream::WorkloadStream`]. Request ids are assigned in
+/// arrival order (the serving simulator indexes requests by id). The Zipf
+/// image pool is sized from the expected request count exactly like
 /// [`crate::workload::generate`] sizes it from `num_requests`, so
 /// cross-request MM-Store reuse statistics carry over.
-pub fn generate_phased(
-    base: &WorkloadSpec,
-    vit: &VitDesc,
-    plan: &PhasePlan,
+///
+/// [`generate_phased`] is this stream collected into a `Vec`, so streamed
+/// and materialized runs are bit-identical by construction (and asserted by
+/// `tests/policy_layer.rs` end to end through the serving loop).
+#[derive(Clone)]
+pub struct PhasedStream {
+    base: WorkloadSpec,
+    vit: VitDesc,
     seed: u64,
-) -> Vec<ArrivedRequest> {
-    let mut rng = Rng::with_stream(seed, 0x9a5e);
-    let pool =
-        ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
-    let zipf = ZipfTable::new(pool, 1.2);
-    let mut out = Vec::with_capacity(plan.expected_requests());
-    let mut phase_start = 0.0f64;
-    let mut id = 0u64;
-    for _ in 0..plan.cycles {
-        for phase in &plan.phases {
-            let mut spec = base.clone();
+    plan: PhasePlan,
+    rng: Rng,
+    zipf: ZipfTable,
+    /// The current phase's effective workload spec (overrides applied).
+    cur: WorkloadSpec,
+    cycle: usize,
+    phase_idx: usize,
+    phase_start: f64,
+    t: f64,
+    id: u64,
+}
+
+impl PhasedStream {
+    pub fn new(base: &WorkloadSpec, vit: &VitDesc, plan: &PhasePlan, seed: u64) -> Self {
+        let rng = Rng::with_stream(seed, 0x9a5e);
+        let pool = ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
+        let zipf = ZipfTable::new(pool, 1.2);
+        let mut s = Self {
+            base: base.clone(),
+            vit: vit.clone(),
+            seed,
+            plan: plan.clone(),
+            rng,
+            zipf,
+            cur: base.clone(),
+            cycle: 0,
+            phase_idx: 0,
+            phase_start: 0.0,
+            t: 0.0,
+            id: 0,
+        };
+        s.enter_phase();
+        s
+    }
+
+    /// Apply the current phase's overrides and reset the arrival clock to
+    /// the phase boundary (matching the materialized generator's
+    /// per-phase `t = phase_start`).
+    fn enter_phase(&mut self) {
+        if let Some(phase) = self.plan.phases.get(self.phase_idx) {
+            let mut spec = self.base.clone();
             spec.image_fraction = phase.image_fraction;
             if let Some(m) = phase.text_tokens_mean {
                 spec.text_tokens_mean = m;
@@ -119,27 +155,81 @@ pub fn generate_phased(
             if let Some(o) = phase.output_tokens {
                 spec.output_tokens = o;
             }
-            // A zero-rate phase is a quiet interval: no arrivals, just time.
-            if phase.rate <= 0.0 {
-                phase_start += phase.duration_s;
-                continue;
-            }
-            let mut t = phase_start;
-            loop {
-                t += rng.exp(phase.rate);
-                if t >= phase_start + phase.duration_s {
-                    break;
-                }
-                out.push(ArrivedRequest {
-                    spec: sample_spec(id, &mut rng, &spec, vit, &zipf, seed),
-                    arrival: t,
-                });
-                id += 1;
-            }
-            phase_start += phase.duration_s;
+            self.cur = spec;
+            self.t = self.phase_start;
         }
     }
-    out
+
+    /// Move to the next phase (wrapping into the next cycle). Returns
+    /// `false` once the plan is exhausted.
+    fn advance_phase(&mut self) -> bool {
+        self.phase_start += self.plan.phases[self.phase_idx].duration_s;
+        self.phase_idx += 1;
+        if self.phase_idx == self.plan.phases.len() {
+            self.phase_idx = 0;
+            self.cycle += 1;
+        }
+        if self.cycle >= self.plan.cycles {
+            return false;
+        }
+        self.enter_phase();
+        true
+    }
+
+    /// Arrival time of the final request, computed by walking a clone of
+    /// the stream to exhaustion (the phase RNG interleaves shape and gap
+    /// draws, so unlike [`crate::workload::stream::WorkloadStream`] the gap
+    /// stream cannot be replayed alone). O(total requests) time, O(1)
+    /// memory; 0.0 for an empty plan.
+    pub fn last_arrival(&self) -> f64 {
+        self.clone().last().map(|a| a.arrival).unwrap_or(0.0)
+    }
+}
+
+impl Iterator for PhasedStream {
+    type Item = ArrivedRequest;
+
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        if self.plan.phases.is_empty() || self.cycle >= self.plan.cycles {
+            return None;
+        }
+        loop {
+            let phase = &self.plan.phases[self.phase_idx];
+            // A zero-rate phase is a quiet interval: no arrivals, just time.
+            if phase.rate <= 0.0 {
+                if !self.advance_phase() {
+                    return None;
+                }
+                continue;
+            }
+            let rate = phase.rate;
+            let phase_end = self.phase_start + phase.duration_s;
+            self.t += self.rng.exp(rate);
+            if self.t >= phase_end {
+                if !self.advance_phase() {
+                    return None;
+                }
+                continue;
+            }
+            let spec =
+                sample_spec(self.id, &mut self.rng, &self.cur, &self.vit, &self.zipf, self.seed);
+            self.id += 1;
+            return Some(ArrivedRequest { spec, arrival: self.t });
+        }
+    }
+}
+
+/// Materialize the phased arrival stream (small runs, tests, trace dumps).
+/// Prefer [`PhasedStream`] via
+/// [`crate::workload::stream::ArrivalSource::Phased`] for large traces —
+/// same sequence, O(in-flight) memory.
+pub fn generate_phased(
+    base: &WorkloadSpec,
+    vit: &VitDesc,
+    plan: &PhasePlan,
+    seed: u64,
+) -> Vec<ArrivedRequest> {
+    PhasedStream::new(base, vit, plan, seed).collect()
 }
 
 #[cfg(test)]
@@ -163,6 +253,41 @@ mod tests {
         let c = generate_phased(&base, &vit(), &plan(), 8);
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stream_matches_materialized_generator_bit_exactly() {
+        // generate_phased IS the collected stream, but pin the equivalence
+        // against independent stream instances (clone-safety + restart).
+        let base = WorkloadSpec::sharegpt4o();
+        let s = PhasedStream::new(&base, &vit(), &plan(), 7);
+        let streamed: Vec<ArrivedRequest> = s.clone().collect();
+        assert_eq!(streamed, generate_phased(&base, &vit(), &plan(), 7));
+        assert_eq!(s.last_arrival(), streamed.last().unwrap().arrival);
+        // last_arrival is a pure pre-scan: the stream still yields from the
+        // beginning afterwards.
+        assert_eq!(s.collect::<Vec<_>>(), streamed);
+    }
+
+    #[test]
+    fn stream_handles_degenerate_plans() {
+        let base = WorkloadSpec::sharegpt4o();
+        let empty = PhasePlan { phases: vec![], cycles: 3 };
+        assert_eq!(PhasedStream::new(&base, &vit(), &empty, 1).count(), 0);
+        assert_eq!(PhasedStream::new(&base, &vit(), &empty, 1).last_arrival(), 0.0);
+        let zero_cycles = PhasePlan { phases: plan().phases, cycles: 0 };
+        assert_eq!(PhasedStream::new(&base, &vit(), &zero_cycles, 1).count(), 0);
+        let all_quiet = PhasePlan {
+            phases: vec![Phase {
+                duration_s: 10.0,
+                rate: 0.0,
+                image_fraction: 0.0,
+                text_tokens_mean: None,
+                output_tokens: None,
+            }],
+            cycles: 2,
+        };
+        assert_eq!(PhasedStream::new(&base, &vit(), &all_quiet, 1).count(), 0);
     }
 
     #[test]

@@ -11,13 +11,15 @@
 //! bit-identical (asserted by `tests/determinism_golden.rs`).
 //!
 //! [`ArrivalSource`] is the serving loop's uniform view: a replayed vector
-//! (traces, phased workloads, tests) or a lazy stream, either way exposing
-//! the last arrival time up-front so the simulation horizon stays exactly
-//! what it was before streaming existed.
+//! (traces, tests), a lazy stationary stream, or a lazy phase-shifting
+//! stream ([`crate::workload::phases::PhasedStream`]) — each exposing the
+//! last arrival time up-front so the simulation horizon stays exactly what
+//! it was before streaming existed.
 
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::rng::{Rng, ZipfTable};
 use crate::workload::injector::{Arrival, ARRIVAL_STREAM};
+use crate::workload::phases::{PhasePlan, PhasedStream};
 use crate::workload::{image_pool, sample_spec, ArrivedRequest, SPEC_STREAM};
 
 /// Lazily samples the exact request sequence of
@@ -102,13 +104,23 @@ impl Iterator for WorkloadStream {
 /// anchor) without holding more than O(in-flight) extra state in the lazy
 /// case.
 pub enum ArrivalSource {
-    /// Replay of an explicit arrival list (traces, phased workloads, tests).
+    /// Replay of an explicit arrival list (traces, tests).
     Replay(std::vec::IntoIter<ArrivedRequest>),
     /// Lazy generation (the default serving path).
     Stream(WorkloadStream),
+    /// Lazy phase-shifting (non-stationary) generation — the elastic
+    /// orchestration workloads, with O(in-flight) memory at any trace
+    /// length (bit-identical to replaying
+    /// [`crate::workload::phases::generate_phased`]).
+    Phased(PhasedStream),
 }
 
 impl ArrivalSource {
+    /// Lazily sample a phase-shifting workload
+    /// ([`crate::workload::phases`]).
+    pub fn phased(base: &WorkloadSpec, vit: &VitDesc, plan: &PhasePlan, seed: u64) -> Self {
+        ArrivalSource::Phased(PhasedStream::new(base, vit, plan, seed))
+    }
     /// Replay an explicit arrival list. The list is stable-sorted by
     /// arrival time: the serving loop keeps exactly one pending arrival
     /// event, so out-of-order timestamps would otherwise be silently
@@ -132,15 +144,19 @@ impl ArrivalSource {
                     s.last_arrival()
                 }
             }
+            ArrivalSource::Phased(s) => s.last_arrival(),
         }
     }
 
     /// Total requests the source will yield (including already-yielded ones
     /// for a fresh source; the serving loop reads this before consuming).
+    /// For a phased source the count is only knowable by sampling, so a
+    /// clone of the stream is walked — O(total) time, O(1) memory.
     pub fn len_total(&self) -> usize {
         match self {
             ArrivalSource::Replay(it) => it.as_slice().len(),
             ArrivalSource::Stream(s) => s.len_total(),
+            ArrivalSource::Phased(s) => s.clone().count(),
         }
     }
 }
@@ -152,6 +168,7 @@ impl Iterator for ArrivalSource {
         match self {
             ArrivalSource::Replay(it) => it.next(),
             ArrivalSource::Stream(s) => s.next(),
+            ArrivalSource::Phased(s) => s.next(),
         }
     }
 }

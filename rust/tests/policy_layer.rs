@@ -1,0 +1,155 @@
+//! Integration tests for the pluggable scheduling-policy API
+//! (`coordinator::policy`) and the streamed phased-workload port.
+//!
+//! Covers the contract the policy redesign must keep:
+//!
+//! 1. **Unknown names fail loudly** — constructing a serving system with an
+//!    unregistered policy name errors, listing the registered names.
+//! 2. **Determinism property** — same trace + same policy combination ⇒
+//!    bit-identical records across two runs, for every registered combo.
+//! 3. **Phased streaming** — `ArrivalSource::Phased` reproduces the
+//!    materialized `generate_phased` → replay path record for record.
+//!
+//! Default-policy equivalence to *pre-refactor* behavior is pinned by
+//! `tests/determinism_golden.rs` (fused/streamed equivalence layers +
+//! golden digests) — an in-process "defaults vs defaults" comparison would
+//! run the same config twice and prove nothing.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::policy::{BALANCE_POLICIES, BATCH_POLICIES, ROUTE_POLICIES};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::workload::phases::{generate_phased, PhasePlan};
+
+fn cfg(deployment: &str, rate: f64, n: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = deployment.to_string();
+    cfg.rate = rate;
+    cfg.workload.num_requests = n;
+    cfg
+}
+
+fn with_policies(mut c: Config, route: &str, balance: &str, batch: &str) -> Config {
+    c.scheduler.route_policy = route.to_string();
+    c.scheduler.balance_policy = balance.to_string();
+    c.scheduler.batch_policy = batch.to_string();
+    c
+}
+
+#[test]
+fn unknown_policy_names_error_with_registered_list() {
+    for (field, expect) in [
+        ("route", "modality_path"),
+        ("balance", "least_loaded"),
+        ("batch", "fcfs"),
+    ] {
+        let mut c = cfg("E-P-D", 2.0, 8);
+        match field {
+            "route" => c.scheduler.route_policy = "bogus".into(),
+            "balance" => c.scheduler.balance_policy = "bogus".into(),
+            _ => c.scheduler.batch_policy = "bogus".into(),
+        }
+        let err = ServingSim::streamed(c).err().expect("unknown policy must fail construction");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bogus"), "{msg}");
+        assert!(msg.contains(expect), "error must list registered names: {msg}");
+    }
+}
+
+#[test]
+fn every_policy_combo_is_deterministic_and_serves() {
+    // Small trace, two replicas so routing has a real choice.
+    for &route in ROUTE_POLICIES {
+        for &balance in BALANCE_POLICIES {
+            for &batch in BATCH_POLICIES {
+                let c = with_policies(cfg("E-P-Dx2", 4.0, 48), route, balance, batch);
+                let a = run_serving(&c).unwrap();
+                let b = run_serving(&c).unwrap();
+                assert_eq!(
+                    a.metrics.records, b.metrics.records,
+                    "{route}/{balance}/{batch} must be deterministic"
+                );
+                assert_eq!(a.events_processed, b.events_processed);
+                assert_eq!(
+                    a.metrics.completed(),
+                    48,
+                    "{route}/{balance}/{batch} left requests unfinished"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn non_default_policies_change_decisions_but_not_workload() {
+    // Round-robin ignores load, so under skewed traffic its records must
+    // diverge from least-loaded-first on a multi-replica deployment —
+    // while still serving the same request set.
+    let base = cfg("E-P-Dx2", 6.0, 96);
+    let ll = run_serving(&base.clone()).unwrap();
+    let rr =
+        run_serving(&with_policies(base, "modality_path", "round_robin", "fcfs")).unwrap();
+    assert_eq!(ll.metrics.completed(), rr.metrics.completed());
+    assert_eq!(
+        ll.metrics.records.iter().map(|r| r.id).collect::<Vec<_>>(),
+        rr.metrics.records.iter().map(|r| r.id).collect::<Vec<_>>(),
+        "same request set either way"
+    );
+    assert_ne!(
+        ll.metrics.records, rr.metrics.records,
+        "a load-oblivious balancer must schedule differently under load"
+    );
+}
+
+#[test]
+fn fused_decode_equivalence_holds_under_non_default_policies() {
+    // The macro-stepping invariant is policy-independent: admission and
+    // batching decisions happen at step boundaries either way.
+    let mut c =
+        with_policies(cfg("E-P-Dx2", 3.0, 48), "slo_aware", "weighted_least_loaded", "sjf_prefill");
+    c.workload.output_tokens = 128;
+    let fused = run_serving(&c).unwrap();
+    c.scheduler.fuse_decode_steps = false;
+    let unfused = run_serving(&c).unwrap();
+    assert_eq!(fused.metrics.records, unfused.metrics.records);
+    assert!(fused.fused_decode_steps > 0);
+}
+
+#[test]
+fn phased_stream_source_matches_materialized_replay() {
+    // The streamed phased workload must reproduce the materialize-then-
+    // replay path record for record, end to end through the serving loop.
+    let mut c = Config::default();
+    c.deployment = "E-P-D-D".to_string();
+    let plan = PhasePlan::text_image_alternating(30.0, 5.0, 8.0, 2);
+    let arrivals = generate_phased(&c.workload, &c.model.vit, &plan, c.seed);
+    let n = arrivals.len();
+    assert!(n > 0);
+    let replayed = ServingSim::new(c.clone(), arrivals).unwrap().run();
+    let streamed = ServingSim::phased(c, &plan).unwrap().run();
+    assert_eq!(replayed.metrics.records, streamed.metrics.records);
+    assert_eq!(replayed.events_processed, streamed.events_processed);
+    assert_eq!(streamed.metrics.completed(), n);
+}
+
+#[test]
+fn phased_stream_works_under_elastic_reprovisioning() {
+    // The O(in-flight) phased source composes with runtime re-provisioning
+    // (the ROADMAP's "elastic experiments on million-request non-stationary
+    // traces" path — here at test scale).
+    let mut c = Config::default();
+    c.deployment = "E-P-D-D".to_string();
+    c.scheduler.max_encode_batch = 2;
+    c.reconfig.enabled = true;
+    c.reconfig.min_backlog_tokens = 6144;
+    let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+    let arrivals = generate_phased(&c.workload, &c.model.vit, &plan, c.seed);
+    let n = arrivals.len();
+    let replayed = ServingSim::new(c.clone(), arrivals).unwrap().run();
+    let streamed = ServingSim::phased(c, &plan).unwrap().run();
+    assert_eq!(replayed.metrics.records, streamed.metrics.records);
+    assert_eq!(streamed.metrics.completed(), n, "migration must not lose requests");
+    assert!(
+        !streamed.reconfig_switches.is_empty(),
+        "the image burst must still trigger re-provisioning under the streamed source"
+    );
+}
