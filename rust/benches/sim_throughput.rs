@@ -9,12 +9,23 @@
 //! `BENCH_sim_throughput.json` at the repository root: the perf trajectory
 //! file CI and future optimization PRs track.
 //!
+//! The **multi-replica sweep** drives an `E-P-DxN` fleet (rate scaled with
+//! N so every replica sees Table 5-level load) through both execution
+//! engines — the single-loop reference and the sharded per-replica engine
+//! — asserting their per-request record digests identical and recording
+//! each engine's events/s per replica count (`multi_replica` entries in
+//! the JSON; schema in docs/PERFORMANCE.md).
+//!
 //! Flags: `--requests N` (default 1 000 000), `--ratio-requests N`
-//! (default 10 000), `--deployment D` (default `E-P-D`).
+//! (default 10 000), `--deployment D` (default `E-P-D`),
+//! `--sweep-requests N` (default 10 000 000), `--sweep-replicas LIST`
+//! (default `1,2,4`, comma-separated; `0` or an empty list skips the
+//! sweep).
 
 use epd_serve::bench::{print_table, repo_root, save_json};
 use epd_serve::config::Config;
-use epd_serve::coordinator::simserve::{run_serving, SimOutcome};
+use epd_serve::coordinator::metrics::records_digest;
+use epd_serve::coordinator::simserve::{run_serving, ServingSim, SimOutcome};
 use epd_serve::util::cli::Cli;
 use epd_serve::util::json::Json;
 use std::time::Instant;
@@ -25,6 +36,31 @@ fn timed(cfg: &Config) -> anyhow::Result<(SimOutcome, f64)> {
     Ok((out, t0.elapsed().as_secs_f64()))
 }
 
+/// One engine pass over a sweep config, reduced to what the sweep keeps —
+/// records are digested and dropped so two 10M-request outcomes never
+/// coexist in memory.
+struct SweepRun {
+    digest: u64,
+    events: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+    completed: usize,
+}
+
+fn sweep_run(cfg: &Config, sharded: bool) -> anyhow::Result<SweepRun> {
+    let sim = ServingSim::streamed(cfg.clone())?;
+    let t0 = Instant::now();
+    let out = if sharded { sim.run_sharded() } else { sim.run() };
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(SweepRun {
+        digest: records_digest(&out.metrics.records),
+        events: out.events_processed,
+        wall_s,
+        events_per_sec: out.events_processed as f64 / wall_s.max(1e-9),
+        completed: out.metrics.completed(),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Cli::new(
         "sim_throughput",
@@ -33,11 +69,25 @@ fn main() -> anyhow::Result<()> {
     .opt_default("requests", "1000000", "requests in the main throughput run")
     .opt_default("ratio-requests", "10000", "requests in the fused-vs-baseline comparison")
     .opt_default("deployment", "E-P-D", "deployment notation for the main run")
+    .opt_default("sweep-requests", "10000000", "requests per multi-replica sweep point")
+    .opt_default(
+        "sweep-replicas",
+        "1,2,4",
+        "comma-separated replica counts for the sharded-vs-single sweep (0/empty skips)",
+    )
     .flag("bench", "ignored (cargo bench passes this to bench binaries)")
     .parse_env();
     let requests = args.get_usize("requests").unwrap();
     let ratio_requests = args.get_usize("ratio-requests").unwrap();
     let deployment = args.get("deployment").unwrap().to_string();
+    let sweep_requests = args.get_usize("sweep-requests").unwrap();
+    let sweep_replicas: Vec<usize> = args
+        .get("sweep-replicas")
+        .unwrap()
+        .split(',')
+        .filter_map(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .collect();
 
     // ------------------------------------------------------------------
     // 1. Main run: Table 5 champion shape (E-P-D, ShareGPT-4o, 10 req/s
@@ -86,6 +136,7 @@ fn main() -> anyhow::Result<()> {
             vec!["events/s".into(), format!("{:.2} M", main_eps / 1e6)],
             vec!["events/request".into(), format!("{main_epr:.1}")],
             vec!["fused decode steps".into(), format!("{}", main_out.fused_decode_steps)],
+            vec!["fused batch kicks".into(), format!("{}", main_out.fused_batch_kicks)],
             vec!["requests/s (wall)".into(), format!("{:.0}", requests as f64 / main_wall.max(1e-9))],
         ],
     );
@@ -104,7 +155,59 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ------------------------------------------------------------------
-    // 3. Emit the perf-trajectory file at the repo root + the standard
+    // 3. Multi-replica sweep: E-P-DxN through both engines, rate scaled
+    //    with N, digests asserted identical. Per-replica-count
+    //    events_per_sec lands in the JSON `multi_replica` array.
+    // ------------------------------------------------------------------
+    let mut sweep_rows: Vec<Vec<String>> = Vec::new();
+    let mut sweep_entries: Vec<Json> = Vec::new();
+    for &n in &sweep_replicas {
+        let mut c = Config::default();
+        c.deployment = format!("E-P-Dx{n}");
+        c.rate = 10.0 * n as f64;
+        c.workload.num_requests = sweep_requests;
+        let single = sweep_run(&c, false)?;
+        let sharded = sweep_run(&c, true)?;
+        assert_eq!(
+            single.digest, sharded.digest,
+            "E-P-Dx{n}: sharded records must be bit-identical to the single loop"
+        );
+        assert_eq!(single.completed, sweep_requests, "E-P-Dx{n} left requests unfinished");
+        let speedup = single.wall_s / sharded.wall_s.max(1e-9);
+        sweep_rows.push(vec![
+            format!("{n}"),
+            format!("{:.2}", single.wall_s),
+            format!("{:.2} M", single.events_per_sec / 1e6),
+            format!("{:.2}", sharded.wall_s),
+            format!("{:.2} M", sharded.events_per_sec / 1e6),
+            format!("{speedup:.2}×"),
+        ]);
+        let mut e = Json::obj();
+        e.set("replicas", n)
+            .set("deployment", c.deployment.as_str())
+            .set("requests", sweep_requests)
+            .set("rate_req_s", c.rate)
+            .set("records_digest", format!("{:016x}", single.digest))
+            .set("records_match", true)
+            .set("single_wall_s", single.wall_s)
+            .set("single_events", single.events)
+            .set("single_events_per_sec", single.events_per_sec)
+            .set("sharded_wall_s", sharded.wall_s)
+            .set("sharded_events", sharded.events)
+            .set("sharded_events_per_sec", sharded.events_per_sec)
+            .set("sharded_speedup", speedup);
+        sweep_entries.push(e);
+    }
+    if !sweep_rows.is_empty() {
+        print_table(
+            &format!("multi-replica sweep — E-P-DxN, {sweep_requests} requests, 10·N req/s"),
+            &["replicas", "single wall s", "single ev/s", "sharded wall s", "sharded ev/s", "speedup"],
+            &sweep_rows,
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // 4. Emit the perf-trajectory file at the repo root + the standard
     //    bench_results/ dump.
     // ------------------------------------------------------------------
     let mut main_j = Json::obj();
@@ -117,6 +220,7 @@ fn main() -> anyhow::Result<()> {
         .set("events_per_sec", main_eps)
         .set("events_per_request", main_epr)
         .set("fused_decode_steps", main_out.fused_decode_steps)
+        .set("fused_batch_kicks", main_out.fused_batch_kicks)
         .set("requests_per_wall_sec", requests as f64 / main_wall.max(1e-9))
         .set("completed", main_out.metrics.completed());
     let mut ratio_j = Json::obj();
@@ -132,7 +236,8 @@ fn main() -> anyhow::Result<()> {
     let mut dump = Json::obj();
     dump.set("bench", "sim_throughput")
         .set("main", main_j)
-        .set("decode_heavy_ratio", ratio_j);
+        .set("decode_heavy_ratio", ratio_j)
+        .set("multi_replica", sweep_entries);
 
     let root = repo_root().join("BENCH_sim_throughput.json");
     std::fs::write(&root, dump.to_string_pretty())?;

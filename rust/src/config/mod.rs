@@ -370,6 +370,15 @@ pub struct SchedulerSpec {
     /// the switch exists so benches can measure the unfused baseline and
     /// regressions can bisect it.
     pub fuse_decode_steps: bool,
+    /// Fuse the per-E/P-batch `NpuCheck`+`Kick` event pair into one event:
+    /// when a batch completes and no other event is pending at the same
+    /// nanosecond, the follow-up kick runs inline in the completion handler
+    /// instead of through a second heap event. Results are bit-identical
+    /// either way (a same-nanosecond pending event falls back to the event
+    /// path, so nothing can observe the difference —
+    /// `tests/determinism_golden.rs` pins it); the switch exists for
+    /// baseline measurement and bisection, like `fuse_decode_steps`.
+    pub fuse_batch_events: bool,
     /// Arrival routing policy (replica + modality-path choice), by registry
     /// name — see [`crate::coordinator::policy`]. Default `"modality_path"`
     /// is the paper's §3.4 multi-route scheduling, bit-identical to the
@@ -425,6 +434,7 @@ impl Default for SchedulerSpec {
             pd_mode: PdMode::Grouped,
             kv_group_layers: 0,
             fuse_decode_steps: true,
+            fuse_batch_events: true,
             route_policy: "modality_path".to_string(),
             balance_policy: "least_loaded".to_string(),
             batch_policy: "fcfs".to_string(),
@@ -469,6 +479,14 @@ pub struct ReconfigSpec {
     /// Minimum time between two switches anywhere in the cluster, seconds
     /// (prevents thrashing between complementary imbalances).
     pub min_dwell_s: f64,
+    /// Elastic-trigger policy, by registry name — see
+    /// [`crate::coordinator::policy`] (`RECONFIG_POLICIES`). Default
+    /// `"pressure_hysteresis"` is the original hardwired stage-pressure
+    /// rule (hysteresis streak + dwell), decision-for-decision identical
+    /// given the same per-tick snapshots; `"greedy_pressure"` drops the
+    /// hysteresis streak and fires on the first tick the pressure ratio
+    /// clears (dwell still applies).
+    pub policy: String,
 }
 
 impl Default for ReconfigSpec {
@@ -481,7 +499,38 @@ impl Default for ReconfigSpec {
             min_backlog_tokens: 4096,
             drain_s: 1.0,
             min_dwell_s: 10.0,
+            policy: "pressure_hysteresis".to_string(),
         }
+    }
+}
+
+/// Discrete-event execution engine selection.
+///
+/// The serving simulation has two execution paths that produce
+/// **bit-identical per-request records** (pinned by
+/// `tests/determinism_golden.rs`):
+///
+/// * the **single-loop** reference — one global event queue, one core;
+/// * the **sharded** engine ([`crate::coordinator::sharded`]) — one event
+///   queue and one worker thread per replica, coupled only at arrival and
+///   reconfiguration epochs through a deterministic time-ordered merge.
+///
+/// Sharding pays a synchronization barrier per coordination event, so it
+/// wins when replicas are many and per-replica work between arrivals is
+/// substantial (multi-replica sweeps); single-replica runs should keep the
+/// single loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulatorSpec {
+    /// Run the sharded multi-replica engine instead of the single loop.
+    pub sharded: bool,
+    /// Worker threads for the sharded engine; 0 = one per replica, capped
+    /// at the machine's available parallelism.
+    pub shard_threads: usize,
+}
+
+impl Default for SimulatorSpec {
+    fn default() -> Self {
+        Self { sharded: false, shard_threads: 0 }
     }
 }
 
@@ -498,6 +547,8 @@ pub struct Config {
     pub scheduler: SchedulerSpec,
     /// Elastic in-flight re-provisioning policy.
     pub reconfig: ReconfigSpec,
+    /// Discrete-event engine selection (single loop vs sharded).
+    pub simulator: SimulatorSpec,
     /// SLO constraints used for attainment accounting.
     pub slo: SloSpec,
     /// Deployment notation string, e.g. `"(E-P)-D"`.
@@ -517,6 +568,7 @@ impl Default for Config {
             workload: WorkloadSpec::sharegpt4o(),
             scheduler: SchedulerSpec::default(),
             reconfig: ReconfigSpec::default(),
+            simulator: SimulatorSpec::default(),
             slo: SloSpec::decode_disagg(),
             deployment: "E-P-D".to_string(),
             rate: 2.0,
@@ -618,6 +670,9 @@ impl Config {
             if let Some(v) = sc.get("fuse_decode_steps").and_then(Json::as_bool) {
                 s.fuse_decode_steps = v;
             }
+            if let Some(v) = sc.get("fuse_batch_events").and_then(Json::as_bool) {
+                s.fuse_batch_events = v;
+            }
             if let Some(v) = sc.get("pd_mode").and_then(Json::as_str) {
                 s.pd_mode = match v {
                     "synchronous" | "sync" => PdMode::Synchronous,
@@ -627,8 +682,8 @@ impl Config {
                 };
             }
             // Policy names are resolved (and unknown names rejected with the
-            // registered list) when the serving system is constructed —
-            // `coordinator::policy::PolicySet::from_scheduler` — so the
+            // registered list) when the serving system is constructed — the
+            // `coordinator::policy::make_*` registry functions — so the
             // config layer stays decoupled from the registry.
             if let Some(v) = sc.get("route_policy").and_then(Json::as_str) {
                 s.route_policy = v.to_string();
@@ -704,6 +759,23 @@ impl Config {
                     bail!("reconfig.min_dwell_s must be >= 0, got {v}");
                 }
                 r.min_dwell_s = v;
+            }
+            // Like the scheduler policy names, reconfig.policy is resolved
+            // (and unknown names rejected with the registered list) at
+            // serving-system construction.
+            if let Some(v) = rc.get("policy").and_then(Json::as_str) {
+                r.policy = v.to_string();
+            }
+        }
+        if let Some(sim) = doc.get("simulator") {
+            if let Some(v) = sim.get("sharded").and_then(Json::as_bool) {
+                cfg.simulator.sharded = v;
+            }
+            if let Some(v) = sim.get("shard_threads").and_then(Json::as_f64) {
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("simulator.shard_threads must be a non-negative integer, got {v}");
+                }
+                cfg.simulator.shard_threads = v as usize;
             }
         }
         Ok(cfg)
@@ -870,6 +942,43 @@ min_dwell_s = 5
         assert_eq!(r.min_backlog_tokens, 1024);
         assert_eq!(r.drain_s, 0.25);
         assert_eq!(r.min_dwell_s, 5.0);
+    }
+
+    #[test]
+    fn simulator_and_fusion_knobs_decode() {
+        let doc = crate::util::toml::parse(
+            r#"
+[scheduler]
+fuse_batch_events = false
+
+[reconfig]
+policy = "greedy_pressure"
+
+[simulator]
+sharded = true
+shard_threads = 3
+"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&doc).unwrap();
+        assert!(!cfg.scheduler.fuse_batch_events);
+        assert_eq!(cfg.reconfig.policy, "greedy_pressure");
+        assert!(cfg.simulator.sharded);
+        assert_eq!(cfg.simulator.shard_threads, 3);
+        // Defaults: both fusions on, single-loop engine, hysteresis policy.
+        let d = Config::default();
+        assert!(d.scheduler.fuse_batch_events);
+        assert!(!d.simulator.sharded);
+        assert_eq!(d.simulator.shard_threads, 0);
+        assert_eq!(d.reconfig.policy, "pressure_hysteresis");
+    }
+
+    #[test]
+    fn simulator_rejects_bad_thread_counts() {
+        for bad in ["[simulator]\nshard_threads = -1\n", "[simulator]\nshard_threads = 2.5\n"] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]

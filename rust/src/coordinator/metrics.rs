@@ -23,6 +23,43 @@ pub struct RequestRecord {
     pub feature_reused: bool,
 }
 
+/// Canonical, bit-exact digest of a record set: every f64 by its raw bit
+/// pattern, every field in a fixed order, FNV-1a over the serialization.
+/// This is the currency of the determinism layers — golden snapshot files
+/// (`tests/golden/*.digest`), the sharded-vs-single-loop comparison in
+/// `benches/sim_throughput.rs` (comparing u64 digests instead of holding
+/// two 10M-record vectors), and the CI smoke steps all speak it.
+pub fn records_digest(records: &[RequestRecord]) -> u64 {
+    use std::fmt::Write as _;
+    // Streamed through one reusable per-record buffer: at the bench sweep's
+    // 10M-record scale the full serialization would be ~1 GB, and FNV-1a is
+    // byte-sequential so chunked updates hash identically.
+    let mut h = crate::util::hash::Fnv1a::new();
+    let mut buf = String::with_capacity(128);
+    for r in records {
+        buf.clear();
+        let _ = write!(buf, "{}|{}|{:016x}|", r.id, r.multimodal as u8, r.arrival.to_bits());
+        for v in [r.ttft, r.tpot] {
+            match v {
+                Some(x) => {
+                    let _ = write!(buf, "{:016x}|", x.to_bits());
+                }
+                None => buf.push_str("-|"),
+            }
+        }
+        let _ = write!(buf, "{}|", r.output_tokens);
+        match r.finish {
+            Some(x) => {
+                let _ = write!(buf, "{:016x}|", x.to_bits());
+            }
+            None => buf.push_str("-|"),
+        }
+        let _ = write!(buf, "{}|{};", r.recomputed as u8, r.feature_reused as u8);
+        h.update(buf.as_bytes());
+    }
+    h.finish()
+}
+
 impl RequestRecord {
     /// Did this request meet both SLO constraints?
     pub fn meets_slo(&self, slo: &SloSpec) -> bool {

@@ -23,11 +23,18 @@
 //!   hysteresis (the §3.5 / §4.7 extension).
 //! * [`reconfig`] — runtime elastic re-provisioning: the in-flight
 //!   controller that retasks instances between stage roles while requests
-//!   are being served (drain + migrate + router update).
-//! * [`simserve`] — the full serving system wired onto the discrete-event
-//!   simulator: instances on processor-shared NPUs, MM-Store E-P handoff,
-//!   grouped P-D KV transmission on shared FIFO links, continuous-batching
-//!   decode. This is what every deployment-comparison bench runs.
+//!   are being served (drain + migrate + router update), with the trigger
+//!   rule pluggable through the policy registry.
+//! * [`shard`] — the per-replica simulation shard: one replica's
+//!   instances, NPUs, KV link, MM-Store partition, live requests, and
+//!   stage-scoped policy state, closed under every shard-local event.
+//! * [`simserve`] — the coordination boundary wiring shards into the full
+//!   serving system on the single-loop reference engine: arrival routing
+//!   over the assembled status table, elastic epochs, metrics gathering.
+//!   This is what every deployment-comparison bench runs.
+//! * [`sharded`] — the parallel multi-replica engine: per-shard event
+//!   queues on worker threads with a conservative-time barrier at
+//!   coordination epochs, bit-identical to the single loop.
 
 pub mod adaptive;
 pub mod balancer;
@@ -38,6 +45,8 @@ pub mod policy;
 pub mod reconfig;
 pub mod request;
 pub mod router;
+pub mod shard;
+pub mod sharded;
 pub mod simserve;
 
 pub use deployment::{Deployment, InstanceSpec, StageSet};

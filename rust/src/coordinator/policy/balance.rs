@@ -1,7 +1,8 @@
 //! [`BalancePolicy`] implementations — instance selection among candidates.
 
 use crate::coordinator::balancer::InstanceStatus;
-use crate::coordinator::policy::{BalancePolicy, PolicyCtx};
+use crate::coordinator::policy::{BalancePolicy, PickScope, PolicyCtx};
+use std::collections::HashMap;
 
 /// Default: the paper's least-loaded-first rule (§3.4) over the hardwired
 /// [`InstanceStatus::load_score`] weights. Ties break on the lower instance
@@ -19,13 +20,22 @@ impl BalancePolicy for LeastLoaded {
     }
 }
 
-/// Load-oblivious round-robin: cycles a single cursor over whatever
-/// candidate set each decision presents. The classic baseline every
-/// load-balancing comparison needs — it shows exactly what the status
-/// table buys (least-loaded-first's win over it grows with load skew).
+/// Load-oblivious round-robin: cycles one cursor **per decision site**
+/// ([`PickScope`]) over whatever candidate set that site presents. The
+/// classic baseline every load-balancing comparison needs — it shows
+/// exactly what the status table buys (least-loaded-first's win over it
+/// grows with load skew).
+///
+/// The per-scope keying is what makes this stateful policy
+/// shard-decomposable (the [`BalancePolicy`] contract): entry-scoped
+/// cursors advance only at the router, `Stage { replica: r, .. }` cursors
+/// only inside replica `r`'s handoffs, so the serving system's partitioned
+/// policy instances behave exactly like one shared instance — and the
+/// sharded engine stays bit-identical to the single loop (pinned by the
+/// `round_robin` golden layer in `tests/determinism_golden.rs`).
 #[derive(Default)]
 pub struct RoundRobin {
-    cursor: usize,
+    cursors: HashMap<PickScope, usize>,
 }
 
 impl BalancePolicy for RoundRobin {
@@ -33,12 +43,13 @@ impl BalancePolicy for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&mut self, _ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize> {
+    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize> {
         if candidates.is_empty() {
             return None;
         }
-        let i = candidates[self.cursor % candidates.len()];
-        self.cursor = self.cursor.wrapping_add(1);
+        let cursor = self.cursors.entry(ctx.scope).or_insert(0);
+        let i = candidates[*cursor % candidates.len()];
+        *cursor = cursor.wrapping_add(1);
         Some(i)
     }
 }
@@ -111,6 +122,31 @@ mod tests {
         let ctx = owner.ctx(&t);
         let mut rr = RoundRobin::default();
         assert_eq!(rr.pick(&ctx, &[0, 1]), Some(0), "round robin is load-oblivious");
+    }
+
+    #[test]
+    fn round_robin_cursors_are_independent_per_scope() {
+        use crate::coordinator::policy::StageNeed;
+        let t = StatusTable::new(4);
+        let owner = owner();
+        let entry = owner.ctx_scoped(&t, PickScope::Entry);
+        let s0 = owner.ctx_scoped(&t, PickScope::Stage { replica: 0, need: StageNeed::Prefill });
+        let s1 = owner.ctx_scoped(&t, PickScope::Stage { replica: 1, need: StageNeed::Prefill });
+        let mut rr = RoundRobin::default();
+        // Interleaving scopes must not advance each other's cursors: the
+        // partition of these key spaces across router/shards is exactly
+        // what the sharded engine relies on.
+        assert_eq!(rr.pick(&entry, &[0, 1]), Some(0));
+        assert_eq!(rr.pick(&s0, &[2, 3]), Some(2));
+        assert_eq!(rr.pick(&s1, &[2, 3]), Some(2));
+        assert_eq!(rr.pick(&entry, &[0, 1]), Some(1));
+        assert_eq!(rr.pick(&s0, &[2, 3]), Some(3));
+        assert_eq!(rr.pick(&entry, &[0, 1]), Some(0));
+        // A second instance that only ever saw the Stage{0} scope replays
+        // that scope's cursor exactly (partitioned ≡ shared state).
+        let mut solo = RoundRobin::default();
+        assert_eq!(solo.pick(&s0, &[2, 3]), Some(2));
+        assert_eq!(solo.pick(&s0, &[2, 3]), Some(3));
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! [`ReconfigPolicy`] implementations — elastic re-provisioning triggers.
+//!
+//! The elastic controller's *mechanism* (queue draining, migration over the
+//! standing E-P / P-D transports, the drain/reload window) lives in the
+//! serving loop and [`crate::coordinator::reconfig::Reconfigurer`]; this
+//! module is the *trigger policy*: when does a per-tick cluster snapshot
+//! justify retasking an instance? Folding the decision into the policy
+//! registry (config knob `reconfig.policy`) lets elastic triggers be swept
+//! exactly like routing/balancing/batching policies.
+//!
+//! Both shipped policies score stages with the shared
+//! [`crate::coordinator::reconfig::pressure_plan`] rule (per-instance
+//! backlog of the most-pressured stage vs. the least-pressured donor
+//! stage); they differ in how much persistence they demand before firing.
+
+use crate::config::ReconfigSpec;
+use crate::coordinator::deployment::StageSet;
+use crate::coordinator::reconfig::{pressure_plan, InstLoad, SwitchPlan};
+
+/// Per-tick elastic trigger decision. The serving loop feeds every tick's
+/// cluster snapshot in; a returned plan is executed by the coordination
+/// boundary, which then reports back through [`ReconfigPolicy::committed`].
+///
+/// Implementations may keep state (streaks, dwell clocks); the controller
+/// tick order is deterministic in both engines (ticks are control-class
+/// events handled at the coordination boundary), so stateful policies stay
+/// deterministic — and, unlike [`super::BalancePolicy`], a reconfig policy
+/// always runs at the coordinator, so no scope keying is needed.
+pub trait ReconfigPolicy: Send {
+    /// Registry name (what the `reconfig.policy` config knob selects).
+    fn name(&self) -> &'static str;
+    /// Evaluate one controller tick over the cluster snapshot.
+    fn tick(&mut self, now: f64, spec: &ReconfigSpec, loads: &[InstLoad]) -> Option<SwitchPlan>;
+    /// The serving loop executed a switch at `now`.
+    fn committed(&mut self, now: f64);
+}
+
+/// Default: the original hardwired rule, decision-for-decision identical
+/// given the same per-tick snapshots — the imbalance must
+/// persist for [`ReconfigSpec::hysteresis_ticks`] consecutive ticks with
+/// the *same* (replica, target-stage) identity, and at least
+/// [`ReconfigSpec::min_dwell_s`] must have passed since the last committed
+/// switch anywhere in the cluster.
+#[derive(Debug, Default)]
+pub struct PressureHysteresis {
+    /// Consecutive ticks the *same* imbalance (keyed below) has persisted.
+    streak: usize,
+    /// Identity of the imbalance the streak counts: (replica, target role).
+    /// A different replica or target stage showing up restarts the streak —
+    /// unrelated transients must not accumulate into one.
+    pending: Option<(usize, StageSet)>,
+    /// Time of the last committed switch (`None` before the first).
+    last_switch: Option<f64>,
+}
+
+impl ReconfigPolicy for PressureHysteresis {
+    fn name(&self) -> &'static str {
+        "pressure_hysteresis"
+    }
+
+    fn tick(&mut self, now: f64, spec: &ReconfigSpec, loads: &[InstLoad]) -> Option<SwitchPlan> {
+        match pressure_plan(spec, loads) {
+            None => {
+                self.streak = 0;
+                self.pending = None;
+                None
+            }
+            Some(plan) => {
+                // The streak only counts the SAME imbalance persisting: a
+                // different replica or target stage is a fresh observation.
+                let key = (plan.replica, plan.to);
+                if self.pending == Some(key) {
+                    self.streak += 1;
+                } else {
+                    self.pending = Some(key);
+                    self.streak = 1;
+                }
+                if self.streak < spec.hysteresis_ticks {
+                    return None;
+                }
+                // Dwell: keep the streak (the imbalance is real) but hold
+                // fire until the cluster has settled from the last switch.
+                if let Some(last) = self.last_switch {
+                    if now - last < spec.min_dwell_s {
+                        return None;
+                    }
+                }
+                Some(plan)
+            }
+        }
+    }
+
+    fn committed(&mut self, now: f64) {
+        self.streak = 0;
+        self.pending = None;
+        self.last_switch = Some(now);
+    }
+}
+
+/// Hysteresis-free variant: fires on the *first* tick the pressure ratio
+/// and backlog floor clear. The dwell window still applies (back-to-back
+/// switches would thrash the drain/reload mechanism no matter the
+/// trigger). Reacts one `tick_s` faster than the default per switch, at
+/// the cost of chasing transients the hysteresis streak would have
+/// filtered — the trade a policy sweep can now quantify.
+#[derive(Debug, Default)]
+pub struct GreedyPressure {
+    last_switch: Option<f64>,
+}
+
+impl ReconfigPolicy for GreedyPressure {
+    fn name(&self) -> &'static str {
+        "greedy_pressure"
+    }
+
+    fn tick(&mut self, now: f64, spec: &ReconfigSpec, loads: &[InstLoad]) -> Option<SwitchPlan> {
+        let plan = pressure_plan(spec, loads)?;
+        if let Some(last) = self.last_switch {
+            if now - last < spec.min_dwell_s {
+                return None;
+            }
+        }
+        Some(plan)
+    }
+
+    fn committed(&mut self, now: f64) {
+        self.last_switch = Some(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(replica: usize, stages: StageSet) -> InstLoad {
+        InstLoad {
+            replica,
+            stages,
+            busy: false,
+            decode_active: 0,
+            encode_backlog: 0,
+            prefill_backlog: 0,
+            decode_backlog: 0,
+            switching: false,
+        }
+    }
+
+    fn spec() -> ReconfigSpec {
+        ReconfigSpec {
+            enabled: true,
+            tick_s: 1.0,
+            hysteresis_ticks: 2,
+            imbalance_ratio: 3.0,
+            min_backlog_tokens: 1000,
+            drain_s: 0.5,
+            min_dwell_s: 5.0,
+            policy: "pressure_hysteresis".to_string(),
+        }
+    }
+
+    fn pressured() -> Vec<InstLoad> {
+        let mut v = vec![
+            idle(0, StageSet::E),
+            idle(0, StageSet::P),
+            idle(0, StageSet::D),
+            idle(0, StageSet::D),
+        ];
+        v[0].encode_backlog = 10_000;
+        v
+    }
+
+    #[test]
+    fn greedy_fires_on_the_first_imbalanced_tick() {
+        let mut g = GreedyPressure::default();
+        let s = spec();
+        let plan = g.tick(0.0, &s, &pressured()).expect("no hysteresis delay");
+        assert_eq!(plan.to, StageSet::E);
+        g.committed(0.0);
+        // Dwell still gates repeat fire.
+        assert_eq!(g.tick(1.0, &s, &pressured()), None);
+        assert!(g.tick(5.0, &s, &pressured()).is_some());
+    }
+
+    #[test]
+    fn greedy_respects_the_backlog_floor() {
+        let mut g = GreedyPressure::default();
+        let mut light = pressured();
+        light[0].encode_backlog = 500;
+        assert_eq!(g.tick(0.0, &spec(), &light), None);
+    }
+
+    #[test]
+    fn hysteresis_policy_needs_a_streak_where_greedy_does_not() {
+        let s = spec();
+        let mut h = PressureHysteresis::default();
+        let mut g = GreedyPressure::default();
+        assert_eq!(h.tick(0.0, &s, &pressured()), None, "streak arming");
+        assert!(g.tick(0.0, &s, &pressured()).is_some());
+        assert!(h.tick(1.0, &s, &pressured()).is_some(), "second consecutive tick");
+    }
+}

@@ -13,6 +13,7 @@
 //! | [`RoutePolicy`] | replica + modality-path for each arrival | `route_policy` | `modality_path` |
 //! | [`BalancePolicy`] | instance selection among candidates | `balance_policy` | `least_loaded` |
 //! | [`BatchPolicy`] | E/P batch formation + decode admission quota | `batch_policy` | `fcfs` |
+//! | [`ReconfigPolicy`] | elastic re-provisioning trigger per tick | `reconfig.policy` | `pressure_hysteresis` |
 //!
 //! All three see the world through [`PolicyCtx`]: the global status table,
 //! MM-Store residency, the (possibly elastically reshaped) deployment with
@@ -23,9 +24,11 @@
 //! ## Registry
 //!
 //! Policies are constructed by name via [`make_route_policy`],
-//! [`make_balance_policy`], [`make_batch_policy`] (or all at once with
-//! [`PolicySet::from_scheduler`]). Unknown names fail with an error listing
-//! every registered name. To add a policy:
+//! [`make_balance_policy`], [`make_batch_policy`] and
+//! [`make_reconfig_policy`]. Unknown names fail with an error listing
+//! every registered name. The serving system instantiates route/balance at
+//! the router (entry scope) and balance/batch once per replica shard
+//! (stage scope) — see [`PickScope`]. To add a policy:
 //!
 //! 1. implement the trait (in `route.rs` / `balance.rs` / `batch.rs`),
 //! 2. add its name to the matching `*_POLICIES` slice,
@@ -36,10 +39,12 @@
 
 pub mod balance;
 pub mod batch;
+pub mod elastic;
 pub mod route;
 
 pub use balance::{LeastLoaded, RoundRobin, WeightedLeastLoaded};
 pub use batch::{FcfsBatch, SjfPrefillBatch};
+pub use elastic::{GreedyPressure, PressureHysteresis, ReconfigPolicy};
 pub use route::{CacheAffinity, ModalityPath, SloAware};
 
 use crate::config::{SchedulerSpec, SloSpec};
@@ -56,17 +61,47 @@ use std::collections::VecDeque;
 /// enum hits the pre-materialized per-replica candidate cache
 /// ([`StageCands`]) instead of filtering the deployment's instance list per
 /// decision.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StageNeed {
     Encode,
     Prefill,
     Decode,
 }
 
+/// The decision site a [`BalancePolicy::pick`] is serving — the key a
+/// *stateful* balance policy must scope its internal state by.
+///
+/// The serving system runs one balance-policy instance at the router
+/// (entry-scoped picks: arrival routing across all replicas) and one inside
+/// each replica shard (stage-scoped picks: E→P / P→D handoffs, elastic
+/// migrations). A policy whose state is keyed per scope behaves identically
+/// whether those instances share one state map (the single-loop engine) or
+/// own disjoint partitions of it (the sharded engine): `Entry` state lives
+/// only at the router, `Stage { replica: r, .. }` state only in shard `r` —
+/// the key spaces never overlap. [`RoundRobin`] is the shipped example;
+/// any new stateful policy must follow the same rule or the
+/// sharded-vs-single-loop golden layers will catch the divergence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PickScope {
+    /// Arrival routing at the coordinator, over entry candidates of all
+    /// replicas.
+    Entry,
+    /// An intra-replica stage handoff.
+    Stage {
+        /// The replica whose candidate set is being picked from.
+        replica: usize,
+        /// The stage capability being dispatched to.
+        need: StageNeed,
+    },
+}
+
 /// Per-replica candidate instance sets, rebuilt only when the routed
 /// topology changes (boot + elastic switches). This is the hot-path cache
 /// the million-request overhaul introduced; policies read it through
-/// [`PolicyCtx`] instead of walking the deployment.
+/// [`PolicyCtx`] instead of walking the deployment. The router and every
+/// replica shard own a copy (`Clone`), each authoritative for the rows it
+/// reads — the coordination boundary rebuilds them together on a switch.
+#[derive(Clone)]
 pub struct StageCands {
     enc: Vec<Vec<usize>>,
     pre: Vec<Vec<usize>>,
@@ -115,12 +150,13 @@ pub struct PolicyCtx<'a> {
     /// Cached per-replica encode/prefill/decode candidate sets for `dep`.
     pub cands: &'a StageCands,
     /// MM Store, for residency probes beyond the routed request's own
-    /// `feature_resident` flag (`None` outside a full serving context).
-    /// The simulator models one *pooled* store, so "is this key resident
-    /// anywhere" is already answered by that flag and no shipped policy
-    /// probes further — the handle exists so a per-replica store tier can
-    /// be policy-visible without an API break ([`CacheAffinity`] documents
-    /// why it hash-pins instead of probing).
+    /// `feature_resident` flag. Since the sharded-engine refactor the store
+    /// is **partitioned per replica**: stage-scoped picks see their own
+    /// replica's partition here; entry-scoped (router) contexts carry
+    /// `None` — cross-partition residency is probed by the coordinator and
+    /// passed to [`RoutePolicy::route`] as the explicit `feature_resident`
+    /// argument ([`CacheAffinity`] documents why it hash-pins instead of
+    /// probing).
     pub store: Option<&'a MmStore>,
     /// Active scheduler knobs (batch caps, policy weights).
     pub scheduler: &'a SchedulerSpec,
@@ -134,6 +170,9 @@ pub struct PolicyCtx<'a> {
     /// Estimated steady-state encode service rate of one instance,
     /// visual tokens/s (0 when unknown).
     pub encode_tok_s: f64,
+    /// The decision site this context serves — the state key for stateful
+    /// balance policies (see [`PickScope`]).
+    pub scope: PickScope,
 }
 
 impl PolicyCtx<'_> {
@@ -149,9 +188,14 @@ impl PolicyCtx<'_> {
 /// decision that picks *which* instance gets work: arrival routing (via the
 /// [`RoutePolicy`]), E→P handoff, P→D handoff, and elastic migrations.
 ///
-/// Implementations may keep internal state (e.g. [`RoundRobin`]'s cursor);
-/// the serving loop's event order is deterministic, so stateful policies
-/// stay deterministic too. `pick` must return `None` only for an empty
+/// Implementations may keep internal state (e.g. [`RoundRobin`]'s
+/// cursors); the serving loop's event order is deterministic, so stateful
+/// policies stay deterministic too. Internal state MUST be keyed by
+/// [`PolicyCtx::scope`] (see [`PickScope`]): the serving system partitions
+/// policy instances across the router and the replica shards, and only
+/// scope-keyed state makes that partition equivalent to one shared
+/// instance — which in turn is what makes the sharded engine bit-identical
+/// to the single loop. `pick` must return `None` only for an empty
 /// candidate set.
 pub trait BalancePolicy: Send {
     /// Registry name (what the `balance_policy` config knob selects).
@@ -214,6 +258,8 @@ pub const ROUTE_POLICIES: &[&str] = &["modality_path", "cache_affinity", "slo_aw
 pub const BALANCE_POLICIES: &[&str] = &["least_loaded", "round_robin", "weighted_least_loaded"];
 /// Registered [`BatchPolicy`] names, default first.
 pub const BATCH_POLICIES: &[&str] = &["fcfs", "sjf_prefill"];
+/// Registered [`ReconfigPolicy`] names, default first.
+pub const RECONFIG_POLICIES: &[&str] = &["pressure_hysteresis", "greedy_pressure"];
 
 /// Construct a [`RoutePolicy`] by registry name.
 pub fn make_route_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
@@ -253,23 +299,16 @@ pub fn make_batch_policy(name: &str) -> Result<Box<dyn BatchPolicy>> {
     }
 }
 
-/// The three active policies of a serving run, resolved from the
-/// `[scheduler]` config knobs.
-pub struct PolicySet {
-    pub route: Box<dyn RoutePolicy>,
-    pub balance: Box<dyn BalancePolicy>,
-    pub batch: Box<dyn BatchPolicy>,
-}
-
-impl PolicySet {
-    /// Resolve `route_policy` / `balance_policy` / `batch_policy` from the
-    /// scheduler config. Unknown names error, listing the registered ones.
-    pub fn from_scheduler(s: &SchedulerSpec) -> Result<PolicySet> {
-        Ok(PolicySet {
-            route: make_route_policy(&s.route_policy)?,
-            balance: make_balance_policy(&s.balance_policy)?,
-            batch: make_batch_policy(&s.batch_policy)?,
-        })
+/// Construct a [`ReconfigPolicy`] by registry name (the `reconfig.policy`
+/// config knob).
+pub fn make_reconfig_policy(name: &str) -> Result<Box<dyn ReconfigPolicy>> {
+    match name {
+        "pressure_hysteresis" => Ok(Box::new(PressureHysteresis::default())),
+        "greedy_pressure" => Ok(Box::new(GreedyPressure::default())),
+        _ => bail!(
+            "unknown reconfig policy '{name}'; registered: {}",
+            RECONFIG_POLICIES.join(", ")
+        ),
     }
 }
 
@@ -311,6 +350,14 @@ pub(crate) mod testutil {
         }
 
         pub(crate) fn ctx<'a>(&'a self, table: &'a StatusTable) -> PolicyCtx<'a> {
+            self.ctx_scoped(table, PickScope::Entry)
+        }
+
+        pub(crate) fn ctx_scoped<'a>(
+            &'a self,
+            table: &'a StatusTable,
+            scope: PickScope,
+        ) -> PolicyCtx<'a> {
             PolicyCtx {
                 table,
                 dep: &self.dep,
@@ -321,6 +368,7 @@ pub(crate) mod testutil {
                 now: 0.0,
                 prefill_tok_s: self.tok_s.0,
                 encode_tok_s: self.tok_s.1,
+                scope,
             }
         }
     }
@@ -352,6 +400,9 @@ mod tests {
         for &n in BATCH_POLICIES {
             assert_eq!(make_batch_policy(n).unwrap().name(), n);
         }
+        for &n in RECONFIG_POLICIES {
+            assert_eq!(make_reconfig_policy(n).unwrap().name(), n);
+        }
     }
 
     #[test]
@@ -363,6 +414,17 @@ mod tests {
         assert!(e.contains("least_loaded") && e.contains("round_robin"), "{e}");
         let e = make_batch_policy("nope").unwrap_err().to_string();
         assert!(e.contains("fcfs") && e.contains("sjf_prefill"), "{e}");
+        let e = make_reconfig_policy("nope").unwrap_err().to_string();
+        assert!(e.contains("pressure_hysteresis") && e.contains("greedy_pressure"), "{e}");
+    }
+
+    #[test]
+    fn reconfig_default_leads_the_registry() {
+        assert_eq!(
+            make_reconfig_policy(RECONFIG_POLICIES[0]).unwrap().name(),
+            "pressure_hysteresis"
+        );
+        assert_eq!(crate::config::ReconfigSpec::default().policy, RECONFIG_POLICIES[0]);
     }
 
     #[test]

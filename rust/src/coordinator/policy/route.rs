@@ -60,19 +60,18 @@ impl RoutePolicy for ModalityPath {
 
 /// Content-affinity routing for §3.2 cross-request reuse: every multimodal
 /// request is pinned to the replica its image key hashes to, so repeated
-/// images land where their features were produced (and where any
-/// replica-local MM-Store tier would hold them), maximizing cross-request
-/// feature reuse and keeping the remaining replicas' encoders free for cold
-/// content. Text-only requests fall back to [`ModalityPath`] behavior.
-/// Instance choice *within* the affine replica is still the active
-/// [`BalancePolicy`]'s.
+/// images land where their features were produced — since the sharded
+/// refactor the MM Store really is **partitioned per replica**, so the
+/// pin decides which partition warms up and where later fetches hit —
+/// maximizing cross-request feature reuse and keeping the remaining
+/// replicas' encoders free for cold content. Text-only requests fall back
+/// to [`ModalityPath`] behavior. Instance choice *within* the affine
+/// replica is still the active [`BalancePolicy`]'s.
 ///
-/// Affinity is derived from the key hash, not a live
-/// [`PolicyCtx::feature_resident`] probe: the simulator's MM Store is one
-/// pooled tier, so residency is replica-independent — the hash is what
-/// *creates* replica locality (of encoder warmth and any future
-/// replica-local store tier), and it keeps the decision stable across the
-/// key's store-eviction lifecycle.
+/// Affinity is derived from the key hash, not a live residency probe: the
+/// hash is what *creates* partition locality in the first place, and it
+/// keeps the decision stable across the key's store-eviction lifecycle
+/// (a probe-based pin would flap as entries evict).
 pub struct CacheAffinity;
 
 impl RoutePolicy for CacheAffinity {

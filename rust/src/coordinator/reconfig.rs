@@ -18,7 +18,13 @@
 //! existing E-P / P-D transport paths, router/status-table updates, and the
 //! drain/reload window during which the instance is offline.
 //!
-//! Policy, per tick and per replica:
+//! The *trigger* decision — when a snapshot justifies a switch — is a
+//! pluggable [`ReconfigPolicy`] selected by the `reconfig.policy` config
+//! knob (see [`crate::coordinator::policy::elastic`]); this module keeps
+//! the shared pressure rule ([`pressure_plan`]) every shipped policy scores
+//! with, plus the [`Reconfigurer`] wrapper the serving loop drives.
+//!
+//! The shared pressure rule, per tick and per replica:
 //!
 //! 1. Compute each stage's **pressure** = queued-but-unserviceable tokens
 //!    per instance serving that stage (encode: queued visual tokens;
@@ -29,17 +35,26 @@
 //! 3. The **donor** is the lowest-pressure other stage that still has an
 //!    *idle, retaskable* instance to give — and would retain at least one
 //!    instance afterwards (the router must always find every stage).
-//! 4. The imbalance must persist for
-//!    [`ReconfigSpec::hysteresis_ticks`] consecutive ticks, the
-//!    target/donor pressure ratio must clear
-//!    [`ReconfigSpec::imbalance_ratio`], and at least
-//!    [`ReconfigSpec::min_dwell_s`] must have passed since the last switch.
+//! 4. The target/donor pressure ratio must clear
+//!    [`ReconfigSpec::imbalance_ratio`].
+//!
+//! The default `pressure_hysteresis` policy additionally demands the
+//! imbalance persist for [`ReconfigSpec::hysteresis_ticks`] consecutive
+//! ticks and [`ReconfigSpec::min_dwell_s`] since the last switch —
+//! reproducing the pre-registry hardwired controller decision for
+//! decision given the same snapshots. (End-to-end trajectories can still
+//! shift at exact-nanosecond ties: ticks are control-class events since
+//! the sharded-engine refactor, so a tick colliding with a model event's
+//! timestamp now fires first — see `sim/engine.rs`.)
 //!
 //! [`adaptive`]: crate::coordinator::adaptive
+//! [`ReconfigPolicy`]: crate::coordinator::policy::ReconfigPolicy
 
 use crate::config::ReconfigSpec;
 use crate::coordinator::deployment::StageSet;
+use crate::coordinator::policy::{make_reconfig_policy, ReconfigPolicy};
 use crate::npu::StageKind;
+use anyhow::Result;
 
 /// Per-instance load snapshot the controller reads each tick.
 #[derive(Debug, Clone, Copy)]
@@ -108,18 +123,14 @@ pub struct SwitchRecord {
     pub to: StageSet,
 }
 
-/// The elastic re-provisioning controller.
-#[derive(Debug)]
+/// The elastic re-provisioning controller: the configured trigger policy
+/// plus commit bookkeeping. The serving loop's coordination boundary calls
+/// [`Reconfigurer::tick`] with each epoch's cluster snapshot and
+/// [`Reconfigurer::committed`] after executing a returned plan.
 pub struct Reconfigurer {
-    policy: ReconfigSpec,
-    /// Consecutive ticks the *same* imbalance (keyed below) has persisted.
-    streak: usize,
-    /// Identity of the imbalance the streak counts: (replica, target role).
-    /// A different replica or target stage showing up restarts the streak —
-    /// unrelated transients must not accumulate into one.
-    pending: Option<(usize, StageSet)>,
-    /// Time of the last committed switch.
-    last_switch: f64,
+    spec: ReconfigSpec,
+    /// The configured trigger policy (`reconfig.policy` registry name).
+    policy: Box<dyn ReconfigPolicy>,
     /// Every committed switch, in order.
     pub history: Vec<SwitchRecord>,
 }
@@ -151,19 +162,22 @@ fn single_stage_set(k: StageKind) -> StageSet {
 }
 
 impl Reconfigurer {
-    pub fn new(policy: ReconfigSpec) -> Self {
-        Self {
-            policy,
-            streak: 0,
-            pending: None,
-            last_switch: f64::NEG_INFINITY,
-            history: Vec::new(),
-        }
+    /// Build a controller running the spec's configured trigger policy.
+    /// Errors on an unknown `reconfig.policy` name, listing the registered
+    /// ones.
+    pub fn new(spec: ReconfigSpec) -> Result<Self> {
+        let policy = make_reconfig_policy(&spec.policy)?;
+        Ok(Self { spec, policy, history: Vec::new() })
     }
 
-    /// The policy this controller runs.
+    /// The knob set this controller runs under.
     pub fn policy(&self) -> &ReconfigSpec {
-        &self.policy
+        &self.spec
+    }
+
+    /// The active trigger policy's registry name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// Number of committed switches so far.
@@ -171,105 +185,84 @@ impl Reconfigurer {
         self.history.len()
     }
 
-    /// Evaluate one controller tick over the cluster snapshot. Returns a
-    /// plan once the imbalance has persisted long enough; the caller must
-    /// execute the migration and then call [`Reconfigurer::committed`].
+    /// Evaluate one controller tick over the cluster snapshot through the
+    /// configured trigger policy. The caller must execute a returned plan
+    /// and then call [`Reconfigurer::committed`].
     pub fn tick(&mut self, now: f64, loads: &[InstLoad]) -> Option<SwitchPlan> {
-        let replicas = loads.iter().map(|l| l.replica + 1).max().unwrap_or(0);
-        let plan = (0..replicas).find_map(|r| self.eval_replica(r, loads));
-        match plan {
-            None => {
-                self.streak = 0;
-                self.pending = None;
-                None
-            }
-            Some(plan) => {
-                // The streak only counts the SAME imbalance persisting: a
-                // different replica or target stage is a fresh observation.
-                let key = (plan.replica, plan.to);
-                if self.pending == Some(key) {
-                    self.streak += 1;
-                } else {
-                    self.pending = Some(key);
-                    self.streak = 1;
-                }
-                if self.streak < self.policy.hysteresis_ticks {
-                    return None;
-                }
-                // Dwell: keep the streak (the imbalance is real) but hold
-                // fire until the cluster has settled from the last switch.
-                if now - self.last_switch < self.policy.min_dwell_s {
-                    return None;
-                }
-                Some(plan)
-            }
-        }
+        self.policy.tick(now, &self.spec, loads)
     }
 
     /// Record that the serving loop executed `plan` at time `now`.
     pub fn committed(&mut self, now: f64, plan: &SwitchPlan) {
-        self.streak = 0;
-        self.pending = None;
-        self.last_switch = now;
+        self.policy.committed(now);
         self.history.push(SwitchRecord { t: now, inst: plan.inst, from: plan.from, to: plan.to });
     }
+}
 
-    /// Find an imbalance-resolving switch within one replica.
-    fn eval_replica(&self, replica: usize, loads: &[InstLoad]) -> Option<SwitchPlan> {
-        let members: Vec<(usize, &InstLoad)> =
-            loads.iter().enumerate().filter(|(_, l)| l.replica == replica).collect();
-        // Per-stage capacity (instances serving it) and total backlog.
-        let mut capacity = [0usize; 3];
-        let mut backlog = [0usize; 3];
-        for &(_, l) in &members {
-            for (si, &k) in STAGES.iter().enumerate() {
-                if has_stage(&l.stages, k) {
-                    capacity[si] += 1;
-                }
-                backlog[si] += backlog_for(l, k);
+/// The shared stage-pressure rule: find an imbalance-resolving switch, or
+/// `None` if no replica clears the backlog floor and pressure ratio with a
+/// retaskable donor. Pure — persistence (hysteresis/dwell) is the trigger
+/// policy's concern.
+pub fn pressure_plan(spec: &ReconfigSpec, loads: &[InstLoad]) -> Option<SwitchPlan> {
+    let replicas = loads.iter().map(|l| l.replica + 1).max().unwrap_or(0);
+    (0..replicas).find_map(|r| eval_replica(spec, r, loads))
+}
+
+/// Find an imbalance-resolving switch within one replica.
+fn eval_replica(spec: &ReconfigSpec, replica: usize, loads: &[InstLoad]) -> Option<SwitchPlan> {
+    let members: Vec<(usize, &InstLoad)> =
+        loads.iter().enumerate().filter(|(_, l)| l.replica == replica).collect();
+    // Per-stage capacity (instances serving it) and total backlog.
+    let mut capacity = [0usize; 3];
+    let mut backlog = [0usize; 3];
+    for &(_, l) in &members {
+        for (si, &k) in STAGES.iter().enumerate() {
+            if has_stage(&l.stages, k) {
+                capacity[si] += 1;
             }
+            backlog[si] += backlog_for(l, k);
         }
-        let pressure = |si: usize| -> f64 {
-            if capacity[si] == 0 {
-                0.0
-            } else {
-                backlog[si] as f64 / capacity[si] as f64
-            }
-        };
-
-        // Target: the most-pressured stage with real backlog.
-        let target = (0..3)
-            .filter(|&si| capacity[si] > 0)
-            .max_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(b.cmp(&a)))?;
-        if pressure(target) < self.policy.min_backlog_tokens as f64 {
-            return None;
-        }
-
-        // Donor: the least-pressured other stage that can spare an idle
-        // instance and would keep serving with at least one.
-        let donor_stage = (0..3)
-            .filter(|&si| si != target && capacity[si] >= 2)
-            .filter(|&si| {
-                members.iter().any(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[si]))
-            })
-            .min_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(a.cmp(&b)))?;
-        if pressure(target) < self.policy.imbalance_ratio * pressure(donor_stage).max(1.0) {
-            return None;
-        }
-
-        // Donor instance: least parked work, fewest in-flight decode
-        // sequences, lowest index (determinism).
-        let (inst, load) = members
-            .iter()
-            .filter(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[donor_stage]))
-            .min_by_key(|(i, l)| (l.own_backlog(), l.decode_active, *i))?;
-        Some(SwitchPlan {
-            inst: *inst,
-            replica,
-            from: load.stages,
-            to: single_stage_set(STAGES[target]),
-        })
     }
+    let pressure = |si: usize| -> f64 {
+        if capacity[si] == 0 {
+            0.0
+        } else {
+            backlog[si] as f64 / capacity[si] as f64
+        }
+    };
+
+    // Target: the most-pressured stage with real backlog.
+    let target = (0..3)
+        .filter(|&si| capacity[si] > 0)
+        .max_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(b.cmp(&a)))?;
+    if pressure(target) < spec.min_backlog_tokens as f64 {
+        return None;
+    }
+
+    // Donor: the least-pressured other stage that can spare an idle
+    // instance and would keep serving with at least one.
+    let donor_stage = (0..3)
+        .filter(|&si| si != target && capacity[si] >= 2)
+        .filter(|&si| {
+            members.iter().any(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[si]))
+        })
+        .min_by(|&a, &b| pressure(a).partial_cmp(&pressure(b)).unwrap().then(a.cmp(&b)))?;
+    if pressure(target) < spec.imbalance_ratio * pressure(donor_stage).max(1.0) {
+        return None;
+    }
+
+    // Donor instance: least parked work, fewest in-flight decode
+    // sequences, lowest index (determinism).
+    let (inst, load) = members
+        .iter()
+        .filter(|(_, l)| l.retaskable() && has_stage(&l.stages, STAGES[donor_stage]))
+        .min_by_key(|(i, l)| (l.own_backlog(), l.decode_active, *i))?;
+    Some(SwitchPlan {
+        inst: *inst,
+        replica,
+        from: load.stages,
+        to: single_stage_set(STAGES[target]),
+    })
 }
 
 #[cfg(test)]
@@ -298,7 +291,12 @@ mod tests {
             min_backlog_tokens: 1000,
             drain_s: 0.5,
             min_dwell_s: 5.0,
+            policy: "pressure_hysteresis".to_string(),
         }
+    }
+
+    fn reconfigurer(spec: ReconfigSpec) -> Reconfigurer {
+        Reconfigurer::new(spec).expect("registered policy")
     }
 
     /// E-P-D-D with a big encode backlog and an idle second decoder.
@@ -315,7 +313,7 @@ mod tests {
 
     #[test]
     fn hysteresis_delays_then_fires_on_persistent_imbalance() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let loads = encode_pressured();
         assert_eq!(rc.tick(0.0, &loads), None, "first imbalanced tick only arms the streak");
         let plan = rc.tick(1.0, &loads).expect("second consecutive tick fires");
@@ -328,7 +326,7 @@ mod tests {
 
     #[test]
     fn transient_spike_resets_the_streak() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let loads = encode_pressured();
         assert_eq!(rc.tick(0.0, &loads), None);
         let calm: Vec<InstLoad> = encode_pressured()
@@ -344,7 +342,7 @@ mod tests {
 
     #[test]
     fn balanced_or_light_load_never_switches() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         // Light: backlog below the floor.
         let mut light = encode_pressured();
         light[0].encode_backlog = 500;
@@ -364,7 +362,7 @@ mod tests {
 
     #[test]
     fn never_donates_the_last_instance_of_a_stage() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         // E-P-D: every stage has exactly one instance — no donor exists.
         let mut loads =
             vec![idle(0, StageSet::E), idle(0, StageSet::P), idle(0, StageSet::D)];
@@ -376,7 +374,7 @@ mod tests {
 
     #[test]
     fn dwell_blocks_back_to_back_switches() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let loads = encode_pressured();
         rc.tick(0.0, &loads);
         let plan = rc.tick(1.0, &loads).unwrap();
@@ -390,7 +388,7 @@ mod tests {
 
     #[test]
     fn busy_instances_are_not_donors_but_queued_ones_are() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let mut loads = encode_pressured();
         loads[2].busy = true; // decoder 2 mid-batch: untouchable
         loads[3].decode_backlog = 10; // decoder 3 only has queued work
@@ -401,7 +399,7 @@ mod tests {
 
     #[test]
     fn donor_with_least_parked_work_is_preferred() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let mut loads = encode_pressured();
         loads[2].decode_backlog = 500;
         loads[3].decode_backlog = 5;
@@ -415,7 +413,7 @@ mod tests {
         // hysteresis_ticks = 2: one tick of imbalance A followed by one
         // tick of unrelated imbalance B must NOT fire — the streak is keyed
         // to (replica, target), not a global counter.
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         let base = || {
             vec![
                 idle(0, StageSet::E),
@@ -440,7 +438,7 @@ mod tests {
 
     #[test]
     fn switches_stay_within_a_replica() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         // Replica 0 pressured on encode but has no spare; replica 1 has a
         // spare decoder but no pressure. Nothing may move across.
         let mut loads = vec![
@@ -467,7 +465,7 @@ mod tests {
 
     #[test]
     fn decode_pressure_pulls_capacity_in() {
-        let mut rc = Reconfigurer::new(policy());
+        let mut rc = reconfigurer(policy());
         // E-E-P-D: image phase ended, decode now drowning, an encoder idles.
         let mut loads = vec![
             idle(0, StageSet::E),

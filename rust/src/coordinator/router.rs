@@ -9,18 +9,20 @@
 //!
 //! Since the scheduling-policy API redesign the routing *logic* lives in
 //! [`crate::coordinator::policy::route`] behind the [`RoutePolicy`] trait
-//! (config knob `[scheduler] route_policy`), and the serving loop
-//! dispatches through a [`crate::coordinator::policy::PolicySet`] directly.
-//! [`Router`] remains as the zero-config facade over the **default**
-//! policies (`modality_path` routing × `least_loaded` balancing) for tools
-//! and tests that route against a bare status table.
+//! (config knob `[scheduler] route_policy`), and the serving system's
+//! coordination boundary dispatches through its entry-scoped policy
+//! instances directly. [`Router`] remains as the zero-config facade over
+//! the **default** policies (`modality_path` routing × `least_loaded`
+//! balancing) for tools and tests that route against a bare status table.
 //!
 //! [`RoutePolicy`]: crate::coordinator::policy::RoutePolicy
 
 use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::deployment::Deployment;
-use crate::coordinator::policy::{LeastLoaded, ModalityPath, PolicyCtx, RoutePolicy, StageCands};
+use crate::coordinator::policy::{
+    LeastLoaded, ModalityPath, PickScope, PolicyCtx, RoutePolicy, StageCands,
+};
 use crate::workload::RequestSpec;
 use anyhow::Result;
 
@@ -71,6 +73,7 @@ impl Router {
             now: 0.0,
             prefill_tok_s: 0.0,
             encode_tok_s: 0.0,
+            scope: PickScope::Entry,
         };
         ModalityPath.route(&ctx, spec, feature_resident, &mut LeastLoaded)
     }

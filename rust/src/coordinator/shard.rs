@@ -1,0 +1,1289 @@
+//! Per-replica simulation shard — the unit of parallelism in the sharded
+//! discrete-event engine.
+//!
+//! A [`ReplicaShard`] owns everything one replica needs to advance
+//! independently between coordination epochs: its stage instances and
+//! queues, its processor-shared NPUs, its P→D KV link, its MM-Store
+//! partition, its live requests and retired records, and its own
+//! stage-scoped scheduling-policy instances. Every simulation event except
+//! the two coordination events ([`Ev::Arrive`], [`Ev::ReconfigTick`]) is
+//! handled here, and every event a shard handler schedules targets the same
+//! shard — requests never cross replicas after routing (elastic switches
+//! are intra-replica by design), so shard state is closed under shard
+//! events.
+//!
+//! Both execution engines drive the same shard code:
+//!
+//! * the **single-loop** reference ([`crate::coordinator::simserve`])
+//!   dispatches events from one global queue to the owning shard;
+//! * the **sharded** engine ([`crate::coordinator::sharded`]) gives each
+//!   shard its own queue on a worker thread and advances all shards in
+//!   parallel up to the next coordination epoch (conservative-time
+//!   barrier).
+//!
+//! Sharing the handler code is half of the bit-identity argument; the
+//! other half is that all shard↔world coupling flows through the explicit
+//! **coordination boundary**: arrival routing reads the router's status
+//! table assembled from shard rows ([`ReplicaShard::flush_rows`]) and the
+//! cross-partition residency probe, reconfiguration reads
+//! [`ReplicaShard::collect_loads`] snapshots — both only at epochs where
+//! every shard has advanced through exactly the events that precede the
+//! epoch in the single loop's `(time, class, seq)` merge order.
+
+use crate::config::Config;
+use crate::coordinator::balancer::{InstanceStatus, StatusTable};
+use crate::coordinator::batcher::{EncodeItem, PrefillItem};
+use crate::coordinator::deployment::{Deployment, InstanceSpec, StageSet};
+use crate::coordinator::metrics::RequestRecord;
+use crate::coordinator::policy::{
+    make_balance_policy, make_batch_policy, BalancePolicy, BatchPolicy, PickScope, PolicyCtx,
+    StageCands, StageNeed,
+};
+use crate::coordinator::reconfig::{InstLoad, SwitchPlan};
+use crate::coordinator::request::{ReqState, Request};
+use crate::coordinator::router::Route;
+use crate::kvcache::{BlockAllocator, KvManager};
+use crate::mmstore::MmStore;
+use crate::npu::{CostModel, StageKind};
+use crate::sim::engine::{sec_to_ns, EventQueue, SimModel};
+use crate::sim::psnpu::{PsNpu, TaskId};
+use crate::transport::ep::{plan_ep_transfer, recompute_cost};
+use crate::transport::link::Link;
+use crate::transport::pd::plan_kv_transmission;
+use crate::workload::{ArrivedRequest, RequestSpec};
+use anyhow::Result;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Tensor-parallel execution efficiency (fraction of linear scaling
+/// achieved) and per-layer synchronization cost — why TP2 loses (§4.3:
+/// "inter-NPU synchronization overhead severely degrades performance").
+const TP_EFFICIENCY: f64 = 0.85;
+const TP_ALLREDUCE_S_PER_LAYER: f64 = 0.5e-3;
+
+/// Total MM-Store pool capacity, bytes — partitioned evenly across the
+/// deployment's replicas (a single replica owns the whole pool, exactly
+/// the pre-sharding pooled store).
+const MM_STORE_BYTES: f64 = 32e9;
+
+/// Read-only state shared by the coordinator and every shard (and, in the
+/// sharded engine, across worker threads).
+pub(crate) struct SimShared {
+    pub cfg: Config,
+    pub cm: CostModel,
+    /// Steady-state per-instance service-rate estimates from the cost
+    /// model, exposed to policies via [`PolicyCtx`] (SLO projections).
+    pub prefill_tok_s: f64,
+    pub encode_tok_s: f64,
+}
+
+/// Simulation events. All variants except the two coordination events are
+/// shard-local: handled by the owning [`ReplicaShard`], and only ever
+/// scheduled by that same shard or by the coordination boundary.
+#[doc(hidden)]
+pub enum Ev {
+    /// A request enters the system (arrival-class; coordinator-handled:
+    /// the serving loop keeps exactly one pending arrival and schedules
+    /// the next on delivery).
+    Arrive(ArrivedRequest),
+    /// Feature available (or found missing) at the prefill instance.
+    FeatureReady { req: u64, inst: usize },
+    /// A task may have completed on this NPU (stale if epoch mismatches).
+    NpuCheck { npu: usize, epoch: u64 },
+    /// KV for these requests delivered to a decode instance.
+    KvDelivered { reqs: Vec<u64>, inst: usize },
+    /// Try to start work on an instance.
+    Kick { inst: usize },
+    /// Periodic elastic re-provisioning epoch (control-class;
+    /// coordinator-handled).
+    ReconfigTick,
+}
+
+/// One stage instance's live state.
+pub(crate) struct Inst {
+    pub spec: InstanceSpec,
+    encode_q: VecDeque<EncodeItem>,
+    prefill_q: VecDeque<PrefillItem>,
+    /// Sequences whose KV arrived, waiting for a decode-batch slot.
+    decode_waiting: VecDeque<u64>,
+    decode_active: Vec<u64>,
+    kv: Option<KvManager>,
+    /// An encode/prefill task is running (serializes the instance).
+    busy: bool,
+    decode_running: bool,
+    /// Incrementally maintained Σ tokens of queued work (avoids an O(queue)
+    /// scan on every status-table update — see docs/PERFORMANCE.md).
+    pending_tokens: usize,
+    /// Incrementally maintained Σ `ctx_tokens` over `decode_active` (avoids
+    /// an O(batch) request-map walk per decode step: +ctx on admission,
+    /// +batch per step, −ctx on finish).
+    active_ctx: usize,
+    /// Elastic switch in progress: the role this instance will assume once
+    /// its in-flight work drains (new arrivals already route per the new
+    /// role; the reload happens at drain completion).
+    draining_to: Option<StageSet>,
+    /// Until this time the instance is offline reloading stage weights
+    /// after a completed role switch.
+    offline_until: f64,
+}
+
+impl Inst {
+    fn queue_len(&self) -> usize {
+        self.encode_q.len() + self.prefill_q.len() + self.decode_waiting.len()
+    }
+
+    fn push_encode(&mut self, item: EncodeItem) {
+        self.pending_tokens += item.visual_tokens;
+        self.encode_q.push_back(item);
+    }
+
+    fn push_prefill(&mut self, item: PrefillItem) {
+        self.pending_tokens += item.prompt_tokens;
+        self.prefill_q.push_back(item);
+    }
+
+    fn drained(&mut self, tokens: usize) {
+        self.pending_tokens = self.pending_tokens.saturating_sub(tokens);
+    }
+
+    /// The status-table row this instance's current state implies.
+    fn status(&self) -> InstanceStatus {
+        InstanceStatus {
+            queue_len: self.queue_len(),
+            active: self.decode_active.len() + usize::from(self.busy),
+            pending_tokens: self.pending_tokens,
+            kv_utilization: self.kv.as_ref().map_or(0.0, |k| k.utilization()),
+        }
+    }
+}
+
+/// Size a decode instance's paged-KV pool — one formula shared by boot-time
+/// construction and elastic switches into the decode role.
+fn make_kv(cm: &CostModel, kv_bytes_per_token: usize, tp: usize) -> KvManager {
+    let cap = cm.kv_capacity_bytes(1.0 / tp as f64) * tp as f64;
+    KvManager::new(BlockAllocator::for_capacity(cap, kv_bytes_per_token, 16))
+}
+
+/// Work executing on an NPU.
+enum TaskKind {
+    EncodeBatch { inst: usize, reqs: Vec<u64> },
+    PrefillBatch { inst: usize, reqs: Vec<u64> },
+    DecodeStep { inst: usize },
+}
+
+/// Construct a stage-scoped policy world view from disjoint field borrows
+/// (a method returning `PolicyCtx` would borrow all of `self` and conflict
+/// with the `&mut` the policy objects need).
+macro_rules! shard_ctx {
+    ($self:ident, $now:expr, $need:expr) => {
+        PolicyCtx {
+            table: &$self.table,
+            dep: &$self.dep,
+            cands: &$self.cands,
+            store: Some(&$self.store),
+            scheduler: &$self.shared.cfg.scheduler,
+            slo: &$self.shared.cfg.slo,
+            now: $now,
+            prefill_tok_s: $self.shared.prefill_tok_s,
+            encode_tok_s: $self.shared.encode_tok_s,
+            scope: PickScope::Stage { replica: $self.replica, need: $need },
+        }
+    };
+}
+
+/// One replica's share of the serving simulation. Instance and NPU indices
+/// in events and records stay **global** (deployment-wide); the shard
+/// translates through its contiguous base offsets.
+pub(crate) struct ReplicaShard {
+    shared: Arc<SimShared>,
+    pub replica: usize,
+    /// Global index of this replica's first instance (instances are
+    /// replica-major contiguous by construction of `Deployment::parse`).
+    inst_base: usize,
+    /// Global index of this replica's first NPU.
+    npu_base: usize,
+    /// Routed-topology copy — authoritative for this replica's rows only;
+    /// the coordination boundary keeps it in sync with the router's copy
+    /// at every elastic switch.
+    dep: Deployment,
+    cands: StageCands,
+    /// Stage-scoped policy instances (see [`PickScope`]): this shard only
+    /// ever issues `Stage { replica: self.replica, .. }` picks, so owning a
+    /// private instance is equivalent to sharing one scope-keyed instance
+    /// with the router and every other shard.
+    balance: Box<dyn BalancePolicy>,
+    batch: Box<dyn BatchPolicy>,
+    insts: Vec<Inst>,
+    npus: Vec<PsNpu>,
+    tasks: HashMap<(usize, TaskId), TaskKind>,
+    /// Full-length status table; only this replica's rows are maintained.
+    /// The coordination boundary copies them into the router's table at
+    /// epochs ([`Self::flush_rows`]).
+    table: StatusTable,
+    table_dirty: bool,
+    /// This replica's MM-Store partition.
+    store: MmStore,
+    /// This replica's P→D KV link.
+    kv_link: Link,
+    /// Live (arrived, unfinished) requests routed to this replica.
+    reqs: HashMap<u64, Request>,
+    /// Finished/retired request records, tagged with the arrival index so
+    /// the final report restores trace order.
+    records: Vec<(u64, RequestRecord)>,
+    /// An elastic switch is mid-migration: the donor's `pending_tokens`
+    /// intentionally lags its (already bulk-drained) queues while items
+    /// re-route one at a time, so the strict counter-vs-queue debug
+    /// invariant is suspended for the duration (the table-vs-status check
+    /// still runs).
+    migrating: bool,
+    /// Requests finished on this shard.
+    done: usize,
+    /// Decode steps executed inline by the fused fast path.
+    fused_steps: u64,
+    /// E/P batch completions whose follow-up kick ran inline (one heap
+    /// event saved each; `scheduler.fuse_batch_events`).
+    fused_batch_kicks: u64,
+    /// Injected MM-Store failure probability (tests/benches).
+    store_fail_prob: f64,
+    /// The engine's exact integer-ns run cutoff; the fused decode loop may
+    /// not complete a step past it.
+    horizon_ns: u64,
+    /// Exclusive upper bound of the current execution window (sharded
+    /// engine rounds); `u64::MAX` in the single loop, where pending
+    /// coordination events bound fusion through the shared queue instead.
+    window_ns: u64,
+}
+
+impl ReplicaShard {
+    pub fn new(shared: Arc<SimShared>, dep: &Deployment, replica: usize) -> Result<Self> {
+        let scheduler = &shared.cfg.scheduler;
+        let balance = make_balance_policy(&scheduler.balance_policy)?;
+        let batch = make_batch_policy(&scheduler.batch_policy)?;
+        let inst_base = dep
+            .instances
+            .iter()
+            .position(|i| i.replica == replica)
+            .expect("every replica has instances");
+        let mut insts = Vec::new();
+        for (gi, spec) in dep.instances.iter().enumerate() {
+            if spec.replica != replica {
+                continue;
+            }
+            debug_assert_eq!(
+                gi,
+                inst_base + insts.len(),
+                "instances must be replica-major contiguous"
+            );
+            let kv = if spec.stages.decode {
+                Some(make_kv(&shared.cm, shared.cfg.model.llm.kv_bytes_per_token(), spec.tp))
+            } else {
+                None
+            };
+            insts.push(Inst {
+                spec: spec.clone(),
+                encode_q: VecDeque::new(),
+                prefill_q: VecDeque::new(),
+                decode_waiting: VecDeque::new(),
+                decode_active: Vec::new(),
+                kv,
+                busy: false,
+                decode_running: false,
+                pending_tokens: 0,
+                active_ctx: 0,
+                draining_to: None,
+                offline_until: 0.0,
+            });
+        }
+        let npu_base = replica * dep.npus_per_replica;
+        let npus = (0..dep.npus_per_replica).map(|_| PsNpu::new()).collect();
+        let kv_link = Link::new(shared.cm.kv_link_bw(), shared.cm.hw.handshake_s);
+        let store = MmStore::new(MM_STORE_BYTES / dep.replicas as f64);
+        Ok(Self {
+            replica,
+            inst_base,
+            npu_base,
+            dep: dep.clone(),
+            cands: StageCands::build(dep),
+            balance,
+            batch,
+            insts,
+            npus,
+            tasks: HashMap::with_capacity(16),
+            table: StatusTable::new(dep.instances.len()),
+            table_dirty: false,
+            store,
+            kv_link,
+            reqs: HashMap::with_capacity(64),
+            records: Vec::new(),
+            migrating: false,
+            done: 0,
+            fused_steps: 0,
+            fused_batch_kicks: 0,
+            store_fail_prob: 0.0,
+            horizon_ns: u64::MAX,
+            window_ns: u64::MAX,
+            shared,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Coordination-boundary surface
+    // ------------------------------------------------------------------
+
+    /// Copy this replica's status rows into the router's table (skipped
+    /// when nothing changed since the last flush).
+    pub fn flush_rows(&mut self, router: &mut StatusTable) {
+        if !self.table_dirty {
+            return;
+        }
+        for li in 0..self.insts.len() {
+            let gi = self.inst_base + li;
+            router.update(gi, self.table.get(gi));
+        }
+        self.table_dirty = false;
+    }
+
+    /// Does this replica's MM-Store partition hold the key? (The
+    /// coordinator's cross-partition residency probe for arrival routing.)
+    pub fn feature_resident(&self, key: u64) -> bool {
+        self.store.contains(key)
+    }
+
+    /// Append this replica's per-instance load snapshots in global
+    /// instance order.
+    ///
+    /// The snapshot walks every queue (O(total queued) per epoch) rather
+    /// than maintaining per-stage incremental counters like
+    /// `pending_tokens` does for the status table: reconfiguration epochs
+    /// fire every `tick_s` *simulated* seconds (hundreds per run, vs. a
+    /// table update per queue mutation), so the scan is off every hot path
+    /// and not worth three more push/drain-balanced counters.
+    pub fn collect_loads(&self, now: f64, out: &mut Vec<InstLoad>) {
+        for (li, inst) in self.insts.iter().enumerate() {
+            let gi = self.inst_base + li;
+            out.push(InstLoad {
+                replica: self.replica,
+                // The routed (desired) role, which may already differ from
+                // the executing role while the instance drains.
+                stages: self.dep.instances[gi].stages,
+                busy: inst.busy,
+                decode_active: inst.decode_active.len(),
+                encode_backlog: inst.encode_q.iter().map(|e| e.visual_tokens).sum(),
+                prefill_backlog: inst.prefill_q.iter().map(|p| p.prompt_tokens).sum(),
+                // Waiting decode work = resident context plus the output
+                // tokens still to generate (short-prompt/long-output
+                // traffic is decode work even though its context is tiny).
+                decode_backlog: inst
+                    .decode_waiting
+                    .iter()
+                    .map(|&r| {
+                        let req = self.reqs.get(&r).expect("queued request is live");
+                        req.ctx_tokens()
+                            + req.spec.output_tokens.saturating_sub(req.tokens_generated)
+                    })
+                    .sum(),
+                switching: inst.draining_to.is_some() || self.offline(gi, now),
+            });
+        }
+    }
+
+    /// Deliver a routed arrival: insert the live request and enter it at
+    /// the routed stage. Called by the coordination boundary with the
+    /// target shard's queue.
+    pub fn on_routed(
+        &mut self,
+        rid: u64,
+        spec: RequestSpec,
+        arrival: f64,
+        route: Route,
+        now: f64,
+        q: &mut EventQueue<Ev>,
+    ) {
+        self.reqs.insert(rid, Request::new(spec, arrival));
+        match route {
+            Route::Encode(inst) => {
+                let img = spec.image.expect("multimodal");
+                let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
+                self.reqs.get_mut(&rid).expect("just inserted").route.push(inst);
+                let li = inst - self.inst_base;
+                self.insts[li].push_encode(item);
+                self.sync_status(inst);
+                q.at(now, Ev::Kick { inst });
+            }
+            Route::Prefill { instance, feature_reused } => {
+                self.reqs.get_mut(&rid).expect("just inserted").route.push(instance);
+                if feature_reused {
+                    // Cross-request reuse: skip Encode, fetch the
+                    // resident feature (prefetch-overlapped).
+                    self.reqs.get_mut(&rid).expect("just inserted").feature_reused = true;
+                    let tokens = spec.image.as_ref().map(|i| i.visual_tokens).unwrap_or(0);
+                    let plan = plan_ep_transfer(
+                        &self.shared.cm,
+                        tokens,
+                        self.shared.cfg.scheduler.ep_async_prefetch,
+                    );
+                    q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: instance });
+                } else {
+                    q.at(now, Ev::FeatureReady { req: rid, inst: instance });
+                }
+            }
+        }
+    }
+
+    /// Execute a role switch decided at a reconfiguration epoch: reshape
+    /// this shard's routed-topology view, drain the donor's queues by
+    /// migrating waiting work over the standing E-P / P-D transport paths,
+    /// and either complete immediately or let in-flight decode sequences
+    /// finish first (overlapped transition). The caller (coordination
+    /// boundary) updates the router's own topology copy and the
+    /// controller's history.
+    pub fn apply_switch(&mut self, plan: &SwitchPlan, now: f64, q: &mut EventQueue<Ev>) {
+        let inst = plan.inst;
+        self.migrating = true;
+
+        // 1. New arrivals route to the reshaped topology from this instant:
+        //    the deployment's instance table is the routing authority, and
+        //    the candidate cache every policy reads through [`PolicyCtx`]
+        //    is rebuilt from it.
+        self.dep.instances[inst].stages = plan.to;
+        self.cands = StageCands::build(&self.dep);
+
+        // 2. Drain the donor's queues. Queued encodes only carry request
+        //    metadata (raw inputs are host-side), so they re-queue directly
+        //    on another encoder.
+        let li = inst - self.inst_base;
+        let enc_items: Vec<EncodeItem> = self.insts[li].encode_q.drain(..).collect();
+        for item in enc_items {
+            self.insts[li].drained(item.visual_tokens);
+            self.sync_status(inst);
+            let e_inst = self.pick_instance(StageNeed::Encode, now);
+            self.insts[e_inst - self.inst_base].push_encode(item);
+            self.sync_status(e_inst);
+            q.at(now, Ev::Kick { inst: e_inst });
+        }
+        //    Queued prefills re-fetch their features at the new prefill
+        //    instance through the MM-Store E-P path (prefetch-overlapped);
+        //    text-only items move as pure metadata.
+        let pre_items: Vec<PrefillItem> = self.insts[li].prefill_q.drain(..).collect();
+        for item in pre_items {
+            self.insts[li].drained(item.prompt_tokens);
+            self.sync_status(inst);
+            let p_inst = self.pick_instance(StageNeed::Prefill, now);
+            let visual = self
+                .reqs
+                .get(&item.req)
+                .expect("queued request is live")
+                .spec
+                .image
+                .as_ref()
+                .map(|i| i.visual_tokens)
+                .unwrap_or(0);
+            let delay = if visual > 0 {
+                plan_ep_transfer(
+                    &self.shared.cm,
+                    visual,
+                    self.shared.cfg.scheduler.ep_async_prefetch,
+                )
+                .exposed
+            } else {
+                0.0
+            };
+            q.at(now + delay, Ev::FeatureReady { req: item.req, inst: p_inst });
+        }
+        //    Sequences whose KV already landed here re-transmit their
+        //    context over the replica's P-D link to the adopting decoder.
+        let waiting: Vec<u64> = self.insts[li].decode_waiting.drain(..).collect();
+        self.sync_status(inst);
+        self.migrate_kv(waiting, now, q);
+
+        // 3. In-flight work (a running E/P batch, resident decode
+        //    sequences) finishes under the old role; the reload happens
+        //    when the last of it drains.
+        let busy_now = {
+            let i = &self.insts[li];
+            i.busy || i.decode_running || !i.decode_active.is_empty()
+        };
+        if busy_now {
+            self.insts[li].draining_to = Some(plan.to);
+        } else {
+            self.complete_switch(inst, plan.to, now, q);
+        }
+        self.migrating = false;
+    }
+
+    /// Enable MM-Store failure injection on this shard's partition
+    /// (exercises §3.2 recomputation). Seeded per replica so partitions
+    /// draw independent failure streams.
+    pub fn enable_store_failures(&mut self, prob: f64, seed: u64) {
+        self.store_fail_prob = prob;
+        self.store = MmStore::new(self.store.capacity_bytes())
+            .with_failures(prob, seed.wrapping_add(self.replica as u64));
+    }
+
+    pub fn set_horizon(&mut self, horizon_ns: u64) {
+        self.horizon_ns = horizon_ns;
+    }
+
+    pub fn set_window(&mut self, window_ns: u64) {
+        self.window_ns = window_ns;
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.done
+    }
+
+    pub fn fused_steps(&self) -> u64 {
+        self.fused_steps
+    }
+
+    pub fn fused_batch_kicks(&self) -> u64 {
+        self.fused_batch_kicks
+    }
+
+    pub fn store_stats(&self) -> crate::mmstore::StoreStats {
+        self.store.stats()
+    }
+
+    pub fn kv_link_stats(&self) -> (f64, f64) {
+        (self.kv_link.bytes_carried(), self.kv_link.busy_time())
+    }
+
+    /// Busy fractions of this replica's NPUs over `[0, until]`, in global
+    /// NPU order.
+    pub fn npu_utilizations(&mut self, until: f64) -> Vec<f64> {
+        self.npus.iter_mut().map(|n| n.utilization(until)).collect()
+    }
+
+    /// Drop live state of every unfinished request (horizon cutoff),
+    /// keeping records.
+    pub fn retire_leftovers(&mut self) {
+        let mut leftovers: Vec<u64> = self.reqs.keys().copied().collect();
+        leftovers.sort_unstable();
+        for rid in leftovers {
+            self.retire(rid);
+        }
+    }
+
+    pub fn take_records(&mut self) -> Vec<(u64, RequestRecord)> {
+        std::mem::take(&mut self.records)
+    }
+
+    // ------------------------------------------------------------------
+    // Helpers
+    // ------------------------------------------------------------------
+
+    /// Scale exclusive-NPU work for an instance's TP degree and add the
+    /// per-layer synchronization cost.
+    fn tp_scale(&self, inst: usize, work: f64, layers: usize) -> f64 {
+        let tp = self.insts[inst - self.inst_base].spec.tp;
+        if tp <= 1 {
+            work
+        } else {
+            work / (tp as f64 * TP_EFFICIENCY) + layers as f64 * 2.0 * TP_ALLREDUCE_S_PER_LAYER
+        }
+    }
+
+    /// Push instance `inst`'s current state into the status table. Called
+    /// at every mutation site; routing reads the table without rebuilding
+    /// it ([`Self::debug_check_table`] enforces coverage in debug builds).
+    fn sync_status(&mut self, inst: usize) {
+        let status = self.insts[inst - self.inst_base].status();
+        self.table.update(inst, status);
+        self.table_dirty = true;
+    }
+
+    /// Debug-build ground-truth check: the incrementally maintained table
+    /// must equal a full recomputation at every scheduling decision — and
+    /// the `pending_tokens` counter must equal a fresh walk over the
+    /// queues (so a missed `sync_status`, `push_*` or `drained` site fails
+    /// `cargo test` here instead of silently changing load-balancing
+    /// decisions).
+    pub(crate) fn debug_check_table(&self) {
+        for (li, inst) in self.insts.iter().enumerate() {
+            let gi = self.inst_base + li;
+            let want = inst.status();
+            let got = self.table.get(gi);
+            assert!(
+                got == want,
+                "status table stale for instance {gi}: table {got:?} vs actual {want:?}"
+            );
+            if !self.migrating {
+                let queue_tokens: usize =
+                    inst.encode_q.iter().map(|e| e.visual_tokens).sum::<usize>()
+                        + inst.prefill_q.iter().map(|p| p.prompt_tokens).sum::<usize>();
+                assert!(
+                    inst.pending_tokens == queue_tokens,
+                    "pending_tokens counter drifted on instance {gi}: {} vs queues {queue_tokens}",
+                    inst.pending_tokens
+                );
+            }
+        }
+    }
+
+    fn arm_npu(&mut self, npu: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if let Some((t, _)) = self.npus[npu - self.npu_base].next_completion(now) {
+            let epoch = self.npus[npu - self.npu_base].epoch;
+            q.at(t, Ev::NpuCheck { npu, epoch });
+        }
+    }
+
+    fn start_task(
+        &mut self,
+        inst: usize,
+        kind: TaskKind,
+        stage: StageKind,
+        work: f64,
+        now: f64,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let npu = self.insts[inst - self.inst_base].spec.npu;
+        let id = self.npus[npu - self.npu_base].start(now, stage.demand(), work.max(1e-7));
+        self.tasks.insert((npu, id), kind);
+        self.arm_npu(npu, now, q);
+    }
+
+    /// Pick an instance with the needed stage in this replica via the
+    /// stage-scoped [`BalancePolicy`], from the cached candidate sets and
+    /// the live status table.
+    fn pick_instance(&mut self, need: StageNeed, now: f64) -> usize {
+        if cfg!(debug_assertions) {
+            self.debug_check_table();
+        }
+        let ctx = shard_ctx!(self, now, need);
+        self.balance
+            .pick(&ctx, self.cands.get(self.replica, need))
+            .expect("deployment validated at parse time")
+    }
+
+    /// Is the instance offline reloading stage weights after a role switch?
+    /// (The ns-rounded event clock can land up to half a nanosecond before
+    /// the unrounded deadline, hence the tolerance.)
+    fn offline(&self, inst: usize, now: f64) -> bool {
+        now < self.insts[inst - self.inst_base].offline_until - 1e-9
+    }
+
+    /// Drop a request's live state, keeping only its immutable record.
+    fn retire(&mut self, rid: u64) {
+        let r = self.reqs.remove(&rid).expect("live request");
+        self.records.push((
+            rid,
+            RequestRecord {
+                id: r.spec.id,
+                multimodal: r.spec.is_multimodal(),
+                arrival: r.arrival,
+                ttft: r.ttft(),
+                tpot: r.tpot(),
+                output_tokens: r.spec.output_tokens,
+                finish: r.finish,
+                recomputed: r.recomputed,
+                feature_reused: r.feature_reused,
+            },
+        ));
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic switch mechanics (drain completion side)
+    // ------------------------------------------------------------------
+
+    /// Finish a role switch once the instance has no in-flight work: swap
+    /// the executing role, reshape the KV pool, and take the instance
+    /// offline for the configured reload window.
+    fn complete_switch(&mut self, inst: usize, to: StageSet, now: f64, q: &mut EventQueue<Ev>) {
+        let drain_s = self.shared.cfg.reconfig.drain_s;
+        let kv_bytes_per_token = self.shared.cfg.model.llm.kv_bytes_per_token();
+        let li = inst - self.inst_base;
+        let tp = self.insts[li].spec.tp;
+        let kv_needed = to.decode && self.insts[li].kv.is_none();
+        let kv = kv_needed.then(|| make_kv(&self.shared.cm, kv_bytes_per_token, tp));
+        let i = &mut self.insts[li];
+        i.draining_to = None;
+        i.spec.stages = to;
+        if to.decode {
+            // Keep a resident pool, otherwise install the freshly sized one.
+            i.kv = i.kv.take().or(kv);
+        } else if let Some(kv) = &i.kv {
+            debug_assert_eq!(kv.num_seqs(), 0, "role switch completed with resident sequences");
+            i.kv = None;
+        }
+        debug_assert!(
+            i.decode_active.is_empty() && i.active_ctx == 0,
+            "role switch completed with a non-empty decode batch"
+        );
+        i.offline_until = now + drain_s;
+        let kick_at = i.offline_until;
+        self.sync_status(inst);
+        q.at(kick_at, Ev::Kick { inst });
+    }
+
+    /// Re-transmit the full contexts of `reqs` over the replica's P-D link
+    /// to a freshly chosen decoder. Shared by the switch-time migration of
+    /// decode-waiting sequences and the in-flight `KvDelivered` redirect.
+    fn migrate_kv(&mut self, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let d_inst = self.pick_instance(StageNeed::Decode, now);
+        let bytes: f64 = reqs
+            .iter()
+            .map(|&r| {
+                (self.reqs.get(&r).expect("migrating request is live").ctx_tokens()
+                    * self.shared.cm.model.llm.kv_bytes_per_token()) as f64
+            })
+            .sum();
+        let (_, end) = self.kv_link.enqueue(now, bytes);
+        for &rid in &reqs {
+            self.reqs.get_mut(&rid).expect("migrating request is live").state =
+                ReqState::KvTransfer;
+        }
+        q.at(end, Ev::KvDelivered { reqs, inst: d_inst });
+    }
+
+    /// Called whenever in-flight work completes on a draining instance.
+    fn maybe_complete_switch(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if let Some(to) = self.insts[inst - self.inst_base].draining_to {
+            let i = &self.insts[inst - self.inst_base];
+            if !i.busy && !i.decode_running && i.decode_active.is_empty() {
+                self.complete_switch(inst, to, now, q);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Stage dispatch
+    // ------------------------------------------------------------------
+
+    /// Try to start work on an instance, honoring monolithic serialization:
+    /// a coupled instance runs ONE thing at a time (prefill > encode >
+    /// decode priority, the vLLM-style policy whose interference the paper
+    /// §1 describes); a disaggregated instance only ever has its own stage.
+    fn kick(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        let li = inst - self.inst_base;
+        if self.insts[li].busy || self.offline(inst, now) {
+            return;
+        }
+        let multi_stage = {
+            let s = self.insts[li].spec.stages;
+            (s.encode as u8 + s.prefill as u8 + s.decode as u8) > 1
+        };
+        // On a coupled instance, a running decode step blocks new E/P work
+        // until the step boundary (serial execution).
+        if multi_stage && self.insts[li].decode_running {
+            return;
+        }
+
+        // 1. Prefill.
+        if self.insts[li].spec.stages.prefill && !self.insts[li].prefill_q.is_empty() {
+            let batch = self
+                .batch
+                .form_prefill_batch(&mut self.insts[li].prefill_q, &self.shared.cfg.scheduler);
+            if !batch.is_empty() {
+                let drained: usize = batch.iter().map(|b| b.prompt_tokens).sum();
+                self.insts[li].drained(drained);
+                let mut work = 0.0;
+                let seq_tokens: Vec<usize> = batch.iter().map(|b| b.prompt_tokens).collect();
+                work += self.shared.cm.prefill_time_batch(&seq_tokens);
+                // Fault-tolerant recompute: re-encode missing features
+                // locally before prefill (§3.2).
+                let recompute_tokens: usize = batch.iter().map(|b| b.recompute_tokens).sum();
+                if recompute_tokens > 0 {
+                    work += recompute_cost(&self.shared.cm, recompute_tokens);
+                }
+                let work = self.tp_scale(inst, work, self.shared.cm.model.llm.layers);
+                let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
+                for &r in &reqs {
+                    let req = self.reqs.get_mut(&r).expect("batched request is live");
+                    req.state = ReqState::Prefilling;
+                    req.prefill_start = Some(now);
+                }
+                self.insts[li].busy = true;
+                self.sync_status(inst);
+                self.start_task(
+                    inst,
+                    TaskKind::PrefillBatch { inst, reqs },
+                    StageKind::Prefill,
+                    work,
+                    now,
+                    q,
+                );
+                return;
+            }
+        }
+        // 2. Encode.
+        if self.insts[li].spec.stages.encode && !self.insts[li].encode_q.is_empty() {
+            let batch = self
+                .batch
+                .form_encode_batch(&mut self.insts[li].encode_q, &self.shared.cfg.scheduler);
+            if !batch.is_empty() {
+                let drained: usize = batch.iter().map(|b| b.visual_tokens).sum();
+                self.insts[li].drained(drained);
+                let tokens: usize = batch.iter().map(|b| b.visual_tokens).sum();
+                let work = self.tp_scale(
+                    inst,
+                    self.shared.cm.encode_time(tokens),
+                    self.shared.cm.model.vit.layers,
+                );
+                let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
+                for &r in &reqs {
+                    let req = self.reqs.get_mut(&r).expect("batched request is live");
+                    req.state = ReqState::Encoding;
+                    req.encode_start = Some(now);
+                }
+                self.insts[li].busy = true;
+                self.sync_status(inst);
+                self.start_task(
+                    inst,
+                    TaskKind::EncodeBatch { inst, reqs },
+                    StageKind::Encode,
+                    work,
+                    now,
+                    q,
+                );
+                return;
+            }
+        }
+        // 3. Decode step.
+        self.maybe_start_decode_step(inst, now, q);
+    }
+
+    /// Admit waiting sequences into the decode batch (continuous batching
+    /// + paged-KV admission), FCFS until the batch cap or KV pressure.
+    fn admit_decode(&mut self, inst: usize) {
+        let li = inst - self.inst_base;
+        let quota = self.batch.decode_quota(
+            self.insts[li].decode_active.len(),
+            self.insts[li].decode_waiting.len(),
+            &self.shared.cfg.scheduler,
+        );
+        for _ in 0..quota {
+            let Some(&rid) = self.insts[li].decode_waiting.front() else { break };
+            let (ctx, need) = {
+                let r = self.reqs.get(&rid).expect("waiting request is live");
+                (r.ctx_tokens(), r.ctx_tokens() + r.spec.output_tokens)
+            };
+            let admitted = {
+                let kv = self.insts[li].kv.as_mut().expect("decode instance has KV");
+                if kv.can_admit(need) {
+                    kv.register(rid, ctx).is_ok()
+                } else {
+                    false
+                }
+            };
+            if !admitted {
+                break; // KV pressure: stop admitting until sequences free.
+            }
+            self.insts[li].decode_waiting.pop_front();
+            self.insts[li].decode_active.push(rid);
+            self.insts[li].active_ctx += ctx;
+            self.reqs.get_mut(&rid).expect("admitted request is live").state = ReqState::Decoding;
+        }
+    }
+
+    /// Full-speed work of one decode step over the current batch. Batch
+    /// context comes from the incrementally maintained `active_ctx` sum —
+    /// no per-step walk over the request map (debug builds cross-check).
+    fn decode_step_work(&self, inst: usize) -> f64 {
+        let li = inst - self.inst_base;
+        let batch = self.insts[li].decode_active.len();
+        let total_ctx = self.insts[li].active_ctx;
+        if cfg!(debug_assertions) {
+            let recomputed: usize = self.insts[li]
+                .decode_active
+                .iter()
+                .map(|&r| self.reqs.get(&r).expect("active request is live").ctx_tokens())
+                .sum();
+            assert_eq!(total_ctx, recomputed, "active_ctx counter drifted on instance {inst}");
+        }
+        self.tp_scale(
+            inst,
+            self.shared.cm.decode_step_time(batch, total_ctx),
+            self.shared.cm.model.llm.layers,
+        )
+    }
+
+    fn maybe_start_decode_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        let li = inst - self.inst_base;
+        if !self.insts[li].spec.stages.decode
+            || self.insts[li].decode_running
+            || self.offline(inst, now)
+        {
+            return;
+        }
+        let multi_stage = {
+            let s = self.insts[li].spec.stages;
+            (s.encode as u8 + s.prefill as u8 + s.decode as u8) > 1
+        };
+        if multi_stage && self.insts[li].busy {
+            return;
+        }
+        self.admit_decode(inst);
+        self.sync_status(inst);
+        if self.insts[li].decode_active.is_empty() {
+            return;
+        }
+        // Fast path: on a pure-Decode instance whose NPU is otherwise idle,
+        // fuse token steps inline (no co-located task can change execution
+        // rates mid-step, and any pending event bounds the fusion below).
+        if self.shared.cfg.scheduler.fuse_decode_steps
+            && !multi_stage
+            && self.npus[self.insts[li].spec.npu - self.npu_base].active_tasks() == 0
+        {
+            self.run_decode_macro_step(inst, now, q);
+            return;
+        }
+        let work = self.decode_step_work(inst);
+        self.insts[li].decode_running = true;
+        self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, now, q);
+    }
+
+    /// Execute decode steps inline until the next pending event (or the run
+    /// horizon, or the sharded engine's window bound) could observe the
+    /// NPU, then hand the step in flight back to the event path.
+    ///
+    /// **Macro-stepping invariant** (docs/PERFORMANCE.md): the fused loop
+    /// reproduces the per-token event path bit-exactly — every step end
+    /// lands on the same integer-ns grid [`sec_to_ns`] the event scheduler
+    /// uses, admission and token bookkeeping run at every step boundary
+    /// exactly as the `Kick` handler would, and any step whose completion
+    /// would not strictly precede the earliest pending event (in the
+    /// sharded engine: the earliest shard-local event or the coordination
+    /// epoch that ends the window) is *not* fused but scheduled as a real
+    /// [`PsNpu`] task (so a same-timestamp or mid-step event interleaves —
+    /// and contends — exactly as before).
+    fn run_decode_macro_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        debug_assert_eq!(sec_to_ns(now), q.now_ns(), "macro-step must start at queue time");
+        let npu = self.insts[inst - self.inst_base].spec.npu;
+        let mut cur_ns = q.now_ns();
+        loop {
+            let t = cur_ns as f64 / 1e9;
+            let work = self.decode_step_work(inst).max(1e-7);
+            let end_ns = sec_to_ns(t + work).max(cur_ns);
+            let next_ev = q.next_event_ns().unwrap_or(u64::MAX).min(self.window_ns);
+            if end_ns >= next_ev || end_ns > self.horizon_ns {
+                // A pending event, the window end, or the horizon could
+                // observe this step: run it through the normal task path
+                // instead.
+                self.insts[inst - self.inst_base].decode_running = true;
+                self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, t, q);
+                self.sync_status(inst);
+                return;
+            }
+            let end = end_ns as f64 / 1e9;
+            self.npus[npu - self.npu_base].run_exclusive(t, end, work);
+            self.fused_steps += 1;
+            cur_ns = end_ns;
+            self.finish_decode_step_tokens(inst, end);
+            self.admit_decode(inst);
+            if self.insts[inst - self.inst_base].decode_active.is_empty() {
+                break;
+            }
+        }
+        self.sync_status(inst);
+        self.maybe_complete_switch(inst, cur_ns as f64 / 1e9, q);
+    }
+
+    // ------------------------------------------------------------------
+    // Completions
+    // ------------------------------------------------------------------
+
+    /// Shared tail of an E/P batch completion: complete any pending role
+    /// switch, then deliver the follow-up self-kick — inline when batch
+    /// event fusion is on and no other event is pending at this nanosecond
+    /// (saving the `Kick` heap event), through the event path otherwise.
+    /// A same-nanosecond pending event would fire between the kick's
+    /// scheduling and its delivery in the unfused order, so fusion backs
+    /// off and the orders stay observation-identical (pinned by
+    /// `tests/determinism_golden.rs`).
+    fn finish_batch(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        let nothing_pending_now = match q.next_event_ns() {
+            Some(t) => t > q.now_ns(),
+            None => true,
+        };
+        let fuse = self.shared.cfg.scheduler.fuse_batch_events && nothing_pending_now;
+        if !fuse {
+            q.at(now, Ev::Kick { inst });
+        }
+        self.maybe_complete_switch(inst, now, q);
+        if fuse {
+            self.fused_batch_kicks += 1;
+            self.kick(inst, now, q);
+            self.maybe_start_decode_step(inst, now, q);
+        }
+    }
+
+    fn on_encode_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
+        self.insts[inst - self.inst_base].busy = false;
+        self.sync_status(inst);
+        for rid in reqs {
+            let img = {
+                let r = self.reqs.get_mut(&rid).expect("encoded request is live");
+                r.encode_end = Some(now);
+                r.spec.image.expect("encoded request has an image")
+            };
+            // PUT the feature into this replica's MM-Store partition
+            // (asynchronously — off the critical path under prefetching).
+            self.store.put(
+                img.key,
+                self.shared.cm.feature_bytes(img.visual_tokens),
+                img.visual_tokens,
+            );
+            // Choose the prefill instance (stage-scoped balance policy).
+            let p_inst = self.pick_instance(StageNeed::Prefill, now);
+            self.reqs.get_mut(&rid).expect("encoded request is live").route.push(p_inst);
+            if p_inst == inst {
+                // E and P coupled on the same instance: feature is local.
+                q.at(now, Ev::FeatureReady { req: rid, inst: p_inst });
+            } else {
+                let plan = plan_ep_transfer(
+                    &self.shared.cm,
+                    img.visual_tokens,
+                    self.shared.cfg.scheduler.ep_async_prefetch,
+                );
+                self.reqs.get_mut(&rid).expect("encoded request is live").state =
+                    ReqState::FeatureTransfer;
+                q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: p_inst });
+            }
+        }
+        self.finish_batch(inst, now, q);
+    }
+
+    fn on_feature_ready(&mut self, rid: u64, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        // The target may have been retasked away from Prefill while the
+        // feature was in flight: hand the request to a current prefill
+        // instance instead (the feature travels via the MM Store either way).
+        let inst = if self.dep.instances[inst].stages.prefill {
+            inst
+        } else {
+            self.pick_instance(StageNeed::Prefill, now)
+        };
+        let li = inst - self.inst_base;
+        let local_encode = self.insts[li].spec.stages.encode;
+        let r = self.reqs.get_mut(&rid).expect("transferring request is live");
+        let recompute_tokens = match &r.spec.image {
+            Some(img) => {
+                // Same-instance features are always local; remote fetches may
+                // miss (eviction / injected failure) → local recompute.
+                let local = r.encode_end.is_some()
+                    && r.route.last() == Some(&inst)
+                    && local_encode
+                    && !r.feature_reused;
+                if local && self.store_fail_prob == 0.0 {
+                    0
+                } else if self.store.get(img.key).is_some() {
+                    0
+                } else {
+                    r.recomputed = true;
+                    img.visual_tokens
+                }
+            }
+            None => 0,
+        };
+        r.state = ReqState::PrefillQueued;
+        let item = PrefillItem {
+            req: rid,
+            prompt_tokens: r.spec.prompt_tokens(),
+            recompute_tokens,
+        };
+        self.insts[li].push_prefill(item);
+        self.sync_status(inst);
+        q.at(now, Ev::Kick { inst });
+    }
+
+    fn on_prefill_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
+        self.insts[inst - self.inst_base].busy = false;
+        self.sync_status(inst);
+        // Split the batch by destination decode instance. BTreeMap: the
+        // delivery order below reaches the replica's FIFO KV link, so it
+        // must be deterministic.
+        let mut by_dst: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        for rid in &reqs {
+            // A feature recomputed during this prefill (§3.2 fallback —
+            // store miss after a cross-partition route, eviction, or
+            // injected failure) now exists on this replica: PUT it into the
+            // local partition so repeats of a hot key stop recomputing here.
+            let recomputed_img = {
+                let r = self.reqs.get(rid).expect("prefilled request is live");
+                if r.recomputed {
+                    r.spec.image
+                } else {
+                    None
+                }
+            };
+            if let Some(img) = recomputed_img {
+                self.store.put(
+                    img.key,
+                    self.shared.cm.feature_bytes(img.visual_tokens),
+                    img.visual_tokens,
+                );
+            }
+            self.reqs.get_mut(rid).expect("prefilled request is live").prefill_end = Some(now);
+            let d_inst = if self.insts[inst - self.inst_base].spec.stages.decode {
+                inst // PD coupled: no transfer.
+            } else {
+                self.pick_instance(StageNeed::Decode, now)
+            };
+            self.reqs.get_mut(rid).expect("prefilled request is live").route.push(d_inst);
+            by_dst.entry(d_inst).or_default().push(*rid);
+        }
+        for (d_inst, rids) in by_dst {
+            if d_inst == inst {
+                // Local handoff: first token is the prefill output (Eq. 2).
+                for &rid in &rids {
+                    let r = self.reqs.get_mut(&rid).expect("prefilled request is live");
+                    r.first_token = Some(now);
+                    r.state = ReqState::AwaitAdmission;
+                    self.insts[d_inst - self.inst_base].decode_waiting.push_back(rid);
+                }
+                self.sync_status(inst);
+                q.at(now, Ev::Kick { inst: d_inst });
+            } else {
+                // P→D KV transmission: the planner gives the exposed residue;
+                // the replica's shared FIFO link serializes it across
+                // concurrent prefill batches (congestion under load).
+                let avg_tokens = (rids
+                    .iter()
+                    .map(|&r| self.reqs.get(&r).expect("prefilled request is live").ctx_tokens())
+                    .sum::<usize>()
+                    / rids.len())
+                .max(1);
+                let plan = plan_kv_transmission(
+                    &self.shared.cm,
+                    self.shared.cfg.scheduler.pd_mode,
+                    rids.len(),
+                    avg_tokens,
+                    self.shared.cfg.scheduler.kv_group_layers,
+                );
+                let exposed_bytes = if plan.kv_latency > 0.0 {
+                    plan.kv_bytes * plan.exposed / plan.kv_latency
+                } else {
+                    0.0
+                };
+                let delivered = if exposed_bytes > 0.0 {
+                    let (_, end) = self.kv_link.enqueue(now, exposed_bytes);
+                    end
+                } else {
+                    now
+                };
+                for &rid in &rids {
+                    self.reqs.get_mut(&rid).expect("prefilled request is live").state =
+                        ReqState::KvTransfer;
+                }
+                q.at(delivered, Ev::KvDelivered { reqs: rids, inst: d_inst });
+            }
+        }
+        self.finish_batch(inst, now, q);
+    }
+
+    fn on_kv_delivered(&mut self, reqs: Vec<u64>, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        if !self.dep.instances[inst].stages.decode {
+            // The target was retasked away from Decode while the KV was in
+            // flight: re-transmit the contexts over the replica link to an
+            // adopting decoder.
+            self.migrate_kv(reqs, now, q);
+            return;
+        }
+        for rid in reqs {
+            // First token visible once the decode instance owns the context
+            // (disaggregated-path TTFT semantics, matching Table 2's
+            // sensitivity of TTFT to KV transmission). A migrated sequence
+            // keeps its original first-token time.
+            let r = self.reqs.get_mut(&rid).expect("delivered request is live");
+            if r.first_token.is_none() {
+                r.first_token = Some(now);
+            }
+            r.state = ReqState::AwaitAdmission;
+            self.insts[inst - self.inst_base].decode_waiting.push_back(rid);
+        }
+        self.sync_status(inst);
+        q.at(now, Ev::Kick { inst });
+    }
+
+    /// Post-step bookkeeping shared by the event path and the fused
+    /// macro-step path: every active sequence gains one token; finished
+    /// sequences free their KV and retire to the record list.
+    fn finish_decode_step_tokens(&mut self, inst: usize, now: f64) {
+        let li = inst - self.inst_base;
+        let active = std::mem::take(&mut self.insts[li].decode_active);
+        // Every member generated one token, growing its context by one.
+        self.insts[li].active_ctx += active.len();
+        let mut still = Vec::with_capacity(active.len());
+        for rid in active {
+            let (finished, ctx_now) = {
+                let r = self.reqs.get_mut(&rid).expect("active request is live");
+                r.tokens_generated += 1;
+                if r.tokens_generated == 1 && r.first_token.is_none() {
+                    r.first_token = Some(now);
+                }
+                (r.tokens_generated >= r.spec.output_tokens, r.ctx_tokens())
+            };
+            if finished {
+                {
+                    let r = self.reqs.get_mut(&rid).expect("active request is live");
+                    r.finish = Some(now);
+                    r.state = ReqState::Finished;
+                }
+                self.done += 1;
+                self.insts[li].active_ctx -= ctx_now;
+                let kv = self.insts[li].kv.as_mut().expect("decode instance");
+                kv.free(rid).expect("active sequence registered");
+                self.retire(rid);
+            } else {
+                let kv = self.insts[li].kv.as_mut().expect("decode instance");
+                // Grow KV by the generated token; admission reserved room.
+                kv.append(rid, 1).expect("admission reserved growth room");
+                still.push(rid);
+            }
+        }
+        self.insts[li].decode_active = still;
+    }
+
+    fn on_decode_step_done(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        self.insts[inst - self.inst_base].decode_running = false;
+        self.finish_decode_step_tokens(inst, now);
+        self.sync_status(inst);
+        q.at(now, Ev::Kick { inst });
+        self.maybe_complete_switch(inst, now, q);
+    }
+
+    fn on_npu_check(&mut self, npu: usize, epoch: u64, now: f64, q: &mut EventQueue<Ev>) {
+        let ln = npu - self.npu_base;
+        if self.npus[ln].epoch != epoch {
+            return; // stale
+        }
+        if let Some((t, id)) = self.npus[ln].next_completion(now) {
+            if t <= now + 1e-9 {
+                self.npus[ln].finish(now, id);
+                let kind = self.tasks.remove(&(npu, id)).expect("task registered");
+                match kind {
+                    TaskKind::EncodeBatch { inst, reqs } => self.on_encode_done(inst, reqs, now, q),
+                    TaskKind::PrefillBatch { inst, reqs } => {
+                        self.on_prefill_done(inst, reqs, now, q)
+                    }
+                    TaskKind::DecodeStep { inst } => self.on_decode_step_done(inst, now, q),
+                }
+            }
+            self.arm_npu(npu, now, q);
+        }
+    }
+}
+
+/// Shard events drive the shard directly; the two coordination events are
+/// the coordinator's and must never reach a shard.
+impl SimModel for ReplicaShard {
+    type Event = Ev;
+
+    fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
+        match ev {
+            Ev::FeatureReady { req, inst } => self.on_feature_ready(req, inst, now, q),
+            Ev::NpuCheck { npu, epoch } => self.on_npu_check(npu, epoch, now, q),
+            Ev::KvDelivered { reqs, inst } => self.on_kv_delivered(reqs, inst, now, q),
+            Ev::Kick { inst } => {
+                self.kick(inst, now, q);
+                // A freed coupled instance may also resume decode.
+                self.maybe_start_decode_step(inst, now, q);
+            }
+            Ev::Arrive(_) | Ev::ReconfigTick => {
+                unreachable!("coordination events are handled at the coordination boundary")
+            }
+        }
+    }
+}

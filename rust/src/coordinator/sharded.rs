@@ -1,0 +1,429 @@
+//! Sharded multi-replica execution engine: per-replica event loops on
+//! worker threads with a deterministic merge at the coordination boundary.
+//!
+//! ## Execution model
+//!
+//! The serving simulation decomposes exactly along replica lines
+//! ([`crate::coordinator::shard`]): every event except `Arrive` and
+//! `ReconfigTick` is shard-local, and shard handlers never touch another
+//! shard's state. This engine exploits that: each [`ReplicaShard`] gets its
+//! own [`EventQueue`] and advances on a worker thread, while the
+//! coordinator thread drains a tiny coordination queue (one pending
+//! arrival + the reconfiguration ticker) and imposes a
+//! **conservative-time barrier** per coordination event:
+//!
+//! 1. Let `T` be the next coordination event's integer-ns timestamp.
+//! 2. Every shard with pending events strictly earlier than `T` runs —
+//!    in parallel — until its queue head reaches `T` (exclusive).
+//! 3. The coordinator handles the event at `T`: routing an arrival against
+//!    the assembled status table / cross-partition residency (injecting
+//!    follow-up events into the target shard's queue), or evaluating a
+//!    reconfiguration epoch over collected shard loads.
+//! 4. Repeat; when no coordination event remains inside the horizon, one
+//!    final parallel round drains everything up to the horizon inclusive.
+//!
+//! ## Why this is bit-identical to the single loop
+//!
+//! The single loop merges all events by `(time, class, seq)`, classes
+//! ordered arrival < control < normal. Coordination events are exclusively
+//! arrival/control class, so at any timestamp `T` they order **before**
+//! every same-`T` shard event — the coordinator at `T` observes exactly
+//! "all shard events with time < `T` applied", which is what step 2
+//! reproduces. Between coordination events, same-timestamp normal events
+//! in different shards commute (disjoint state), and within one shard the
+//! local queue preserves the single loop's relative order (same
+//! scheduling order ⇒ same sequence order). Cross-replica ties at the
+//! barrier itself are resolved replica-id-major (loads and status rows are
+//! collected in replica order), matching the single loop's
+//! instance-index-major layout. The remaining coupling — stateful balance
+//! policies — is scope-keyed by contract ([`PickScope`]), making the
+//! router/shard policy-instance partition equivalent to the single shared
+//! instance. `tests/determinism_golden.rs` pins sharded ≡ single-loop
+//! per-request records for every policy combination, under elastic
+//! re-provisioning, and at both fusion settings.
+//!
+//! Event *counts* may differ across engines (fusion fallback points depend
+//! on which queue a bound comes from — see the macro-stepping invariant);
+//! records, switch histories, link/store statistics do not.
+//!
+//! [`PickScope`]: crate::coordinator::policy::PickScope
+
+use crate::coordinator::router::Route;
+use crate::coordinator::shard::{Ev, ReplicaShard};
+use crate::coordinator::simserve::{ServingSim, SimOutcome};
+use crate::sim::engine::{self, EventQueue};
+use crate::workload::ArrivedRequest;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Coordination events, drained by the coordinator thread between rounds.
+/// Mirrors the single loop's `Ev::Arrive` / `Ev::ReconfigTick` with the
+/// same event classes, so the merge order at equal timestamps is
+/// identical (arrivals before ticks).
+enum CoordEv {
+    Arrive(ArrivedRequest),
+    Tick,
+}
+
+/// One shard plus its private event queue — the unit shipped to workers.
+struct ShardSlot {
+    shard: ReplicaShard,
+    q: EventQueue<Ev>,
+}
+
+/// A round's work order for one shard: run every event strictly below
+/// `window_ns`.
+struct Job {
+    idx: usize,
+    slot: ShardSlot,
+    window_ns: u64,
+}
+
+/// Fixed worker pool over a shared job channel. Shards move to workers by
+/// value (a pointer-sized send) and come home every round, so the
+/// coordinator has exclusive access at every barrier without locks on the
+/// shard state itself. A panic inside a shard handler (e.g. a debug-build
+/// invariant check) is caught and re-raised on the coordinator thread —
+/// a silently dead worker would deadlock the barrier.
+struct WorkerPool {
+    job_tx: Sender<Job>,
+    done_rx: Receiver<Result<Job, String>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn spawn(workers: usize) -> Self {
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (done_tx, done_rx) = channel::<Result<Job, String>>();
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = done_tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                // Take one job (the lock guards only the recv, not the run).
+                let job = {
+                    let guard = rx.lock().expect("job channel lock");
+                    guard.recv()
+                };
+                let Ok(job) = job else { return };
+                // The shard is moved into the closure; on panic it is lost,
+                // but the coordinator re-raises and the run is over anyway.
+                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                    let mut job = job;
+                    engine::run_window(&mut job.slot.shard, &mut job.slot.q, job.window_ns);
+                    job
+                }));
+                let out = ran.map_err(|p| {
+                    p.downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "shard worker panicked".to_string())
+                });
+                if tx.send(out).is_err() {
+                    return;
+                }
+            }));
+        }
+        Self { job_tx, done_rx, handles }
+    }
+
+    fn shutdown(self) {
+        drop(self.job_tx);
+        drop(self.done_rx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Advance every shard with pending work through `[.., window_ns)`. A
+/// single busy shard runs inline on the coordinator thread (no channel
+/// round-trip — the common case at low replica counts or sparse load).
+fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64) {
+    let due: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            s.as_ref()
+                .expect("slot home between rounds")
+                .q
+                .next_event_ns()
+                .is_some_and(|t| t < window_ns)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    if due.len() <= 1 {
+        if let Some(&i) = due.first() {
+            let slot = slots[i].as_mut().expect("slot home");
+            slot.shard.set_window(window_ns);
+            engine::run_window(&mut slot.shard, &mut slot.q, window_ns);
+        }
+        return;
+    }
+    let n = due.len();
+    for i in due {
+        let mut slot = slots[i].take().expect("slot home");
+        slot.shard.set_window(window_ns);
+        pool.job_tx.send(Job { idx: i, slot, window_ns }).expect("worker pool alive");
+    }
+    for _ in 0..n {
+        match pool.done_rx.recv().expect("worker pool alive") {
+            Ok(job) => slots[job.idx] = Some(job.slot),
+            Err(msg) => panic!("shard worker panicked: {msg}"),
+        }
+    }
+}
+
+fn done_total(slots: &[Option<ShardSlot>]) -> usize {
+    slots.iter().map(|s| s.as_ref().expect("slot home").shard.done_count()).sum()
+}
+
+impl ServingSim {
+    /// Run to completion (or the horizon) on the sharded multi-replica
+    /// engine: per-replica event loops on worker threads, coupled only at
+    /// arrival/reconfiguration epochs. Per-request records are
+    /// bit-identical to [`ServingSim::run`].
+    pub fn run_sharded(mut self) -> SimOutcome {
+        let horizon = self.last_arrival + 3600.0;
+        let horizon_ns = engine::horizon_ns(horizon).unwrap_or(0);
+        for s in &mut self.shards {
+            s.set_horizon(horizon_ns);
+        }
+        let replicas = self.shards.len();
+        let workers = {
+            let configured = self.shared.cfg.simulator.shard_threads;
+            let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            if configured == 0 { replicas.min(avail) } else { configured.min(replicas) }.max(1)
+        };
+
+        let mut cq: EventQueue<CoordEv> = EventQueue::new();
+        match self.source.next() {
+            Some(first) => cq.at_arrival(first.arrival, CoordEv::Arrive(first)),
+            None => self.stream_done = true,
+        }
+        let mut ticker = self.ticker.take();
+        if let Some(t) = &mut ticker {
+            t.arm(&mut cq, CoordEv::Tick);
+        }
+
+        let mut slots: Vec<Option<ShardSlot>> = self
+            .shards
+            .drain(..)
+            .map(|shard| Some(ShardSlot { shard, q: EventQueue::new() }))
+            .collect();
+        let pool = WorkerPool::spawn(workers);
+
+        loop {
+            if self.stream_done && done_total(&slots) == self.arrived {
+                break;
+            }
+            let (window_ns, coord_due) = match cq.next_event_ns() {
+                Some(t) if t <= horizon_ns => (t, true),
+                // No coordination event inside the horizon: one final
+                // parallel round drains everything (horizon-inclusive,
+                // like the single loop's `run` bound).
+                _ => (horizon_ns.saturating_add(1), false),
+            };
+            run_round(&pool, &mut slots, window_ns);
+            if !coord_due {
+                break;
+            }
+            // Re-check after the round: the single loop stops at the
+            // finishing event and never handles later-queued coordination
+            // events.
+            if self.stream_done && done_total(&slots) == self.arrived {
+                break;
+            }
+            let (now, ev) = cq.pop_next().expect("coordination event due");
+            // The two arms below MUST stay in lockstep with the single
+            // loop's `ServingSim::on_arrive` / `on_reconfig_tick` — same
+            // steps in the same order, differing only in slots-vs-shards
+            // access (shards live outside `self` here, so the handlers
+            // cannot be shared without borrow gymnastics). The
+            // determinism_golden sharded layers exist to catch drift.
+            match ev {
+                CoordEv::Arrive(arrived) => {
+                    let rid = self.arrived as u64;
+                    self.arrived += 1;
+                    let spec = arrived.spec;
+                    let resident = spec
+                        .image
+                        .as_ref()
+                        .map(|i| {
+                            slots.iter().any(|s| {
+                                s.as_ref().expect("slot home").shard.feature_resident(i.key)
+                            })
+                        })
+                        .unwrap_or(false);
+                    for s in slots.iter_mut() {
+                        s.as_mut().expect("slot home").shard.flush_rows(&mut self.router_table);
+                    }
+                    if cfg!(debug_assertions) {
+                        for s in slots.iter() {
+                            s.as_ref().expect("slot home").shard.debug_check_table();
+                        }
+                    }
+                    let route = self.route_one(&spec, resident, now);
+                    let target = match route {
+                        Route::Encode(i) => i,
+                        Route::Prefill { instance, .. } => instance,
+                    };
+                    let r = self.inst_replica[target];
+                    let slot = slots[r].as_mut().expect("slot home");
+                    slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
+                    match self.source.next() {
+                        Some(next) => cq.at_arrival(next.arrival, CoordEv::Arrive(next)),
+                        None => self.stream_done = true,
+                    }
+                }
+                CoordEv::Tick => {
+                    let mut loads = Vec::with_capacity(self.inst_replica.len());
+                    for s in slots.iter() {
+                        s.as_ref().expect("slot home").shard.collect_loads(now, &mut loads);
+                    }
+                    if let Some(plan) = self.plan_reconfig(now, &loads) {
+                        let slot = slots[plan.replica].as_mut().expect("slot home");
+                        slot.shard.apply_switch(&plan, now, &mut slot.q);
+                        self.reconfigurer.as_mut().expect("controller").committed(now, &plan);
+                    }
+                    ticker.as_mut().expect("tick implies ticker").arm(&mut cq, CoordEv::Tick);
+                }
+            }
+        }
+        pool.shutdown();
+
+        // Reassemble shards for the shared report path; total events =
+        // coordination queue + every shard queue.
+        let mut end = cq.now();
+        let mut events = cq.processed();
+        for slot in slots {
+            let slot = slot.expect("slot home");
+            end = end.max(slot.q.now());
+            events += slot.q.processed();
+            self.shards.push(slot.shard);
+        }
+        self.ticker = ticker;
+        self.finish(end, events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::simserve::run_serving;
+
+    fn cfg(deployment: &str, rate: f64, n: usize) -> Config {
+        let mut c = Config::default();
+        c.deployment = deployment.to_string();
+        c.rate = rate;
+        c.workload.num_requests = n;
+        c
+    }
+
+    fn pair(c: &Config) -> (SimOutcome, SimOutcome) {
+        let single = ServingSim::streamed(c.clone()).unwrap().run();
+        let sharded = ServingSim::streamed(c.clone()).unwrap().run_sharded();
+        (single, sharded)
+    }
+
+    fn assert_equiv(c: &Config, label: &str) {
+        let (single, sharded) = pair(c);
+        assert_eq!(
+            single.metrics.records, sharded.metrics.records,
+            "{label}: sharded records must be bit-identical to the single loop"
+        );
+        assert_eq!(single.reconfig_switches, sharded.reconfig_switches, "{label}: switches");
+        assert_eq!(single.store_stats, sharded.store_stats, "{label}: store stats");
+        assert_eq!(single.kv_link_stats, sharded.kv_link_stats, "{label}: link stats");
+    }
+
+    #[test]
+    fn sharded_matches_single_loop_across_deployments() {
+        for dep in ["E-P-D", "E-P-Dx2", "(E-PD)x2", "E-P-D-Dx3", "TP1x2"] {
+            assert_equiv(&cfg(dep, 3.0, 48), dep);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_single_loop_under_load_skew() {
+        let mut c = cfg("E-P-Dx4", 12.0, 96);
+        c.workload.output_tokens = 96;
+        assert_equiv(&c, "E-P-Dx4 loaded");
+    }
+
+    #[test]
+    fn sharded_matches_under_stateful_and_affinity_policies() {
+        let mut c = cfg("E-P-Dx2", 4.0, 64);
+        c.scheduler.balance_policy = "round_robin".to_string();
+        assert_equiv(&c, "round_robin");
+        c.scheduler.balance_policy = "least_loaded".to_string();
+        c.scheduler.route_policy = "cache_affinity".to_string();
+        c.workload.image_reuse = 0.4;
+        assert_equiv(&c, "cache_affinity");
+        c.scheduler.route_policy = "slo_aware".to_string();
+        c.scheduler.batch_policy = "sjf_prefill".to_string();
+        assert_equiv(&c, "slo_aware/sjf");
+    }
+
+    #[test]
+    fn sharded_matches_with_fusion_off() {
+        let mut c = cfg("E-P-Dx2", 3.0, 48);
+        c.scheduler.fuse_decode_steps = false;
+        c.scheduler.fuse_batch_events = false;
+        assert_equiv(&c, "unfused");
+    }
+
+    #[test]
+    fn sharded_matches_under_elastic_reprovisioning() {
+        use crate::workload::phases::PhasePlan;
+        let mut c = Config::default();
+        c.deployment = "E-P-D-Dx2".to_string();
+        c.scheduler.max_encode_batch = 2;
+        c.reconfig.enabled = true;
+        c.reconfig.min_backlog_tokens = 6144;
+        let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+        let single = ServingSim::phased(c.clone(), &plan).unwrap().run();
+        let sharded = ServingSim::phased(c, &plan).unwrap().run_sharded();
+        assert_eq!(single.metrics.records, sharded.metrics.records);
+        assert_eq!(single.reconfig_switches, sharded.reconfig_switches);
+        assert!(
+            !single.reconfig_switches.is_empty(),
+            "scenario must actually exercise elastic switches"
+        );
+    }
+
+    #[test]
+    fn sharded_matches_with_store_failures() {
+        let c = cfg("E-P-Dx2", 2.0, 32);
+        let single = ServingSim::streamed(c.clone()).unwrap().with_store_failures(1.0).run();
+        let sharded =
+            ServingSim::streamed(c).unwrap().with_store_failures(1.0).run_sharded();
+        assert_eq!(single.metrics.records, sharded.metrics.records);
+        assert!(single.metrics.records.iter().any(|r| r.recomputed));
+    }
+
+    #[test]
+    fn sharded_is_deterministic_across_runs_and_thread_counts() {
+        let mut c = cfg("E-P-Dx4", 8.0, 64);
+        let a = ServingSim::streamed(c.clone()).unwrap().run_sharded();
+        let b = ServingSim::streamed(c.clone()).unwrap().run_sharded();
+        assert_eq!(a.metrics.records, b.metrics.records);
+        assert_eq!(a.events_processed, b.events_processed);
+        // Worker-thread count is a pure throughput knob.
+        c.simulator.shard_threads = 1;
+        let serial = ServingSim::streamed(c).unwrap().run_sharded();
+        assert_eq!(a.metrics.records, serial.metrics.records);
+    }
+
+    #[test]
+    fn config_knob_selects_the_sharded_engine() {
+        let mut c = cfg("E-P-Dx2", 3.0, 32);
+        let single = run_serving(&c).unwrap();
+        c.simulator.sharded = true;
+        let sharded = run_serving(&c).unwrap();
+        assert_eq!(single.metrics.records, sharded.metrics.records);
+    }
+}

@@ -4,10 +4,10 @@
 //! Everything the paper describes composes here:
 //!
 //! * Deployment topologies ([`Deployment`]) place stage **instances** on
-//!   processor-shared **NPUs** ([`PsNpu`]) — co-located instances multiplex
-//!   spatially per the Fig 6 interference law; monolithic (coupled)
-//!   instances execute their stages serially, reproducing the baseline's
-//!   stage-coupling interference.
+//!   processor-shared **NPUs** ([`crate::sim::psnpu::PsNpu`]) — co-located
+//!   instances multiplex spatially per the Fig 6 interference law;
+//!   monolithic (coupled) instances execute their stages serially,
+//!   reproducing the baseline's stage-coupling interference.
 //! * Every scheduling decision dispatches through the **pluggable policy
 //!   layer** ([`crate::coordinator::policy`]), selected by the
 //!   `[scheduler]` `route_policy`/`balance_policy`/`batch_policy` config
@@ -23,25 +23,44 @@
 //!   the congestion the paper's grouped mode avoids.
 //! * **Decode** runs continuous batching with paged-KV admission control.
 //! * When [`crate::config::ReconfigSpec::enabled`] is set, a periodic
-//!   **elastic re-provisioning** tick ([`crate::coordinator::reconfig`])
-//!   watches stage imbalance and retasks instances at runtime: the donor's
-//!   queues drain, waiting requests migrate over the standing E-P (MM-Store
-//!   re-fetch) and P-D (KV link re-transmission) paths, the router's
-//!   candidate sets update immediately, and in-flight decode sequences
-//!   finish on the old role before the instance reloads into the new one
-//!   (an overlapped transition).
+//!   **elastic re-provisioning** epoch ([`crate::coordinator::reconfig`])
+//!   watches stage imbalance and retasks instances at runtime through the
+//!   configured [`crate::coordinator::policy::ReconfigPolicy`].
 //!
 //! The simulation is deterministic under the config seed.
 //!
+//! ## Sharded architecture (multi-replica refactor)
+//!
+//! Since the per-replica sharding refactor, `ServingSim` is a
+//! **coordinator** over [`ReplicaShard`]s: each shard owns one replica's
+//! instances, NPUs, KV link, MM-Store partition, live requests, and
+//! stage-scoped policy state, and handles every shard-local event
+//! ([`crate::coordinator::shard`]). The coordinator owns what genuinely
+//! couples replicas — the arrival source, the router (entry-scoped
+//! policies + the assembled global status table + the cross-partition
+//! residency probe), and the elastic-reconfiguration controller — and
+//! touches shards only at **coordination events** (`Arrive`,
+//! `ReconfigTick`).
+//!
+//! Two engines drive the same shard code:
+//!
+//! * [`ServingSim::run`] — the single-loop reference: one global event
+//!   queue, coordination events interleaved in `(time, class, seq)` merge
+//!   order;
+//! * [`ServingSim::run_sharded`] — per-shard queues on worker threads with
+//!   a conservative-time barrier at every coordination event
+//!   ([`crate::coordinator::sharded`]), bit-identical per-request records
+//!   (pinned by `tests/determinism_golden.rs`).
+//!
 //! ## Hot-path architecture (million-request overhaul)
 //!
-//! Four structural decisions keep a 1M-request trace in the
+//! Five structural decisions keep a 1M-request trace in the
 //! seconds-of-wall-clock range (`docs/PERFORMANCE.md` has measurements and
 //! invariants; `tests/determinism_golden.rs` proves all of them
 //! record-bit-identical to the straightforward implementations):
 //!
 //! 1. **Incremental status table** — every queue/KV mutation pushes the
-//!    owning instance's [`InstanceStatus`]; routing reads the table
+//!    owning instance's status row; routing reads the assembled table
 //!    directly instead of rebuilding it per decision. Debug builds
 //!    cross-check the table against recomputed ground truth on every pick.
 //! 2. **Cached candidate sets** — per-replica encode/prefill/decode
@@ -50,160 +69,53 @@
 //! 3. **Fused decode macro-steps** — on a pure-Decode instance whose NPU is
 //!    otherwise idle, token steps run inline until the next pending event
 //!    (or the run horizon) could observe the NPU, instead of one
-//!    `NpuCheck` + `Kick` heap round-trip per token. A step that could
-//!    overlap a pending event falls back to the event path, so mid-step
-//!    co-location interference stays possible exactly as before.
-//! 4. **Streamed arrivals** — requests are pulled lazily from an
+//!    `NpuCheck` + `Kick` heap round-trip per token.
+//! 4. **Fused batch events** — an E/P batch completion runs its follow-up
+//!    kick inline when no other event is pending at the same nanosecond
+//!    (`scheduler.fuse_batch_events`), collapsing the per-batch
+//!    `NpuCheck`+`Kick` pair into one event.
+//! 5. **Streamed arrivals** — requests are pulled lazily from an
 //!    [`ArrivalSource`] with one pending arrival-class event at a time;
 //!    live request state is dropped to a compact record at finish, keeping
 //!    memory O(in-flight) rather than O(trace).
 
 use crate::config::Config;
-use crate::coordinator::balancer::{InstanceStatus, StatusTable};
-use crate::coordinator::batcher::{EncodeItem, PrefillItem};
-use crate::coordinator::deployment::{Deployment, InstanceSpec, StageSet};
+use crate::coordinator::balancer::StatusTable;
+use crate::coordinator::deployment::Deployment;
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
-use crate::coordinator::policy::{PolicyCtx, PolicySet, StageCands, StageNeed};
-use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchPlan, SwitchRecord};
-use crate::coordinator::request::{ReqState, Request};
+use crate::coordinator::policy::{
+    make_balance_policy, make_route_policy, BalancePolicy, PickScope, PolicyCtx, RoutePolicy,
+    StageCands,
+};
+use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchRecord};
 use crate::coordinator::router::Route;
-use crate::kvcache::{BlockAllocator, KvManager};
-use crate::mmstore::MmStore;
-use crate::npu::{CostModel, StageKind};
-use crate::sim::engine::{self, sec_to_ns, EventQueue, SimModel, Ticker};
-use crate::sim::psnpu::{PsNpu, TaskId};
-use crate::transport::ep::{plan_ep_transfer, recompute_cost};
-use crate::transport::link::Link;
-use crate::transport::pd::plan_kv_transmission;
+use crate::coordinator::shard::{ReplicaShard, SimShared};
+use crate::mmstore::StoreStats;
+use crate::npu::CostModel;
+use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::workload::injector::Arrival;
 use crate::workload::stream::{ArrivalSource, WorkloadStream};
-use crate::workload::ArrivedRequest;
+use crate::workload::{ArrivedRequest, RequestSpec};
 use anyhow::Result;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Arc;
 
-/// Tensor-parallel execution efficiency (fraction of linear scaling
-/// achieved) and per-layer synchronization cost — why TP2 loses (§4.3:
-/// "inter-NPU synchronization overhead severely degrades performance").
-const TP_EFFICIENCY: f64 = 0.85;
-const TP_ALLREDUCE_S_PER_LAYER: f64 = 0.5e-3;
-
-/// One stage instance's live state.
-struct Inst {
-    spec: InstanceSpec,
-    encode_q: VecDeque<EncodeItem>,
-    prefill_q: VecDeque<PrefillItem>,
-    /// Sequences whose KV arrived, waiting for a decode-batch slot.
-    decode_waiting: VecDeque<u64>,
-    decode_active: Vec<u64>,
-    kv: Option<KvManager>,
-    /// An encode/prefill task is running (serializes the instance).
-    busy: bool,
-    decode_running: bool,
-    /// Incrementally maintained Σ tokens of queued work (avoids an O(queue)
-    /// scan on every status-table update — see docs/PERFORMANCE.md).
-    pending_tokens: usize,
-    /// Incrementally maintained Σ `ctx_tokens` over `decode_active` (avoids
-    /// an O(batch) request-map walk per decode step: +ctx on admission,
-    /// +batch per step, −ctx on finish).
-    active_ctx: usize,
-    /// Elastic switch in progress: the role this instance will assume once
-    /// its in-flight work drains (new arrivals already route per the new
-    /// role; the reload happens at drain completion).
-    draining_to: Option<StageSet>,
-    /// Until this time the instance is offline reloading stage weights
-    /// after a completed role switch.
-    offline_until: f64,
-}
-
-impl Inst {
-    fn queue_len(&self) -> usize {
-        self.encode_q.len() + self.prefill_q.len() + self.decode_waiting.len()
-    }
-
-    fn push_encode(&mut self, item: EncodeItem) {
-        self.pending_tokens += item.visual_tokens;
-        self.encode_q.push_back(item);
-    }
-
-    fn push_prefill(&mut self, item: PrefillItem) {
-        self.pending_tokens += item.prompt_tokens;
-        self.prefill_q.push_back(item);
-    }
-
-    fn drained(&mut self, tokens: usize) {
-        self.pending_tokens = self.pending_tokens.saturating_sub(tokens);
-    }
-
-    /// The status-table row this instance's current state implies.
-    fn status(&self) -> InstanceStatus {
-        InstanceStatus {
-            queue_len: self.queue_len(),
-            active: self.decode_active.len() + usize::from(self.busy),
-            pending_tokens: self.pending_tokens,
-            kv_utilization: self.kv.as_ref().map_or(0.0, |k| k.utilization()),
-        }
-    }
-}
-
-/// Size a decode instance's paged-KV pool — one formula shared by boot-time
-/// construction and elastic switches into the decode role.
-fn make_kv(cm: &CostModel, kv_bytes_per_token: usize, tp: usize) -> KvManager {
-    let cap = cm.kv_capacity_bytes(1.0 / tp as f64) * tp as f64;
-    KvManager::new(BlockAllocator::for_capacity(cap, kv_bytes_per_token, 16))
-}
-
-/// Construct the policy world view from disjoint field borrows (a method
-/// returning `PolicyCtx` would borrow all of `self` and conflict with the
-/// `&mut` the policy objects need).
-macro_rules! policy_ctx {
-    ($self:ident, $now:expr) => {
-        PolicyCtx {
-            table: &$self.table,
-            dep: &$self.dep,
-            cands: &$self.cands,
-            store: Some(&$self.store),
-            scheduler: &$self.cfg.scheduler,
-            slo: &$self.cfg.slo,
-            now: $now,
-            prefill_tok_s: $self.prefill_tok_s,
-            encode_tok_s: $self.encode_tok_s,
-        }
-    };
-}
-
-/// Work executing on an NPU.
-enum TaskKind {
-    EncodeBatch { inst: usize, reqs: Vec<u64> },
-    PrefillBatch { inst: usize, reqs: Vec<u64> },
-    DecodeStep { inst: usize },
-}
-
-/// Simulation events.
 #[doc(hidden)]
-pub enum Ev {
-    /// A request enters the system (arrival-class: the serving loop keeps
-    /// exactly one pending arrival and schedules the next on delivery).
-    Arrive(ArrivedRequest),
-    /// Feature available (or found missing) at the prefill instance.
-    FeatureReady { req: u64, inst: usize },
-    /// A task may have completed on this NPU (stale if epoch mismatches).
-    NpuCheck { npu: usize, epoch: u64 },
-    /// KV for these requests delivered to a decode instance.
-    KvDelivered { reqs: Vec<u64>, inst: usize },
-    /// Try to start work on an instance.
-    Kick { inst: usize },
-    /// Periodic elastic re-provisioning controller tick.
-    ReconfigTick,
-}
+pub use crate::coordinator::shard::Ev;
 
 /// Outcome of a simulated serving run.
 pub struct SimOutcome {
     pub metrics: RunMetrics,
-    pub store_stats: crate::mmstore::StoreStats,
+    /// Aggregate MM-Store statistics over all replica partitions.
+    pub store_stats: StoreStats,
+    /// Total events processed (single loop: the global queue; sharded:
+    /// coordination queue + every shard queue).
     pub events_processed: u64,
     /// Decode steps executed inline by the macro-stepping fast path (each
     /// saved one `NpuCheck` + one `Kick` heap event).
     pub fused_decode_steps: u64,
+    /// E/P batch completions whose follow-up kick ran inline
+    /// (`scheduler.fuse_batch_events`; one `Kick` heap event saved each).
+    pub fused_batch_kicks: u64,
     pub npu_utilization: Vec<f64>,
     pub kv_link_stats: Vec<(f64, f64)>, // (bytes carried, busy time) per replica
     /// Elastic role switches committed during the run (empty when
@@ -211,57 +123,37 @@ pub struct SimOutcome {
     pub reconfig_switches: Vec<SwitchRecord>,
 }
 
-/// The serving simulation world.
+/// The serving simulation: per-replica shards plus the coordination state
+/// that couples them (router, arrival source, elastic controller).
 pub struct ServingSim {
-    cfg: Config,
-    cm: CostModel,
-    dep: Deployment,
-    /// Live (arrived, unfinished) requests, keyed by arrival index.
-    reqs: HashMap<u64, Request>,
-    /// Finished/retired request records, tagged with the arrival index so
-    /// the final report restores trace order.
-    records: Vec<(u64, RequestRecord)>,
-    instances: Vec<Inst>,
-    npus: Vec<PsNpu>,
-    tasks: HashMap<(usize, TaskId), TaskKind>,
-    table: StatusTable,
-    /// Active route/balance/batch policies, resolved from the
-    /// `[scheduler]` policy knobs at construction.
-    policies: PolicySet,
-    cands: StageCands,
-    store: MmStore,
-    /// Steady-state per-instance service-rate estimates from the cost
-    /// model, exposed to policies via [`PolicyCtx`] (SLO projections).
-    prefill_tok_s: f64,
-    encode_tok_s: f64,
-    /// One P→D KV link per replica.
-    kv_links: Vec<Link>,
+    pub(crate) shared: Arc<SimShared>,
+    /// The routed deployment topology — the router's authority; each shard
+    /// keeps a copy synchronized at elastic switches.
+    pub(crate) dep: Deployment,
+    pub(crate) cands: StageCands,
+    /// Entry-scoped policies: arrival routing across all replicas.
+    pub(crate) route: Box<dyn RoutePolicy>,
+    pub(crate) entry_balance: Box<dyn BalancePolicy>,
+    /// The router's world view of instance status, assembled from shard
+    /// rows at every coordination event ([`ReplicaShard::flush_rows`]).
+    pub(crate) router_table: StatusTable,
+    pub(crate) shards: Vec<ReplicaShard>,
+    /// Static instance → replica map (global instance indices).
+    pub(crate) inst_replica: Vec<usize>,
+    /// Static NPU → replica map.
+    pub(crate) npu_replica: Vec<usize>,
     /// Lazy arrival source (replayed vector or streaming generator).
-    source: ArrivalSource,
+    pub(crate) source: ArrivalSource,
     /// Arrival time of the source's final request (horizon anchor).
-    last_arrival: f64,
-    /// The engine's exact integer-ns run cutoff; the fused decode loop may
-    /// not complete a step past it (set once in [`Self::run`]).
-    horizon_ns: u64,
-    /// An elastic switch is mid-migration: the donor's `pending_tokens`
-    /// intentionally lags its (already bulk-drained) queues while items
-    /// re-route one at a time, so the strict counter-vs-queue debug
-    /// invariant is suspended for the duration (the table-vs-status check
-    /// still runs).
-    migrating: bool,
+    pub(crate) last_arrival: f64,
     /// Requests delivered so far.
-    arrived: usize,
+    pub(crate) arrived: usize,
     /// The source has no further arrivals.
-    stream_done: bool,
-    done: usize,
-    /// Decode steps executed inline by the fused fast path.
-    fused_steps: u64,
-    /// Injected MM-Store failure probability (tests/benches).
-    store_fail_prob: f64,
+    pub(crate) stream_done: bool,
     /// Elastic re-provisioning controller (None when disabled).
-    reconfigurer: Option<Reconfigurer>,
-    /// Its tick source.
-    ticker: Option<Ticker>,
+    pub(crate) reconfigurer: Option<Reconfigurer>,
+    /// Its epoch source.
+    pub(crate) ticker: Option<Ticker>,
 }
 
 impl ServingSim {
@@ -296,88 +188,63 @@ impl ServingSim {
     pub fn with_source(cfg: Config, source: ArrivalSource) -> Result<Self> {
         let dep = Deployment::parse(&cfg.deployment)?;
         let cm = CostModel::new(cfg.model.clone(), cfg.hardware.clone());
-        let policies = PolicySet::from_scheduler(&cfg.scheduler)?;
-        let cands = StageCands::build(&dep);
+        let route = make_route_policy(&cfg.scheduler.route_policy)?;
+        let entry_balance = make_balance_policy(&cfg.scheduler.balance_policy)?;
         // Big-batch service-rate estimates for SLO-aware routing: how many
         // prompt/visual tokens one instance retires per second at steady
         // state (TP scaling is a per-instance refinement policies don't
         // need for a queue-delay projection).
         let prefill_tok_s = 2048.0 / cm.prefill_time_batch(&[2048]).max(1e-9);
         let encode_tok_s = 1196.0 / cm.encode_time(1196).max(1e-9);
-        let mut instances = Vec::new();
-        for spec in &dep.instances {
-            let kv = if spec.stages.decode {
-                Some(make_kv(&cm, cfg.model.llm.kv_bytes_per_token(), spec.tp))
-            } else {
-                None
-            };
-            instances.push(Inst {
-                spec: spec.clone(),
-                encode_q: VecDeque::new(),
-                prefill_q: VecDeque::new(),
-                decode_waiting: VecDeque::new(),
-                decode_active: Vec::new(),
-                kv,
-                busy: false,
-                decode_running: false,
-                pending_tokens: 0,
-                active_ctx: 0,
-                draining_to: None,
-                offline_until: 0.0,
-            });
-        }
-        let npus = (0..dep.num_npus()).map(|_| PsNpu::new()).collect();
-        let kv_links =
-            (0..dep.replicas).map(|_| Link::new(cm.kv_link_bw(), cm.hw.handshake_s)).collect();
-        let table = StatusTable::new(instances.len());
-        let store = MmStore::new(32e9); // 32 GB pooled DRAM/SSD store
-        let last_arrival = source.last_arrival();
         let (reconfigurer, ticker) = if cfg.reconfig.enabled {
             (
-                Some(Reconfigurer::new(cfg.reconfig.clone())),
+                Some(Reconfigurer::new(cfg.reconfig.clone())?),
                 Some(Ticker::new(cfg.reconfig.tick_s, cfg.reconfig.tick_s)),
             )
         } else {
             (None, None)
         };
+        let shared = Arc::new(SimShared { cfg, cm, prefill_tok_s, encode_tok_s });
+        let mut shards = Vec::with_capacity(dep.replicas);
+        for r in 0..dep.replicas {
+            shards.push(ReplicaShard::new(shared.clone(), &dep, r)?);
+        }
+        let inst_replica = dep.instances.iter().map(|i| i.replica).collect();
+        let npu_replica = (0..dep.num_npus()).map(|n| n / dep.npus_per_replica).collect();
+        let router_table = StatusTable::new(dep.instances.len());
+        let cands = StageCands::build(&dep);
+        let last_arrival = source.last_arrival();
         Ok(Self {
-            cfg,
-            cm,
+            shared,
             dep,
-            reqs: HashMap::with_capacity(256),
-            records: Vec::new(),
-            instances,
-            npus,
-            tasks: HashMap::with_capacity(64),
-            table,
-            policies,
             cands,
-            store,
-            prefill_tok_s,
-            encode_tok_s,
-            kv_links,
+            route,
+            entry_balance,
+            router_table,
+            shards,
+            inst_replica,
+            npu_replica,
             source,
             last_arrival,
-            horizon_ns: u64::MAX,
-            migrating: false,
             arrived: 0,
             stream_done: false,
-            done: 0,
-            fused_steps: 0,
-            store_fail_prob: 0.0,
             reconfigurer,
             ticker,
         })
     }
 
-    /// Enable MM-Store failure injection (exercises §3.2 recomputation).
+    /// Enable MM-Store failure injection on every replica partition
+    /// (exercises §3.2 recomputation).
     pub fn with_store_failures(mut self, prob: f64) -> Self {
-        self.store_fail_prob = prob;
-        self.store = MmStore::new(32e9).with_failures(prob, self.cfg.seed);
+        let seed = self.shared.cfg.seed;
+        for s in &mut self.shards {
+            s.enable_store_failures(prob, seed);
+        }
         self
     }
 
-    /// Run to completion (or the horizon) and report.
+    /// Run to completion (or the horizon) on the single-loop reference
+    /// engine and report.
     pub fn run(mut self) -> SimOutcome {
         let mut q = EventQueue::new();
         match self.source.next() {
@@ -388,18 +255,138 @@ impl ServingSim {
             t.arm(&mut q, Ev::ReconfigTick);
         }
         let horizon = self.last_arrival + 3600.0;
-        self.horizon_ns = engine::horizon_ns(horizon).unwrap_or(0);
-        let end = engine::run(&mut self, &mut q, horizon);
-
-        // Retire whatever is still live (horizon cutoff) and restore trace
-        // order: retired-at-finish records are in completion order.
-        let mut leftovers: Vec<u64> = self.reqs.keys().copied().collect();
-        leftovers.sort_unstable();
-        for rid in leftovers {
-            self.retire(rid);
+        let horizon_ns = engine::horizon_ns(horizon).unwrap_or(0);
+        for s in &mut self.shards {
+            s.set_horizon(horizon_ns);
         }
-        self.records.sort_unstable_by_key(|&(rid, _)| rid);
-        let records: Vec<RequestRecord> = self.records.drain(..).map(|(_, r)| r).collect();
+        let end = engine::run(&mut self, &mut q, horizon);
+        self.finish(end, q.processed())
+    }
+
+    // ------------------------------------------------------------------
+    // Coordination boundary (shared by both engines)
+    // ------------------------------------------------------------------
+
+    /// Route one arrival through the entry-scoped policies against the
+    /// assembled router table. The caller is responsible for having
+    /// brought the table (and residency) up to date — i.e. for being *at*
+    /// a coordination epoch.
+    pub(crate) fn route_one(&mut self, spec: &RequestSpec, resident: bool, now: f64) -> Route {
+        let ctx = PolicyCtx {
+            table: &self.router_table,
+            dep: &self.dep,
+            cands: &self.cands,
+            store: None,
+            scheduler: &self.shared.cfg.scheduler,
+            slo: &self.shared.cfg.slo,
+            now,
+            prefill_tok_s: self.shared.prefill_tok_s,
+            encode_tok_s: self.shared.encode_tok_s,
+            scope: PickScope::Entry,
+        };
+        self.route
+            .route(&ctx, spec, resident, &mut *self.entry_balance)
+            .expect("deployment validated at construction")
+    }
+
+    /// Evaluate one reconfiguration epoch against collected loads; on a
+    /// plan, update the router's topology authority and the controller
+    /// history. The caller executes the migration on the owning shard.
+    pub(crate) fn plan_reconfig(
+        &mut self,
+        now: f64,
+        loads: &[InstLoad],
+    ) -> Option<crate::coordinator::reconfig::SwitchPlan> {
+        let plan = self.reconfigurer.as_mut().expect("tick implies controller").tick(now, loads)?;
+        self.dep.instances[plan.inst].stages = plan.to;
+        self.cands = StageCands::build(&self.dep);
+        Some(plan)
+    }
+
+    /// Total finished requests across shards.
+    pub(crate) fn done_total(&self) -> usize {
+        self.shards.iter().map(|s| s.done_count()).sum()
+    }
+
+    // ------------------------------------------------------------------
+    // Single-loop handlers
+    // ------------------------------------------------------------------
+
+    /// NOTE: the sharded engine's `CoordEv::Arrive` arm
+    /// (`coordinator/sharded.rs`) mirrors this handler step for step and
+    /// must be updated in lockstep (same for [`Self::on_reconfig_tick`]
+    /// and its `CoordEv::Tick` arm).
+    fn on_arrive(&mut self, arrived: ArrivedRequest, now: f64, q: &mut EventQueue<Ev>) {
+        // Internal request ids are arrival indices (== spec ids for
+        // generated workloads; trace replays may carry arbitrary spec ids).
+        let rid = self.arrived as u64;
+        self.arrived += 1;
+        let spec = arrived.spec;
+        let resident = spec
+            .image
+            .as_ref()
+            .map(|i| self.shards.iter().any(|s| s.feature_resident(i.key)))
+            .unwrap_or(false);
+        for s in &mut self.shards {
+            s.flush_rows(&mut self.router_table);
+        }
+        if cfg!(debug_assertions) {
+            for s in &self.shards {
+                s.debug_check_table();
+            }
+        }
+        let route = self.route_one(&spec, resident, now);
+        let target = match route {
+            Route::Encode(i) => i,
+            Route::Prefill { instance, .. } => instance,
+        };
+        let r = self.inst_replica[target];
+        self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+        // Keep exactly one pending arrival: schedule the next one now.
+        match self.source.next() {
+            Some(next) => q.at_arrival(next.arrival, Ev::Arrive(next)),
+            None => self.stream_done = true,
+        }
+    }
+
+    /// One controller epoch: snapshot per-instance load from every shard,
+    /// ask the [`Reconfigurer`] for a plan, execute it on the owning
+    /// shard, re-arm the ticker.
+    fn on_reconfig_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        let mut loads = Vec::with_capacity(self.inst_replica.len());
+        for s in &self.shards {
+            s.collect_loads(now, &mut loads);
+        }
+        if let Some(plan) = self.plan_reconfig(now, &loads) {
+            self.shards[plan.replica].apply_switch(&plan, now, q);
+            self.reconfigurer.as_mut().expect("controller").committed(now, &plan);
+        }
+        self.ticker.as_mut().expect("tick implies ticker").arm(q, Ev::ReconfigTick);
+    }
+
+    /// The replica owning a shard-local event.
+    fn replica_of(&self, ev: &Ev) -> usize {
+        match ev {
+            Ev::FeatureReady { inst, .. } | Ev::KvDelivered { inst, .. } | Ev::Kick { inst } => {
+                self.inst_replica[*inst]
+            }
+            Ev::NpuCheck { npu, .. } => self.npu_replica[*npu],
+            Ev::Arrive(_) | Ev::ReconfigTick => unreachable!("coordination event"),
+        }
+    }
+
+    /// Gather shard state into the final report (shared by both engines).
+    pub(crate) fn finish(mut self, end: f64, events_processed: u64) -> SimOutcome {
+        // Retire whatever is still live (horizon cutoff) and restore trace
+        // order: retired-at-finish records are in completion order within
+        // each shard.
+        let mut tagged: Vec<(u64, RequestRecord)> = Vec::new();
+        for s in &mut self.shards {
+            s.retire_leftovers();
+            tagged.append(&mut s.take_records());
+        }
+        tagged.sort_unstable_by_key(|&(rid, _)| rid);
+        let records: Vec<RequestRecord> = tagged.into_iter().map(|(_, r)| r).collect();
 
         let makespan = records
             .iter()
@@ -412,803 +399,22 @@ impl ServingSim {
         // processed event; the utilization window must cover them.
         let util_end = end.max(makespan).max(1e-9);
         let mut npu_utilization = Vec::new();
-        for n in &mut self.npus {
-            npu_utilization.push(n.utilization(util_end));
+        for s in &mut self.shards {
+            npu_utilization.extend(s.npu_utilizations(util_end));
+        }
+        let mut store_stats = StoreStats::default();
+        for s in &self.shards {
+            store_stats.absorb(&s.store_stats());
         }
         SimOutcome {
-            metrics: RunMetrics::new(records, makespan, num_npus, self.cfg.slo),
-            store_stats: self.store.stats(),
-            events_processed: q.processed(),
-            fused_decode_steps: self.fused_steps,
+            metrics: RunMetrics::new(records, makespan, num_npus, self.shared.cfg.slo),
+            store_stats,
+            events_processed,
+            fused_decode_steps: self.shards.iter().map(|s| s.fused_steps()).sum(),
+            fused_batch_kicks: self.shards.iter().map(|s| s.fused_batch_kicks()).sum(),
             npu_utilization,
-            kv_link_stats: self.kv_links.iter().map(|l| (l.bytes_carried(), l.busy_time())).collect(),
+            kv_link_stats: self.shards.iter().map(|s| s.kv_link_stats()).collect(),
             reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Helpers
-    // ------------------------------------------------------------------
-
-    /// Scale exclusive-NPU work for an instance's TP degree and add the
-    /// per-layer synchronization cost.
-    fn tp_scale(&self, inst: usize, work: f64, layers: usize) -> f64 {
-        let tp = self.instances[inst].spec.tp;
-        if tp <= 1 {
-            work
-        } else {
-            work / (tp as f64 * TP_EFFICIENCY)
-                + layers as f64 * 2.0 * TP_ALLREDUCE_S_PER_LAYER
-        }
-    }
-
-    /// Push instance `inst`'s current state into the status table. Called
-    /// at every mutation site; routing reads the table without rebuilding
-    /// it ([`Self::debug_check_table`] enforces coverage in debug builds).
-    fn sync_status(&mut self, inst: usize) {
-        let status = self.instances[inst].status();
-        self.table.update(inst, status);
-    }
-
-    /// Debug-build ground-truth check: the incrementally maintained table
-    /// must equal a full recomputation at every routing decision — and the
-    /// `pending_tokens` counter must equal a fresh walk over the queues
-    /// (so a missed `sync_status`, `push_*` or `drained` site fails
-    /// `cargo test` here instead of silently changing load-balancing
-    /// decisions).
-    fn debug_check_table(&self) {
-        for (i, inst) in self.instances.iter().enumerate() {
-            let want = inst.status();
-            let got = self.table.get(i);
-            assert!(
-                got == want,
-                "status table stale for instance {i}: table {got:?} vs actual {want:?}"
-            );
-            if !self.migrating {
-                let queue_tokens: usize = inst.encode_q.iter().map(|e| e.visual_tokens).sum::<usize>()
-                    + inst.prefill_q.iter().map(|p| p.prompt_tokens).sum::<usize>();
-                assert!(
-                    inst.pending_tokens == queue_tokens,
-                    "pending_tokens counter drifted on instance {i}: {} vs queues {queue_tokens}",
-                    inst.pending_tokens
-                );
-            }
-        }
-    }
-
-    fn arm_npu(&mut self, npu: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if let Some((t, _)) = self.npus[npu].next_completion(now) {
-            let epoch = self.npus[npu].epoch;
-            q.at(t, Ev::NpuCheck { npu, epoch });
-        }
-    }
-
-    fn start_task(
-        &mut self,
-        inst: usize,
-        kind: TaskKind,
-        stage: StageKind,
-        work: f64,
-        now: f64,
-        q: &mut EventQueue<Ev>,
-    ) {
-        let npu = self.instances[inst].spec.npu;
-        let id = self.npus[npu].start(now, stage.demand(), work.max(1e-7));
-        self.tasks.insert((npu, id), kind);
-        self.arm_npu(npu, now, q);
-    }
-
-    /// Pick an instance with the needed stage in this replica via the
-    /// active [`crate::coordinator::policy::BalancePolicy`], from the
-    /// cached candidate sets and the live status table.
-    fn pick_instance(&mut self, replica: usize, need: StageNeed, now: f64) -> usize {
-        if cfg!(debug_assertions) {
-            self.debug_check_table();
-        }
-        let ctx = policy_ctx!(self, now);
-        self.policies
-            .balance
-            .pick(&ctx, self.cands.get(replica, need))
-            .expect("deployment validated at parse time")
-    }
-
-    /// Is the instance offline reloading stage weights after a role switch?
-    /// (The ns-rounded event clock can land up to half a nanosecond before
-    /// the unrounded deadline, hence the tolerance.)
-    fn offline(&self, inst: usize, now: f64) -> bool {
-        now < self.instances[inst].offline_until - 1e-9
-    }
-
-    /// Drop a request's live state, keeping only its immutable record.
-    fn retire(&mut self, rid: u64) {
-        let r = self.reqs.remove(&rid).expect("live request");
-        self.records.push((
-            rid,
-            RequestRecord {
-                id: r.spec.id,
-                multimodal: r.spec.is_multimodal(),
-                arrival: r.arrival,
-                ttft: r.ttft(),
-                tpot: r.tpot(),
-                output_tokens: r.spec.output_tokens,
-                finish: r.finish,
-                recomputed: r.recomputed,
-                feature_reused: r.feature_reused,
-            },
-        ));
-    }
-
-    // ------------------------------------------------------------------
-    // Elastic re-provisioning (runtime dynamic orchestration)
-    // ------------------------------------------------------------------
-
-    /// One controller tick: snapshot per-instance load, ask the
-    /// [`Reconfigurer`] for a plan, execute it, re-arm the ticker.
-    ///
-    /// The snapshot walks every queue (O(total queued) per tick) rather
-    /// than maintaining per-stage incremental counters like
-    /// `pending_tokens` does for the status table: ticks fire every
-    /// `tick_s` *simulated* seconds (hundreds per run, vs. a table update
-    /// per queue mutation), so the scan is off every hot path and not
-    /// worth three more push/drain-balanced counters.
-    fn on_reconfig_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
-        let loads: Vec<InstLoad> = self
-            .instances
-            .iter()
-            .enumerate()
-            .map(|(i, inst)| InstLoad {
-                replica: inst.spec.replica,
-                // The routed (desired) role, which may already differ from
-                // the executing role while the instance drains.
-                stages: self.dep.instances[i].stages,
-                busy: inst.busy,
-                decode_active: inst.decode_active.len(),
-                encode_backlog: inst.encode_q.iter().map(|e| e.visual_tokens).sum(),
-                prefill_backlog: inst.prefill_q.iter().map(|p| p.prompt_tokens).sum(),
-                // Waiting decode work = resident context plus the output
-                // tokens still to generate (short-prompt/long-output
-                // traffic is decode work even though its context is tiny).
-                decode_backlog: inst
-                    .decode_waiting
-                    .iter()
-                    .map(|&r| {
-                        let req = self.reqs.get(&r).expect("queued request is live");
-                        req.ctx_tokens()
-                            + req.spec.output_tokens.saturating_sub(req.tokens_generated)
-                    })
-                    .sum(),
-                switching: inst.draining_to.is_some() || self.offline(i, now),
-            })
-            .collect();
-        let plan = self.reconfigurer.as_mut().expect("tick implies controller").tick(now, &loads);
-        if let Some(plan) = plan {
-            self.apply_switch(&plan, now, q);
-        }
-        self.ticker.as_mut().expect("tick implies ticker").arm(q, Ev::ReconfigTick);
-    }
-
-    /// Execute a role switch: reshape the routed topology, drain the
-    /// donor's queues by migrating waiting work over the standing E-P /
-    /// P-D transport paths, and either complete immediately or let
-    /// in-flight decode sequences finish first (overlapped transition).
-    fn apply_switch(&mut self, plan: &SwitchPlan, now: f64, q: &mut EventQueue<Ev>) {
-        let inst = plan.inst;
-        let replica = self.instances[inst].spec.replica;
-        self.migrating = true;
-
-        // 1. New arrivals route to the reshaped topology from this instant:
-        //    the deployment's instance table is the routing authority, and
-        //    the candidate cache every policy reads through [`PolicyCtx`]
-        //    is rebuilt from it.
-        self.dep.instances[inst].stages = plan.to;
-        self.cands = StageCands::build(&self.dep);
-
-        // 2. Drain the donor's queues. Queued encodes only carry request
-        //    metadata (raw inputs are host-side), so they re-queue directly
-        //    on another encoder.
-        let enc_items: Vec<EncodeItem> = self.instances[inst].encode_q.drain(..).collect();
-        for item in enc_items {
-            self.instances[inst].drained(item.visual_tokens);
-            self.sync_status(inst);
-            let e_inst = self.pick_instance(replica, StageNeed::Encode, now);
-            self.instances[e_inst].push_encode(item);
-            self.sync_status(e_inst);
-            q.at(now, Ev::Kick { inst: e_inst });
-        }
-        //    Queued prefills re-fetch their features at the new prefill
-        //    instance through the MM-Store E-P path (prefetch-overlapped);
-        //    text-only items move as pure metadata.
-        let pre_items: Vec<PrefillItem> = self.instances[inst].prefill_q.drain(..).collect();
-        for item in pre_items {
-            self.instances[inst].drained(item.prompt_tokens);
-            self.sync_status(inst);
-            let p_inst = self.pick_instance(replica, StageNeed::Prefill, now);
-            let visual = self
-                .reqs
-                .get(&item.req)
-                .expect("queued request is live")
-                .spec
-                .image
-                .as_ref()
-                .map(|i| i.visual_tokens)
-                .unwrap_or(0);
-            let delay = if visual > 0 {
-                plan_ep_transfer(&self.cm, visual, self.cfg.scheduler.ep_async_prefetch).exposed
-            } else {
-                0.0
-            };
-            q.at(now + delay, Ev::FeatureReady { req: item.req, inst: p_inst });
-        }
-        //    Sequences whose KV already landed here re-transmit their
-        //    context over the replica's P-D link to the adopting decoder.
-        let waiting: Vec<u64> = self.instances[inst].decode_waiting.drain(..).collect();
-        self.sync_status(inst);
-        self.migrate_kv(waiting, replica, now, q);
-
-        // 3. In-flight work (a running E/P batch, resident decode
-        //    sequences) finishes under the old role; the reload happens
-        //    when the last of it drains.
-        self.reconfigurer.as_mut().expect("switch implies controller").committed(now, plan);
-        let busy_now = {
-            let i = &self.instances[inst];
-            i.busy || i.decode_running || !i.decode_active.is_empty()
-        };
-        if busy_now {
-            self.instances[inst].draining_to = Some(plan.to);
-        } else {
-            self.complete_switch(inst, plan.to, now, q);
-        }
-        self.migrating = false;
-    }
-
-    /// Finish a role switch once the instance has no in-flight work: swap
-    /// the executing role, reshape the KV pool, and take the instance
-    /// offline for the configured reload window.
-    fn complete_switch(&mut self, inst: usize, to: StageSet, now: f64, q: &mut EventQueue<Ev>) {
-        let drain_s = self.cfg.reconfig.drain_s;
-        let kv_bytes_per_token = self.cfg.model.llm.kv_bytes_per_token();
-        let tp = self.instances[inst].spec.tp;
-        let i = &mut self.instances[inst];
-        i.draining_to = None;
-        i.spec.stages = to;
-        if to.decode {
-            if i.kv.is_none() {
-                i.kv = Some(make_kv(&self.cm, kv_bytes_per_token, tp));
-            }
-        } else if let Some(kv) = &i.kv {
-            debug_assert_eq!(kv.num_seqs(), 0, "role switch completed with resident sequences");
-            i.kv = None;
-        }
-        debug_assert!(
-            i.decode_active.is_empty() && i.active_ctx == 0,
-            "role switch completed with a non-empty decode batch"
-        );
-        i.offline_until = now + drain_s;
-        let kick_at = i.offline_until;
-        self.sync_status(inst);
-        q.at(kick_at, Ev::Kick { inst });
-    }
-
-    /// Re-transmit the full contexts of `reqs` over the replica's P-D link
-    /// to a freshly chosen decoder. Shared by the switch-time migration of
-    /// decode-waiting sequences and the in-flight `KvDelivered` redirect.
-    fn migrate_kv(&mut self, reqs: Vec<u64>, replica: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if reqs.is_empty() {
-            return;
-        }
-        let d_inst = self.pick_instance(replica, StageNeed::Decode, now);
-        let bytes: f64 = reqs
-            .iter()
-            .map(|&r| {
-                (self.reqs.get(&r).expect("migrating request is live").ctx_tokens()
-                    * self.cm.model.llm.kv_bytes_per_token()) as f64
-            })
-            .sum();
-        let (_, end) = self.kv_links[replica].enqueue(now, bytes);
-        for &rid in &reqs {
-            self.reqs.get_mut(&rid).expect("migrating request is live").state =
-                ReqState::KvTransfer;
-        }
-        q.at(end, Ev::KvDelivered { reqs, inst: d_inst });
-    }
-
-    /// Called whenever in-flight work completes on a draining instance.
-    fn maybe_complete_switch(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if let Some(to) = self.instances[inst].draining_to {
-            let i = &self.instances[inst];
-            if !i.busy && !i.decode_running && i.decode_active.is_empty() {
-                self.complete_switch(inst, to, now, q);
-            }
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Stage dispatch
-    // ------------------------------------------------------------------
-
-    /// Try to start work on an instance, honoring monolithic serialization:
-    /// a coupled instance runs ONE thing at a time (prefill > encode >
-    /// decode priority, the vLLM-style policy whose interference the paper
-    /// §1 describes); a disaggregated instance only ever has its own stage.
-    fn kick(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if self.instances[inst].busy || self.offline(inst, now) {
-            return;
-        }
-        let multi_stage = {
-            let s = self.instances[inst].spec.stages;
-            (s.encode as u8 + s.prefill as u8 + s.decode as u8) > 1
-        };
-        // On a coupled instance, a running decode step blocks new E/P work
-        // until the step boundary (serial execution).
-        if multi_stage && self.instances[inst].decode_running {
-            return;
-        }
-
-        // 1. Prefill.
-        if self.instances[inst].spec.stages.prefill && !self.instances[inst].prefill_q.is_empty() {
-            let batch = self
-                .policies
-                .batch
-                .form_prefill_batch(&mut self.instances[inst].prefill_q, &self.cfg.scheduler);
-            if !batch.is_empty() {
-                let drained: usize = batch.iter().map(|b| b.prompt_tokens).sum();
-                self.instances[inst].drained(drained);
-                let mut work = 0.0;
-                let seq_tokens: Vec<usize> = batch.iter().map(|b| b.prompt_tokens).collect();
-                work += self.cm.prefill_time_batch(&seq_tokens);
-                // Fault-tolerant recompute: re-encode missing features
-                // locally before prefill (§3.2).
-                let recompute_tokens: usize = batch.iter().map(|b| b.recompute_tokens).sum();
-                if recompute_tokens > 0 {
-                    work += recompute_cost(&self.cm, recompute_tokens);
-                }
-                let work = self.tp_scale(inst, work, self.cm.model.llm.layers);
-                let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
-                for &r in &reqs {
-                    let req = self.reqs.get_mut(&r).expect("batched request is live");
-                    req.state = ReqState::Prefilling;
-                    req.prefill_start = Some(now);
-                }
-                self.instances[inst].busy = true;
-                self.sync_status(inst);
-                self.start_task(inst, TaskKind::PrefillBatch { inst, reqs }, StageKind::Prefill, work, now, q);
-                return;
-            }
-        }
-        // 2. Encode.
-        if self.instances[inst].spec.stages.encode && !self.instances[inst].encode_q.is_empty() {
-            let batch = self
-                .policies
-                .batch
-                .form_encode_batch(&mut self.instances[inst].encode_q, &self.cfg.scheduler);
-            if !batch.is_empty() {
-                let drained: usize = batch.iter().map(|b| b.visual_tokens).sum();
-                self.instances[inst].drained(drained);
-                let tokens: usize = batch.iter().map(|b| b.visual_tokens).sum();
-                let work =
-                    self.tp_scale(inst, self.cm.encode_time(tokens), self.cm.model.vit.layers);
-                let reqs: Vec<u64> = batch.iter().map(|b| b.req).collect();
-                for &r in &reqs {
-                    let req = self.reqs.get_mut(&r).expect("batched request is live");
-                    req.state = ReqState::Encoding;
-                    req.encode_start = Some(now);
-                }
-                self.instances[inst].busy = true;
-                self.sync_status(inst);
-                self.start_task(inst, TaskKind::EncodeBatch { inst, reqs }, StageKind::Encode, work, now, q);
-                return;
-            }
-        }
-        // 3. Decode step.
-        self.maybe_start_decode_step(inst, now, q);
-    }
-
-    /// Admit waiting sequences into the decode batch (continuous batching
-    /// + paged-KV admission), FCFS until the batch cap or KV pressure.
-    fn admit_decode(&mut self, inst: usize) {
-        let quota = self.policies.batch.decode_quota(
-            self.instances[inst].decode_active.len(),
-            self.instances[inst].decode_waiting.len(),
-            &self.cfg.scheduler,
-        );
-        for _ in 0..quota {
-            let Some(&rid) = self.instances[inst].decode_waiting.front() else { break };
-            let (ctx, need) = {
-                let r = self.reqs.get(&rid).expect("waiting request is live");
-                (r.ctx_tokens(), r.ctx_tokens() + r.spec.output_tokens)
-            };
-            let admitted = {
-                let kv = self.instances[inst].kv.as_mut().expect("decode instance has KV");
-                if kv.can_admit(need) {
-                    kv.register(rid, ctx).is_ok()
-                } else {
-                    false
-                }
-            };
-            if !admitted {
-                break; // KV pressure: stop admitting until sequences free.
-            }
-            self.instances[inst].decode_waiting.pop_front();
-            self.instances[inst].decode_active.push(rid);
-            self.instances[inst].active_ctx += ctx;
-            self.reqs.get_mut(&rid).expect("admitted request is live").state = ReqState::Decoding;
-        }
-    }
-
-    /// Full-speed work of one decode step over the current batch. Batch
-    /// context comes from the incrementally maintained `active_ctx` sum —
-    /// no per-step walk over the request map (debug builds cross-check).
-    fn decode_step_work(&self, inst: usize) -> f64 {
-        let batch = self.instances[inst].decode_active.len();
-        let total_ctx = self.instances[inst].active_ctx;
-        if cfg!(debug_assertions) {
-            let recomputed: usize = self.instances[inst]
-                .decode_active
-                .iter()
-                .map(|&r| self.reqs.get(&r).expect("active request is live").ctx_tokens())
-                .sum();
-            assert_eq!(total_ctx, recomputed, "active_ctx counter drifted on instance {inst}");
-        }
-        self.tp_scale(inst, self.cm.decode_step_time(batch, total_ctx), self.cm.model.llm.layers)
-    }
-
-    fn maybe_start_decode_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if !self.instances[inst].spec.stages.decode
-            || self.instances[inst].decode_running
-            || self.offline(inst, now)
-        {
-            return;
-        }
-        let multi_stage = {
-            let s = self.instances[inst].spec.stages;
-            (s.encode as u8 + s.prefill as u8 + s.decode as u8) > 1
-        };
-        if multi_stage && self.instances[inst].busy {
-            return;
-        }
-        self.admit_decode(inst);
-        self.sync_status(inst);
-        if self.instances[inst].decode_active.is_empty() {
-            return;
-        }
-        // Fast path: on a pure-Decode instance whose NPU is otherwise idle,
-        // fuse token steps inline (no co-located task can change execution
-        // rates mid-step, and any pending event bounds the fusion below).
-        if self.cfg.scheduler.fuse_decode_steps
-            && !multi_stage
-            && self.npus[self.instances[inst].spec.npu].active_tasks() == 0
-        {
-            self.run_decode_macro_step(inst, now, q);
-            return;
-        }
-        let work = self.decode_step_work(inst);
-        self.instances[inst].decode_running = true;
-        self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, now, q);
-    }
-
-    /// Execute decode steps inline until the next pending event (or the run
-    /// horizon) could observe the NPU, then hand the step in flight back to
-    /// the event path.
-    ///
-    /// **Macro-stepping invariant** (docs/PERFORMANCE.md): the fused loop
-    /// reproduces the per-token event path bit-exactly — every step end
-    /// lands on the same integer-ns grid [`sec_to_ns`] the event scheduler
-    /// uses, admission and token bookkeeping run at every step boundary
-    /// exactly as the `Kick` handler would, and any step whose completion
-    /// would not strictly precede the earliest pending event is *not* fused
-    /// but scheduled as a real [`PsNpu`] task (so a same-timestamp or
-    /// mid-step event interleaves — and contends — exactly as before).
-    fn run_decode_macro_step(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        debug_assert_eq!(sec_to_ns(now), q.now_ns(), "macro-step must start at queue time");
-        let npu = self.instances[inst].spec.npu;
-        let mut cur_ns = q.now_ns();
-        loop {
-            let t = cur_ns as f64 / 1e9;
-            let work = self.decode_step_work(inst).max(1e-7);
-            let end_ns = sec_to_ns(t + work).max(cur_ns);
-            let next_ev = q.next_event_ns().unwrap_or(u64::MAX);
-            if end_ns >= next_ev || end_ns > self.horizon_ns {
-                // A pending event (or the horizon) could observe this step:
-                // run it through the normal task path instead.
-                self.instances[inst].decode_running = true;
-                self.start_task(inst, TaskKind::DecodeStep { inst }, StageKind::Decode, work, t, q);
-                self.sync_status(inst);
-                return;
-            }
-            let end = end_ns as f64 / 1e9;
-            self.npus[npu].run_exclusive(t, end, work);
-            self.fused_steps += 1;
-            cur_ns = end_ns;
-            self.finish_decode_step_tokens(inst, end);
-            self.admit_decode(inst);
-            if self.instances[inst].decode_active.is_empty() {
-                break;
-            }
-        }
-        self.sync_status(inst);
-        self.maybe_complete_switch(inst, cur_ns as f64 / 1e9, q);
-    }
-
-    // ------------------------------------------------------------------
-    // Completions
-    // ------------------------------------------------------------------
-
-    fn on_encode_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
-        self.instances[inst].busy = false;
-        self.sync_status(inst);
-        let replica = self.instances[inst].spec.replica;
-        for rid in reqs {
-            let img = {
-                let r = self.reqs.get_mut(&rid).expect("encoded request is live");
-                r.encode_end = Some(now);
-                r.spec.image.expect("encoded request has an image")
-            };
-            // PUT the feature into the MM Store (asynchronously — off the
-            // critical path under prefetching).
-            self.store.put(img.key, self.cm.feature_bytes(img.visual_tokens), img.visual_tokens);
-            // Choose the prefill instance (least-loaded in this replica).
-            let p_inst = self.pick_instance(replica, StageNeed::Prefill, now);
-            self.reqs.get_mut(&rid).expect("encoded request is live").route.push(p_inst);
-            if p_inst == inst {
-                // E and P coupled on the same instance: feature is local.
-                q.at(now, Ev::FeatureReady { req: rid, inst: p_inst });
-            } else {
-                let plan = plan_ep_transfer(
-                    &self.cm,
-                    img.visual_tokens,
-                    self.cfg.scheduler.ep_async_prefetch,
-                );
-                self.reqs.get_mut(&rid).expect("encoded request is live").state =
-                    ReqState::FeatureTransfer;
-                q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: p_inst });
-            }
-        }
-        q.at(now, Ev::Kick { inst });
-        self.maybe_complete_switch(inst, now, q);
-    }
-
-    fn on_feature_ready(&mut self, rid: u64, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        // The target may have been retasked away from Prefill while the
-        // feature was in flight: hand the request to a current prefill
-        // instance instead (the feature travels via the MM Store either way).
-        let inst = if self.dep.instances[inst].stages.prefill {
-            inst
-        } else {
-            let replica = self.instances[inst].spec.replica;
-            self.pick_instance(replica, StageNeed::Prefill, now)
-        };
-        let r = self.reqs.get_mut(&rid).expect("transferring request is live");
-        let recompute_tokens = match &r.spec.image {
-            Some(img) => {
-                // Same-instance features are always local; remote fetches may
-                // miss (eviction / injected failure) → local recompute.
-                let local = r.encode_end.is_some()
-                    && r.route.last() == Some(&inst)
-                    && self.instances[inst].spec.stages.encode
-                    && !r.feature_reused;
-                if local && self.store_fail_prob == 0.0 {
-                    0
-                } else if self.store.get(img.key).is_some() {
-                    0
-                } else {
-                    r.recomputed = true;
-                    img.visual_tokens
-                }
-            }
-            None => 0,
-        };
-        r.state = ReqState::PrefillQueued;
-        let item = PrefillItem {
-            req: rid,
-            prompt_tokens: r.spec.prompt_tokens(),
-            recompute_tokens,
-        };
-        self.instances[inst].push_prefill(item);
-        self.sync_status(inst);
-        q.at(now, Ev::Kick { inst });
-    }
-
-    fn on_prefill_done(&mut self, inst: usize, reqs: Vec<u64>, now: f64, q: &mut EventQueue<Ev>) {
-        self.instances[inst].busy = false;
-        self.sync_status(inst);
-        let replica = self.instances[inst].spec.replica;
-        // Split the batch by destination decode instance. BTreeMap: the
-        // delivery order below reaches the replica's FIFO KV link, so it
-        // must be deterministic.
-        let mut by_dst: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
-        for rid in &reqs {
-            self.reqs.get_mut(rid).expect("prefilled request is live").prefill_end = Some(now);
-            let d_inst = if self.instances[inst].spec.stages.decode {
-                inst // PD coupled: no transfer.
-            } else {
-                self.pick_instance(replica, StageNeed::Decode, now)
-            };
-            self.reqs.get_mut(rid).expect("prefilled request is live").route.push(d_inst);
-            by_dst.entry(d_inst).or_default().push(*rid);
-        }
-        for (d_inst, rids) in by_dst {
-            if d_inst == inst {
-                // Local handoff: first token is the prefill output (Eq. 2).
-                for &rid in &rids {
-                    let r = self.reqs.get_mut(&rid).expect("prefilled request is live");
-                    r.first_token = Some(now);
-                    r.state = ReqState::AwaitAdmission;
-                    self.instances[inst].decode_waiting.push_back(rid);
-                }
-                self.sync_status(inst);
-                q.at(now, Ev::Kick { inst: d_inst });
-            } else {
-                // P→D KV transmission: the planner gives the exposed residue;
-                // the replica's shared FIFO link serializes it across
-                // concurrent prefill batches (congestion under load).
-                let avg_tokens = (rids
-                    .iter()
-                    .map(|&r| self.reqs.get(&r).expect("prefilled request is live").ctx_tokens())
-                    .sum::<usize>()
-                    / rids.len())
-                .max(1);
-                let plan = plan_kv_transmission(
-                    &self.cm,
-                    self.cfg.scheduler.pd_mode,
-                    rids.len(),
-                    avg_tokens,
-                    self.cfg.scheduler.kv_group_layers,
-                );
-                let exposed_bytes = if plan.kv_latency > 0.0 {
-                    plan.kv_bytes * plan.exposed / plan.kv_latency
-                } else {
-                    0.0
-                };
-                let delivered = if exposed_bytes > 0.0 {
-                    let (_, end) = self.kv_links[replica].enqueue(now, exposed_bytes);
-                    end
-                } else {
-                    now
-                };
-                for &rid in &rids {
-                    self.reqs.get_mut(&rid).expect("prefilled request is live").state =
-                        ReqState::KvTransfer;
-                }
-                q.at(delivered, Ev::KvDelivered { reqs: rids, inst: d_inst });
-            }
-        }
-        q.at(now, Ev::Kick { inst });
-        self.maybe_complete_switch(inst, now, q);
-    }
-
-    fn on_kv_delivered(&mut self, reqs: Vec<u64>, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        if !self.dep.instances[inst].stages.decode {
-            // The target was retasked away from Decode while the KV was in
-            // flight: re-transmit the contexts over the replica link to an
-            // adopting decoder.
-            let replica = self.instances[inst].spec.replica;
-            self.migrate_kv(reqs, replica, now, q);
-            return;
-        }
-        for rid in reqs {
-            // First token visible once the decode instance owns the context
-            // (disaggregated-path TTFT semantics, matching Table 2's
-            // sensitivity of TTFT to KV transmission). A migrated sequence
-            // keeps its original first-token time.
-            let r = self.reqs.get_mut(&rid).expect("delivered request is live");
-            if r.first_token.is_none() {
-                r.first_token = Some(now);
-            }
-            r.state = ReqState::AwaitAdmission;
-            self.instances[inst].decode_waiting.push_back(rid);
-        }
-        self.sync_status(inst);
-        q.at(now, Ev::Kick { inst });
-    }
-
-    /// Post-step bookkeeping shared by the event path and the fused
-    /// macro-step path: every active sequence gains one token; finished
-    /// sequences free their KV and retire to the record list.
-    fn finish_decode_step_tokens(&mut self, inst: usize, now: f64) {
-        let active = std::mem::take(&mut self.instances[inst].decode_active);
-        // Every member generated one token, growing its context by one.
-        self.instances[inst].active_ctx += active.len();
-        let mut still = Vec::with_capacity(active.len());
-        for rid in active {
-            let (finished, ctx_now) = {
-                let r = self.reqs.get_mut(&rid).expect("active request is live");
-                r.tokens_generated += 1;
-                if r.tokens_generated == 1 && r.first_token.is_none() {
-                    r.first_token = Some(now);
-                }
-                (r.tokens_generated >= r.spec.output_tokens, r.ctx_tokens())
-            };
-            if finished {
-                {
-                    let r = self.reqs.get_mut(&rid).expect("active request is live");
-                    r.finish = Some(now);
-                    r.state = ReqState::Finished;
-                }
-                self.done += 1;
-                self.instances[inst].active_ctx -= ctx_now;
-                let kv = self.instances[inst].kv.as_mut().expect("decode instance");
-                kv.free(rid).expect("active sequence registered");
-                self.retire(rid);
-            } else {
-                let kv = self.instances[inst].kv.as_mut().expect("decode instance");
-                // Grow KV by the generated token; admission reserved room.
-                kv.append(rid, 1).expect("admission reserved growth room");
-                still.push(rid);
-            }
-        }
-        self.instances[inst].decode_active = still;
-    }
-
-    fn on_decode_step_done(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
-        self.instances[inst].decode_running = false;
-        self.finish_decode_step_tokens(inst, now);
-        self.sync_status(inst);
-        q.at(now, Ev::Kick { inst });
-        self.maybe_complete_switch(inst, now, q);
-    }
-
-    fn on_npu_check(&mut self, npu: usize, epoch: u64, now: f64, q: &mut EventQueue<Ev>) {
-        if self.npus[npu].epoch != epoch {
-            return; // stale
-        }
-        if let Some((t, id)) = self.npus[npu].next_completion(now) {
-            if t <= now + 1e-9 {
-                self.npus[npu].finish(now, id);
-                let kind = self.tasks.remove(&(npu, id)).expect("task registered");
-                match kind {
-                    TaskKind::EncodeBatch { inst, reqs } => self.on_encode_done(inst, reqs, now, q),
-                    TaskKind::PrefillBatch { inst, reqs } => self.on_prefill_done(inst, reqs, now, q),
-                    TaskKind::DecodeStep { inst } => self.on_decode_step_done(inst, now, q),
-                }
-            }
-            self.arm_npu(npu, now, q);
-        }
-    }
-
-    fn on_arrive(&mut self, arrived: ArrivedRequest, now: f64, q: &mut EventQueue<Ev>) {
-        // Internal request ids are arrival indices (== spec ids for
-        // generated workloads; trace replays may carry arbitrary spec ids).
-        let rid = self.arrived as u64;
-        self.arrived += 1;
-        let spec = arrived.spec;
-        self.reqs.insert(rid, Request::new(spec, arrived.arrival));
-        let resident = spec.image.as_ref().map(|i| self.store.contains(i.key)).unwrap_or(false);
-        if cfg!(debug_assertions) {
-            self.debug_check_table();
-        }
-        let route = {
-            let ctx = policy_ctx!(self, now);
-            let PolicySet { route, balance, .. } = &mut self.policies;
-            route.route(&ctx, &spec, resident, &mut **balance).expect("deployment validated")
-        };
-        match route {
-            Route::Encode(inst) => {
-                let img = spec.image.expect("multimodal");
-                let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
-                self.reqs.get_mut(&rid).expect("just inserted").route.push(inst);
-                self.instances[inst].push_encode(item);
-                self.sync_status(inst);
-                q.at(now, Ev::Kick { inst });
-            }
-            Route::Prefill { instance, feature_reused } => {
-                self.reqs.get_mut(&rid).expect("just inserted").route.push(instance);
-                if feature_reused {
-                    // Cross-request reuse: skip Encode, fetch the
-                    // resident feature (prefetch-overlapped).
-                    self.reqs.get_mut(&rid).expect("just inserted").feature_reused = true;
-                    let tokens = spec.image.as_ref().map(|i| i.visual_tokens).unwrap_or(0);
-                    let plan =
-                        plan_ep_transfer(&self.cm, tokens, self.cfg.scheduler.ep_async_prefetch);
-                    q.at(now + plan.exposed, Ev::FeatureReady { req: rid, inst: instance });
-                } else {
-                    q.at(now, Ev::FeatureReady { req: rid, inst: instance });
-                }
-            }
-        }
-        // Keep exactly one pending arrival: schedule the next one now.
-        match self.source.next() {
-            Some(next) => q.at_arrival(next.arrival, Ev::Arrive(next)),
-            None => self.stream_done = true,
         }
     }
 }
@@ -1219,28 +425,26 @@ impl SimModel for ServingSim {
     fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
             Ev::Arrive(arrived) => self.on_arrive(arrived, now, q),
-            Ev::FeatureReady { req, inst } => self.on_feature_ready(req, inst, now, q),
-            Ev::NpuCheck { npu, epoch } => self.on_npu_check(npu, epoch, now, q),
-            Ev::KvDelivered { reqs, inst } => self.on_kv_delivered(reqs, inst, now, q),
-            Ev::Kick { inst } => {
-                self.kick(inst, now, q);
-                // A freed coupled instance may also resume decode.
-                self.maybe_start_decode_step(inst, now, q);
-            }
             Ev::ReconfigTick => self.on_reconfig_tick(now, q),
+            other => {
+                let r = self.replica_of(&other);
+                self.shards[r].handle(now, other, q);
+            }
         }
     }
 
     fn done(&self) -> bool {
-        self.stream_done && self.done == self.arrived
+        self.stream_done && self.done_total() == self.arrived
     }
 }
 
-/// Convenience: stream the configured workload at `cfg.rate`, run.
-/// (Bit-identical to materializing the trace first — see
-/// `tests/determinism_golden.rs` — but O(in-flight) memory.)
+/// Convenience: stream the configured workload at `cfg.rate`, run on the
+/// engine `cfg.simulator` selects. (Bit-identical across engines and to
+/// materializing the trace first — see `tests/determinism_golden.rs` — with
+/// O(in-flight) memory.)
 pub fn run_serving(cfg: &Config) -> Result<SimOutcome> {
-    Ok(ServingSim::streamed(cfg.clone())?.run())
+    let sim = ServingSim::streamed(cfg.clone())?;
+    Ok(if cfg.simulator.sharded { sim.run_sharded() } else { sim.run() })
 }
 
 #[cfg(test)]
@@ -1288,6 +492,7 @@ mod tests {
         assert_eq!(a.metrics.records, b.metrics.records);
         assert_eq!(a.events_processed, b.events_processed);
         assert_eq!(a.fused_decode_steps, b.fused_decode_steps);
+        assert_eq!(a.fused_batch_kicks, b.fused_batch_kicks);
     }
 
     #[test]
@@ -1323,6 +528,25 @@ mod tests {
         assert!(
             fused.events_processed * 2 < unfused.events_processed,
             "fusing must shed most decode events: {} vs {}",
+            fused.events_processed,
+            unfused.events_processed
+        );
+    }
+
+    #[test]
+    fn fused_and_unfused_batch_events_are_bit_identical() {
+        // The batch-event fusion invariant: identical records, fewer
+        // processed events (one Kick saved per fused E/P completion).
+        let mut cfg = quick_cfg("E-P-D", 2.0, 48);
+        let fused = run_serving(&cfg).unwrap();
+        assert!(fused.fused_batch_kicks > 0, "E/P traffic must fuse batch kicks");
+        cfg.scheduler.fuse_batch_events = false;
+        let unfused = run_serving(&cfg).unwrap();
+        assert_eq!(fused.metrics.records, unfused.metrics.records);
+        assert_eq!(unfused.fused_batch_kicks, 0);
+        assert!(
+            fused.events_processed < unfused.events_processed,
+            "fused kicks must shed heap events: {} vs {}",
             fused.events_processed,
             unfused.events_processed
         );
@@ -1436,6 +660,16 @@ mod tests {
         let out = run_serving(&cfg).unwrap();
         assert_eq!(out.metrics.completed(), 96);
         assert!(out.reconfig_switches.is_empty());
+    }
+
+    #[test]
+    fn unknown_reconfig_policy_fails_construction() {
+        let mut cfg = quick_cfg("E-P-D-D", 2.0, 8);
+        cfg.reconfig.enabled = true;
+        cfg.reconfig.policy = "bogus".to_string();
+        let err = ServingSim::streamed(cfg).err().expect("unknown reconfig policy");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bogus") && msg.contains("pressure_hysteresis"), "{msg}");
     }
 
     #[test]

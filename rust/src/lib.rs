@@ -13,12 +13,15 @@
 //!   cache management, the MM-Store multimodal feature pool, the two
 //!   cross-stage transmission engines (E-P asynchronous feature prefetching,
 //!   P-D hierarchically grouped KV transmission), and runtime **elastic
-//!   stage re-provisioning** ([`coordinator::reconfig`]). Because the
-//!   paper's Ascend testbed is not available, stage execution is pluggable:
-//!   either a calibrated discrete-event **NPU simulator** ([`npu`], [`sim`])
-//!   or a **real CPU-PJRT engine** (`engine`/`runtime`, behind the `pjrt`
-//!   feature) running a tiny JAX/Pallas multimodal model AOT-compiled to
-//!   HLO.
+//!   stage re-provisioning** ([`coordinator::reconfig`]). The simulation
+//!   core is **sharded per replica** ([`coordinator::shard`]) and runs on
+//!   either of two bit-identical engines: the single-loop reference or
+//!   the parallel multi-replica executor ([`coordinator::sharded`]).
+//!   Because the paper's Ascend testbed is not available, stage execution
+//!   is pluggable: either a calibrated discrete-event **NPU simulator**
+//!   ([`npu`], [`sim`]) or a **real CPU-PJRT engine** (`engine`/`runtime`,
+//!   behind the `pjrt` feature) running a tiny JAX/Pallas multimodal model
+//!   AOT-compiled to HLO.
 //! * **Layer 2** (`python/compile/model.py`): the JAX model (ViT encoder +
 //!   decoder LM) lowered once at build time.
 //! * **Layer 1** (`python/compile/kernels/`): Pallas attention kernels.

@@ -55,6 +55,16 @@ impl StoreStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Fold another partition's counters into this one (the sharded store
+    /// is partitioned per replica; run reports aggregate the partitions).
+    pub fn absorb(&mut self, other: &StoreStats) {
+        self.puts += other.puts;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.dedup_puts += other.dedup_puts;
+    }
 }
 
 /// Sentinel for "no node" in the intrusive list.

@@ -1,22 +1,37 @@
 //! Deterministic discrete-event engine.
 //!
 //! Events are ordered by `(time, class, sequence)`: at equal times,
-//! **arrival-class** events ([`EventQueue::at_arrival`]) fire before normal
-//! ones, and ties within a class break in scheduling order — so runs are
-//! bit-reproducible under a fixed seed, and a lazily-scheduled arrival
-//! stream orders exactly like the old schedule-everything-up-front pattern
-//! (where arrivals held the lowest sequence numbers by construction). Time
-//! is kept as integer nanoseconds internally to make the ordering total (no
-//! NaN/epsilon traps) and the run loop compares in integer ns (no ns→f64
-//! conversion per peek); the public API speaks f64 seconds.
+//! **arrival-class** events ([`EventQueue::at_arrival`]) fire first, then
+//! **control-class** events ([`EventQueue::at_control`] — the periodic
+//! control-plane epochs a [`Ticker`] arms), then normal ones; ties within a
+//! class break in scheduling order — so runs are bit-reproducible under a
+//! fixed seed, and a lazily-scheduled arrival stream orders exactly like
+//! the old schedule-everything-up-front pattern (where arrivals held the
+//! lowest sequence numbers by construction). Time is kept as integer
+//! nanoseconds internally to make the ordering total (no NaN/epsilon traps)
+//! and the run loop compares in integer ns (no ns→f64 conversion per peek);
+//! the public API speaks f64 seconds.
+//!
+//! The class layering is what makes the **sharded** multi-replica executor
+//! ([`crate::coordinator::sharded`]) bit-identical to this single loop: all
+//! cross-shard coupling happens at arrival- and control-class events, which
+//! by construction order *before* every same-timestamp normal (shard-local)
+//! event — so "advance every shard through all events strictly earlier than
+//! the coordination timestamp" reproduces exactly the state this loop's
+//! merge order would expose to the coordination handler. Same-timestamp
+//! normal events in *different* shards touch disjoint state, so their
+//! relative order (global sequence here, replica id there) is unobservable.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 /// Same-timestamp scheduling class of arrival events (fire first).
 const CLASS_ARRIVAL: u8 = 0;
+/// Same-timestamp class of control-plane epochs (after arrivals, before
+/// normal events).
+const CLASS_CONTROL: u8 = 1;
 /// Same-timestamp scheduling class of ordinary events.
-const CLASS_NORMAL: u8 = 1;
+const CLASS_NORMAL: u8 = 2;
 
 /// Round seconds to the engine's integer-nanosecond grid — exactly the
 /// rounding [`EventQueue::at`] applies, exposed so models that fuse work
@@ -142,10 +157,29 @@ impl<E> EventQueue<E> {
         self.push(t, CLASS_ARRIVAL, event);
     }
 
+    /// Schedule a **control-class** event: at equal timestamps it fires
+    /// after every arrival but before every normal event, regardless of
+    /// scheduling order. Control-plane epochs (elastic-reconfiguration
+    /// ticks) use this so their position in the merge order is a function
+    /// of *time alone* — the property the sharded executor's conservative
+    /// barrier relies on (a shard-local normal event at the same nanosecond
+    /// must not race the epoch, in either engine).
+    pub fn at_control(&mut self, t: f64, event: E) {
+        self.push(t, CLASS_CONTROL, event);
+    }
+
     /// Schedule after a delay from now.
     pub fn after(&mut self, dt: f64, event: E) {
         debug_assert!(dt >= 0.0, "negative delay {dt}");
         self.at(self.now() + dt.max(0.0), event);
+    }
+
+    /// Pop the earliest pending event, advancing the clock to it. Public
+    /// for coordination loops (the sharded executor drains its own
+    /// coordination queue event by event between shard rounds); ordinary
+    /// models should use [`run`].
+    pub fn pop_next(&mut self) -> Option<(f64, E)> {
+        self.pop()
     }
 
     fn pop(&mut self) -> Option<(f64, E)> {
@@ -190,12 +224,18 @@ impl Ticker {
 
     /// Schedule `event` at the next grid slot not earlier than the queue's
     /// current time, then advance the grid. Returns the scheduled time.
+    ///
+    /// The event is **control-class** ([`EventQueue::at_control`]): a tick
+    /// landing on the same nanosecond as ordinary model events fires before
+    /// all of them, so the tick's position in the merge order depends only
+    /// on its timestamp — never on scheduling-sequence ties with model
+    /// events, which the sharded executor could not reproduce.
     pub fn arm<E>(&mut self, q: &mut EventQueue<E>, event: E) -> f64 {
         while self.next_ns < q.now_ns {
             self.next_ns += self.period_ns;
         }
         let t = self.next_ns as f64 / 1e9;
-        q.at(t, event);
+        q.at_control(t, event);
         self.next_ns += self.period_ns;
         t
     }
@@ -258,6 +298,31 @@ pub fn run<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, until: f64)
         }
     }
     q.now()
+}
+
+/// Run every pending event with `time_ns` **strictly below** `bound_ns`
+/// (an exclusive integer-ns window), or until the model says done. Returns
+/// the number of events processed.
+///
+/// This is the sharded executor's per-round shard drive: a coordination
+/// event at `bound_ns` must observe each shard exactly as the single-loop
+/// merge would — all strictly-earlier events applied, all `>= bound_ns`
+/// events still pending (same-nanosecond shard events order *after* the
+/// arrival/control-class coordination event in the single loop).
+pub fn run_window<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, bound_ns: u64) -> u64 {
+    let mut processed = 0;
+    while let Some(Reverse(head)) = q.heap.peek() {
+        if head.time_ns >= bound_ns {
+            break;
+        }
+        let (now, ev) = q.pop().expect("peeked");
+        model.handle(now, ev, q);
+        processed += 1;
+        if model.done() {
+            break;
+        }
+    }
+    processed
 }
 
 #[cfg(test)]
@@ -398,6 +463,65 @@ mod tests {
         run(&mut m, &mut q, 10.0);
         let order: Vec<u32> = m.seen.iter().map(|&(_, n)| n).collect();
         assert_eq!(order, vec![1, 2, 99]);
+    }
+
+    #[test]
+    fn control_class_fires_between_arrivals_and_normals() {
+        // Schedule normal first, then control, then arrival — all at t=1.
+        // Merge order must be arrival < control < normal regardless of
+        // scheduling sequence.
+        let mut q = EventQueue::new();
+        q.at(1.0, Ev::Tick(3));
+        q.at_control(1.0, Ev::Tick(2));
+        q.at_arrival(1.0, Ev::Tick(1));
+        q.at_control(1.0, Ev::Tick(20)); // controls keep schedule order
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 10.0);
+        let order: Vec<u32> = m.seen.iter().map(|&(_, n)| n).collect();
+        assert_eq!(order, vec![1, 2, 20, 3]);
+    }
+
+    #[test]
+    fn ticker_events_precede_same_time_normal_events() {
+        // A tick armed on the grid must fire before a normal event that was
+        // scheduled earlier at the exact same timestamp.
+        let mut q = EventQueue::new();
+        q.at(2.0, Ev::Tick(9));
+        let mut t = Ticker::new(2.0, 2.0);
+        t.arm(&mut q, Ev::Tick(1));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        run(&mut m, &mut q, 10.0);
+        let order: Vec<u32> = m.seen.iter().map(|&(_, n)| n).collect();
+        assert_eq!(order, vec![1, 9]);
+    }
+
+    #[test]
+    fn run_window_bound_is_exclusive() {
+        let mut q = EventQueue::new();
+        q.at(1.0, Ev::Tick(1));
+        q.at(2.0, Ev::Tick(2));
+        q.at(3.0, Ev::Tick(3));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        let n = run_window(&mut m, &mut q, sec_to_ns(2.0));
+        assert_eq!(n, 1, "the event exactly at the bound stays pending");
+        assert_eq!(m.seen, vec![(1.0, 1)]);
+        assert_eq!(q.pending(), 2);
+        // A later window picks up where the previous one stopped.
+        let n = run_window(&mut m, &mut q, u64::MAX);
+        assert_eq!(n, 2);
+        assert_eq!(m.seen.len(), 3);
+    }
+
+    #[test]
+    fn pop_next_exposes_merge_order() {
+        let mut q = EventQueue::new();
+        q.at(1.0, Ev::Tick(2));
+        q.at_arrival(1.0, Ev::Tick(1));
+        let (t1, e1) = q.pop_next().unwrap();
+        assert_eq!((t1, e1), (1.0, Ev::Tick(1)));
+        let (_, e2) = q.pop_next().unwrap();
+        assert_eq!(e2, Ev::Tick(2));
+        assert!(q.pop_next().is_none());
     }
 
     #[test]

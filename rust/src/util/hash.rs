@@ -11,14 +11,42 @@
 //! inputs collide, distinct inputs do not, up to the 64-bit birthday bound —
 //! negligible at simulated pool sizes).
 
-/// 64-bit FNV-1a. Fast, non-cryptographic.
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+/// Streaming 64-bit FNV-1a state: byte-sequential, so chunked
+/// [`Fnv1a::update`] calls produce exactly the digest of the
+/// concatenation — which lets callers hash multi-gigabyte logical inputs
+/// (e.g. a 10M-record serialization) through a small reusable buffer
+/// instead of materializing one giant `String`.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
     }
-    h
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// 64-bit FNV-1a of one contiguous buffer. Fast, non-cryptographic.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
 }
 
 /// SplitMix64 finalizer: full-avalanche bit mix. FNV-1a alone diffuses the
@@ -69,6 +97,15 @@ mod tests {
         assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
         assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_fnv_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
     }
 
     #[test]

@@ -1,58 +1,47 @@
-//! Determinism regression tests for the simulator hot-path overhaul.
+//! Determinism regression tests for the simulator hot paths and the
+//! sharded multi-replica engine.
 //!
-//! Three layers of protection for the per-request record trajectory:
+//! Five layers of protection for the per-request record trajectory:
 //!
 //! 1. **Fused vs per-token decode**: the macro-stepping fast path must be
 //!    record-bit-identical to the one-event-per-token baseline it replaced
 //!    (the baseline is still runnable via
 //!    `scheduler.fuse_decode_steps = false`).
-//! 2. **Streamed vs materialized workload**: the lazy arrival source must
+//! 2. **Fused vs per-event batch kicks**: batch-event fusion
+//!    (`scheduler.fuse_batch_events`) must be record-bit-identical to the
+//!    `NpuCheck`+`Kick`-pair baseline.
+//! 3. **Streamed vs materialized workload**: the lazy arrival source must
 //!    reproduce the generate→inject→replay path exactly.
-//! 3. **Golden digests**: an FNV-1a digest over the full bit pattern of
-//!    every record, snapshotted under `tests/golden/`. On first run (or
-//!    after an intentional behavior change, by deleting the file) the
-//!    digest is written; afterwards any drift — scheduling, routing,
-//!    timing, RNG — fails here with both values.
+//! 4. **Sharded vs single-loop engine**: the parallel multi-replica
+//!    executor must be record-bit-identical to the single-loop reference —
+//!    including for the stateful `round_robin` balance policy (whose
+//!    scope-keyed cursors are exactly what makes the policy-state
+//!    partition across router/shards sound) and under elastic
+//!    re-provisioning.
+//! 5. **Golden digests**: an FNV-1a digest over the full bit pattern of
+//!    every record ([`records_digest`]), snapshotted under `tests/golden/`.
+//!    On first run (or after an intentional behavior change, by deleting
+//!    the file) the digest is written; afterwards any drift — scheduling,
+//!    routing, timing, RNG — fails here with both values.
 //!
-//!    NOTE: layer 3 only *arms* once the bootstrapped `.digest` files are
+//!    NOTE: layer 5 only *arms* once the bootstrapped `.digest` files are
 //!    **committed** — a fresh checkout without them re-bootstraps and
-//!    passes. Layers 1 and 2 carry the equivalence proof unconditionally;
+//!    passes. Layers 1–4 carry the equivalence proofs unconditionally;
 //!    commit `tests/golden/` after the first toolchain run to pin the
-//!    trajectory across checkouts.
+//!    trajectory across checkouts (the CI "golden digests committed" step
+//!    fails until they are — see docs/PERFORMANCE.md).
 //!
-//! Scenarios are the two shipped configs the README's bench table anchors
-//! on: `table5_epd` (full disaggregation) and `throughput_colocated`
-//! (single-NPU co-location), at reduced request counts.
+//! Scenarios: the two shipped configs the README's bench table anchors on
+//! (`table5_epd`, `throughput_colocated`) at reduced request counts, plus
+//! two multi-replica scenarios (default policies and `round_robin`) that
+//! exercise the sharded engine's coordination boundary.
 
 use epd_serve::config::Config;
-use epd_serve::coordinator::metrics::RequestRecord;
+use epd_serve::coordinator::metrics::records_digest;
 use epd_serve::coordinator::simserve::{run_serving, ServingSim};
-use epd_serve::util::hash::fnv1a;
-use epd_serve::workload::injector::{inject, Arrival};
 use epd_serve::workload::generate;
+use epd_serve::workload::injector::{inject, Arrival};
 use std::path::Path;
-
-/// Canonical, bit-exact serialization of a record set: every f64 by its
-/// raw bit pattern, every field in a fixed order.
-fn digest(records: &[RequestRecord]) -> u64 {
-    let mut buf = String::new();
-    for r in records {
-        let opt = |v: Option<f64>| v.map(|x| format!("{:016x}", x.to_bits())).unwrap_or("-".into());
-        buf.push_str(&format!(
-            "{}|{}|{:016x}|{}|{}|{}|{}|{}|{};",
-            r.id,
-            r.multimodal as u8,
-            r.arrival.to_bits(),
-            opt(r.ttft),
-            opt(r.tpot),
-            r.output_tokens,
-            opt(r.finish),
-            r.recomputed as u8,
-            r.feature_reused as u8,
-        ));
-    }
-    fnv1a(buf.as_bytes())
-}
 
 fn load_scenario(name: &str, requests: usize) -> Config {
     let mut cfg = Config::load(&format!("configs/{name}.toml"))
@@ -82,20 +71,19 @@ fn assert_golden(name: &str, got: u64) {
             std::fs::write(&path, format!("{got:016x}\n")).expect("write golden digest");
             eprintln!(
                 "golden digest for '{name}' bootstrapped at {} — COMMIT this file: \
-                 until it is in the tree, fresh checkouts re-bootstrap and layer 3 \
-                 cannot detect drift",
+                 until it is in the tree, fresh checkouts re-bootstrap and the snapshot \
+                 layer cannot detect drift",
                 path.display()
             );
         }
     }
 }
 
-/// Full equivalence + snapshot run for one scenario.
-fn check_scenario(name: &str, requests: usize) {
-    let cfg = load_scenario(name, requests);
-
+/// Full equivalence + snapshot run for one scenario: all engine and
+/// fusion variants of the same config must agree record for record.
+fn check_scenario(name: &str, cfg: &Config) {
     // Layer 1: fused decode ≡ per-token decode.
-    let fused = run_serving(&cfg).unwrap();
+    let fused = run_serving(cfg).unwrap();
     let mut unfused_cfg = cfg.clone();
     unfused_cfg.scheduler.fuse_decode_steps = false;
     let unfused = run_serving(&unfused_cfg).unwrap();
@@ -108,7 +96,17 @@ fn check_scenario(name: &str, requests: usize) {
         "{name}: fusing must never add events"
     );
 
-    // Layer 2: streamed workload ≡ materialized trace replay.
+    // Layer 2: fused batch kicks ≡ NpuCheck+Kick pairs.
+    let mut unkicked_cfg = cfg.clone();
+    unkicked_cfg.scheduler.fuse_batch_events = false;
+    let unkicked = run_serving(&unkicked_cfg).unwrap();
+    assert_eq!(
+        fused.metrics.records, unkicked.metrics.records,
+        "{name}: batch-event fusion must be bit-identical to the event-pair baseline"
+    );
+    assert_eq!(unkicked.fused_batch_kicks, 0);
+
+    // Layer 3: streamed workload ≡ materialized trace replay.
     let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
     let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
     let replayed = ServingSim::new(cfg.clone(), arrivals).unwrap().run();
@@ -117,33 +115,110 @@ fn check_scenario(name: &str, requests: usize) {
         "{name}: lazy arrival stream must replay the materialized trace exactly"
     );
 
-    // Layer 3: pinned trajectory.
-    let d = digest(&fused.metrics.records);
-    assert_eq!(d, digest(&unfused.metrics.records), "digest function must be deterministic");
+    // Layer 4: sharded engine ≡ single loop (same config, both fusion
+    // settings — the sharded engine makes different fusion *decisions*,
+    // which must still be unobservable).
+    let sharded = ServingSim::streamed(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(
+        fused.metrics.records, sharded.metrics.records,
+        "{name}: sharded execution must be bit-identical to the single loop"
+    );
+    let mut unfused_sharded_cfg = cfg.clone();
+    unfused_sharded_cfg.scheduler.fuse_decode_steps = false;
+    unfused_sharded_cfg.scheduler.fuse_batch_events = false;
+    let unfused_sharded =
+        ServingSim::streamed(unfused_sharded_cfg).unwrap().run_sharded();
+    assert_eq!(
+        fused.metrics.records, unfused_sharded.metrics.records,
+        "{name}: unfused sharded execution must also match"
+    );
+
+    // Layer 5: pinned trajectory.
+    let d = records_digest(&fused.metrics.records);
+    assert_eq!(
+        d,
+        records_digest(&unfused.metrics.records),
+        "digest function must be deterministic"
+    );
     assert_golden(name, d);
 }
 
 #[test]
 fn table5_epd_trajectory_pinned() {
-    check_scenario("table5_epd", 256);
+    check_scenario("table5_epd", &load_scenario("table5_epd", 256));
 }
 
 #[test]
 fn throughput_colocated_trajectory_pinned() {
-    check_scenario("throughput_colocated", 128);
+    check_scenario("throughput_colocated", &load_scenario("throughput_colocated", 128));
+}
+
+#[test]
+fn multi_replica_trajectory_pinned() {
+    // The sharded engine's home turf: four replicas, real routing choice
+    // at every arrival, cross-partition residency probes.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx4".to_string();
+    cfg.rate = 8.0;
+    cfg.workload.num_requests = 192;
+    cfg.workload.image_reuse = 0.3;
+    check_scenario("multi_replica_epd_x4", &cfg);
+}
+
+#[test]
+fn round_robin_stateful_trajectory_pinned() {
+    // The stateful-policy layer (ROADMAP): round_robin's scope-keyed
+    // cursors could in principle observe same-timestamp event reordering
+    // under fusion or sharding — pin all variants to one trajectory
+    // before sweeps depend on it.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = 128;
+    cfg.scheduler.balance_policy = "round_robin".to_string();
+    check_scenario("round_robin_x2", &cfg);
+}
+
+#[test]
+fn elastic_sharded_trajectory_pinned() {
+    // Sharded ≡ single-loop under in-flight re-provisioning: switches
+    // migrate queues and KV at coordination epochs — the hardest case for
+    // the barrier argument — and the committed switch history must agree
+    // exactly.
+    use epd_serve::workload::phases::{generate_phased, PhasePlan};
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.scheduler.max_encode_batch = 2;
+    cfg.reconfig.enabled = true;
+    cfg.reconfig.min_backlog_tokens = 6144;
+    let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+    let arrivals = generate_phased(&cfg.workload, &cfg.model.vit, &plan, cfg.seed);
+    let single = ServingSim::new(cfg.clone(), arrivals.clone()).unwrap().run();
+    let sharded = ServingSim::new(cfg.clone(), arrivals).unwrap().run_sharded();
+    assert_eq!(single.metrics.records, sharded.metrics.records);
+    assert_eq!(single.reconfig_switches, sharded.reconfig_switches);
+    assert!(!single.reconfig_switches.is_empty(), "scenario must exercise switches");
+    // Unfused sharded under elastic, too.
+    let mut unfused = cfg.clone();
+    unfused.scheduler.fuse_decode_steps = false;
+    unfused.scheduler.fuse_batch_events = false;
+    let specs = generate_phased(&unfused.workload, &unfused.model.vit, &plan, unfused.seed);
+    let unfused_sharded = ServingSim::new(unfused, specs).unwrap().run_sharded();
+    assert_eq!(single.metrics.records, unfused_sharded.metrics.records);
+    assert_golden("elastic_phased_x2", records_digest(&single.metrics.records));
 }
 
 #[test]
 fn digest_is_sensitive_to_any_field() {
     let cfg = load_scenario("table5_epd", 32);
     let out = run_serving(&cfg).unwrap();
-    let base = digest(&out.metrics.records);
+    let base = records_digest(&out.metrics.records);
     let mut tweaked = out.metrics.records.clone();
     tweaked[7].ttft = tweaked[7].ttft.map(|t| t + 1e-12);
-    assert_ne!(base, digest(&tweaked), "a 1 ps TTFT shift must change the digest");
+    assert_ne!(base, records_digest(&tweaked), "a 1 ps TTFT shift must change the digest");
     let mut flagged = out.metrics.records.clone();
     flagged[3].recomputed = !flagged[3].recomputed;
-    assert_ne!(base, digest(&flagged));
+    assert_ne!(base, records_digest(&flagged));
 }
 
 #[test]
@@ -151,7 +226,8 @@ fn repeated_runs_share_one_digest() {
     let cfg = load_scenario("throughput_colocated", 64);
     let a = run_serving(&cfg).unwrap();
     let b = run_serving(&cfg).unwrap();
-    assert_eq!(digest(&a.metrics.records), digest(&b.metrics.records));
+    assert_eq!(records_digest(&a.metrics.records), records_digest(&b.metrics.records));
     assert_eq!(a.events_processed, b.events_processed);
     assert_eq!(a.fused_decode_steps, b.fused_decode_steps);
+    assert_eq!(a.fused_batch_kicks, b.fused_batch_kicks);
 }

@@ -115,6 +115,27 @@ fn fused_decode_equivalence_holds_under_non_default_policies() {
 }
 
 #[test]
+fn every_policy_combo_is_engine_invariant() {
+    // The sharded engine must reproduce the single loop for EVERY
+    // registered route × balance × batch combination — including the
+    // stateful round_robin balancer, whose scope-keyed cursors are what
+    // makes the router/shard policy-state partition sound.
+    for &route in ROUTE_POLICIES {
+        for &balance in BALANCE_POLICIES {
+            for &batch in BATCH_POLICIES {
+                let c = with_policies(cfg("E-P-Dx2", 4.0, 32), route, balance, batch);
+                let single = ServingSim::streamed(c.clone()).unwrap().run();
+                let sharded = ServingSim::streamed(c).unwrap().run_sharded();
+                assert_eq!(
+                    single.metrics.records, sharded.metrics.records,
+                    "{route}/{balance}/{batch} must be engine-invariant"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn phased_stream_source_matches_materialized_replay() {
     // The streamed phased workload must reproduce the materialize-then-
     // replay path record for record, end to end through the serving loop.
