@@ -15,6 +15,13 @@
 //! A stationary control run shows the hysteresis keeping the controller
 //! silent (zero switches, bit-identical records) when there is nothing to
 //! win.
+//!
+//! The **elastic-trigger sweep** then crosses every registered
+//! `reconfig.policy` with tick-interval and dwell-window knobs on the same
+//! phase-shifting workload, emitting per-combo switch counts and serving
+//! metrics into the bench JSON (`trigger_sweep` array) — the
+//! policy-registry substrate the ROADMAP's ElasticMM/RServe comparison
+//! experiments build on.
 
 use epd_serve::bench::{pct_change, print_table, save_json};
 use epd_serve::config::{Config, ReconfigSpec};
@@ -165,6 +172,74 @@ fn main() -> anyhow::Result<()> {
     o.set("stationary_switches", controlled.reconfig_switches.len() as u64)
         .set("stationary_throughput", controlled.metrics.throughput());
     dump.set("stationary_control", o);
+
+    // ---- Elastic-trigger sweep: policy × tick × dwell ---------------------
+    // Every registered trigger policy, crossed with the controller's two
+    // timing knobs, on the identical phase-shifting trace: how trigger
+    // eagerness trades switch count against serving quality.
+    let mut sweep_rows: Vec<Vec<String>> = Vec::new();
+    let mut sweep_entries: Vec<Json> = Vec::new();
+    for &policy in epd_serve::coordinator::policy::RECONFIG_POLICIES {
+        for &tick_s in &[1.0, 2.0] {
+            for &min_dwell_s in &[5.0, 10.0] {
+                let mut c = cfg_for("E-P-D-D", true);
+                c.reconfig.policy = policy.to_string();
+                c.reconfig.tick_s = tick_s;
+                c.reconfig.min_dwell_s = min_dwell_s;
+                let out = ServingSim::phased(c, &plan)?.run();
+                let m = &out.metrics;
+                assert_eq!(
+                    m.completed(),
+                    n,
+                    "{policy}/tick={tick_s}/dwell={min_dwell_s} must complete the workload"
+                );
+                sweep_rows.push(vec![
+                    policy.to_string(),
+                    format!("{tick_s}"),
+                    format!("{min_dwell_s}"),
+                    format!("{}", out.reconfig_switches.len()),
+                    fmt_ms(m.mean_ttft_ms()),
+                    fmt_pct(m.slo_attainment()),
+                    format!("{:.1}", m.throughput()),
+                    format!("{:.1}", m.effective_throughput()),
+                ]);
+                let mut e = Json::obj();
+                e.set("policy", policy)
+                    .set("tick_s", tick_s)
+                    .set("min_dwell_s", min_dwell_s)
+                    .set("switches", out.reconfig_switches.len() as u64)
+                    .set("completed", m.completed())
+                    .set("ttft_ms", m.mean_ttft_ms())
+                    .set("slo", m.slo_attainment())
+                    .set("throughput", m.throughput())
+                    .set("effective_throughput", m.effective_throughput());
+                sweep_entries.push(e);
+            }
+        }
+    }
+    print_table(
+        "elastic-trigger sweep — reconfig.policy × tick_s × min_dwell_s, same phased trace",
+        &["policy", "tick s", "dwell s", "switches", "TTFT ms", "SLO", "thr", "eff-thr"],
+        &sweep_rows,
+    );
+    // The default knob point must reproduce the headline elastic run
+    // exactly (same config ⇒ same controller decisions).
+    let default_point = sweep_rows
+        .iter()
+        .find(|row| row[0] == "pressure_hysteresis" && row[1] == "2" && row[2] == "10")
+        .map(|row| row[3].clone())
+        .expect("default knob point swept");
+    assert_eq!(
+        default_point,
+        format!("{}", elastic.reconfig_switches.len()),
+        "the sweep's default point must match the headline elastic run"
+    );
+    assert!(
+        sweep_rows.iter().any(|r| r[3] != "0"),
+        "at least one trigger combo must switch on a phase-shifting workload"
+    );
+    dump.set("trigger_sweep", sweep_entries);
+
     let path = save_json("elastic_orchestration", &dump)?;
     println!("results saved to {path}");
     Ok(())

@@ -397,6 +397,15 @@ pub struct SchedulerSpec {
     /// [`crate::coordinator::batcher`] functions). `"sjf_prefill"` drains
     /// waiting prefills shortest-prompt-first under the same caps.
     pub batch_policy: String,
+    /// Refresh the coordinator's `ClusterView` routing snapshot every K
+    /// arrivals (and after every committed elastic switch), in **both**
+    /// execution engines. `1` (default) refreshes per arrival and is
+    /// bit-identical to pre-snapshot behavior; `K > 1` lets the sharded
+    /// engine barrier once per epoch instead of once per arrival (K× fewer
+    /// synchronization rounds) at the cost of routing against state up to
+    /// K−1 arrivals stale — deterministic and engine-invariant at every K
+    /// (see [`crate::coordinator::policy::ClusterView`]). Must be ≥ 1.
+    pub route_epoch: usize,
     /// `weighted_least_loaded` score weight of one in-flight work unit
     /// (decode batch slot / running E-P batch) relative to one queued
     /// request. Default 0.5 = the hardcoded default-score weight.
@@ -438,6 +447,7 @@ impl Default for SchedulerSpec {
             route_policy: "modality_path".to_string(),
             balance_policy: "least_loaded".to_string(),
             batch_policy: "fcfs".to_string(),
+            route_epoch: 1,
             balance_active_weight: 0.5,
             balance_token_scale: 4096.0,
             balance_kv_threshold: 0.9,
@@ -694,6 +704,12 @@ impl Config {
             if let Some(v) = sc.get("batch_policy").and_then(Json::as_str) {
                 s.batch_policy = v.to_string();
             }
+            if let Some(v) = sc.get("route_epoch").and_then(Json::as_f64) {
+                if v < 1.0 || v.fract() != 0.0 {
+                    bail!("scheduler.route_epoch must be a positive integer, got {v}");
+                }
+                s.route_epoch = v as usize;
+            }
             if let Some(v) = sc.get("balance_active_weight").and_then(Json::as_f64) {
                 if !v.is_finite() || v < 0.0 {
                     bail!("scheduler.balance_active_weight must be a finite value >= 0, got {v}");
@@ -888,10 +904,25 @@ balance_kv_penalty = 100
             (d.route_policy.as_str(), d.balance_policy.as_str(), d.batch_policy.as_str()),
             ("modality_path", "least_loaded", "fcfs")
         );
+        assert_eq!(d.route_epoch, 1, "per-arrival view refresh is the default");
         assert_eq!(d.balance_active_weight, 0.5);
         assert_eq!(d.balance_token_scale, 4096.0);
         assert_eq!(d.balance_kv_threshold, 0.9);
         assert_eq!(d.balance_kv_penalty, 50.0);
+    }
+
+    #[test]
+    fn route_epoch_decodes_and_rejects_nonsense() {
+        let doc = crate::util::toml::parse("[scheduler]\nroute_epoch = 64\n").unwrap();
+        assert_eq!(Config::from_json(&doc).unwrap().scheduler.route_epoch, 64);
+        for bad in [
+            "[scheduler]\nroute_epoch = 0\n",
+            "[scheduler]\nroute_epoch = -4\n",
+            "[scheduler]\nroute_epoch = 2.5\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
+        }
     }
 
     #[test]

@@ -8,11 +8,17 @@
 //!
 //! The table is **incrementally maintained**: the serving loop pushes an
 //! updated [`InstanceStatus`] whenever an instance's queues, running set, or
-//! KV pool mutate, so routing decisions read the table directly instead of
-//! rebuilding it per decision (the pre-overhaul `refresh_table()` full
-//! rebuild — see `docs/PERFORMANCE.md`). In debug builds the serving loop
-//! cross-checks the table against recomputed ground truth at every
-//! decision, so a missed update site fails `cargo test` loudly.
+//! KV pool mutate, so scheduling decisions read the table directly instead
+//! of rebuilding it per decision (the pre-overhaul `refresh_table()` full
+//! rebuild — see `docs/PERFORMANCE.md`). Stage-scoped decisions inside a
+//! replica shard read the shard's live rows; coordinator-scope routing
+//! reads the copy assembled into the
+//! [`crate::coordinator::policy::ClusterView`] snapshot, which under
+//! `scheduler.route_epoch = K` may lag the live rows by up to K−1 arrivals
+//! (the paper's "real time" tracking is the K = 1 default). In debug
+//! builds the serving loop cross-checks the live table against recomputed
+//! ground truth at every decision, so a missed update site fails
+//! `cargo test` loudly.
 
 /// Live load metrics for one instance, updated by the serving loop.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

@@ -14,9 +14,11 @@
 //! * [`batcher`] — reference FCFS batch formation (encode batch, fused
 //!   prefill batch with a token cap, decode continuous batch).
 //! * [`policy`] — the pluggable scheduling-policy API: `RoutePolicy` /
-//!   `BalancePolicy` / `BatchPolicy` traits + `PolicyCtx` world view +
-//!   string-keyed registry behind the `[scheduler]`
-//!   `route_policy`/`balance_policy`/`batch_policy` config knobs.
+//!   `BalancePolicy` / `BatchPolicy` traits over the versioned
+//!   `ClusterView` epoch snapshot (`ViewCtx` for coordinator decisions,
+//!   `PickCtx` for balance picks) + string-keyed registry behind the
+//!   `[scheduler]` `route_policy`/`balance_policy`/`batch_policy`/
+//!   `route_epoch` config knobs.
 //! * [`metrics`] — TTFT / TPOT / throughput / SLO-attainment accounting
 //!   matching the paper's definitions (§4.1).
 //! * [`adaptive`] — SLO-driven dynamic deployment selection with
@@ -30,11 +32,13 @@
 //!   stage-scoped policy state, closed under every shard-local event.
 //! * [`simserve`] — the coordination boundary wiring shards into the full
 //!   serving system on the single-loop reference engine: arrival routing
-//!   over the assembled status table, elastic epochs, metrics gathering.
+//!   over the `ClusterView` snapshot (refreshed every
+//!   `scheduler.route_epoch` arrivals), elastic epochs, metrics gathering.
 //!   This is what every deployment-comparison bench runs.
 //! * [`sharded`] — the parallel multi-replica engine: per-shard event
-//!   queues on worker threads with a conservative-time barrier at
-//!   coordination epochs, bit-identical to the single loop.
+//!   queues on worker threads with a conservative-time barrier per
+//!   coordination epoch (one per `route_epoch` arrivals, not one per
+//!   arrival), bit-identical to the single loop.
 
 pub mod adaptive;
 pub mod balancer;

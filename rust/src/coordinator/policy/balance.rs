@@ -1,7 +1,14 @@
 //! [`BalancePolicy`] implementations — instance selection among candidates.
+//!
+//! Balance policies see the world through a [`PickCtx`]: at entry scope
+//! (arrival routing) its table is the [`ClusterView`] snapshot, at stage
+//! scope the shard's live incrementally-maintained rows — the policy code
+//! is identical either way, only the freshness guarantee differs.
+//!
+//! [`ClusterView`]: crate::coordinator::policy::ClusterView
 
 use crate::coordinator::balancer::InstanceStatus;
-use crate::coordinator::policy::{BalancePolicy, PickScope, PolicyCtx};
+use crate::coordinator::policy::{BalancePolicy, PickCtx, PickScope};
 use std::collections::HashMap;
 
 /// Default: the paper's least-loaded-first rule (§3.4) over the hardwired
@@ -15,7 +22,7 @@ impl BalancePolicy for LeastLoaded {
         "least_loaded"
     }
 
-    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize> {
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize> {
         ctx.table.least_loaded(candidates)
     }
 }
@@ -24,7 +31,8 @@ impl BalancePolicy for LeastLoaded {
 /// ([`PickScope`]) over whatever candidate set that site presents. The
 /// classic baseline every load-balancing comparison needs — it shows
 /// exactly what the status table buys (least-loaded-first's win over it
-/// grows with load skew).
+/// grows with load skew). Being table-oblivious it is also natively
+/// staleness-immune: its picks are identical at every `route_epoch`.
 ///
 /// The per-scope keying is what makes this stateful policy
 /// shard-decomposable (the [`BalancePolicy`] contract): entry-scoped
@@ -43,7 +51,7 @@ impl BalancePolicy for RoundRobin {
         "round_robin"
     }
 
-    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize> {
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize> {
         if candidates.is_empty() {
             return None;
         }
@@ -69,7 +77,7 @@ impl BalancePolicy for WeightedLeastLoaded {
         "weighted_least_loaded"
     }
 
-    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize> {
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize> {
         let s = ctx.scheduler;
         ctx.table.least_by(candidates, |st: &InstanceStatus| {
             st.weighted_load_score(
@@ -98,7 +106,7 @@ mod tests {
         t.update(0, InstanceStatus { queue_len: 5, ..Default::default() });
         t.update(2, InstanceStatus { queue_len: 1, ..Default::default() });
         let owner = owner();
-        let ctx = owner.ctx(&t);
+        let ctx = owner.pick(&t, PickScope::Entry);
         assert_eq!(LeastLoaded.pick(&ctx, &[0, 1, 2]), Some(1));
         assert_eq!(LeastLoaded.pick(&ctx, &[]), None);
     }
@@ -107,7 +115,7 @@ mod tests {
     fn round_robin_cycles_deterministically() {
         let t = StatusTable::new(3);
         let owner = owner();
-        let ctx = owner.ctx(&t);
+        let ctx = owner.pick(&t, PickScope::Entry);
         let mut rr = RoundRobin::default();
         let picks: Vec<Option<usize>> = (0..5).map(|_| rr.pick(&ctx, &[4, 7, 9])).collect();
         assert_eq!(picks, vec![Some(4), Some(7), Some(9), Some(4), Some(7)]);
@@ -119,7 +127,7 @@ mod tests {
         let mut t = StatusTable::new(2);
         t.update(0, InstanceStatus { queue_len: 99, ..Default::default() });
         let owner = owner();
-        let ctx = owner.ctx(&t);
+        let ctx = owner.pick(&t, PickScope::Entry);
         let mut rr = RoundRobin::default();
         assert_eq!(rr.pick(&ctx, &[0, 1]), Some(0), "round robin is load-oblivious");
     }
@@ -129,9 +137,9 @@ mod tests {
         use crate::coordinator::policy::StageNeed;
         let t = StatusTable::new(4);
         let owner = owner();
-        let entry = owner.ctx_scoped(&t, PickScope::Entry);
-        let s0 = owner.ctx_scoped(&t, PickScope::Stage { replica: 0, need: StageNeed::Prefill });
-        let s1 = owner.ctx_scoped(&t, PickScope::Stage { replica: 1, need: StageNeed::Prefill });
+        let entry = owner.pick(&t, PickScope::Entry);
+        let s0 = owner.pick(&t, PickScope::Stage { replica: 0, need: StageNeed::Prefill });
+        let s1 = owner.pick(&t, PickScope::Stage { replica: 1, need: StageNeed::Prefill });
         let mut rr = RoundRobin::default();
         // Interleaving scopes must not advance each other's cursors: the
         // partition of these key spaces across router/shards is exactly
@@ -157,7 +165,7 @@ mod tests {
         t.update(2, InstanceStatus { kv_utilization: 0.97, ..Default::default() });
         t.update(3, InstanceStatus { queue_len: 1, ..Default::default() });
         let owner = owner();
-        let ctx = owner.ctx(&t);
+        let ctx = owner.pick(&t, PickScope::Entry);
         let cands = [0, 1, 2, 3];
         assert_eq!(WeightedLeastLoaded.pick(&ctx, &cands), LeastLoaded.pick(&ctx, &cands));
     }
@@ -171,8 +179,14 @@ mod tests {
         t.update(0, InstanceStatus { queue_len: 3, ..Default::default() });
         t.update(1, InstanceStatus { queue_len: 1, pending_tokens: 6000, ..Default::default() });
         let mut owner = owner();
-        assert_eq!(WeightedLeastLoaded.pick(&owner.ctx(&t), &[0, 1]), Some(1));
+        assert_eq!(
+            WeightedLeastLoaded.pick(&owner.pick(&t, PickScope::Entry), &[0, 1]),
+            Some(1)
+        );
         owner.sched.balance_token_scale = 1000.0;
-        assert_eq!(WeightedLeastLoaded.pick(&owner.ctx(&t), &[0, 1]), Some(0));
+        assert_eq!(
+            WeightedLeastLoaded.pick(&owner.pick(&t, PickScope::Entry), &[0, 1]),
+            Some(0)
+        );
     }
 }

@@ -1,5 +1,5 @@
 //! Pluggable scheduling-policy API — the coordinator's decision surface as
-//! config-selectable traits.
+//! config-selectable traits over an **epoch-snapshot cluster view**.
 //!
 //! The paper (§3.4) pitches *multi-route scheduling* and *instance-level
 //! dynamic load balancing* as first-class, swappable mechanisms; related
@@ -15,11 +15,29 @@
 //! | [`BatchPolicy`] | E/P batch formation + decode admission quota | `batch_policy` | `fcfs` |
 //! | [`ReconfigPolicy`] | elastic re-provisioning trigger per tick | `reconfig.policy` | `pressure_hysteresis` |
 //!
-//! All three see the world through [`PolicyCtx`]: the global status table,
-//! MM-Store residency, the (possibly elastically reshaped) deployment with
-//! its cached per-replica candidate sets, and the simulation clock. The
-//! **defaults reproduce the pre-policy-API behavior bit-exactly** — the
-//! `determinism_golden` test layers pin that equivalence.
+//! ## The `ClusterView` snapshot contract
+//!
+//! Coordinator-scope decisions (arrival routing, entry-scoped balancing)
+//! see the cluster **only** through a [`ClusterView`]: an immutable,
+//! versioned snapshot of the status rows, the deployment shape with its
+//! candidate cache, and an MM-Store residency summary, stamped with a
+//! refresh epoch and clock. The serving system refreshes the view every
+//! `scheduler.route_epoch` arrivals (and after every committed elastic
+//! switch); between refreshes the view does not change, so the sharded
+//! engine needs **one synchronization barrier per epoch instead of one per
+//! arrival** — and the single-loop engine snapshots on the *same* schedule,
+//! keeping the two engines bit-identical at every epoch length. The
+//! default `route_epoch = 1` refreshes at every arrival and reproduces the
+//! pre-snapshot behavior bit-exactly (pinned by the `determinism_golden`
+//! layers).
+//!
+//! Coordinator policies receive a [`ViewCtx`] (snapshot borrows only — the
+//! type cannot express a live probe); shard-local balance picks receive a
+//! [`PickCtx`] built from the shard's own incrementally-maintained table,
+//! which is exact because the pick happens inside the shard's event stream.
+//! Every coordinator decision is therefore *explicitly staleness-aware*:
+//! the view can lag the cluster by at most `route_epoch − 1` arrivals, and
+//! a policy that needs fresher data has no backdoor to get it.
 //!
 //! ## Registry
 //!
@@ -52,10 +70,9 @@ use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::batcher::{EncodeItem, PrefillItem};
 use crate::coordinator::deployment::Deployment;
 use crate::coordinator::router::Route;
-use crate::mmstore::MmStore;
 use crate::workload::RequestSpec;
 use anyhow::{bail, Result};
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 /// Which stage capability a scheduling decision needs. Selecting via this
 /// enum hits the pre-materialized per-replica candidate cache
@@ -97,10 +114,10 @@ pub enum PickScope {
 
 /// Per-replica candidate instance sets, rebuilt only when the routed
 /// topology changes (boot + elastic switches). This is the hot-path cache
-/// the million-request overhaul introduced; policies read it through
-/// [`PolicyCtx`] instead of walking the deployment. The router and every
-/// replica shard own a copy (`Clone`), each authoritative for the rows it
-/// reads — the coordination boundary rebuilds them together on a switch.
+/// the million-request overhaul introduced; coordinator policies read the
+/// [`ClusterView`]'s copy through [`ViewCtx`], replica shards their own
+/// through the stage-dispatch paths. The coordination boundary rebuilds
+/// every copy together on an elastic switch.
 #[derive(Clone)]
 pub struct StageCands {
     enc: Vec<Vec<usize>>,
@@ -135,34 +152,125 @@ impl StageCands {
     }
 }
 
-/// The read-only world view every policy decision sees: the incrementally
-/// maintained status table, MM-Store residency, the deployment (as routed —
-/// it reshapes under elastic re-provisioning) with its cached candidate
-/// sets, the active scheduler/SLO config, and the simulation clock.
-pub struct PolicyCtx<'a> {
-    /// Global instance status table (§3.4), incrementally maintained by the
-    /// serving loop at every queue/KV mutation.
+/// MM-Store residency as captured by a [`ClusterView`] refresh — the
+/// snapshot replacement for the old per-arrival live probe over every
+/// replica's partition.
+pub enum ResidencyView {
+    /// `route_epoch = 1`: the view is refreshed at every arrival, so "at
+    /// the view's stamp" and "now" coincide — [`ResidencyView::contains`]
+    /// returns `None` and the coordination boundary probes the partitions
+    /// directly, keeping the key-set copy off the per-arrival hot path
+    /// while remaining semantically a snapshot (taken at this instant).
+    Fresh,
+    /// `route_epoch > 1`: the union of every partition's resident content
+    /// keys at refresh time. Up to `route_epoch − 1` subsequent arrivals
+    /// route against it. A stale `true` (key evicted since the refresh)
+    /// degrades to the §3.2 local-recompute path at prefill; a stale
+    /// `false` (key produced since) re-encodes — both deterministic,
+    /// neither loses requests.
+    Snapshot(HashSet<u64>),
+}
+
+impl ResidencyView {
+    /// Snapshot membership, or `None` when the view is [`Fresh`] and the
+    /// caller should probe live state (exact, because fresh views are
+    /// refreshed at the very arrival being routed).
+    ///
+    /// [`Fresh`]: ResidencyView::Fresh
+    pub fn contains(&self, key: u64) -> Option<bool> {
+        match self {
+            ResidencyView::Fresh => None,
+            ResidencyView::Snapshot(keys) => Some(keys.contains(&key)),
+        }
+    }
+}
+
+/// An immutable, versioned snapshot of everything a coordinator-scope
+/// scheduling decision may read: the assembled status rows, the routed
+/// deployment shape with its candidate cache, the MM-Store residency
+/// summary, and an epoch/clock stamp. Refreshed by the serving system
+/// every `scheduler.route_epoch` arrivals and after every committed
+/// elastic switch — in **both** execution engines, on the same schedule,
+/// which is what lets the sharded engine barrier once per epoch instead of
+/// once per arrival while staying bit-identical to the single loop.
+pub struct ClusterView {
+    /// Refresh counter: 0 = never refreshed (the view is not yet readable),
+    /// then +1 per refresh.
+    pub epoch: u64,
+    /// Simulation time of the last refresh, seconds.
+    pub stamp: f64,
+    /// Number of arrivals routed before this refresh — routing staleness of
+    /// arrival `i` is `i − arrival_seq`, bounded by `route_epoch − 1`.
+    pub arrival_seq: u64,
+    /// Status rows assembled from every shard at the refresh
+    /// ([`crate::coordinator::shard::ReplicaShard::flush_rows`]).
+    pub table: StatusTable,
+    /// The routed deployment topology as of the refresh.
+    pub dep: Deployment,
+    /// Cached per-replica candidate sets for `dep`.
+    pub cands: StageCands,
+    /// MM-Store residency summary as of the refresh.
+    pub residency: ResidencyView,
+    /// Topology generation `dep`/`cands` reflect — lets a refresh skip the
+    /// deployment clone unless an elastic switch actually happened.
+    pub(crate) topo_gen: u64,
+}
+
+impl ClusterView {
+    /// An un-refreshed view for a freshly parsed deployment (`epoch` 0; the
+    /// serving system refreshes before the first routing decision).
+    pub fn new(dep: &Deployment) -> Self {
+        Self {
+            epoch: 0,
+            stamp: 0.0,
+            arrival_seq: 0,
+            table: StatusTable::new(dep.instances.len()),
+            dep: dep.clone(),
+            cands: StageCands::build(dep),
+            residency: ResidencyView::Fresh,
+            topo_gen: 0,
+        }
+    }
+
+    /// Copy the authoritative topology in, but only when its generation
+    /// moved (elastic switches are rare; arrivals are not).
+    pub(crate) fn absorb_topology(&mut self, dep: &Deployment, cands: &StageCands, topo_gen: u64) {
+        if self.topo_gen != topo_gen {
+            self.dep = dep.clone();
+            self.cands = cands.clone();
+            self.topo_gen = topo_gen;
+        }
+    }
+
+    /// Advance the version stamp at the end of a refresh.
+    pub(crate) fn mark_refreshed(&mut self, now: f64, arrival_seq: u64) {
+        self.epoch += 1;
+        self.stamp = now;
+        self.arrival_seq = arrival_seq;
+    }
+}
+
+/// The world view of a **coordinator-scope** decision ([`RoutePolicy`] and
+/// entry-scoped balancing): borrows of the [`ClusterView`] snapshot plus
+/// the active config — no live cluster state. Constructed by the serving
+/// system's coordination boundary via [`ViewCtx::of`]; the epoch/stamp
+/// fields make the snapshot's age explicit to any policy that cares.
+pub struct ViewCtx<'a> {
+    /// Snapshot status rows (as of `stamp`, not "now").
     pub table: &'a StatusTable,
-    /// The routed deployment topology. Under elastic re-provisioning this
-    /// is the *desired* (post-switch) topology from the instant a switch is
-    /// planned.
+    /// Snapshot deployment topology.
     pub dep: &'a Deployment,
-    /// Cached per-replica encode/prefill/decode candidate sets for `dep`.
+    /// Snapshot per-replica candidate sets.
     pub cands: &'a StageCands,
-    /// MM Store, for residency probes beyond the routed request's own
-    /// `feature_resident` flag. Since the sharded-engine refactor the store
-    /// is **partitioned per replica**: stage-scoped picks see their own
-    /// replica's partition here; entry-scoped (router) contexts carry
-    /// `None` — cross-partition residency is probed by the coordinator and
-    /// passed to [`RoutePolicy::route`] as the explicit `feature_resident`
-    /// argument ([`CacheAffinity`] documents why it hash-pins instead of
-    /// probing).
-    pub store: Option<&'a MmStore>,
-    /// Active scheduler knobs (batch caps, policy weights).
+    /// The view's refresh epoch.
+    pub epoch: u64,
+    /// Simulation time the view was taken, seconds (≤ `now`).
+    pub stamp: f64,
+    /// Active scheduler knobs (batch caps, policy weights, `route_epoch`).
     pub scheduler: &'a SchedulerSpec,
     /// Active SLO constraints (drives [`SloAware`] routing).
     pub slo: &'a SloSpec,
-    /// Simulation clock, seconds.
+    /// Decision time, seconds — the arrival being routed, not the snapshot.
     pub now: f64,
     /// Estimated steady-state prefill service rate of one instance,
     /// prompt tokens/s (from the calibrated cost model; 0 when unknown).
@@ -170,17 +278,57 @@ pub struct PolicyCtx<'a> {
     /// Estimated steady-state encode service rate of one instance,
     /// visual tokens/s (0 when unknown).
     pub encode_tok_s: f64,
-    /// The decision site this context serves — the state key for stateful
-    /// balance policies (see [`PickScope`]).
-    pub scope: PickScope,
 }
 
-impl PolicyCtx<'_> {
-    /// Does the MM Store currently hold features for this content key?
-    /// `false` when no store is attached.
-    pub fn feature_resident(&self, key: u64) -> bool {
-        self.store.map(|s| s.contains(key)).unwrap_or(false)
+impl<'a> ViewCtx<'a> {
+    /// Assemble the decision ctx from a refreshed snapshot + config.
+    pub fn of(
+        view: &'a ClusterView,
+        scheduler: &'a SchedulerSpec,
+        slo: &'a SloSpec,
+        now: f64,
+        prefill_tok_s: f64,
+        encode_tok_s: f64,
+    ) -> Self {
+        debug_assert!(view.epoch > 0, "routing against a never-refreshed ClusterView");
+        Self {
+            table: &view.table,
+            dep: &view.dep,
+            cands: &view.cands,
+            epoch: view.epoch,
+            stamp: view.stamp,
+            scheduler,
+            slo,
+            now,
+            prefill_tok_s,
+            encode_tok_s,
+        }
     }
+
+    /// The entry-scoped pick ctx a route policy hands to its
+    /// [`BalancePolicy`] — same snapshot table, [`PickScope::Entry`].
+    pub fn pick_ctx(&self) -> PickCtx<'a> {
+        PickCtx { table: self.table, scheduler: self.scheduler, scope: PickScope::Entry }
+    }
+}
+
+/// What a [`BalancePolicy::pick`] may read. Entry-scoped picks are built
+/// from the [`ClusterView`] snapshot ([`ViewCtx::pick_ctx`]); stage-scoped
+/// picks are built by the owning replica shard from its live,
+/// incrementally-maintained table — exact, because the pick happens inside
+/// that shard's own event stream. (The old `PolicyCtx` carried an
+/// `Option<&MmStore>` residency probe here; no balance policy ever read
+/// it, and snapshot discipline forbids it at coordinator scope, so the
+/// parameter is gone.)
+pub struct PickCtx<'a> {
+    /// Status rows: the view snapshot (entry scope) or the shard's live
+    /// table (stage scope).
+    pub table: &'a StatusTable,
+    /// Active scheduler knobs (the `balance_*` weights).
+    pub scheduler: &'a SchedulerSpec,
+    /// The decision site — the state key for stateful balance policies
+    /// (see [`PickScope`]).
+    pub scope: PickScope,
 }
 
 /// Instance selection among a candidate set — subsumes the hardwired
@@ -191,7 +339,7 @@ impl PolicyCtx<'_> {
 /// Implementations may keep internal state (e.g. [`RoundRobin`]'s
 /// cursors); the serving loop's event order is deterministic, so stateful
 /// policies stay deterministic too. Internal state MUST be keyed by
-/// [`PolicyCtx::scope`] (see [`PickScope`]): the serving system partitions
+/// [`PickCtx::scope`] (see [`PickScope`]): the serving system partitions
 /// policy instances across the router and the replica shards, and only
 /// scope-keyed state makes that partition equivalent to one shared
 /// instance — which in turn is what makes the sharded engine bit-identical
@@ -202,7 +350,7 @@ pub trait BalancePolicy: Send {
     fn name(&self) -> &'static str;
     /// Choose one instance from `candidates`. Must be deterministic given
     /// the ctx and the policy's own state.
-    fn pick(&mut self, ctx: &PolicyCtx, candidates: &[usize]) -> Option<usize>;
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize>;
 }
 
 /// Replica + modality-path choice for an arriving request (§3.4 multi-route
@@ -210,16 +358,22 @@ pub trait BalancePolicy: Send {
 /// which instance takes it. Instance selection among the chosen candidate
 /// set is delegated to the active [`BalancePolicy`], so route and balance
 /// policies compose freely.
+///
+/// Route policies read **only** the [`ViewCtx`] snapshot — under
+/// `route_epoch = K` their table/residency inputs may lag the cluster by
+/// up to K−1 arrivals, and implementations must tolerate that (a stale
+/// pick is a worse pick, never a wrong program).
 pub trait RoutePolicy: Send {
     /// Registry name (what the `route_policy` config knob selects).
     fn name(&self) -> &'static str;
-    /// Route one request. `feature_resident` = the MM Store already holds
-    /// this request's image features (Encode can be skipped, §3.2).
-    /// Errors only when the deployment has no instance capable of the
-    /// required entry stage.
+    /// Route one request. `feature_resident` = the MM Store held this
+    /// request's image features at the view's refresh (Encode can be
+    /// skipped, §3.2; an eviction since the refresh degrades to the
+    /// recompute path downstream). Errors only when the deployment has no
+    /// instance capable of the required entry stage.
     fn route(
         &mut self,
-        ctx: &PolicyCtx,
+        ctx: &ViewCtx,
         spec: &RequestSpec,
         feature_resident: bool,
         balance: &mut dyn BalancePolicy,
@@ -314,14 +468,15 @@ pub fn make_reconfig_policy(name: &str) -> Result<Box<dyn ReconfigPolicy>> {
 
 /// All-replica candidate set for a request's entry stage (Encode for
 /// to-be-encoded multimodal requests, Prefill otherwise) — the default
-/// routing pool shared by the route policies.
-pub(crate) fn entry_candidates(ctx: &PolicyCtx, want_encode: bool) -> Vec<usize> {
+/// routing pool shared by the route policies, read from the view's
+/// candidate snapshot.
+pub(crate) fn entry_candidates(ctx: &ViewCtx, want_encode: bool) -> Vec<usize> {
     let need = if want_encode { StageNeed::Encode } else { StageNeed::Prefill };
     (0..ctx.cands.replicas()).flat_map(|r| ctx.cands.get(r, need).iter().copied()).collect()
 }
 
 /// Test scaffold shared by the policy test modules: owns the non-table
-/// pieces a [`PolicyCtx`] borrows.
+/// pieces a [`ViewCtx`] / [`PickCtx`] borrows.
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -349,27 +504,25 @@ pub(crate) mod testutil {
             }
         }
 
-        pub(crate) fn ctx<'a>(&'a self, table: &'a StatusTable) -> PolicyCtx<'a> {
-            self.ctx_scoped(table, PickScope::Entry)
-        }
-
-        pub(crate) fn ctx_scoped<'a>(
-            &'a self,
-            table: &'a StatusTable,
-            scope: PickScope,
-        ) -> PolicyCtx<'a> {
-            PolicyCtx {
+        /// A coordinator-scope routing ctx over `table` (a one-epoch view).
+        pub(crate) fn ctx<'a>(&'a self, table: &'a StatusTable) -> ViewCtx<'a> {
+            ViewCtx {
                 table,
                 dep: &self.dep,
                 cands: &self.cands,
-                store: None,
+                epoch: 1,
+                stamp: 0.0,
                 scheduler: &self.sched,
                 slo: &self.slo,
                 now: 0.0,
                 prefill_tok_s: self.tok_s.0,
                 encode_tok_s: self.tok_s.1,
-                scope,
             }
+        }
+
+        /// A balance-pick ctx over `table` at an arbitrary scope.
+        pub(crate) fn pick<'a>(&'a self, table: &'a StatusTable, scope: PickScope) -> PickCtx<'a> {
+            PickCtx { table, scheduler: &self.sched, scope }
         }
     }
 }
@@ -387,6 +540,7 @@ mod tests {
         assert_eq!(d.route_policy, ROUTE_POLICIES[0]);
         assert_eq!(d.balance_policy, BALANCE_POLICIES[0]);
         assert_eq!(d.batch_policy, BATCH_POLICIES[0]);
+        assert_eq!(d.route_epoch, 1, "route_epoch default must reproduce per-arrival refresh");
     }
 
     #[test]
@@ -435,5 +589,42 @@ mod tests {
         assert_eq!(c.get(0, StageNeed::Encode), &[0]);
         assert_eq!(c.get(0, StageNeed::Prefill), &[1]);
         assert_eq!(c.get(1, StageNeed::Decode), &[3]);
+    }
+
+    #[test]
+    fn cluster_view_starts_unrefreshed_and_versions_forward() {
+        let dep = Deployment::parse("E-P-Dx2").unwrap();
+        let mut v = ClusterView::new(&dep);
+        assert_eq!(v.epoch, 0, "a fresh view must not claim to be refreshed");
+        v.mark_refreshed(1.5, 7);
+        assert_eq!((v.epoch, v.stamp, v.arrival_seq), (1, 1.5, 7));
+        v.mark_refreshed(2.0, 11);
+        assert_eq!((v.epoch, v.stamp, v.arrival_seq), (2, 2.0, 11));
+    }
+
+    #[test]
+    fn absorb_topology_clones_only_on_generation_change() {
+        let dep = Deployment::parse("E-P-D").unwrap();
+        let mut v = ClusterView::new(&dep);
+        let mut authority = dep.clone();
+        // Same generation: the view must keep its current shape even if the
+        // authority mutated (the refresh contract says a generation bump
+        // accompanies every topology change).
+        authority.instances[2].stages = crate::coordinator::deployment::StageSet::E;
+        let cands = StageCands::build(&authority);
+        v.absorb_topology(&authority, &cands, 0);
+        assert!(v.dep.instances[2].stages.decode, "gen 0 snapshot untouched");
+        v.absorb_topology(&authority, &cands, 1);
+        assert!(v.dep.instances[2].stages.encode, "gen 1 must absorb the switch");
+        assert_eq!(v.cands.get(0, StageNeed::Encode), &[0, 2]);
+    }
+
+    #[test]
+    fn residency_fresh_defers_and_snapshot_answers() {
+        let fresh = ResidencyView::Fresh;
+        assert_eq!(fresh.contains(42), None, "fresh views delegate to a live probe");
+        let snap = ResidencyView::Snapshot([1u64, 2, 3].into_iter().collect());
+        assert_eq!(snap.contains(2), Some(true));
+        assert_eq!(snap.contains(9), Some(false));
     }
 }

@@ -1,7 +1,13 @@
 //! [`RoutePolicy`] implementations — replica + modality-path choice.
+//!
+//! All three policies read **only** the [`ViewCtx`] snapshot (status rows,
+//! candidate sets, residency as of the view's refresh): under
+//! `scheduler.route_epoch = K` their inputs may lag the cluster by up to
+//! K−1 arrivals, and each policy's decision degrades gracefully under that
+//! staleness (documented per impl).
 
 use crate::coordinator::policy::{
-    entry_candidates, BalancePolicy, PolicyCtx, RoutePolicy, StageNeed,
+    entry_candidates, BalancePolicy, RoutePolicy, StageNeed, ViewCtx,
 };
 use crate::coordinator::router::Route;
 use crate::workload::RequestSpec;
@@ -33,7 +39,10 @@ fn no_entry_instance(want_encode: bool) -> anyhow::Error {
 /// feature-resident requests enter at Prefill (P-D path), over the entry
 /// candidates of **all** replicas, with instance selection delegated to the
 /// active [`BalancePolicy`]. With the default `least_loaded` balance policy
-/// this reproduces the pre-policy-API router bit-exactly.
+/// and `route_epoch = 1` this reproduces the pre-policy-API router
+/// bit-exactly. Under staleness the load ranking can be out of date (the
+/// snapshot's rows age by at most K−1 arrivals); the path choice itself
+/// depends only on the request and the snapshot residency.
 pub struct ModalityPath;
 
 impl RoutePolicy for ModalityPath {
@@ -43,7 +52,7 @@ impl RoutePolicy for ModalityPath {
 
     fn route(
         &mut self,
-        ctx: &PolicyCtx,
+        ctx: &ViewCtx,
         spec: &RequestSpec,
         feature_resident: bool,
         balance: &mut dyn BalancePolicy,
@@ -53,7 +62,7 @@ impl RoutePolicy for ModalityPath {
         if candidates.is_empty() {
             return Err(no_entry_instance(want_encode));
         }
-        let instance = balance.pick(ctx, &candidates).expect("non-empty");
+        let instance = balance.pick(&ctx.pick_ctx(), &candidates).expect("non-empty");
         Ok(to_route(spec, feature_resident, want_encode, instance))
     }
 }
@@ -68,10 +77,12 @@ impl RoutePolicy for ModalityPath {
 /// to [`ModalityPath`] behavior. Instance choice *within* the affine
 /// replica is still the active [`BalancePolicy`]'s.
 ///
-/// Affinity is derived from the key hash, not a live residency probe: the
-/// hash is what *creates* partition locality in the first place, and it
-/// keeps the decision stable across the key's store-eviction lifecycle
-/// (a probe-based pin would flap as entries evict).
+/// Affinity is derived from the key hash, not a residency probe: the hash
+/// is what *creates* partition locality in the first place, it keeps the
+/// decision stable across the key's store-eviction lifecycle (a
+/// probe-based pin would flap as entries evict), and it makes the policy
+/// natively staleness-immune — the pin is identical at every
+/// `route_epoch`, only the within-replica load ranking ages.
 pub struct CacheAffinity;
 
 impl RoutePolicy for CacheAffinity {
@@ -81,7 +92,7 @@ impl RoutePolicy for CacheAffinity {
 
     fn route(
         &mut self,
-        ctx: &PolicyCtx,
+        ctx: &ViewCtx,
         spec: &RequestSpec,
         feature_resident: bool,
         balance: &mut dyn BalancePolicy,
@@ -96,19 +107,21 @@ impl RoutePolicy for CacheAffinity {
                 let r = (img.key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33) as usize % replicas;
                 let set = ctx.cands.get(r, need);
                 // An elastic switch can leave a replica without the needed
-                // stage; affinity then yields to the global pool.
+                // stage; affinity then yields to the global pool. (Switches
+                // force a view refresh, so the snapshot cands are never
+                // stale across a topology change.)
                 (!set.is_empty()).then_some(set)
             }
             _ => None,
         };
         let instance = match affine {
-            Some(set) => balance.pick(ctx, set).expect("non-empty"),
+            Some(set) => balance.pick(&ctx.pick_ctx(), set).expect("non-empty"),
             None => {
                 let candidates = entry_candidates(ctx, want_encode);
                 if candidates.is_empty() {
                     return Err(no_entry_instance(want_encode));
                 }
-                balance.pick(ctx, &candidates).expect("non-empty")
+                balance.pick(&ctx.pick_ctx(), &candidates).expect("non-empty")
             }
         };
         Ok(to_route(spec, feature_resident, want_encode, instance))
@@ -117,12 +130,20 @@ impl RoutePolicy for CacheAffinity {
 
 /// TTFT-SLO-aware admission routing: projects each candidate's
 /// queue-induced wait from its pending-token backlog and the cost model's
-/// steady-state service-rate estimate ([`PolicyCtx::prefill_tok_s`] /
-/// [`PolicyCtx::encode_tok_s`]), and **skips replicas projected to bust the
+/// steady-state service-rate estimate ([`ViewCtx::prefill_tok_s`] /
+/// [`ViewCtx::encode_tok_s`]), and **skips replicas projected to bust the
 /// TTFT SLO** (`slo.ttft_ms`, 2000 ms in the paper's decode-disaggregated
 /// setting). Among the surviving candidates the active [`BalancePolicy`]
 /// picks; if every candidate is projected over budget the full set is used
 /// (the request is late either way — shed nothing, just balance).
+///
+/// The backlog projection reads the **snapshot** rows: under
+/// `route_epoch = K` it is a projection from data up to K−1 arrivals old,
+/// so within an epoch the policy cannot see the backlog its own routing
+/// creates. That is the deliberate trade the epoch knob prices — a
+/// bounded-staleness projection in exchange for K× fewer coordination
+/// barriers; shrink `route_epoch` when SLO-routing precision matters more
+/// than barrier throughput.
 pub struct SloAware;
 
 impl RoutePolicy for SloAware {
@@ -132,7 +153,7 @@ impl RoutePolicy for SloAware {
 
     fn route(
         &mut self,
-        ctx: &PolicyCtx,
+        ctx: &ViewCtx,
         spec: &RequestSpec,
         feature_resident: bool,
         balance: &mut dyn BalancePolicy,
@@ -156,7 +177,7 @@ impl RoutePolicy for SloAware {
             Vec::new()
         };
         let pool = if fits.is_empty() { &candidates } else { &fits };
-        let instance = balance.pick(ctx, pool).expect("non-empty");
+        let instance = balance.pick(&ctx.pick_ctx(), pool).expect("non-empty");
         Ok(to_route(spec, feature_resident, want_encode, instance))
     }
 }
@@ -260,6 +281,22 @@ mod tests {
             let e = p.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap_err().to_string();
             assert!(e.contains("encode-capable"), "{e}");
             assert!(p.route(&ctx, &text(), false, &mut LeastLoaded).is_ok());
+        }
+    }
+
+    #[test]
+    fn routing_decisions_are_a_pure_function_of_the_view() {
+        // The snapshot contract in miniature: two routes against the same
+        // view must agree regardless of what the live cluster did in
+        // between — there is nothing else for the policy to read.
+        let mut table = StatusTable::new(6);
+        table.update(1, InstanceStatus { queue_len: 4, ..Default::default() });
+        let owner = CtxOwner::new("E-P-Dx2", (1000.0, 1000.0));
+        let ctx = owner.ctx(&table);
+        for p in [&mut ModalityPath as &mut dyn RoutePolicy, &mut SloAware] {
+            let a = p.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+            let b = p.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+            assert_eq!(a, b);
         }
     }
 }

@@ -20,9 +20,7 @@
 use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::deployment::Deployment;
-use crate::coordinator::policy::{
-    LeastLoaded, ModalityPath, PickScope, PolicyCtx, RoutePolicy, StageCands,
-};
+use crate::coordinator::policy::{LeastLoaded, ModalityPath, RoutePolicy, StageCands, ViewCtx};
 use crate::workload::RequestSpec;
 use anyhow::Result;
 
@@ -33,6 +31,17 @@ pub enum Route {
     Encode(usize),
     /// Text-only (or feature-reused) request → this prefill instance.
     Prefill { instance: usize, feature_reused: bool },
+}
+
+impl Route {
+    /// The instance this route enters at (the request's first stop) —
+    /// what the coordination boundary maps to an owning replica.
+    pub fn target_instance(&self) -> usize {
+        match self {
+            Route::Encode(i) => *i,
+            Route::Prefill { instance, .. } => *instance,
+        }
+    }
 }
 
 /// Default-policy routing facade: modality path choice + least-loaded
@@ -56,24 +65,27 @@ impl Router {
     }
 
     /// Route one request through the default policies. `feature_resident` =
-    /// the MM Store already holds this request's image features.
+    /// the MM Store already holds this request's image features. The
+    /// caller's `table` is treated as a single-epoch [`ViewCtx`] snapshot
+    /// (the facade routes as if `route_epoch = 1`: every call sees a
+    /// freshly stamped view).
     pub fn route(
         &self,
         spec: &RequestSpec,
         feature_resident: bool,
         table: &StatusTable,
     ) -> Result<Route> {
-        let ctx = PolicyCtx {
+        let ctx = ViewCtx {
             table,
             dep: &self.dep,
             cands: &self.cands,
-            store: None,
+            epoch: 1,
+            stamp: 0.0,
             scheduler: &self.scheduler,
             slo: &self.slo,
             now: 0.0,
             prefill_tok_s: 0.0,
             encode_tok_s: 0.0,
-            scope: PickScope::Entry,
         };
         ModalityPath.route(&ctx, spec, feature_resident, &mut LeastLoaded)
     }

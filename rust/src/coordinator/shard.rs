@@ -36,7 +36,7 @@ use crate::coordinator::batcher::{EncodeItem, PrefillItem};
 use crate::coordinator::deployment::{Deployment, InstanceSpec, StageSet};
 use crate::coordinator::metrics::RequestRecord;
 use crate::coordinator::policy::{
-    make_balance_policy, make_batch_policy, BalancePolicy, BatchPolicy, PickScope, PolicyCtx,
+    make_balance_policy, make_batch_policy, BalancePolicy, BatchPolicy, PickCtx, PickScope,
     StageCands, StageNeed,
 };
 use crate::coordinator::reconfig::{InstLoad, SwitchPlan};
@@ -72,7 +72,8 @@ pub(crate) struct SimShared {
     pub cfg: Config,
     pub cm: CostModel,
     /// Steady-state per-instance service-rate estimates from the cost
-    /// model, exposed to policies via [`PolicyCtx`] (SLO projections).
+    /// model, exposed to routing policies via
+    /// [`crate::coordinator::policy::ViewCtx`] (SLO projections).
     pub prefill_tok_s: f64,
     pub encode_tok_s: f64,
 }
@@ -86,6 +87,19 @@ pub enum Ev {
     /// the serving loop keeps exactly one pending arrival and schedules
     /// the next on delivery).
     Arrive(ArrivedRequest),
+    /// A routed arrival delivered to its target shard (arrival-class,
+    /// shard-handled). Scheduled by the sharded engine's coordination
+    /// boundary for **epoch-internal** arrivals under
+    /// `scheduler.route_epoch > 1`: the routing decision was taken at the
+    /// epoch barrier against the [`crate::coordinator::policy::ClusterView`]
+    /// snapshot, and delivery fires at the request's own arrival time
+    /// inside the shard's window — ordering exactly where the single
+    /// loop's `Arrive` handler would have applied it. `arrival` is NOT
+    /// redundant with the fire time: events fire on the integer-ns grid,
+    /// while this field carries the unrounded arrival timestamp that ends
+    /// up in the request record (the single loop likewise hands
+    /// `on_routed` the unrounded arrival alongside the rounded `now`).
+    Deliver { req: u64, spec: RequestSpec, arrival: f64, route: Route },
     /// Feature available (or found missing) at the prefill instance.
     FeatureReady { req: u64, inst: usize },
     /// A task may have completed on this NPU (stale if epoch mismatches).
@@ -171,21 +185,17 @@ enum TaskKind {
     DecodeStep { inst: usize },
 }
 
-/// Construct a stage-scoped policy world view from disjoint field borrows
-/// (a method returning `PolicyCtx` would borrow all of `self` and conflict
-/// with the `&mut` the policy objects need).
+/// Construct a stage-scoped pick ctx from disjoint field borrows (a method
+/// returning `PickCtx` would borrow all of `self` and conflict with the
+/// `&mut` the policy objects need). Stage picks read the shard's **live**
+/// table — exact by construction, since the pick runs inside this shard's
+/// own event stream (the snapshot discipline only binds coordinator-scope
+/// decisions; see [`crate::coordinator::policy::ClusterView`]).
 macro_rules! shard_ctx {
-    ($self:ident, $now:expr, $need:expr) => {
-        PolicyCtx {
+    ($self:ident, $need:expr) => {
+        PickCtx {
             table: &$self.table,
-            dep: &$self.dep,
-            cands: &$self.cands,
-            store: Some(&$self.store),
             scheduler: &$self.shared.cfg.scheduler,
-            slo: &$self.shared.cfg.slo,
-            now: $now,
-            prefill_tok_s: $self.shared.prefill_tok_s,
-            encode_tok_s: $self.shared.encode_tok_s,
             scope: PickScope::Stage { replica: $self.replica, need: $need },
         }
     };
@@ -344,9 +354,18 @@ impl ReplicaShard {
     }
 
     /// Does this replica's MM-Store partition hold the key? (The
-    /// coordinator's cross-partition residency probe for arrival routing.)
+    /// coordinator's cross-partition residency probe, used only when the
+    /// [`crate::coordinator::policy::ClusterView`] is `Fresh` —
+    /// `route_epoch = 1`, where view time and arrival time coincide.)
     pub fn feature_resident(&self, key: u64) -> bool {
         self.store.contains(key)
+    }
+
+    /// Union this partition's resident content keys into `out` — the
+    /// ClusterView residency snapshot at `route_epoch > 1`, rebuilt once
+    /// per epoch (amortized over K arrivals, off the per-arrival path).
+    pub fn collect_resident_keys(&self, out: &mut std::collections::HashSet<u64>) {
+        self.store.collect_keys(out);
     }
 
     /// Append this replica's per-instance load snapshots in global
@@ -443,7 +462,7 @@ impl ReplicaShard {
 
         // 1. New arrivals route to the reshaped topology from this instant:
         //    the deployment's instance table is the routing authority, and
-        //    the candidate cache every policy reads through [`PolicyCtx`]
+        //    the candidate cache the stage-dispatch paths read
         //    is rebuilt from it.
         self.dep.instances[inst].stages = plan.to;
         self.cands = StageCands::build(&self.dep);
@@ -456,7 +475,7 @@ impl ReplicaShard {
         for item in enc_items {
             self.insts[li].drained(item.visual_tokens);
             self.sync_status(inst);
-            let e_inst = self.pick_instance(StageNeed::Encode, now);
+            let e_inst = self.pick_instance(StageNeed::Encode);
             self.insts[e_inst - self.inst_base].push_encode(item);
             self.sync_status(e_inst);
             q.at(now, Ev::Kick { inst: e_inst });
@@ -468,7 +487,7 @@ impl ReplicaShard {
         for item in pre_items {
             self.insts[li].drained(item.prompt_tokens);
             self.sync_status(inst);
-            let p_inst = self.pick_instance(StageNeed::Prefill, now);
+            let p_inst = self.pick_instance(StageNeed::Prefill);
             let visual = self
                 .reqs
                 .get(&item.req)
@@ -645,11 +664,11 @@ impl ReplicaShard {
     /// Pick an instance with the needed stage in this replica via the
     /// stage-scoped [`BalancePolicy`], from the cached candidate sets and
     /// the live status table.
-    fn pick_instance(&mut self, need: StageNeed, now: f64) -> usize {
+    fn pick_instance(&mut self, need: StageNeed) -> usize {
         if cfg!(debug_assertions) {
             self.debug_check_table();
         }
-        let ctx = shard_ctx!(self, now, need);
+        let ctx = shard_ctx!(self, need);
         self.balance
             .pick(&ctx, self.cands.get(self.replica, need))
             .expect("deployment validated at parse time")
@@ -722,7 +741,7 @@ impl ReplicaShard {
         if reqs.is_empty() {
             return;
         }
-        let d_inst = self.pick_instance(StageNeed::Decode, now);
+        let d_inst = self.pick_instance(StageNeed::Decode);
         let bytes: f64 = reqs
             .iter()
             .map(|&r| {
@@ -1027,7 +1046,7 @@ impl ReplicaShard {
                 img.visual_tokens,
             );
             // Choose the prefill instance (stage-scoped balance policy).
-            let p_inst = self.pick_instance(StageNeed::Prefill, now);
+            let p_inst = self.pick_instance(StageNeed::Prefill);
             self.reqs.get_mut(&rid).expect("encoded request is live").route.push(p_inst);
             if p_inst == inst {
                 // E and P coupled on the same instance: feature is local.
@@ -1053,7 +1072,7 @@ impl ReplicaShard {
         let inst = if self.dep.instances[inst].stages.prefill {
             inst
         } else {
-            self.pick_instance(StageNeed::Prefill, now)
+            self.pick_instance(StageNeed::Prefill)
         };
         let li = inst - self.inst_base;
         let local_encode = self.insts[li].spec.stages.encode;
@@ -1119,7 +1138,7 @@ impl ReplicaShard {
             let d_inst = if self.insts[inst - self.inst_base].spec.stages.decode {
                 inst // PD coupled: no transfer.
             } else {
-                self.pick_instance(StageNeed::Decode, now)
+                self.pick_instance(StageNeed::Decode)
             };
             self.reqs.get_mut(rid).expect("prefilled request is live").route.push(d_inst);
             by_dst.entry(d_inst).or_default().push(*rid);
@@ -1273,6 +1292,9 @@ impl SimModel for ReplicaShard {
 
     fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
+            Ev::Deliver { req, spec, arrival, route } => {
+                self.on_routed(req, spec, arrival, route, now, q)
+            }
             Ev::FeatureReady { req, inst } => self.on_feature_ready(req, inst, now, q),
             Ev::NpuCheck { npu, epoch } => self.on_npu_check(npu, epoch, now, q),
             Ev::KvDelivered { reqs, inst } => self.on_kv_delivered(reqs, inst, now, q),

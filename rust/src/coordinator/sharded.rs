@@ -15,12 +15,27 @@
 //! 1. Let `T` be the next coordination event's integer-ns timestamp.
 //! 2. Every shard with pending events strictly earlier than `T` runs —
 //!    in parallel — until its queue head reaches `T` (exclusive).
-//! 3. The coordinator handles the event at `T`: routing an arrival against
-//!    the assembled status table / cross-partition residency (injecting
-//!    follow-up events into the target shard's queue), or evaluating a
-//!    reconfiguration epoch over collected shard loads.
+//! 3. The coordinator handles the event at `T`: refreshing the
+//!    [`ClusterView`] snapshot if due and routing the arrival against it
+//!    (injecting follow-up events into the target shard's queue), or
+//!    evaluating a reconfiguration epoch over collected shard loads.
 //! 4. Repeat; when no coordination event remains inside the horizon, one
 //!    final parallel round drains everything up to the horizon inclusive.
+//!
+//! ## Epoch batching (`scheduler.route_epoch = K`)
+//!
+//! At K = 1 every arrival is a coordination event and the above runs one
+//! barrier per arrival. At K > 1 the coordinator, while it holds every
+//! shard at an arrival barrier, routes up to K−1 **further** arrivals
+//! against the just-refreshed view and injects each into its target
+//! shard's queue as an arrival-class [`Ev::Deliver`] at the request's own
+//! timestamp — the exact slot the single loop's `Arrive` handler occupies
+//! in the `(time, class, seq)` merge. Only the K-th next arrival re-enters
+//! the coordination queue, so the barrier count drops K× (the
+//! [`SimOutcome::barriers`] counter measures it). Pre-routing stops early
+//! at the next reconfiguration tick (the tick's load collection must
+//! observe exactly the deliveries the single loop applied before it) and
+//! whenever a committed switch dirtied the view.
 //!
 //! ## Why this is bit-identical to the single loop
 //!
@@ -48,9 +63,10 @@
 //!
 //! [`PickScope`]: crate::coordinator::policy::PickScope
 
-use crate::coordinator::router::Route;
 use crate::coordinator::shard::{Ev, ReplicaShard};
-use crate::coordinator::simserve::{ServingSim, SimOutcome};
+use crate::coordinator::simserve::{
+    refresh_shard_rows, resident_in_view, ServingSim, SimOutcome,
+};
 use crate::sim::engine::{self, EventQueue};
 use crate::workload::ArrivedRequest;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -146,11 +162,10 @@ fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64)
         .iter()
         .enumerate()
         .filter(|(_, s)| {
-            s.as_ref()
-                .expect("slot home between rounds")
-                .q
-                .next_event_ns()
-                .is_some_and(|t| t < window_ns)
+            // `has_runnable`, not a plain time comparison: arrival-class
+            // events exactly at the bound (pre-routed `Deliver`s under
+            // route_epoch > 1) belong to this window.
+            s.as_ref().expect("slot home between rounds").q.has_runnable(window_ns)
         })
         .map(|(i, _)| i)
         .collect();
@@ -215,6 +230,10 @@ impl ServingSim {
             .collect();
         let pool = WorkerPool::spawn(workers);
 
+        // Conservative-barrier rounds actually executed — the sharded
+        // engine's own measure of coordination cost (overwrites the
+        // single-loop-style refresh/tick count `seal_view` accumulates).
+        let mut rounds: u64 = 0;
         loop {
             if self.stream_done && done_total(&slots) == self.arrived {
                 break;
@@ -227,6 +246,7 @@ impl ServingSim {
                 _ => (horizon_ns.saturating_add(1), false),
             };
             run_round(&pool, &mut slots, window_ns);
+            rounds += 1;
             if !coord_due {
                 break;
             }
@@ -241,41 +261,77 @@ impl ServingSim {
             // loop's `ServingSim::on_arrive` / `on_reconfig_tick` — same
             // steps in the same order, differing only in slots-vs-shards
             // access (shards live outside `self` here, so the handlers
-            // cannot be shared without borrow gymnastics). The
-            // determinism_golden sharded layers exist to catch drift.
+            // cannot be shared without borrow gymnastics) and in the
+            // epoch batcher, which pre-routes what the single loop routes
+            // lazily at each arrival event. The determinism_golden sharded
+            // layers exist to catch drift.
             match ev {
                 CoordEv::Arrive(arrived) => {
-                    let rid = self.arrived as u64;
-                    self.arrived += 1;
+                    // Refresh the ClusterView if due (first arrival, K-th
+                    // since the last refresh, or a committed switch) —
+                    // the same `refresh_shard_rows` recipe the single
+                    // loop's `refresh_view` runs, applied to the slots.
+                    if self.view_due() {
+                        let residency = refresh_shard_rows(
+                            &mut self.view.table,
+                            self.route_epoch,
+                            slots.iter_mut().map(|s| &mut s.as_mut().expect("slot home").shard),
+                        );
+                        self.seal_view(now, residency);
+                    }
+                    // The barrier arrival itself: every shard is drained
+                    // strictly below `now`, so direct delivery lands in
+                    // exactly the single loop's merge slot.
                     let spec = arrived.spec;
-                    let resident = spec
-                        .image
-                        .as_ref()
-                        .map(|i| {
-                            slots.iter().any(|s| {
-                                s.as_ref().expect("slot home").shard.feature_resident(i.key)
-                            })
+                    let resident = resident_in_view(&self.view, &spec, |k| {
+                        slots.iter().any(|s| {
+                            s.as_ref().expect("slot home").shard.feature_resident(k)
                         })
-                        .unwrap_or(false);
-                    for s in slots.iter_mut() {
-                        s.as_mut().expect("slot home").shard.flush_rows(&mut self.router_table);
-                    }
-                    if cfg!(debug_assertions) {
-                        for s in slots.iter() {
-                            s.as_ref().expect("slot home").shard.debug_check_table();
-                        }
-                    }
-                    let route = self.route_one(&spec, resident, now);
-                    let target = match route {
-                        Route::Encode(i) => i,
-                        Route::Prefill { instance, .. } => instance,
-                    };
-                    let r = self.inst_replica[target];
+                    });
+                    let (rid, route) = self.route_next(&spec, resident, now);
+                    let r = self.inst_replica[route.target_instance()];
                     let slot = slots[r].as_mut().expect("slot home");
                     slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
-                    match self.source.next() {
-                        Some(next) => cq.at_arrival(next.arrival, CoordEv::Arrive(next)),
-                        None => self.stream_done = true,
+                    // Epoch batcher: pre-route the rest of the epoch
+                    // against the frozen view. Stop at the K-th arrival
+                    // since the refresh, and at the next pending
+                    // coordination event's nanosecond (the reconfig tick —
+                    // its load collection must observe exactly the
+                    // deliveries the single loop applied before it, which
+                    // only a barrier at the arrival provides). Stopped
+                    // arrivals re-enter the coordination queue, keeping
+                    // the one-pending-arrival chain.
+                    let bound_ns = cq.next_event_ns().unwrap_or(u64::MAX);
+                    loop {
+                        let Some(next) = self.source.next() else {
+                            self.stream_done = true;
+                            break;
+                        };
+                        // `view_due` is the single loop's refresh
+                        // predicate verbatim (a due view means the next
+                        // arrival must barrier); only arrivals strictly
+                        // before the next coordination event's nanosecond
+                        // may skip theirs.
+                        if self.view_due() || engine::sec_to_ns(next.arrival) >= bound_ns {
+                            cq.at_arrival(next.arrival, CoordEv::Arrive(next));
+                            break;
+                        }
+                        let spec = next.spec;
+                        let resident = resident_in_view(&self.view, &spec, |_| {
+                            unreachable!("route_epoch > 1 implies a residency snapshot")
+                        });
+                        // Decision time must be the ns-grid timestamp the
+                        // single loop's event pop would deliver, not the
+                        // raw arrival f64 — a policy reading ctx.now must
+                        // see the same clock in both engines.
+                        let decision_now = engine::sec_to_ns(next.arrival) as f64 / 1e9;
+                        let (rid, route) = self.route_next(&spec, resident, decision_now);
+                        let r = self.inst_replica[route.target_instance()];
+                        let slot = slots[r].as_mut().expect("slot home");
+                        slot.q.at_arrival(
+                            next.arrival,
+                            Ev::Deliver { req: rid, spec, arrival: next.arrival, route },
+                        );
                     }
                 }
                 CoordEv::Tick => {
@@ -293,6 +349,7 @@ impl ServingSim {
             }
         }
         pool.shutdown();
+        self.barriers = rounds;
 
         // Reassemble shards for the shared report path; total events =
         // coordination queue + every shard queue.
@@ -403,6 +460,69 @@ mod tests {
             ServingSim::streamed(c).unwrap().with_store_failures(1.0).run_sharded();
         assert_eq!(single.metrics.records, sharded.metrics.records);
         assert!(single.metrics.records.iter().any(|r| r.recomputed));
+    }
+
+    #[test]
+    fn sharded_matches_single_loop_at_every_route_epoch() {
+        // The epoch batcher's core claim: both engines refresh the view on
+        // the same schedule, so sharded ≡ single-loop at every K — not
+        // just the per-arrival default.
+        for k in [2, 8, 64] {
+            let mut c = cfg("E-P-Dx4", 12.0, 96);
+            c.workload.image_reuse = 0.3;
+            c.scheduler.route_epoch = k;
+            assert_equiv(&c, &format!("route_epoch={k}"));
+        }
+    }
+
+    #[test]
+    fn sharded_matches_at_route_epochs_under_non_default_policies() {
+        let mut c = cfg("E-P-Dx2", 6.0, 64);
+        c.scheduler.route_epoch = 8;
+        c.scheduler.balance_policy = "round_robin".to_string();
+        assert_equiv(&c, "K=8 round_robin");
+        c.scheduler.balance_policy = "least_loaded".to_string();
+        c.scheduler.route_policy = "slo_aware".to_string();
+        assert_equiv(&c, "K=8 slo_aware");
+        c.scheduler.route_policy = "cache_affinity".to_string();
+        c.workload.image_reuse = 0.4;
+        assert_equiv(&c, "K=8 cache_affinity");
+    }
+
+    #[test]
+    fn sharded_matches_at_route_epochs_under_elastic_reprovisioning() {
+        // The hardest composition: mid-epoch reconfiguration ticks cut the
+        // pre-route batch, committed switches force a refresh, and the
+        // switch histories must still agree exactly.
+        use crate::workload::phases::PhasePlan;
+        let mut c = Config::default();
+        c.deployment = "E-P-D-Dx2".to_string();
+        c.scheduler.max_encode_batch = 2;
+        c.scheduler.route_epoch = 4;
+        c.reconfig.enabled = true;
+        c.reconfig.min_backlog_tokens = 6144;
+        let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+        let single = ServingSim::phased(c.clone(), &plan).unwrap().run();
+        let sharded = ServingSim::phased(c, &plan).unwrap().run_sharded();
+        assert_eq!(single.metrics.records, sharded.metrics.records);
+        assert_eq!(single.reconfig_switches, sharded.reconfig_switches);
+        assert!(!single.reconfig_switches.is_empty(), "scenario must exercise switches");
+    }
+
+    #[test]
+    fn route_epoch_cuts_sharded_barriers_k_fold() {
+        let mut c = cfg("E-P-Dx4", 12.0, 256);
+        let k1 = ServingSim::streamed(c.clone()).unwrap().run_sharded();
+        c.scheduler.route_epoch = 16;
+        let k16 = ServingSim::streamed(c).unwrap().run_sharded();
+        assert_eq!(k1.metrics.completed(), k16.metrics.completed());
+        assert!(
+            k16.barriers * 8 <= k1.barriers,
+            "K=16 must cut conservative barriers ≥8×: {} vs {}",
+            k16.barriers,
+            k1.barriers
+        );
+        assert!(k16.max_route_staleness < 16, "staleness bound");
     }
 
     #[test]

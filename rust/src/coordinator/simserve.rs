@@ -37,10 +37,26 @@
 //! stage-scoped policy state, and handles every shard-local event
 //! ([`crate::coordinator::shard`]). The coordinator owns what genuinely
 //! couples replicas — the arrival source, the router (entry-scoped
-//! policies + the assembled global status table + the cross-partition
-//! residency probe), and the elastic-reconfiguration controller — and
-//! touches shards only at **coordination events** (`Arrive`,
-//! `ReconfigTick`).
+//! policies reading the [`ClusterView`] epoch snapshot: status rows
+//! assembled from shard rows, topology, MM-Store residency summary), and
+//! the elastic-reconfiguration controller — and touches shards only at
+//! **coordination events** (`Arrive`, `ReconfigTick`).
+//!
+//! ## Epoch-snapshot routing (`scheduler.route_epoch`)
+//!
+//! Every coordinator-scope decision reads an immutable [`ClusterView`]
+//! refreshed every `route_epoch = K` arrivals (and after every committed
+//! elastic switch). At the default K = 1 the view is re-stamped at each
+//! arrival and reproduces the pre-snapshot per-arrival probe bit-exactly;
+//! at K > 1 routing tolerates up to K−1 arrivals of staleness and the
+//! sharded engine pays **one conservative barrier per epoch instead of one
+//! per arrival** — epoch-internal arrivals are routed at the barrier
+//! against the frozen view and delivered into the owning shard's queue as
+//! arrival-class `Deliver` events at their own timestamps, which is
+//! exactly where the single loop's `Arrive` handler applies them. Both
+//! engines refresh on the same schedule, so sharded ≡ single-loop holds at
+//! every K ([`SimOutcome::max_route_staleness`] reports the realized
+//! bound, [`SimOutcome::barriers`] the sync-point count).
 //!
 //! Two engines drive the same shard code:
 //!
@@ -80,12 +96,11 @@
 //!    memory O(in-flight) rather than O(trace).
 
 use crate::config::Config;
-use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::deployment::Deployment;
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
 use crate::coordinator::policy::{
-    make_balance_policy, make_route_policy, BalancePolicy, PickScope, PolicyCtx, RoutePolicy,
-    StageCands,
+    make_balance_policy, make_route_policy, BalancePolicy, ClusterView, ResidencyView,
+    RoutePolicy, StageCands, ViewCtx,
 };
 use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchRecord};
 use crate::coordinator::router::Route;
@@ -96,7 +111,8 @@ use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::workload::injector::Arrival;
 use crate::workload::stream::{ArrivalSource, WorkloadStream};
 use crate::workload::{ArrivedRequest, RequestSpec};
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::collections::HashSet;
 use std::sync::Arc;
 
 #[doc(hidden)]
@@ -116,6 +132,16 @@ pub struct SimOutcome {
     /// E/P batch completions whose follow-up kick ran inline
     /// (`scheduler.fuse_batch_events`; one `Kick` heap event saved each).
     pub fused_batch_kicks: u64,
+    /// Coordination synchronization points. Sharded engine: conservative
+    /// barrier rounds (shards drained to a common bound). Single loop: the
+    /// events that *would* barrier — `ClusterView` refreshes plus
+    /// reconfiguration epochs. Under `scheduler.route_epoch = K` this drops
+    /// roughly K× (the whole point of the epoch-snapshot routing API).
+    pub barriers: u64,
+    /// Worst observed routing staleness: max over arrivals of how many
+    /// arrivals were routed since the view they read was refreshed. Always
+    /// `< scheduler.route_epoch` (0 at the default `route_epoch = 1`).
+    pub max_route_staleness: u64,
     pub npu_utilization: Vec<f64>,
     pub kv_link_stats: Vec<(f64, f64)>, // (bytes carried, busy time) per replica
     /// Elastic role switches committed during the run (empty when
@@ -134,9 +160,25 @@ pub struct ServingSim {
     /// Entry-scoped policies: arrival routing across all replicas.
     pub(crate) route: Box<dyn RoutePolicy>,
     pub(crate) entry_balance: Box<dyn BalancePolicy>,
-    /// The router's world view of instance status, assembled from shard
-    /// rows at every coordination event ([`ReplicaShard::flush_rows`]).
-    pub(crate) router_table: StatusTable,
+    /// The router's world view: the immutable epoch snapshot every
+    /// coordinator-scope decision reads (status rows assembled from shard
+    /// rows via [`ReplicaShard::flush_rows`], topology, residency summary).
+    /// Refreshed every `route_epoch` arrivals and after every committed
+    /// elastic switch — on the same schedule in both engines.
+    pub(crate) view: ClusterView,
+    /// `scheduler.route_epoch`, validated ≥ 1 at construction.
+    pub(crate) route_epoch: usize,
+    /// Bumped at every committed elastic switch; lets a view refresh skip
+    /// the topology clone when nothing changed.
+    pub(crate) topo_gen: u64,
+    /// A switch committed since the last refresh: the next arrival must
+    /// refresh regardless of the epoch counter (routing against a stale
+    /// topology could target a retasked instance).
+    pub(crate) view_dirty: bool,
+    /// Coordination synchronization points (see [`SimOutcome::barriers`]).
+    pub(crate) barriers: u64,
+    /// Worst observed routing staleness, arrivals.
+    pub(crate) max_route_staleness: u64,
     pub(crate) shards: Vec<ReplicaShard>,
     /// Static instance → replica map (global instance indices).
     pub(crate) inst_replica: Vec<usize>,
@@ -187,6 +229,10 @@ impl ServingSim {
     /// Build a simulation from a config and any arrival source.
     pub fn with_source(cfg: Config, source: ArrivalSource) -> Result<Self> {
         let dep = Deployment::parse(&cfg.deployment)?;
+        let route_epoch = cfg.scheduler.route_epoch;
+        if route_epoch == 0 {
+            bail!("scheduler.route_epoch must be >= 1 (1 = refresh the ClusterView every arrival)");
+        }
         let cm = CostModel::new(cfg.model.clone(), cfg.hardware.clone());
         let route = make_route_policy(&cfg.scheduler.route_policy)?;
         let entry_balance = make_balance_policy(&cfg.scheduler.balance_policy)?;
@@ -211,7 +257,7 @@ impl ServingSim {
         }
         let inst_replica = dep.instances.iter().map(|i| i.replica).collect();
         let npu_replica = (0..dep.num_npus()).map(|n| n / dep.npus_per_replica).collect();
-        let router_table = StatusTable::new(dep.instances.len());
+        let view = ClusterView::new(&dep);
         let cands = StageCands::build(&dep);
         let last_arrival = source.last_arrival();
         Ok(Self {
@@ -220,7 +266,12 @@ impl ServingSim {
             cands,
             route,
             entry_balance,
-            router_table,
+            view,
+            route_epoch,
+            topo_gen: 0,
+            view_dirty: false,
+            barriers: 0,
+            max_route_staleness: 0,
             shards,
             inst_replica,
             npu_replica,
@@ -268,30 +319,88 @@ impl ServingSim {
     // ------------------------------------------------------------------
 
     /// Route one arrival through the entry-scoped policies against the
-    /// assembled router table. The caller is responsible for having
-    /// brought the table (and residency) up to date — i.e. for being *at*
-    /// a coordination epoch.
+    /// [`ClusterView`] snapshot. The caller is responsible for the view
+    /// being refreshed on schedule ([`Self::view_due`] /
+    /// [`Self::refresh_view`]); between refreshes the view — and therefore
+    /// every input a policy can read — is frozen by construction.
     pub(crate) fn route_one(&mut self, spec: &RequestSpec, resident: bool, now: f64) -> Route {
-        let ctx = PolicyCtx {
-            table: &self.router_table,
-            dep: &self.dep,
-            cands: &self.cands,
-            store: None,
-            scheduler: &self.shared.cfg.scheduler,
-            slo: &self.shared.cfg.slo,
+        let ctx = ViewCtx::of(
+            &self.view,
+            &self.shared.cfg.scheduler,
+            &self.shared.cfg.slo,
             now,
-            prefill_tok_s: self.shared.prefill_tok_s,
-            encode_tok_s: self.shared.encode_tok_s,
-            scope: PickScope::Entry,
-        };
+            self.shared.prefill_tok_s,
+            self.shared.encode_tok_s,
+        );
         self.route
             .route(&ctx, spec, resident, &mut *self.entry_balance)
             .expect("deployment validated at construction")
     }
 
+    /// Must the view be refreshed before routing the next arrival? True at
+    /// the first arrival, every `route_epoch`-th arrival since the last
+    /// refresh, and after a committed elastic switch.
+    pub(crate) fn view_due(&self) -> bool {
+        self.view.epoch == 0
+            || self.view_dirty
+            || self.arrived as u64 - self.view.arrival_seq >= self.route_epoch as u64
+    }
+
+    /// Finalize a view refresh after the shard-side state (status rows,
+    /// residency) has been absorbed: topology, version stamp, counters.
+    /// Shared by both engines — the shard-side half differs because the
+    /// sharded engine holds its shards in worker slots, not `self.shards`.
+    pub(crate) fn seal_view(&mut self, now: f64, residency: ResidencyView) {
+        self.view.residency = residency;
+        self.view.absorb_topology(&self.dep, &self.cands, self.topo_gen);
+        self.view.mark_refreshed(now, self.arrived as u64);
+        self.view_dirty = false;
+        self.barriers += 1;
+    }
+
+    /// Refresh the view from `self.shards` (single-loop engine); the
+    /// sharded engine runs the same [`refresh_shard_rows`] against its
+    /// worker slots, so the refresh recipe cannot drift between engines.
+    fn refresh_view(&mut self, now: f64) {
+        let residency =
+            refresh_shard_rows(&mut self.view.table, self.route_epoch, self.shards.iter_mut());
+        self.seal_view(now, residency);
+    }
+
+    /// Record the staleness of the arrival about to be routed and enforce
+    /// the bound: the view never lags by `route_epoch` or more arrivals.
+    fn note_route_staleness(&mut self) {
+        let staleness = self.arrived as u64 - self.view.arrival_seq;
+        debug_assert!(
+            (staleness as usize) < self.route_epoch,
+            "ClusterView staleness {staleness} breached route_epoch {}",
+            self.route_epoch
+        );
+        self.max_route_staleness = self.max_route_staleness.max(staleness);
+    }
+
+    /// Route the next arrival against the current view: staleness
+    /// bookkeeping, request-id assignment, policy dispatch, arrival-count
+    /// increment — in that order. The single loop's arrival handler and
+    /// both of the sharded engine's routing sites (barrier arrival,
+    /// epoch-internal pre-route) all go through here, so the recipe —
+    /// including the increment ordering the K=1 bit-exactness and the
+    /// epoch accounting depend on — lives in exactly one place. `now` must
+    /// be the integer-ns-grid decision time (what an event pop delivers).
+    pub(crate) fn route_next(&mut self, spec: &RequestSpec, resident: bool, now: f64) -> (u64, Route) {
+        self.note_route_staleness();
+        let rid = self.arrived as u64;
+        let route = self.route_one(spec, resident, now);
+        self.arrived += 1;
+        (rid, route)
+    }
+
     /// Evaluate one reconfiguration epoch against collected loads; on a
-    /// plan, update the router's topology authority and the controller
-    /// history. The caller executes the migration on the owning shard.
+    /// plan, update the router's topology authority, bump the topology
+    /// generation, and mark the view dirty (the next arrival refreshes
+    /// before routing — at any `route_epoch`, so a stale view can never
+    /// target a retasked instance). The caller executes the migration on
+    /// the owning shard.
     pub(crate) fn plan_reconfig(
         &mut self,
         now: f64,
@@ -300,6 +409,8 @@ impl ServingSim {
         let plan = self.reconfigurer.as_mut().expect("tick implies controller").tick(now, loads)?;
         self.dep.instances[plan.inst].stages = plan.to;
         self.cands = StageCands::build(&self.dep);
+        self.topo_gen += 1;
+        self.view_dirty = true;
         Some(plan)
     }
 
@@ -317,30 +428,18 @@ impl ServingSim {
     /// must be updated in lockstep (same for [`Self::on_reconfig_tick`]
     /// and its `CoordEv::Tick` arm).
     fn on_arrive(&mut self, arrived: ArrivedRequest, now: f64, q: &mut EventQueue<Ev>) {
+        let spec = arrived.spec;
+        if self.view_due() {
+            self.refresh_view(now);
+        }
+        let resident =
+            resident_in_view(&self.view, &spec, |k| {
+                self.shards.iter().any(|s| s.feature_resident(k))
+            });
         // Internal request ids are arrival indices (== spec ids for
         // generated workloads; trace replays may carry arbitrary spec ids).
-        let rid = self.arrived as u64;
-        self.arrived += 1;
-        let spec = arrived.spec;
-        let resident = spec
-            .image
-            .as_ref()
-            .map(|i| self.shards.iter().any(|s| s.feature_resident(i.key)))
-            .unwrap_or(false);
-        for s in &mut self.shards {
-            s.flush_rows(&mut self.router_table);
-        }
-        if cfg!(debug_assertions) {
-            for s in &self.shards {
-                s.debug_check_table();
-            }
-        }
-        let route = self.route_one(&spec, resident, now);
-        let target = match route {
-            Route::Encode(i) => i,
-            Route::Prefill { instance, .. } => instance,
-        };
-        let r = self.inst_replica[target];
+        let (rid, route) = self.route_next(&spec, resident, now);
+        let r = self.inst_replica[route.target_instance()];
         self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
         // Keep exactly one pending arrival: schedule the next one now.
         match self.source.next() {
@@ -353,6 +452,9 @@ impl ServingSim {
     /// ask the [`Reconfigurer`] for a plan, execute it on the owning
     /// shard, re-arm the ticker.
     fn on_reconfig_tick(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        // A controller epoch is a coordination sync point in either engine
+        // (the sharded executor barriers its shards to collect loads).
+        self.barriers += 1;
         let mut loads = Vec::with_capacity(self.inst_replica.len());
         for s in &self.shards {
             s.collect_loads(now, &mut loads);
@@ -371,6 +473,10 @@ impl ServingSim {
                 self.inst_replica[*inst]
             }
             Ev::NpuCheck { npu, .. } => self.npu_replica[*npu],
+            // Pre-routed deliveries exist only in the sharded engine's
+            // per-shard queues (the single loop routes at the arrival
+            // event itself), but the mapping is well-defined regardless.
+            Ev::Deliver { route, .. } => self.inst_replica[route.target_instance()],
             Ev::Arrive(_) | Ev::ReconfigTick => unreachable!("coordination event"),
         }
     }
@@ -412,10 +518,60 @@ impl ServingSim {
             events_processed,
             fused_decode_steps: self.shards.iter().map(|s| s.fused_steps()).sum(),
             fused_batch_kicks: self.shards.iter().map(|s| s.fused_batch_kicks()).sum(),
+            barriers: self.barriers,
+            max_route_staleness: self.max_route_staleness,
             npu_utilization,
             kv_link_stats: self.shards.iter().map(|s| s.kv_link_stats()).collect(),
             reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
         }
+    }
+}
+
+/// Resolve an arriving request's feature residency against the view: the
+/// snapshot key set at `route_epoch > 1`, or `live_probe` when the view is
+/// [`ResidencyView::Fresh`] (`route_epoch = 1`, where view time ≡ arrival
+/// time so the probe IS the snapshot). One recipe for every routing site —
+/// the single loop, the sharded barrier arm (which probes its worker
+/// slots), and the epoch-internal pre-route loop (where the probe is
+/// unreachable and passed as such).
+pub(crate) fn resident_in_view(
+    view: &ClusterView,
+    spec: &RequestSpec,
+    live_probe: impl FnOnce(u64) -> bool,
+) -> bool {
+    match &spec.image {
+        Some(i) => view.residency.contains(i.key).unwrap_or_else(|| live_probe(i.key)),
+        None => false,
+    }
+}
+
+/// Shard-side half of a [`ClusterView`] refresh, shared by both engines
+/// (which store their shards differently — `self.shards` in the single
+/// loop, worker slots in the sharded executor): flush every shard's
+/// status rows into the view table, run the debug ground-truth check, and
+/// build the residency summary for [`ServingSim::seal_view`].
+///
+/// At `route_epoch = 1` the residency stays [`ResidencyView::Fresh`]: the
+/// view is re-stamped at this very arrival, so a live partition probe IS
+/// the snapshot — no key-set copy on the per-arrival hot path.
+pub(crate) fn refresh_shard_rows<'a>(
+    table: &mut crate::coordinator::balancer::StatusTable,
+    route_epoch: usize,
+    shards: impl Iterator<Item = &'a mut ReplicaShard>,
+) -> ResidencyView {
+    let mut keys = (route_epoch > 1).then(HashSet::new);
+    for s in shards {
+        s.flush_rows(table);
+        if cfg!(debug_assertions) {
+            s.debug_check_table();
+        }
+        if let Some(k) = keys.as_mut() {
+            s.collect_resident_keys(k);
+        }
+    }
+    match keys {
+        Some(k) => ResidencyView::Snapshot(k),
+        None => ResidencyView::Fresh,
     }
 }
 
@@ -660,6 +816,65 @@ mod tests {
         let out = run_serving(&cfg).unwrap();
         assert_eq!(out.metrics.completed(), 96);
         assert!(out.reconfig_switches.is_empty());
+    }
+
+    #[test]
+    fn route_epoch_counts_refreshes_and_bounds_staleness() {
+        let mut cfg = quick_cfg("E-P-Dx2", 6.0, 64);
+        let k1 = run_serving(&cfg).unwrap();
+        assert_eq!(k1.max_route_staleness, 0, "K=1 must refresh at every arrival");
+        assert_eq!(k1.barriers, 64, "one view refresh per arrival at K=1");
+        cfg.scheduler.route_epoch = 8;
+        let k8 = run_serving(&cfg).unwrap();
+        assert!(k8.max_route_staleness > 0 && k8.max_route_staleness < 8);
+        assert_eq!(k8.barriers, 8, "64 arrivals / K=8 epochs");
+        assert_eq!(k8.metrics.completed(), 64, "staleness must not lose requests");
+        // Deterministic at K > 1.
+        let k8b = run_serving(&cfg).unwrap();
+        assert_eq!(k8.metrics.records, k8b.metrics.records);
+        assert_eq!(k8.events_processed, k8b.events_processed);
+    }
+
+    #[test]
+    fn stale_routing_changes_decisions_under_load_but_serves_all() {
+        // 64 consecutive arrivals against one frozen least-loaded ranking
+        // pile onto the same replica: the records must diverge from the
+        // per-arrival refresh, while the workload itself is identical.
+        let mut cfg = quick_cfg("E-P-Dx2", 10.0, 96);
+        let fresh = run_serving(&cfg).unwrap();
+        cfg.scheduler.route_epoch = 64;
+        let stale = run_serving(&cfg).unwrap();
+        assert_eq!(fresh.metrics.completed(), stale.metrics.completed());
+        assert_eq!(
+            fresh.metrics.records.iter().map(|r| r.id).collect::<Vec<_>>(),
+            stale.metrics.records.iter().map(|r| r.id).collect::<Vec<_>>(),
+            "same request set either way"
+        );
+        assert_ne!(
+            fresh.metrics.records, stale.metrics.records,
+            "a 64-arrival-stale view must route differently under load"
+        );
+        assert!(stale.barriers < fresh.barriers / 16, "K=64 must slash sync points");
+    }
+
+    #[test]
+    fn stale_residency_degrades_to_recompute_not_loss() {
+        // Heavy image reuse + a large epoch: keys PUT mid-epoch are
+        // invisible until the next refresh, so some repeats re-encode or
+        // recompute — but every request must still complete.
+        let mut cfg = quick_cfg("E-P-Dx2", 6.0, 96);
+        cfg.workload.image_reuse = 0.5;
+        cfg.scheduler.route_epoch = 32;
+        let out = run_serving(&cfg).unwrap();
+        assert_eq!(out.metrics.completed(), 96);
+    }
+
+    #[test]
+    fn route_epoch_zero_fails_construction() {
+        let mut cfg = quick_cfg("E-P-D", 2.0, 8);
+        cfg.scheduler.route_epoch = 0;
+        let err = ServingSim::streamed(cfg).err().expect("route_epoch 0 must be rejected");
+        assert!(format!("{err:#}").contains("route_epoch"), "{err:#}");
     }
 
     #[test]

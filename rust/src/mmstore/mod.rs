@@ -245,6 +245,14 @@ impl MmStore {
         self.index.contains_key(&key)
     }
 
+    /// Union every resident content key into `out`, without touching
+    /// recency order or statistics (unlike [`MmStore::get`], this is a
+    /// read-only census — it feeds the coordinator's `ClusterView`
+    /// residency snapshot, which must not perturb LRU state).
+    pub fn collect_keys(&self, out: &mut std::collections::HashSet<u64>) {
+        out.extend(self.index.keys().copied());
+    }
+
     pub fn stats(&self) -> StoreStats {
         self.stats
     }

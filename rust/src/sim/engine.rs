@@ -127,6 +127,19 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(e)| e.time_ns)
     }
 
+    /// Would the head event run inside a [`run_window`] bounded at
+    /// `bound_ns`? True for any event strictly earlier, and for
+    /// **arrival-class** events exactly at the bound — a coordination
+    /// event at `bound_ns` orders *after* same-nanosecond arrival-class
+    /// events in the single loop's `(time, class, seq)` merge, so a
+    /// conservative barrier must apply them first (pre-routed `Deliver`
+    /// events under `route_epoch > 1` are the case that exercises this).
+    pub fn has_runnable(&self, bound_ns: u64) -> bool {
+        self.heap.peek().is_some_and(|Reverse(e)| {
+            e.time_ns < bound_ns || (e.time_ns == bound_ns && e.class == CLASS_ARRIVAL)
+        })
+    }
+
     /// Total events processed so far (perf counter).
     pub fn processed(&self) -> u64 {
         self.processed
@@ -300,21 +313,22 @@ pub fn run<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, until: f64)
     q.now()
 }
 
-/// Run every pending event with `time_ns` **strictly below** `bound_ns`
-/// (an exclusive integer-ns window), or until the model says done. Returns
-/// the number of events processed.
+/// Run every pending event with `time_ns` **strictly below** `bound_ns`,
+/// plus **arrival-class** events landing exactly *at* `bound_ns`, or until
+/// the model says done. Returns the number of events processed.
 ///
 /// This is the sharded executor's per-round shard drive: a coordination
 /// event at `bound_ns` must observe each shard exactly as the single-loop
-/// merge would — all strictly-earlier events applied, all `>= bound_ns`
-/// events still pending (same-nanosecond shard events order *after* the
-/// arrival/control-class coordination event in the single loop).
+/// merge would — all strictly-earlier events applied, all same-nanosecond
+/// *normal/control* events still pending (they order *after* the
+/// arrival/control-class coordination event in the single loop), and all
+/// same-nanosecond *arrival-class* events already applied (an earlier
+/// arrival's pre-routed `Deliver` at the barrier's own nanosecond orders
+/// *before* the barrier arrival in the single loop's merge, because the
+/// one-pending-arrival chain scheduled it first).
 pub fn run_window<M: SimModel>(model: &mut M, q: &mut EventQueue<M::Event>, bound_ns: u64) -> u64 {
     let mut processed = 0;
-    while let Some(Reverse(head)) = q.heap.peek() {
-        if head.time_ns >= bound_ns {
-            break;
-        }
+    while q.has_runnable(bound_ns) {
         let (now, ev) = q.pop().expect("peeked");
         model.handle(now, ev, q);
         processed += 1;
@@ -510,6 +524,26 @@ mod tests {
         let n = run_window(&mut m, &mut q, u64::MAX);
         assert_eq!(n, 2);
         assert_eq!(m.seen.len(), 3);
+    }
+
+    #[test]
+    fn run_window_includes_arrival_class_events_at_the_bound() {
+        // A coordination event at T orders after same-ns arrival-class
+        // events in the single loop's merge, so the window drive must
+        // apply them — while same-ns normal (and control) events stay
+        // pending for a later window.
+        let mut q = EventQueue::new();
+        q.at(2.0, Ev::Tick(9)); // normal at the bound: must stay
+        q.at_arrival(2.0, Ev::Tick(1)); // arrival at the bound: must run
+        q.at_control(2.0, Ev::Tick(5)); // control at the bound: must stay
+        q.at(1.0, Ev::Tick(0));
+        let mut m = Recorder { seen: vec![], stop_after: 0 };
+        assert!(q.has_runnable(sec_to_ns(2.0)));
+        let n = run_window(&mut m, &mut q, sec_to_ns(2.0));
+        assert_eq!(n, 2);
+        assert_eq!(m.seen, vec![(1.0, 0), (2.0, 1)]);
+        assert!(!q.has_runnable(sec_to_ns(2.0)), "control/normal at the bound stay pending");
+        assert_eq!(q.pending(), 2);
     }
 
     #[test]

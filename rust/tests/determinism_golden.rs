@@ -1,7 +1,7 @@
 //! Determinism regression tests for the simulator hot paths and the
 //! sharded multi-replica engine.
 //!
-//! Five layers of protection for the per-request record trajectory:
+//! Six layers of protection for the per-request record trajectory:
 //!
 //! 1. **Fused vs per-token decode**: the macro-stepping fast path must be
 //!    record-bit-identical to the one-event-per-token baseline it replaced
@@ -18,15 +18,20 @@
 //!    scope-keyed cursors are exactly what makes the policy-state
 //!    partition across router/shards sound) and under elastic
 //!    re-provisioning.
-//! 5. **Golden digests**: an FNV-1a digest over the full bit pattern of
+//! 5. **Epoch-snapshot routing**: explicit `scheduler.route_epoch = 1`
+//!    must be bit-identical to the default (the ClusterView API is a pure
+//!    refactor at K=1), and at K > 1 the sharded engine — which routes a
+//!    whole epoch at one barrier — must reproduce the single loop, which
+//!    routes lazily per arrival against the same frozen view.
+//! 6. **Golden digests**: an FNV-1a digest over the full bit pattern of
 //!    every record ([`records_digest`]), snapshotted under `tests/golden/`.
 //!    On first run (or after an intentional behavior change, by deleting
 //!    the file) the digest is written; afterwards any drift — scheduling,
 //!    routing, timing, RNG — fails here with both values.
 //!
-//!    NOTE: layer 5 only *arms* once the bootstrapped `.digest` files are
+//!    NOTE: layer 6 only *arms* once the bootstrapped `.digest` files are
 //!    **committed** — a fresh checkout without them re-bootstraps and
-//!    passes. Layers 1–4 carry the equivalence proofs unconditionally;
+//!    passes. Layers 1–5 carry the equivalence proofs unconditionally;
 //!    commit `tests/golden/` after the first toolchain run to pin the
 //!    trajectory across checkouts (the CI "golden digests committed" step
 //!    fails until they are — see docs/PERFORMANCE.md).
@@ -133,7 +138,41 @@ fn check_scenario(name: &str, cfg: &Config) {
         "{name}: unfused sharded execution must also match"
     );
 
-    // Layer 5: pinned trajectory.
+    // Layer 5: epoch-snapshot routing. At K=1 (the default every scenario
+    // except the dedicated K=8 pin runs) the refresh schedule must be
+    // exactly per-arrival — zero observable staleness, one view refresh
+    // per routed request — which is the schedule under which the golden
+    // digests certify "snapshot API ≡ pre-redesign"; K=8 must additionally
+    // be engine-invariant (epoch-batched sharded routing ≡ lazy
+    // single-loop routing against the same frozen view). A scenario whose
+    // base config is already K>1 had its engine invariance proven by
+    // layer 4 — only the staleness bound is left to pin.
+    if cfg.scheduler.route_epoch == 1 {
+        assert_eq!(fused.max_route_staleness, 0, "{name}: K=1 must never route stale");
+        assert!(
+            fused.barriers >= fused.metrics.records.len() as u64,
+            "{name}: K=1 must refresh the view at every arrival"
+        );
+        let mut k8_cfg = cfg.clone();
+        k8_cfg.scheduler.route_epoch = 8;
+        let k8_single = ServingSim::streamed(k8_cfg.clone()).unwrap().run();
+        let k8_sharded = ServingSim::streamed(k8_cfg).unwrap().run_sharded();
+        assert_eq!(
+            k8_single.metrics.records, k8_sharded.metrics.records,
+            "{name}: route_epoch=8 must be engine-invariant"
+        );
+        assert!(
+            k8_single.max_route_staleness < 8 && k8_sharded.max_route_staleness < 8,
+            "{name}: view lag must stay under the epoch length"
+        );
+    } else {
+        assert!(
+            fused.max_route_staleness < cfg.scheduler.route_epoch as u64,
+            "{name}: view lag must stay under the epoch length"
+        );
+    }
+
+    // Layer 6: pinned trajectory.
     let d = records_digest(&fused.metrics.records);
     assert_eq!(
         d,
@@ -163,6 +202,21 @@ fn multi_replica_trajectory_pinned() {
     cfg.workload.num_requests = 192;
     cfg.workload.image_reuse = 0.3;
     check_scenario("multi_replica_epd_x4", &cfg);
+}
+
+#[test]
+fn route_epoch_trajectory_pinned() {
+    // The stale-routing trajectory itself is part of the contract: at
+    // K=8 on a four-replica fleet with heavy image reuse, the snapshot
+    // residency path (stale hits → recompute, stale misses → re-encode)
+    // and the frozen load ranking must stay byte-stable across PRs.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx4".to_string();
+    cfg.rate = 8.0;
+    cfg.workload.num_requests = 192;
+    cfg.workload.image_reuse = 0.3;
+    cfg.scheduler.route_epoch = 8;
+    check_scenario("multi_replica_epd_x4_k8", &cfg);
 }
 
 #[test]

@@ -9,6 +9,11 @@
 //!    bit-identical records across two runs, for every registered combo.
 //! 3. **Phased streaming** — `ArrivalSource::Phased` reproduces the
 //!    materialized `generate_phased` → replay path record for record.
+//! 4. **Epoch-snapshot routing** (`scheduler.route_epoch`) — explicit
+//!    `route_epoch = 1` is bit-identical to the default for every policy
+//!    combo on both engines (the snapshot API is a pure refactor at K=1);
+//!    `route_epoch = K > 1` stays deterministic and engine-invariant for
+//!    every combo, with staleness bounded by K−1.
 //!
 //! Default-policy equivalence to *pre-refactor* behavior is pinned by
 //! `tests/determinism_golden.rs` (fused/streamed equivalence layers +
@@ -133,6 +138,82 @@ fn every_policy_combo_is_engine_invariant() {
             }
         }
     }
+}
+
+#[test]
+fn route_epoch_one_refreshes_per_arrival_for_every_combo() {
+    // The snapshot API's K=1 contract, per combo: zero observable routing
+    // staleness and one view refresh per arrival — the schedule under
+    // which the determinism_golden digests certify bit-equivalence to the
+    // pre-snapshot coordinator. (K=1 engine invariance is covered by
+    // `every_policy_combo_is_engine_invariant` above.)
+    for &route in ROUTE_POLICIES {
+        for &balance in BALANCE_POLICIES {
+            for &batch in BATCH_POLICIES {
+                let c = with_policies(cfg("E-P-Dx2", 4.0, 32), route, balance, batch);
+                let out = ServingSim::streamed(c).unwrap().run();
+                assert_eq!(
+                    out.max_route_staleness, 0,
+                    "{route}/{balance}/{batch}: K=1 must never route stale"
+                );
+                assert_eq!(
+                    out.barriers, 32,
+                    "{route}/{balance}/{batch}: K=1 must refresh per arrival"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_policy_combo_is_engine_invariant_and_bounded_at_route_epoch_k() {
+    // K > 1 staleness must stay deterministic, engine-invariant, and
+    // within the contract bound for every registered combination.
+    for &route in ROUTE_POLICIES {
+        for &balance in BALANCE_POLICIES {
+            for &batch in BATCH_POLICIES {
+                let mut c = with_policies(cfg("E-P-Dx2", 6.0, 48), route, balance, batch);
+                c.scheduler.route_epoch = 8;
+                c.workload.image_reuse = 0.3;
+                let a = ServingSim::streamed(c.clone()).unwrap().run();
+                let b = ServingSim::streamed(c.clone()).unwrap().run();
+                assert_eq!(
+                    a.metrics.records, b.metrics.records,
+                    "{route}/{balance}/{batch} must stay deterministic at K=8"
+                );
+                let s = ServingSim::streamed(c).unwrap().run_sharded();
+                assert_eq!(
+                    a.metrics.records, s.metrics.records,
+                    "{route}/{balance}/{batch} must be engine-invariant at K=8"
+                );
+                assert!(
+                    a.max_route_staleness < 8 && s.max_route_staleness < 8,
+                    "{route}/{balance}/{batch}: view lag must stay under K"
+                );
+                assert_eq!(a.metrics.completed(), 48, "{route}/{balance}/{batch} at K=8");
+            }
+        }
+    }
+}
+
+#[test]
+fn route_epoch_staleness_bound_holds_under_elastic_refresh_resets() {
+    // Committed switches force off-schedule refreshes; the bound (and
+    // engine invariance) must survive the counter resets.
+    let mut c = Config::default();
+    c.deployment = "E-P-D-Dx2".to_string();
+    c.scheduler.max_encode_batch = 2;
+    c.scheduler.route_epoch = 6;
+    c.reconfig.enabled = true;
+    c.reconfig.min_backlog_tokens = 6144;
+    let plan = PhasePlan::text_image_alternating(60.0, 6.5, 11.0, 1);
+    let single = ServingSim::phased(c.clone(), &plan).unwrap().run();
+    let sharded = ServingSim::phased(c, &plan).unwrap().run_sharded();
+    assert!(!single.reconfig_switches.is_empty(), "scenario must switch");
+    assert_eq!(single.metrics.records, sharded.metrics.records);
+    assert_eq!(single.reconfig_switches, sharded.reconfig_switches);
+    assert!(single.max_route_staleness < 6);
+    assert!(sharded.max_route_staleness < 6);
 }
 
 #[test]
