@@ -1,0 +1,273 @@
+//! **Fault recovery**: a deterministic fault storm over a steady trace vs
+//! the same trace failure-free, on the two-replica `E-P-D-Dx2` fleet.
+//!
+//! The storm is scheduled relative to the expected trace span `T = N/rate`
+//! and is topology-specific (instance 2 = replica 0's first decoder, NPU 1
+//! = replica 0's prefill NPU), so the deployment is fixed:
+//!
+//! * `0.25 T` — instance 2 dies (decode capacity of replica 0 halves;
+//!   its in-flight work is displaced and re-routed, charging retries)
+//! * `0.30 T` — NPU 1 browns out to 0.5× (prefill slowdown)
+//! * `0.35 T` — replica 0's KV link degrades to 0.25× bandwidth
+//! * `0.40 T` — replica 1 loses its MM-Store partition (cached image
+//!   features gone; later reuse hits re-encode)
+//! * `0.55 T` — instance 2 revives (drains back into rotation)
+//! * `0.60 T` — NPU 1 restores to full speed
+//!
+//! Reported per arrival-time bucket (pre / during / post the
+//! death-to-revival window): SLO attainment, mean TTFT, goodput
+//! (SLO-qualified tokens/s over the bucket's wall span), retry and give-up
+//! counts — plus the recovery time (revival → last finish of a
+//! degraded-window arrival, i.e. how long the backlog takes to drain).
+//!
+//! Doubles as the CI fault smoke: the faulted trajectory is asserted
+//! record-bit-identical between the single-loop and sharded engines inside
+//! this binary, with a non-empty schedule.
+//!
+//! Flags: `--requests N` (default 2000), `--rate R` (default 8).
+
+use epd_serve::bench::{pct_change, print_table, repo_root, save_json};
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::{records_digest, RequestRecord};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::util::cli::Cli;
+use epd_serve::util::json::Json;
+use epd_serve::util::stats::{fmt_ms, fmt_pct, Samples};
+
+struct Bucket {
+    name: &'static str,
+    /// Arrival-time window [lo, hi).
+    lo: f64,
+    hi: f64,
+}
+
+struct BucketStats {
+    n: usize,
+    slo: f64,
+    mean_ttft_ms: f64,
+    goodput_tok_s: f64,
+    retries: u64,
+    gave_up: usize,
+}
+
+fn bucket_stats(records: &[RequestRecord], b: &Bucket, cfg: &Config, wall_hi: f64) -> BucketStats {
+    let in_bucket: Vec<&RequestRecord> =
+        records.iter().filter(|r| r.arrival >= b.lo && r.arrival < b.hi).collect();
+    let met: Vec<&&RequestRecord> =
+        in_bucket.iter().filter(|r| r.meets_slo(&cfg.slo)).collect();
+    let mut ttft = Samples::new();
+    for r in &in_bucket {
+        if let Some(t) = r.ttft {
+            ttft.push(t * 1e3);
+        }
+    }
+    let span = (wall_hi.min(b.hi) - b.lo).max(1e-9);
+    BucketStats {
+        n: in_bucket.len(),
+        slo: if in_bucket.is_empty() {
+            f64::NAN
+        } else {
+            met.len() as f64 / in_bucket.len() as f64
+        },
+        mean_ttft_ms: ttft.mean(),
+        goodput_tok_s: met.iter().map(|r| r.output_tokens).sum::<usize>() as f64 / span,
+        retries: in_bucket.iter().map(|r| r.retries as u64).sum(),
+        gave_up: in_bucket.iter().filter(|r| r.gave_up).count(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "fault_recovery",
+        "deterministic fault storm vs failure-free baseline on E-P-D-Dx2",
+    )
+    .opt_default("requests", "2000", "requests in the trace")
+    .opt_default("rate", "8", "open-loop arrival rate, req/s")
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .parse_env();
+    let requests = args.get_usize("requests").unwrap();
+    let rate = args.get_f64("rate").unwrap();
+
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = rate;
+    cfg.workload.num_requests = requests;
+    cfg.workload.image_reuse = 0.3;
+
+    // Storm schedule, scaled to the expected trace span.
+    let span = requests as f64 / rate;
+    let t_down = 0.25 * span;
+    let t_up = 0.55 * span;
+    cfg.faults.events = vec![
+        FaultEvent { t: t_down, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 0.30 * span, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+        FaultEvent { t: 0.35 * span, kind: FaultKind::LinkDegrade { replica: 0, factor: 0.25 } },
+        FaultEvent { t: 0.40 * span, kind: FaultKind::StoreLoss { replica: 1 } },
+        FaultEvent { t: t_up, kind: FaultKind::InstanceUp { inst: 2 } },
+        FaultEvent { t: 0.60 * span, kind: FaultKind::NpuSlowdown { npu: 1, factor: 1.0 } },
+    ];
+
+    let mut baseline_cfg = cfg.clone();
+    baseline_cfg.faults.events.clear();
+    let baseline = run_serving(&baseline_cfg)?;
+    let faulted = run_serving(&cfg)?;
+    let faulted_sharded = ServingSim::streamed(cfg.clone())?.run_sharded();
+
+    // ---- Engine invariance under the storm (the CI fault smoke) ----------
+    assert_eq!(
+        records_digest(&faulted.metrics.records),
+        records_digest(&faulted_sharded.metrics.records),
+        "faulted trajectory must be bit-identical across engines"
+    );
+    assert_eq!(faulted.faults_applied, faulted_sharded.faults_applied);
+    assert_eq!(faulted.faults_skipped, faulted_sharded.faults_skipped);
+    println!(
+        "single-loop ≡ sharded under the storm: digest {:016x}, {} faults applied",
+        records_digest(&faulted.metrics.records),
+        faulted.faults_applied
+    );
+
+    // ---- Structural shape -------------------------------------------------
+    assert_eq!(faulted.faults_applied, 6, "the whole storm must commit");
+    assert_eq!(faulted.faults_skipped, 0);
+    assert_eq!(baseline.faults_applied + baseline.faults_skipped, 0);
+    assert_eq!(baseline.metrics.completed(), requests, "baseline is failure-free");
+    assert_eq!(baseline.metrics.total_retries(), 0);
+    assert_eq!(
+        faulted.metrics.completed() + faulted.metrics.gave_up(),
+        requests,
+        "conservation: every request completes or gives up"
+    );
+    assert!(
+        faulted.metrics.total_retries() > 0,
+        "the decoder death must displace in-flight work"
+    );
+    assert_eq!(
+        faulted.metrics.gave_up(),
+        0,
+        "a single death never exhausts the default retry budget"
+    );
+
+    // ---- Headline table ---------------------------------------------------
+    let mut rows = Vec::new();
+    for (name, out) in [("baseline (no faults)", &baseline), ("fault storm", &faulted)] {
+        let m = &out.metrics;
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", m.completed()),
+            format!("{}", m.gave_up()),
+            format!("{}", m.total_retries()),
+            fmt_ms(m.mean_ttft_ms()),
+            fmt_pct(m.slo_attainment()),
+            format!("{:.1}", m.effective_throughput()),
+        ]);
+    }
+    print_table(
+        &format!("fault storm vs failure-free baseline — E-P-D-Dx2, {requests} req @ {rate}/s"),
+        &["run", "done", "gave up", "retries", "TTFT ms", "SLO", "goodput tok/s"],
+        &rows,
+    );
+    println!(
+        "storm cost: SLO attainment {} , goodput {}",
+        pct_change(faulted.metrics.slo_attainment(), baseline.metrics.slo_attainment()),
+        pct_change(
+            faulted.metrics.effective_throughput(),
+            baseline.metrics.effective_throughput()
+        ),
+    );
+
+    // ---- Pre / during / post buckets (by arrival time) --------------------
+    let buckets = [
+        Bucket { name: "pre-fault", lo: 0.0, hi: t_down },
+        Bucket { name: "during", lo: t_down, hi: t_up },
+        Bucket { name: "post-revival", lo: t_up, hi: f64::INFINITY },
+    ];
+    let mut brows = Vec::new();
+    let mut bjson = Vec::new();
+    let mut pre_slo = f64::NAN;
+    let mut during_slo = f64::NAN;
+    for b in &buckets {
+        let base = bucket_stats(&baseline.metrics.records, b, &cfg, baseline.metrics.makespan);
+        let storm = bucket_stats(&faulted.metrics.records, b, &cfg, faulted.metrics.makespan);
+        if b.name == "pre-fault" {
+            pre_slo = storm.slo;
+        } else if b.name == "during" {
+            during_slo = storm.slo;
+        }
+        brows.push(vec![
+            b.name.to_string(),
+            format!("{}", storm.n),
+            fmt_pct(base.slo),
+            fmt_pct(storm.slo),
+            fmt_ms(base.mean_ttft_ms),
+            fmt_ms(storm.mean_ttft_ms),
+            format!("{:.1}", storm.goodput_tok_s),
+            format!("{}", storm.retries),
+            format!("{}", storm.gave_up),
+        ]);
+        let mut o = Json::obj();
+        o.set("bucket", b.name)
+            .set("requests", storm.n)
+            .set("slo_baseline", base.slo)
+            .set("slo_faulted", storm.slo)
+            .set("ttft_ms_baseline", base.mean_ttft_ms)
+            .set("ttft_ms_faulted", storm.mean_ttft_ms)
+            .set("goodput_tok_s_faulted", storm.goodput_tok_s)
+            .set("retries", storm.retries)
+            .set("gave_up", storm.gave_up as u64);
+        bjson.push(o);
+    }
+    print_table(
+        "SLO attainment / TTFT / goodput by arrival bucket (fault window = death → revival)",
+        &["bucket", "n", "SLO base", "SLO storm", "TTFT base", "TTFT storm", "goodput", "retries", "gave up"],
+        &brows,
+    );
+    assert!(
+        during_slo <= pre_slo + 1e-9,
+        "the degraded window cannot beat the healthy one: {during_slo} vs {pre_slo}"
+    );
+
+    // Recovery time: revival → last finish of a degraded-window arrival
+    // (how long the storm's backlog takes to drain after capacity returns).
+    let recovery_s = faulted
+        .metrics
+        .records
+        .iter()
+        .filter(|r| r.arrival >= t_down && r.arrival < t_up)
+        .filter_map(|r| r.finish)
+        .fold(t_up, f64::max)
+        - t_up;
+    println!(
+        "\nrecovery time: {recovery_s:.1} s after revival to drain the degraded window's backlog \
+         ({} retries absorbed, {} requests abandoned)",
+        faulted.metrics.total_retries(),
+        faulted.metrics.gave_up()
+    );
+
+    // ---- JSON artifacts ---------------------------------------------------
+    let mut dump = Json::obj();
+    let mut setup = Json::obj();
+    setup
+        .set("deployment", cfg.deployment.as_str())
+        .set("requests", requests)
+        .set("rate", rate)
+        .set("fault_window_s", t_up - t_down)
+        .set("storm_events", cfg.faults.events.len() as u64);
+    dump.set("bench", "fault_recovery")
+        .set("setup", setup)
+        .set("baseline", baseline.metrics.summary_json())
+        .set("faulted", faulted.metrics.summary_json())
+        .set("buckets", bjson)
+        .set("recovery_time_s", recovery_s)
+        .set("faults_applied", faulted.faults_applied)
+        .set("faults_skipped", faulted.faults_skipped)
+        .set("engine_invariant", true);
+
+    let root = repo_root().join("BENCH_fault_recovery.json");
+    std::fs::write(&root, dump.to_string_pretty())?;
+    println!("fault-recovery trajectory written to {}", root.display());
+    let path = save_json("fault_recovery", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

@@ -6,6 +6,7 @@
 //! ([`ModelDesc::openpangu_7b_vl`], [`HardwareDesc::ascend_910b`], …) so the
 //! benches run without any file I/O.
 
+use crate::sim::faults::{FaultEvent, FaultKind};
 use crate::util::json::Json;
 use crate::util::toml;
 use anyhow::{bail, Context, Result};
@@ -544,6 +545,33 @@ impl Default for SimulatorSpec {
     }
 }
 
+/// Deterministic fault-injection knobs (`[faults]`; see
+/// [`crate::sim::faults`]).
+///
+/// The default is an **empty schedule**: no fault events are injected, no
+/// extra simulation events exist, and every run is bit-identical to the
+/// pre-fault simulator (the zero-overhead off path every golden digest
+/// depends on). Event targets are index-validated against the parsed
+/// deployment at serving-system construction
+/// ([`crate::sim::faults::FaultSchedule::build`]); this layer validates
+/// syntax and value ranges only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsSpec {
+    /// How many fault-caused re-routes a single request survives before the
+    /// system abandons it (`gave_up`). Elastic-reconfiguration redirects do
+    /// not count against this budget.
+    pub max_retries: u32,
+    /// Scheduled fault events (`[[faults.events]]`), in config order;
+    /// injection order is by time, ties keeping config order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl Default for FaultsSpec {
+    fn default() -> Self {
+        Self { max_retries: 2, events: Vec::new() }
+    }
+}
+
 /// Top-level experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -559,6 +587,8 @@ pub struct Config {
     pub reconfig: ReconfigSpec,
     /// Discrete-event engine selection (single loop vs sharded).
     pub simulator: SimulatorSpec,
+    /// Deterministic fault-injection schedule (empty = failure-free).
+    pub faults: FaultsSpec,
     /// SLO constraints used for attainment accounting.
     pub slo: SloSpec,
     /// Deployment notation string, e.g. `"(E-P)-D"`.
@@ -579,6 +609,7 @@ impl Default for Config {
             scheduler: SchedulerSpec::default(),
             reconfig: ReconfigSpec::default(),
             simulator: SimulatorSpec::default(),
+            faults: FaultsSpec::default(),
             slo: SloSpec::decode_disagg(),
             deployment: "E-P-D".to_string(),
             rate: 2.0,
@@ -792,6 +823,70 @@ impl Config {
                     bail!("simulator.shard_threads must be a non-negative integer, got {v}");
                 }
                 cfg.simulator.shard_threads = v as usize;
+            }
+        }
+        if let Some(fs) = doc.get("faults") {
+            let f = &mut cfg.faults;
+            if let Some(v) = fs.get("max_retries").and_then(Json::as_f64) {
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("faults.max_retries must be a non-negative integer, got {v}");
+                }
+                f.max_retries = v as u32;
+            }
+            if let Some(evs) = fs.get("events").and_then(Json::as_arr) {
+                for (i, ev) in evs.iter().enumerate() {
+                    let t = ev
+                        .get("t")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("faults.events[{i}]: missing 't'"))?;
+                    if !t.is_finite() || t < 0.0 {
+                        bail!("faults.events[{i}]: t must be finite and >= 0, got {t}");
+                    }
+                    let kind_name = ev
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("faults.events[{i}]: missing 'kind'"))?;
+                    let idx = |key: &str| -> Result<usize> {
+                        let v = ev.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "faults.events[{i}]: kind '{kind_name}' requires integer '{key}'"
+                            )
+                        })?;
+                        if v < 0.0 || v.fract() != 0.0 {
+                            bail!(
+                                "faults.events[{i}]: '{key}' must be a non-negative integer, got {v}"
+                            );
+                        }
+                        Ok(v as usize)
+                    };
+                    let factor = || -> Result<f64> {
+                        let v = ev.get("factor").and_then(Json::as_f64).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "faults.events[{i}]: kind '{kind_name}' requires 'factor'"
+                            )
+                        })?;
+                        if !v.is_finite() || v <= 0.0 || v > 1.0 {
+                            bail!("faults.events[{i}]: factor must be in (0, 1], got {v}");
+                        }
+                        Ok(v)
+                    };
+                    let kind = match kind_name {
+                        "instance_down" => FaultKind::InstanceDown { inst: idx("inst")? },
+                        "instance_up" => FaultKind::InstanceUp { inst: idx("inst")? },
+                        "npu_slowdown" => {
+                            FaultKind::NpuSlowdown { npu: idx("npu")?, factor: factor()? }
+                        }
+                        "link_degrade" => {
+                            FaultKind::LinkDegrade { replica: idx("replica")?, factor: factor()? }
+                        }
+                        "store_loss" => FaultKind::StoreLoss { replica: idx("replica")? },
+                        other => bail!(
+                            "faults.events[{i}]: unknown kind '{other}' (expected instance_down, \
+                             instance_up, npu_slowdown, link_degrade, store_loss)"
+                        ),
+                    };
+                    f.events.push(FaultEvent { t, kind });
+                }
             }
         }
         Ok(cfg)
@@ -1009,6 +1104,78 @@ shard_threads = 3
         for bad in ["[simulator]\nshard_threads = -1\n", "[simulator]\nshard_threads = 2.5\n"] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_section_decodes_every_kind() {
+        let doc = crate::util::toml::parse(
+            r#"
+[faults]
+max_retries = 3
+
+[[faults.events]]
+t = 10.0
+kind = "instance_down"
+inst = 2
+
+[[faults.events]]
+t = 25
+kind = "instance_up"
+inst = 2
+
+[[faults.events]]
+t = 5.5
+kind = "npu_slowdown"
+npu = 1
+factor = 0.5
+
+[[faults.events]]
+t = 8
+kind = "link_degrade"
+replica = 0
+factor = 0.25
+
+[[faults.events]]
+t = 12
+kind = "store_loss"
+replica = 0
+"#,
+        )
+        .unwrap();
+        let f = Config::from_json(&doc).unwrap().faults;
+        assert_eq!(f.max_retries, 3);
+        assert_eq!(f.events.len(), 5);
+        assert_eq!(f.events[0].kind, FaultKind::InstanceDown { inst: 2 });
+        assert_eq!(f.events[1].kind, FaultKind::InstanceUp { inst: 2 });
+        assert_eq!(f.events[2].kind, FaultKind::NpuSlowdown { npu: 1, factor: 0.5 });
+        assert_eq!(f.events[3].kind, FaultKind::LinkDegrade { replica: 0, factor: 0.25 });
+        assert_eq!(f.events[4].kind, FaultKind::StoreLoss { replica: 0 });
+        assert_eq!(f.events[2].t, 5.5);
+        // Defaults: empty schedule, bounded retry budget.
+        let d = FaultsSpec::default();
+        assert!(d.events.is_empty(), "failure-free by default");
+        assert_eq!(d.max_retries, 2);
+    }
+
+    #[test]
+    fn faults_rejects_bad_events_at_parse_time() {
+        for bad in [
+            "[faults]\nmax_retries = -1\n",
+            "[faults]\nmax_retries = 1.5\n",
+            "[[faults.events]]\nkind = \"store_loss\"\nreplica = 0\n", // missing t
+            "[[faults.events]]\nt = 1.0\nreplica = 0\n",               // missing kind
+            "[[faults.events]]\nt = -1.0\nkind = \"store_loss\"\nreplica = 0\n",
+            "[[faults.events]]\nt = 1.0\nkind = \"meteor_strike\"\nreplica = 0\n",
+            "[[faults.events]]\nt = 1.0\nkind = \"instance_down\"\n", // missing inst
+            "[[faults.events]]\nt = 1.0\nkind = \"instance_down\"\ninst = 1.5\n",
+            "[[faults.events]]\nt = 1.0\nkind = \"npu_slowdown\"\nnpu = 0\n", // missing factor
+            "[[faults.events]]\nt = 1.0\nkind = \"npu_slowdown\"\nnpu = 0\nfactor = 0\n",
+            "[[faults.events]]\nt = 1.0\nkind = \"link_degrade\"\nreplica = 0\nfactor = 1.5\n",
+            "[[faults.events]]\nt = 1.0\nkind = \"link_degrade\"\nfactor = 0.5\n", // no replica
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
         }
     }
 

@@ -36,6 +36,11 @@ impl StageSet {
     pub const ED: StageSet = StageSet { encode: true, prefill: false, decode: true };
     pub const PD: StageSet = StageSet { encode: false, prefill: true, decode: true };
     pub const EPD: StageSet = StageSet { encode: true, prefill: true, decode: true };
+    /// No stages at all — never parseable from the notation (an empty letter
+    /// run is rejected); constructed programmatically for a **dead**
+    /// instance under fault injection, so every `instances_where` predicate
+    /// naturally excludes it.
+    pub const NONE: StageSet = StageSet { encode: false, prefill: false, decode: false };
 
     fn from_letters(s: &str) -> Result<StageSet> {
         let mut set = StageSet { encode: false, prefill: false, decode: false };
@@ -348,6 +353,15 @@ mod tests {
         assert_eq!(encoders_r0.len(), 1);
         assert_eq!(decoders_r1.len(), 1);
         assert_eq!(d.instances[decoders_r1[0]].replica, 1);
+    }
+
+    #[test]
+    fn none_stage_set_is_excluded_everywhere() {
+        let mut d = Deployment::parse("E-P-D").unwrap();
+        d.instances[2].stages = StageSet::NONE;
+        assert!(d.instances_where(0, |s| s.decode).is_empty(), "dead instance must not match");
+        assert_eq!(d.instances_where(0, |_| true).len(), 3, "still enumerable unconditionally");
+        assert_eq!(format!("{}", StageSet::NONE), "");
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct RequestRecord {
     pub finish: Option<f64>,
     pub recomputed: bool,
     pub feature_reused: bool,
+    /// Fault-recovery re-routes this request survived (0 on the no-fault
+    /// path — instance deaths are the only source of retries).
+    pub retries: u32,
+    /// Abandoned after exhausting the retry budget (fault injection);
+    /// `finish` is `None` and the request counts as an SLO miss.
+    pub gave_up: bool,
 }
 
 /// Canonical, bit-exact digest of a record set: every f64 by its raw bit
@@ -54,7 +60,11 @@ pub fn records_digest(records: &[RequestRecord]) -> u64 {
             }
             None => buf.push_str("-|"),
         }
-        let _ = write!(buf, "{}|{};", r.recomputed as u8, r.feature_reused as u8);
+        let _ = write!(
+            buf,
+            "{}|{}|{}|{};",
+            r.recomputed as u8, r.feature_reused as u8, r.retries, r.gave_up as u8
+        );
         h.update(buf.as_bytes());
     }
     h.finish()
@@ -91,6 +101,16 @@ impl RunMetrics {
 
     pub fn completed(&self) -> usize {
         self.records.iter().filter(|r| r.finish.is_some()).count()
+    }
+
+    /// Requests abandoned after exhausting the fault-retry budget.
+    pub fn gave_up(&self) -> usize {
+        self.records.iter().filter(|r| r.gave_up).count()
+    }
+
+    /// Total fault-recovery re-routes across all requests.
+    pub fn total_retries(&self) -> u64 {
+        self.records.iter().map(|r| r.retries as u64).sum()
     }
 
     /// Fraction of all injected requests meeting both SLOs.
@@ -166,6 +186,8 @@ impl RunMetrics {
         let mut o = Json::obj();
         o.set("requests", self.records.len())
             .set("completed", self.completed())
+            .set("gave_up", self.gave_up())
+            .set("retries", self.total_retries())
             .set("makespan_s", self.makespan)
             .set("num_npus", self.num_npus)
             .set("slo_attainment", self.slo_attainment())
@@ -193,6 +215,8 @@ mod tests {
             finish: Some(10.0),
             recomputed: false,
             feature_reused: false,
+            retries: 0,
+            gave_up: false,
         }
     }
 
@@ -207,6 +231,8 @@ mod tests {
             finish: None,
             recomputed: false,
             feature_reused: false,
+            retries: 0,
+            gave_up: false,
         }
     }
 
@@ -263,5 +289,33 @@ mod tests {
         let j = m.summary_json();
         assert!(j.get("slo_attainment").is_some());
         assert!(j.get("ttft").unwrap().get("p99").is_some());
+        assert_eq!(j.get("gave_up").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j.get("retries").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn digest_distinguishes_retry_and_give_up_outcomes() {
+        let base = vec![rec(1, 10.0, 5.0)];
+        let mut retried = base.clone();
+        retried[0].retries = 1;
+        let mut abandoned = vec![failed(1)];
+        abandoned[0].gave_up = true;
+        let d0 = records_digest(&base);
+        assert_ne!(d0, records_digest(&retried), "retry count must be pinned");
+        assert_ne!(records_digest(&[failed(1)]), records_digest(&abandoned), "give-up must be pinned");
+        assert_eq!(d0, records_digest(&base.clone()), "digest is deterministic");
+    }
+
+    #[test]
+    fn gave_up_and_retry_counters_aggregate() {
+        let mut a = rec(1, 10.0, 5.0);
+        a.retries = 2;
+        let mut b = failed(2);
+        b.gave_up = true;
+        b.retries = 3;
+        let m = RunMetrics::new(vec![a, b], 1.0, 1, SloSpec::strict());
+        assert_eq!(m.gave_up(), 1);
+        assert_eq!(m.total_retries(), 5);
+        assert_eq!(m.completed(), 1);
     }
 }

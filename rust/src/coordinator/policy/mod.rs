@@ -190,9 +190,11 @@ impl ResidencyView {
 /// deployment shape with its candidate cache, the MM-Store residency
 /// summary, and an epoch/clock stamp. Refreshed by the serving system
 /// every `scheduler.route_epoch` arrivals and after every committed
-/// elastic switch — in **both** execution engines, on the same schedule,
-/// which is what lets the sharded engine barrier once per epoch instead of
-/// once per arrival while staying bit-identical to the single loop.
+/// elastic switch or injected fault (a dead instance's stages go empty in
+/// `dep`/`cands`, so policies stop selecting it within one refresh) — in
+/// **both** execution engines, on the same schedule, which is what lets
+/// the sharded engine barrier once per epoch instead of once per arrival
+/// while staying bit-identical to the single loop.
 pub struct ClusterView {
     /// Refresh counter: 0 = never refreshed (the view is not yet readable),
     /// then +1 per refresh.

@@ -46,6 +46,12 @@ pub struct Request {
     /// Whether the encode stage was skipped due to an MM-Store hit from an
     /// earlier request (cross-request reuse).
     pub feature_reused: bool,
+    /// Fault-recovery re-routes this request survived (instance deaths only;
+    /// elastic-reconfiguration redirects are not retries).
+    pub retries: u32,
+    /// The request was abandoned after exhausting `faults.max_retries` (or
+    /// losing its last viable instance). Mutually exclusive with finishing.
+    pub gave_up: bool,
     /// Instance ids this request was routed through (for balance metrics).
     pub route: Vec<usize>,
 }
@@ -66,8 +72,21 @@ impl Request {
             tokens_generated: 0,
             recomputed: false,
             feature_reused: false,
+            retries: 0,
+            gave_up: false,
             route: Vec::new(),
         }
+    }
+
+    /// Rewind progress for a fault-recovery retry: everything from prefill
+    /// onward restarts on a surviving instance (encode results live in the
+    /// MM-Store and survive the instance, so encode timestamps are kept).
+    pub fn rewind_for_retry(&mut self) {
+        self.prefill_start = None;
+        self.prefill_end = None;
+        self.first_token = None;
+        self.finish = None;
+        self.tokens_generated = 0;
     }
 
     /// Context tokens currently in KV (prompt + generated).
@@ -134,6 +153,24 @@ mod tests {
         assert_eq!(r.tpot(), None);
         r.first_token = Some(1.0);
         assert_eq!(r.tpot(), None);
+    }
+
+    #[test]
+    fn rewind_for_retry_resets_generation_progress_only() {
+        let mut r = Request::new(mm_spec(), 0.0);
+        r.encode_start = Some(0.1);
+        r.encode_end = Some(0.2);
+        r.prefill_start = Some(0.3);
+        r.first_token = Some(0.5);
+        r.tokens_generated = 7;
+        r.retries += 1;
+        r.rewind_for_retry();
+        assert_eq!(r.encode_end, Some(0.2), "encode survives in the MM-Store");
+        assert_eq!(r.prefill_start, None);
+        assert_eq!(r.first_token, None);
+        assert_eq!(r.tokens_generated, 0);
+        assert_eq!(r.retries, 1);
+        assert_eq!(r.ttft(), None);
     }
 
     #[test]

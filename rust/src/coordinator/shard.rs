@@ -6,8 +6,8 @@
 //! queues, its processor-shared NPUs, its P→D KV link, its MM-Store
 //! partition, its live requests and retired records, and its own
 //! stage-scoped scheduling-policy instances. Every simulation event except
-//! the two coordination events ([`Ev::Arrive`], [`Ev::ReconfigTick`]) is
-//! handled here, and every event a shard handler schedules targets the same
+//! the coordination events ([`Ev::Arrive`], [`Ev::ReconfigTick`],
+//! [`Ev::Fault`]) is handled here, and every event a shard handler schedules targets the same
 //! shard — requests never cross replicas after routing (elastic switches
 //! are intra-replica by design), so shard state is closed under shard
 //! events.
@@ -78,9 +78,10 @@ pub(crate) struct SimShared {
     pub encode_tok_s: f64,
 }
 
-/// Simulation events. All variants except the two coordination events are
-/// shard-local: handled by the owning [`ReplicaShard`], and only ever
-/// scheduled by that same shard or by the coordination boundary.
+/// Simulation events. All variants except the coordination events
+/// (arrivals, reconfiguration ticks, faults) are shard-local: handled by
+/// the owning [`ReplicaShard`], and only ever scheduled by that same
+/// shard or by the coordination boundary.
 #[doc(hidden)]
 pub enum Ev {
     /// A request enters the system (arrival-class; coordinator-handled:
@@ -111,6 +112,11 @@ pub enum Ev {
     /// Periodic elastic re-provisioning epoch (control-class;
     /// coordinator-handled).
     ReconfigTick,
+    /// The i-th entry of the run's [`crate::sim::faults::FaultSchedule`]
+    /// fires (one-shot control-class; coordinator-handled). Scheduled in
+    /// full at run start by both engines, so an empty schedule injects
+    /// zero events and perturbs nothing.
+    Fault(usize),
 }
 
 /// One stage instance's live state.
@@ -183,6 +189,37 @@ enum TaskKind {
     EncodeBatch { inst: usize, reqs: Vec<u64> },
     PrefillBatch { inst: usize, reqs: Vec<u64> },
     DecodeStep { inst: usize },
+}
+
+impl TaskKind {
+    fn instance(&self) -> usize {
+        match self {
+            TaskKind::EncodeBatch { inst, .. }
+            | TaskKind::PrefillBatch { inst, .. }
+            | TaskKind::DecodeStep { inst } => *inst,
+        }
+    }
+}
+
+/// The shard-side half of a committed fault: what the owning replica must
+/// execute after the coordinator has updated the routing authority
+/// (topology, candidate sets, saved roles) in
+/// `ServingSim::commit_fault`. Both engines build the action at the
+/// coordination boundary and apply it via [`ReplicaShard::apply_fault`],
+/// so the recovery path cannot drift between them.
+pub(crate) enum ShardFaultAction {
+    /// The instance stops serving; displaced work re-routes with bounded
+    /// retry. The coordinator guarantees every stage it served keeps at
+    /// least one other provider in this replica.
+    InstanceDown { inst: usize },
+    /// Revival: restore the saved stage set after a weight-reload window.
+    InstanceUp { inst: usize, stages: StageSet },
+    /// The physical NPU runs at `factor` of nominal speed (1.0 restores).
+    NpuSlowdown { npu: usize, factor: f64 },
+    /// This replica's KV/feature link bandwidth is scaled by `factor`.
+    LinkDegrade { factor: f64 },
+    /// This replica's MM-Store partition loses every cached feature.
+    StoreLoss,
 }
 
 /// Construct a stage-scoped pick ctx from disjoint field borrows (a method
@@ -421,6 +458,17 @@ impl ReplicaShard {
         self.reqs.insert(rid, Request::new(spec, arrival));
         match route {
             Route::Encode(inst) => {
+                // A stale ClusterView (`route_epoch > 1`) can target an
+                // instance that died earlier in the epoch: hand the
+                // arrival straight to a surviving encoder (no retry
+                // charged — the request never held state on the dead
+                // instance). The prefill route self-heals the same way
+                // through `on_feature_ready`'s retask redirect.
+                let inst = if self.dep.instances[inst].stages.encode {
+                    inst
+                } else {
+                    self.pick_instance(StageNeed::Encode)
+                };
                 let img = spec.image.expect("multimodal");
                 let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
                 self.reqs.get_mut(&rid).expect("just inserted").route.push(inst);
@@ -528,6 +576,188 @@ impl ReplicaShard {
             self.complete_switch(inst, plan.to, now, q);
         }
         self.migrating = false;
+    }
+
+    /// Execute the shard-side half of a committed fault at the
+    /// coordination boundary. The coordinator
+    /// (`ServingSim::commit_fault`) has already validated the fault
+    /// against the live topology and updated its own routing authority.
+    pub fn apply_fault(&mut self, action: &ShardFaultAction, now: f64, q: &mut EventQueue<Ev>) {
+        match *action {
+            ShardFaultAction::InstanceDown { inst } => self.fault_instance_down(inst, now, q),
+            ShardFaultAction::InstanceUp { inst, stages } => {
+                self.fault_instance_up(inst, stages, now, q)
+            }
+            ShardFaultAction::NpuSlowdown { npu, factor } => {
+                self.npus[npu - self.npu_base].set_speed(now, factor);
+                // The epoch bump staled any armed completion event;
+                // re-query under the new rates.
+                self.arm_npu(npu, now, q);
+            }
+            ShardFaultAction::LinkDegrade { factor } => self.kv_link.set_bw_factor(factor),
+            ShardFaultAction::StoreLoss => {
+                // Every cached feature is gone at once; subsequent GETs
+                // fall back to §3.2's local recomputation, exactly like
+                // an injected per-GET failure or an eviction.
+                self.store.clear();
+            }
+        }
+    }
+
+    /// An instance death: take the instance out of the routed topology,
+    /// kill its in-flight NPU work, and re-route every displaced request
+    /// to a surviving instance of this replica under the bounded retry
+    /// budget (`faults.max_retries`). Reuses the elastic-switch drain
+    /// mechanics — with the one difference that this instance's KV and
+    /// in-flight batch results are *lost*, so everything at prefill or
+    /// beyond restarts from prefill (encoded features survive in the
+    /// MM-Store partition and are re-fetched, not re-encoded).
+    fn fault_instance_down(&mut self, inst: usize, now: f64, q: &mut EventQueue<Ev>) {
+        // Mirror the coordinator's topology commit on this shard's copies
+        // — candidate sets must stop offering the dead instance before
+        // any displaced work re-picks.
+        self.dep.instances[inst].stages = StageSet::NONE;
+        self.cands = StageCands::build(&self.dep);
+        self.migrating = true;
+        let li = inst - self.inst_base;
+        self.insts[li].spec.stages = StageSet::NONE;
+        self.insts[li].draining_to = None;
+        self.insts[li].offline_until = f64::INFINITY;
+
+        // 1. Kill in-flight NPU work (at most one task: instances
+        //    serialize E/P batches and decode steps). `PsNpu::finish`
+        //    bumps the epoch, staling the armed completion event; the
+        //    batch's results are lost.
+        let npu = self.insts[li].spec.npu;
+        let mut killed: Vec<(usize, TaskId)> = self
+            .tasks
+            .iter()
+            .filter(|(_, kind)| kind.instance() == inst)
+            .map(|(&key, _)| key)
+            .collect();
+        killed.sort_unstable();
+        let mut enc_disp: Vec<u64> = Vec::new();
+        let mut pre_disp: Vec<u64> = Vec::new();
+        let had_kill = !killed.is_empty();
+        for key in killed {
+            match self.tasks.remove(&key).expect("collected above") {
+                TaskKind::EncodeBatch { reqs, .. } => enc_disp.extend(reqs),
+                TaskKind::PrefillBatch { reqs, .. } => pre_disp.extend(reqs),
+                // The active decode batch is displaced below.
+                TaskKind::DecodeStep { .. } => {}
+            }
+            self.npus[key.0 - self.npu_base].finish(now, key.1);
+        }
+        if had_kill {
+            self.arm_npu(npu, now, q);
+        }
+        self.insts[li].busy = false;
+        self.insts[li].decode_running = false;
+
+        // 2. Displace queued work, in deterministic order: killed batches
+        //    first, then each queue front-to-back, then the decode batch.
+        let enc_q: Vec<EncodeItem> = self.insts[li].encode_q.drain(..).collect();
+        enc_disp.extend(enc_q.into_iter().map(|e| e.req));
+        let pre_q: Vec<PrefillItem> = self.insts[li].prefill_q.drain(..).collect();
+        pre_disp.extend(pre_q.into_iter().map(|p| p.req));
+        pre_disp.extend(self.insts[li].decode_waiting.drain(..));
+        pre_disp.extend(std::mem::take(&mut self.insts[li].decode_active));
+        // The dead instance's paged KV pool is dropped wholesale.
+        self.insts[li].kv = None;
+        self.insts[li].active_ctx = 0;
+        self.insts[li].pending_tokens = 0;
+        self.sync_status(inst);
+
+        // 3. Bounded-retry re-routing over the survivors.
+        for rid in enc_disp {
+            if !self.charge_retry(rid) {
+                self.give_up(rid);
+                continue;
+            }
+            let visual = {
+                let r = self.reqs.get_mut(&rid).expect("displaced request is live");
+                r.state = ReqState::EncodeQueued;
+                r.spec.image.expect("encode-phase request has an image").visual_tokens
+            };
+            let e_inst = self.pick_instance(StageNeed::Encode);
+            self.reqs.get_mut(&rid).expect("displaced request is live").route.push(e_inst);
+            self.insts[e_inst - self.inst_base]
+                .push_encode(EncodeItem { req: rid, visual_tokens: visual });
+            self.sync_status(e_inst);
+            q.at(now, Ev::Kick { inst: e_inst });
+        }
+        for rid in pre_disp {
+            if !self.charge_retry(rid) {
+                self.give_up(rid);
+                continue;
+            }
+            let visual = {
+                let r = self.reqs.get_mut(&rid).expect("displaced request is live");
+                r.rewind_for_retry();
+                r.state = ReqState::FeatureTransfer;
+                r.spec.image.as_ref().map(|i| i.visual_tokens).unwrap_or(0)
+            };
+            let p_inst = self.pick_instance(StageNeed::Prefill);
+            let delay = if visual > 0 {
+                plan_ep_transfer(
+                    &self.shared.cm,
+                    visual,
+                    self.shared.cfg.scheduler.ep_async_prefetch,
+                )
+                .exposed
+            } else {
+                0.0
+            };
+            q.at(now + delay, Ev::FeatureReady { req: rid, inst: p_inst });
+        }
+        self.migrating = false;
+    }
+
+    /// Revival of a previously-downed instance: restore the saved stage
+    /// set on this shard's topology copies and bring the instance back
+    /// after the standard weight-reload window. Routing policies see it
+    /// again when the coordinator's `ClusterView` refreshes (the fault
+    /// commit marked the view dirty, so that is the very next arrival).
+    fn fault_instance_up(&mut self, inst: usize, stages: StageSet, now: f64, q: &mut EventQueue<Ev>) {
+        self.dep.instances[inst].stages = stages;
+        self.cands = StageCands::build(&self.dep);
+        let li = inst - self.inst_base;
+        self.insts[li].spec.stages = stages;
+        if stages.decode && self.insts[li].kv.is_none() {
+            let kv_bytes = self.shared.cfg.model.llm.kv_bytes_per_token();
+            let tp = self.insts[li].spec.tp;
+            self.insts[li].kv = Some(make_kv(&self.shared.cm, kv_bytes, tp));
+        }
+        self.insts[li].offline_until = now + self.shared.cfg.reconfig.drain_s;
+        let kick_at = self.insts[li].offline_until;
+        self.sync_status(inst);
+        q.at(kick_at, Ev::Kick { inst });
+    }
+
+    /// Charge one fault-recovery retry against `faults.max_retries`;
+    /// false means the budget is exhausted and the caller must abandon
+    /// the request. Only instance deaths charge retries — elastic-switch
+    /// and stale-view redirects re-route without losing stage work and
+    /// stay free, which keeps `retries = 0` on every no-fault path.
+    fn charge_retry(&mut self, rid: u64) -> bool {
+        let max = self.shared.cfg.faults.max_retries;
+        let r = self.reqs.get_mut(&rid).expect("displaced request is live");
+        if r.retries >= max {
+            return false;
+        }
+        r.retries += 1;
+        true
+    }
+
+    /// Abandon a request whose retry budget is exhausted: it counts as
+    /// done (the run must terminate) but keeps no generation progress —
+    /// an SLO miss with `gave_up` pinned in its record.
+    fn give_up(&mut self, rid: u64) {
+        let r = self.reqs.get_mut(&rid).expect("abandoned request is live");
+        r.rewind_for_retry();
+        r.gave_up = true;
+        self.done += 1;
+        self.retire(rid);
     }
 
     /// Enable MM-Store failure injection on this shard's partition
@@ -696,6 +926,8 @@ impl ReplicaShard {
                 finish: r.finish,
                 recomputed: r.recomputed,
                 feature_reused: r.feature_reused,
+                retries: r.retries,
+                gave_up: r.gave_up,
             },
         ));
     }
@@ -975,7 +1207,12 @@ impl ReplicaShard {
         loop {
             let t = cur_ns as f64 / 1e9;
             let work = self.decode_step_work(inst).max(1e-7);
-            let end_ns = sec_to_ns(t + work).max(cur_ns);
+            // Wall-clock duration of the step: a lone task on an
+            // otherwise-idle NPU runs at exactly the hardware speed
+            // factor (1.0 bar an injected brownout, where the event path
+            // divides identically through `PsNpu`'s rate law).
+            let dur = work / self.npus[npu - self.npu_base].speed();
+            let end_ns = sec_to_ns(t + dur).max(cur_ns);
             let next_ev = q.next_event_ns().unwrap_or(u64::MAX).min(self.window_ns);
             if end_ns >= next_ev || end_ns > self.horizon_ns {
                 // A pending event, the window end, or the horizon could
@@ -1285,8 +1522,9 @@ impl ReplicaShard {
     }
 }
 
-/// Shard events drive the shard directly; the two coordination events are
-/// the coordinator's and must never reach a shard.
+/// Shard events drive the shard directly; the coordination events
+/// (arrivals, reconfiguration ticks, faults) are the coordinator's and
+/// must never reach a shard.
 impl SimModel for ReplicaShard {
     type Event = Ev;
 
@@ -1303,7 +1541,7 @@ impl SimModel for ReplicaShard {
                 // A freed coupled instance may also resume decode.
                 self.maybe_start_decode_step(inst, now, q);
             }
-            Ev::Arrive(_) | Ev::ReconfigTick => {
+            Ev::Arrive(_) | Ev::ReconfigTick | Ev::Fault(_) => {
                 unreachable!("coordination events are handled at the coordination boundary")
             }
         }

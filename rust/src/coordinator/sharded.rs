@@ -74,12 +74,13 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Coordination events, drained by the coordinator thread between rounds.
-/// Mirrors the single loop's `Ev::Arrive` / `Ev::ReconfigTick` with the
-/// same event classes, so the merge order at equal timestamps is
-/// identical (arrivals before ticks).
+/// Mirrors the single loop's `Ev::Arrive` / `Ev::ReconfigTick` /
+/// `Ev::Fault` with the same event classes, so the merge order at equal
+/// timestamps is identical (arrivals before ticks and faults).
 enum CoordEv {
     Arrive(ArrivedRequest),
     Tick,
+    Fault(usize),
 }
 
 /// One shard plus its private event queue — the unit shipped to workers.
@@ -222,6 +223,13 @@ impl ServingSim {
         if let Some(t) = &mut ticker {
             t.arm(&mut cq, CoordEv::Tick);
         }
+        // The fault schedule, in the same order and event class as the
+        // single loop's `run` (ticker armed first, then faults): each
+        // fault is a conservative barrier — every shard drains strictly
+        // below its timestamp before the commit mutates topology.
+        for (i, f) in self.faults.events().iter().enumerate() {
+            cq.at_control(f.t, CoordEv::Fault(i));
+        }
 
         let mut slots: Vec<Option<ShardSlot>> = self
             .shards
@@ -345,6 +353,14 @@ impl ServingSim {
                         self.reconfigurer.as_mut().expect("controller").committed(now, &plan);
                     }
                     ticker.as_mut().expect("tick implies ticker").arm(&mut cq, CoordEv::Tick);
+                }
+                CoordEv::Fault(idx) => {
+                    // Lockstep mirror of `ServingSim::on_fault` (the
+                    // barrier bookkeeping is the round counter here).
+                    if let Some((replica, action)) = self.commit_fault(idx, now) {
+                        let slot = slots[replica].as_mut().expect("slot home");
+                        slot.shard.apply_fault(&action, now, &mut slot.q);
+                    }
                 }
             }
         }
@@ -523,6 +539,45 @@ mod tests {
             k1.barriers
         );
         assert!(k16.max_route_staleness < 16, "staleness bound");
+    }
+
+    #[test]
+    fn sharded_matches_single_loop_under_fault_storm() {
+        use crate::sim::faults::{FaultEvent, FaultKind};
+        let mut c = cfg("E-P-D-Dx2", 6.0, 96);
+        c.faults.events = vec![
+            FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+            FaultEvent { t: 3.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+            FaultEvent { t: 4.0, kind: FaultKind::LinkDegrade { replica: 0, factor: 0.25 } },
+            FaultEvent { t: 5.0, kind: FaultKind::StoreLoss { replica: 1 } },
+            FaultEvent { t: 8.0, kind: FaultKind::InstanceUp { inst: 2 } },
+            FaultEvent { t: 9.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 1.0 } },
+        ];
+        let (single, sharded) = pair(&c);
+        assert_eq!(
+            single.metrics.records, sharded.metrics.records,
+            "faulted run must stay bit-identical across engines"
+        );
+        assert_eq!(single.store_stats, sharded.store_stats);
+        assert_eq!(single.kv_link_stats, sharded.kv_link_stats);
+        assert_eq!(single.faults_applied, sharded.faults_applied);
+        assert_eq!(single.faults_skipped, sharded.faults_skipped);
+        assert_eq!(single.faults_applied, 6, "the whole storm must commit");
+        assert_eq!(single.metrics.completed() + single.metrics.gave_up(), 96);
+    }
+
+    #[test]
+    fn sharded_matches_under_faults_at_route_epochs() {
+        use crate::sim::faults::{FaultEvent, FaultKind};
+        for k in [2, 8] {
+            let mut c = cfg("E-P-D-Dx2", 8.0, 96);
+            c.scheduler.route_epoch = k;
+            c.faults.events = vec![
+                FaultEvent { t: 1.5, kind: FaultKind::InstanceDown { inst: 6 } },
+                FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 6 } },
+            ];
+            assert_equiv(&c, &format!("faults at route_epoch={k}"));
+        }
     }
 
     #[test]

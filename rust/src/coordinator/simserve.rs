@@ -96,7 +96,7 @@
 //!    memory O(in-flight) rather than O(trace).
 
 use crate::config::Config;
-use crate::coordinator::deployment::Deployment;
+use crate::coordinator::deployment::{Deployment, StageSet};
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
 use crate::coordinator::policy::{
     make_balance_policy, make_route_policy, BalancePolicy, ClusterView, ResidencyView,
@@ -104,10 +104,11 @@ use crate::coordinator::policy::{
 };
 use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchRecord};
 use crate::coordinator::router::Route;
-use crate::coordinator::shard::{ReplicaShard, SimShared};
+use crate::coordinator::shard::{ReplicaShard, ShardFaultAction, SimShared};
 use crate::mmstore::StoreStats;
 use crate::npu::CostModel;
 use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
+use crate::sim::faults::{FaultKind, FaultSchedule};
 use crate::workload::injector::Arrival;
 use crate::workload::stream::{ArrivalSource, WorkloadStream};
 use crate::workload::{ArrivedRequest, RequestSpec};
@@ -147,6 +148,12 @@ pub struct SimOutcome {
     /// Elastic role switches committed during the run (empty when
     /// re-provisioning is disabled).
     pub reconfig_switches: Vec<SwitchRecord>,
+    /// Scheduled faults actually committed. Both 0 with `[faults]` empty.
+    pub faults_applied: u64,
+    /// Scheduled faults skipped as impossible at fire time — a death that
+    /// would leave a stage of its replica with no provider, or a revival
+    /// of an instance that is not down.
+    pub faults_skipped: u64,
 }
 
 /// The serving simulation: per-replica shards plus the coordination state
@@ -196,6 +203,15 @@ pub struct ServingSim {
     pub(crate) reconfigurer: Option<Reconfigurer>,
     /// Its epoch source.
     pub(crate) ticker: Option<Ticker>,
+    /// Validated fault schedule ([`crate::sim::faults`]); empty by
+    /// default, in which case zero fault events are scheduled and the run
+    /// is byte-for-byte the pre-fault simulator.
+    pub(crate) faults: FaultSchedule,
+    /// Stage sets saved at `InstanceDown` commits, consumed by the
+    /// matching `InstanceUp` (None = instance is not down).
+    pub(crate) fault_roles: Vec<Option<StageSet>>,
+    pub(crate) faults_applied: u64,
+    pub(crate) faults_skipped: u64,
 }
 
 impl ServingSim {
@@ -233,6 +249,7 @@ impl ServingSim {
         if route_epoch == 0 {
             bail!("scheduler.route_epoch must be >= 1 (1 = refresh the ClusterView every arrival)");
         }
+        let faults = FaultSchedule::build(&cfg.faults.events, &dep)?;
         let cm = CostModel::new(cfg.model.clone(), cfg.hardware.clone());
         let route = make_route_policy(&cfg.scheduler.route_policy)?;
         let entry_balance = make_balance_policy(&cfg.scheduler.balance_policy)?;
@@ -260,6 +277,7 @@ impl ServingSim {
         let view = ClusterView::new(&dep);
         let cands = StageCands::build(&dep);
         let last_arrival = source.last_arrival();
+        let fault_roles = vec![None; dep.instances.len()];
         Ok(Self {
             shared,
             dep,
@@ -281,6 +299,10 @@ impl ServingSim {
             stream_done: false,
             reconfigurer,
             ticker,
+            faults,
+            fault_roles,
+            faults_applied: 0,
+            faults_skipped: 0,
         })
     }
 
@@ -304,6 +326,14 @@ impl ServingSim {
         }
         if let Some(t) = &mut self.ticker {
             t.arm(&mut q, Ev::ReconfigTick);
+        }
+        // One-shot control-class fault events, scheduled in full at run
+        // start: at equal timestamps they order after arrivals and (with
+        // the ticker armed first) after a coincident reconfiguration
+        // tick. The sharded engine schedules the identical sequence on
+        // its coordination queue, so fault ordering is time-only in both.
+        for (i, f) in self.faults.events().iter().enumerate() {
+            q.at_control(f.t, Ev::Fault(i));
         }
         let horizon = self.last_arrival + 3600.0;
         let horizon_ns = engine::horizon_ns(horizon).unwrap_or(0);
@@ -414,6 +444,78 @@ impl ServingSim {
         Some(plan)
     }
 
+    /// Commit one scheduled fault at the coordination boundary: validate
+    /// it against the *live* topology (skipping impossible faults), update
+    /// the router's authority — deployment, candidate sets, topology
+    /// generation, view dirtiness — and return the shard-side action for
+    /// the owning replica. Shared verbatim by both engines; the caller
+    /// applies the action via [`ReplicaShard::apply_fault`].
+    pub(crate) fn commit_fault(&mut self, idx: usize, _now: f64) -> Option<(usize, ShardFaultAction)> {
+        let f = *self.faults.get(idx);
+        match f.kind {
+            FaultKind::InstanceDown { inst } => {
+                let stages = self.dep.instances[inst].stages;
+                // Skip deaths that are already in effect or would leave a
+                // stage of the replica with zero providers: recovery
+                // re-routes strictly within the replica, so coverage is
+                // the invariant that keeps every displaced request
+                // servable (and every policy pick infallible).
+                if stages == StageSet::NONE || !self.replica_covers_without(inst) {
+                    self.faults_skipped += 1;
+                    return None;
+                }
+                self.fault_roles[inst] = Some(stages);
+                self.dep.instances[inst].stages = StageSet::NONE;
+                self.cands = StageCands::build(&self.dep);
+                self.topo_gen += 1;
+                self.view_dirty = true;
+                self.faults_applied += 1;
+                Some((self.inst_replica[inst], ShardFaultAction::InstanceDown { inst }))
+            }
+            FaultKind::InstanceUp { inst } => {
+                let Some(stages) = self.fault_roles[inst].take() else {
+                    self.faults_skipped += 1; // not down: nothing to revive
+                    return None;
+                };
+                self.dep.instances[inst].stages = stages;
+                self.cands = StageCands::build(&self.dep);
+                self.topo_gen += 1;
+                self.view_dirty = true;
+                self.faults_applied += 1;
+                Some((self.inst_replica[inst], ShardFaultAction::InstanceUp { inst, stages }))
+            }
+            FaultKind::NpuSlowdown { npu, factor } => {
+                self.faults_applied += 1;
+                Some((self.npu_replica[npu], ShardFaultAction::NpuSlowdown { npu, factor }))
+            }
+            FaultKind::LinkDegrade { replica, factor } => {
+                self.faults_applied += 1;
+                Some((replica, ShardFaultAction::LinkDegrade { factor }))
+            }
+            FaultKind::StoreLoss { replica } => {
+                self.faults_applied += 1;
+                Some((replica, ShardFaultAction::StoreLoss))
+            }
+        }
+    }
+
+    /// Would every stage `inst` currently serves keep at least one other
+    /// provider in its replica if `inst` died?
+    fn replica_covers_without(&self, inst: usize) -> bool {
+        let dead = self.dep.instances[inst].stages;
+        let replica = self.dep.instances[inst].replica;
+        let covered = |pred: fn(&StageSet) -> bool| {
+            self.dep
+                .instances
+                .iter()
+                .enumerate()
+                .any(|(i, s)| i != inst && s.replica == replica && pred(&s.stages))
+        };
+        (!dead.encode || covered(|s| s.encode))
+            && (!dead.prefill || covered(|s| s.prefill))
+            && (!dead.decode || covered(|s| s.decode))
+    }
+
     /// Total finished requests across shards.
     pub(crate) fn done_total(&self) -> usize {
         self.shards.iter().map(|s| s.done_count()).sum()
@@ -466,6 +568,17 @@ impl ServingSim {
         self.ticker.as_mut().expect("tick implies ticker").arm(q, Ev::ReconfigTick);
     }
 
+    /// A scheduled fault fires. Like a reconfiguration epoch this is a
+    /// coordination sync point in either engine; the sharded engine's
+    /// `CoordEv::Fault` arm mirrors this handler and must stay in
+    /// lockstep.
+    fn on_fault(&mut self, idx: usize, now: f64, q: &mut EventQueue<Ev>) {
+        self.barriers += 1;
+        if let Some((replica, action)) = self.commit_fault(idx, now) {
+            self.shards[replica].apply_fault(&action, now, q);
+        }
+    }
+
     /// The replica owning a shard-local event.
     fn replica_of(&self, ev: &Ev) -> usize {
         match ev {
@@ -477,7 +590,7 @@ impl ServingSim {
             // per-shard queues (the single loop routes at the arrival
             // event itself), but the mapping is well-defined regardless.
             Ev::Deliver { route, .. } => self.inst_replica[route.target_instance()],
-            Ev::Arrive(_) | Ev::ReconfigTick => unreachable!("coordination event"),
+            Ev::Arrive(_) | Ev::ReconfigTick | Ev::Fault(_) => unreachable!("coordination event"),
         }
     }
 
@@ -523,6 +636,8 @@ impl ServingSim {
             npu_utilization,
             kv_link_stats: self.shards.iter().map(|s| s.kv_link_stats()).collect(),
             reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
+            faults_applied: self.faults_applied,
+            faults_skipped: self.faults_skipped,
         }
     }
 }
@@ -582,6 +697,7 @@ impl SimModel for ServingSim {
         match ev {
             Ev::Arrive(arrived) => self.on_arrive(arrived, now, q),
             Ev::ReconfigTick => self.on_reconfig_tick(now, q),
+            Ev::Fault(idx) => self.on_fault(idx, now, q),
             other => {
                 let r = self.replica_of(&other);
                 self.shards[r].handle(now, other, q);

@@ -239,6 +239,22 @@ impl MmStore {
         }
     }
 
+    /// Drop every resident entry at once — a simulated partition loss
+    /// (fault injection). Counted as evictions; subsequent `get`s miss and
+    /// fall back to §3.2's local recomputation, exactly like an eviction.
+    /// Returns how many entries were lost.
+    pub fn clear(&mut self) -> usize {
+        let lost = self.index.len();
+        self.index.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.used_bytes = 0.0;
+        self.stats.evictions += lost as u64;
+        lost
+    }
+
     /// Residency check without stats or recency impact (used by the router
     /// to predict reuse before dispatch).
     pub fn contains(&self, key: u64) -> bool {
@@ -467,6 +483,23 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert!(s.nodes.len() <= 3, "slab len {} — free-list recycling broken", s.nodes.len());
         assert_eq!(s.stats().evictions, 98);
+    }
+
+    #[test]
+    fn clear_drops_everything_and_counts_evictions() {
+        let mut s = MmStore::new(1e9);
+        s.put(1, 1e6, 1);
+        s.put(2, 2e6, 2);
+        assert_eq!(s.clear(), 2);
+        assert!(s.is_empty());
+        assert_eq!(s.used_bytes(), 0.0);
+        assert!(!s.contains(1) && !s.contains(2));
+        assert_eq!(s.stats().evictions, 2);
+        // The store keeps working after the loss.
+        assert!(s.put(3, 1e6, 3));
+        assert_eq!(s.get(3).map(|e| e.visual_tokens), Some(3));
+        assert_eq!(s.clear(), 1);
+        assert_eq!(s.clear(), 0, "clearing an empty store is a no-op");
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! Events are ordered by `(time, class, sequence)`: at equal times,
 //! **arrival-class** events ([`EventQueue::at_arrival`]) fire first, then
 //! **control-class** events ([`EventQueue::at_control`] — the periodic
-//! control-plane epochs a [`Ticker`] arms), then normal ones; ties within a
+//! control-plane epochs a [`Ticker`] arms, and the one-shot injected
+//! faults of a [`crate::sim::faults::FaultSchedule`]), then normal ones;
+//! ties within a
 //! class break in scheduling order — so runs are bit-reproducible under a
 //! fixed seed, and a lazily-scheduled arrival stream orders exactly like
 //! the old schedule-everything-up-front pattern (where arrivals held the

@@ -1,0 +1,215 @@
+//! Deterministic fault injection — failures as first-class simulation events.
+//!
+//! The ROADMAP's production north star needs the simulator to express what a
+//! real EPD deployment must survive: replica deaths, NPU brownouts, KV-link
+//! degradation, and MM-Store partition loss. A [`FaultSchedule`] is a list of
+//! absolute-time [`FaultEvent`]s validated against the parsed
+//! [`Deployment`] at construction and injected as **control-class** events
+//! (`EventQueue::at_control`) by both serving engines, so fault ordering is
+//! time-only — exactly like reconfiguration ticks — and single-loop vs
+//! sharded runs stay bit-identical (`tests/determinism_golden.rs`,
+//! `tests/fault_recovery.rs`).
+//!
+//! An **empty schedule injects zero events**: the off path is byte-for-byte
+//! the pre-fault simulator, which is what keeps every existing golden digest
+//! valid with `[faults]` unset.
+//!
+//! Recovery semantics live with the machinery they reuse: the coordinator
+//! commits topology mutations (`simserve.rs::commit_fault`) and the owning
+//! shard re-routes displaced work through the drain/migrate path
+//! (`shard.rs::apply_fault`). This module is only the schedule: kinds,
+//! validation, deterministic ordering.
+
+use crate::coordinator::deployment::Deployment;
+use anyhow::{bail, Result};
+
+/// What a single fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Instance crash: the instance stops serving all stages; queued and
+    /// in-flight work re-routes to surviving instances of its replica with
+    /// bounded retry. Skipped (not applied) if the death would leave a
+    /// stage with zero providers cluster-wide.
+    InstanceDown { inst: usize },
+    /// Revival of a previously-downed instance: its original stage set is
+    /// restored after a reload window (`reconfig.drain_s`), and routing
+    /// policies see it again at the next `ClusterView` refresh.
+    InstanceUp { inst: usize },
+    /// NPU brownout: the physical NPU runs at `factor` of nominal speed
+    /// (`0 < factor ≤ 1`; `1.0` restores full speed).
+    NpuSlowdown { npu: usize, factor: f64 },
+    /// KV/feature link brownout for one replica: effective bandwidth is
+    /// scaled by `factor` (`0 < factor ≤ 1`; `1.0` restores). In-flight
+    /// transfers keep their committed schedule; only new enqueues see the
+    /// degraded rate.
+    LinkDegrade { replica: usize, factor: f64 },
+    /// MM-Store partition loss for one replica: every cached feature is
+    /// dropped at once. Requests fall back to §3.2's local recomputation.
+    StoreLoss { replica: usize },
+}
+
+/// One scheduled fault: an absolute simulation time plus a [`FaultKind`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute injection time, seconds.
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// A validated, time-ordered fault schedule.
+///
+/// Events are stable-sorted by time (ties keep config order), so the i-th
+/// schedule entry maps to exactly one control-class event in either engine
+/// and both replay the identical sequence.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// An empty schedule — injects nothing, perturbs nothing.
+    pub fn empty() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    /// Validate `events` against the deployment and fix their order.
+    pub fn build(events: &[FaultEvent], dep: &Deployment) -> Result<FaultSchedule> {
+        for (i, ev) in events.iter().enumerate() {
+            if !ev.t.is_finite() || ev.t < 0.0 {
+                bail!("faults.events[{i}]: time {} must be finite and >= 0", ev.t);
+            }
+            match ev.kind {
+                FaultKind::InstanceDown { inst } | FaultKind::InstanceUp { inst } => {
+                    if inst >= dep.instances.len() {
+                        bail!(
+                            "faults.events[{i}]: instance {inst} out of range (deployment '{}' has {})",
+                            dep.name,
+                            dep.instances.len()
+                        );
+                    }
+                }
+                FaultKind::NpuSlowdown { npu, factor } => {
+                    if npu >= dep.num_npus() {
+                        bail!(
+                            "faults.events[{i}]: npu {npu} out of range (deployment '{}' has {})",
+                            dep.name,
+                            dep.num_npus()
+                        );
+                    }
+                    check_factor(i, factor)?;
+                }
+                FaultKind::LinkDegrade { replica, factor } => {
+                    check_replica(i, replica, dep)?;
+                    check_factor(i, factor)?;
+                }
+                FaultKind::StoreLoss { replica } => check_replica(i, replica, dep)?,
+            }
+        }
+        let mut events = events.to_vec();
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Ok(FaultSchedule { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The i-th scheduled fault (schedule order = injection order).
+    pub fn get(&self, idx: usize) -> &FaultEvent {
+        &self.events[idx]
+    }
+}
+
+fn check_factor(i: usize, factor: f64) -> Result<()> {
+    if !factor.is_finite() || factor <= 0.0 || factor > 1.0 {
+        bail!("faults.events[{i}]: factor {factor} must be in (0, 1]");
+    }
+    Ok(())
+}
+
+fn check_replica(i: usize, replica: usize, dep: &Deployment) -> Result<()> {
+    if replica >= dep.replicas {
+        bail!(
+            "faults.events[{i}]: replica {replica} out of range (deployment '{}' has {})",
+            dep.name,
+            dep.replicas
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dep() -> Deployment {
+        Deployment::parse("E-P-D x2").unwrap()
+    }
+
+    #[test]
+    fn empty_schedule_is_empty() {
+        let s = FaultSchedule::build(&[], &dep()).unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert!(FaultSchedule::empty().is_empty());
+        assert!(FaultSchedule::default().is_empty());
+    }
+
+    #[test]
+    fn events_sort_by_time_stably() {
+        let evs = [
+            FaultEvent { t: 5.0, kind: FaultKind::InstanceDown { inst: 0 } },
+            FaultEvent { t: 1.0, kind: FaultKind::StoreLoss { replica: 1 } },
+            FaultEvent { t: 5.0, kind: FaultKind::InstanceUp { inst: 0 } },
+        ];
+        let s = FaultSchedule::build(&evs, &dep()).unwrap();
+        assert_eq!(s.get(0).kind, FaultKind::StoreLoss { replica: 1 });
+        // Equal times keep config order: down before up.
+        assert_eq!(s.get(1).kind, FaultKind::InstanceDown { inst: 0 });
+        assert_eq!(s.get(2).kind, FaultKind::InstanceUp { inst: 0 });
+    }
+
+    #[test]
+    fn rejects_out_of_range_targets() {
+        let d = dep();
+        for bad in [
+            FaultEvent { t: 1.0, kind: FaultKind::InstanceDown { inst: 6 } },
+            FaultEvent { t: 1.0, kind: FaultKind::InstanceUp { inst: 99 } },
+            FaultEvent { t: 1.0, kind: FaultKind::NpuSlowdown { npu: 6, factor: 0.5 } },
+            FaultEvent { t: 1.0, kind: FaultKind::LinkDegrade { replica: 2, factor: 0.5 } },
+            FaultEvent { t: 1.0, kind: FaultKind::StoreLoss { replica: 2 } },
+        ] {
+            assert!(FaultSchedule::build(&[bad], &d).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_times_and_factors() {
+        let d = dep();
+        for bad in [
+            FaultEvent { t: -1.0, kind: FaultKind::StoreLoss { replica: 0 } },
+            FaultEvent { t: f64::NAN, kind: FaultKind::StoreLoss { replica: 0 } },
+            FaultEvent { t: f64::INFINITY, kind: FaultKind::StoreLoss { replica: 0 } },
+            FaultEvent { t: 1.0, kind: FaultKind::NpuSlowdown { npu: 0, factor: 0.0 } },
+            FaultEvent { t: 1.0, kind: FaultKind::NpuSlowdown { npu: 0, factor: 1.5 } },
+            FaultEvent { t: 1.0, kind: FaultKind::LinkDegrade { replica: 0, factor: -0.5 } },
+            FaultEvent { t: 1.0, kind: FaultKind::LinkDegrade { replica: 0, factor: f64::NAN } },
+        ] {
+            assert!(FaultSchedule::build(&[bad], &d).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn accepts_boundary_factor_one() {
+        let ok = FaultEvent { t: 0.0, kind: FaultKind::NpuSlowdown { npu: 0, factor: 1.0 } };
+        assert_eq!(FaultSchedule::build(&[ok], &dep()).unwrap().len(), 1);
+    }
+}

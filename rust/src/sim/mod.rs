@@ -8,9 +8,15 @@
 //!   {cube, vector, bandwidth} resources per the interference law in
 //!   [`crate::npu::colocation`], so task rates change as co-located load
 //!   comes and goes (spatial multiplexing).
+//! * [`faults`] — deterministic fault injection: a validated, time-ordered
+//!   schedule of instance deaths/revivals, NPU slowdowns, link degradations
+//!   and store-partition losses, injected as control-class events so both
+//!   serving engines replay the identical fault sequence.
 
 pub mod engine;
+pub mod faults;
 pub mod psnpu;
 
 pub use engine::{EventQueue, SimModel};
+pub use faults::{FaultEvent, FaultKind, FaultSchedule};
 pub use psnpu::PsNpu;

@@ -41,6 +41,10 @@ pub struct PsNpu {
     busy_time: f64,
     /// Integral of Σ task-seconds (for average-occupancy metrics).
     work_done: f64,
+    /// Hardware speed factor (fault injection): 1.0 = nominal, smaller =
+    /// brownout. Scales every task's rate uniformly, on top of the
+    /// co-location interference law.
+    speed: f64,
 }
 
 impl Default for PsNpu {
@@ -51,7 +55,15 @@ impl Default for PsNpu {
 
 impl PsNpu {
     pub fn new() -> Self {
-        Self { tasks: Vec::new(), last_update: 0.0, next_id: 0, epoch: 0, busy_time: 0.0, work_done: 0.0 }
+        Self {
+            tasks: Vec::new(),
+            last_update: 0.0,
+            next_id: 0,
+            epoch: 0,
+            busy_time: 0.0,
+            work_done: 0.0,
+            speed: 1.0,
+        }
     }
 
     /// Advance internal progress to `now` (must be called with monotone
@@ -83,9 +95,25 @@ impl PsNpu {
                 vector: total.vector - t.demand.vector,
                 bw: total.bw - t.demand.bw,
             };
-            t.rate = 1.0 / colocated_slowdown(&t.demand, &others);
+            t.rate = self.speed / colocated_slowdown(&t.demand, &others);
         }
         self.epoch += 1;
+    }
+
+    /// Set the hardware speed factor (fault injection). Progress up to `now`
+    /// is settled at the old speed first; the epoch bump invalidates any
+    /// completion event armed under the old rates, so the caller must
+    /// re-query [`PsNpu::next_completion`] and re-arm.
+    pub fn set_speed(&mut self, now: f64, speed: f64) {
+        assert!(speed > 0.0 && speed.is_finite(), "NPU speed must be positive");
+        self.advance(now);
+        self.speed = speed;
+        self.recompute_rates();
+    }
+
+    /// Current hardware speed factor (1.0 = nominal).
+    pub fn speed(&self) -> f64 {
+        self.speed
     }
 
     /// Start a task needing `work` seconds at full speed. Returns its id.
@@ -249,6 +277,30 @@ mod tests {
     fn finish_unknown_task_is_false() {
         let mut npu = PsNpu::new();
         assert!(!npu.finish(0.0, 999));
+    }
+
+    #[test]
+    fn slowdown_stretches_completion_and_settles_prior_progress() {
+        let mut npu = PsNpu::new();
+        npu.start(0.0, StageKind::Prefill.demand(), 2.0);
+        // 1 s at full speed: half the work done. Then a 50% brownout.
+        npu.set_speed(1.0, 0.5);
+        let (t, _) = npu.next_completion(1.0).unwrap();
+        // Remaining 1.0 work at rate 0.5 → 2 more seconds.
+        assert!((t - 3.0).abs() < 1e-9, "completion at {t}");
+        // Restoring mid-flight settles again.
+        npu.set_speed(2.0, 1.0);
+        let (t2, _) = npu.next_completion(2.0).unwrap();
+        assert!((t2 - 2.5).abs() < 1e-9, "completion at {t2}");
+    }
+
+    #[test]
+    fn set_speed_bumps_epoch() {
+        let mut npu = PsNpu::new();
+        let e0 = npu.epoch;
+        npu.set_speed(0.0, 0.5);
+        assert!(npu.epoch > e0, "stale completion events must be invalidated");
+        assert_eq!(npu.speed(), 0.5);
     }
 
     #[test]

@@ -39,7 +39,12 @@
 //! Scenarios: the two shipped configs the README's bench table anchors on
 //! (`table5_epd`, `throughput_colocated`) at reduced request counts, plus
 //! two multi-replica scenarios (default policies and `round_robin`) that
-//! exercise the sharded engine's coordination boundary.
+//! exercise the sharded engine's coordination boundary, plus a
+//! fault-storm scenario (`fault_storm_x2`) that pushes a non-empty
+//! `[faults]` schedule — instance death/revival, NPU brownout, link
+//! degradation, store loss — through every layer above. The empty-schedule
+//! off path is pinned separately: a `[faults]` section with no events must
+//! be bit-identical to the pre-fault simulator.
 
 use epd_serve::config::Config;
 use epd_serve::coordinator::metrics::records_digest;
@@ -260,6 +265,71 @@ fn elastic_sharded_trajectory_pinned() {
     let unfused_sharded = ServingSim::new(unfused, specs).unwrap().run_sharded();
     assert_eq!(single.metrics.records, unfused_sharded.metrics.records);
     assert_golden("elastic_phased_x2", records_digest(&single.metrics.records));
+}
+
+#[test]
+fn fault_storm_trajectory_pinned() {
+    // Fault events are deterministically scheduled control-class events,
+    // so a run with a non-empty schedule must satisfy every equivalence
+    // layer the fault-free scenarios do — fused vs unfused, streamed vs
+    // materialized, sharded vs single loop, epoch routing at K ∈ {1, 8} —
+    // and its recovery trajectory (retries, give-ups, re-routed timings)
+    // is pinned under tests/golden like any other scenario.
+    use epd_serve::sim::faults::{FaultEvent, FaultKind};
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = 128;
+    cfg.workload.image_reuse = 0.3;
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 3.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+        FaultEvent { t: 4.0, kind: FaultKind::LinkDegrade { replica: 0, factor: 0.25 } },
+        FaultEvent { t: 5.0, kind: FaultKind::StoreLoss { replica: 1 } },
+        FaultEvent { t: 8.0, kind: FaultKind::InstanceUp { inst: 2 } },
+        FaultEvent { t: 9.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 1.0 } },
+    ];
+    check_scenario("fault_storm_x2", &cfg);
+    // The storm actually lands: every event targets a covered instance /
+    // valid NPU, so none may be skipped.
+    let out = run_serving(&cfg).unwrap();
+    assert_eq!(out.faults_applied, 6, "all storm events must commit");
+    assert_eq!(out.faults_skipped, 0);
+    assert_eq!(
+        out.metrics.completed() + out.metrics.gave_up(),
+        cfg.workload.num_requests,
+        "every request must finish or give up within the horizon"
+    );
+}
+
+#[test]
+fn empty_fault_schedule_is_bit_identical_to_no_fault_path() {
+    // The zero-overhead off path every golden digest depends on: a
+    // `[faults]` section with no events — even with non-default retry
+    // knobs — must not shift a single bit of any record relative to the
+    // pre-fault simulator, in either engine.
+    let base_cfg = load_scenario("table5_epd", 128);
+    assert!(base_cfg.faults.events.is_empty());
+    let base = run_serving(&base_cfg).unwrap();
+    assert_eq!(base.faults_applied + base.faults_skipped, 0);
+    assert!(base.metrics.records.iter().all(|r| r.retries == 0 && !r.gave_up));
+
+    let mut knobs = base_cfg.clone();
+    knobs.faults.max_retries = 0; // retry knob without events is inert
+    let with_knobs = run_serving(&knobs).unwrap();
+    assert_eq!(
+        base.metrics.records, with_knobs.metrics.records,
+        "empty schedule must be the identity on the single loop"
+    );
+    let sharded = ServingSim::streamed(knobs).unwrap().run_sharded();
+    assert_eq!(
+        base.metrics.records, sharded.metrics.records,
+        "empty schedule must be the identity on the sharded engine"
+    );
+    assert_eq!(
+        records_digest(&base.metrics.records),
+        records_digest(&sharded.metrics.records)
+    );
 }
 
 #[test]

@@ -1,0 +1,277 @@
+//! Fault-injection and recovery invariants, property-tested over random
+//! fault schedules (see `src/sim/faults.rs` and ISSUE 6).
+//!
+//! The conservation contract: under ANY valid fault schedule, every
+//! injected request ends in exactly one of two states — completed
+//! (possibly after retries) or abandoned (`gave_up`) after exhausting the
+//! retry budget. Nothing is lost, double-counted, or left dangling, and
+//! the whole faulted trajectory is engine-invariant (single loop ≡
+//! sharded) bit for bit.
+//!
+//! Deterministic companions pin the individual recovery mechanisms:
+//! coverage-gated death (a fault that would leave a stage unservable is
+//! skipped, not partially applied), revival restoring routability, and
+//! retry-budget exhaustion flipping displaced requests to `gave_up`.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::records_digest;
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::testkit::{check, ensure};
+
+/// Two replicas of E-P-D-D: the only deployment shape where deaths can
+/// commit (D has a same-replica backup) *and* be skipped (E and P are
+/// sole providers of their stage), so random schedules exercise both
+/// paths of the coverage gate.
+fn storm_cfg(n: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = n;
+    cfg.workload.image_reuse = 0.3;
+    cfg
+}
+
+const FACTORS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+
+#[test]
+fn random_fault_schedules_conserve_every_request() {
+    // 8 instances, 8 NPUs, 2 replicas (storm_cfg). Targets are drawn over
+    // the whole index space: deaths of sole-provider instances and
+    // revivals of live instances are *valid* schedule entries that must be
+    // skipped at fire time, and both paths count toward the
+    // applied+skipped == scheduled ledger.
+    check(
+        "fault-conservation",
+        0xfa117,
+        16,
+        |rng| {
+            let count = rng.below(7) as usize;
+            let events: Vec<FaultEvent> = (0..count)
+                .map(|_| {
+                    let t = rng.range_f64(0.5, 12.0);
+                    let kind = match rng.below(5) {
+                        0 => FaultKind::InstanceDown { inst: rng.below(8) as usize },
+                        1 => FaultKind::InstanceUp { inst: rng.below(8) as usize },
+                        2 => FaultKind::NpuSlowdown {
+                            npu: rng.below(8) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        3 => FaultKind::LinkDegrade {
+                            replica: rng.below(2) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        _ => FaultKind::StoreLoss { replica: rng.below(2) as usize },
+                    };
+                    FaultEvent { t, kind }
+                })
+                .collect();
+            (rng.below(3) as u32, events)
+        },
+        |(max_retries, events)| {
+            let n = 48;
+            let mut cfg = storm_cfg(n);
+            cfg.faults.max_retries = *max_retries;
+            cfg.faults.events = events.clone();
+            let single =
+                ServingSim::streamed(cfg.clone()).map_err(|e| format!("{e:#}"))?.run();
+            let sharded =
+                ServingSim::streamed(cfg).map_err(|e| format!("{e:#}"))?.run_sharded();
+
+            ensure(single.metrics.records.len() == n, "every request must be recorded")?;
+            for r in &single.metrics.records {
+                ensure(
+                    r.finish.is_some() != r.gave_up,
+                    format!("request {} must complete XOR give up", r.id),
+                )?;
+                ensure(
+                    r.retries <= *max_retries,
+                    format!("request {} exceeded the retry budget", r.id),
+                )?;
+                if r.gave_up {
+                    ensure(
+                        r.retries == *max_retries,
+                        format!("request {} gave up with budget left", r.id),
+                    )?;
+                }
+            }
+            ensure(
+                single.metrics.completed() + single.metrics.gave_up() == n,
+                "completed + gave_up must equal the injected count",
+            )?;
+            ensure(
+                single.faults_applied + single.faults_skipped == events.len() as u64,
+                "every scheduled fault must be applied or skipped",
+            )?;
+
+            ensure(
+                single.metrics.records == sharded.metrics.records,
+                "faulted trajectory must be engine-invariant",
+            )?;
+            ensure(
+                records_digest(&single.metrics.records)
+                    == records_digest(&sharded.metrics.records),
+                "digests must agree with record equality",
+            )?;
+            ensure(
+                single.faults_applied == sharded.faults_applied
+                    && single.faults_skipped == sharded.faults_skipped,
+                "fault ledger must be engine-invariant",
+            )
+        },
+    );
+}
+
+#[test]
+fn benign_faults_never_displace_requests() {
+    // Slowdowns, link degradation, and store loss change *timing*, never
+    // request placement: no retries, no give-ups, full completion.
+    check(
+        "benign-faults",
+        0xbe9192,
+        12,
+        |rng| {
+            let count = 1 + rng.below(4) as usize;
+            (0..count)
+                .map(|_| {
+                    let t = rng.range_f64(0.5, 10.0);
+                    let kind = match rng.below(3) {
+                        0 => FaultKind::NpuSlowdown {
+                            npu: rng.below(8) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        1 => FaultKind::LinkDegrade {
+                            replica: rng.below(2) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        _ => FaultKind::StoreLoss { replica: rng.below(2) as usize },
+                    };
+                    FaultEvent { t, kind }
+                })
+                .collect::<Vec<_>>()
+        },
+        |events| {
+            let n = 48;
+            let mut cfg = storm_cfg(n);
+            cfg.faults.events = events.clone();
+            let out = run_serving(&cfg).map_err(|e| format!("{e:#}"))?;
+            ensure(out.metrics.total_retries() == 0, "benign faults must not displace")?;
+            ensure(out.metrics.gave_up() == 0, "benign faults must not abandon")?;
+            ensure(out.metrics.completed() == n, "all requests must complete")?;
+            ensure(
+                out.faults_applied == events.len() as u64 && out.faults_skipped == 0,
+                "benign faults always commit",
+            )
+        },
+    );
+}
+
+#[test]
+fn uncovered_death_is_skipped_not_partially_applied() {
+    // Instances 0 (sole E of replica 0) and 1 (sole P) cannot die without
+    // leaving a stage unservable: the coverage gate must skip the whole
+    // event, leaving the run bit-identical to a fault-free one.
+    let baseline = run_serving(&storm_cfg(64)).unwrap();
+    for inst in [0usize, 1] {
+        let mut cfg = storm_cfg(64);
+        cfg.faults.events =
+            vec![FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst } }];
+        let out = run_serving(&cfg).unwrap();
+        assert_eq!(out.faults_applied, 0, "sole provider {inst} must not die");
+        assert_eq!(out.faults_skipped, 1);
+        assert_eq!(
+            baseline.metrics.records, out.metrics.records,
+            "a skipped fault must leave no trace"
+        );
+    }
+}
+
+#[test]
+fn second_death_in_a_replica_is_coverage_gated() {
+    // Inst 2 dies (covered by inst 3); inst 3's later death would leave
+    // replica 0 with no decoder, so it must be skipped — and with inst 2
+    // revived first, the same death commits.
+    let mut cfg = storm_cfg(64);
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 3.0, kind: FaultKind::InstanceDown { inst: 3 } },
+    ];
+    let out = run_serving(&cfg).unwrap();
+    assert_eq!(out.faults_applied, 1);
+    assert_eq!(out.faults_skipped, 1);
+    assert_eq!(out.metrics.completed() + out.metrics.gave_up(), 64);
+
+    let mut cfg2 = storm_cfg(64);
+    cfg2.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 4.0, kind: FaultKind::InstanceUp { inst: 2 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceDown { inst: 3 } },
+    ];
+    let out2 = run_serving(&cfg2).unwrap();
+    assert_eq!(out2.faults_applied, 3, "revival restores death coverage for the peer");
+    assert_eq!(out2.faults_skipped, 0);
+}
+
+#[test]
+fn revival_restores_routability() {
+    // Death + revival vs death alone, over an arrival stream that extends
+    // far past the revival: the revived decoder must take load again
+    // (different trajectory from staying dead), and with the default
+    // retry budget the single displacement costs no request its life.
+    let mut down_only = storm_cfg(96);
+    down_only.rate = 4.0;
+    down_only.faults.events =
+        vec![FaultEvent { t: 1.5, kind: FaultKind::InstanceDown { inst: 2 } }];
+    let dead = run_serving(&down_only).unwrap();
+
+    let mut with_revival = down_only.clone();
+    with_revival
+        .faults
+        .events
+        .push(FaultEvent { t: 5.0, kind: FaultKind::InstanceUp { inst: 2 } });
+    let revived = run_serving(&with_revival).unwrap();
+
+    assert_eq!(revived.faults_applied, 2);
+    assert_eq!(revived.faults_skipped, 0);
+    assert_eq!(revived.metrics.completed(), 96, "one death never exhausts budget 2");
+    assert_eq!(revived.metrics.gave_up(), 0);
+    assert!(
+        revived.metrics.records.iter().all(|r| r.retries <= 1),
+        "a single death displaces each request at most once"
+    );
+    assert_ne!(
+        records_digest(&dead.metrics.records),
+        records_digest(&revived.metrics.records),
+        "revival must be observable: the restored instance serves again"
+    );
+}
+
+#[test]
+fn exhausted_retry_budget_flips_to_gave_up() {
+    // A late death over a loaded decoder with max_retries = 0: every
+    // displaced request is abandoned instead of re-routed. The abandoned
+    // records carry no timings (state was rewound) and still count toward
+    // conservation; restoring the default budget rescues all of them.
+    let mut cfg = storm_cfg(96);
+    cfg.rate = 8.0;
+    cfg.faults.max_retries = 0;
+    cfg.faults.events =
+        vec![FaultEvent { t: 6.0, kind: FaultKind::InstanceDown { inst: 2 } }];
+    let strict = run_serving(&cfg).unwrap();
+    assert!(strict.metrics.gave_up() > 0, "a loaded decoder's death must strand work");
+    assert_eq!(strict.metrics.total_retries(), 0);
+    assert_eq!(strict.metrics.completed() + strict.metrics.gave_up(), 96);
+    for r in strict.metrics.records.iter().filter(|r| r.gave_up) {
+        assert!(r.finish.is_none(), "gave-up request {} cannot finish", r.id);
+        assert!(r.ttft.is_none(), "give-up rewinds the first-token stamp");
+        assert!(!r.meets_slo(&cfg.slo), "gave-up requests are SLO misses");
+    }
+
+    let mut lenient = cfg.clone();
+    lenient.faults.max_retries = 2;
+    let rescued = run_serving(&lenient).unwrap();
+    assert_eq!(rescued.metrics.gave_up(), 0, "budget 2 absorbs a single death");
+    assert_eq!(rescued.metrics.completed(), 96);
+    assert_eq!(rescued.metrics.total_retries(), strict.metrics.gave_up() as u64,
+        "exactly the stranded requests are the ones a budget rescues");
+}
