@@ -25,12 +25,36 @@
 //! core; a shortfall prints a loud warning (wall-clock is too
 //! noise-sensitive to abort the bench and lose the JSON over).
 //!
+//! The **residency-census sweep** (`residency_census` entries) crosses
+//! replica counts with `route_epoch` values under a high-reuse workload
+//! (small image pool, large stable resident set — the worst case for full
+//! re-unions) and pins the delta-maintained census claims: on the delta
+//! path `census_union_keys` must be exactly 0 (no partition union is ever
+//! rebuilt on the steady-state K > 1 path), records must be bit-identical
+//! to the `residency_deltas = false` full-rebuild escape hatch, total
+//! delta work must stay flat as the refresh cadence changes (O(changes),
+//! not O(refreshes × resident keys)), and the per-refresh
+//! coordinator-serial cost of both modes lands in the JSON.
+//!
+//! The **arrival-sampling comparison** (`arrival_sampling` entries) runs
+//! the K = 64 sharded engine with per-replica arrival lanes (default)
+//! against the `simulator.arrival_lanes = 1` legacy single-stream sampler,
+//! asserting that with lanes most arrivals are pre-sampled on shard
+//! workers (`arrivals_presampled` dominates `arrivals_inline`) and
+//! recording both engines' events/s; like the sweep's K > 1 wall-clock
+//! claim, the lanes-vs-legacy rate comparison warns loudly instead of
+//! asserting (deterministic counters carry the hard claims).
+//!
 //! Flags: `--requests N` (default 1 000 000), `--ratio-requests N`
 //! (default 10 000), `--deployment D` (default `E-P-D`),
 //! `--sweep-requests N` (default 10 000 000), `--sweep-replicas LIST`
 //! (default `1,2,4`, comma-separated; `0` or an empty list skips the
 //! sweep), `--route-epochs LIST` (default `1,64`, comma-separated
-//! `route_epoch` values for the sweep; values < 1 are dropped).
+//! `route_epoch` values for the sweep; values < 1 are dropped),
+//! `--census-requests N` (default 50 000), `--census-replicas LIST`
+//! (default `1,4,8,16`; empty skips), `--census-epochs LIST` (default
+//! `1,8,64`), `--sampling-requests N` (default 1 000 000),
+//! `--sampling-replicas LIST` (default `4,16`; empty skips).
 
 use epd_serve::bench::{print_table, repo_root, save_json};
 use epd_serve::config::Config;
@@ -75,6 +99,56 @@ fn sweep_run(cfg: &Config, sharded: bool) -> anyhow::Result<SweepRun> {
     })
 }
 
+/// One single-loop pass for the residency-census sweep: the census
+/// counters are engine-invariant (both engines share `refresh_shard_rows`),
+/// so the cheaper engine carries the claim.
+struct CensusRun {
+    digest: u64,
+    completed: usize,
+    delta_ops: u64,
+    union_keys: u64,
+    events: u64,
+}
+
+fn census_run(cfg: &Config) -> anyhow::Result<CensusRun> {
+    let sim = ServingSim::streamed(cfg.clone())?;
+    let out = sim.run();
+    Ok(CensusRun {
+        digest: records_digest(&out.metrics.records),
+        completed: out.metrics.completed(),
+        delta_ops: out.census_delta_ops,
+        union_keys: out.census_union_keys,
+        events: out.events_processed,
+    })
+}
+
+/// One sharded-engine pass for the arrival-sampling comparison.
+struct SamplingRun {
+    completed: usize,
+    presampled: u64,
+    inline: u64,
+    events_per_sec: f64,
+    wall_s: f64,
+}
+
+fn sampling_run(cfg: &Config) -> anyhow::Result<SamplingRun> {
+    let sim = ServingSim::streamed(cfg.clone())?;
+    let t0 = Instant::now();
+    let out = sim.run_sharded();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(SamplingRun {
+        completed: out.metrics.completed(),
+        presampled: out.arrivals_presampled,
+        inline: out.arrivals_inline,
+        events_per_sec: out.events_processed as f64 / wall_s.max(1e-9),
+        wall_s,
+    })
+}
+
+fn parse_list(raw: &str) -> Vec<usize> {
+    raw.split(',').filter_map(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0).collect()
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Cli::new(
         "sim_throughput",
@@ -94,27 +168,37 @@ fn main() -> anyhow::Result<()> {
         "1,64",
         "comma-separated scheduler.route_epoch values the sweep crosses replica counts with",
     )
+    .opt_default("census-requests", "50000", "requests per residency-census sweep point")
+    .opt_default(
+        "census-replicas",
+        "1,4,8,16",
+        "comma-separated replica counts for the residency-census sweep (empty skips)",
+    )
+    .opt_default(
+        "census-epochs",
+        "1,8,64",
+        "comma-separated route_epoch values for the residency-census sweep",
+    )
+    .opt_default("sampling-requests", "1000000", "requests per arrival-sampling comparison point")
+    .opt_default(
+        "sampling-replicas",
+        "4,16",
+        "comma-separated replica counts for the lanes-vs-legacy sampling comparison (empty skips)",
+    )
     .flag("bench", "ignored (cargo bench passes this to bench binaries)")
     .parse_env();
     let requests = args.get_usize("requests").unwrap();
     let ratio_requests = args.get_usize("ratio-requests").unwrap();
     let deployment = args.get("deployment").unwrap().to_string();
     let sweep_requests = args.get_usize("sweep-requests").unwrap();
-    let sweep_replicas: Vec<usize> = args
-        .get("sweep-replicas")
-        .unwrap()
-        .split(',')
-        .filter_map(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .collect();
+    let sweep_replicas: Vec<usize> = parse_list(args.get("sweep-replicas").unwrap());
+    let census_requests = args.get_usize("census-requests").unwrap();
+    let census_replicas: Vec<usize> = parse_list(args.get("census-replicas").unwrap());
+    let census_epochs: Vec<usize> = parse_list(args.get("census-epochs").unwrap());
+    let sampling_requests = args.get_usize("sampling-requests").unwrap();
+    let sampling_replicas: Vec<usize> = parse_list(args.get("sampling-replicas").unwrap());
     let route_epochs: Vec<usize> = {
-        let mut ks: Vec<usize> = args
-            .get("route-epochs")
-            .unwrap()
-            .split(',')
-            .filter_map(|s| s.trim().parse::<usize>().ok())
-            .filter(|&k| k > 0)
-            .collect();
+        let mut ks: Vec<usize> = parse_list(args.get("route-epochs").unwrap());
         if !ks.contains(&1) {
             // K=1 anchors both the digest reference and the barrier
             // baseline; the sweep is meaningless without it.
@@ -321,7 +405,223 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ------------------------------------------------------------------
-    // 4. Emit the perf-trajectory file at the repo root + the standard
+    // 4. Residency-census sweep: replicas × route-epoch under a
+    //    high-reuse workload (image_reuse 0.9 ⇒ small pool, large stable
+    //    resident set — the shape where re-unioning every partition per
+    //    refresh is most wasteful). Delta-maintained census vs the
+    //    full-rebuild escape hatch: bit-identical records, zero union
+    //    work on the delta path, total delta work flat across refresh
+    //    cadences, per-refresh serial cost of both modes in the JSON.
+    // ------------------------------------------------------------------
+    let mut census_rows: Vec<Vec<String>> = Vec::new();
+    let mut census_entries: Vec<Json> = Vec::new();
+    for &n in &census_replicas {
+        // Total delta work is O(store changes), which depends on the trace,
+        // not the refresh cadence — the first K > 1 point anchors the
+        // flatness claim for this fleet.
+        let mut flat_ref: Option<(usize, u64)> = None;
+        for &k in &census_epochs {
+            let mut c = Config::default();
+            c.deployment = format!("E-P-Dx{n}");
+            c.rate = 10.0 * n as f64;
+            c.workload.num_requests = census_requests;
+            c.workload.image_reuse = 0.9;
+            c.scheduler.route_epoch = k;
+            let delta = census_run(&c)?;
+            assert_eq!(
+                delta.completed, census_requests,
+                "E-P-Dx{n} K={k}: census sweep left requests unfinished"
+            );
+            let refreshes = (census_requests as u64).div_ceil(k as u64);
+            let mut e = Json::obj();
+            e.set("replicas", n)
+                .set("deployment", c.deployment.as_str())
+                .set("requests", census_requests)
+                .set("image_reuse", 0.9)
+                .set("route_epoch", k)
+                .set("refreshes_est", refreshes)
+                .set("census_delta_ops", delta.delta_ops)
+                .set("census_union_keys", delta.union_keys)
+                .set("records_digest", format!("{:016x}", delta.digest));
+            if k == 1 {
+                // Fresh-view path: live shard probes, no census machinery.
+                assert_eq!(
+                    delta.delta_ops + delta.union_keys,
+                    0,
+                    "E-P-Dx{n} K=1 must probe live shards without census work"
+                );
+                census_rows.push(vec![
+                    format!("{n}"),
+                    "1".into(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                    "fresh view".into(),
+                ]);
+            } else {
+                assert_eq!(
+                    delta.union_keys, 0,
+                    "E-P-Dx{n} K={k}: the delta path re-unioned partition key sets \
+                     ({} keys copied) — steady-state refreshes must be O(changes)",
+                    delta.union_keys
+                );
+                let mut full_cfg = c.clone();
+                full_cfg.scheduler.residency_deltas = false;
+                let full = census_run(&full_cfg)?;
+                assert_eq!(
+                    delta.digest, full.digest,
+                    "E-P-Dx{n} K={k}: delta-maintained census must route bit-identically \
+                     to the full-rebuild escape hatch"
+                );
+                assert_eq!(full.delta_ops, 0, "escape hatch must not drain deltas");
+                assert!(full.union_keys > 0, "escape hatch must actually union partitions");
+                if census_requests >= 5000 {
+                    // The O(changes) claim in one inequality: the delta
+                    // path's total work (bounded by store mutations) must
+                    // undercut the escape hatch's total key copies
+                    // (resident-set size × refresh count).
+                    assert!(
+                        delta.delta_ops < full.union_keys,
+                        "E-P-Dx{n} K={k}: delta ops {} ≥ union key copies {} — incremental \
+                         maintenance lost to the full rebuild it exists to kill",
+                        delta.delta_ops,
+                        full.union_keys
+                    );
+                }
+                if let Some((k0, ops0)) = flat_ref {
+                    let r = delta.delta_ops as f64 / ops0.max(1) as f64;
+                    assert!(
+                        (0.25..=4.0).contains(&r),
+                        "E-P-Dx{n}: total delta work must stay flat across refresh cadences \
+                         (K={k0}: {ops0} ops, K={k}: {} ops) — it tracks store churn, \
+                         not refresh count",
+                        delta.delta_ops
+                    );
+                } else {
+                    flat_ref = Some((k, delta.delta_ops));
+                }
+                let delta_per = delta.delta_ops as f64 / refreshes as f64;
+                let union_per = full.union_keys as f64 / refreshes as f64;
+                e.set("full_union_keys", full.union_keys)
+                    .set("records_match", true)
+                    .set("delta_ops_per_refresh", delta_per)
+                    .set("union_keys_per_refresh", union_per)
+                    .set("refresh_cost_ratio", union_per / delta_per.max(1e-9))
+                    .set("coord_serial_fraction_delta", delta.delta_ops as f64 / delta.events as f64)
+                    .set("coord_serial_fraction_full", full.union_keys as f64 / full.events as f64);
+                census_rows.push(vec![
+                    format!("{n}"),
+                    format!("{k}"),
+                    format!("{}", delta.delta_ops),
+                    format!("{}", full.union_keys),
+                    format!("{delta_per:.1} / {union_per:.1}"),
+                    format!("{:.1}×", union_per / delta_per.max(1e-9)),
+                ]);
+            }
+            census_entries.push(e);
+        }
+    }
+    if !census_rows.is_empty() {
+        print_table(
+            &format!(
+                "residency census — E-P-DxN, {census_requests} requests, image_reuse 0.9, \
+                 delta vs full rebuild"
+            ),
+            &["replicas", "K", "delta ops", "union keys", "per-refresh d/u", "cost cut"],
+            &census_rows,
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // 5. Arrival-sampling comparison: K = 64 sharded engine, per-replica
+    //    lanes (arrivals pre-sampled on shard workers between epochs) vs
+    //    the legacy single-stream sampler (every arrival drawn serially
+    //    at the coordinator). Counters carry the hard claims; the
+    //    events/s comparison warns loudly per the sweep's precedent.
+    // ------------------------------------------------------------------
+    let mut sampling_rows: Vec<Vec<String>> = Vec::new();
+    let mut sampling_entries: Vec<Json> = Vec::new();
+    for &n in &sampling_replicas {
+        let mut c = Config::default();
+        c.deployment = format!("E-P-Dx{n}");
+        c.rate = 10.0 * n as f64;
+        c.workload.num_requests = sampling_requests;
+        c.scheduler.route_epoch = 64;
+        let lanes = sampling_run(&c)?;
+        let mut legacy_cfg = c.clone();
+        legacy_cfg.simulator.arrival_lanes = 1;
+        let legacy = sampling_run(&legacy_cfg)?;
+        assert_eq!(lanes.completed, sampling_requests, "E-P-Dx{n}: lane run unfinished");
+        assert_eq!(legacy.completed, sampling_requests, "E-P-Dx{n}: legacy run unfinished");
+        assert_eq!(
+            legacy.presampled, 0,
+            "a single-lane source cannot be shipped to shard workers"
+        );
+        let frac =
+            lanes.presampled as f64 / ((lanes.presampled + lanes.inline).max(1)) as f64;
+        if n > 1 {
+            assert!(
+                frac >= 0.5,
+                "E-P-Dx{n} K=64: only {:.0}% of arrivals were pre-sampled on shard \
+                 workers — lane shipping is not engaged",
+                frac * 100.0
+            );
+        }
+        let ratio = lanes.events_per_sec / legacy.events_per_sec.max(1e-9);
+        if sampling_requests >= 1_000_000 && ratio < 0.95 {
+            eprintln!(
+                "WARNING: E-P-Dx{n} K=64: lane-sampled events/s {:.0} below 0.95× the \
+                 legacy sampler's {:.0} — rerun on a quiet machine before reading \
+                 anything into it",
+                lanes.events_per_sec, legacy.events_per_sec
+            );
+        }
+        sampling_rows.push(vec![
+            format!("{n}"),
+            format!("{}", lanes.presampled),
+            format!("{}", lanes.inline),
+            format!("{:.1}%", frac * 100.0),
+            format!("{:.2} M", lanes.events_per_sec / 1e6),
+            format!("{:.2} M", legacy.events_per_sec / 1e6),
+            format!("{ratio:.2}×"),
+        ]);
+        let mut e = Json::obj();
+        e.set("replicas", n)
+            .set("deployment", c.deployment.as_str())
+            .set("requests", sampling_requests)
+            .set("rate_req_s", c.rate)
+            .set("route_epoch", 64u64)
+            .set("arrivals_presampled", lanes.presampled)
+            .set("arrivals_inline", lanes.inline)
+            .set("worker_sampled_fraction", frac)
+            .set("lanes_wall_s", lanes.wall_s)
+            .set("lanes_events_per_sec", lanes.events_per_sec)
+            .set("legacy_wall_s", legacy.wall_s)
+            .set("legacy_events_per_sec", legacy.events_per_sec)
+            .set("lanes_vs_legacy_events_per_sec", ratio);
+        sampling_entries.push(e);
+    }
+    if !sampling_rows.is_empty() {
+        print_table(
+            &format!(
+                "arrival sampling — E-P-DxN, K=64 sharded, {sampling_requests} requests, \
+                 per-replica lanes vs legacy single stream"
+            ),
+            &[
+                "replicas",
+                "presampled",
+                "inline",
+                "worker frac",
+                "lanes ev/s",
+                "legacy ev/s",
+                "ratio",
+            ],
+            &sampling_rows,
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // 6. Emit the perf-trajectory file at the repo root + the standard
     //    bench_results/ dump.
     // ------------------------------------------------------------------
     let mut main_j = Json::obj();
@@ -353,7 +653,9 @@ fn main() -> anyhow::Result<()> {
     dump.set("bench", "sim_throughput")
         .set("main", main_j)
         .set("decode_heavy_ratio", ratio_j)
-        .set("multi_replica", sweep_entries);
+        .set("multi_replica", sweep_entries)
+        .set("residency_census", census_entries)
+        .set("arrival_sampling", sampling_entries);
 
     let root = repo_root().join("BENCH_sim_throughput.json");
     std::fs::write(&root, dump.to_string_pretty())?;

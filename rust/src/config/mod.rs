@@ -420,6 +420,16 @@ pub struct SchedulerSpec {
     /// `weighted_least_loaded`: score added per unit of KV utilization in
     /// excess of the threshold. Default 50 = the hardcoded default.
     pub balance_kv_penalty: f64,
+    /// Maintain the epoch-snapshot residency census incrementally from
+    /// per-replica MM-Store put/evict deltas instead of re-unioning every
+    /// partition's resident key set at each `ClusterView` refresh. Only
+    /// meaningful when `route_epoch > 1` (the `K = 1` path probes live
+    /// shards and never builds a census). `true` (default) makes each
+    /// refresh O(keys changed since the last refresh); `false` is the
+    /// full-rebuild escape hatch — bit-identical routing either way
+    /// (`tests/residency_census.rs` pins it), kept for baseline
+    /// measurement and bisection like `fuse_decode_steps`.
+    pub residency_deltas: bool,
 }
 
 /// P-D KV transmission strategy.
@@ -453,6 +463,7 @@ impl Default for SchedulerSpec {
             balance_token_scale: 4096.0,
             balance_kv_threshold: 0.9,
             balance_kv_penalty: 50.0,
+            residency_deltas: true,
         }
     }
 }
@@ -537,11 +548,23 @@ pub struct SimulatorSpec {
     /// Worker threads for the sharded engine; 0 = one per replica, capped
     /// at the machine's available parallelism.
     pub shard_threads: usize,
+    /// Arrival-sampling RNG lanes. The workload stream is split into this
+    /// many independently-seeded per-lane generators whose outputs are
+    /// merged deterministically (min arrival time, lane index breaking
+    /// ties, global request ids assigned at the merge) — which lets the
+    /// sharded engine pre-sample arrivals on shard workers between
+    /// coordination epochs. `0` (default) = one lane per replica of the
+    /// parsed deployment; `1` = the legacy single-stream sampler,
+    /// bit-identical to the pre-lane behavior. Both engines consume the
+    /// same merged stream, so results are engine-invariant at every lane
+    /// count; the *workload realization* for Poisson/phased processes does
+    /// change with the lane count (see `docs/PERFORMANCE.md`).
+    pub arrival_lanes: usize,
 }
 
 impl Default for SimulatorSpec {
     fn default() -> Self {
-        Self { sharded: false, shard_threads: 0 }
+        Self { sharded: false, shard_threads: 0, arrival_lanes: 0 }
     }
 }
 
@@ -765,6 +788,9 @@ impl Config {
                 }
                 s.balance_kv_penalty = v;
             }
+            if let Some(v) = sc.get("residency_deltas").and_then(Json::as_bool) {
+                s.residency_deltas = v;
+            }
         }
         if let Some(rc) = doc.get("reconfig") {
             let r = &mut cfg.reconfig;
@@ -823,6 +849,12 @@ impl Config {
                     bail!("simulator.shard_threads must be a non-negative integer, got {v}");
                 }
                 cfg.simulator.shard_threads = v as usize;
+            }
+            if let Some(v) = sim.get("arrival_lanes").and_then(Json::as_f64) {
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("simulator.arrival_lanes must be a non-negative integer, got {v}");
+                }
+                cfg.simulator.arrival_lanes = v as usize;
             }
         }
         if let Some(fs) = doc.get("faults") {
@@ -1104,6 +1136,36 @@ shard_threads = 3
         for bad in ["[simulator]\nshard_threads = -1\n", "[simulator]\nshard_threads = 2.5\n"] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn census_and_lane_knobs_round_trip() {
+        let doc = crate::util::toml::parse(
+            r#"
+[scheduler]
+residency_deltas = false
+
+[simulator]
+arrival_lanes = 4
+"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&doc).unwrap();
+        assert!(!cfg.scheduler.residency_deltas);
+        assert_eq!(cfg.simulator.arrival_lanes, 4);
+        // Defaults: delta maintenance on, lanes auto-sized from the
+        // deployment's replica count.
+        let d = Config::default();
+        assert!(d.scheduler.residency_deltas, "delta census is the default");
+        assert_eq!(d.simulator.arrival_lanes, 0, "0 = one lane per replica");
+    }
+
+    #[test]
+    fn arrival_lanes_rejects_nonsense() {
+        for bad in ["[simulator]\narrival_lanes = -1\n", "[simulator]\narrival_lanes = 1.5\n"] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
         }
     }
 

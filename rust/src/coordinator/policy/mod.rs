@@ -31,6 +31,13 @@
 //! pre-snapshot behavior bit-exactly (pinned by the `determinism_golden`
 //! layers).
 //!
+//! The view's MM-Store residency summary is **delta-maintained**: shards
+//! log per-partition put/evict transitions
+//! ([`crate::mmstore::ResidencyDelta`]) and each refresh drains them into
+//! a persistent [`ResidencyCensus`], so refresh cost is O(changes since
+//! the last epoch) rather than O(resident keys) — see the census type's
+//! docs for the maintenance rule and the escape hatch.
+//!
 //! Coordinator policies receive a [`ViewCtx`] (snapshot borrows only — the
 //! type cannot express a live probe); shard-local balance picks receive a
 //! [`PickCtx`] built from the shard's own incrementally-maintained table,
@@ -70,9 +77,10 @@ use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::batcher::{EncodeItem, PrefillItem};
 use crate::coordinator::deployment::Deployment;
 use crate::coordinator::router::Route;
+use crate::mmstore::ResidencyDelta;
 use crate::workload::RequestSpec;
 use anyhow::{bail, Result};
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// Which stage capability a scheduling decision needs. Selecting via this
 /// enum hits the pre-materialized per-replica candidate cache
@@ -152,6 +160,81 @@ impl StageCands {
     }
 }
 
+/// Incrementally maintained census of the content keys resident across
+/// every MM-Store partition: `refcounts[k]` = how many partitions hold
+/// `k` (a key can be resident in several — each partition caches its own
+/// copy), so union membership is simply "refcount present".
+///
+/// The census persists across [`ClusterView`] refreshes: at each refresh
+/// the coordination boundary drains every partition's
+/// [`ResidencyDelta`] log and [`ResidencyCensus::apply`]s it — O(changes
+/// since the last refresh), not O(resident keys). With the
+/// `scheduler.residency_deltas` escape hatch off it is instead rebuilt
+/// from a full key-set union each refresh
+/// ([`ResidencyCensus::rebuild_from_union`]); both maintenance modes
+/// expose exactly the same key set, which is what the debug-build
+/// cross-check and `tests/residency_census.rs` pin.
+#[derive(Debug, Default, Clone)]
+pub struct ResidencyCensus {
+    refcounts: HashMap<u64, u32>,
+    /// Delta operations applied since construction (the refresh-cost
+    /// counter the throughput bench's O(changes) assertion reads).
+    applied: u64,
+}
+
+impl ResidencyCensus {
+    /// Union membership: is `key` resident in at least one partition?
+    pub fn contains(&self, key: u64) -> bool {
+        self.refcounts.contains_key(&key)
+    }
+
+    /// Number of distinct resident keys across all partitions.
+    pub fn len(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.refcounts.is_empty()
+    }
+
+    /// Total delta operations applied over this census's lifetime.
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Fold one partition's residency transition into the census. `Evict`
+    /// of a key the census never saw indicates a missed `Put` upstream and
+    /// panics in debug builds (release builds ignore it).
+    pub fn apply(&mut self, delta: ResidencyDelta) {
+        self.applied += 1;
+        match delta {
+            ResidencyDelta::Put(k) => *self.refcounts.entry(k).or_insert(0) += 1,
+            ResidencyDelta::Evict(k) => match self.refcounts.get_mut(&k) {
+                Some(c) if *c > 1 => *c -= 1,
+                Some(_) => {
+                    self.refcounts.remove(&k);
+                }
+                None => debug_assert!(false, "Evict({k}) without a matching Put"),
+            },
+        }
+    }
+
+    /// Replace the census with a full key-set union (the
+    /// `residency_deltas = false` escape hatch, rebuilt every refresh, and
+    /// the seed state of the debug cross-check). Refcounts degenerate to 1
+    /// — irrelevant in this mode, since nothing is ever delta-applied on
+    /// top of a rebuilt census.
+    pub fn rebuild_from_union(&mut self, union: &HashSet<u64>) {
+        self.refcounts.clear();
+        self.refcounts.extend(union.iter().map(|&k| (k, 1)));
+    }
+
+    /// The resident key set (debug cross-check / tests; allocates).
+    pub fn key_set(&self) -> HashSet<u64> {
+        self.refcounts.keys().copied().collect()
+    }
+}
+
 /// MM-Store residency as captured by a [`ClusterView`] refresh — the
 /// snapshot replacement for the old per-arrival live probe over every
 /// replica's partition.
@@ -163,12 +246,14 @@ pub enum ResidencyView {
     /// while remaining semantically a snapshot (taken at this instant).
     Fresh,
     /// `route_epoch > 1`: the union of every partition's resident content
-    /// keys at refresh time. Up to `route_epoch − 1` subsequent arrivals
-    /// route against it. A stale `true` (key evicted since the refresh)
-    /// degrades to the §3.2 local-recompute path at prefill; a stale
-    /// `false` (key produced since) re-encodes — both deterministic,
-    /// neither loses requests.
-    Snapshot(HashSet<u64>),
+    /// keys as of the refresh, held as the persistent delta-maintained
+    /// [`ResidencyCensus`] (updated in place at each refresh — no per-epoch
+    /// key-set copy). Up to `route_epoch − 1` subsequent arrivals route
+    /// against it. A stale `true` (key evicted since the refresh) degrades
+    /// to the §3.2 local-recompute path at prefill; a stale `false` (key
+    /// produced since) re-encodes — both deterministic, neither loses
+    /// requests.
+    Snapshot(ResidencyCensus),
 }
 
 impl ResidencyView {
@@ -180,7 +265,7 @@ impl ResidencyView {
     pub fn contains(&self, key: u64) -> Option<bool> {
         match self {
             ResidencyView::Fresh => None,
-            ResidencyView::Snapshot(keys) => Some(keys.contains(&key)),
+            ResidencyView::Snapshot(census) => Some(census.contains(key)),
         }
     }
 }
@@ -625,8 +710,42 @@ mod tests {
     fn residency_fresh_defers_and_snapshot_answers() {
         let fresh = ResidencyView::Fresh;
         assert_eq!(fresh.contains(42), None, "fresh views delegate to a live probe");
-        let snap = ResidencyView::Snapshot([1u64, 2, 3].into_iter().collect());
+        let mut census = ResidencyCensus::default();
+        for k in [1u64, 2, 3] {
+            census.apply(ResidencyDelta::Put(k));
+        }
+        let snap = ResidencyView::Snapshot(census);
         assert_eq!(snap.contains(2), Some(true));
         assert_eq!(snap.contains(9), Some(false));
+    }
+
+    #[test]
+    fn census_refcounts_multi_partition_residency() {
+        // The same key resident in two partitions must survive one
+        // partition's eviction — union semantics, not last-writer-wins.
+        let mut c = ResidencyCensus::default();
+        c.apply(ResidencyDelta::Put(7)); // partition A
+        c.apply(ResidencyDelta::Put(7)); // partition B
+        c.apply(ResidencyDelta::Put(8));
+        assert_eq!(c.len(), 2);
+        c.apply(ResidencyDelta::Evict(7)); // A evicts; B still holds it
+        assert!(c.contains(7), "refcount 2 → 1 keeps the key resident");
+        c.apply(ResidencyDelta::Evict(7));
+        assert!(!c.contains(7), "refcount 0 removes the key");
+        assert_eq!(c.applied(), 5);
+        assert_eq!(c.key_set(), [8u64].into_iter().collect());
+    }
+
+    #[test]
+    fn census_full_rebuild_matches_delta_maintenance() {
+        let mut delta = ResidencyCensus::default();
+        delta.apply(ResidencyDelta::Put(1));
+        delta.apply(ResidencyDelta::Put(2));
+        delta.apply(ResidencyDelta::Evict(1));
+        delta.apply(ResidencyDelta::Put(3));
+        let mut rebuilt = ResidencyCensus::default();
+        rebuilt.rebuild_from_union(&[2u64, 3].into_iter().collect());
+        assert_eq!(delta.key_set(), rebuilt.key_set());
+        assert_eq!(rebuilt.applied(), 0, "rebuilds are not delta ops");
     }
 }

@@ -398,11 +398,29 @@ impl ReplicaShard {
         self.store.contains(key)
     }
 
-    /// Union this partition's resident content keys into `out` — the
-    /// ClusterView residency snapshot at `route_epoch > 1`, rebuilt once
-    /// per epoch (amortized over K arrivals, off the per-arrival path).
+    /// Union this partition's resident content keys into `out` — the full
+    /// O(resident keys) census. Steady-state refreshes no longer pay this:
+    /// it backs only the `residency_deltas = false` escape hatch and the
+    /// debug-build cross-check of the delta-maintained census.
     pub fn collect_resident_keys(&self, out: &mut std::collections::HashSet<u64>) {
         self.store.collect_keys(out);
+    }
+
+    /// Start logging this partition's residency transitions
+    /// ([`crate::mmstore::ResidencyDelta`]). The serving system enables
+    /// this on every shard at construction when the ClusterView residency
+    /// snapshot is delta-maintained (`route_epoch > 1` with
+    /// `scheduler.residency_deltas` on).
+    pub fn enable_residency_log(&mut self) {
+        self.store.enable_delta_log();
+    }
+
+    /// Move this partition's residency transitions accumulated since the
+    /// last refresh into `out` (appending) — the O(changes) half of the
+    /// census refresh, called once per `ClusterView` refresh alongside
+    /// [`Self::flush_rows`].
+    pub fn drain_residency_deltas(&mut self, out: &mut Vec<crate::mmstore::ResidencyDelta>) {
+        self.store.drain_deltas(out);
     }
 
     /// Append this replica's per-instance load snapshots in global
@@ -765,8 +783,16 @@ impl ReplicaShard {
     /// draw independent failure streams.
     pub fn enable_store_failures(&mut self, prob: f64, seed: u64) {
         self.store_fail_prob = prob;
+        debug_assert!(
+            self.store.is_empty(),
+            "store-failure injection must be enabled before the run starts"
+        );
+        let log = self.store.delta_log_enabled();
         self.store = MmStore::new(self.store.capacity_bytes())
             .with_failures(prob, seed.wrapping_add(self.replica as u64));
+        if log {
+            self.store.enable_delta_log();
+        }
     }
 
     pub fn set_horizon(&mut self, horizon_ns: u64) {

@@ -68,6 +68,7 @@ use crate::coordinator::simserve::{
     refresh_shard_rows, resident_in_view, ServingSim, SimOutcome,
 };
 use crate::sim::engine::{self, EventQueue};
+use crate::workload::stream::{ArrivalSource, LaneFeed};
 use crate::workload::ArrivedRequest;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -87,14 +88,25 @@ enum CoordEv {
 struct ShardSlot {
     shard: ReplicaShard,
     q: EventQueue<Ev>,
+    /// This replica's arrival lane, detached from the lane-split
+    /// [`MergedArrivals`] source between coordination events so the worker
+    /// can pre-sample arrivals in parallel with its event window
+    /// ([`LaneFeed::fill`]). `None` when the source is not lane-split (or
+    /// its lane count doesn't match the replica count) — the coordinator
+    /// then samples inline, same trace either way by the merge contract.
+    ///
+    /// [`MergedArrivals`]: crate::workload::stream::MergedArrivals
+    lane: Option<LaneFeed>,
 }
 
 /// A round's work order for one shard: run every event strictly below
-/// `window_ns`.
+/// `window_ns`, then pre-sample up to `prefetch` arrivals on the shard's
+/// detached lane.
 struct Job {
     idx: usize,
     slot: ShardSlot,
     window_ns: u64,
+    prefetch: usize,
 }
 
 /// Fixed worker pool over a shared job channel. Shards move to workers by
@@ -130,6 +142,12 @@ impl WorkerPool {
                 let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
                     let mut job = job;
                     engine::run_window(&mut job.slot.shard, &mut job.slot.q, job.window_ns);
+                    // Pre-sample this replica's arrival lane while the
+                    // shard is already on a worker: the sampling the
+                    // coordinator would otherwise do serially at the merge.
+                    if let Some(lane) = job.slot.lane.as_mut() {
+                        lane.fill(job.prefetch);
+                    }
                     job
                 }));
                 let out = ran.map_err(|p| {
@@ -158,7 +176,7 @@ impl WorkerPool {
 /// Advance every shard with pending work through `[.., window_ns)`. A
 /// single busy shard runs inline on the coordinator thread (no channel
 /// round-trip — the common case at low replica counts or sparse load).
-fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64) {
+fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64, prefetch: usize) {
     let due: Vec<usize> = slots
         .iter()
         .enumerate()
@@ -175,6 +193,9 @@ fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64)
             let slot = slots[i].as_mut().expect("slot home");
             slot.shard.set_window(window_ns);
             engine::run_window(&mut slot.shard, &mut slot.q, window_ns);
+            if let Some(lane) = slot.lane.as_mut() {
+                lane.fill(prefetch);
+            }
         }
         return;
     }
@@ -182,12 +203,41 @@ fn run_round(pool: &WorkerPool, slots: &mut [Option<ShardSlot>], window_ns: u64)
     for i in due {
         let mut slot = slots[i].take().expect("slot home");
         slot.shard.set_window(window_ns);
-        pool.job_tx.send(Job { idx: i, slot, window_ns }).expect("worker pool alive");
+        pool.job_tx.send(Job { idx: i, slot, window_ns, prefetch }).expect("worker pool alive");
     }
     for _ in 0..n {
         match pool.done_rx.recv().expect("worker pool alive") {
             Ok(job) => slots[job.idx] = Some(job.slot),
             Err(msg) => panic!("shard worker panicked: {msg}"),
+        }
+    }
+}
+
+/// Return every detached lane to the merge (no-op for non-lane sources).
+/// Must run before the coordinator consumes arrivals — the merge skips
+/// detached lanes.
+fn attach_lanes(source: &mut ArrivalSource, slots: &mut [Option<ShardSlot>]) {
+    if let Some(m) = source.lanes_mut() {
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if let Some(feed) = slot.as_mut().expect("slot home").lane.take() {
+                m.attach_lane(i, feed);
+            }
+        }
+    }
+}
+
+/// Ship each replica's arrival lane back to its slot for the next rounds'
+/// worker pre-sampling. Only when the lane/replica counts line up
+/// one-to-one (`simulator.arrival_lanes` can decouple them); otherwise the
+/// lanes stay attached and the coordinator samples inline — the merge
+/// contract makes both modes yield the identical trace.
+fn detach_lanes(source: &mut ArrivalSource, slots: &mut [Option<ShardSlot>]) {
+    if let Some(m) = source.lanes_mut() {
+        if m.lane_count() != slots.len() {
+            return;
+        }
+        for (i, slot) in slots.iter_mut().enumerate() {
+            slot.as_mut().expect("slot home").lane = m.detach_lane(i);
         }
     }
 }
@@ -234,8 +284,14 @@ impl ServingSim {
         let mut slots: Vec<Option<ShardSlot>> = self
             .shards
             .drain(..)
-            .map(|shard| Some(ShardSlot { shard, q: EventQueue::new() }))
+            .map(|shard| Some(ShardSlot { shard, q: EventQueue::new(), lane: None }))
             .collect();
+        // With a lane-split source, each replica's lane rides with its slot
+        // so workers pre-sample arrivals during their event windows; one
+        // epoch of lookahead (+1 for the barrier arrival) keeps the merge
+        // fed between coordination events.
+        let lane_prefetch = self.route_epoch + 1;
+        detach_lanes(&mut self.source, &mut slots);
         let pool = WorkerPool::spawn(workers);
 
         // Conservative-barrier rounds actually executed — the sharded
@@ -253,7 +309,7 @@ impl ServingSim {
                 // like the single loop's `run` bound).
                 _ => (horizon_ns.saturating_add(1), false),
             };
-            run_round(&pool, &mut slots, window_ns);
+            run_round(&pool, &mut slots, window_ns, lane_prefetch);
             rounds += 1;
             if !coord_due {
                 break;
@@ -275,17 +331,25 @@ impl ServingSim {
             // layers exist to catch drift.
             match ev {
                 CoordEv::Arrive(arrived) => {
+                    // The coordinator consumes arrivals in this arm: give
+                    // the merge its lanes back (with whatever the workers
+                    // buffered) before touching the source.
+                    attach_lanes(&mut self.source, &mut slots);
                     // Refresh the ClusterView if due (first arrival, K-th
                     // since the last refresh, or a committed switch) —
                     // the same `refresh_shard_rows` recipe the single
                     // loop's `refresh_view` runs, applied to the slots.
                     if self.view_due() {
-                        let residency = refresh_shard_rows(
+                        refresh_shard_rows(
                             &mut self.view.table,
+                            &mut self.view.residency,
                             self.route_epoch,
+                            self.residency_deltas,
+                            &mut self.census_delta_ops,
+                            &mut self.census_union_keys,
                             slots.iter_mut().map(|s| &mut s.as_mut().expect("slot home").shard),
                         );
-                        self.seal_view(now, residency);
+                        self.seal_view(now);
                     }
                     // The barrier arrival itself: every shard is drained
                     // strictly below `now`, so direct delivery lands in
@@ -341,6 +405,9 @@ impl ServingSim {
                             Ev::Deliver { req: rid, spec, arrival: next.arrival, route },
                         );
                     }
+                    // Epoch routed: ship the lanes back out with the slots
+                    // so the next rounds' workers refill what was consumed.
+                    detach_lanes(&mut self.source, &mut slots);
                 }
                 CoordEv::Tick => {
                     let mut loads = Vec::with_capacity(self.inst_replica.len());
@@ -578,6 +645,38 @@ mod tests {
             ];
             assert_equiv(&c, &format!("faults at route_epoch={k}"));
         }
+    }
+
+    #[test]
+    fn shard_workers_presample_arrivals_and_stay_bit_identical() {
+        // The arrival-sampling half of the coordination-cost work: with a
+        // lane-split source (auto: one lane per replica) the sharded
+        // engine's workers pre-sample arrivals during their event windows,
+        // while the single loop samples the same merged stream inline —
+        // records identical, but the sampling moved off the serial path.
+        let mut c = cfg("E-P-Dx4", 12.0, 256);
+        c.scheduler.route_epoch = 16;
+        let single = ServingSim::streamed(c.clone()).unwrap().run();
+        let sharded = ServingSim::streamed(c.clone()).unwrap().run_sharded();
+        assert_eq!(single.metrics.records, sharded.metrics.records);
+        assert_eq!(single.arrivals_presampled, 0, "single loop has no workers to fill lanes");
+        assert!(
+            sharded.arrivals_presampled > sharded.arrivals_inline,
+            "workers must absorb most arrival sampling: {} presampled vs {} inline",
+            sharded.arrivals_presampled,
+            sharded.arrivals_inline
+        );
+        // The lane split is engine-independent config: forcing the legacy
+        // single stream changes the realization but both engines still
+        // agree (and nothing is presampled anywhere).
+        c.simulator.arrival_lanes = 1;
+        let (legacy_single, legacy_sharded) = pair(&c);
+        assert_eq!(legacy_single.metrics.records, legacy_sharded.metrics.records);
+        assert_eq!(legacy_sharded.arrivals_presampled, 0);
+        assert_ne!(
+            legacy_single.metrics.records, single.metrics.records,
+            "lane split is a documented realization change at >1 lane"
+        );
     }
 
     #[test]

@@ -99,8 +99,8 @@ use crate::config::Config;
 use crate::coordinator::deployment::{Deployment, StageSet};
 use crate::coordinator::metrics::{RequestRecord, RunMetrics};
 use crate::coordinator::policy::{
-    make_balance_policy, make_route_policy, BalancePolicy, ClusterView, ResidencyView,
-    RoutePolicy, StageCands, ViewCtx,
+    make_balance_policy, make_route_policy, BalancePolicy, ClusterView, ResidencyCensus,
+    ResidencyView, RoutePolicy, StageCands, ViewCtx,
 };
 use crate::coordinator::reconfig::{InstLoad, Reconfigurer, SwitchRecord};
 use crate::coordinator::router::Route;
@@ -110,7 +110,7 @@ use crate::npu::CostModel;
 use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::sim::faults::{FaultKind, FaultSchedule};
 use crate::workload::injector::Arrival;
-use crate::workload::stream::{ArrivalSource, WorkloadStream};
+use crate::workload::stream::ArrivalSource;
 use crate::workload::{ArrivedRequest, RequestSpec};
 use anyhow::{bail, Result};
 use std::collections::HashSet;
@@ -154,6 +154,23 @@ pub struct SimOutcome {
     /// would leave a stage of its replica with no provider, or a revival
     /// of an instance that is not down.
     pub faults_skipped: u64,
+    /// Residency-delta applications across all `ClusterView` refreshes:
+    /// the total put/evict transitions the delta-maintained census
+    /// absorbed. On the delta path this is the *entire* refresh cost —
+    /// O(changes), independent of how many keys are resident.
+    pub census_delta_ops: u64,
+    /// Resident keys copied by full census rebuilds (the
+    /// `scheduler.residency_deltas = false` escape hatch, O(state) per
+    /// refresh). **0 whenever the delta path is active** — the
+    /// review-checkable witness that steady-state `route_epoch > 1`
+    /// refreshes never re-union the partitions.
+    pub census_union_keys: u64,
+    /// Arrivals pre-sampled ahead of the merge point (on shard workers in
+    /// the sharded engine) — work moved off the coordinator's serial path.
+    pub arrivals_presampled: u64,
+    /// Arrivals sampled inline at the merge/consume point (the serial
+    /// residue; all of them for non-lane sources).
+    pub arrivals_inline: u64,
 }
 
 /// The serving simulation: per-replica shards plus the coordination state
@@ -175,6 +192,15 @@ pub struct ServingSim {
     pub(crate) view: ClusterView,
     /// `scheduler.route_epoch`, validated ≥ 1 at construction.
     pub(crate) route_epoch: usize,
+    /// Delta-maintained residency census active (`route_epoch > 1` and
+    /// `scheduler.residency_deltas`): shards log put/evict transitions and
+    /// refreshes apply the drained deltas to the persistent census in
+    /// `view.residency` instead of re-unioning every partition's key set.
+    pub(crate) residency_deltas: bool,
+    /// See [`SimOutcome::census_delta_ops`].
+    pub(crate) census_delta_ops: u64,
+    /// See [`SimOutcome::census_union_keys`].
+    pub(crate) census_union_keys: u64,
     /// Bumped at every committed elastic switch; lets a view refresh skip
     /// the topology clone when nothing changed.
     pub(crate) topo_gen: u64,
@@ -220,25 +246,47 @@ impl ServingSim {
         Self::with_source(cfg, ArrivalSource::replay(arrivals))
     }
 
+    /// Effective arrival-lane count: `simulator.arrival_lanes`, with 0
+    /// (the default) resolving to one lane per replica. Computed from the
+    /// config alone — **not** from which engine will run — so the
+    /// single-loop and sharded engines consume the identical merged
+    /// stream and stay bit-identical at every lane count.
+    fn effective_lanes(cfg: &Config) -> usize {
+        match cfg.simulator.arrival_lanes {
+            0 => Deployment::parse(&cfg.deployment).map(|d| d.replicas).unwrap_or(1),
+            n => n,
+        }
+    }
+
     /// Build a simulation that samples the configured workload lazily —
-    /// O(in-flight) memory, bit-identical to materializing the trace first.
+    /// O(in-flight) memory, bit-identical to materializing the trace first
+    /// (single-lane; multi-replica deployments lane-split the sampling —
+    /// same statistics, documented different realization).
     pub fn streamed(cfg: Config) -> Result<Self> {
-        let stream = WorkloadStream::new(
+        let source = ArrivalSource::streamed(
             &cfg.workload,
             &cfg.model.vit,
             cfg.rate,
             Arrival::Poisson,
             cfg.seed,
+            Self::effective_lanes(&cfg),
         );
-        Self::with_source(cfg, ArrivalSource::Stream(stream))
+        Self::with_source(cfg, source)
     }
 
     /// Build a simulation lazily sampling a phase-shifting workload
     /// ([`crate::workload::phases`]) — O(in-flight) memory at any trace
     /// length, bit-identical to materializing
-    /// [`crate::workload::phases::generate_phased`] and replaying it.
+    /// [`crate::workload::phases::generate_phased`] and replaying it
+    /// (single-lane; multi-replica deployments lane-split the sampling).
     pub fn phased(cfg: Config, plan: &crate::workload::phases::PhasePlan) -> Result<Self> {
-        let source = ArrivalSource::phased(&cfg.workload, &cfg.model.vit, plan, cfg.seed);
+        let source = ArrivalSource::phased_lanes(
+            &cfg.workload,
+            &cfg.model.vit,
+            plan,
+            cfg.seed,
+            Self::effective_lanes(&cfg),
+        );
         Self::with_source(cfg, source)
     }
 
@@ -267,10 +315,18 @@ impl ServingSim {
         } else {
             (None, None)
         };
+        // Delta-maintained residency census: only worth logging when the
+        // view actually snapshots key residency (route_epoch > 1; at K=1
+        // the Fresh view live-probes and no census exists to maintain).
+        let residency_deltas = route_epoch > 1 && cfg.scheduler.residency_deltas;
         let shared = Arc::new(SimShared { cfg, cm, prefill_tok_s, encode_tok_s });
         let mut shards = Vec::with_capacity(dep.replicas);
         for r in 0..dep.replicas {
-            shards.push(ReplicaShard::new(shared.clone(), &dep, r)?);
+            let mut shard = ReplicaShard::new(shared.clone(), &dep, r)?;
+            if residency_deltas {
+                shard.enable_residency_log();
+            }
+            shards.push(shard);
         }
         let inst_replica = dep.instances.iter().map(|i| i.replica).collect();
         let npu_replica = (0..dep.num_npus()).map(|n| n / dep.npus_per_replica).collect();
@@ -286,6 +342,9 @@ impl ServingSim {
             entry_balance,
             view,
             route_epoch,
+            residency_deltas,
+            census_delta_ops: 0,
+            census_union_keys: 0,
             topo_gen: 0,
             view_dirty: false,
             barriers: 0,
@@ -377,11 +436,11 @@ impl ServingSim {
     }
 
     /// Finalize a view refresh after the shard-side state (status rows,
-    /// residency) has been absorbed: topology, version stamp, counters.
-    /// Shared by both engines — the shard-side half differs because the
-    /// sharded engine holds its shards in worker slots, not `self.shards`.
-    pub(crate) fn seal_view(&mut self, now: f64, residency: ResidencyView) {
-        self.view.residency = residency;
+    /// residency — maintained in place by [`refresh_shard_rows`]) has been
+    /// absorbed: topology, version stamp, counters. Shared by both engines
+    /// — the shard-side half differs because the sharded engine holds its
+    /// shards in worker slots, not `self.shards`.
+    pub(crate) fn seal_view(&mut self, now: f64) {
         self.view.absorb_topology(&self.dep, &self.cands, self.topo_gen);
         self.view.mark_refreshed(now, self.arrived as u64);
         self.view_dirty = false;
@@ -392,9 +451,16 @@ impl ServingSim {
     /// sharded engine runs the same [`refresh_shard_rows`] against its
     /// worker slots, so the refresh recipe cannot drift between engines.
     fn refresh_view(&mut self, now: f64) {
-        let residency =
-            refresh_shard_rows(&mut self.view.table, self.route_epoch, self.shards.iter_mut());
-        self.seal_view(now, residency);
+        refresh_shard_rows(
+            &mut self.view.table,
+            &mut self.view.residency,
+            self.route_epoch,
+            self.residency_deltas,
+            &mut self.census_delta_ops,
+            &mut self.census_union_keys,
+            self.shards.iter_mut(),
+        );
+        self.seal_view(now);
     }
 
     /// Record the staleness of the arrival about to be routed and enforce
@@ -625,6 +691,16 @@ impl ServingSim {
         for s in &self.shards {
             store_stats.absorb(&s.store_stats());
         }
+        // Coordinator-serial-fraction accounting: with a lane-split source,
+        // arrivals buffered by `LaneFeed::fill` ahead of the merge were
+        // sampled off the serial path (on shard workers in the sharded
+        // engine); everything else was sampled at the consume point.
+        let (arrivals_presampled, arrivals_inline) = match &self.source {
+            ArrivalSource::Lanes(m) => {
+                (m.yielded().saturating_sub(m.sampled_inline()), m.sampled_inline())
+            }
+            _ => (0, self.arrived as u64),
+        };
         SimOutcome {
             metrics: RunMetrics::new(records, makespan, num_npus, self.shared.cfg.slo),
             store_stats,
@@ -638,6 +714,10 @@ impl ServingSim {
             reconfig_switches: self.reconfigurer.map(|r| r.history).unwrap_or_default(),
             faults_applied: self.faults_applied,
             faults_skipped: self.faults_skipped,
+            census_delta_ops: self.census_delta_ops,
+            census_union_keys: self.census_union_keys,
+            arrivals_presampled,
+            arrivals_inline,
         }
     }
 }
@@ -664,29 +744,81 @@ pub(crate) fn resident_in_view(
 /// (which store their shards differently — `self.shards` in the single
 /// loop, worker slots in the sharded executor): flush every shard's
 /// status rows into the view table, run the debug ground-truth check, and
-/// build the residency summary for [`ServingSim::seal_view`].
+/// maintain the residency summary **in place** for
+/// [`ServingSim::seal_view`].
 ///
 /// At `route_epoch = 1` the residency stays [`ResidencyView::Fresh`]: the
 /// view is re-stamped at this very arrival, so a live partition probe IS
 /// the snapshot — no key-set copy on the per-arrival hot path.
+///
+/// At `route_epoch > 1` the snapshot is a persistent
+/// [`ResidencyCensus`]. On the delta path (`use_deltas`) each shard's
+/// put/evict transition log is drained and applied — O(changes since the
+/// last refresh), never touching the resident-key population — and debug
+/// builds cross-check the census against the full partition union. With
+/// `use_deltas` off (the `scheduler.residency_deltas = false` escape
+/// hatch) the census is rebuilt from the full union, the old O(state)
+/// behavior; `union_keys` counts the keys copied so the bench can assert
+/// the steady-state delta path copies **zero**.
 pub(crate) fn refresh_shard_rows<'a>(
     table: &mut crate::coordinator::balancer::StatusTable,
+    residency: &mut ResidencyView,
     route_epoch: usize,
+    use_deltas: bool,
+    delta_ops: &mut u64,
+    union_keys: &mut u64,
     shards: impl Iterator<Item = &'a mut ReplicaShard>,
-) -> ResidencyView {
-    let mut keys = (route_epoch > 1).then(HashSet::new);
-    for s in shards {
-        s.flush_rows(table);
-        if cfg!(debug_assertions) {
-            s.debug_check_table();
+) {
+    if route_epoch <= 1 {
+        *residency = ResidencyView::Fresh;
+        for s in shards {
+            s.flush_rows(table);
+            if cfg!(debug_assertions) {
+                s.debug_check_table();
+            }
         }
-        if let Some(k) = keys.as_mut() {
-            s.collect_resident_keys(k);
-        }
+        return;
     }
-    match keys {
-        Some(k) => ResidencyView::Snapshot(k),
-        None => ResidencyView::Fresh,
+    // Morph into a persistent census at the first snapshot refresh. With
+    // deltas on this is exact: nothing has been drained before this point,
+    // so replaying the logs from run start reconstructs residency in full.
+    if !matches!(residency, ResidencyView::Snapshot(_)) {
+        *residency = ResidencyView::Snapshot(ResidencyCensus::default());
+    }
+    let ResidencyView::Snapshot(census) = residency else { unreachable!("just morphed") };
+    if use_deltas {
+        let mut drained = Vec::new();
+        #[cfg(debug_assertions)]
+        let mut full = HashSet::new();
+        for s in shards {
+            s.flush_rows(table);
+            #[cfg(debug_assertions)]
+            {
+                s.debug_check_table();
+                s.collect_resident_keys(&mut full);
+            }
+            s.drain_residency_deltas(&mut drained);
+        }
+        *delta_ops += drained.len() as u64;
+        for d in drained {
+            census.apply(d);
+        }
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            census.key_set() == full,
+            "delta census diverged from the ground-truth partition union"
+        );
+    } else {
+        let mut keys = HashSet::new();
+        for s in shards {
+            s.flush_rows(table);
+            if cfg!(debug_assertions) {
+                s.debug_check_table();
+            }
+            s.collect_resident_keys(&mut keys);
+        }
+        *union_keys += keys.len() as u64;
+        census.rebuild_from_union(&keys);
     }
 }
 
@@ -971,6 +1103,35 @@ mod tests {
             "a 64-arrival-stale view must route differently under load"
         );
         assert!(stale.barriers < fresh.barriers / 16, "K=64 must slash sync points");
+    }
+
+    #[test]
+    fn delta_census_matches_escape_hatch_and_copies_no_keys() {
+        // The tentpole invariant at unit scale: maintaining the residency
+        // snapshot by drained put/evict deltas yields bit-identical records
+        // to rebuilding it from the full partition union — and the delta
+        // path's union-key counter stays exactly 0 (the O(changes) witness).
+        let mut cfg = quick_cfg("E-P-Dx2", 6.0, 96);
+        cfg.workload.image_reuse = 0.4;
+        cfg.scheduler.route_epoch = 8;
+        let delta = run_serving(&cfg).unwrap();
+        assert!(delta.census_delta_ops > 0, "image traffic must log residency transitions");
+        assert_eq!(delta.census_union_keys, 0, "delta path must never re-union partitions");
+        cfg.scheduler.residency_deltas = false;
+        let full = run_serving(&cfg).unwrap();
+        assert_eq!(delta.metrics.records, full.metrics.records, "maintenance must be invisible");
+        assert_eq!(delta.events_processed, full.events_processed);
+        assert_eq!(full.census_delta_ops, 0, "escape hatch applies no deltas");
+        assert!(full.census_union_keys > 0, "escape hatch re-unions at every refresh");
+    }
+
+    #[test]
+    fn fresh_view_at_k1_runs_no_census_machinery() {
+        let mut cfg = quick_cfg("E-P-Dx2", 4.0, 48);
+        cfg.workload.image_reuse = 0.4;
+        let out = run_serving(&cfg).unwrap();
+        assert_eq!(out.census_delta_ops, 0, "K=1 live-probes; no census to maintain");
+        assert_eq!(out.census_union_keys, 0);
     }
 
     #[test]

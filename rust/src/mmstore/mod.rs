@@ -67,6 +67,24 @@ impl StoreStats {
     }
 }
 
+/// One residency change on a store partition since the last drain — the
+/// unit of the delta-maintained `ClusterView` residency census. With
+/// logging enabled ([`MmStore::enable_delta_log`]) the store appends one
+/// entry per **residency transition**: a `Put` when a key becomes resident
+/// (dedup puts of an already-resident key do not log), an `Evict` when it
+/// stops being resident (LRU eviction or partition loss via
+/// [`MmStore::clear`]). Replaying a partition's drained deltas against a
+/// per-key refcount census therefore reproduces exactly the key set
+/// [`MmStore::collect_keys`] would report, in O(changes) instead of
+/// O(resident keys) — the coordination boundary's refresh cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyDelta {
+    /// `key` became resident in this partition.
+    Put(u64),
+    /// `key` stopped being resident in this partition.
+    Evict(u64),
+}
+
 /// Sentinel for "no node" in the intrusive list.
 const NIL: u32 = u32::MAX;
 
@@ -98,6 +116,10 @@ pub struct MmStore {
     /// (0.0 in normal operation; benches and tests raise it).
     fail_prob: f64,
     fail_rng: crate::util::rng::Rng,
+    /// Residency transitions since the last [`MmStore::drain_deltas`]
+    /// (empty — and never appended to — unless delta logging is enabled).
+    delta_log: Vec<ResidencyDelta>,
+    log_deltas: bool,
 }
 
 impl MmStore {
@@ -114,6 +136,8 @@ impl MmStore {
             stats: StoreStats::default(),
             fail_prob: 0.0,
             fail_rng: crate::util::rng::Rng::with_stream(0, 0xfa11),
+            delta_log: Vec::new(),
+            log_deltas: false,
         }
     }
 
@@ -123,6 +147,28 @@ impl MmStore {
         self.fail_prob = prob;
         self.fail_rng = crate::util::rng::Rng::with_stream(seed, 0xfa11);
         self
+    }
+
+    /// Start logging residency transitions (see [`ResidencyDelta`]). The
+    /// serving system enables this on every partition when the
+    /// `ClusterView` residency snapshot is delta-maintained
+    /// (`route_epoch > 1` with `scheduler.residency_deltas` on); with
+    /// logging off, `put`/`get`/`clear` pay zero extra cost.
+    pub fn enable_delta_log(&mut self) {
+        self.log_deltas = true;
+    }
+
+    /// Is residency-transition logging on? (The shard re-applies it when a
+    /// test/bench swaps the partition out for a failure-injecting one.)
+    pub fn delta_log_enabled(&self) -> bool {
+        self.log_deltas
+    }
+
+    /// Move the residency transitions accumulated since the last drain into
+    /// `out` (appending), leaving the log empty. Called once per
+    /// `ClusterView` refresh by the coordination boundary — O(changes).
+    pub fn drain_deltas(&mut self, out: &mut Vec<ResidencyDelta>) {
+        out.append(&mut self.delta_log);
     }
 
     // -- intrusive-list plumbing ---------------------------------------
@@ -176,6 +222,9 @@ impl MmStore {
         self.free.push(victim);
         self.used_bytes -= node.entry.bytes;
         self.stats.evictions += 1;
+        if self.log_deltas {
+            self.delta_log.push(ResidencyDelta::Evict(node.key));
+        }
     }
 
     // -- public API -----------------------------------------------------
@@ -216,6 +265,9 @@ impl MmStore {
         self.link_front(idx);
         self.index.insert(key, idx);
         self.used_bytes += bytes;
+        if self.log_deltas {
+            self.delta_log.push(ResidencyDelta::Put(key));
+        }
         true
     }
 
@@ -245,6 +297,14 @@ impl MmStore {
     /// Returns how many entries were lost.
     pub fn clear(&mut self) -> usize {
         let lost = self.index.len();
+        if self.log_deltas && lost > 0 {
+            // Sorted so the delta log itself is deterministic (HashMap
+            // iteration order is not); census application is commutative
+            // either way.
+            let mut keys: Vec<u64> = self.index.keys().copied().collect();
+            keys.sort_unstable();
+            self.delta_log.extend(keys.into_iter().map(ResidencyDelta::Evict));
+        }
         self.index.clear();
         self.nodes.clear();
         self.free.clear();
@@ -516,6 +576,113 @@ mod tests {
         s.put(5, 1e5, 10);
         let misses = (0..1000).filter(|_| s.get(5).is_none()).count();
         assert!((200..400).contains(&misses), "misses={misses}");
+    }
+
+    #[test]
+    fn delta_log_disabled_by_default_and_costs_nothing() {
+        let mut s = MmStore::new(3e6);
+        s.put(1, 1e6, 1);
+        s.put(2, 1e6, 2);
+        s.clear();
+        let mut out = Vec::new();
+        s.drain_deltas(&mut out);
+        assert!(out.is_empty(), "no logging unless enabled: {out:?}");
+        assert!(!s.delta_log_enabled());
+    }
+
+    #[test]
+    fn delta_log_records_transitions_not_dedups() {
+        let mut s = MmStore::new(2e6);
+        s.enable_delta_log();
+        s.put(1, 1e6, 1); // Put(1)
+        s.put(1, 1e6, 1); // dedup — no log entry
+        s.put(2, 1e6, 2); // Put(2)
+        s.put(3, 1e6, 3); // evicts LRU (1) then Put(3)
+        let mut out = Vec::new();
+        s.drain_deltas(&mut out);
+        assert_eq!(
+            out,
+            vec![
+                ResidencyDelta::Put(1),
+                ResidencyDelta::Put(2),
+                ResidencyDelta::Evict(1),
+                ResidencyDelta::Put(3),
+            ]
+        );
+        // Drain empties the log; subsequent ops log afresh.
+        s.drain_deltas(&mut out);
+        assert_eq!(out.len(), 4, "second drain of an untouched log appends nothing");
+        s.clear();
+        let mut out2 = Vec::new();
+        s.drain_deltas(&mut out2);
+        assert_eq!(
+            out2,
+            vec![ResidencyDelta::Evict(2), ResidencyDelta::Evict(3)],
+            "partition loss logs every resident key, sorted"
+        );
+    }
+
+    /// Randomized single-partition pin of the delta contract: replaying
+    /// drained deltas against a key set reproduces `collect_keys` exactly,
+    /// across arbitrary put/get/clear sequences with drains at random
+    /// points (the multi-partition, fault-injected version lives in
+    /// `tests/residency_census.rs`).
+    #[test]
+    fn delta_replay_matches_full_census() {
+        use crate::testkit::{check, ensure};
+
+        // (op selector, key, size_units): op 0..6 put, 6..8 get, 8 clear,
+        // 9 drain-and-check.
+        check(
+            "mmstore-delta-census",
+            0xde17a,
+            150,
+            |r| {
+                (0..r.below(150) + 30)
+                    .map(|_| (r.below(10), r.below(16), r.below(4) + 1))
+                    .collect::<Vec<(u64, u64, u64)>>()
+            },
+            |ops| {
+                let unit = 1e5;
+                let mut s = MmStore::new(6.0 * unit);
+                s.enable_delta_log();
+                let mut census: std::collections::HashSet<u64> = Default::default();
+                let mut log = Vec::new();
+                for &(op, key, units) in ops {
+                    match op {
+                        0..=5 => {
+                            s.put(key, units as f64 * unit, 1);
+                        }
+                        6..=7 => {
+                            s.get(key);
+                        }
+                        8 => {
+                            s.clear();
+                        }
+                        _ => {
+                            s.drain_deltas(&mut log);
+                            for d in log.drain(..) {
+                                match d {
+                                    ResidencyDelta::Put(k) => {
+                                        ensure(census.insert(k), format!("double Put({k})"))?
+                                    }
+                                    ResidencyDelta::Evict(k) => {
+                                        ensure(census.remove(&k), format!("phantom Evict({k})"))?
+                                    }
+                                }
+                            }
+                            let mut full = std::collections::HashSet::new();
+                            s.collect_keys(&mut full);
+                            ensure(
+                                census == full,
+                                format!("census {census:?} != full rebuild {full:?}"),
+                            )?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Differential property test: the O(1) intrusive-LRU store and the

@@ -24,6 +24,18 @@ impl Rng {
     /// subsystems (injector, failure injection, …) can draw from
     /// non-overlapping sequences of the same master seed.
     pub fn with_stream(seed: u64, stream: u64) -> Self {
+        Self::with_lane(seed, stream, 0)
+    }
+
+    /// Create one lane of a stream family: lane 0 is **bit-identical** to
+    /// [`Rng::with_stream`] (so single-lane consumers reproduce the
+    /// pre-lane sequences exactly), and every other lane perturbs the PCG
+    /// stream selector with a distinct odd increment. The workload
+    /// samplers use one lane per replica so the sharded engine can draw
+    /// arrivals on the owning shard's worker and merge deterministically
+    /// (see `workload::stream::MergedArrivals`).
+    pub fn with_lane(seed: u64, stream: u64, lane: u64) -> Self {
+        let stream = stream ^ lane.wrapping_mul(0x9e37_79b9_7f4a_7c15);
         let inc = (stream << 1) | 1;
         let mut rng = Self { state: 0, inc };
         rng.next_u32();
@@ -235,6 +247,29 @@ mod tests {
     fn streams_are_independent() {
         let mut a = Rng::with_stream(7, 1);
         let mut b = Rng::with_stream(7, 2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn lane_zero_is_bit_identical_to_with_stream() {
+        let mut a = Rng::with_stream(42, 0x10ad);
+        let mut b = Rng::with_lane(42, 0x10ad, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn lanes_are_pairwise_independent() {
+        for l in 1..8u64 {
+            let mut a = Rng::with_lane(7, 0x1a11, 0);
+            let mut b = Rng::with_lane(7, 0x1a11, l);
+            let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+            assert!(same < 4, "lane {l} correlated with lane 0");
+        }
+        let mut a = Rng::with_lane(7, 0x1a11, 3);
+        let mut b = Rng::with_lane(7, 0x1a11, 5);
         let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
         assert!(same < 4);
     }

@@ -15,6 +15,18 @@
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::rng::{Rng, ZipfTable};
 use crate::workload::{sample_spec, ArrivedRequest};
+use std::sync::Arc;
+
+/// RNG stream id for phased arrival-**gap** draws. Kept at the historical
+/// `PhasedStream` stream id; the shape draws moved to their own stream
+/// ([`PHASE_SPEC_STREAM`]) so the construction-time prescan can replay
+/// gaps alone and per-replica lanes can split both independently. (This
+/// split changes every phased realization relative to the pre-lane
+/// single-interleaved-stream sampler — a documented semantic delta; see
+/// docs/PERFORMANCE.md.)
+pub(crate) const PHASE_GAP_STREAM: u64 = 0x9a5e;
+/// RNG stream id for phased request-shape draws.
+pub(crate) const PHASE_SPEC_STREAM: u64 = 0x95ec;
 
 /// One traffic phase: a stretch of Poisson arrivals with its own rate and
 /// request-shape overrides on top of the base dataset statistics.
@@ -108,8 +120,15 @@ pub struct PhasedStream {
     vit: VitDesc,
     seed: u64,
     plan: PhasePlan,
-    rng: Rng,
-    zipf: ZipfTable,
+    /// Arrival-gap draws ([`PHASE_GAP_STREAM`], one lane per replica under
+    /// lane splitting) — independent of `spec_rng` so gaps replay alone.
+    gap_rng: Rng,
+    /// Request-shape draws ([`PHASE_SPEC_STREAM`]).
+    spec_rng: Rng,
+    /// Zipf image pool, shared across every lane of one workload so
+    /// cross-lane requests draw from one global key universe (MM-Store
+    /// reuse happens across replicas' arrivals exactly as before).
+    zipf: Arc<ZipfTable>,
     /// The current phase's effective workload spec (overrides applied).
     cur: WorkloadSpec,
     cycle: usize,
@@ -117,19 +136,53 @@ pub struct PhasedStream {
     phase_start: f64,
     t: f64,
     id: u64,
+    /// Lane-split divisor: each phase's rate is divided by `lanes` (lane
+    /// superposition restores the plan's offered load).
+    lanes: usize,
+    /// Exact arrival count this stream yields — cached by the
+    /// construction-time gap-only prescan, so `len_total` is O(1).
+    total: usize,
+    /// Arrival time of the final request (0.0 if none) — same prescan.
+    last: f64,
+}
+
+/// Zipf image pool for a phased workload, sized from the plan's expected
+/// request count exactly like [`crate::workload::image_pool`] sizes the
+/// stationary pool from `num_requests`. One pool is shared (via `Arc`)
+/// across every lane of one workload.
+pub(crate) fn phased_image_pool(base: &WorkloadSpec, plan: &PhasePlan) -> ZipfTable {
+    let pool = ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
+    ZipfTable::new(pool, 1.2)
 }
 
 impl PhasedStream {
     pub fn new(base: &WorkloadSpec, vit: &VitDesc, plan: &PhasePlan, seed: u64) -> Self {
-        let rng = Rng::with_stream(seed, 0x9a5e);
-        let pool = ((plan.expected_requests() as f64) * (1.0 - base.image_reuse)).max(1.0) as u64;
-        let zipf = ZipfTable::new(pool, 1.2);
+        Self::lane_of(base, vit, plan, seed, 0, 1, Arc::new(phased_image_pool(base, plan)))
+    }
+
+    /// Lane `lane` of `lanes` parallel phased samplers over one shared
+    /// image pool: same phase schedule, each phase's rate divided by
+    /// `lanes`, gap/shape RNGs on per-lane streams. Lane 0 of 1 is the
+    /// whole workload. The merged superposition
+    /// ([`crate::workload::stream::MergedArrivals`]) is what the serving
+    /// system consumes.
+    pub(crate) fn lane_of(
+        base: &WorkloadSpec,
+        vit: &VitDesc,
+        plan: &PhasePlan,
+        seed: u64,
+        lane: u64,
+        lanes: usize,
+        zipf: Arc<ZipfTable>,
+    ) -> Self {
+        assert!(lanes >= 1, "at least one lane");
         let mut s = Self {
             base: base.clone(),
             vit: vit.clone(),
             seed,
             plan: plan.clone(),
-            rng,
+            gap_rng: Rng::with_lane(seed, PHASE_GAP_STREAM, lane),
+            spec_rng: Rng::with_lane(seed, PHASE_SPEC_STREAM, lane),
             zipf,
             cur: base.clone(),
             cycle: 0,
@@ -137,9 +190,29 @@ impl PhasedStream {
             phase_start: 0.0,
             t: 0.0,
             id: 0,
+            lanes,
+            total: 0,
+            last: 0.0,
         };
         s.enter_phase();
+        // Gap-only prescan: walk a clone through the phase schedule drawing
+        // only inter-arrival gaps (no request shapes, no allocation) to pin
+        // the exact yield count and final arrival time up front. O(arrivals)
+        // cheap draws once, making `len_total`/`last_arrival` O(1) — the
+        // pre-lane implementation re-walked a full clone (shape sampling
+        // included) on every call.
+        let mut probe = s.clone();
+        while let Some(t) = probe.next_arrival_time() {
+            s.total += 1;
+            s.last = t;
+        }
         s
+    }
+
+    /// Requests this stream will yield in total — exact, O(1) (cached by
+    /// the construction-time prescan).
+    pub fn len_total(&self) -> usize {
+        self.total
     }
 
     /// Apply the current phase's overrides and reset the arrival clock to
@@ -176,20 +249,17 @@ impl PhasedStream {
         true
     }
 
-    /// Arrival time of the final request, computed by walking a clone of
-    /// the stream to exhaustion (the phase RNG interleaves shape and gap
-    /// draws, so unlike [`crate::workload::stream::WorkloadStream`] the gap
-    /// stream cannot be replayed alone). O(total requests) time, O(1)
-    /// memory; 0.0 for an empty plan.
+    /// Arrival time of the final request — exact, O(1) (cached by the
+    /// construction-time gap-only prescan; gaps live on their own RNG
+    /// stream so no shape draws are needed to replay them). 0.0 for an
+    /// empty plan.
     pub fn last_arrival(&self) -> f64 {
-        self.clone().last().map(|a| a.arrival).unwrap_or(0.0)
+        self.last
     }
-}
 
-impl Iterator for PhasedStream {
-    type Item = ArrivedRequest;
-
-    fn next(&mut self) -> Option<ArrivedRequest> {
+    /// Advance the phase walk to the next arrival instant, drawing only
+    /// from the gap stream. `None` once the plan is exhausted.
+    fn next_arrival_time(&mut self) -> Option<f64> {
         if self.plan.phases.is_empty() || self.cycle >= self.plan.cycles {
             return None;
         }
@@ -202,20 +272,29 @@ impl Iterator for PhasedStream {
                 }
                 continue;
             }
-            let rate = phase.rate;
+            let rate = phase.rate / self.lanes as f64;
             let phase_end = self.phase_start + phase.duration_s;
-            self.t += self.rng.exp(rate);
+            self.t += self.gap_rng.exp(rate);
             if self.t >= phase_end {
                 if !self.advance_phase() {
                     return None;
                 }
                 continue;
             }
-            let spec =
-                sample_spec(self.id, &mut self.rng, &self.cur, &self.vit, &self.zipf, self.seed);
-            self.id += 1;
-            return Some(ArrivedRequest { spec, arrival: self.t });
+            return Some(self.t);
         }
+    }
+}
+
+impl Iterator for PhasedStream {
+    type Item = ArrivedRequest;
+
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        let arrival = self.next_arrival_time()?;
+        let spec =
+            sample_spec(self.id, &mut self.spec_rng, &self.cur, &self.vit, &self.zipf, self.seed);
+        self.id += 1;
+        Some(ArrivedRequest { spec, arrival })
     }
 }
 
@@ -288,6 +367,50 @@ mod tests {
             cycles: 2,
         };
         assert_eq!(PhasedStream::new(&base, &vit(), &all_quiet, 1).count(), 0);
+    }
+
+    #[test]
+    fn len_total_and_last_arrival_are_cached_and_exact() {
+        let base = WorkloadSpec::sharegpt4o();
+        let s = PhasedStream::new(&base, &vit(), &plan(), 7);
+        let materialized: Vec<ArrivedRequest> = s.clone().collect();
+        assert_eq!(s.len_total(), materialized.len());
+        assert_eq!(s.last_arrival(), materialized.last().unwrap().arrival);
+        // The accessors are pure reads of the construction-time prescan:
+        // the stream itself still yields from the beginning.
+        assert_eq!(s.collect::<Vec<_>>(), materialized);
+    }
+
+    #[test]
+    fn lane_superposition_covers_the_phase_schedule() {
+        // Two half-rate lanes over the shared pool: each lane individually
+        // respects phase boundaries (quiet phases stay quiet, overrides
+        // apply), and the union's arrival count matches the plan's offered
+        // load — the merged superposition is exercised end-to-end in
+        // `crate::workload::stream` tests.
+        let base = WorkloadSpec::sharegpt4o();
+        let p = plan();
+        let zipf = Arc::new(phased_image_pool(&base, &p));
+        let lanes: Vec<Vec<ArrivedRequest>> = (0..2)
+            .map(|l| {
+                PhasedStream::lane_of(&base, &vit(), &p, 7, l, 2, Arc::clone(&zipf))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        let total: usize = lanes.iter().map(Vec::len).sum();
+        let expect = p.expected_requests();
+        assert!(
+            (total as f64 - expect as f64).abs() < expect as f64 * 0.25,
+            "lane union sampled {total} vs expected {expect}"
+        );
+        for lane in &lanes {
+            for a in lane {
+                let in_text = (a.arrival % p.cycle_s()) < 30.0;
+                assert_eq!(a.spec.image.is_none(), in_text, "phase override per lane");
+            }
+        }
+        // Distinct lanes draw from distinct RNG streams.
+        assert_ne!(lanes[0].first().map(|a| a.arrival), lanes[1].first().map(|a| a.arrival));
     }
 
     #[test]

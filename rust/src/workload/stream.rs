@@ -1,4 +1,6 @@
-//! Lazy workload streaming — O(in-flight) memory for million-request runs.
+//! Lazy workload streaming — O(in-flight) memory for million-request runs,
+//! with optional per-replica **lane splitting** so arrival sampling can run
+//! on the sharded engine's workers instead of the coordinator.
 //!
 //! [`super::generate`] + [`super::injector::inject`] materialize the whole
 //! trace (`Vec<RequestSpec>` then `Vec<ArrivedRequest>`) before the
@@ -10,58 +12,127 @@
 //! as the materialized path, so streamed and materialized runs are
 //! bit-identical (asserted by `tests/determinism_golden.rs`).
 //!
+//! # Lanes
+//!
+//! A single sequential RNG stream forces arrival sampling onto whichever
+//! thread consumes it — in the sharded engine, the coordinator. Lane
+//! splitting decomposes one workload into `L` independent sub-streams
+//! ("lanes", one per replica) over per-lane RNG streams
+//! ([`crate::util::rng::Rng::with_lane`]) and a **shared** Zipf image pool,
+//! then superposes them with a deterministic merge ([`MergedArrivals`]):
+//! smallest arrival time first, lane index breaking ties, global request
+//! ids assigned at the merge point. Because the merge is defined purely by
+//! the per-lane sequences, it yields the same trace whether lane buffers
+//! were pre-filled by shard workers ([`LaneFeed::fill`]) or sampled inline
+//! by the consumer — which is exactly why the single-loop and sharded
+//! engines stay bit-identical while the sharded one samples arrivals in
+//! parallel.
+//!
+//! Lane semantics per process:
+//! * **Uniform**: lane `l` of `L` ticks at `rate/L` from clock origin
+//!   `((l+1) - L)/rate`, so the superposition reproduces the global
+//!   `i/rate` grid exactly (lane 0 of 1 is the legacy stream, bit-exact).
+//! * **Poisson**: lanes are independent `Poisson(rate/L)` processes; their
+//!   superposition is `Poisson(rate)` (memoryless, so no origin offset).
+//!   The realization differs from the legacy single-stream draw for `L>1`
+//!   — a documented semantic delta (docs/PERFORMANCE.md), same statistics.
+//!
 //! [`ArrivalSource`] is the serving loop's uniform view: a replayed vector
-//! (traces, tests), a lazy stationary stream, or a lazy phase-shifting
-//! stream ([`crate::workload::phases::PhasedStream`]) — each exposing the
-//! last arrival time up-front so the simulation horizon stays exactly what
-//! it was before streaming existed.
+//! (traces, tests), a lazy stationary stream, a lazy phase-shifting stream
+//! ([`crate::workload::phases::PhasedStream`]), or a lane-split merge —
+//! each exposing the last arrival time up-front so the simulation horizon
+//! stays exactly what it was before streaming existed.
 
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::rng::{Rng, ZipfTable};
 use crate::workload::injector::{Arrival, ARRIVAL_STREAM};
-use crate::workload::phases::{PhasePlan, PhasedStream};
+use crate::workload::phases::{phased_image_pool, PhasePlan, PhasedStream};
 use crate::workload::{image_pool, sample_spec, ArrivedRequest, SPEC_STREAM};
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Lazily samples the exact request sequence of
-/// `inject(&generate(spec, vit, seed), rate, process, seed)`.
+/// `inject(&generate(spec, vit, seed), rate, process, seed)` — or, for
+/// `lane > 0` / `lanes > 1`, this lane's share of the lane-split workload.
 ///
 /// Shape draws and arrival-gap draws come from independent RNG streams
-/// ([`SPEC_STREAM`] / [`ARRIVAL_STREAM`]), so interleaving them per request
-/// — rather than running each stream to exhaustion like the materialized
-/// path does — produces identical values.
+/// ([`SPEC_STREAM`] / [`ARRIVAL_STREAM`], per-lane via
+/// [`Rng::with_lane`]), so interleaving them per request — rather than
+/// running each stream to exhaustion like the materialized path does —
+/// produces identical values. Lane 0 of 1 is bit-identical to the
+/// pre-lane stream.
 pub struct WorkloadStream {
     spec: WorkloadSpec,
     vit: VitDesc,
     seed: u64,
+    /// Per-lane offered rate: the workload's full rate divided by the lane
+    /// count (superposition restores the full rate).
     rate: f64,
     process: Arrival,
-    zipf: ZipfTable,
+    /// Shared across all lanes of one workload: every lane draws image ids
+    /// from one global pool, so cross-replica MM-Store reuse statistics
+    /// match the unsplit workload.
+    zipf: Arc<ZipfTable>,
     spec_rng: Rng,
     arrival_rng: Rng,
+    /// Requests this lane yields: its share of `spec.num_requests`
+    /// (round-robin by global index, so lane `l` gets
+    /// `n/L + (l < n % L)`).
+    total: usize,
     next_id: u64,
     t: f64,
+    /// Clock origin. 0 for Poisson (memoryless superposition); for Uniform,
+    /// `((lane+1) - lanes) / full_rate` so lane ticks land on the global
+    /// `i/rate` grid. 0 for lane 0 of 1 either way.
+    t0: f64,
+    lane: u64,
 }
 
 impl WorkloadStream {
     pub fn new(spec: &WorkloadSpec, vit: &VitDesc, rate: f64, process: Arrival, seed: u64) -> Self {
+        Self::lane_of(spec, vit, rate, process, seed, 0, 1, Arc::new(image_pool(spec)))
+    }
+
+    /// Lane `lane` of `lanes` parallel samplers over one shared image pool.
+    /// `rate` is the **full** workload rate; each lane offers `rate/lanes`.
+    pub(crate) fn lane_of(
+        spec: &WorkloadSpec,
+        vit: &VitDesc,
+        rate: f64,
+        process: Arrival,
+        seed: u64,
+        lane: u64,
+        lanes: usize,
+        zipf: Arc<ZipfTable>,
+    ) -> Self {
         assert!(rate > 0.0, "rate must be positive");
+        assert!(lanes >= 1 && (lane as usize) < lanes, "lane {lane} of {lanes}");
+        let n = spec.num_requests;
+        let total = n / lanes + usize::from((lane as usize) < n % lanes);
+        let t0 = match process {
+            Arrival::Uniform => ((lane + 1) as f64 - lanes as f64) / rate,
+            Arrival::Poisson => 0.0,
+        };
         Self {
             spec: spec.clone(),
             vit: vit.clone(),
             seed,
-            rate,
+            rate: rate / lanes as f64,
             process,
-            zipf: image_pool(spec),
-            spec_rng: Rng::with_stream(seed, SPEC_STREAM),
-            arrival_rng: Rng::with_stream(seed, ARRIVAL_STREAM),
+            zipf,
+            spec_rng: Rng::with_lane(seed, SPEC_STREAM, lane),
+            arrival_rng: Rng::with_lane(seed, ARRIVAL_STREAM, lane),
+            total,
             next_id: 0,
-            t: 0.0,
+            t: t0,
+            t0,
+            lane,
         }
     }
 
     /// Requests this stream will yield in total.
     pub fn len_total(&self) -> usize {
-        self.spec.num_requests
+        self.total
     }
 
     /// The arrival time of the **last** request, computed by replaying only
@@ -69,9 +140,9 @@ impl WorkloadStream {
     /// cheap draws, no allocation — lets the caller fix the simulation
     /// horizon before consuming a single request.
     pub fn last_arrival(&self) -> f64 {
-        let mut rng = Rng::with_stream(self.seed, ARRIVAL_STREAM);
-        let mut t = 0.0;
-        for _ in 0..self.spec.num_requests {
+        let mut rng = Rng::with_lane(self.seed, ARRIVAL_STREAM, self.lane);
+        let mut t = self.t0;
+        for _ in 0..self.total {
             t += self.process.sample_dt(&mut rng, self.rate);
         }
         t
@@ -82,9 +153,13 @@ impl Iterator for WorkloadStream {
     type Item = ArrivedRequest;
 
     fn next(&mut self) -> Option<ArrivedRequest> {
-        if self.next_id >= self.spec.num_requests as u64 {
+        if self.next_id >= self.total as u64 {
             return None;
         }
+        // The id passed to the sampler is lane-local; no random draw
+        // depends on it (image jitter keys off the image id), it only
+        // lands in `RequestSpec::id` — which the lane merge overwrites
+        // with the global arrival-order id.
         let id = self.next_id;
         self.next_id += 1;
         let spec =
@@ -94,8 +169,233 @@ impl Iterator for WorkloadStream {
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
-        let left = self.spec.num_requests - self.next_id as usize;
+        let left = self.total - self.next_id as usize;
         (left, Some(left))
+    }
+}
+
+/// One lane of a [`MergedArrivals`] superposition: the lane's sampler plus
+/// a buffer of already-sampled arrivals. The sharded engine detaches a
+/// lane to its owning shard's worker, calls [`LaneFeed::fill`] there (the
+/// parallel part), and re-attaches it before the coordinator merges — but
+/// the merged trace is identical if nobody ever pre-fills, because the
+/// buffer holds exactly the lane's next sequential draws either way.
+pub struct LaneFeed {
+    stream: LaneStream,
+    buf: VecDeque<ArrivedRequest>,
+}
+
+enum LaneStream {
+    Stream(WorkloadStream),
+    Phased(PhasedStream),
+}
+
+impl LaneStream {
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        match self {
+            LaneStream::Stream(s) => s.next(),
+            LaneStream::Phased(s) => s.next(),
+        }
+    }
+
+    fn len_total(&self) -> usize {
+        match self {
+            LaneStream::Stream(s) => s.len_total(),
+            LaneStream::Phased(s) => s.len_total(),
+        }
+    }
+
+    fn last_arrival(&self) -> f64 {
+        match self {
+            LaneStream::Stream(s) => s.last_arrival(),
+            LaneStream::Phased(s) => s.last_arrival(),
+        }
+    }
+}
+
+impl LaneFeed {
+    /// Sample ahead until `lookahead` arrivals are buffered (or the lane is
+    /// exhausted). Safe to run on any thread that owns the detached lane;
+    /// buffered arrivals are consumed by the merge in the same order they
+    /// would have been sampled inline.
+    pub fn fill(&mut self, lookahead: usize) {
+        while self.buf.len() < lookahead {
+            match self.stream.next() {
+                Some(a) => self.buf.push_back(a),
+                None => break,
+            }
+        }
+    }
+
+    /// Arrivals currently buffered ahead of the merge.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Deterministic superposition of per-replica workload lanes — the
+/// lane-split counterpart of [`WorkloadStream`] / [`PhasedStream`].
+///
+/// The merge is defined purely over the per-lane sequences: repeatedly
+/// take the lane whose buffered head has the smallest arrival time
+/// (smallest lane index on ties) and assign the next global request id.
+/// Whether a lane's buffer was pre-filled by a worker or sampled inline
+/// here cannot change the output — the buffer holds the lane's next
+/// sequential draws either way.
+pub struct MergedArrivals {
+    /// `None` marks a lane currently detached to a shard worker.
+    lanes: Vec<Option<LaneFeed>>,
+    next_id: u64,
+    total: usize,
+    last: f64,
+    /// Arrivals sampled inline at merge time (lane buffer was empty); the
+    /// complement of worker-pre-sampled arrivals. Drives the
+    /// coordinator-serial-fraction accounting in the bench.
+    inline_sampled: u64,
+}
+
+impl MergedArrivals {
+    /// Lane-split stationary workload: `lanes` parallel [`WorkloadStream`]
+    /// lanes over one shared image pool.
+    pub fn streamed(
+        spec: &WorkloadSpec,
+        vit: &VitDesc,
+        rate: f64,
+        process: Arrival,
+        seed: u64,
+        lanes: usize,
+    ) -> Self {
+        assert!(lanes >= 1, "at least one lane");
+        let zipf = Arc::new(image_pool(spec));
+        let feeds: Vec<LaneStream> = (0..lanes)
+            .map(|l| {
+                LaneStream::Stream(WorkloadStream::lane_of(
+                    spec,
+                    vit,
+                    rate,
+                    process,
+                    seed,
+                    l as u64,
+                    lanes,
+                    Arc::clone(&zipf),
+                ))
+            })
+            .collect();
+        Self::from_lanes(feeds)
+    }
+
+    /// Lane-split phased workload: `lanes` parallel [`PhasedStream`] lanes
+    /// over one shared image pool.
+    pub fn phased(
+        base: &WorkloadSpec,
+        vit: &VitDesc,
+        plan: &PhasePlan,
+        seed: u64,
+        lanes: usize,
+    ) -> Self {
+        assert!(lanes >= 1, "at least one lane");
+        let zipf = Arc::new(phased_image_pool(base, plan));
+        let feeds: Vec<LaneStream> = (0..lanes)
+            .map(|l| {
+                LaneStream::Phased(PhasedStream::lane_of(
+                    base,
+                    vit,
+                    plan,
+                    seed,
+                    l as u64,
+                    lanes,
+                    Arc::clone(&zipf),
+                ))
+            })
+            .collect();
+        Self::from_lanes(feeds)
+    }
+
+    fn from_lanes(feeds: Vec<LaneStream>) -> Self {
+        let total = feeds.iter().map(LaneStream::len_total).sum();
+        let last = feeds
+            .iter()
+            .filter(|s| s.len_total() > 0)
+            .map(LaneStream::last_arrival)
+            .fold(0.0, f64::max);
+        Self {
+            lanes: feeds
+                .into_iter()
+                .map(|stream| Some(LaneFeed { stream, buf: VecDeque::new() }))
+                .collect(),
+            next_id: 0,
+            total,
+            last,
+            inline_sampled: 0,
+        }
+    }
+
+    /// Number of lanes (attached or detached).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Hand lane `i` to a worker for parallel pre-sampling. The merge skips
+    /// detached lanes, so the caller must re-attach before consuming
+    /// arrivals that could belong to this lane.
+    pub fn detach_lane(&mut self, i: usize) -> Option<LaneFeed> {
+        self.lanes[i].take()
+    }
+
+    /// Return a detached lane (with whatever its worker buffered).
+    pub fn attach_lane(&mut self, i: usize, feed: LaneFeed) {
+        debug_assert!(self.lanes[i].is_none(), "lane {i} attached twice");
+        self.lanes[i] = Some(feed);
+    }
+
+    /// Global ids handed out so far (arrivals yielded).
+    pub fn yielded(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Arrivals the merge had to sample inline because the lane buffer was
+    /// empty — the serial residue; `yielded() - sampled_inline()` were
+    /// pre-sampled ahead (on workers, in the sharded engine).
+    pub fn sampled_inline(&self) -> u64 {
+        self.inline_sampled
+    }
+
+    /// Total requests the superposition yields.
+    pub fn len_total(&self) -> usize {
+        self.total
+    }
+
+    /// Arrival time of the final request across all lanes (0.0 if empty).
+    pub fn last_arrival(&self) -> f64 {
+        self.last
+    }
+}
+
+impl Iterator for MergedArrivals {
+    type Item = ArrivedRequest;
+
+    fn next(&mut self) -> Option<ArrivedRequest> {
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..self.lanes.len() {
+            let Some(feed) = self.lanes[i].as_mut() else { continue };
+            if feed.buf.is_empty() {
+                if let Some(a) = feed.stream.next() {
+                    feed.buf.push_back(a);
+                    self.inline_sampled += 1;
+                }
+            }
+            if let Some(head) = feed.buf.front() {
+                // Strict `<` in index order = smallest lane wins ties.
+                if best.map_or(true, |(t, _)| head.arrival < t) {
+                    best = Some((head.arrival, i));
+                }
+            }
+        }
+        let (_, i) = best?;
+        let mut a = self.lanes[i].as_mut().unwrap().buf.pop_front().unwrap();
+        a.spec.id = self.next_id;
+        self.next_id += 1;
+        Some(a)
     }
 }
 
@@ -113,14 +413,54 @@ pub enum ArrivalSource {
     /// length (bit-identical to replaying
     /// [`crate::workload::phases::generate_phased`]).
     Phased(PhasedStream),
+    /// Lane-split superposition (stationary or phased) — per-replica
+    /// sampling with a deterministic merge. Same statistics as the
+    /// corresponding unsplit source; realization differs for >1 lane
+    /// (documented semantic delta).
+    Lanes(MergedArrivals),
 }
 
 impl ArrivalSource {
+    /// Lazily sample a stationary workload, lane-split over `lanes`
+    /// per-replica streams. `lanes <= 1` yields the legacy single-stream
+    /// source, bit-identical to the pre-lane path.
+    pub fn streamed(
+        spec: &WorkloadSpec,
+        vit: &VitDesc,
+        rate: f64,
+        process: Arrival,
+        seed: u64,
+        lanes: usize,
+    ) -> Self {
+        if lanes <= 1 {
+            ArrivalSource::Stream(WorkloadStream::new(spec, vit, rate, process, seed))
+        } else {
+            ArrivalSource::Lanes(MergedArrivals::streamed(spec, vit, rate, process, seed, lanes))
+        }
+    }
+
     /// Lazily sample a phase-shifting workload
     /// ([`crate::workload::phases`]).
     pub fn phased(base: &WorkloadSpec, vit: &VitDesc, plan: &PhasePlan, seed: u64) -> Self {
         ArrivalSource::Phased(PhasedStream::new(base, vit, plan, seed))
     }
+
+    /// Lane-split phased workload; `lanes <= 1` yields the legacy phased
+    /// source.
+    pub fn phased_lanes(
+        base: &WorkloadSpec,
+        vit: &VitDesc,
+        plan: &PhasePlan,
+        seed: u64,
+        lanes: usize,
+    ) -> Self {
+        if lanes <= 1 {
+            Self::phased(base, vit, plan, seed)
+        } else {
+            ArrivalSource::Lanes(MergedArrivals::phased(base, vit, plan, seed, lanes))
+        }
+    }
+
     /// Replay an explicit arrival list. The list is stable-sorted by
     /// arrival time: the serving loop keeps exactly one pending arrival
     /// event, so out-of-order timestamps would otherwise be silently
@@ -131,6 +471,15 @@ impl ArrivalSource {
     pub fn replay(mut arrivals: Vec<ArrivedRequest>) -> Self {
         arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         ArrivalSource::Replay(arrivals.into_iter())
+    }
+
+    /// The lane-split merge, if this source is one — the sharded engine
+    /// detaches lanes from it to pre-sample on shard workers.
+    pub(crate) fn lanes_mut(&mut self) -> Option<&mut MergedArrivals> {
+        match self {
+            ArrivalSource::Lanes(m) => Some(m),
+            _ => None,
+        }
     }
 
     /// Arrival time of the final request (0.0 for an empty source).
@@ -145,18 +494,21 @@ impl ArrivalSource {
                 }
             }
             ArrivalSource::Phased(s) => s.last_arrival(),
+            ArrivalSource::Lanes(m) => m.last_arrival(),
         }
     }
 
     /// Total requests the source will yield (including already-yielded ones
     /// for a fresh source; the serving loop reads this before consuming).
-    /// For a phased source the count is only knowable by sampling, so a
-    /// clone of the stream is walked — O(total) time, O(1) memory.
+    /// O(1) for every variant — the phased stream caches its exact count at
+    /// construction (it used to be recomputed here by walking a full clone
+    /// of the stream, shape draws included, on every call).
     pub fn len_total(&self) -> usize {
         match self {
             ArrivalSource::Replay(it) => it.as_slice().len(),
             ArrivalSource::Stream(s) => s.len_total(),
-            ArrivalSource::Phased(s) => s.clone().count(),
+            ArrivalSource::Phased(s) => s.len_total(),
+            ArrivalSource::Lanes(m) => m.len_total(),
         }
     }
 }
@@ -169,6 +521,7 @@ impl Iterator for ArrivalSource {
             ArrivalSource::Replay(it) => it.next(),
             ArrivalSource::Stream(s) => s.next(),
             ArrivalSource::Phased(s) => s.next(),
+            ArrivalSource::Lanes(m) => m.next(),
         }
     }
 }
@@ -177,8 +530,9 @@ impl Iterator for ArrivalSource {
 mod tests {
     use super::*;
     use crate::config::ModelDesc;
-    use crate::workload::injector::inject;
     use crate::workload::generate;
+    use crate::workload::injector::inject;
+    use crate::workload::phases::PhasePlan;
 
     fn vit() -> VitDesc {
         ModelDesc::openpangu_7b_vl().vit
@@ -194,12 +548,137 @@ mod tests {
     }
 
     #[test]
+    fn single_lane_merge_matches_legacy_stream_bit_exactly() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let legacy: Vec<ArrivedRequest> =
+            WorkloadStream::new(&spec, &vit(), 3.0, Arrival::Poisson, 42).collect();
+        let merged: Vec<ArrivedRequest> =
+            MergedArrivals::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1).collect();
+        assert_eq!(legacy, merged, "one lane is the legacy stream");
+        // And the source constructor picks the legacy variant for lanes<=1.
+        assert!(matches!(
+            ArrivalSource::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1),
+            ArrivalSource::Stream(_)
+        ));
+    }
+
+    #[test]
     fn last_arrival_prescan_matches_final_yield() {
         let spec = WorkloadSpec::visualwebinstruct();
         let s = WorkloadStream::new(&spec, &vit(), 2.0, Arrival::Poisson, 7);
         let predicted = s.last_arrival();
         let last = s.last().unwrap().arrival;
         assert_eq!(predicted, last, "pre-scan must replay the gap stream exactly");
+    }
+
+    #[test]
+    fn merged_lanes_yield_time_ordered_sequential_ids() {
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.num_requests = 103; // not divisible by the lane count
+        for lanes in [2usize, 3, 7] {
+            let merged: Vec<ArrivedRequest> =
+                MergedArrivals::streamed(&spec, &vit(), 5.0, Arrival::Poisson, 9, lanes).collect();
+            assert_eq!(merged.len(), spec.num_requests, "{lanes} lanes lose no requests");
+            for w in merged.windows(2) {
+                assert!(w[1].arrival >= w[0].arrival, "merge is time-ordered");
+            }
+            for (i, a) in merged.iter().enumerate() {
+                assert_eq!(a.spec.id, i as u64, "global ids follow arrival order");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_lanes_reproduce_the_global_grid() {
+        // With a dyadic rate every lane clock is exact in f64, so the
+        // superposition lands bit-exactly on the legacy i/rate grid.
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.num_requests = 24;
+        let legacy: Vec<f64> = WorkloadStream::new(&spec, &vit(), 4.0, Arrival::Uniform, 5)
+            .map(|a| a.arrival)
+            .collect();
+        for lanes in [2usize, 3, 4] {
+            let merged: Vec<f64> =
+                MergedArrivals::streamed(&spec, &vit(), 4.0, Arrival::Uniform, 5, lanes)
+                    .map(|a| a.arrival)
+                    .collect();
+            assert_eq!(legacy, merged, "{lanes} uniform lanes tile the global grid");
+        }
+    }
+
+    #[test]
+    fn prefilled_lanes_merge_identically_to_inline_sampling() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let plan = PhasePlan::text_image_alternating(30.0, 6.0, 8.0, 2);
+        let mut inline = MergedArrivals::phased(&spec, &vit(), &plan, 11, 4);
+        let mut prefilled = MergedArrivals::phased(&spec, &vit(), &plan, 11, 4);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        loop {
+            // Simulate the sharded engine: detach every lane, pre-sample a
+            // window "on the worker", re-attach, then merge a batch.
+            for i in 0..prefilled.lane_count() {
+                let mut feed = prefilled.detach_lane(i).unwrap();
+                feed.fill(5);
+                prefilled.attach_lane(i, feed);
+            }
+            let mut progressed = false;
+            for _ in 0..3 {
+                match (inline.next(), prefilled.next()) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x, y, "pre-filling must not change the merge");
+                        a.push(x);
+                        b.push(y);
+                        progressed = true;
+                    }
+                    (None, None) => break,
+                    _ => panic!("sources disagree on length"),
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert_eq!(inline.sampled_inline(), inline.yielded(), "no workers: all inline");
+        assert!(
+            prefilled.sampled_inline() < prefilled.yielded() / 2,
+            "pre-filling absorbs the sampling work ({} of {} inline)",
+            prefilled.sampled_inline(),
+            prefilled.yielded()
+        );
+    }
+
+    #[test]
+    fn merged_len_and_last_arrival_match_the_yield() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let m = MergedArrivals::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 13, 3);
+        let (predicted_len, predicted_last) = (m.len_total(), m.last_arrival());
+        let yielded: Vec<ArrivedRequest> = m.collect();
+        assert_eq!(predicted_len, yielded.len());
+        let max_seen = yielded.iter().map(|a| a.arrival).fold(0.0, f64::max);
+        assert_eq!(predicted_last, max_seen);
+
+        let plan = PhasePlan::text_image_alternating(30.0, 6.0, 8.0, 2);
+        let p = ArrivalSource::phased_lanes(&spec, &vit(), &plan, 3, 4);
+        let (predicted_len, predicted_last) = (p.len_total(), p.last_arrival());
+        let yielded: Vec<ArrivedRequest> = p.collect();
+        assert_eq!(predicted_len, yielded.len());
+        assert_eq!(predicted_last, yielded.iter().map(|a| a.arrival).fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn phased_source_len_total_is_exact_and_cheap() {
+        // Regression: this used to be `s.clone().count()` — an O(n) full
+        // walk (shape sampling included) on every call; it is now a cached
+        // O(1) read, pinned here against the actual yield.
+        let spec = WorkloadSpec::sharegpt4o();
+        let plan = PhasePlan::text_image_alternating(30.0, 6.0, 8.0, 2);
+        let src = ArrivalSource::phased(&spec, &vit(), &plan, 7);
+        let n = src.len_total();
+        assert!(n > 0);
+        assert_eq!(n, src.count(), "cached count must equal the actual yield");
     }
 
     #[test]
@@ -244,6 +723,10 @@ mod tests {
         assert_eq!(src.len_total(), 0);
         assert_eq!(src.count(), 0);
         assert_eq!(ArrivalSource::replay(Vec::new()).last_arrival(), 0.0);
+        let lanes = ArrivalSource::streamed(&spec, &vit(), 1.0, Arrival::Poisson, 0, 4);
+        assert_eq!(lanes.last_arrival(), 0.0);
+        assert_eq!(lanes.len_total(), 0);
+        assert_eq!(lanes.count(), 0);
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //!    (`scheduler.fuse_batch_events`) must be record-bit-identical to the
 //!    `NpuCheck`+`Kick`-pair baseline.
 //! 3. **Streamed vs materialized workload**: the lazy arrival source must
-//!    reproduce the generate→inject→replay path exactly.
+//!    reproduce the generate→inject→replay path exactly (single lane), or
+//!    — for lane-split sources — replaying its own collected merge.
 //! 4. **Sharded vs single-loop engine**: the parallel multi-replica
 //!    executor must be record-bit-identical to the single-loop reference —
 //!    including for the stateful `round_robin` balance policy (whose
@@ -49,8 +50,10 @@
 use epd_serve::config::Config;
 use epd_serve::coordinator::metrics::records_digest;
 use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::coordinator::Deployment;
 use epd_serve::workload::generate;
 use epd_serve::workload::injector::{inject, Arrival};
+use epd_serve::workload::stream::MergedArrivals;
 use std::path::Path;
 
 fn load_scenario(name: &str, requests: usize) -> Config {
@@ -116,9 +119,30 @@ fn check_scenario(name: &str, cfg: &Config) {
     );
     assert_eq!(unkicked.fused_batch_kicks, 0);
 
-    // Layer 3: streamed workload ≡ materialized trace replay.
-    let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
-    let arrivals = inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed);
+    // Layer 3: streamed workload ≡ materialized trace replay. At an
+    // effective lane count of 1 the lazy source is the legacy sampler and
+    // must reproduce generate→inject exactly; a lane-split source (one
+    // lane per replica by default) defines its own reference trace — the
+    // collected merge, already time-ordered with global arrival-order ids
+    // — and consuming it lazily must match replaying it bit for bit.
+    let lanes = match cfg.simulator.arrival_lanes {
+        0 => Deployment::parse(&cfg.deployment).unwrap().replicas,
+        n => n,
+    };
+    let arrivals = if lanes <= 1 {
+        let specs = generate(&cfg.workload, &cfg.model.vit, cfg.seed);
+        inject(&specs, cfg.rate, Arrival::Poisson, cfg.seed)
+    } else {
+        MergedArrivals::streamed(
+            &cfg.workload,
+            &cfg.model.vit,
+            cfg.rate,
+            Arrival::Poisson,
+            cfg.seed,
+            lanes,
+        )
+        .collect()
+    };
     let replayed = ServingSim::new(cfg.clone(), arrivals).unwrap().run();
     assert_eq!(
         fused.metrics.records, replayed.metrics.records,

@@ -1,0 +1,193 @@
+//! Delta-maintained residency census invariants (ISSUE 7).
+//!
+//! The epoch-snapshot `ClusterView` used to rebuild its resident-image
+//! census by unioning every replica partition's key set at each refresh —
+//! O(resident keys × refreshes) serial coordinator work. The census is now
+//! maintained incrementally from per-replica MM-Store put/evict deltas
+//! drained at refresh barriers; the full re-union survives only as the
+//! `scheduler.residency_deltas = false` escape hatch (and as the
+//! debug-build cross-check inside `refresh_shard_rows`).
+//!
+//! The contract, property-tested over random workloads and fault
+//! schedules and pinned deterministically at K ∈ {2, 8, 64}:
+//!
+//! * **Differential**: delta maintenance routes bit-identically to the
+//!   full rebuild — same per-request records under puts, LRU evictions,
+//!   and `store_loss` clears (which emit one `Evict` per resident key).
+//! * **O(changes)**: on the delta path `census_union_keys` is exactly 0 —
+//!   no partition union is ever rebuilt on the steady-state K > 1 path.
+//! * **Engine invariance**: the sharded engine drains the same deltas at
+//!   its arrival barriers as the single loop does at its lazy refreshes —
+//!   identical records *and* identical census counters at every K.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::records_digest;
+use epd_serve::coordinator::simserve::ServingSim;
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::testkit::{check, ensure};
+
+/// Two replicas of E-P-D-D (8 instances, 8 NPUs): the fault-harness shape
+/// where random schedules can both commit and be coverage-skipped.
+fn storm_cfg(n: usize, route_epoch: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = n;
+    cfg.workload.image_reuse = 0.3;
+    cfg.scheduler.route_epoch = route_epoch;
+    cfg
+}
+
+const FACTORS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+
+#[test]
+fn random_fault_storms_keep_delta_census_identical_to_full_rebuild() {
+    // Random epoch length, reuse level, and fault schedule (store_loss
+    // included — the clear() path that floods the delta log with evicts):
+    // the delta-maintained run must reproduce the full-rebuild run record
+    // for record while doing zero union work, in both engines, with
+    // engine-invariant census counters.
+    check(
+        "census-differential",
+        0xce9505,
+        12,
+        |rng| {
+            let k = *rng.choose(&[2usize, 8, 64]);
+            let reuse = rng.range_f64(0.0, 0.8);
+            let count = rng.below(6) as usize;
+            let events: Vec<FaultEvent> = (0..count)
+                .map(|_| {
+                    let t = rng.range_f64(0.5, 12.0);
+                    let kind = match rng.below(5) {
+                        0 => FaultKind::InstanceDown { inst: rng.below(8) as usize },
+                        1 => FaultKind::InstanceUp { inst: rng.below(8) as usize },
+                        2 => FaultKind::NpuSlowdown {
+                            npu: rng.below(8) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        3 => FaultKind::LinkDegrade {
+                            replica: rng.below(2) as usize,
+                            factor: *rng.choose(&FACTORS),
+                        },
+                        _ => FaultKind::StoreLoss { replica: rng.below(2) as usize },
+                    };
+                    FaultEvent { t, kind }
+                })
+                .collect();
+            (k, reuse, events)
+        },
+        |(k, reuse, events)| {
+            let n = 48;
+            let mut cfg = storm_cfg(n, *k);
+            cfg.workload.image_reuse = *reuse;
+            cfg.faults.events = events.clone();
+            let delta = ServingSim::streamed(cfg.clone()).map_err(|e| format!("{e:#}"))?.run();
+            let delta_sharded =
+                ServingSim::streamed(cfg.clone()).map_err(|e| format!("{e:#}"))?.run_sharded();
+            let mut full_cfg = cfg.clone();
+            full_cfg.scheduler.residency_deltas = false;
+            let full = ServingSim::streamed(full_cfg).map_err(|e| format!("{e:#}"))?.run();
+
+            ensure(
+                delta.metrics.records == full.metrics.records,
+                "delta census must route bit-identically to the full rebuild",
+            )?;
+            ensure(
+                delta.metrics.records == delta_sharded.metrics.records,
+                "delta census must be engine-invariant",
+            )?;
+            ensure(
+                delta.census_union_keys == 0 && delta_sharded.census_union_keys == 0,
+                "delta path must never re-union partition key sets",
+            )?;
+            ensure(full.census_delta_ops == 0, "escape hatch must not drain deltas")?;
+            ensure(
+                delta.census_delta_ops == delta_sharded.census_delta_ops,
+                format!(
+                    "census counters must be engine-invariant ({} vs {})",
+                    delta.census_delta_ops, delta_sharded.census_delta_ops
+                ),
+            )?;
+            ensure(
+                delta.metrics.completed() + delta.metrics.gave_up() == n,
+                "conservation must hold under the census refactor",
+            )
+        },
+    );
+}
+
+#[test]
+fn epoch_sweep_is_engine_invariant_with_delta_census() {
+    // Four-replica fleet (real routing choice, four census partitions) at
+    // every pinned epoch length: delta-on single ≡ delta-on sharded ≡
+    // delta-off single, with the O(changes) witness and engine-invariant
+    // counters at each K.
+    for k in [2usize, 8, 64] {
+        let mut cfg = Config::default();
+        cfg.deployment = "E-P-Dx4".to_string();
+        cfg.rate = 8.0;
+        cfg.workload.num_requests = 192;
+        cfg.workload.image_reuse = 0.3;
+        cfg.scheduler.route_epoch = k;
+        let single = ServingSim::streamed(cfg.clone()).unwrap().run();
+        let sharded = ServingSim::streamed(cfg.clone()).unwrap().run_sharded();
+        let mut full_cfg = cfg.clone();
+        full_cfg.scheduler.residency_deltas = false;
+        let full = ServingSim::streamed(full_cfg).unwrap().run();
+
+        assert_eq!(
+            single.metrics.records, sharded.metrics.records,
+            "K={k}: delta census must be engine-invariant"
+        );
+        assert_eq!(
+            single.metrics.records, full.metrics.records,
+            "K={k}: delta census must match the full rebuild"
+        );
+        assert_eq!(
+            records_digest(&single.metrics.records),
+            records_digest(&sharded.metrics.records)
+        );
+        assert_eq!(single.census_union_keys, 0, "K={k}: no unions on the delta path");
+        assert_eq!(sharded.census_union_keys, 0);
+        assert!(single.census_delta_ops > 0, "K={k}: an image workload must churn the census");
+        assert_eq!(
+            single.census_delta_ops, sharded.census_delta_ops,
+            "K={k}: both engines drain the same delta stream"
+        );
+        assert!(full.census_union_keys > 0, "K={k}: the escape hatch must union");
+        assert_eq!(full.census_delta_ops, 0);
+        assert_eq!(single.metrics.completed(), 192, "K={k}: the trace must complete");
+    }
+}
+
+#[test]
+fn store_loss_clears_propagate_through_the_delta_log() {
+    // store_loss wipes a replica's MM-Store partition via clear(), which
+    // must emit one Evict per resident key — the census drops exactly that
+    // partition's contribution and keeps matching the ground-truth union.
+    // Two staggered losses on different replicas, heavy reuse so the
+    // resident sets are substantial when wiped.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx4".to_string();
+    cfg.rate = 8.0;
+    cfg.workload.num_requests = 160;
+    cfg.workload.image_reuse = 0.5;
+    cfg.scheduler.route_epoch = 8;
+    cfg.faults.events = vec![
+        FaultEvent { t: 4.0, kind: FaultKind::StoreLoss { replica: 1 } },
+        FaultEvent { t: 8.0, kind: FaultKind::StoreLoss { replica: 2 } },
+    ];
+    let delta = ServingSim::streamed(cfg.clone()).unwrap().run();
+    let sharded = ServingSim::streamed(cfg.clone()).unwrap().run_sharded();
+    let mut full_cfg = cfg.clone();
+    full_cfg.scheduler.residency_deltas = false;
+    let full = ServingSim::streamed(full_cfg).unwrap().run();
+
+    assert_eq!(delta.faults_applied, 2, "both losses must land");
+    assert_eq!(delta.metrics.records, full.metrics.records);
+    assert_eq!(delta.metrics.records, sharded.metrics.records);
+    assert_eq!(delta.census_union_keys, 0);
+    assert_eq!(delta.census_delta_ops, sharded.census_delta_ops);
+    assert!(delta.census_delta_ops > 0, "puts and wipe-evicts must flow through the log");
+    assert_eq!(delta.metrics.completed(), 160, "store loss costs recompute, not requests");
+}
