@@ -1,0 +1,237 @@
+//! **Closed-loop feedback witness**: session clients vs a rate-matched
+//! open-loop control under a mid-run fault storm, on `E-P-D-Dx2`.
+//!
+//! Open-loop traces keep offering the scripted rate no matter what the
+//! cluster does; closed-loop clients cannot — a client issues turn t+1
+//! only after turn t completes, so when capacity collapses the offered
+//! load collapses with it, and when capacity returns the backlog of
+//! thinking clients surges back. This bench pins that feedback:
+//!
+//! 1. Run the client pool failure-free → realized arrival trace, span,
+//!    achieved rate.
+//! 2. Re-run it under a storm (decoder death + full-cluster NPU brownout
+//!    over the middle ~30 % of the healthy span, then revival/restore).
+//! 3. Run an **open-loop Poisson control** matched to the healthy run's
+//!    realized rate and request count, under the *same* storm.
+//! 4. Bucket realized arrivals into pre / during / post windows and assert
+//!    the witness: the closed-loop offered rate **drops** during the
+//!    outage and **surges** at recovery, while the control's stays flat —
+//!    and the closed-loop drop is strictly deeper than the control's.
+//!
+//! Doubles as the CI closed-loop smoke: the faulted closed-loop trajectory
+//! is asserted record-bit-identical between the single-loop and sharded
+//! engines inside this binary (records digest + session records + realized
+//! trace), and turn conservation is checked exactly.
+//!
+//! Flags: `--clients N` (default 300), `--turns T` (default 6),
+//! `--think S` (mean think seconds, default 0.3).
+
+use epd_serve::bench::{print_table, repo_root, save_json};
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::records_digest;
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::util::cli::Cli;
+use epd_serve::util::json::Json;
+use epd_serve::util::stats::fmt_pct;
+
+/// Arrivals in `[lo, hi)` and the achieved rate over the window.
+fn bucket(arrivals: &[f64], lo: f64, hi: f64) -> (usize, f64) {
+    let n = arrivals.iter().filter(|&&a| a >= lo && a < hi).count();
+    (n, n as f64 / (hi - lo).max(1e-9))
+}
+
+fn peak_concurrency(series: &[(u64, i32, u64)]) -> i64 {
+    let (mut live, mut peak) = (0i64, 0i64);
+    for &(_, d, _) in series {
+        live += d as i64;
+        peak = peak.max(live);
+    }
+    peak
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new(
+        "closed_loop",
+        "closed-loop session clients vs rate-matched open-loop control under a fault storm",
+    )
+    .opt_default("clients", "300", "closed-loop clients")
+    .opt_default("turns", "6", "turns per session")
+    .opt_default("think", "0.3", "mean think time, seconds")
+    .flag("bench", "ignored (cargo bench passes this to bench binaries)")
+    .parse_env();
+    let clients = args.get_usize("clients").unwrap();
+    let turns = args.get_usize("turns").unwrap();
+    let think = args.get_f64("think").unwrap();
+
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.clients.enabled = true;
+    cfg.clients.clients = clients;
+    cfg.clients.sessions = 1;
+    cfg.clients.turns = turns;
+    cfg.clients.think_mean_s = think;
+    cfg.clients.think_min_s = (think * 0.2).max(1e-3);
+    cfg.scheduler.route_policy = "session_affinity".to_string();
+    cfg.workload.image_reuse = 0.3;
+
+    // ---- 1. Healthy closed-loop run --------------------------------------
+    let healthy = run_serving(&cfg)?;
+    let healthy_report = healthy.closed_loop.as_ref().expect("closed-loop report");
+    let healthy_arrivals: Vec<f64> =
+        healthy_report.realized.iter().map(|a| a.arrival).collect();
+    let span = healthy_arrivals.iter().fold(0.0f64, |m, &a| m.max(a)).max(1e-9);
+    let total_turns = (clients * turns) as u64;
+    assert_eq!(healthy_report.issued, total_turns, "turn conservation (healthy)");
+    assert_eq!(healthy_report.completed + healthy_report.gave_up, total_turns);
+    let healthy_rate = healthy_report.issued as f64 / span;
+
+    // ---- 2. Fault storm over the middle of the healthy span --------------
+    // Decoder death plus a full-cluster 0.15x brownout: completions nearly
+    // stop, so a feedback-driven workload must stall.
+    let t_down = 0.35 * span;
+    let t_up = 0.65 * span;
+    let width = t_up - t_down;
+    let num_npus = 8; // E-P-D-Dx2: 4 single-NPU instances per replica x 2
+    let mut storm = vec![FaultEvent { t: t_down, kind: FaultKind::InstanceDown { inst: 2 } }];
+    for npu in 0..num_npus {
+        storm.push(FaultEvent { t: t_down, kind: FaultKind::NpuSlowdown { npu, factor: 0.15 } });
+    }
+    storm.push(FaultEvent { t: t_up, kind: FaultKind::InstanceUp { inst: 2 } });
+    for npu in 0..num_npus {
+        storm.push(FaultEvent { t: t_up, kind: FaultKind::NpuSlowdown { npu, factor: 1.0 } });
+    }
+    let mut faulted_cfg = cfg.clone();
+    faulted_cfg.faults.events = storm;
+    let faulted = run_serving(&faulted_cfg)?;
+    let faulted_report = faulted.closed_loop.as_ref().expect("closed-loop report");
+    let faulted_arrivals: Vec<f64> =
+        faulted_report.realized.iter().map(|a| a.arrival).collect();
+    assert_eq!(faulted.faults_applied, 2 * num_npus as u64 + 2, "whole storm must commit");
+    assert_eq!(
+        faulted_report.completed + faulted_report.gave_up,
+        faulted_report.issued,
+        "turn conservation (faulted)"
+    );
+
+    // ---- Engine invariance (the CI closed-loop smoke) --------------------
+    let sharded = ServingSim::closed_loop(faulted_cfg.clone())?.run_sharded();
+    assert_eq!(
+        records_digest(&faulted.metrics.records),
+        records_digest(&sharded.metrics.records),
+        "closed-loop faulted trajectory must be bit-identical across engines"
+    );
+    let sharded_report = sharded.closed_loop.as_ref().expect("report");
+    assert_eq!(faulted_report.sessions, sharded_report.sessions, "session records");
+    assert_eq!(faulted_report.realized, sharded_report.realized, "realized traces");
+    println!(
+        "single-loop ≡ sharded closed loop under the storm: digest {:016x}, {} faults applied",
+        records_digest(&faulted.metrics.records),
+        faulted.faults_applied
+    );
+
+    // ---- 3. Rate-matched open-loop control under the same storm ----------
+    let mut control_cfg = faulted_cfg.clone();
+    control_cfg.clients.enabled = false;
+    control_cfg.rate = healthy_rate;
+    control_cfg.workload.num_requests = healthy_report.issued as usize;
+    let control = run_serving(&control_cfg)?;
+    let control_arrivals: Vec<f64> =
+        control.metrics.records.iter().map(|r| r.arrival).collect();
+
+    // ---- 4. The feedback witness -----------------------------------------
+    let buckets = [("pre-fault", 0.0, t_down), ("during", t_down, t_up), ("post", t_up, t_up + width)];
+    let mut rows = Vec::new();
+    let mut rates = Vec::new();
+    for &(name, lo, hi) in &buckets {
+        let (hn, hr) = bucket(&healthy_arrivals, lo, hi);
+        let (fn_, fr) = bucket(&faulted_arrivals, lo, hi);
+        let (cn, cr) = bucket(&control_arrivals, lo, hi);
+        rows.push(vec![
+            name.to_string(),
+            format!("{hn} ({hr:.1}/s)"),
+            format!("{fn_} ({fr:.1}/s)"),
+            format!("{cn} ({cr:.1}/s)"),
+        ]);
+        rates.push((name, hr, fr, cr));
+    }
+    print_table(
+        &format!(
+            "offered load by window — {clients} clients x {turns} turns, storm over [{t_down:.0}, {t_up:.0}) s"
+        ),
+        &["window", "closed healthy", "closed + storm", "open-loop control + storm"],
+        &rows,
+    );
+    let (closed_pre, control_pre) = (rates[0].2, rates[0].3);
+    let (closed_during, control_during) = (rates[1].2, rates[1].3);
+    let closed_post = rates[2].2;
+    let closed_drop = closed_during / closed_pre.max(1e-9);
+    let control_drop = control_during / control_pre.max(1e-9);
+    let surge = closed_post / closed_during.max(1e-9);
+    println!(
+        "feedback witness: closed-loop during/pre = {} , control during/pre = {} , \
+         post/during surge = {surge:.2}x",
+        fmt_pct(closed_drop),
+        fmt_pct(control_drop),
+    );
+    assert!(
+        closed_during < 0.7 * closed_pre,
+        "offered load must drop during the outage: {closed_during:.2}/s vs pre {closed_pre:.2}/s"
+    );
+    assert!(
+        closed_post > 1.2 * closed_during,
+        "offered load must surge at recovery: {closed_post:.2}/s vs during {closed_during:.2}/s"
+    );
+    assert!(
+        control_during > 0.7 * control_pre,
+        "the scripted control cannot react to the outage: {control_during:.2}/s vs {control_pre:.2}/s"
+    );
+    assert!(
+        closed_drop < control_drop,
+        "feedback must cut offered load deeper than Poisson noise: {closed_drop:.3} vs {control_drop:.3}"
+    );
+
+    // ---- JSON artifact ----------------------------------------------------
+    let mut dump = Json::obj();
+    let mut setup = Json::obj();
+    setup
+        .set("deployment", cfg.deployment.as_str())
+        .set("clients", clients)
+        .set("turns", turns)
+        .set("think_mean_s", think)
+        .set("storm_window_s", width)
+        .set("storm_events", faulted_cfg.faults.events.len() as u64);
+    let mut witness = Json::obj();
+    witness
+        .set("closed_during_over_pre", closed_drop)
+        .set("control_during_over_pre", control_drop)
+        .set("closed_post_over_during", surge);
+    let mut per_window = Vec::new();
+    for (name, hr, fr, cr) in &rates {
+        let mut o = Json::obj();
+        o.set("window", *name)
+            .set("closed_healthy_rate", *hr)
+            .set("closed_faulted_rate", *fr)
+            .set("control_rate", *cr);
+        per_window.push(o);
+    }
+    dump.set("bench", "closed_loop")
+        .set("setup", setup)
+        .set("healthy", healthy.metrics.summary_json())
+        .set("faulted", faulted.metrics.summary_json())
+        .set("control", control.metrics.summary_json())
+        .set("healthy_rate_per_s", healthy_rate)
+        .set("healthy_peak_concurrency", peak_concurrency(&healthy_report.concurrency) as u64)
+        .set("faulted_peak_concurrency", peak_concurrency(&faulted_report.concurrency) as u64)
+        .set("windows", per_window)
+        .set("witness", witness)
+        .set("gave_up", faulted_report.gave_up)
+        .set("engine_invariant", true);
+
+    let root = repo_root().join("BENCH_closed_loop.json");
+    std::fs::write(&root, dump.to_string_pretty())?;
+    println!("closed-loop feedback trajectory written to {}", root.display());
+    let path = save_json("closed_loop", &dump)?;
+    println!("results saved to {path}");
+    Ok(())
+}

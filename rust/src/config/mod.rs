@@ -595,6 +595,82 @@ impl Default for FaultsSpec {
     }
 }
 
+/// One knot of the closed-loop activation envelope (`[[clients.envelope]]`):
+/// at simulated time `t` the pool targets `active` concurrently-active
+/// clients. The envelope is piecewise-linear between knots and constant
+/// beyond the last one (and before the first), so a diurnal day or a burst
+/// is a handful of points.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnvelopePoint {
+    /// Knot time, simulated seconds (must be finite, >= 0, and strictly
+    /// increasing across the envelope).
+    pub t: f64,
+    /// Target number of active clients at `t` (finite, >= 0; fractional
+    /// values interpolate — the pool compares client index + 1 against it).
+    pub active: f64,
+}
+
+/// Closed-loop client-pool workload (`[clients]`; see
+/// [`crate::workload::clients`]).
+///
+/// When `enabled`, arrivals become **endogenous**: instead of replaying an
+/// open-loop arrival list, `clients` concurrent clients each run
+/// `sessions` multi-turn sessions — issue a request, wait for its
+/// completion, think (per-client RNG lane), then issue the next turn, with
+/// every turn of a session reusing the session's image-feature key so
+/// MM-Store residency and affinity routing see real cross-turn locality.
+/// Offered load then *reacts* to the system: an outage stalls the clients
+/// blocked on responses (offered rate drops), and recovery releases them
+/// at once (surge) — feedback no open-loop trace can produce.
+///
+/// The default is **disabled**: every existing config keeps its open-loop
+/// arrival process and no behavior changes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientsSpec {
+    /// Master switch. Off by default: arrivals stay open-loop.
+    pub enabled: bool,
+    /// Number of closed-loop clients (>= 1 when enabled). `workload.
+    /// num_requests` is ignored in closed-loop mode — the pool issues
+    /// `clients × sessions × turns` requests (fewer if the envelope parks
+    /// clients for good).
+    pub clients: usize,
+    /// Sessions each client runs, one after another (>= 1). A new session
+    /// redraws image presence and image identity.
+    pub sessions: usize,
+    /// Turns per session (>= 1). Turn t+1 is issued after turn t completes
+    /// plus a think time, and reuses the session's image key.
+    pub turns: usize,
+    /// Mean think time between a turn's completion and the next turn's
+    /// issue, seconds (shifted-exponential with floor `think_min_s`; must
+    /// be finite and >= `think_min_s`).
+    pub think_mean_s: f64,
+    /// Minimum think time, seconds. Must be finite and >= 1e-6: the strict
+    /// positive floor is **load-bearing** — it is the conservative
+    /// lookahead that lets the sharded engine bound how soon a completion
+    /// can feed back a new arrival (see `docs/ARCHITECTURE.md`).
+    pub think_min_s: f64,
+    /// Activation envelope knots. Empty (default) = all clients active
+    /// from t = 0. A client with index `c` only issues turns while the
+    /// interpolated target is >= `c + 1`; otherwise its next turn is
+    /// delayed to the time the target recovers (never advanced), and a
+    /// client the envelope never re-admits parks permanently.
+    pub envelope: Vec<EnvelopePoint>,
+}
+
+impl Default for ClientsSpec {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            clients: 64,
+            sessions: 1,
+            turns: 4,
+            think_mean_s: 2.0,
+            think_min_s: 0.25,
+            envelope: Vec::new(),
+        }
+    }
+}
+
 /// Top-level experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -612,6 +688,8 @@ pub struct Config {
     pub simulator: SimulatorSpec,
     /// Deterministic fault-injection schedule (empty = failure-free).
     pub faults: FaultsSpec,
+    /// Closed-loop client pool (disabled = open-loop arrivals).
+    pub clients: ClientsSpec,
     /// SLO constraints used for attainment accounting.
     pub slo: SloSpec,
     /// Deployment notation string, e.g. `"(E-P)-D"`.
@@ -633,6 +711,7 @@ impl Default for Config {
             reconfig: ReconfigSpec::default(),
             simulator: SimulatorSpec::default(),
             faults: FaultsSpec::default(),
+            clients: ClientsSpec::default(),
             slo: SloSpec::decode_disagg(),
             deployment: "E-P-D".to_string(),
             rate: 2.0,
@@ -918,6 +997,76 @@ impl Config {
                         ),
                     };
                     f.events.push(FaultEvent { t, kind });
+                }
+            }
+        }
+        if let Some(cl) = doc.get("clients") {
+            let c = &mut cfg.clients;
+            if let Some(v) = cl.get("enabled").and_then(Json::as_bool) {
+                c.enabled = v;
+            }
+            for (key, field) in [
+                ("clients", &mut c.clients as *mut usize),
+                ("sessions", &mut c.sessions as *mut usize),
+                ("turns", &mut c.turns as *mut usize),
+            ] {
+                if let Some(v) = cl.get(key).and_then(Json::as_f64) {
+                    if v < 1.0 || v.fract() != 0.0 {
+                        bail!("clients.{key} must be a positive integer, got {v}");
+                    }
+                    // SAFETY: pointers are to distinct fields of a live struct.
+                    unsafe { *field = v as usize };
+                }
+            }
+            if let Some(v) = cl.get("think_min_s").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 1e-6 {
+                    bail!(
+                        "clients.think_min_s must be finite and >= 1e-6 (the positive floor \
+                         bounds completion->arrival feedback for the sharded engine), got {v}"
+                    );
+                }
+                c.think_min_s = v;
+            }
+            if let Some(v) = cl.get("think_mean_s").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("clients.think_mean_s must be finite and >= 0, got {v}");
+                }
+                c.think_mean_s = v;
+            }
+            if c.think_mean_s < c.think_min_s {
+                bail!(
+                    "clients.think_mean_s ({}) must be >= clients.think_min_s ({})",
+                    c.think_mean_s,
+                    c.think_min_s
+                );
+            }
+            if let Some(pts) = cl.get("envelope").and_then(Json::as_arr) {
+                for (i, p) in pts.iter().enumerate() {
+                    let t = p
+                        .get("t")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("clients.envelope[{i}]: missing 't'"))?;
+                    if !t.is_finite() || t < 0.0 {
+                        bail!("clients.envelope[{i}]: t must be finite and >= 0, got {t}");
+                    }
+                    if let Some(prev) = c.envelope.last() {
+                        if t <= prev.t {
+                            bail!(
+                                "clients.envelope[{i}]: knot times must be strictly increasing \
+                                 ({t} after {})",
+                                prev.t
+                            );
+                        }
+                    }
+                    let active = p.get("active").and_then(Json::as_f64).ok_or_else(|| {
+                        anyhow::anyhow!("clients.envelope[{i}]: missing 'active'")
+                    })?;
+                    if !active.is_finite() || active < 0.0 {
+                        bail!(
+                            "clients.envelope[{i}]: active must be finite and >= 0, got {active}"
+                        );
+                    }
+                    c.envelope.push(EnvelopePoint { t, active });
                 }
             }
         }
@@ -1235,6 +1384,74 @@ replica = 0
             "[[faults.events]]\nt = 1.0\nkind = \"npu_slowdown\"\nnpu = 0\nfactor = 0\n",
             "[[faults.events]]\nt = 1.0\nkind = \"link_degrade\"\nreplica = 0\nfactor = 1.5\n",
             "[[faults.events]]\nt = 1.0\nkind = \"link_degrade\"\nfactor = 0.5\n", // no replica
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
+        }
+    }
+
+    #[test]
+    fn clients_section_round_trips() {
+        let doc = crate::util::toml::parse(
+            r#"
+[clients]
+enabled = true
+clients = 500
+sessions = 2
+turns = 6
+think_mean_s = 4.0
+think_min_s = 0.5
+
+[[clients.envelope]]
+t = 0
+active = 100
+
+[[clients.envelope]]
+t = 60
+active = 500
+
+[[clients.envelope]]
+t = 120
+active = 50
+"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&doc).unwrap().clients;
+        assert!(c.enabled);
+        assert_eq!(c.clients, 500);
+        assert_eq!(c.sessions, 2);
+        assert_eq!(c.turns, 6);
+        assert_eq!(c.think_mean_s, 4.0);
+        assert_eq!(c.think_min_s, 0.5);
+        assert_eq!(c.envelope.len(), 3);
+        assert_eq!(c.envelope[1], EnvelopePoint { t: 60.0, active: 500.0 });
+        // Defaults: closed-loop is opt-in, envelope empty = all active.
+        let d = ClientsSpec::default();
+        assert!(!d.enabled, "closed-loop must be opt-in");
+        assert!(d.envelope.is_empty());
+        assert!(d.think_min_s >= 1e-6, "positive think floor is load-bearing");
+        assert!(d.think_mean_s >= d.think_min_s);
+    }
+
+    #[test]
+    fn clients_rejects_nonsense_at_parse_time() {
+        for bad in [
+            "[clients]\nclients = 0\n",
+            "[clients]\nclients = -5\n",
+            "[clients]\nclients = 2.5\n",
+            "[clients]\nsessions = 0\n",
+            "[clients]\nturns = 0\n",
+            "[clients]\nthink_min_s = 0\n",
+            "[clients]\nthink_min_s = -1\n",
+            "[clients]\nthink_min_s = 1e-9\n",
+            "[clients]\nthink_mean_s = -2\n",
+            "[clients]\nthink_mean_s = 0.1\nthink_min_s = 0.5\n",
+            "[[clients.envelope]]\nactive = 10\n",                    // missing t
+            "[[clients.envelope]]\nt = 5\n",                          // missing active
+            "[[clients.envelope]]\nt = -1\nactive = 10\n",
+            "[[clients.envelope]]\nt = 5\nactive = -1\n",
+            "[[clients.envelope]]\nt = 5\nactive = 10\n\n[[clients.envelope]]\nt = 5\nactive = 20\n",
+            "[[clients.envelope]]\nt = 9\nactive = 10\n\n[[clients.envelope]]\nt = 3\nactive = 20\n",
         ] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");

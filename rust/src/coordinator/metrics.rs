@@ -27,6 +27,9 @@ pub struct RequestRecord {
     /// Abandoned after exhausting the retry budget (fault injection);
     /// `finish` is `None` and the request counts as an SLO miss.
     pub gave_up: bool,
+    /// Closed-loop session membership as `(session uid, turn)`; `None` on
+    /// every open-loop request.
+    pub session: Option<(u64, u32)>,
 }
 
 /// Canonical, bit-exact digest of a record set: every f64 by its raw bit
@@ -62,9 +65,15 @@ pub fn records_digest(records: &[RequestRecord]) -> u64 {
         }
         let _ = write!(
             buf,
-            "{}|{}|{}|{};",
+            "{}|{}|{}|{}|",
             r.recomputed as u8, r.feature_reused as u8, r.retries, r.gave_up as u8
         );
+        match r.session {
+            Some((sid, turn)) => {
+                let _ = write!(buf, "{sid}.{turn};");
+            }
+            None => buf.push_str("-;"),
+        }
         h.update(buf.as_bytes());
     }
     h.finish()
@@ -217,6 +226,7 @@ mod tests {
             feature_reused: false,
             retries: 0,
             gave_up: false,
+            session: None,
         }
     }
 
@@ -233,6 +243,7 @@ mod tests {
             feature_reused: false,
             retries: 0,
             gave_up: false,
+            session: None,
         }
     }
 
@@ -304,6 +315,16 @@ mod tests {
         assert_ne!(d0, records_digest(&retried), "retry count must be pinned");
         assert_ne!(records_digest(&[failed(1)]), records_digest(&abandoned), "give-up must be pinned");
         assert_eq!(d0, records_digest(&base.clone()), "digest is deterministic");
+        let mut in_session = base.clone();
+        in_session[0].session = Some((7, 2));
+        assert_ne!(d0, records_digest(&in_session), "session membership must be pinned");
+        let mut other_turn = base;
+        other_turn[0].session = Some((7, 3));
+        assert_ne!(
+            records_digest(&in_session),
+            records_digest(&other_turn),
+            "turn index must be pinned"
+        );
     }
 
     #[test]

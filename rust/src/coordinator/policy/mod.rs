@@ -70,7 +70,7 @@ pub mod route;
 pub use balance::{LeastLoaded, RoundRobin, WeightedLeastLoaded};
 pub use batch::{FcfsBatch, SjfPrefillBatch};
 pub use elastic::{GreedyPressure, PressureHysteresis, ReconfigPolicy};
-pub use route::{CacheAffinity, ModalityPath, SloAware};
+pub use route::{CacheAffinity, ModalityPath, SessionAffinity, SloAware};
 
 use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
@@ -235,6 +235,42 @@ impl ResidencyCensus {
     }
 }
 
+/// Where each closed-loop session's KV/feature state lives: session uid →
+/// the replica its previous turn was routed to. Written by the
+/// coordination boundary **in routing order** (after each routed arrival),
+/// not at view refreshes — routing is coordinator-serial in both engines,
+/// so the directory's contents at any routing decision are engine-invariant
+/// even under `route_epoch > 1` (unlike the status rows, whose refresh
+/// cadence the epoch controls). [`SessionAffinity`] reads it to pin a
+/// session's later turns to the replica already holding its state; on
+/// replica death the pin goes cold (its candidate sets empty out within
+/// one refresh) and the policy falls back to the global pool.
+#[derive(Debug, Default, Clone)]
+pub struct SessionDirectory {
+    pins: HashMap<u64, usize>,
+}
+
+impl SessionDirectory {
+    /// Record (or move) a session's pin after routing one of its turns.
+    pub fn pin(&mut self, session: u64, replica: usize) {
+        self.pins.insert(session, replica);
+    }
+
+    /// The replica holding this session's state, if any turn was routed.
+    pub fn pinned(&self, session: u64) -> Option<usize> {
+        self.pins.get(&session).copied()
+    }
+
+    /// Number of sessions with a pin.
+    pub fn len(&self) -> usize {
+        self.pins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pins.is_empty()
+    }
+}
+
 /// MM-Store residency as captured by a [`ClusterView`] refresh — the
 /// snapshot replacement for the old per-arrival live probe over every
 /// replica's partition.
@@ -298,6 +334,10 @@ pub struct ClusterView {
     pub cands: StageCands,
     /// MM-Store residency summary as of the refresh.
     pub residency: ResidencyView,
+    /// Closed-loop session pins, maintained in routing order (see
+    /// [`SessionDirectory`] for why this is not refresh-scoped). Always
+    /// empty in open-loop runs.
+    pub sessions: SessionDirectory,
     /// Topology generation `dep`/`cands` reflect — lets a refresh skip the
     /// deployment clone unless an elastic switch actually happened.
     pub(crate) topo_gen: u64,
@@ -315,6 +355,7 @@ impl ClusterView {
             dep: dep.clone(),
             cands: StageCands::build(dep),
             residency: ResidencyView::Fresh,
+            sessions: SessionDirectory::default(),
             topo_gen: 0,
         }
     }
@@ -365,6 +406,9 @@ pub struct ViewCtx<'a> {
     /// Estimated steady-state encode service rate of one instance,
     /// visual tokens/s (0 when unknown).
     pub encode_tok_s: f64,
+    /// Closed-loop session pins, current as of this routing decision (not
+    /// the view stamp — see [`SessionDirectory`]). Empty when open-loop.
+    pub sessions: &'a SessionDirectory,
 }
 
 impl<'a> ViewCtx<'a> {
@@ -389,6 +433,7 @@ impl<'a> ViewCtx<'a> {
             now,
             prefill_tok_s,
             encode_tok_s,
+            sessions: &view.sessions,
         }
     }
 
@@ -494,7 +539,8 @@ pub trait BatchPolicy: Send {
 }
 
 /// Registered [`RoutePolicy`] names, default first.
-pub const ROUTE_POLICIES: &[&str] = &["modality_path", "cache_affinity", "slo_aware"];
+pub const ROUTE_POLICIES: &[&str] =
+    &["modality_path", "cache_affinity", "slo_aware", "session_affinity"];
 /// Registered [`BalancePolicy`] names, default first.
 pub const BALANCE_POLICIES: &[&str] = &["least_loaded", "round_robin", "weighted_least_loaded"];
 /// Registered [`BatchPolicy`] names, default first.
@@ -508,6 +554,7 @@ pub fn make_route_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
         "modality_path" => Ok(Box::new(ModalityPath)),
         "cache_affinity" => Ok(Box::new(CacheAffinity)),
         "slo_aware" => Ok(Box::new(SloAware)),
+        "session_affinity" => Ok(Box::new(SessionAffinity)),
         _ => bail!(
             "unknown route_policy '{name}'; registered: {}",
             ROUTE_POLICIES.join(", ")
@@ -574,6 +621,7 @@ pub(crate) mod testutil {
         pub(crate) sched: SchedulerSpec,
         pub(crate) slo: SloSpec,
         pub(crate) tok_s: (f64, f64),
+        pub(crate) sessions: SessionDirectory,
     }
 
     impl CtxOwner {
@@ -588,6 +636,7 @@ pub(crate) mod testutil {
                 sched: SchedulerSpec::default(),
                 slo: SloSpec::decode_disagg(),
                 tok_s,
+                sessions: SessionDirectory::default(),
             }
         }
 
@@ -604,6 +653,7 @@ pub(crate) mod testutil {
                 now: 0.0,
                 prefill_tok_s: self.tok_s.0,
                 encode_tok_s: self.tok_s.1,
+                sessions: &self.sessions,
             }
         }
 
@@ -651,6 +701,7 @@ mod tests {
         let e = make_route_policy("nope").unwrap_err().to_string();
         assert!(e.contains("nope") && e.contains("modality_path"), "{e}");
         assert!(e.contains("cache_affinity") && e.contains("slo_aware"), "{e}");
+        assert!(e.contains("session_affinity"), "{e}");
         let e = make_balance_policy("nope").unwrap_err().to_string();
         assert!(e.contains("least_loaded") && e.contains("round_robin"), "{e}");
         let e = make_batch_policy("nope").unwrap_err().to_string();
@@ -704,6 +755,22 @@ mod tests {
         v.absorb_topology(&authority, &cands, 1);
         assert!(v.dep.instances[2].stages.encode, "gen 1 must absorb the switch");
         assert_eq!(v.cands.get(0, StageNeed::Encode), &[0, 2]);
+    }
+
+    #[test]
+    fn session_directory_pins_move_with_rerouting() {
+        let mut d = SessionDirectory::default();
+        assert!(d.is_empty());
+        assert_eq!(d.pinned(3), None);
+        d.pin(3, 1);
+        d.pin(5, 0);
+        assert_eq!(d.pinned(3), Some(1));
+        assert_eq!(d.len(), 2);
+        // A later turn routed elsewhere (e.g. after the pinned replica
+        // died) moves the pin — last routed turn wins.
+        d.pin(3, 0);
+        assert_eq!(d.pinned(3), Some(0));
+        assert_eq!(d.len(), 2);
     }
 
     #[test]

@@ -128,6 +128,63 @@ impl RoutePolicy for CacheAffinity {
     }
 }
 
+/// Session-sticky routing for closed-loop multi-turn workloads: a
+/// request carrying a [`crate::workload::SessionRef`] is pinned to the
+/// replica that served the session's previous turn (read from the
+/// [`ViewCtx::sessions`] directory the coordination boundary maintains in
+/// routing order), because that replica's MM-Store partition holds the
+/// session's image features and its instances any reusable KV state —
+/// cross-turn locality that hash affinity cannot see (two sessions over
+/// different images, one client, land wherever their keys hash).
+///
+/// Fallbacks, in order: a pinned replica whose candidate set for the
+/// needed stage is empty (its instances died — PR 6's fault commit empties
+/// the dead instance's stages, and the forced view refresh lands that in
+/// the snapshot cands within one arrival) yields to the global
+/// entry-candidate pool, after which the directory pin *moves* to wherever
+/// the turn was actually routed; sessionless requests and first turns
+/// behave exactly like [`ModalityPath`]. Instance choice within the pinned
+/// replica is still the active [`BalancePolicy`]'s.
+///
+/// Staleness: the pin itself is routing-order state (engine-invariant at
+/// any `route_epoch`); only the load ranking inside the chosen set ages
+/// like every other policy's.
+pub struct SessionAffinity;
+
+impl RoutePolicy for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "session_affinity"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &ViewCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let need = if want_encode { StageNeed::Encode } else { StageNeed::Prefill };
+        let pinned: Option<&[usize]> = spec
+            .session
+            .and_then(|s| ctx.sessions.pinned(s.id))
+            .map(|r| ctx.cands.get(r, need))
+            // Dead/stage-less pinned replica → global fallback.
+            .and_then(|set| (!set.is_empty()).then_some(set));
+        let instance = match pinned {
+            Some(set) => balance.pick(&ctx.pick_ctx(), set).expect("non-empty"),
+            None => {
+                let candidates = entry_candidates(ctx, want_encode);
+                if candidates.is_empty() {
+                    return Err(no_entry_instance(want_encode));
+                }
+                balance.pick(&ctx.pick_ctx(), &candidates).expect("non-empty")
+            }
+        };
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
 /// TTFT-SLO-aware admission routing: projects each candidate's
 /// queue-induced wait from its pending-token backlog and the cost model's
 /// steady-state service-rate estimate ([`ViewCtx::prefill_tok_s`] /
@@ -196,11 +253,19 @@ mod tests {
             image: Some(ImageInput { width: 560, height: 560, key, visual_tokens: 400 }),
             text_tokens: 8,
             output_tokens: 64,
+            session: None,
         }
     }
 
     fn text() -> RequestSpec {
-        RequestSpec { id: 2, image: None, text_tokens: 8, output_tokens: 64 }
+        RequestSpec { id: 2, image: None, text_tokens: 8, output_tokens: 64, session: None }
+    }
+
+    fn turn(key: u64, sid: u64, t: u32) -> RequestSpec {
+        RequestSpec {
+            session: Some(crate::workload::SessionRef { id: sid, turn: t }),
+            ..mm(key)
+        }
     }
 
     #[test]
@@ -243,6 +308,60 @@ mod tests {
     }
 
     #[test]
+    fn session_affinity_pins_later_turns_to_the_previous_replica() {
+        let mut table = StatusTable::new(6);
+        // Replica 1's entry instances are heavily loaded: any load-based
+        // policy would route away, but the session's state lives there.
+        table.update(3, InstanceStatus { queue_len: 40, ..Default::default() });
+        let owner = {
+            let mut o = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+            o.sessions.pin(5, 1);
+            o
+        };
+        let ctx = owner.ctx(&table);
+        let r = SessionAffinity.route(&ctx, &turn(0xfeed, 5, 1), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Encode(3), "pinned turn must stay on replica 1");
+        // Unpinned sessions and sessionless requests balance normally.
+        let cold = SessionAffinity.route(&ctx, &turn(0xfeed, 6, 0), false, &mut LeastLoaded).unwrap();
+        assert_eq!(cold.target_instance(), 0, "first turn balances to the idle replica");
+        let open = SessionAffinity.route(&ctx, &mm(0xfeed), false, &mut LeastLoaded).unwrap();
+        assert_eq!(open.target_instance(), 0);
+    }
+
+    #[test]
+    fn session_affinity_falls_back_when_the_pinned_replica_dies() {
+        use crate::coordinator::deployment::StageSet;
+        let table = StatusTable::new(6);
+        let mut owner = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+        owner.sessions.pin(5, 1);
+        // Fault-kill replica 1's instances the way `commit_fault` does:
+        // stages go NONE, candidate sets rebuild empty.
+        for i in 3..6 {
+            owner.dep.instances[i].stages = StageSet::NONE;
+        }
+        owner.cands = crate::coordinator::policy::StageCands::build(&owner.dep);
+        let ctx = owner.ctx(&table);
+        let r = SessionAffinity.route(&ctx, &turn(0xfeed, 5, 2), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Encode(0), "dead pin must yield to the surviving replica");
+    }
+
+    #[test]
+    fn session_affinity_respects_feature_residency() {
+        let table = StatusTable::new(6);
+        let owner = {
+            let mut o = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+            o.sessions.pin(9, 1);
+            o
+        };
+        let ctx = owner.ctx(&table);
+        // Later turn with the session's features already resident (the
+        // expected closed-loop steady state): enters at the pinned
+        // replica's *prefill*, skipping encode.
+        let r = SessionAffinity.route(&ctx, &turn(0xbeef, 9, 3), true, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 4, feature_reused: true });
+    }
+
+    #[test]
     fn slo_aware_skips_projected_ttft_busters() {
         let mut table = StatusTable::new(6);
         // 3000 pending prompt tokens at 1000 tok/s ⇒ 3 s projected wait >
@@ -275,8 +394,12 @@ mod tests {
         let table = StatusTable::new(2);
         let owner = CtxOwner::new("P-D", (0.0, 0.0));
         let ctx = owner.ctx(&table);
-        let mut policies: Vec<Box<dyn RoutePolicy>> =
-            vec![Box::new(ModalityPath), Box::new(CacheAffinity), Box::new(SloAware)];
+        let mut policies: Vec<Box<dyn RoutePolicy>> = vec![
+            Box::new(ModalityPath),
+            Box::new(CacheAffinity),
+            Box::new(SloAware),
+            Box::new(SessionAffinity),
+        ];
         for p in &mut policies {
             let e = p.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap_err().to_string();
             assert!(e.contains("encode-capable"), "{e}");

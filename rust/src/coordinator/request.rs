@@ -119,7 +119,7 @@ mod tests {
     use crate::workload::{ImageInput, RequestSpec};
 
     fn text_spec() -> RequestSpec {
-        RequestSpec { id: 1, image: None, text_tokens: 10, output_tokens: 64 }
+        RequestSpec { id: 1, image: None, text_tokens: 10, output_tokens: 64, session: None }
     }
 
     fn mm_spec() -> RequestSpec {
@@ -128,6 +128,7 @@ mod tests {
             image: Some(ImageInput { width: 280, height: 280, key: 0xbeef, visual_tokens: 100 }),
             text_tokens: 10,
             output_tokens: 64,
+            session: None,
         }
     }
 

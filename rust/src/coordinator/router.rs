@@ -20,7 +20,9 @@
 use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
 use crate::coordinator::deployment::Deployment;
-use crate::coordinator::policy::{LeastLoaded, ModalityPath, RoutePolicy, StageCands, ViewCtx};
+use crate::coordinator::policy::{
+    LeastLoaded, ModalityPath, RoutePolicy, SessionDirectory, StageCands, ViewCtx,
+};
 use crate::workload::RequestSpec;
 use anyhow::Result;
 
@@ -52,6 +54,9 @@ pub struct Router {
     /// Default specs built once — `route` is called per request.
     scheduler: SchedulerSpec,
     slo: SloSpec,
+    /// Always empty — the facade routes open-loop requests; closed-loop
+    /// session pins live in the serving system's `ClusterView`.
+    sessions: SessionDirectory,
 }
 
 impl Router {
@@ -61,6 +66,7 @@ impl Router {
             cands: StageCands::build(dep),
             scheduler: SchedulerSpec::default(),
             slo: SloSpec::decode_disagg(),
+            sessions: SessionDirectory::default(),
         }
     }
 
@@ -86,6 +92,7 @@ impl Router {
             now: 0.0,
             prefill_tok_s: 0.0,
             encode_tok_s: 0.0,
+            sessions: &self.sessions,
         };
         ModalityPath.route(&ctx, spec, feature_resident, &mut LeastLoaded)
     }
@@ -98,7 +105,7 @@ mod tests {
     use crate::workload::ImageInput;
 
     fn text() -> RequestSpec {
-        RequestSpec { id: 1, image: None, text_tokens: 8, output_tokens: 64 }
+        RequestSpec { id: 1, image: None, text_tokens: 8, output_tokens: 64, session: None }
     }
 
     fn mm() -> RequestSpec {
@@ -107,6 +114,7 @@ mod tests {
             image: Some(ImageInput { width: 560, height: 560, key: 0xfeed, visual_tokens: 400 }),
             text_tokens: 8,
             output_tokens: 64,
+            session: None,
         }
     }
 

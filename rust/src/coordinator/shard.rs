@@ -117,6 +117,11 @@ pub enum Ev {
     /// full at run start by both engines, so an empty schedule injects
     /// zero events and perturbs nothing.
     Fault(usize),
+    /// The closed-loop client pool has a turn due now (arrival-class,
+    /// coordinator-handled; no payload — the single loop pops every due
+    /// turn from the pool when it fires, so stale duplicates are harmless
+    /// no-ops). Never reaches a shard.
+    ClientWake,
 }
 
 /// One stage instance's live state.
@@ -299,6 +304,13 @@ pub(crate) struct ReplicaShard {
     /// engine rounds); `u64::MAX` in the single loop, where pending
     /// coordination events bound fusion through the shared queue instead.
     window_ns: u64,
+    /// Closed-loop feedback log: `(request id, finish time, gave_up)` per
+    /// retirement, in shard-local completion order. Drained by the serving
+    /// engines into the client pool. Only populated when
+    /// [`ReplicaShard::enable_completion_log`] was called (open-loop runs
+    /// pay nothing).
+    completion_log: Vec<(u64, f64, bool)>,
+    log_completions: bool,
 }
 
 impl ReplicaShard {
@@ -369,8 +381,22 @@ impl ReplicaShard {
             store_fail_prob: 0.0,
             horizon_ns: u64::MAX,
             window_ns: u64::MAX,
+            completion_log: Vec::new(),
+            log_completions: false,
             shared,
         })
+    }
+
+    /// Turn on the closed-loop completion log (see `completion_log`).
+    pub fn enable_completion_log(&mut self) {
+        self.log_completions = true;
+    }
+
+    /// Move this shard's pending completion feedback into `out` (appended;
+    /// shard-local order preserved). The pool's per-client lanes make the
+    /// cross-shard drain order immaterial to every draw.
+    pub fn drain_completions(&mut self, out: &mut Vec<(u64, f64, bool)>) {
+        out.append(&mut self.completion_log);
     }
 
     // ------------------------------------------------------------------
@@ -689,7 +715,7 @@ impl ReplicaShard {
         // 3. Bounded-retry re-routing over the survivors.
         for rid in enc_disp {
             if !self.charge_retry(rid) {
-                self.give_up(rid);
+                self.give_up(rid, now);
                 continue;
             }
             let visual = {
@@ -706,7 +732,7 @@ impl ReplicaShard {
         }
         for rid in pre_disp {
             if !self.charge_retry(rid) {
-                self.give_up(rid);
+                self.give_up(rid, now);
                 continue;
             }
             let visual = {
@@ -769,12 +795,17 @@ impl ReplicaShard {
 
     /// Abandon a request whose retry budget is exhausted: it counts as
     /// done (the run must terminate) but keeps no generation progress —
-    /// an SLO miss with `gave_up` pinned in its record.
-    fn give_up(&mut self, rid: u64) {
+    /// an SLO miss with `gave_up` pinned in its record. Closed-loop pools
+    /// see give-ups as results too (the client moves on to its next turn),
+    /// so the completion log records them with the abandonment time.
+    fn give_up(&mut self, rid: u64, now: f64) {
         let r = self.reqs.get_mut(&rid).expect("abandoned request is live");
         r.rewind_for_retry();
         r.gave_up = true;
         self.done += 1;
+        if self.log_completions {
+            self.completion_log.push((rid, now, true));
+        }
         self.retire(rid);
     }
 
@@ -954,6 +985,7 @@ impl ReplicaShard {
                 feature_reused: r.feature_reused,
                 retries: r.retries,
                 gave_up: r.gave_up,
+                session: r.spec.session.map(|s| (s.id, s.turn)),
             },
         ));
     }
@@ -1507,6 +1539,9 @@ impl ReplicaShard {
                 self.insts[li].active_ctx -= ctx_now;
                 let kv = self.insts[li].kv.as_mut().expect("decode instance");
                 kv.free(rid).expect("active sequence registered");
+                if self.log_completions {
+                    self.completion_log.push((rid, now, false));
+                }
                 self.retire(rid);
             } else {
                 let kv = self.insts[li].kv.as_mut().expect("decode instance");
@@ -1567,7 +1602,7 @@ impl SimModel for ReplicaShard {
                 // A freed coupled instance may also resume decode.
                 self.maybe_start_decode_step(inst, now, q);
             }
-            Ev::Arrive(_) | Ev::ReconfigTick | Ev::Fault(_) => {
+            Ev::Arrive(_) | Ev::ReconfigTick | Ev::Fault(_) | Ev::ClientWake => {
                 unreachable!("coordination events are handled at the coordination boundary")
             }
         }

@@ -265,9 +265,11 @@ impl ServingSim {
         };
 
         let mut cq: EventQueue<CoordEv> = EventQueue::new();
-        match self.source.next() {
-            Some(first) => cq.at_arrival(first.arrival, CoordEv::Arrive(first)),
-            None => self.stream_done = true,
+        if !self.closed_loop {
+            match self.source.next() {
+                Some(first) => cq.at_arrival(first.arrival, CoordEv::Arrive(first)),
+                None => self.stream_done = true,
+            }
         }
         let mut ticker = self.ticker.take();
         if let Some(t) = &mut ticker {
@@ -298,7 +300,14 @@ impl ServingSim {
         // engine's own measure of coordination cost (overwrites the
         // single-loop-style refresh/tick count `seal_view` accumulates).
         let mut rounds: u64 = 0;
-        loop {
+        if self.closed_loop {
+            // Endogenous arrivals need their own window logic (the
+            // think-floor safety bound bounds arrivals the coordinator
+            // cannot see yet); open-loop runs take the loop below
+            // untouched.
+            rounds = self.closed_loop_rounds(&pool, &mut slots, &mut cq, &mut ticker, horizon_ns);
+        }
+        while !self.closed_loop {
             if self.stream_done && done_total(&slots) == self.arrived {
                 break;
             }
@@ -446,6 +455,174 @@ impl ServingSim {
         }
         self.ticker = ticker;
         self.finish(end, events)
+    }
+
+    /// Closed-loop coordination rounds: arrivals are endogenous — the
+    /// client pool issues a turn only after observing the previous one's
+    /// completion — so the conservative window must also bound arrivals
+    /// the coordinator cannot see yet. Three candidate bounds per round:
+    ///
+    /// * the pool's earliest **pending** turn (a known arrival);
+    /// * the earliest coordination-queue event (reconfig tick / fault);
+    /// * the **think-floor safety bound**: while turns are in flight, any
+    ///   unseen future arrival follows some not-yet-executed shard event
+    ///   (the completion that triggers it) by at least the think floor, so
+    ///   `min(shard queue heads) + think_lookahead_ns` is a lower bound on
+    ///   all of them. (Fused decode macro-steps only ever finish a request
+    ///   at or after the queue-head time that bounded them, so the bound
+    ///   survives macro-stepping.)
+    ///
+    /// The window is the minimum of the three; a safety-only window just
+    /// advances the shards and re-evaluates. The shard completion logs are
+    /// drained into the pool after **every** round and before the bound
+    /// event is handled — a completion inside the round may schedule a
+    /// turn due exactly at the bound, and arrival class orders it before
+    /// any same-instant control event (the single loop's merge order;
+    /// same-instant shard events run in the following rounds, after the
+    /// arrival is injected, exactly as the `(time, class, seq)` merge
+    /// interleaves them). Every turn popped at the bound was scheduled at
+    /// exactly that nanosecond — an earlier one would contradict one of
+    /// the bounds — so routing at `bound / 1e9` reproduces the single
+    /// loop's wake clock bit for bit.
+    fn closed_loop_rounds(
+        &mut self,
+        pool: &WorkerPool,
+        slots: &mut [Option<ShardSlot>],
+        cq: &mut EventQueue<CoordEv>,
+        ticker: &mut Option<Ticker>,
+        horizon_ns: u64,
+    ) -> u64 {
+        let think_ns = self.source.pool().expect("closed loop implies pool").think_lookahead_ns();
+        let mut rounds = 0u64;
+        let mut fb: Vec<(u64, f64, bool)> = Vec::new();
+        loop {
+            self.drain_pool_feedback(slots, &mut fb);
+            if self.stream_done && done_total(slots) == self.arrived {
+                break;
+            }
+            let clients = self.source.pool().expect("closed loop implies pool");
+            let t_pool = clients.peek_ns();
+            let in_flight = clients.in_flight();
+            let t_known = match (t_pool, cq.next_event_ns()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            let t_safe = if in_flight > 0 {
+                slots
+                    .iter()
+                    .filter_map(|s| s.as_ref().expect("slot home").q.next_event_ns())
+                    .min()
+                    .map_or(u64::MAX, |t| t.saturating_add(think_ns))
+            } else {
+                u64::MAX
+            };
+            let w = t_known.unwrap_or(u64::MAX).min(t_safe);
+            if w > horizon_ns {
+                // Nothing — known or possible — arrives inside the
+                // horizon: one final inclusive round, drained afterwards
+                // so late completions still land in the session records.
+                run_round(pool, slots, horizon_ns.saturating_add(1), 0);
+                rounds += 1;
+                self.drain_pool_feedback(slots, &mut fb);
+                break;
+            }
+            run_round(pool, slots, w, 0);
+            rounds += 1;
+            // Drain placement is load-bearing: completions inside the
+            // round may have scheduled turns due exactly at `w`, and they
+            // must be in the pool before the bound event is handled.
+            self.drain_pool_feedback(slots, &mut fb);
+            let now = w as f64 / 1e9;
+            let mut routed_any = false;
+            loop {
+                let arrived = match self.source.pool_mut() {
+                    Some(p) => p.pop_due(w),
+                    None => None,
+                };
+                let Some(arrived) = arrived else { break };
+                routed_any = true;
+                if self.view_due() {
+                    refresh_shard_rows(
+                        &mut self.view.table,
+                        &mut self.view.residency,
+                        self.route_epoch,
+                        self.residency_deltas,
+                        &mut self.census_delta_ops,
+                        &mut self.census_union_keys,
+                        slots.iter_mut().map(|s| &mut s.as_mut().expect("slot home").shard),
+                    );
+                    self.seal_view(now);
+                }
+                let spec = arrived.spec;
+                let resident = resident_in_view(&self.view, &spec, |k| {
+                    slots.iter().any(|s| s.as_ref().expect("slot home").shard.feature_resident(k))
+                });
+                let (rid, route) = self.route_next(&spec, resident, now);
+                let r = self.inst_replica[route.target_instance()];
+                let slot = slots[r].as_mut().expect("slot home");
+                slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
+            }
+            if routed_any {
+                // A same-instant coordination event waits for the next
+                // iteration: arrival class strictly first, and the
+                // arrivals' follow-up shard events at `w` (if any) run in
+                // the interposed round, matching the single loop's merge.
+                continue;
+            }
+            if cq.next_event_ns() == Some(w) {
+                let (now, ev) = cq.pop_next().expect("coordination event due");
+                match ev {
+                    CoordEv::Tick => {
+                        let mut loads = Vec::with_capacity(self.inst_replica.len());
+                        for s in slots.iter() {
+                            s.as_ref().expect("slot home").shard.collect_loads(now, &mut loads);
+                        }
+                        if let Some(plan) = self.plan_reconfig(now, &loads) {
+                            let slot = slots[plan.replica].as_mut().expect("slot home");
+                            slot.shard.apply_switch(&plan, now, &mut slot.q);
+                            self.reconfigurer.as_mut().expect("controller").committed(now, &plan);
+                        }
+                        ticker.as_mut().expect("tick implies ticker").arm(cq, CoordEv::Tick);
+                    }
+                    CoordEv::Fault(idx) => {
+                        if let Some((replica, action)) = self.commit_fault(idx, now) {
+                            let slot = slots[replica].as_mut().expect("slot home");
+                            slot.shard.apply_fault(&action, now, &mut slot.q);
+                        }
+                    }
+                    CoordEv::Arrive(_) => {
+                        unreachable!("closed-loop runs seed no open-loop arrivals")
+                    }
+                }
+            }
+            // Otherwise the window was the safety bound alone: the shards
+            // advanced, feedback will be drained at the loop top, and the
+            // bounds are re-evaluated.
+        }
+        rounds
+    }
+
+    /// Drain every shard's completion log into the client pool and refresh
+    /// the termination flag — the sharded mirror of the single loop's
+    /// per-event `drain_feedback`. Shard-local log order is preserved and
+    /// cross-shard drain order is replica-major; both are immaterial to
+    /// the pool (per-client RNG lanes, heap ordered by `(at_ns, client)`),
+    /// which is what makes the feedback engine-invariant.
+    fn drain_pool_feedback(
+        &mut self,
+        slots: &mut [Option<ShardSlot>],
+        fb: &mut Vec<(u64, f64, bool)>,
+    ) {
+        for s in slots.iter_mut() {
+            s.as_mut().expect("slot home").shard.drain_completions(fb);
+        }
+        if !fb.is_empty() {
+            let p = self.source.pool_mut().expect("closed loop implies pool");
+            for (rid, t, gave_up) in fb.drain(..) {
+                p.on_result(rid, t, gave_up);
+            }
+        }
+        self.stream_done = self.source.pool().map_or(true, |p| p.exhausted());
     }
 }
 
@@ -690,6 +867,55 @@ mod tests {
         c.simulator.shard_threads = 1;
         let serial = ServingSim::streamed(c).unwrap().run_sharded();
         assert_eq!(a.metrics.records, serial.metrics.records);
+    }
+
+    #[test]
+    fn sharded_matches_single_loop_under_closed_loop_clients() {
+        let mut c = cfg("E-P-Dx2", 1.0, 8);
+        c.clients.enabled = true;
+        c.clients.clients = 8;
+        c.clients.turns = 3;
+        c.workload.image_fraction = 0.7;
+        let single = ServingSim::closed_loop(c.clone()).unwrap().run();
+        let sharded = ServingSim::closed_loop(c).unwrap().run_sharded();
+        assert_eq!(
+            single.metrics.records, sharded.metrics.records,
+            "closed-loop records must be bit-identical across engines"
+        );
+        let (rs, rh) = (single.closed_loop.unwrap(), sharded.closed_loop.unwrap());
+        assert_eq!(rs.sessions, rh.sessions, "session records");
+        assert_eq!(rs.concurrency, rh.concurrency, "achieved-concurrency series");
+        assert_eq!(rs.realized, rh.realized, "realized arrival traces");
+        assert_eq!(rs.issued, 24);
+        assert_eq!(rs.completed, 24);
+    }
+
+    #[test]
+    fn sharded_closed_loop_matches_under_session_affinity_and_faults() {
+        use crate::sim::faults::{FaultEvent, FaultKind};
+        let mut c = cfg("E-P-Dx2", 1.0, 8);
+        c.clients.enabled = true;
+        c.clients.clients = 10;
+        c.clients.turns = 4;
+        c.clients.think_mean_s = 1.0;
+        c.clients.think_min_s = 0.2;
+        c.scheduler.route_policy = "session_affinity".to_string();
+        c.workload.image_fraction = 0.8;
+        c.faults.events = vec![
+            FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 1 } },
+            FaultEvent { t: 8.0, kind: FaultKind::InstanceUp { inst: 1 } },
+        ];
+        let single = ServingSim::closed_loop(c.clone()).unwrap().run();
+        let sharded = ServingSim::closed_loop(c).unwrap().run_sharded();
+        assert_eq!(
+            single.metrics.records, sharded.metrics.records,
+            "closed loop + session_affinity + fault storm must stay bit-identical"
+        );
+        assert_eq!(single.faults_applied, sharded.faults_applied);
+        assert_eq!(
+            single.closed_loop.unwrap().sessions,
+            sharded.closed_loop.unwrap().sessions
+        );
     }
 
     #[test]

@@ -109,6 +109,7 @@ use crate::mmstore::StoreStats;
 use crate::npu::CostModel;
 use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::sim::faults::{FaultKind, FaultSchedule};
+use crate::workload::clients::{ClientPool, ClosedLoopReport};
 use crate::workload::injector::Arrival;
 use crate::workload::stream::ArrivalSource;
 use crate::workload::{ArrivedRequest, RequestSpec};
@@ -171,6 +172,10 @@ pub struct SimOutcome {
     /// Arrivals sampled inline at the merge/consume point (the serial
     /// residue; all of them for non-lane sources).
     pub arrivals_inline: u64,
+    /// Closed-loop client report ([`crate::workload::clients`]): per-turn
+    /// session records, the achieved-concurrency series, and the realized
+    /// arrival trace. `None` on every open-loop run.
+    pub closed_loop: Option<ClosedLoopReport>,
 }
 
 /// The serving simulation: per-replica shards plus the coordination state
@@ -225,6 +230,16 @@ pub struct ServingSim {
     pub(crate) arrived: usize,
     /// The source has no further arrivals.
     pub(crate) stream_done: bool,
+    /// The source is a closed-loop [`ClientPool`]: arrivals are endogenous
+    /// (completions feed back into think timers), shards log completions,
+    /// and the engines pull arrivals via `peek_ns`/`pop_due` instead of
+    /// `Iterator::next`.
+    pub(crate) closed_loop: bool,
+    /// Earliest `Ev::ClientWake` currently scheduled on the single loop's
+    /// queue (`None` = no useful wake armed). Completions that create an
+    /// earlier turn re-arm below it; stale higher wakes pop as harmless
+    /// no-ops.
+    pub(crate) wake_armed_ns: Option<u64>,
     /// Elastic re-provisioning controller (None when disabled).
     pub(crate) reconfigurer: Option<Reconfigurer>,
     /// Its epoch source.
@@ -290,6 +305,19 @@ impl ServingSim {
         Self::with_source(cfg, source)
     }
 
+    /// Build a closed-loop simulation driven by the `[clients]` session
+    /// pool ([`crate::workload::clients`]): arrivals are endogenous —
+    /// turn t+1 of a session is issued only after turn t completes and the
+    /// client's think timer expires — so `cfg.rate` and
+    /// `workload.num_requests` do not apply.
+    pub fn closed_loop(cfg: Config) -> Result<Self> {
+        if !cfg.clients.enabled {
+            bail!("ServingSim::closed_loop requires [clients] enabled = true");
+        }
+        let pool = ClientPool::new(&cfg.clients, &cfg.workload, &cfg.model.vit, cfg.seed);
+        Self::with_source(cfg, ArrivalSource::closed_loop(pool))
+    }
+
     /// Build a simulation from a config and any arrival source.
     pub fn with_source(cfg: Config, source: ArrivalSource) -> Result<Self> {
         let dep = Deployment::parse(&cfg.deployment)?;
@@ -320,11 +348,16 @@ impl ServingSim {
         // the Fresh view live-probes and no census exists to maintain).
         let residency_deltas = route_epoch > 1 && cfg.scheduler.residency_deltas;
         let shared = Arc::new(SimShared { cfg, cm, prefill_tok_s, encode_tok_s });
+        let closed_loop = source.pool().is_some();
         let mut shards = Vec::with_capacity(dep.replicas);
         for r in 0..dep.replicas {
             let mut shard = ReplicaShard::new(shared.clone(), &dep, r)?;
             if residency_deltas {
                 shard.enable_residency_log();
+            }
+            if closed_loop {
+                // Completions must feed the client pool's think timers.
+                shard.enable_completion_log();
             }
             shards.push(shard);
         }
@@ -356,6 +389,8 @@ impl ServingSim {
             last_arrival,
             arrived: 0,
             stream_done: false,
+            closed_loop,
+            wake_armed_ns: None,
             reconfigurer,
             ticker,
             faults,
@@ -379,9 +414,16 @@ impl ServingSim {
     /// engine and report.
     pub fn run(mut self) -> SimOutcome {
         let mut q = EventQueue::new();
-        match self.source.next() {
-            Some(first) => q.at_arrival(first.arrival, Ev::Arrive(first)),
-            None => self.stream_done = true,
+        if self.closed_loop {
+            // Endogenous arrivals: arm a wake at the pool's first pending
+            // turn instead of pulling from an iterator.
+            self.arm_wake(&mut q);
+            self.stream_done = self.source.pool().map_or(true, |p| p.exhausted());
+        } else {
+            match self.source.next() {
+                Some(first) => q.at_arrival(first.arrival, Ev::Arrive(first)),
+                None => self.stream_done = true,
+            }
         }
         if let Some(t) = &mut self.ticker {
             t.arm(&mut q, Ev::ReconfigTick);
@@ -487,6 +529,13 @@ impl ServingSim {
         self.note_route_staleness();
         let rid = self.arrived as u64;
         let route = self.route_one(spec, resident, now);
+        if let Some(s) = spec.session {
+            // Session directory: routing-order state, not epoch-scoped —
+            // both engines route arrivals in the identical order, so the
+            // pin a later turn reads is engine-invariant even between view
+            // refreshes (see `SessionDirectory`).
+            self.view.sessions.pin(s.id, self.inst_replica[route.target_instance()]);
+        }
         self.arrived += 1;
         (rid, route)
     }
@@ -616,6 +665,76 @@ impl ServingSim {
         }
     }
 
+    /// A client wake fired: issue every pool turn due at this instant.
+    /// Arrival-class ordering means due turns route before any coincident
+    /// control/normal event — the same tie order the sharded engine's
+    /// pool-priority bound selection reproduces. Stale wakes (a completion
+    /// re-armed an earlier one, or the due turns were already popped) fall
+    /// through the `pop_due` loop as no-ops; the trailing feedback drain
+    /// in [`SimModel::handle`] re-arms for whatever is pending next.
+    fn on_client_wake(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        self.wake_armed_ns = None;
+        let now_ns = q.now_ns();
+        loop {
+            let arrived = match self.source.pool_mut() {
+                Some(p) => p.pop_due(now_ns),
+                None => None,
+            };
+            let Some(arrived) = arrived else { break };
+            self.deliver_closed(arrived, now, q);
+        }
+    }
+
+    /// Route one closed-loop arrival: the [`Self::on_arrive`] recipe minus
+    /// the `source.next()` chaining (the pool schedules successors through
+    /// completion feedback, not iteration).
+    fn deliver_closed(&mut self, arrived: ArrivedRequest, now: f64, q: &mut EventQueue<Ev>) {
+        let spec = arrived.spec;
+        if self.view_due() {
+            self.refresh_view(now);
+        }
+        let resident = resident_in_view(&self.view, &spec, |k| {
+            self.shards.iter().any(|s| s.feature_resident(k))
+        });
+        let (rid, route) = self.route_next(&spec, resident, now);
+        let r = self.inst_replica[route.target_instance()];
+        self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+    }
+
+    /// Close the feedback loop after an event: drain every shard's
+    /// completion log into the pool's think timers, arm a wake for the new
+    /// earliest pending turn, and refresh the termination flag. Runs after
+    /// **every** single-loop event — completions are visible to the pool
+    /// before any later event executes, which is the ordering contract the
+    /// sharded engine's window bound (`think_lookahead`) is proven
+    /// against.
+    fn drain_feedback(&mut self, q: &mut EventQueue<Ev>) {
+        let mut buf = Vec::new();
+        for s in &mut self.shards {
+            s.drain_completions(&mut buf);
+        }
+        if !buf.is_empty() {
+            let pool = self.source.pool_mut().expect("closed loop implies pool");
+            for (rid, t, gave_up) in buf.drain(..) {
+                pool.on_result(rid, t, gave_up);
+            }
+        }
+        self.arm_wake(q);
+        self.stream_done = self.source.pool().map_or(true, |p| p.exhausted());
+    }
+
+    /// Schedule an arrival-class `ClientWake` at the pool's earliest
+    /// pending turn unless one is already armed at or below it.
+    fn arm_wake(&mut self, q: &mut EventQueue<Ev>) {
+        let Some(h) = self.source.pool().and_then(|p| p.peek_ns()) else { return };
+        if self.wake_armed_ns.map_or(true, |armed| h < armed) {
+            // ns → s → ns round-trips exactly on the sub-2^53 grid, so the
+            // wake pops at precisely `h`.
+            q.at_arrival(h as f64 / 1e9, Ev::ClientWake);
+            self.wake_armed_ns = Some(h);
+        }
+    }
+
     /// One controller epoch: snapshot per-instance load from every shard,
     /// ask the [`Reconfigurer`] for a plan, execute it on the owning
     /// shard, re-arm the ticker.
@@ -656,7 +775,9 @@ impl ServingSim {
             // per-shard queues (the single loop routes at the arrival
             // event itself), but the mapping is well-defined regardless.
             Ev::Deliver { route, .. } => self.inst_replica[route.target_instance()],
-            Ev::Arrive(_) | Ev::ReconfigTick | Ev::Fault(_) => unreachable!("coordination event"),
+            Ev::Arrive(_) | Ev::ClientWake | Ev::ReconfigTick | Ev::Fault(_) => {
+                unreachable!("coordination event")
+            }
         }
     }
 
@@ -691,6 +812,7 @@ impl ServingSim {
         for s in &self.shards {
             store_stats.absorb(&s.store_stats());
         }
+        let closed_loop = self.source.pool_mut().map(|p| p.take_report());
         // Coordinator-serial-fraction accounting: with a lane-split source,
         // arrivals buffered by `LaneFeed::fill` ahead of the merge were
         // sampled off the serial path (on shard workers in the sharded
@@ -718,6 +840,7 @@ impl ServingSim {
             census_union_keys: self.census_union_keys,
             arrivals_presampled,
             arrivals_inline,
+            closed_loop,
         }
     }
 }
@@ -828,12 +951,16 @@ impl SimModel for ServingSim {
     fn handle(&mut self, now: f64, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
             Ev::Arrive(arrived) => self.on_arrive(arrived, now, q),
+            Ev::ClientWake => self.on_client_wake(now, q),
             Ev::ReconfigTick => self.on_reconfig_tick(now, q),
             Ev::Fault(idx) => self.on_fault(idx, now, q),
             other => {
                 let r = self.replica_of(&other);
                 self.shards[r].handle(now, other, q);
             }
+        }
+        if self.closed_loop {
+            self.drain_feedback(q);
         }
     }
 
@@ -847,7 +974,11 @@ impl SimModel for ServingSim {
 /// materializing the trace first — see `tests/determinism_golden.rs` — with
 /// O(in-flight) memory.)
 pub fn run_serving(cfg: &Config) -> Result<SimOutcome> {
-    let sim = ServingSim::streamed(cfg.clone())?;
+    let sim = if cfg.clients.enabled {
+        ServingSim::closed_loop(cfg.clone())?
+    } else {
+        ServingSim::streamed(cfg.clone())?
+    };
     Ok(if cfg.simulator.sharded { sim.run_sharded() } else { sim.run() })
 }
 
@@ -897,6 +1028,52 @@ mod tests {
         assert_eq!(a.events_processed, b.events_processed);
         assert_eq!(a.fused_decode_steps, b.fused_decode_steps);
         assert_eq!(a.fused_batch_kicks, b.fused_batch_kicks);
+    }
+
+    #[test]
+    fn closed_loop_completes_every_issued_turn() {
+        let mut cfg = quick_cfg("E-P-D", 1.0, 8);
+        cfg.clients.enabled = true;
+        cfg.clients.clients = 4;
+        cfg.clients.turns = 3;
+        cfg.clients.think_mean_s = 0.5;
+        cfg.clients.think_min_s = 0.1;
+        let out = run_serving(&cfg).unwrap();
+        let report = out.closed_loop.expect("closed-loop runs carry a report");
+        assert_eq!(report.issued, 12, "4 clients x 1 session x 3 turns");
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.gave_up, 0);
+        assert_eq!(out.metrics.completed(), 12);
+        assert!(out.metrics.records.iter().all(|r| r.session.is_some()));
+        // Turn t+1 never arrives before turn t finished + the think floor.
+        for s in &report.sessions {
+            assert_eq!(s.turns_issued, 3);
+            assert_eq!(s.turns_completed, 3);
+            assert!(s.last_finish > s.first_issue);
+        }
+        // Feedback is live: with 4 clients the achieved concurrency never
+        // exceeds the client count.
+        let mut live = 0i64;
+        for &(_, d, _) in &report.concurrency {
+            live += d as i64;
+            assert!(live >= 0 && live <= 4, "concurrency walk out of range: {live}");
+        }
+        assert_eq!(live, 0, "every issued turn eventually completed");
+    }
+
+    #[test]
+    fn closed_loop_report_is_deterministic() {
+        let mut cfg = quick_cfg("(E-PD)x2", 1.0, 8);
+        cfg.clients.enabled = true;
+        cfg.clients.clients = 6;
+        cfg.clients.turns = 2;
+        let a = run_serving(&cfg).unwrap();
+        let b = run_serving(&cfg).unwrap();
+        assert_eq!(a.metrics.records, b.metrics.records);
+        let (ra, rb) = (a.closed_loop.unwrap(), b.closed_loop.unwrap());
+        assert_eq!(ra.sessions, rb.sessions);
+        assert_eq!(ra.concurrency, rb.concurrency);
+        assert_eq!(ra.realized, rb.realized);
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Closed-loop session clients: feedback-driven workload generation.
+//!
+//! Open-loop traces (Poisson/phased arrival lists) never react to backlog —
+//! a saturated cluster keeps receiving the scripted rate, which real users
+//! would never sustain. This module models N clients that each run
+//! multi-turn sessions: issue a request, **wait for its completion**, think
+//! for a while, then issue the next turn. Offered load is therefore
+//! endogenous: when the cluster slows down (or an instance dies, PR 6),
+//! clients stall and the arrival rate drops; when it recovers, the backlog
+//! of thinking clients surges back — the feedback witness
+//! `benches/closed_loop.rs` pins.
+//!
+//! Determinism contract (the part every engine shares):
+//!
+//! - Each client draws from its own RNG lane ([`Rng::with_lane`] on the
+//!   [`CLIENT_STREAM`] family), so the order in which *different* clients'
+//!   completions are observed cannot perturb any draw — a client's draw
+//!   sequence depends only on its own completion times, which are
+//!   engine-invariant simulated timestamps.
+//! - Ready turns are issued in `(arrival_ns, client)` order and request ids
+//!   are assigned **at issue**, so id order == arrival order == routing
+//!   order, exactly like an open-loop trace.
+//! - Per-session aggregates are totally ordered by the session's own serial
+//!   turns; the concurrency time series is canonically re-sorted from
+//!   `(t_ns, delta, id)` deltas at report time, because engines drain
+//!   completions in different (but multiset-equal) orders.
+//!
+//! PR 7's per-replica arrival presampling does **not** apply here: the next
+//! arrival is unknowable until a completion happens, so closed-loop sources
+//! report no lanes and the sharded engine treats every closed-loop arrival
+//! as a coordination barrier (see `docs/ARCHITECTURE.md`).
+
+use crate::config::{ClientsSpec, EnvelopePoint, VitDesc, WorkloadSpec};
+use crate::sim::engine::sec_to_ns;
+use crate::util::rng::{Rng, ZipfTable};
+use crate::workload::{
+    image_pool, sample_image, sample_text_tokens, ArrivedRequest, ImageInput, RequestSpec,
+    SessionRef,
+};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// RNG stream family for client think/shape draws; lane = client index.
+pub(crate) const CLIENT_STREAM: u64 = 0xc11e;
+
+/// Target active clients at time `t_s` (piecewise-linear between knots,
+/// constant beyond either end). An empty envelope admits everyone.
+pub(crate) fn envelope_active_at(env: &[EnvelopePoint], t_s: f64) -> f64 {
+    let Some(first) = env.first() else { return f64::INFINITY };
+    if t_s <= first.t {
+        return first.active;
+    }
+    for w in env.windows(2) {
+        let (p, q) = (w[0], w[1]);
+        if t_s <= q.t {
+            return p.active + (q.active - p.active) * (t_s - p.t) / (q.t - p.t);
+        }
+    }
+    env.last().unwrap().active
+}
+
+/// Earliest `t_ns >= from_ns` at which the envelope admits a client whose
+/// admission threshold is `threshold` (client index + 1), or `None` if the
+/// envelope never recovers (the client parks permanently). Gating only ever
+/// **delays** an arrival — the returned time is clamped to `from_ns`.
+pub(crate) fn envelope_admit_ns(
+    env: &[EnvelopePoint],
+    from_ns: u64,
+    threshold: f64,
+) -> Option<u64> {
+    if env.is_empty() {
+        return Some(from_ns);
+    }
+    let from_s = from_ns as f64 / 1e9;
+    if envelope_active_at(env, from_s) >= threshold {
+        return Some(from_ns);
+    }
+    for w in env.windows(2) {
+        let (p, q) = (w[0], w[1]);
+        if q.t <= from_s {
+            continue;
+        }
+        let t0 = p.t.max(from_s);
+        let a0 = p.active + (q.active - p.active) * (t0 - p.t) / (q.t - p.t);
+        if a0 >= threshold {
+            return Some(sec_to_ns(t0).max(from_ns));
+        }
+        if q.active >= threshold {
+            // The segment rises through the threshold: linear crossing.
+            let tc = p.t + (threshold - p.active) / (q.active - p.active) * (q.t - p.t);
+            return Some(sec_to_ns(tc.max(t0)).max(from_ns));
+        }
+    }
+    let last = env.last().unwrap();
+    if last.active >= threshold {
+        Some(sec_to_ns(last.t).max(from_ns))
+    } else {
+        None
+    }
+}
+
+/// One client's serial state. Exactly one turn of one session is ever
+/// pending or in flight per client.
+#[derive(Debug)]
+struct Client {
+    rng: Rng,
+    /// Current session index within the client (`< spec.sessions`).
+    session: usize,
+    /// Current turn within the session (`< spec.turns`).
+    turn: u32,
+    /// The session's image, drawn once at session start and reused by every
+    /// turn — the cross-turn MM-Store/affinity locality the issue asks for.
+    image: Option<ImageInput>,
+    /// All sessions finished, or parked forever by the envelope.
+    done: bool,
+}
+
+/// A scheduled next turn, ordered by `(arrival_ns, client)` — the
+/// engine-invariant issue order.
+#[derive(Debug)]
+struct PendingTurn {
+    at_ns: u64,
+    client: usize,
+    spec: RequestSpec,
+}
+
+impl PartialEq for PendingTurn {
+    fn eq(&self, o: &Self) -> bool {
+        self.at_ns == o.at_ns && self.client == o.client
+    }
+}
+impl Eq for PendingTurn {}
+impl PartialOrd for PendingTurn {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for PendingTurn {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.at_ns, self.client).cmp(&(o.at_ns, o.client))
+    }
+}
+
+/// Per-session aggregate record, indexed by session uid
+/// (`client × sessions_per_client + session`). Each session's turns are
+/// serial, so these update in a total order regardless of engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionRecord {
+    pub client: usize,
+    pub session: usize,
+    /// The session image's content key (`None` = text-only session).
+    pub image_key: Option<u64>,
+    pub turns_issued: u32,
+    pub turns_completed: u32,
+    pub turns_gave_up: u32,
+    /// First turn's arrival (`f64::INFINITY` if the session never started).
+    pub first_issue: f64,
+    /// Last observed completion (`f64::NEG_INFINITY` if none yet).
+    pub last_finish: f64,
+}
+
+/// What a closed-loop run hands back alongside the usual request records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClosedLoopReport {
+    pub issued: u64,
+    pub completed: u64,
+    pub gave_up: u64,
+    pub sessions: Vec<SessionRecord>,
+    /// Achieved-concurrency deltas `(t_ns, ±1, request id)`, canonically
+    /// sorted — a prefix sum yields the in-flight time series.
+    pub concurrency: Vec<(u64, i32, u64)>,
+    /// The realized arrival timeline, replayable as an open-loop
+    /// `ArrivalSource::replay` trace (the debugging escape hatch).
+    pub realized: Vec<ArrivedRequest>,
+}
+
+/// The closed-loop client pool. Owns every client's state plus the pending
+/// heap of already-scheduled next turns; the serving engines pull due
+/// arrivals with [`ClientPool::pop_due`] and feed completions back with
+/// [`ClientPool::on_result`].
+#[derive(Debug)]
+pub struct ClientPool {
+    spec: ClientsSpec,
+    workload: WorkloadSpec,
+    vit: VitDesc,
+    zipf: ZipfTable,
+    seed: u64,
+    clients: Vec<Client>,
+    pending: BinaryHeap<Reverse<PendingTurn>>,
+    /// request id → client index, for routing completions back.
+    in_flight: HashMap<u64, usize>,
+    next_id: u64,
+    issued: u64,
+    completed: u64,
+    gave_up: u64,
+    realized: Vec<ArrivedRequest>,
+    sessions: Vec<SessionRecord>,
+    /// Raw `(t_ns, delta, id)` events in drain order (canonicalized on
+    /// report — see module docs).
+    conc_events: Vec<(u64, i32, u64)>,
+}
+
+impl ClientPool {
+    pub fn new(spec: &ClientsSpec, workload: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Self {
+        let total_sessions = spec.clients * spec.sessions;
+        // Image identity pool sized like the open-loop generator's, but per
+        // *session* (each session draws one image all its turns reuse).
+        let mut wl = workload.clone();
+        wl.num_requests = total_sessions;
+        let zipf = image_pool(&wl);
+        let sessions = (0..total_sessions)
+            .map(|uid| SessionRecord {
+                client: uid / spec.sessions,
+                session: uid % spec.sessions,
+                image_key: None,
+                turns_issued: 0,
+                turns_completed: 0,
+                turns_gave_up: 0,
+                first_issue: f64::INFINITY,
+                last_finish: f64::NEG_INFINITY,
+            })
+            .collect();
+        let mut pool = Self {
+            spec: spec.clone(),
+            workload: wl,
+            vit: vit.clone(),
+            zipf,
+            seed,
+            clients: Vec::with_capacity(spec.clients),
+            pending: BinaryHeap::new(),
+            in_flight: HashMap::new(),
+            next_id: 0,
+            issued: 0,
+            completed: 0,
+            gave_up: 0,
+            realized: Vec::new(),
+            sessions,
+            conc_events: Vec::new(),
+        };
+        for c in 0..spec.clients {
+            pool.clients.push(Client {
+                rng: Rng::with_lane(seed, CLIENT_STREAM, c as u64),
+                session: 0,
+                turn: 0,
+                image: None,
+                done: false,
+            });
+            // A client joins when the envelope first admits it, then thinks
+            // before its first query (spreading the initial wave).
+            match envelope_admit_ns(&pool.spec.envelope, 0, (c + 1) as f64) {
+                Some(wake_ns) => {
+                    pool.start_session(c);
+                    pool.schedule_turn(c, wake_ns as f64 / 1e9);
+                }
+                None => pool.clients[c].done = true,
+            }
+        }
+        pool
+    }
+
+    /// Draw the new current session's image and stamp its record.
+    fn start_session(&mut self, c: usize) {
+        let cl = &mut self.clients[c];
+        cl.image = sample_image(&mut cl.rng, &self.workload, &self.vit, &self.zipf, self.seed);
+        let uid = c * self.spec.sessions + cl.session;
+        self.sessions[uid].image_key = cl.image.map(|i| i.key);
+    }
+
+    /// Draw this turn's text length and think time, then push the turn onto
+    /// the pending heap at `base_s + think`, envelope-gated. A client the
+    /// envelope never re-admits is parked for good (its remaining turns are
+    /// simply never issued — that is what keeps runs terminating).
+    fn schedule_turn(&mut self, c: usize, base_s: f64) {
+        let uid = (c * self.spec.sessions + self.clients[c].session) as u64;
+        let turn = self.clients[c].turn;
+        let cl = &mut self.clients[c];
+        let text_tokens = sample_text_tokens(&mut cl.rng, &self.workload);
+        let extra = self.spec.think_mean_s - self.spec.think_min_s;
+        let think = if extra > 0.0 {
+            self.spec.think_min_s + cl.rng.exp(1.0 / extra)
+        } else {
+            self.spec.think_min_s
+        };
+        let image = cl.image;
+        let candidate_ns = sec_to_ns(base_s + think);
+        match envelope_admit_ns(&self.spec.envelope, candidate_ns, (c + 1) as f64) {
+            Some(at_ns) => self.pending.push(Reverse(PendingTurn {
+                at_ns,
+                client: c,
+                spec: RequestSpec {
+                    id: 0, // assigned at issue so id order == arrival order
+                    image,
+                    text_tokens,
+                    output_tokens: self.workload.output_tokens,
+                    session: Some(SessionRef { id: uid, turn }),
+                },
+            })),
+            None => self.clients[c].done = true,
+        }
+    }
+
+    /// Earliest scheduled next-turn arrival, if any.
+    pub fn peek_ns(&self) -> Option<u64> {
+        self.pending.peek().map(|Reverse(p)| p.at_ns)
+    }
+
+    /// Issue the head turn if it is due at `now_ns`. Callers loop until
+    /// `None` to drain all same-instant arrivals in `(t, client)` order.
+    pub fn pop_due(&mut self, now_ns: u64) -> Option<ArrivedRequest> {
+        if self.pending.peek().map(|Reverse(p)| p.at_ns)? > now_ns {
+            return None;
+        }
+        let Reverse(mut p) = self.pending.pop().unwrap();
+        p.spec.id = self.next_id;
+        self.next_id += 1;
+        self.issued += 1;
+        self.in_flight.insert(p.spec.id, p.client);
+        self.conc_events.push((p.at_ns, 1, p.spec.id));
+        let uid = p.spec.session.unwrap().id as usize;
+        let arrival = p.at_ns as f64 / 1e9;
+        self.sessions[uid].turns_issued += 1;
+        if arrival < self.sessions[uid].first_issue {
+            self.sessions[uid].first_issue = arrival;
+        }
+        let req = ArrivedRequest { spec: p.spec, arrival };
+        self.realized.push(req);
+        Some(req)
+    }
+
+    /// Feed a completion (or a PR 6 give-up) back: advance the client's
+    /// session/turn cursor and schedule its next turn. Give-ups advance the
+    /// session like completions — the client retries with its *next* turn,
+    /// which is what produces the post-recovery surge.
+    pub fn on_result(&mut self, rid: u64, t_finish: f64, gave_up: bool) {
+        let c = self
+            .in_flight
+            .remove(&rid)
+            .expect("closed-loop completion for a request the pool never issued");
+        self.conc_events.push((sec_to_ns(t_finish), -1, rid));
+        let uid = c * self.spec.sessions + self.clients[c].session;
+        if gave_up {
+            self.gave_up += 1;
+            self.sessions[uid].turns_gave_up += 1;
+        } else {
+            self.completed += 1;
+            self.sessions[uid].turns_completed += 1;
+        }
+        if t_finish > self.sessions[uid].last_finish {
+            self.sessions[uid].last_finish = t_finish;
+        }
+        self.clients[c].turn += 1;
+        if self.clients[c].turn as usize >= self.spec.turns {
+            self.clients[c].turn = 0;
+            self.clients[c].session += 1;
+            if self.clients[c].session >= self.spec.sessions {
+                self.clients[c].done = true;
+                return;
+            }
+            self.start_session(c);
+        }
+        self.schedule_turn(c, t_finish);
+    }
+
+    /// No arrival will ever come again: nothing pending, nothing in flight
+    /// (every non-done client always has exactly one of the two).
+    pub fn exhausted(&self) -> bool {
+        self.pending.is_empty() && self.in_flight.is_empty()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    /// Conservative bound on how soon *any* completion can feed back a new
+    /// arrival: the validated think floor, minus slack for the two
+    /// independent `sec_to_ns` roundings on either side of the sum.
+    pub fn think_lookahead_ns(&self) -> u64 {
+        sec_to_ns(self.spec.think_min_s).saturating_sub(2).max(1)
+    }
+
+    /// Generous horizon estimate for engine run-until arithmetic (the pool
+    /// itself ends runs via [`ClientPool::exhausted`], never the horizon).
+    pub fn horizon_hint(&self) -> f64 {
+        let env_end = self.spec.envelope.last().map_or(0.0, |p| p.t);
+        let per_turn = self.spec.think_mean_s + 60.0;
+        env_end + (self.spec.sessions * self.spec.turns) as f64 * per_turn + 3600.0
+    }
+
+    /// Upper bound on requests the pool can issue.
+    pub fn len_total(&self) -> usize {
+        self.spec.clients * self.spec.sessions * self.spec.turns
+    }
+
+    /// Extract the run's report, canonicalizing the concurrency series (the
+    /// raw drain order is engine-dependent; the multiset is not).
+    pub fn take_report(&mut self) -> ClosedLoopReport {
+        let mut concurrency = std::mem::take(&mut self.conc_events);
+        concurrency.sort_unstable();
+        ClosedLoopReport {
+            issued: self.issued,
+            completed: self.completed,
+            gave_up: self.gave_up,
+            sessions: std::mem::take(&mut self.sessions),
+            concurrency,
+            realized: std::mem::take(&mut self.realized),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelDesc;
+
+    fn vit() -> VitDesc {
+        ModelDesc::openpangu_7b_vl().vit
+    }
+
+    fn spec(clients: usize, sessions: usize, turns: usize) -> ClientsSpec {
+        ClientsSpec {
+            enabled: true,
+            clients,
+            sessions,
+            turns,
+            think_mean_s: 0.5,
+            think_min_s: 0.01,
+            envelope: vec![],
+        }
+    }
+
+    /// Drive a pool with an ideal server: every issued turn completes a
+    /// fixed service time later. Returns the realized arrivals.
+    fn drive(pool: &mut ClientPool, service_s: f64) -> Vec<ArrivedRequest> {
+        let mut log: Vec<ArrivedRequest> = Vec::new();
+        let mut finishing: std::collections::BinaryHeap<Reverse<(u64, u64)>> =
+            std::collections::BinaryHeap::new();
+        while !pool.exhausted() {
+            let t_arr = pool.peek_ns();
+            let t_fin = finishing.peek().map(|Reverse((t, _))| *t);
+            // Completions strictly before the next arrival feed back first.
+            if let Some(tf) = t_fin {
+                if t_arr.map_or(true, |ta| tf <= ta) {
+                    let Reverse((t, rid)) = finishing.pop().unwrap();
+                    pool.on_result(rid, t as f64 / 1e9, false);
+                    continue;
+                }
+            }
+            let now = t_arr.expect("pool not exhausted but nothing pending");
+            while let Some(req) = pool.pop_due(now) {
+                finishing.push(Reverse((sec_to_ns(req.arrival + service_s), req.spec.id)));
+                log.push(req);
+            }
+        }
+        log
+    }
+
+    #[test]
+    fn empty_envelope_admits_everyone_immediately() {
+        assert_eq!(envelope_admit_ns(&[], 42, 1e9), Some(42));
+        assert!(envelope_active_at(&[], 0.0).is_infinite());
+    }
+
+    #[test]
+    fn envelope_interpolates_and_solves_crossings() {
+        let env = [
+            EnvelopePoint { t: 10.0, active: 0.0 },
+            EnvelopePoint { t: 20.0, active: 100.0 },
+            EnvelopePoint { t: 30.0, active: 0.0 },
+        ];
+        assert_eq!(envelope_active_at(&env, 0.0), 0.0, "constant before first knot");
+        assert_eq!(envelope_active_at(&env, 15.0), 50.0);
+        assert_eq!(envelope_active_at(&env, 40.0), 0.0, "constant after last knot");
+        // Client 49 (threshold 50) is admitted exactly halfway up the ramp.
+        assert_eq!(envelope_admit_ns(&env, 0, 50.0), Some(sec_to_ns(15.0)));
+        // Already inside the admitted window: no delay.
+        assert_eq!(envelope_admit_ns(&env, sec_to_ns(16.0), 50.0), Some(sec_to_ns(16.0)));
+        // Past the ramp-down the envelope never recovers: parked forever.
+        assert_eq!(envelope_admit_ns(&env, sec_to_ns(26.0), 50.0), None);
+        // Threshold above the peak is never admitted at all.
+        assert_eq!(envelope_admit_ns(&env, 0, 101.0), None);
+    }
+
+    #[test]
+    fn conservation_every_issued_turn_completes() {
+        let mut pool = ClientPool::new(&spec(8, 2, 3), &WorkloadSpec::sharegpt4o(), &vit(), 7);
+        let total = pool.len_total() as u64;
+        let log = drive(&mut pool, 0.2);
+        let report = pool.take_report();
+        assert_eq!(report.issued, total, "no envelope: every turn issues");
+        assert_eq!(report.completed, total);
+        assert_eq!(report.gave_up, 0);
+        assert_eq!(log.len(), total as usize);
+        // Ids are assigned in arrival order, densely.
+        for (i, r) in log.iter().enumerate() {
+            assert_eq!(r.spec.id, i as u64);
+            assert!(i == 0 || log[i - 1].arrival <= r.arrival);
+        }
+        // Concurrency deltas balance out and are time-sorted.
+        assert_eq!(report.concurrency.len(), 2 * total as usize);
+        assert_eq!(report.concurrency.iter().map(|&(_, d, _)| d as i64).sum::<i64>(), 0);
+        assert!(report.concurrency.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn sessions_reuse_one_image_key_across_turns() {
+        let mut pool = ClientPool::new(&spec(6, 2, 4), &WorkloadSpec::sharegpt4o(), &vit(), 3);
+        let log = drive(&mut pool, 0.1);
+        let report = pool.take_report();
+        // ShareGPT-4o is fully multimodal: every session has a key, and
+        // every turn of a session carries exactly that key.
+        for req in &log {
+            let s = req.spec.session.unwrap();
+            let key = report.sessions[s.id as usize].image_key;
+            assert_eq!(req.spec.image.map(|i| i.key), key, "turn must reuse its session's image");
+        }
+        for rec in &report.sessions {
+            assert_eq!(rec.turns_issued, 4);
+            assert_eq!(rec.turns_completed, 4);
+            assert!(rec.first_issue.is_finite() && rec.last_finish.is_finite());
+        }
+        // Distinct sessions draw (mostly) distinct keys — it is the session,
+        // not the pool, that pins the image.
+        let distinct: std::collections::HashSet<_> =
+            report.sessions.iter().map(|r| r.image_key).collect();
+        assert!(distinct.len() > 1);
+    }
+
+    #[test]
+    fn feedback_is_deterministic_across_runs() {
+        let wl = WorkloadSpec::visualwebinstruct();
+        let mut a = ClientPool::new(&spec(10, 1, 5), &wl, &vit(), 11);
+        let mut b = ClientPool::new(&spec(10, 1, 5), &wl, &vit(), 11);
+        assert_eq!(drive(&mut a, 0.3), drive(&mut b, 0.3));
+        assert_eq!(a.take_report(), b.take_report());
+    }
+
+    #[test]
+    fn slower_service_defers_arrivals() {
+        // The closed-loop signature: the same pool under a slower server
+        // produces a later arrival timeline (open-loop traces cannot).
+        let wl = WorkloadSpec::sharegpt4o();
+        let mut fast = ClientPool::new(&spec(4, 1, 4), &wl, &vit(), 5);
+        let mut slow = ClientPool::new(&spec(4, 1, 4), &wl, &vit(), 5);
+        let tf: f64 = drive(&mut fast, 0.1).iter().map(|r| r.arrival).sum();
+        let ts: f64 = drive(&mut slow, 2.0).iter().map(|r| r.arrival).sum();
+        assert!(ts > tf, "slower completions must delay subsequent turns: {ts} vs {tf}");
+    }
+
+    #[test]
+    fn envelope_parks_clients_beyond_target() {
+        let mut s = spec(8, 1, 3);
+        // Only 2 clients ever admitted; the envelope never rises above 2.
+        s.envelope = vec![
+            EnvelopePoint { t: 0.0, active: 2.0 },
+            EnvelopePoint { t: 1000.0, active: 2.0 },
+        ];
+        let mut pool = ClientPool::new(&s, &WorkloadSpec::sharegpt4o(), &vit(), 9);
+        let log = drive(&mut pool, 0.1);
+        let report = pool.take_report();
+        assert_eq!(report.issued, 2 * 3, "only clients 0 and 1 issue turns");
+        assert!(log.iter().all(|r| (r.spec.session.unwrap().id as usize) < 2));
+        // Parked clients' sessions exist but never started.
+        for rec in report.sessions.iter().filter(|r| r.client >= 2) {
+            assert_eq!(rec.turns_issued, 0);
+            assert!(rec.first_issue.is_infinite());
+        }
+    }
+
+    #[test]
+    fn think_floor_separates_completion_and_next_arrival() {
+        let mut s = spec(3, 1, 4);
+        s.think_min_s = 0.05;
+        s.think_mean_s = 0.05; // constant think: exercises the no-exp path
+        let mut pool = ClientPool::new(&s, &WorkloadSpec::visualwebinstruct(), &vit(), 2);
+        let log = drive(&mut pool, 0.2);
+        let report = pool.take_report();
+        assert_eq!(report.issued, 12);
+        // Within a session, consecutive arrivals are >= service + think apart.
+        let mut by_session: HashMap<u64, Vec<f64>> = HashMap::new();
+        for r in &log {
+            by_session.entry(r.spec.session.unwrap().id).or_default().push(r.arrival);
+        }
+        for arrivals in by_session.values() {
+            for w in arrivals.windows(2) {
+                assert!(w[1] - w[0] >= 0.2 + 0.05 - 1e-9, "gap {} too small", w[1] - w[0]);
+            }
+        }
+        assert!(pool.think_lookahead_ns() >= 1);
+        assert!(pool.think_lookahead_ns() <= sec_to_ns(0.05));
+    }
+
+    #[test]
+    fn horizon_hint_covers_the_driven_run() {
+        let mut pool = ClientPool::new(&spec(5, 2, 3), &WorkloadSpec::sharegpt4o(), &vit(), 4);
+        let hint = pool.horizon_hint();
+        let log = drive(&mut pool, 0.5);
+        assert!(log.iter().all(|r| r.arrival < hint));
+    }
+}

@@ -6,6 +6,7 @@
 //! resolution → visual-token count, text length), which
 //! [`crate::config::WorkloadSpec`] captures and [`generate`] samples.
 
+pub mod clients;
 pub mod injector;
 pub mod phases;
 pub mod stream;
@@ -31,6 +32,17 @@ pub struct ImageInput {
     pub visual_tokens: usize,
 }
 
+/// Which multi-turn session (and which turn of it) a request belongs to.
+/// Carried on [`RequestSpec`] by the closed-loop client pool
+/// ([`clients::ClientPool`]); open-loop requests have no session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionRef {
+    /// Pool-wide session id (`client × sessions_per_client + session`).
+    pub id: u64,
+    /// Zero-based turn index within the session.
+    pub turn: u32,
+}
+
 /// One inference request, before arrival-time assignment.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestSpec {
@@ -38,6 +50,9 @@ pub struct RequestSpec {
     pub image: Option<ImageInput>,
     pub text_tokens: usize,
     pub output_tokens: usize,
+    /// Multi-turn session membership (closed-loop workloads only; `None`
+    /// for every open-loop request, keeping those paths byte-identical).
+    pub session: Option<SessionRef>,
 }
 
 impl RequestSpec {
@@ -100,8 +115,25 @@ pub(crate) fn sample_spec(
     zipf: &ZipfTable,
     seed: u64,
 ) -> RequestSpec {
+    let image = sample_image(rng, spec, vit, zipf, seed);
+    let text_tokens = sample_text_tokens(rng, spec);
+    RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens, session: None }
+}
+
+/// Draw a request's (optional) image: presence by `image_fraction`, identity
+/// by the Zipf pool, resolution fixed or id-derived jitter. Split out of
+/// [`sample_spec`] so the closed-loop client pool can draw one image per
+/// *session* (every turn then reuses the same content key — real cross-turn
+/// MM-Store locality) while keeping the exact open-loop draw order.
+pub(crate) fn sample_image(
+    rng: &mut Rng,
+    spec: &WorkloadSpec,
+    vit: &VitDesc,
+    zipf: &ZipfTable,
+    seed: u64,
+) -> Option<ImageInput> {
     let has_image = rng.chance(spec.image_fraction);
-    let image = if has_image {
+    if has_image {
         let image_id = zipf.sample(rng);
         let (w, h) = if spec.fixed_resolution {
             (spec.image_width, spec.image_height)
@@ -122,12 +154,16 @@ pub(crate) fn sample_spec(
         Some(ImageInput { width: w, height: h, key, visual_tokens })
     } else {
         None
-    };
-    // Text length: log-normal with the dataset mean, ≥1 token.
+    }
+}
+
+/// Draw a request's text length: log-normal with the dataset mean, ≥1
+/// token. Redrawn per *turn* by the closed-loop pool (fresh prompt text
+/// each turn, same session image).
+pub(crate) fn sample_text_tokens(rng: &mut Rng, spec: &WorkloadSpec) -> usize {
     let sigma: f64 = 0.6;
     let mu = spec.text_tokens_mean.ln() - sigma * sigma / 2.0;
-    let text_tokens = rng.lognormal(mu, sigma).round().max(1.0) as usize;
-    RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens }
+    rng.lognormal(mu, sigma).round().max(1.0) as usize
 }
 
 #[cfg(test)]

@@ -11,6 +11,13 @@
 //! ([`crate::coordinator::reconfig`]) has something to win.
 //!
 //! Deterministic under the seed, like every other generator in this crate.
+//!
+//! These arrivals are **open-loop** — the scripted rate never reacts to
+//! backlog. The closed-loop counterpart is [`crate::workload::clients`]
+//! (completion-driven multi-turn sessions); [`PhasePlan::activation_envelope`]
+//! bridges the two by projecting a plan's offered-load shape onto the
+//! `[clients]` activation envelope, so the same diurnal scenario can be run
+//! both ways.
 
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::rng::{Rng, ZipfTable};
@@ -100,6 +107,46 @@ impl PhasePlan {
     pub fn expected_requests(&self) -> usize {
         let per_cycle: f64 = self.phases.iter().map(|p| p.rate * p.duration_s).sum();
         (per_cycle * self.cycles as f64).round() as usize
+    }
+
+    /// Project the plan's offered-load shape onto a closed-loop activation
+    /// envelope ([`crate::config::EnvelopePoint`], the `[clients]` knob):
+    /// each phase targets `clients × rate / peak_rate` active clients, held
+    /// flat for the phase with a short linear ramp (1 % of the phase, at
+    /// most 1 s) into the next level so knot times stay strictly
+    /// increasing, as the config validator requires. An open-loop phase
+    /// scenario replayed closed-loop keeps its diurnal shape even though
+    /// each individual arrival becomes completion-driven
+    /// ([`crate::workload::clients`]).
+    pub fn activation_envelope(&self, clients: usize) -> Vec<crate::config::EnvelopePoint> {
+        use crate::config::EnvelopePoint;
+        let peak = self.phases.iter().map(|p| p.rate).fold(0.0_f64, f64::max);
+        if peak <= 0.0 {
+            return Vec::new();
+        }
+        let mut env: Vec<EnvelopePoint> = Vec::with_capacity(self.phases.len() * self.cycles * 2);
+        let mut push = |env: &mut Vec<EnvelopePoint>, t: f64, active: f64| {
+            if env.last().map_or(true, |p| t > p.t) {
+                env.push(EnvelopePoint { t, active });
+            }
+        };
+        let total = self.total_s();
+        let mut t = 0.0;
+        for _ in 0..self.cycles {
+            for p in &self.phases {
+                let level = clients as f64 * p.rate / peak;
+                let end = t + p.duration_s;
+                push(&mut env, t, level);
+                // Hold the level to just short of the boundary; the gap to
+                // the next phase's start knot is the ramp.
+                let hold = if end < total { end - (p.duration_s * 0.01).min(1.0) } else { end };
+                if hold > t {
+                    push(&mut env, hold, level);
+                }
+                t = end;
+            }
+        }
+        env
     }
 }
 
@@ -322,6 +369,37 @@ mod tests {
 
     fn plan() -> PhasePlan {
         PhasePlan::text_image_alternating(30.0, 6.0, 8.0, 2)
+    }
+
+    #[test]
+    fn activation_envelope_projects_the_load_shape() {
+        use crate::workload::clients::envelope_active_at;
+        // 30 s phases at rates 6 (text) and 8 (image), 2 cycles.
+        let env = plan().activation_envelope(100);
+        assert!(
+            env.windows(2).all(|w| w[0].t < w[1].t),
+            "knot times must be strictly increasing (config validator contract)"
+        );
+        // Peak phase (rate 8) maps to the full client count, the rate-6
+        // phase to 75, and the levels hold flat mid-phase.
+        assert!((envelope_active_at(&env, 15.0) - 75.0).abs() < 1e-9);
+        assert!((envelope_active_at(&env, 45.0) - 100.0).abs() < 1e-9);
+        assert!((envelope_active_at(&env, 75.0) - 75.0).abs() < 1e-9);
+        // Constant extrapolation past the schedule keeps the last level.
+        assert!((envelope_active_at(&env, 1e6) - 100.0).abs() < 1e-9);
+        // Degenerate plans (no positive rate) yield the empty envelope
+        // (= everyone active).
+        let dead = PhasePlan {
+            phases: vec![Phase {
+                duration_s: 10.0,
+                rate: 0.0,
+                image_fraction: 0.0,
+                text_tokens_mean: None,
+                output_tokens: None,
+            }],
+            cycles: 1,
+        };
+        assert!(dead.activation_envelope(10).is_empty());
     }
 
     #[test]

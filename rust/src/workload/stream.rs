@@ -45,6 +45,7 @@
 
 use crate::config::{VitDesc, WorkloadSpec};
 use crate::util::rng::{Rng, ZipfTable};
+use crate::workload::clients::ClientPool;
 use crate::workload::injector::{Arrival, ARRIVAL_STREAM};
 use crate::workload::phases::{phased_image_pool, PhasePlan, PhasedStream};
 use crate::workload::{image_pool, sample_spec, ArrivedRequest, SPEC_STREAM};
@@ -418,6 +419,14 @@ pub enum ArrivalSource {
     /// corresponding unsplit source; realization differs for >1 lane
     /// (documented semantic delta).
     Lanes(MergedArrivals),
+    /// Closed-loop client pool ([`crate::workload::clients`]): arrivals are
+    /// endogenous — the next turn exists only after the previous one
+    /// completes — so this variant yields nothing through the open-loop
+    /// `Iterator` interface. The serving engines detect it and pull due
+    /// turns directly from the pool, feeding completions back. Presampling
+    /// lanes never apply (no lanes are reported); every closed-loop arrival
+    /// is a coordination barrier in the sharded engine.
+    ClosedLoop(ClientPool),
 }
 
 impl ArrivalSource {
@@ -473,6 +482,28 @@ impl ArrivalSource {
         ArrivalSource::Replay(arrivals.into_iter())
     }
 
+    /// Closed-loop client pool (`[clients] enabled = true`).
+    pub fn closed_loop(pool: ClientPool) -> Self {
+        ArrivalSource::ClosedLoop(pool)
+    }
+
+    /// The closed-loop pool, if this source is one.
+    pub fn pool(&self) -> Option<&ClientPool> {
+        match self {
+            ArrivalSource::ClosedLoop(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Mutable access to the closed-loop pool, if this source is one — the
+    /// serving engines drive pop/feedback through this.
+    pub fn pool_mut(&mut self) -> Option<&mut ClientPool> {
+        match self {
+            ArrivalSource::ClosedLoop(p) => Some(p),
+            _ => None,
+        }
+    }
+
     /// The lane-split merge, if this source is one — the sharded engine
     /// detaches lanes from it to pre-sample on shard workers.
     pub(crate) fn lanes_mut(&mut self) -> Option<&mut MergedArrivals> {
@@ -495,6 +526,12 @@ impl ArrivalSource {
             }
             ArrivalSource::Phased(s) => s.last_arrival(),
             ArrivalSource::Lanes(m) => m.last_arrival(),
+            // The pool cannot know its realized last arrival up-front; it
+            // reports a generous horizon hint minus the engines' uniform
+            // `+3600 s` drain margin, so existing `last_arrival + 3600`
+            // horizon arithmetic stays valid unchanged. Closed-loop runs
+            // actually end when the pool is exhausted, never at the horizon.
+            ArrivalSource::ClosedLoop(p) => p.horizon_hint() - 3600.0,
         }
     }
 
@@ -509,6 +546,7 @@ impl ArrivalSource {
             ArrivalSource::Stream(s) => s.len_total(),
             ArrivalSource::Phased(s) => s.len_total(),
             ArrivalSource::Lanes(m) => m.len_total(),
+            ArrivalSource::ClosedLoop(p) => p.len_total(),
         }
     }
 }
@@ -522,6 +560,9 @@ impl Iterator for ArrivalSource {
             ArrivalSource::Stream(s) => s.next(),
             ArrivalSource::Phased(s) => s.next(),
             ArrivalSource::Lanes(m) => m.next(),
+            // Endogenous arrivals are pulled via the pool API, never the
+            // open-loop iterator (the engines branch before calling next).
+            ArrivalSource::ClosedLoop(_) => None,
         }
     }
 }

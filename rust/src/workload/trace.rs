@@ -5,7 +5,7 @@
 //! paper's comparisons hold the workload fixed while varying the deployment.
 
 use crate::util::json::Json;
-use crate::workload::{ArrivedRequest, ImageInput, RequestSpec};
+use crate::workload::{ArrivedRequest, ImageInput, RequestSpec, SessionRef};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
 
@@ -16,6 +16,11 @@ pub fn to_json(r: &ArrivedRequest) -> Json {
         .set("arrival", r.arrival)
         .set("text_tokens", r.spec.text_tokens)
         .set("output_tokens", r.spec.output_tokens);
+    if let Some(s) = &r.spec.session {
+        let mut sj = Json::obj();
+        sj.set("id", s.id).set("turn", s.turn as u64);
+        o.set("session", sj);
+    }
     if let Some(img) = &r.spec.image {
         let mut im = Json::obj();
         // The interned u64 key is serialized as fixed-width hex: JSON
@@ -54,12 +59,22 @@ pub fn from_json(v: &Json) -> Result<ArrivedRequest> {
         }
         None => None,
     };
+    let session = match v.get("session") {
+        Some(s) => {
+            let g = |k: &str| {
+                s.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace: session '{k}'"))
+            };
+            Some(SessionRef { id: g("id")? as u64, turn: g("turn")? as u32 })
+        }
+        None => None,
+    };
     Ok(ArrivedRequest {
         spec: RequestSpec {
             id: get_num("id")? as u64,
             image,
             text_tokens: get_num("text_tokens")? as usize,
             output_tokens: get_num("output_tokens")? as usize,
+            session,
         },
         arrival: get_num("arrival")?,
     })
@@ -134,11 +149,13 @@ mod tests {
                 }),
                 text_tokens: 4,
                 output_tokens: 8,
+                session: Some(SessionRef { id: 9, turn: 3 }),
             },
             arrival: 0.5,
         };
         let back = from_json(&to_json(&r)).unwrap();
         assert_eq!(back.spec.image.unwrap().key, 0xfedc_ba98_7654_3210);
+        assert_eq!(back.spec.session, Some(SessionRef { id: 9, turn: 3 }));
     }
 
     #[test]
@@ -149,6 +166,7 @@ mod tests {
                 image: Some(ImageInput { width: 28, height: 28, key: 7, visual_tokens: 1 }),
                 text_tokens: 1,
                 output_tokens: 1,
+                session: None,
             },
             arrival: 0.0,
         });

@@ -1,0 +1,228 @@
+//! Property suite for the closed-loop session-client subsystem.
+//!
+//! Closed-loop arrivals are **endogenous** — turn t+1 of a session exists
+//! only after turn t completes — so the usual "generate a trace up front,
+//! replay it everywhere" determinism recipe does not apply directly. The
+//! contract these tests pin instead:
+//!
+//! - **Conservation**: every issued turn terminates (completes or gives
+//!   up), every record carries its session tag, request ids are dense in
+//!   arrival order, and the concurrency walk balances to zero without ever
+//!   exceeding the client count.
+//! - **Determinism ×2**: two runs of the same config are bit-identical on
+//!   each engine, and the single loop ≡ the sharded engine — including
+//!   under a `[faults]` storm, a diurnal activation envelope, and
+//!   epoch-snapshot routing (K > 1) all at once.
+//! - **Envelope semantics**: a flat envelope below the client count parks
+//!   the excess clients forever; a ramp delays each client's first turn
+//!   until the envelope admits it.
+//! - **Replay round trip**: the realized arrival trace exported in
+//!   [`ClosedLoopReport::realized`] replays through the ordinary open-loop
+//!   `ArrivalSource::replay` path (`ServingSim::new`) to the exact same
+//!   records — the feedback loop only ever decides *when* requests arrive,
+//!   never how they are served.
+//!
+//! The golden digest for a closed-loop scenario lives in
+//! `tests/determinism_golden.rs` next to the other pinned trajectories.
+
+use epd_serve::config::{Config, EnvelopePoint};
+use epd_serve::coordinator::metrics::records_digest;
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+
+fn closed_cfg(deployment: &str, clients: usize, turns: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = deployment.to_string();
+    cfg.clients.enabled = true;
+    cfg.clients.clients = clients;
+    cfg.clients.sessions = 1;
+    cfg.clients.turns = turns;
+    cfg.clients.think_mean_s = 0.4;
+    cfg.clients.think_min_s = 0.05;
+    cfg.workload.image_reuse = 0.3;
+    cfg
+}
+
+#[test]
+fn every_issued_turn_is_recorded_and_conserved() {
+    let cfg = closed_cfg("E-P-D", 10, 3);
+    let out = run_serving(&cfg).unwrap();
+    let report = out.closed_loop.as_ref().expect("closed-loop report");
+    assert_eq!(report.issued, 30, "10 clients x 3 turns, no envelope");
+    assert_eq!(report.completed + report.gave_up, report.issued);
+    assert_eq!(out.metrics.records.len() as u64, report.issued);
+    assert!(
+        out.metrics.records.iter().all(|r| r.session.is_some()),
+        "every closed-loop record must carry its session tag"
+    );
+    // Ids are assigned at issue, densely, in arrival order.
+    for (i, a) in report.realized.iter().enumerate() {
+        assert_eq!(a.spec.id, i as u64);
+        assert!(i == 0 || report.realized[i - 1].arrival <= a.arrival);
+    }
+    for s in &report.sessions {
+        assert_eq!(s.turns_issued, 3);
+        assert_eq!(s.turns_completed + s.turns_gave_up, s.turns_issued);
+        assert!(s.last_finish >= s.first_issue);
+        // Every turn of the session reuses the session's image key
+        // (session uid == client index at sessions_per_client = 1).
+        for a in report
+            .realized
+            .iter()
+            .filter(|a| a.spec.session.map(|r| r.id) == Some(s.client as u64))
+        {
+            assert_eq!(a.spec.image.map(|i| i.key), s.image_key);
+        }
+    }
+    // The concurrency walk stays within [0, clients] and balances out.
+    let (mut live, mut peak) = (0i64, 0i64);
+    for &(_, d, _) in &report.concurrency {
+        live += d as i64;
+        assert!(live >= 0);
+        peak = peak.max(live);
+    }
+    assert_eq!(live, 0, "every +1 issue delta has a matching -1 completion");
+    assert!(peak >= 1 && peak <= 10, "peak concurrency {peak} out of range");
+}
+
+#[test]
+fn closed_loop_is_deterministic_on_both_engines() {
+    let cfg = closed_cfg("E-P-Dx2", 8, 3);
+    let a = run_serving(&cfg).unwrap();
+    let b = run_serving(&cfg).unwrap();
+    assert_eq!(a.metrics.records, b.metrics.records, "single loop must be deterministic");
+    assert_eq!(a.closed_loop, b.closed_loop);
+    let sa = ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded();
+    let sb = ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(sa.metrics.records, sb.metrics.records, "sharded engine must be deterministic");
+    assert_eq!(sa.closed_loop, sb.closed_loop);
+    assert_eq!(
+        a.metrics.records, sa.metrics.records,
+        "single loop and sharded engine must agree record for record"
+    );
+    assert_eq!(a.closed_loop, sa.closed_loop);
+}
+
+#[test]
+fn sharded_matches_single_loop_under_storm_envelope_and_epoch_routing() {
+    // The hardest composition: endogenous arrivals + control-class fault
+    // events + an activation ramp + epoch-batched routing. The sharded
+    // engine's conservative window bound must reproduce the single loop
+    // through all of it.
+    let mut cfg = closed_cfg("E-P-Dx2", 12, 4);
+    cfg.scheduler.route_policy = "session_affinity".to_string();
+    cfg.scheduler.route_epoch = 4;
+    cfg.clients.envelope = vec![
+        EnvelopePoint { t: 0.0, active: 4.0 },
+        EnvelopePoint { t: 3.0, active: 12.0 },
+    ];
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 1 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 1 } },
+    ];
+    let single = run_serving(&cfg).unwrap();
+    let sharded = ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(
+        single.metrics.records, sharded.metrics.records,
+        "storm + envelope + K=4 must stay engine-invariant"
+    );
+    assert_eq!(single.closed_loop, sharded.closed_loop);
+    assert_eq!(single.faults_applied, sharded.faults_applied);
+    assert_eq!(single.faults_applied, 2, "both fault events must commit");
+    assert!(
+        single.max_route_staleness < 4 && sharded.max_route_staleness < 4,
+        "view lag must stay under the epoch length"
+    );
+    let report = single.closed_loop.as_ref().unwrap();
+    assert_eq!(report.completed + report.gave_up, report.issued);
+}
+
+#[test]
+fn diurnal_envelope_parks_and_delays_clients() {
+    // Flat envelope below the pool size: the excess clients never issue.
+    let mut cfg = closed_cfg("E-P-D", 6, 3);
+    cfg.clients.envelope = vec![
+        EnvelopePoint { t: 0.0, active: 3.0 },
+        EnvelopePoint { t: 60.0, active: 3.0 },
+    ];
+    let out = run_serving(&cfg).unwrap();
+    let report = out.closed_loop.as_ref().unwrap();
+    assert_eq!(report.issued, 9, "only the three admitted clients issue turns");
+    assert_eq!(report.completed + report.gave_up, report.issued);
+    assert_eq!(out.metrics.records.len(), 9);
+    for s in report.sessions.iter().filter(|s| s.client >= 3) {
+        assert_eq!(s.turns_issued, 0, "client {} must stay parked", s.client);
+        assert!(s.first_issue.is_infinite());
+    }
+
+    // Ramp envelope: client c (admission threshold c+1) may not issue its
+    // first turn before the ramp crosses its threshold at 4(c+1)/6 s.
+    let mut ramp = closed_cfg("E-P-D", 6, 2);
+    ramp.clients.envelope = vec![
+        EnvelopePoint { t: 0.0, active: 0.0 },
+        EnvelopePoint { t: 4.0, active: 6.0 },
+    ];
+    let out2 = run_serving(&ramp).unwrap();
+    let rep2 = out2.closed_loop.as_ref().unwrap();
+    assert_eq!(rep2.issued, 12, "the ramp admits the whole pool by t=4");
+    for s in &rep2.sessions {
+        let admit = 4.0 * (s.client + 1) as f64 / 6.0;
+        assert!(
+            s.first_issue >= admit - 1e-9,
+            "client {} issued at {} before its admission time {}",
+            s.client,
+            s.first_issue,
+            admit
+        );
+    }
+    // Staggered admission shows up as a strictly later first wave than the
+    // un-enveloped twin's.
+    let flat = closed_cfg("E-P-D", 6, 2);
+    let rep_flat = run_serving(&flat).unwrap().closed_loop.unwrap();
+    let first = |r: &epd_serve::workload::clients::ClosedLoopReport| {
+        r.realized.iter().map(|a| a.arrival).fold(f64::INFINITY, f64::min)
+    };
+    assert!(first(rep2) > first(&rep_flat), "the ramp must delay the opening arrivals");
+}
+
+#[test]
+fn realized_trace_replays_bit_exactly_through_the_open_loop_path() {
+    // ClosedLoopReport::realized is an ordinary arrival trace: request ids
+    // coincide with arrival order, arrival times sit on the ns grid, and
+    // session tags ride in the specs — so replaying it through
+    // `ServingSim::new` (the `ArrivalSource::replay` path, no pool at all)
+    // must reproduce every record bit for bit, faults included.
+    let mut cfg = closed_cfg("E-P-Dx2", 8, 3);
+    cfg.scheduler.route_policy = "session_affinity".to_string();
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 1 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 1 } },
+    ];
+    let closed = run_serving(&cfg).unwrap();
+    let report = closed.closed_loop.as_ref().expect("closed-loop report");
+    assert_eq!(report.realized.len() as u64, report.issued);
+
+    let replayed = ServingSim::new(cfg.clone(), report.realized.clone()).unwrap().run();
+    assert!(replayed.closed_loop.is_none(), "replay is an open-loop run");
+    assert_eq!(
+        closed.metrics.records, replayed.metrics.records,
+        "replaying the realized trace must reproduce the closed-loop records exactly"
+    );
+    assert_eq!(
+        records_digest(&closed.metrics.records),
+        records_digest(&replayed.metrics.records)
+    );
+    // And through the sharded engine too.
+    let replay_sharded =
+        ServingSim::new(cfg.clone(), report.realized.clone()).unwrap().run_sharded();
+    assert_eq!(closed.metrics.records, replay_sharded.metrics.records);
+}
+
+#[test]
+fn closed_loop_constructor_requires_enabled_clients() {
+    let cfg = Config::default();
+    assert!(
+        ServingSim::closed_loop(cfg).is_err(),
+        "[clients] enabled = false must be rejected"
+    );
+}

@@ -45,7 +45,9 @@
 //! `[faults]` schedule — instance death/revival, NPU brownout, link
 //! degradation, store loss — through every layer above. The empty-schedule
 //! off path is pinned separately: a `[faults]` section with no events must
-//! be bit-identical to the pre-fault simulator.
+//! be bit-identical to the pre-fault simulator. A closed-loop scenario
+//! (`closed_loop_x2`) gets a dedicated test: endogenous arrivals replace
+//! layer 3's materialized trace with the realized-trace replay round trip.
 
 use epd_serve::config::Config;
 use epd_serve::coordinator::metrics::records_digest;
@@ -324,6 +326,58 @@ fn fault_storm_trajectory_pinned() {
         cfg.workload.num_requests,
         "every request must finish or give up within the horizon"
     );
+}
+
+#[test]
+fn closed_loop_trajectory_pinned() {
+    // Closed-loop clients make arrivals *endogenous* — a session's next
+    // turn exists only after the previous one completes — so layer 3's
+    // up-front materialized trace does not exist here. Its replacement is
+    // the realized-trace round trip: the arrival timeline the pool actually
+    // produced must replay through the ordinary open-loop path to the same
+    // records. The remaining layers apply unchanged: fused ≡ unfused,
+    // single loop ≡ sharded (the conservative feedback-window argument),
+    // and a pinned golden digest. `check_scenario` is not reused because
+    // its layer 3 regenerates an open-loop trace from `[workload]`.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx2".to_string();
+    cfg.clients.enabled = true;
+    cfg.clients.clients = 12;
+    cfg.clients.sessions = 1;
+    cfg.clients.turns = 4;
+    cfg.clients.think_mean_s = 0.4;
+    cfg.clients.think_min_s = 0.05;
+    cfg.scheduler.route_policy = "session_affinity".to_string();
+    cfg.workload.image_reuse = 0.3;
+
+    let fused = run_serving(&cfg).unwrap();
+    let report = fused.closed_loop.as_ref().expect("closed-loop report");
+    assert_eq!(report.issued, 48, "12 clients x 4 turns");
+    assert_eq!(report.completed + report.gave_up, report.issued);
+
+    let mut unfused_cfg = cfg.clone();
+    unfused_cfg.scheduler.fuse_decode_steps = false;
+    unfused_cfg.scheduler.fuse_batch_events = false;
+    let unfused = run_serving(&unfused_cfg).unwrap();
+    assert_eq!(
+        fused.metrics.records, unfused.metrics.records,
+        "fusion must be unobservable to the feedback loop"
+    );
+
+    let sharded = ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(
+        fused.metrics.records, sharded.metrics.records,
+        "closed loop must be engine-invariant"
+    );
+    assert_eq!(fused.closed_loop, sharded.closed_loop);
+
+    let replayed = ServingSim::new(cfg.clone(), report.realized.clone()).unwrap().run();
+    assert_eq!(
+        fused.metrics.records, replayed.metrics.records,
+        "realized trace must replay open-loop to the same records"
+    );
+
+    assert_golden("closed_loop_x2", records_digest(&fused.metrics.records));
 }
 
 #[test]
