@@ -23,17 +23,29 @@
 //! engines inside this binary (records digest + session records + realized
 //! trace), and turn conservation is checked exactly.
 //!
+//! A second section, `closed_loop_scale[]`, sweeps the **population-scale
+//! pool**: configured clients ∈ {10k, 100k, 1M} under a diurnal envelope
+//! whose peak stays fixed (~2 000 active), on the timer-wheel pending
+//! queue with `retain_realized = false`. Because the envelope — not the
+//! configured population — bounds the active set, setup cost must grow
+//! sub-linearly in *parked* clients and `clients_materialized` must stay
+//! ≪ configured; the smallest point is re-run on the heap queue and the
+//! two must agree digest-for-digest in-binary.
+//!
 //! Flags: `--clients N` (default 300), `--turns T` (default 6),
-//! `--think S` (mean think seconds, default 0.3).
+//! `--think S` (mean think seconds, default 0.3), `--scale LIST` (comma
+//! list of configured-client counts, default `10000,100000,1000000`),
+//! `--scale-turns T` (default 2).
 
 use epd_serve::bench::{print_table, repo_root, save_json};
-use epd_serve::config::Config;
+use epd_serve::config::{Config, EnvelopePoint};
 use epd_serve::coordinator::metrics::records_digest;
-use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim, SimOutcome};
 use epd_serve::sim::faults::{FaultEvent, FaultKind};
 use epd_serve::util::cli::Cli;
 use epd_serve::util::json::Json;
 use epd_serve::util::stats::fmt_pct;
+use std::time::Instant;
 
 /// Arrivals in `[lo, hi)` and the achieved rate over the window.
 fn bucket(arrivals: &[f64], lo: f64, hi: f64) -> (usize, f64) {
@@ -58,11 +70,21 @@ fn main() -> anyhow::Result<()> {
     .opt_default("clients", "300", "closed-loop clients")
     .opt_default("turns", "6", "turns per session")
     .opt_default("think", "0.3", "mean think time, seconds")
+    .opt_default("scale", "10000,100000,1000000", "comma list of configured clients for the scale sweep")
+    .opt_default("scale-turns", "2", "turns per session in the scale sweep")
     .flag("bench", "ignored (cargo bench passes this to bench binaries)")
     .parse_env();
     let clients = args.get_usize("clients").unwrap();
     let turns = args.get_usize("turns").unwrap();
     let think = args.get_f64("think").unwrap();
+    let scale_list: Vec<usize> = args
+        .get("scale")
+        .unwrap()
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse().expect("--scale takes a comma list of client counts"))
+        .collect();
+    let scale_turns = args.get_usize("scale-turns").unwrap();
 
     let mut cfg = Config::default();
     cfg.deployment = "E-P-D-Dx2".to_string();
@@ -191,6 +213,136 @@ fn main() -> anyhow::Result<()> {
         "feedback must cut offered load deeper than Poisson noise: {closed_drop:.3} vs {control_drop:.3}"
     );
 
+    // ---- 5. Population-scale sweep ---------------------------------------
+    // Same work at every point: the diurnal envelope caps the active set at
+    // ~2 000 clients regardless of how many are configured, so the only
+    // thing that grows with the sweep is the *parked* population — which
+    // the lazy frontier must keep off every data structure.
+    let scale_cfg = |n: usize, queue: &str| {
+        let mut c = Config::default();
+        c.deployment = "E-P-D-Dx2".to_string();
+        c.clients.enabled = true;
+        c.clients.clients = n;
+        c.clients.sessions = 1;
+        c.clients.turns = scale_turns;
+        c.clients.think_mean_s = 0.3;
+        c.clients.think_min_s = 0.05;
+        c.clients.pending_queue = queue.to_string();
+        c.clients.retain_realized = false;
+        c.workload.image_reuse = 0.3;
+        let peak = 2_000.0f64.min(n as f64);
+        c.clients.envelope = vec![
+            EnvelopePoint { t: 0.0, active: 0.0 },
+            EnvelopePoint { t: 30.0, active: peak },
+            EnvelopePoint { t: 60.0, active: peak },
+            EnvelopePoint { t: 90.0, active: 0.0 },
+        ];
+        c
+    };
+    let timed_run = |cfg: &Config| -> anyhow::Result<(SimOutcome, u64, u64)> {
+        let t0 = Instant::now();
+        let sim = ServingSim::closed_loop(cfg.clone())?;
+        let setup_ns = t0.elapsed().as_nanos() as u64;
+        let t1 = Instant::now();
+        let out = sim.run();
+        Ok((out, setup_ns, t1.elapsed().as_nanos() as u64))
+    };
+
+    let mut scale_rows = Vec::new();
+    let mut scale_json = Vec::new();
+    let mut sweep: Vec<(usize, u64, u64)> = Vec::new(); // (configured, parked, setup_ns)
+    for &n in &scale_list {
+        let cfg_n = scale_cfg(n, "wheel");
+        let (out, setup_ns, run_ns) = timed_run(&cfg_n)?;
+        let report = out.closed_loop.as_ref().expect("scale report");
+        assert_eq!(report.completed + report.gave_up, report.issued, "turn conservation at {n}");
+        assert!(
+            report.realized.is_empty() && report.concurrency.is_empty(),
+            "retain_realized = false must not accumulate per-turn vectors"
+        );
+        let peak_cfg = 2_000.min(n) as u64;
+        assert!(
+            out.clients_materialized <= 2 * peak_cfg,
+            "materialized {} must track the envelope peak {peak_cfg}, not the {n} configured",
+            out.clients_materialized
+        );
+        if n >= 100_000 {
+            assert!(
+                out.clients_materialized * 10 < n as u64,
+                "clients_materialized ({}) must stay << configured ({n})",
+                out.clients_materialized
+            );
+        }
+        let parked = n as u64 - out.clients_materialized;
+        let events_per_s = out.events_processed as f64 / (run_ns as f64 / 1e9).max(1e-9);
+        scale_rows.push(vec![
+            format!("{n}"),
+            format!("{:.1}", setup_ns as f64 / 1e6),
+            format!("{:.0}k", events_per_s / 1e3),
+            format!("{}", out.pool_peak_pending),
+            format!("{}", out.clients_materialized),
+            format!("{}", out.wheel_cascades),
+        ]);
+        let mut o = Json::obj();
+        o.set("clients_configured", n)
+            .set("clients_materialized", out.clients_materialized)
+            .set("clients_parked", parked)
+            .set("setup_ms", setup_ns as f64 / 1e6)
+            .set("events_per_s", events_per_s)
+            .set("pool_peak_pending", out.pool_peak_pending)
+            .set("wheel_cascades", out.wheel_cascades)
+            .set("issued", report.issued)
+            .set("peak_concurrency", report.peak_concurrency as u64)
+            .set("realized_digest", format!("{:016x}", report.realized_digest));
+        scale_json.push(o);
+        sweep.push((n, parked, setup_ns));
+    }
+    print_table(
+        &format!("closed_loop_scale — diurnal envelope (peak 2000), wheel queue, {scale_turns} turns"),
+        &["clients", "setup ms", "events/s", "peak pending", "materialized", "cascades"],
+        &scale_rows,
+    );
+    // Sub-linear setup in parked clients: across the extreme sweep points,
+    // the setup-time ratio (floored at 1 ms to dodge timer noise) must stay
+    // far under the parked-population ratio.
+    if let (Some(&(n0, parked0, setup0)), Some(&(n1, parked1, setup1))) =
+        (sweep.first(), sweep.last())
+    {
+        if parked1 > 10 * parked0.max(1) {
+            let floor = 1_000_000u64; // 1 ms
+            let ratio = setup1.max(floor) as f64 / setup0.max(floor) as f64;
+            let parked_ratio = parked1 as f64 / parked0.max(1) as f64;
+            assert!(
+                ratio < parked_ratio / 4.0,
+                "setup must be sub-linear in parked clients: {n0}->{n1} setup x{ratio:.1} \
+                 vs parked x{parked_ratio:.1}"
+            );
+            println!(
+                "setup scaling {n0} -> {n1} clients: x{ratio:.2} time for x{parked_ratio:.0} parked"
+            );
+        }
+    }
+    // In-binary wheel-vs-heap equivalence at the smallest sweep point: same
+    // records, same streaming digests, same session records.
+    if let Some(&n0) = scale_list.first() {
+        let (wheel_out, _, _) = timed_run(&scale_cfg(n0, "wheel"))?;
+        let (heap_out, _, _) = timed_run(&scale_cfg(n0, "heap"))?;
+        assert_eq!(
+            records_digest(&wheel_out.metrics.records),
+            records_digest(&heap_out.metrics.records),
+            "wheel and heap queues must serve identical records at {n0} clients"
+        );
+        let (rw, rh) = (wheel_out.closed_loop.unwrap(), heap_out.closed_loop.unwrap());
+        assert_eq!(rw.realized_digest, rh.realized_digest, "realized digests must match");
+        assert_eq!(rw.concurrency_digest, rh.concurrency_digest, "concurrency digests must match");
+        assert_eq!(rw.sessions, rh.sessions, "session records must match");
+        println!(
+            "wheel ≡ heap at {n0} clients: records digest {:016x}, realized digest {:016x}",
+            records_digest(&wheel_out.metrics.records),
+            rw.realized_digest
+        );
+    }
+
     // ---- JSON artifact ----------------------------------------------------
     let mut dump = Json::obj();
     let mut setup = Json::obj();
@@ -226,7 +378,8 @@ fn main() -> anyhow::Result<()> {
         .set("windows", per_window)
         .set("witness", witness)
         .set("gave_up", faulted_report.gave_up)
-        .set("engine_invariant", true);
+        .set("engine_invariant", true)
+        .set("closed_loop_scale", scale_json);
 
     let root = repo_root().join("BENCH_closed_loop.json");
     std::fs::write(&root, dump.to_string_pretty())?;

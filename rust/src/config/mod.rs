@@ -655,6 +655,18 @@ pub struct ClientsSpec {
     /// delayed to the time the target recovers (never advanced), and a
     /// client the envelope never re-admits parks permanently.
     pub envelope: Vec<EnvelopePoint>,
+    /// Pending-turn queue implementation: `"heap"` (the original global
+    /// `BinaryHeap`) or `"wheel"` (hierarchical timer wheel, O(1) amortized
+    /// insert/pop — the population-scale path). Both are pinned
+    /// bit-identical by the differential suite; the default stays `"heap"`
+    /// until the goldens are bootstrapped on a real toolchain.
+    pub pending_queue: String,
+    /// Retain the full `realized` arrival trace and concurrency delta
+    /// vector in the report (default). Turning this off replaces them with
+    /// streaming digests plus an incremental peak-concurrency walk, so a
+    /// multi-million-turn run holds O(in-flight + active clients) memory —
+    /// at the cost of the replay-trace escape hatch.
+    pub retain_realized: bool,
 }
 
 impl Default for ClientsSpec {
@@ -667,6 +679,8 @@ impl Default for ClientsSpec {
             think_mean_s: 2.0,
             think_min_s: 0.25,
             envelope: Vec::new(),
+            pending_queue: "heap".to_string(),
+            retain_realized: true,
         }
     }
 }
@@ -1069,6 +1083,17 @@ impl Config {
                     c.envelope.push(EnvelopePoint { t, active });
                 }
             }
+            if let Some(v) = cl.get("pending_queue").and_then(Json::as_str) {
+                match v {
+                    "heap" | "wheel" => c.pending_queue = v.to_string(),
+                    other => bail!(
+                        "clients.pending_queue must be \"heap\" or \"wheel\", got \"{other}\""
+                    ),
+                }
+            }
+            if let Some(v) = cl.get("retain_realized").and_then(Json::as_bool) {
+                c.retain_realized = v;
+            }
         }
         Ok(cfg)
     }
@@ -1401,6 +1426,8 @@ sessions = 2
 turns = 6
 think_mean_s = 4.0
 think_min_s = 0.5
+pending_queue = "wheel"
+retain_realized = false
 
 [[clients.envelope]]
 t = 0
@@ -1425,12 +1452,16 @@ active = 50
         assert_eq!(c.think_min_s, 0.5);
         assert_eq!(c.envelope.len(), 3);
         assert_eq!(c.envelope[1], EnvelopePoint { t: 60.0, active: 500.0 });
+        assert_eq!(c.pending_queue, "wheel");
+        assert!(!c.retain_realized);
         // Defaults: closed-loop is opt-in, envelope empty = all active.
         let d = ClientsSpec::default();
         assert!(!d.enabled, "closed-loop must be opt-in");
         assert!(d.envelope.is_empty());
         assert!(d.think_min_s >= 1e-6, "positive think floor is load-bearing");
         assert!(d.think_mean_s >= d.think_min_s);
+        assert_eq!(d.pending_queue, "heap", "default stays the PR 8 path until goldens pin wheel");
+        assert!(d.retain_realized, "replay round trip is the default");
     }
 
     #[test]
@@ -1452,6 +1483,7 @@ active = 50
             "[[clients.envelope]]\nt = 5\nactive = -1\n",
             "[[clients.envelope]]\nt = 5\nactive = 10\n\n[[clients.envelope]]\nt = 5\nactive = 20\n",
             "[[clients.envelope]]\nt = 9\nactive = 10\n\n[[clients.envelope]]\nt = 3\nactive = 20\n",
+            "[clients]\npending_queue = \"calendar\"\n",
         ] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");

@@ -484,6 +484,13 @@ impl ServingSim {
     /// exactly that nanosecond — an earlier one would contradict one of
     /// the bounds — so routing at `bound / 1e9` reproduces the single
     /// loop's wake clock bit for bit.
+    ///
+    /// None of this depends on how the pool stores pending turns or
+    /// clients: `peek_ns` is exact over the whole population (the pool
+    /// materializes lazily-admitted clients before answering — the settle
+    /// invariant in [`crate::workload::clients`]), so the heap and
+    /// timer-wheel pending queues and the implicit admission frontier all
+    /// ride under the same window bound unchanged.
     fn closed_loop_rounds(
         &mut self,
         pool: &WorkerPool,

@@ -176,6 +176,17 @@ pub struct SimOutcome {
     /// session records, the achieved-concurrency series, and the realized
     /// arrival trace. `None` on every open-loop run.
     pub closed_loop: Option<ClosedLoopReport>,
+    /// High-water mark of the closed-loop pending-turn queue — the
+    /// O(active) witness for the population-scale pool (0 on open-loop
+    /// runs).
+    pub pool_peak_pending: u64,
+    /// Timer-wheel bucket cascades performed by the closed-loop pending
+    /// queue (0 on the heap path and on open-loop runs).
+    pub wheel_cascades: u64,
+    /// Closed-loop clients actually materialized (admitted by the envelope
+    /// and given real state). With a bounded envelope this stays far below
+    /// `clients.clients` — parked clients cost zero bytes.
+    pub clients_materialized: u64,
 }
 
 /// The serving simulation: per-replica shards plus the coordination state
@@ -812,6 +823,11 @@ impl ServingSim {
         for s in &self.shards {
             store_stats.absorb(&s.store_stats());
         }
+        let (pool_peak_pending, wheel_cascades, clients_materialized) = self
+            .source
+            .pool()
+            .map(|p| (p.peak_pending(), p.wheel_cascades(), p.clients_materialized()))
+            .unwrap_or((0, 0, 0));
         let closed_loop = self.source.pool_mut().map(|p| p.take_report());
         // Coordinator-serial-fraction accounting: with a lane-split source,
         // arrivals buffered by `LaneFeed::fill` ahead of the merge were
@@ -841,6 +857,9 @@ impl ServingSim {
             arrivals_presampled,
             arrivals_inline,
             closed_loop,
+            pool_peak_pending,
+            wheel_cascades,
+            clients_materialized,
         }
     }
 }

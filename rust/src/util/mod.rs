@@ -21,4 +21,5 @@ pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod timerwheel;
 pub mod toml;

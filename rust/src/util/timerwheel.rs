@@ -1,0 +1,330 @@
+//! Hierarchical timer wheel over nanosecond deadlines.
+//!
+//! The closed-loop client pool schedules one pending turn per active client;
+//! at population scale (millions of clients) the PR 8 global `BinaryHeap`
+//! pays O(log n) per operation on a comparison order that is almost entirely
+//! *time* order already. This wheel replaces it with bucketed calendar
+//! slots: O(1) amortized insert and pop, with determinism preserved by
+//! draining each due bucket through a small sort so entries still come out
+//! in exact `(at_ns, key)` order — the pool's engine-invariant issue order.
+//!
+//! ## Structure
+//!
+//! [`LEVELS`] levels of [`SLOTS`] buckets each, indexed by *absolute* bits
+//! of the deadline: level `l` owns bits `[G_BITS + 6l, G_BITS + 6(l+1))` of
+//! `at_ns`, so level 0 buckets are `2^G_BITS` ns (~65 µs) wide and the top
+//! level spans the full `u64` range — there is no overflow list. An entry
+//! files at the *lowest* level whose slot field still distinguishes it from
+//! the wheel's current floor `base_ns`; per-level 64-bit occupancy masks
+//! make "next occupied bucket" a `trailing_zeros`.
+//!
+//! ## Drain ordering rule
+//!
+//! The minimum entry is always in `current`: the earliest occupied level-0
+//! bucket, sorted **descending** by `(at_ns, key)` so `Vec::pop` yields the
+//! minimum. When `current` drains, the next bucket is promoted — cascading
+//! higher-level buckets down (re-filing each entry against the advanced
+//! floor, counted in [`TimerWheel::cascades`]) until a level-0 bucket
+//! materializes. Inserts that land at or before the current bucket are
+//! placed *into* `current` by binary insertion, so a think-time shorter
+//! than one bucket width (the floor is ≥ 1 µs, a bucket ~65 µs) can never
+//! slip behind the drain. The result is exactly the pop sequence of an
+//! ordered heap over `(at_ns, key)`, at calendar-queue cost.
+//!
+//! ## Contract
+//!
+//! Deadlines must be monotone against consumption: an insert must not
+//! predate the last popped entry (debug-asserted). The pool guarantees this
+//! structurally — a turn is scheduled at `completion + think` with a
+//! validated positive think floor, and completions never precede the pops
+//! that caused them.
+
+/// Bits of `at_ns` below the level-0 slot index (bucket width 2^16 ns).
+const G_BITS: u32 = 16;
+/// log2(slots per level).
+const SLOT_BITS: u32 = 6;
+/// Slots per level.
+const SLOTS: usize = 1 << SLOT_BITS;
+/// Levels: `G_BITS + 6·8 = 64` bits — the whole deadline space.
+const LEVELS: usize = 8;
+
+#[derive(Debug)]
+struct Entry<T> {
+    at_ns: u64,
+    key: u64,
+    payload: T,
+}
+
+#[derive(Debug)]
+struct Level<T> {
+    /// Bit `s` set ⇔ `slots[s]` non-empty.
+    occ: u64,
+    slots: Vec<Vec<Entry<T>>>,
+}
+
+impl<T> Level<T> {
+    fn new() -> Self {
+        Self { occ: 0, slots: (0..SLOTS).map(|_| Vec::new()).collect() }
+    }
+}
+
+/// Hierarchical timer wheel yielding `(at_ns, key, payload)` in exact
+/// `(at_ns, key)` order. See the module docs for the structure and the
+/// bucket-drain ordering rule.
+#[derive(Debug)]
+pub struct TimerWheel<T> {
+    levels: Vec<Level<T>>,
+    /// The active drain bucket, sorted descending so `pop` is `Vec::pop`.
+    current: Vec<Entry<T>>,
+    /// Wheel floor: the start of `current`'s bucket. All filed entries are
+    /// at or beyond it.
+    base_ns: u64,
+    len: usize,
+    cascades: u64,
+    /// Largest popped deadline (insert-monotonicity debug check).
+    watermark_ns: u64,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    pub fn new() -> Self {
+        Self {
+            levels: (0..LEVELS).map(|_| Level::new()).collect(),
+            current: Vec::new(),
+            base_ns: 0,
+            len: 0,
+            cascades: 0,
+            watermark_ns: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Entries moved down a level by bucket promotion so far — the
+    /// amortized-cost witness (each entry cascades at most `LEVELS - 1`
+    /// times over its lifetime).
+    pub fn cascades(&self) -> u64 {
+        self.cascades
+    }
+
+    /// Earliest scheduled deadline. O(1): the promotion invariant keeps the
+    /// minimum at the tail of `current` whenever the wheel is non-empty.
+    pub fn peek(&self) -> Option<u64> {
+        self.current.last().map(|e| e.at_ns)
+    }
+
+    /// Schedule `payload` at `(at_ns, key)`.
+    pub fn insert(&mut self, at_ns: u64, key: u64, payload: T) {
+        debug_assert!(
+            at_ns >= self.watermark_ns,
+            "timer wheel insert at {at_ns} behind consumption watermark {}",
+            self.watermark_ns
+        );
+        if !self.current.is_empty() && (at_ns >> G_BITS) <= (self.base_ns >> G_BITS) {
+            // Lands inside (or, defensively, before) the bucket being
+            // drained: binary insertion keeps the descending order exact.
+            let i = self.current.partition_point(|e| (e.at_ns, e.key) > (at_ns, key));
+            self.current.insert(i, Entry { at_ns, key, payload });
+        } else {
+            self.file(Entry { at_ns, key, payload });
+        }
+        self.len += 1;
+        self.promote();
+    }
+
+    /// Pop the minimum entry. The promotion invariant is restored before
+    /// returning, so a subsequent [`TimerWheel::peek`] stays O(1).
+    pub fn pop(&mut self) -> Option<(u64, u64, T)> {
+        let e = self.current.pop()?;
+        self.len -= 1;
+        self.watermark_ns = e.at_ns;
+        self.promote();
+        Some((e.at_ns, e.key, e.payload))
+    }
+
+    /// File an entry into the lowest level whose slot field distinguishes
+    /// it from `base_ns` (same-bucket entries go to level 0: promotion
+    /// picks them up immediately).
+    fn file(&mut self, e: Entry<T>) {
+        let diff = e.at_ns ^ self.base_ns;
+        let bits = 64 - diff.leading_zeros();
+        let level = if bits <= G_BITS { 0 } else { ((bits - G_BITS - 1) / SLOT_BITS) as usize };
+        debug_assert!(level < LEVELS);
+        let slot = ((e.at_ns >> (G_BITS + SLOT_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
+        let lv = &mut self.levels[level];
+        lv.occ |= 1 << slot;
+        lv.slots[slot].push(e);
+    }
+
+    /// Restore the invariant: if any entry is filed but `current` is empty,
+    /// promote the earliest occupied bucket into `current` (cascading
+    /// higher levels down as needed) and sort it descending.
+    fn promote(&mut self) {
+        while self.current.is_empty() && self.len > 0 {
+            // Level 0 first: all occupied slots are at or beyond the
+            // floor's slot within the current rotation.
+            let s0 = ((self.base_ns >> G_BITS) & (SLOTS as u64 - 1)) as u32;
+            let mask0 = self.levels[0].occ & (u64::MAX << s0);
+            if mask0 != 0 {
+                let slot = mask0.trailing_zeros() as usize;
+                self.levels[0].occ &= !(1 << slot);
+                let mut bucket = std::mem::take(&mut self.levels[0].slots[slot]);
+                bucket.sort_unstable_by(|a, b| (b.at_ns, b.key).cmp(&(a.at_ns, a.key)));
+                // Advance the floor to the promoted bucket's start.
+                let above = self.base_ns >> (G_BITS + SLOT_BITS) << (G_BITS + SLOT_BITS);
+                self.base_ns = above | ((slot as u64) << G_BITS);
+                self.current = bucket;
+                return;
+            }
+            // Level-0 rotation exhausted: cascade the earliest occupied
+            // higher-level bucket down and retry.
+            let mut cascaded = false;
+            for level in 1..LEVELS {
+                let shift = G_BITS + SLOT_BITS * level as u32;
+                let sl = ((self.base_ns >> shift) & (SLOTS as u64 - 1)) as u32;
+                let mask = self.levels[level].occ & (u64::MAX << sl);
+                if mask == 0 {
+                    continue;
+                }
+                let slot = mask.trailing_zeros() as usize;
+                self.levels[level].occ &= !(1 << slot);
+                let bucket = std::mem::take(&mut self.levels[level].slots[slot]);
+                // Jump the floor to the bucket's span start (lower bits 0),
+                // then re-file each entry against the new floor.
+                let above = if shift + SLOT_BITS >= 64 {
+                    0
+                } else {
+                    self.base_ns >> (shift + SLOT_BITS) << (shift + SLOT_BITS)
+                };
+                self.base_ns = above | ((slot as u64) << shift);
+                self.cascades += bucket.len() as u64;
+                for e in bucket {
+                    self.file(e);
+                }
+                cascaded = true;
+                break;
+            }
+            debug_assert!(cascaded, "len > 0 but no occupied bucket at or beyond the floor");
+            if !cascaded {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference order: sort by `(at_ns, key)`.
+    fn drain<T>(w: &mut TimerWheel<T>) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, k, _)) = w.pop() {
+            assert_eq!(w.peek(), w.current.last().map(|e| e.at_ns));
+            out.push((t, k));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_at_ns_key_order() {
+        let mut w = TimerWheel::new();
+        let mut rng = Rng::new(1);
+        let mut expect = Vec::new();
+        for k in 0..10_000u64 {
+            // Spread across 9 orders of magnitude: exercises every level.
+            let t = rng.below(1 << (10 + (k % 50)));
+            w.insert(t, k, ());
+            expect.push((t, k));
+        }
+        expect.sort_unstable();
+        assert_eq!(w.len(), 10_000);
+        assert_eq!(w.peek(), Some(expect[0].0));
+        assert_eq!(drain(&mut w), expect);
+        assert!(w.is_empty() && w.peek().is_none());
+        assert!(w.cascades() > 0, "a 9-decade spread must cascade");
+    }
+
+    #[test]
+    fn interleaved_inserts_respect_global_order() {
+        // Feedback pattern: every pop schedules a successor a little later,
+        // including within the same 65 µs bucket (think floor ≥ 1 µs).
+        let mut w = TimerWheel::new();
+        let mut rng = Rng::new(7);
+        for k in 0..64u64 {
+            w.insert(1_000 + rng.below(1 << 30), k, ());
+        }
+        let mut last = (0, 0);
+        let mut popped = 0usize;
+        while let Some((t, k, _)) = w.pop() {
+            assert!((t, k) > last, "pop order regressed: {:?} after {:?}", (t, k), last);
+            last = (t, k);
+            popped += 1;
+            if popped < 5_000 {
+                // Successor delays from 2 ns (same bucket) to ~1 s.
+                let delay = 2 + rng.below(1 << (1 + (popped as u64 % 30)));
+                w.insert(t + delay, k, ());
+            }
+        }
+        assert_eq!(popped, 5_000 + 63);
+    }
+
+    #[test]
+    fn same_instant_entries_pop_by_key() {
+        let mut w = TimerWheel::new();
+        for k in [5u64, 1, 9, 0, 3] {
+            w.insert(4_242, k, k * 10);
+        }
+        w.insert(4_241, 7, 70);
+        let order: Vec<(u64, u64, u64)> = std::iter::from_fn(|| w.pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (4_241, 7, 70),
+                (4_242, 0, 0),
+                (4_242, 1, 10),
+                (4_242, 3, 30),
+                (4_242, 5, 50),
+                (4_242, 9, 90)
+            ]
+        );
+    }
+
+    #[test]
+    fn far_future_deadlines_cascade_correctly() {
+        let mut w = TimerWheel::new();
+        // One entry per level span, plus near-max.
+        let ts = [0u64, 1 << 17, 1 << 23, 1 << 29, 1 << 40, 1 << 55, u64::MAX - 3];
+        for (k, &t) in ts.iter().enumerate() {
+            w.insert(t, k as u64, ());
+        }
+        let got: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|(t, _, _)| t).collect();
+        assert_eq!(got, ts.to_vec());
+    }
+
+    #[test]
+    fn insert_during_drain_of_current_bucket() {
+        let mut w = TimerWheel::new();
+        w.insert(100, 0, ());
+        w.insert(60_000, 1, ()); // same level-0 bucket as 100
+        assert_eq!(w.pop().map(|(t, k, _)| (t, k)), Some((100, 0)));
+        // Lands inside the active bucket, ahead of the remaining entry.
+        w.insert(30_000, 2, ());
+        assert_eq!(w.peek(), Some(30_000));
+        assert_eq!(w.pop().map(|(t, k, _)| (t, k)), Some((30_000, 2)));
+        assert_eq!(w.pop().map(|(t, k, _)| (t, k)), Some((60_000, 1)));
+        assert!(w.pop().is_none());
+    }
+}

@@ -25,6 +25,36 @@
 //!   `(t_ns, delta, id)` deltas at report time, because engines drain
 //!   completions in different (but multiset-equal) orders.
 //!
+//! # Population scale
+//!
+//! The pool is built for millions of *configured* clients of which only an
+//! envelope-bounded fraction is ever active, so every structure is sized by
+//! activity, not configuration:
+//!
+//! - **Pending turns** live in either the original global `BinaryHeap`
+//!   (`clients.pending_queue = "heap"`) or a hierarchical timer wheel
+//!   ([`crate::util::timerwheel`], `= "wheel"`) with O(1) amortized
+//!   insert/pop. Both are registered and pinned bit-identical — the wheel
+//!   drains each due bucket through a small sort so pops still come out in
+//!   `(at_ns, client)` order.
+//! - **Clients materialize lazily.** Clients the envelope has not yet
+//!   admitted are represented *implicitly* by the admission frontier: an
+//!   index plus the envelope's exact crossing solve for threshold
+//!   `index + 1`. Admission thresholds are monotone in the client index, so
+//!   clients are admitted in index order and a parked client costs zero
+//!   bytes; its RNG lane (`Rng::with_lane(seed, CLIENT_STREAM, c)`) is
+//!   derived on first wake and draws the exact sequence the eager
+//!   constructor drew — cross-client interleaving is immaterial because
+//!   lanes are independent. Finished and permanently-parked clients are
+//!   dropped, so live client state is O(currently active).
+//! - **Session records** allocate on first session start (sparse map). With
+//!   `clients.retain_realized = true` (default) the report re-densifies to
+//!   the full `clients × sessions` vector (blank records for never-started
+//!   sessions, exactly as before); with `false` only materialized sessions
+//!   are reported and the `realized`/`concurrency` vectors stay empty —
+//!   replaced by streaming digests and an incremental peak-concurrency
+//!   walk, so a 10M-turn run holds O(in-flight + active clients) state.
+//!
 //! PR 7's per-replica arrival presampling does **not** apply here: the next
 //! arrival is unknowable until a completion happens, so closed-loop sources
 //! report no lanes and the sharded engine treats every closed-loop arrival
@@ -32,10 +62,12 @@
 
 use crate::config::{ClientsSpec, EnvelopePoint, VitDesc, WorkloadSpec};
 use crate::sim::engine::sec_to_ns;
+use crate::util::hash::Fnv1a;
 use crate::util::rng::{Rng, ZipfTable};
+use crate::util::timerwheel::TimerWheel;
 use crate::workload::{
-    image_pool, sample_image, sample_text_tokens, ArrivedRequest, ImageInput, RequestSpec,
-    SessionRef,
+    arrived_update, image_pool_size, sample_image, sample_text_tokens, ArrivedRequest,
+    ImageInput, RequestSpec, SessionRef,
 };
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -45,6 +77,10 @@ pub(crate) const CLIENT_STREAM: u64 = 0xc11e;
 
 /// Target active clients at time `t_s` (piecewise-linear between knots,
 /// constant beyond either end). An empty envelope admits everyone.
+///
+/// This is the plain O(knots) scan — the differential reference for
+/// [`EnvelopeCursor`], which answers the same queries with a cached
+/// segment cursor (O(1) amortized for the pool's near-monotone streams).
 pub(crate) fn envelope_active_at(env: &[EnvelopePoint], t_s: f64) -> f64 {
     let Some(first) = env.first() else { return f64::INFINITY };
     if t_s <= first.t {
@@ -63,6 +99,8 @@ pub(crate) fn envelope_active_at(env: &[EnvelopePoint], t_s: f64) -> f64 {
 /// admission threshold is `threshold` (client index + 1), or `None` if the
 /// envelope never recovers (the client parks permanently). Gating only ever
 /// **delays** an arrival — the returned time is clamped to `from_ns`.
+///
+/// Plain O(knots) scan; differential reference for [`EnvelopeCursor`].
 pub(crate) fn envelope_admit_ns(
     env: &[EnvelopePoint],
     from_ns: u64,
@@ -99,8 +137,143 @@ pub(crate) fn envelope_admit_ns(
     }
 }
 
+/// Cached-segment envelope evaluator. The scan functions above rescan every
+/// knot on every call; the pool's query streams are near-monotone in time
+/// (per-turn gates follow completion times) or strictly monotone in
+/// threshold (the admission frontier), so a segment cursor answers them in
+/// O(1) amortized. Every answer is **exactly** the scan's answer: the
+/// cursor only skips windows the scan provably skips (`q.t <= from_s` for
+/// time queries; `max active < threshold` prefixes for frontier queries),
+/// pinned by the randomized cursor ≡ scan regression tests.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct EnvelopeCursor {
+    /// Window index hint for time-keyed queries ([`Self::admit_ns`]).
+    seg: usize,
+    /// Window index of the last frontier crossing ([`Self::admit_from_start`]).
+    frontier_seg: usize,
+    /// A frontier query returned `None`: every later (higher) threshold
+    /// parks too — short-circuit without rescanning the tail.
+    frontier_done: bool,
+}
+
+impl EnvelopeCursor {
+    /// Reposition `seg` to the **minimal** window index whose right knot
+    /// sits at or past `t_s` (clamped to the last window). That is exactly
+    /// the window the scans stop in, so interpolating there reproduces the
+    /// scan's arithmetic bit-for-bit — including knot-boundary queries,
+    /// where picking the neighboring window would change the rounding.
+    fn seek(&mut self, env: &[EnvelopePoint], t_s: f64) {
+        while self.seg > 0 && env[self.seg].t >= t_s {
+            self.seg -= 1;
+        }
+        while self.seg + 2 < env.len() && env[self.seg + 1].t < t_s {
+            self.seg += 1;
+        }
+    }
+
+    /// Cursor-accelerated [`envelope_active_at`].
+    pub(crate) fn active_at(&mut self, env: &[EnvelopePoint], t_s: f64) -> f64 {
+        let Some(first) = env.first() else { return f64::INFINITY };
+        if t_s <= first.t {
+            return first.active;
+        }
+        self.seek(env, t_s);
+        if self.seg + 1 < env.len() && t_s <= env[self.seg + 1].t {
+            let (p, q) = (env[self.seg], env[self.seg + 1]);
+            return p.active + (q.active - p.active) * (t_s - p.t) / (q.t - p.t);
+        }
+        env.last().unwrap().active
+    }
+
+    /// Cursor-accelerated [`envelope_admit_ns`].
+    pub(crate) fn admit_ns(
+        &mut self,
+        env: &[EnvelopePoint],
+        from_ns: u64,
+        threshold: f64,
+    ) -> Option<u64> {
+        if env.is_empty() {
+            return Some(from_ns);
+        }
+        let from_s = from_ns as f64 / 1e9;
+        if self.active_at(env, from_s) >= threshold {
+            return Some(from_ns);
+        }
+        // Every window before `seg` has `q.t < from_s`, i.e. it is in the
+        // scan's `continue` set; the retained inner check handles the
+        // boundary window (`q.t == from_s`) exactly like the scan.
+        self.seek(env, from_s);
+        for w in env[self.seg..].windows(2) {
+            let (p, q) = (w[0], w[1]);
+            if q.t <= from_s {
+                continue;
+            }
+            let t0 = p.t.max(from_s);
+            let a0 = p.active + (q.active - p.active) * (t0 - p.t) / (q.t - p.t);
+            if a0 >= threshold {
+                return Some(sec_to_ns(t0).max(from_ns));
+            }
+            if q.active >= threshold {
+                let tc = p.t + (threshold - p.active) / (q.active - p.active) * (q.t - p.t);
+                return Some(sec_to_ns(tc.max(t0)).max(from_ns));
+            }
+        }
+        let last = env.last().unwrap();
+        if last.active >= threshold {
+            Some(sec_to_ns(last.t).max(from_ns))
+        } else {
+            None
+        }
+    }
+
+    /// `envelope_admit_ns(env, 0, threshold)` for a **strictly increasing**
+    /// threshold stream — the admission frontier's query shape. The first
+    /// crossing time is monotone in the threshold, so the scan can resume
+    /// at the window where the previous crossing landed: every earlier
+    /// window's active values sit strictly below the previous (smaller)
+    /// threshold and can never satisfy the new one.
+    pub(crate) fn admit_from_start(
+        &mut self,
+        env: &[EnvelopePoint],
+        threshold: f64,
+    ) -> Option<u64> {
+        if env.is_empty() {
+            return Some(0);
+        }
+        if self.frontier_done {
+            return None;
+        }
+        // `envelope_active_at(env, 0.0)` is always the first knot's value
+        // (knot times are validated >= 0).
+        if env[0].active >= threshold {
+            return Some(0);
+        }
+        for (i, w) in env[self.frontier_seg..].windows(2).enumerate() {
+            let (p, q) = (w[0], w[1]);
+            if p.active >= threshold {
+                self.frontier_seg += i;
+                return Some(sec_to_ns(p.t));
+            }
+            if q.active >= threshold {
+                self.frontier_seg += i;
+                let tc = p.t + (threshold - p.active) / (q.active - p.active) * (q.t - p.t);
+                return Some(sec_to_ns(tc.max(p.t)));
+            }
+        }
+        if env.last().unwrap().active >= threshold {
+            self.frontier_seg = env.len().saturating_sub(1);
+            Some(sec_to_ns(env.last().unwrap().t))
+        } else {
+            self.frontier_done = true;
+            None
+        }
+    }
+}
+
 /// One client's serial state. Exactly one turn of one session is ever
-/// pending or in flight per client.
+/// pending or in flight per client. Only *materialized* clients (admitted
+/// by the envelope, not yet finished) exist; finished or permanently
+/// parked clients are dropped from the pool's map.
 #[derive(Debug)]
 struct Client {
     rng: Rng,
@@ -111,8 +284,6 @@ struct Client {
     /// The session's image, drawn once at session start and reused by every
     /// turn — the cross-turn MM-Store/affinity locality the issue asks for.
     image: Option<ImageInput>,
-    /// All sessions finished, or parked forever by the envelope.
-    done: bool,
 }
 
 /// A scheduled next turn, ordered by `(arrival_ns, client)` — the
@@ -141,6 +312,68 @@ impl Ord for PendingTurn {
     }
 }
 
+/// The pending-turn queue, selected by `clients.pending_queue`. Both
+/// implementations yield turns in exact `(at_ns, client)` order — the heap
+/// by comparison, the wheel by bucket promotion plus per-bucket sort — and
+/// are pinned bit-identical by the differential suite.
+#[derive(Debug)]
+enum PendingQueue {
+    Heap(BinaryHeap<Reverse<PendingTurn>>),
+    Wheel(TimerWheel<RequestSpec>),
+}
+
+impl PendingQueue {
+    fn new(kind: &str) -> Self {
+        match kind {
+            "wheel" => Self::Wheel(TimerWheel::new()),
+            // Validated at config parse; direct constructors default to
+            // the original heap path.
+            _ => Self::Heap(BinaryHeap::new()),
+        }
+    }
+
+    fn push(&mut self, turn: PendingTurn) {
+        match self {
+            Self::Heap(h) => h.push(Reverse(turn)),
+            Self::Wheel(w) => w.insert(turn.at_ns, turn.client as u64, turn.spec),
+        }
+    }
+
+    fn peek_ns(&self) -> Option<u64> {
+        match self {
+            Self::Heap(h) => h.peek().map(|Reverse(p)| p.at_ns),
+            Self::Wheel(w) => w.peek(),
+        }
+    }
+
+    fn pop(&mut self) -> Option<PendingTurn> {
+        match self {
+            Self::Heap(h) => h.pop().map(|Reverse(p)| p),
+            Self::Wheel(w) => {
+                w.pop().map(|(at_ns, key, spec)| PendingTurn { at_ns, client: key as usize, spec })
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Self::Heap(h) => h.len(),
+            Self::Wheel(w) => w.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn cascades(&self) -> u64 {
+        match self {
+            Self::Heap(_) => 0,
+            Self::Wheel(w) => w.cascades(),
+        }
+    }
+}
+
 /// Per-session aggregate record, indexed by session uid
 /// (`client × sessions_per_client + session`). Each session's turns are
 /// serial, so these update in a total order regardless of engine.
@@ -159,121 +392,238 @@ pub struct SessionRecord {
     pub last_finish: f64,
 }
 
+impl SessionRecord {
+    fn blank(uid: u64, sessions_per_client: usize) -> Self {
+        Self {
+            client: uid as usize / sessions_per_client,
+            session: uid as usize % sessions_per_client,
+            image_key: None,
+            turns_issued: 0,
+            turns_completed: 0,
+            turns_gave_up: 0,
+            first_issue: f64::INFINITY,
+            last_finish: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bit-exact digest of a canonical concurrency series — the streaming twin
+/// of comparing `ClosedLoopReport::concurrency` vectors, usable when the
+/// vector itself was not retained.
+pub fn concurrency_digest(series: &[(u64, i32, u64)]) -> u64 {
+    let mut h = Fnv1a::new();
+    conc_update(&mut h, series);
+    h.finish()
+}
+
+fn conc_update(h: &mut Fnv1a, events: &[(u64, i32, u64)]) {
+    use std::fmt::Write as _;
+    let mut buf = String::with_capacity(48);
+    for &(t, d, id) in events {
+        buf.clear();
+        let _ = write!(buf, "{t}|{d}|{id};");
+        h.update(buf.as_bytes());
+    }
+}
+
 /// What a closed-loop run hands back alongside the usual request records.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClosedLoopReport {
     pub issued: u64,
     pub completed: u64,
     pub gave_up: u64,
+    /// Per-session aggregates. With `clients.retain_realized = true` this
+    /// is the full dense `clients × sessions` vector (blank records for
+    /// sessions that never started); with `false` only sessions that
+    /// actually started are present, sorted by `(client, session)`.
     pub sessions: Vec<SessionRecord>,
     /// Achieved-concurrency deltas `(t_ns, ±1, request id)`, canonically
-    /// sorted — a prefix sum yields the in-flight time series.
+    /// sorted — a prefix sum yields the in-flight time series. Empty when
+    /// `clients.retain_realized = false` (see the digests below).
     pub concurrency: Vec<(u64, i32, u64)>,
     /// The realized arrival timeline, replayable as an open-loop
-    /// `ArrivalSource::replay` trace (the debugging escape hatch).
+    /// `ArrivalSource::replay` trace (the debugging escape hatch). Empty
+    /// when `clients.retain_realized = false`.
     pub realized: Vec<ArrivedRequest>,
+    /// Maximum of the concurrency walk — computed incrementally, so it is
+    /// exact in both retention modes.
+    pub peak_concurrency: i64,
+    /// [`crate::workload::arrivals_digest`] of the realized timeline,
+    /// streamed at issue — equal to the digest of `realized` whenever that
+    /// vector is retained, and still exact when it is not.
+    pub realized_digest: u64,
+    /// [`concurrency_digest`] of the canonical concurrency series,
+    /// computed incrementally over sorted finalized chunks.
+    pub concurrency_digest: u64,
 }
 
-/// The closed-loop client pool. Owns every client's state plus the pending
-/// heap of already-scheduled next turns; the serving engines pull due
-/// arrivals with [`ClientPool::pop_due`] and feed completions back with
+/// The closed-loop client pool. Owns every *active* client's state plus the
+/// pending queue of already-scheduled next turns; the serving engines pull
+/// due arrivals with [`ClientPool::pop_due`] and feed completions back with
 /// [`ClientPool::on_result`].
 #[derive(Debug)]
 pub struct ClientPool {
     spec: ClientsSpec,
     workload: WorkloadSpec,
     vit: VitDesc,
-    zipf: ZipfTable,
+    /// Zipf image-identity table, sized per session like the open-loop
+    /// generator's but built lazily on the first image draw: table
+    /// construction is O(pool) and must stay off the O(1) constructor.
+    zipf: Option<ZipfTable>,
     seed: u64,
-    clients: Vec<Client>,
-    pending: BinaryHeap<Reverse<PendingTurn>>,
+    /// Materialized (admitted, unfinished) clients only.
+    clients: HashMap<usize, Client>,
+    pending: PendingQueue,
     /// request id → client index, for routing completions back.
     in_flight: HashMap<u64, usize>,
     next_id: u64,
     issued: u64,
     completed: u64,
     gave_up: u64,
+    /// Lazy admission frontier: clients `>= frontier` are not yet
+    /// materialized; `frontier_wake_ns` is the envelope's exact admission
+    /// time for client `frontier` (`None` = every remaining client parks
+    /// forever, or the pool is fully materialized).
+    frontier: usize,
+    frontier_wake_ns: Option<u64>,
+    /// Envelope segment cursors (frontier + per-turn gate).
+    cursor: EnvelopeCursor,
+    clients_materialized: u64,
+    peak_pending: usize,
+    /// `clients.retain_realized`.
+    retain: bool,
     realized: Vec<ArrivedRequest>,
-    sessions: Vec<SessionRecord>,
-    /// Raw `(t_ns, delta, id)` events in drain order (canonicalized on
-    /// report — see module docs).
-    conc_events: Vec<(u64, i32, u64)>,
+    realized_fnv: Fnv1a,
+    digest_buf: String,
+    /// Sparse session records, allocated at session start.
+    sessions: HashMap<u64, SessionRecord>,
+    /// Raw `(t_ns, delta, id)` events awaiting finalization. Retaining
+    /// runs accumulate everything here and canonicalize once at report
+    /// time (the original behavior); non-retaining runs finalize sorted
+    /// time-disjoint chunks incrementally, bounding the buffer by
+    /// O(in-flight + same-round events).
+    conc_buf: Vec<(u64, i32, u64)>,
+    /// Finalized (sorted, digested) events — only populated when retaining.
+    conc_done: Vec<(u64, i32, u64)>,
+    conc_fnv: Fnv1a,
+    conc_live: i64,
+    conc_peak: i64,
 }
+
+/// Finalize the concurrency buffer early once it exceeds this many events
+/// (non-retaining runs only). Purely an amortization knob: chunk boundaries
+/// do not affect the walk or the digest (chunks are sorted and
+/// time-disjoint, so their concatenation is the canonical series).
+const CONC_FLUSH: usize = 4096;
 
 impl ClientPool {
     pub fn new(spec: &ClientsSpec, workload: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Self {
-        let total_sessions = spec.clients * spec.sessions;
         // Image identity pool sized like the open-loop generator's, but per
         // *session* (each session draws one image all its turns reuse).
         let mut wl = workload.clone();
-        wl.num_requests = total_sessions;
-        let zipf = image_pool(&wl);
-        let sessions = (0..total_sessions)
-            .map(|uid| SessionRecord {
-                client: uid / spec.sessions,
-                session: uid % spec.sessions,
-                image_key: None,
-                turns_issued: 0,
-                turns_completed: 0,
-                turns_gave_up: 0,
-                first_issue: f64::INFINITY,
-                last_finish: f64::NEG_INFINITY,
-            })
-            .collect();
+        wl.num_requests = spec.clients * spec.sessions;
         let mut pool = Self {
             spec: spec.clone(),
             workload: wl,
             vit: vit.clone(),
-            zipf,
+            zipf: None,
             seed,
-            clients: Vec::with_capacity(spec.clients),
-            pending: BinaryHeap::new(),
+            clients: HashMap::new(),
+            pending: PendingQueue::new(&spec.pending_queue),
             in_flight: HashMap::new(),
             next_id: 0,
             issued: 0,
             completed: 0,
             gave_up: 0,
+            frontier: 0,
+            frontier_wake_ns: None,
+            cursor: EnvelopeCursor::default(),
+            clients_materialized: 0,
+            peak_pending: 0,
+            retain: spec.retain_realized,
             realized: Vec::new(),
-            sessions,
-            conc_events: Vec::new(),
+            realized_fnv: Fnv1a::new(),
+            digest_buf: String::with_capacity(96),
+            sessions: HashMap::new(),
+            conc_buf: Vec::new(),
+            conc_done: Vec::new(),
+            conc_fnv: Fnv1a::new(),
+            conc_live: 0,
+            conc_peak: 0,
         };
-        for c in 0..spec.clients {
-            pool.clients.push(Client {
-                rng: Rng::with_lane(seed, CLIENT_STREAM, c as u64),
-                session: 0,
-                turn: 0,
-                image: None,
-                done: false,
-            });
-            // A client joins when the envelope first admits it, then thinks
-            // before its first query (spreading the initial wave).
-            match envelope_admit_ns(&pool.spec.envelope, 0, (c + 1) as f64) {
-                Some(wake_ns) => {
-                    pool.start_session(c);
-                    pool.schedule_turn(c, wake_ns as f64 / 1e9);
-                }
-                None => pool.clients[c].done = true,
-            }
-        }
+        pool.frontier_wake_ns = pool.next_admission();
+        pool.settle();
         pool
     }
 
-    /// Draw the new current session's image and stamp its record.
+    /// The envelope's exact admission time for the current frontier client,
+    /// via the threshold-monotone cursor (thresholds `c + 1` strictly
+    /// increase with the frontier). `None` parks every remaining client:
+    /// admission times are monotone in the threshold, so once one client
+    /// never crosses, none after it does either.
+    fn next_admission(&mut self) -> Option<u64> {
+        if self.frontier >= self.spec.clients {
+            return None;
+        }
+        self.cursor.admit_from_start(&self.spec.envelope, (self.frontier + 1) as f64)
+    }
+
+    /// Materialize admitted clients until the pending queue provably holds
+    /// the pool's global minimum. A client's first turn lands strictly
+    /// after its admission wake (positive think floor), and unmaterialized
+    /// clients wake no earlier than the frontier, so once the queue's head
+    /// is at or below the frontier wake, [`ClientPool::peek_ns`] is exact
+    /// without touching parked clients. Called after every mutation so
+    /// `peek_ns`/`exhausted` stay `&self`.
+    fn settle(&mut self) {
+        while let Some(wake_ns) = self.frontier_wake_ns {
+            if self.pending.peek_ns().is_some_and(|head| head <= wake_ns) {
+                break;
+            }
+            let c = self.frontier;
+            self.clients.insert(
+                c,
+                Client {
+                    rng: Rng::with_lane(self.seed, CLIENT_STREAM, c as u64),
+                    session: 0,
+                    turn: 0,
+                    image: None,
+                },
+            );
+            self.clients_materialized += 1;
+            // A client joins when the envelope first admits it, then thinks
+            // before its first query (spreading the initial wave) — the
+            // same draw order as the eager constructor.
+            self.start_session(c);
+            self.schedule_turn(c, wake_ns as f64 / 1e9);
+            self.frontier += 1;
+            self.frontier_wake_ns = self.next_admission();
+        }
+    }
+
+    /// Draw the new current session's image and stamp its (sparse) record.
     fn start_session(&mut self, c: usize) {
-        let cl = &mut self.clients[c];
-        cl.image = sample_image(&mut cl.rng, &self.workload, &self.vit, &self.zipf, self.seed);
-        let uid = c * self.spec.sessions + cl.session;
-        self.sessions[uid].image_key = cl.image.map(|i| i.key);
+        let pool_n = image_pool_size(&self.workload);
+        let zipf = self.zipf.get_or_insert_with(|| ZipfTable::new(pool_n, 1.2));
+        let cl = self.clients.get_mut(&c).expect("start_session on live client");
+        cl.image = sample_image(&mut cl.rng, &self.workload, &self.vit, zipf, self.seed);
+        let uid = (c * self.spec.sessions + cl.session) as u64;
+        let rec = self
+            .sessions
+            .entry(uid)
+            .or_insert_with(|| SessionRecord::blank(uid, self.spec.sessions));
+        rec.image_key = cl.image.map(|i| i.key);
     }
 
     /// Draw this turn's text length and think time, then push the turn onto
-    /// the pending heap at `base_s + think`, envelope-gated. A client the
-    /// envelope never re-admits is parked for good (its remaining turns are
-    /// simply never issued — that is what keeps runs terminating).
+    /// the pending queue at `base_s + think`, envelope-gated. A client the
+    /// envelope never re-admits is parked for good — dropped from the map,
+    /// its remaining turns simply never issued (that is what keeps runs
+    /// terminating).
     fn schedule_turn(&mut self, c: usize, base_s: f64) {
-        let uid = (c * self.spec.sessions + self.clients[c].session) as u64;
-        let turn = self.clients[c].turn;
-        let cl = &mut self.clients[c];
+        let cl = self.clients.get_mut(&c).expect("schedule_turn on live client");
+        let uid = (c * self.spec.sessions + cl.session) as u64;
+        let turn = cl.turn;
         let text_tokens = sample_text_tokens(&mut cl.rng, &self.workload);
         let extra = self.spec.think_mean_s - self.spec.think_min_s;
         let think = if extra > 0.0 {
@@ -283,47 +633,59 @@ impl ClientPool {
         };
         let image = cl.image;
         let candidate_ns = sec_to_ns(base_s + think);
-        match envelope_admit_ns(&self.spec.envelope, candidate_ns, (c + 1) as f64) {
-            Some(at_ns) => self.pending.push(Reverse(PendingTurn {
-                at_ns,
-                client: c,
-                spec: RequestSpec {
-                    id: 0, // assigned at issue so id order == arrival order
-                    image,
-                    text_tokens,
-                    output_tokens: self.workload.output_tokens,
-                    session: Some(SessionRef { id: uid, turn }),
-                },
-            })),
-            None => self.clients[c].done = true,
+        match self.cursor.admit_ns(&self.spec.envelope, candidate_ns, (c + 1) as f64) {
+            Some(at_ns) => {
+                self.pending.push(PendingTurn {
+                    at_ns,
+                    client: c,
+                    spec: RequestSpec {
+                        id: 0, // assigned at issue so id order == arrival order
+                        image,
+                        text_tokens,
+                        output_tokens: self.workload.output_tokens,
+                        session: Some(SessionRef { id: uid, turn }),
+                    },
+                });
+                self.peak_pending = self.peak_pending.max(self.pending.len());
+            }
+            None => {
+                self.clients.remove(&c);
+            }
         }
     }
 
-    /// Earliest scheduled next-turn arrival, if any.
+    /// Earliest scheduled next-turn arrival, if any. Exact over the whole
+    /// population: the settle invariant guarantees no unmaterialized client
+    /// could wake earlier.
     pub fn peek_ns(&self) -> Option<u64> {
-        self.pending.peek().map(|Reverse(p)| p.at_ns)
+        self.pending.peek_ns()
     }
 
     /// Issue the head turn if it is due at `now_ns`. Callers loop until
     /// `None` to drain all same-instant arrivals in `(t, client)` order.
     pub fn pop_due(&mut self, now_ns: u64) -> Option<ArrivedRequest> {
-        if self.pending.peek().map(|Reverse(p)| p.at_ns)? > now_ns {
+        if self.pending.peek_ns()? > now_ns {
             return None;
         }
-        let Reverse(mut p) = self.pending.pop().unwrap();
+        let mut p = self.pending.pop().unwrap();
         p.spec.id = self.next_id;
         self.next_id += 1;
         self.issued += 1;
         self.in_flight.insert(p.spec.id, p.client);
-        self.conc_events.push((p.at_ns, 1, p.spec.id));
-        let uid = p.spec.session.unwrap().id as usize;
+        self.push_conc((p.at_ns, 1, p.spec.id), now_ns);
+        let uid = p.spec.session.unwrap().id;
         let arrival = p.at_ns as f64 / 1e9;
-        self.sessions[uid].turns_issued += 1;
-        if arrival < self.sessions[uid].first_issue {
-            self.sessions[uid].first_issue = arrival;
+        let rec = self.sessions.get_mut(&uid).expect("issue against a started session");
+        rec.turns_issued += 1;
+        if arrival < rec.first_issue {
+            rec.first_issue = arrival;
         }
         let req = ArrivedRequest { spec: p.spec, arrival };
-        self.realized.push(req);
+        arrived_update(&mut self.realized_fnv, &mut self.digest_buf, &req);
+        if self.retain {
+            self.realized.push(req);
+        }
+        self.settle();
         Some(req)
     }
 
@@ -336,33 +698,80 @@ impl ClientPool {
             .in_flight
             .remove(&rid)
             .expect("closed-loop completion for a request the pool never issued");
-        self.conc_events.push((sec_to_ns(t_finish), -1, rid));
-        let uid = c * self.spec.sessions + self.clients[c].session;
+        self.conc_buf.push((sec_to_ns(t_finish), -1, rid));
+        let session = self.clients[&c].session;
+        let uid = (c * self.spec.sessions + session) as u64;
+        let rec = self.sessions.get_mut(&uid).expect("completion against a started session");
         if gave_up {
             self.gave_up += 1;
-            self.sessions[uid].turns_gave_up += 1;
+            rec.turns_gave_up += 1;
         } else {
             self.completed += 1;
-            self.sessions[uid].turns_completed += 1;
+            rec.turns_completed += 1;
         }
-        if t_finish > self.sessions[uid].last_finish {
-            self.sessions[uid].last_finish = t_finish;
+        if t_finish > rec.last_finish {
+            rec.last_finish = t_finish;
         }
-        self.clients[c].turn += 1;
-        if self.clients[c].turn as usize >= self.spec.turns {
-            self.clients[c].turn = 0;
-            self.clients[c].session += 1;
-            if self.clients[c].session >= self.spec.sessions {
-                self.clients[c].done = true;
+        let cl = self.clients.get_mut(&c).expect("completion for a live client");
+        cl.turn += 1;
+        if cl.turn as usize >= self.spec.turns {
+            cl.turn = 0;
+            cl.session += 1;
+            if cl.session >= self.spec.sessions {
+                self.clients.remove(&c);
+                self.settle();
                 return;
             }
             self.start_session(c);
         }
         self.schedule_turn(c, t_finish);
+        self.settle();
+    }
+
+    /// Record a concurrency delta; in non-retaining mode, finalize a sorted
+    /// chunk once the buffer is large enough. `safe_ns` is a bound below
+    /// which no further event can appear: both engines deliver every
+    /// completion with `t < now` to the pool before issuing an arrival at
+    /// `now` (single loop: feedback drains after every event in time order,
+    /// arrival class first at ties; sharded: `drain_pool_feedback` runs
+    /// before the bound event of every round).
+    fn push_conc(&mut self, ev: (u64, i32, u64), safe_ns: u64) {
+        self.conc_buf.push(ev);
+        if !self.retain && self.conc_buf.len() >= CONC_FLUSH {
+            self.finalize_conc(safe_ns);
+        }
+    }
+
+    /// Sort the buffer and walk/digest every event strictly below
+    /// `bound_ns`, retaining the rest. Chunks are time-disjoint and each is
+    /// sorted by the canonical `(t, delta, id)` comparator, so the
+    /// concatenation of all finalized chunks is exactly the sorted series —
+    /// the walk and digest are independent of where the boundaries fall
+    /// (and therefore engine-invariant even though engines flush at
+    /// different points).
+    fn finalize_conc(&mut self, bound_ns: u64) {
+        if self.conc_buf.is_empty() {
+            return;
+        }
+        self.conc_buf.sort_unstable();
+        let cut = self.conc_buf.partition_point(|&(t, _, _)| t < bound_ns);
+        if cut == 0 {
+            return;
+        }
+        conc_update(&mut self.conc_fnv, &self.conc_buf[..cut]);
+        for &(_, d, _) in &self.conc_buf[..cut] {
+            self.conc_live += d as i64;
+            self.conc_peak = self.conc_peak.max(self.conc_live);
+        }
+        if self.retain {
+            self.conc_done.extend_from_slice(&self.conc_buf[..cut]);
+        }
+        self.conc_buf.drain(..cut);
     }
 
     /// No arrival will ever come again: nothing pending, nothing in flight
-    /// (every non-done client always has exactly one of the two).
+    /// (every non-done client always has exactly one of the two, and the
+    /// settle invariant folds the admission frontier into "pending").
     pub fn exhausted(&self) -> bool {
         self.pending.is_empty() && self.in_flight.is_empty()
     }
@@ -373,6 +782,23 @@ impl ClientPool {
 
     pub fn issued(&self) -> u64 {
         self.issued
+    }
+
+    /// Clients materialized so far — admitted by the envelope and given
+    /// real state. The O(active) witness: with a bounded envelope this
+    /// stays far below the configured population.
+    pub fn clients_materialized(&self) -> u64 {
+        self.clients_materialized
+    }
+
+    /// High-water mark of the pending queue.
+    pub fn peak_pending(&self) -> u64 {
+        self.peak_pending as u64
+    }
+
+    /// Timer-wheel cascade count (0 on the heap path).
+    pub fn wheel_cascades(&self) -> u64 {
+        self.pending.cascades()
     }
 
     /// Conservative bound on how soon *any* completion can feed back a new
@@ -398,15 +824,31 @@ impl ClientPool {
     /// Extract the run's report, canonicalizing the concurrency series (the
     /// raw drain order is engine-dependent; the multiset is not).
     pub fn take_report(&mut self) -> ClosedLoopReport {
-        let mut concurrency = std::mem::take(&mut self.conc_events);
-        concurrency.sort_unstable();
+        self.finalize_conc(u64::MAX);
+        let sessions = if self.retain {
+            let total = (self.spec.clients * self.spec.sessions) as u64;
+            (0..total)
+                .map(|uid| {
+                    self.sessions
+                        .remove(&uid)
+                        .unwrap_or_else(|| SessionRecord::blank(uid, self.spec.sessions))
+                })
+                .collect()
+        } else {
+            let mut v: Vec<SessionRecord> = self.sessions.drain().map(|(_, r)| r).collect();
+            v.sort_unstable_by_key(|r| (r.client, r.session));
+            v
+        };
         ClosedLoopReport {
             issued: self.issued,
             completed: self.completed,
             gave_up: self.gave_up,
-            sessions: std::mem::take(&mut self.sessions),
-            concurrency,
+            sessions,
+            concurrency: std::mem::take(&mut self.conc_done),
             realized: std::mem::take(&mut self.realized),
+            peak_concurrency: self.conc_peak,
+            realized_digest: self.realized_fnv.finish(),
+            concurrency_digest: self.conc_fnv.finish(),
         }
     }
 }
@@ -415,6 +857,7 @@ impl ClientPool {
 mod tests {
     use super::*;
     use crate::config::ModelDesc;
+    use crate::workload::arrivals_digest;
 
     fn vit() -> VitDesc {
         ModelDesc::openpangu_7b_vl().vit
@@ -429,6 +872,8 @@ mod tests {
             think_mean_s: 0.5,
             think_min_s: 0.01,
             envelope: vec![],
+            pending_queue: "heap".to_string(),
+            retain_realized: true,
         }
     }
 
@@ -462,6 +907,9 @@ mod tests {
     fn empty_envelope_admits_everyone_immediately() {
         assert_eq!(envelope_admit_ns(&[], 42, 1e9), Some(42));
         assert!(envelope_active_at(&[], 0.0).is_infinite());
+        let mut cur = EnvelopeCursor::default();
+        assert_eq!(cur.admit_ns(&[], 42, 1e9), Some(42));
+        assert!(cur.active_at(&[], 0.0).is_infinite());
     }
 
     #[test]
@@ -484,6 +932,71 @@ mod tests {
         assert_eq!(envelope_admit_ns(&env, 0, 101.0), None);
     }
 
+    /// Random envelope with `n` strictly-increasing knots.
+    fn random_env(rng: &mut Rng, n: usize) -> Vec<EnvelopePoint> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += 0.1 + rng.f64() * 20.0;
+                EnvelopePoint { t, active: (rng.f64() * 40.0).floor() }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cursor_matches_scan_on_randomized_envelopes() {
+        // The satellite regression: the segment-cursor evaluator must be
+        // indistinguishable from the O(knots) rescan on every query shape
+        // the pool produces — near-monotone time queries with arbitrary
+        // thresholds, occasional rewinds, and interleaved active_at reads.
+        let mut rng = Rng::new(0xe17);
+        for trial in 0..200 {
+            let env = random_env(&mut rng, 1 + (trial % 9));
+            let mut cur = EnvelopeCursor::default();
+            let mut from_s = 0.0f64;
+            for _ in 0..60 {
+                // Mostly forward, sometimes backward (sharded drains are
+                // only near-monotone in time).
+                if rng.chance(0.15) {
+                    from_s = (from_s - rng.f64() * 30.0).max(0.0);
+                } else {
+                    from_s += rng.f64() * 15.0;
+                }
+                let from_ns = sec_to_ns(from_s);
+                let threshold = (rng.f64() * 45.0).floor();
+                assert_eq!(
+                    cur.admit_ns(&env, from_ns, threshold),
+                    envelope_admit_ns(&env, from_ns, threshold),
+                    "trial {trial}: admit_ns diverged at from_s={from_s} thr={threshold} env={env:?}"
+                );
+                assert_eq!(
+                    cur.active_at(&env, from_s).to_bits(),
+                    envelope_active_at(&env, from_s).to_bits(),
+                    "trial {trial}: active_at diverged at {from_s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_cursor_matches_scan_for_increasing_thresholds() {
+        let mut rng = Rng::new(0xf40);
+        for trial in 0..200 {
+            let env = random_env(&mut rng, 1 + (trial % 7));
+            let mut cur = EnvelopeCursor::default();
+            // Strictly increasing integer thresholds — the admission
+            // frontier's exact query stream (client index + 1).
+            for c in 0..50u64 {
+                assert_eq!(
+                    cur.admit_from_start(&env, (c + 1) as f64),
+                    envelope_admit_ns(&env, 0, (c + 1) as f64),
+                    "trial {trial}: frontier diverged at threshold {}",
+                    c + 1
+                );
+            }
+        }
+    }
+
     #[test]
     fn conservation_every_issued_turn_completes() {
         let mut pool = ClientPool::new(&spec(8, 2, 3), &WorkloadSpec::sharegpt4o(), &vit(), 7);
@@ -503,6 +1016,86 @@ mod tests {
         assert_eq!(report.concurrency.len(), 2 * total as usize);
         assert_eq!(report.concurrency.iter().map(|&(_, d, _)| d as i64).sum::<i64>(), 0);
         assert!(report.concurrency.windows(2).all(|w| w[0] <= w[1]));
+        // The streamed digests match their retained-vector twins, and the
+        // incremental peak matches a walk of the canonical series.
+        assert_eq!(report.realized_digest, arrivals_digest(&report.realized));
+        assert_eq!(report.concurrency_digest, concurrency_digest(&report.concurrency));
+        let (mut live, mut peak) = (0i64, 0i64);
+        for &(_, d, _) in &report.concurrency {
+            live += d as i64;
+            peak = peak.max(live);
+        }
+        assert_eq!(report.peak_concurrency, peak);
+    }
+
+    #[test]
+    fn wheel_pool_is_bit_identical_to_heap_pool() {
+        let wl = WorkloadSpec::sharegpt4o();
+        for (sessions, turns, service) in [(1, 5, 0.3), (2, 3, 0.05), (1, 2, 2.0)] {
+            let mut hs = spec(9, sessions, turns);
+            let mut ws = spec(9, sessions, turns);
+            ws.pending_queue = "wheel".to_string();
+            ws.envelope = vec![
+                EnvelopePoint { t: 0.0, active: 2.0 },
+                EnvelopePoint { t: 2.0, active: 9.0 },
+            ];
+            hs.envelope = ws.envelope.clone();
+            let mut heap = ClientPool::new(&hs, &wl, &vit(), 13);
+            let mut wheel = ClientPool::new(&ws, &wl, &vit(), 13);
+            assert_eq!(drive(&mut heap, service), drive(&mut wheel, service));
+            assert_eq!(heap.take_report(), wheel.take_report());
+        }
+    }
+
+    #[test]
+    fn lazy_materialization_skips_parked_clients() {
+        let mut s = spec(10_000, 1, 2);
+        s.pending_queue = "wheel".to_string();
+        // Only ever 5 active clients: the other 9 995 must never cost a
+        // byte of client state.
+        s.envelope = vec![
+            EnvelopePoint { t: 0.0, active: 5.0 },
+            EnvelopePoint { t: 1000.0, active: 5.0 },
+        ];
+        let mut pool = ClientPool::new(&s, &WorkloadSpec::sharegpt4o(), &vit(), 21);
+        assert_eq!(pool.clients_materialized(), 5, "construction admits only the envelope");
+        let log = drive(&mut pool, 0.1);
+        assert_eq!(pool.clients_materialized(), 5);
+        assert_eq!(log.len(), 10, "5 clients x 2 turns");
+        let report = pool.take_report();
+        assert_eq!(report.issued, 10);
+        // Dense report still covers the whole configured population.
+        assert_eq!(report.sessions.len(), 10_000);
+        assert!(report.sessions[9_999].first_issue.is_infinite());
+    }
+
+    #[test]
+    fn non_retaining_report_matches_retaining_digests() {
+        let wl = WorkloadSpec::sharegpt4o();
+        let mut retain = spec(8, 2, 3);
+        retain.envelope = vec![
+            EnvelopePoint { t: 0.0, active: 3.0 },
+            EnvelopePoint { t: 4.0, active: 8.0 },
+        ];
+        let mut lean = retain.clone();
+        lean.retain_realized = false;
+        let mut a = ClientPool::new(&retain, &wl, &vit(), 17);
+        let mut b = ClientPool::new(&lean, &wl, &vit(), 17);
+        assert_eq!(drive(&mut a, 0.2), drive(&mut b, 0.2));
+        let (ra, rb) = (a.take_report(), b.take_report());
+        assert_eq!((ra.issued, ra.completed, ra.gave_up), (rb.issued, rb.completed, rb.gave_up));
+        assert_eq!(ra.realized_digest, rb.realized_digest);
+        assert_eq!(ra.concurrency_digest, rb.concurrency_digest);
+        assert_eq!(ra.peak_concurrency, rb.peak_concurrency);
+        assert!(rb.realized.is_empty() && rb.concurrency.is_empty());
+        // The lean sessions vector is exactly the started subset of the
+        // dense one, in the same order.
+        let started: Vec<&SessionRecord> =
+            ra.sessions.iter().filter(|s| s.first_issue.is_finite() || s.image_key.is_some()).collect();
+        assert_eq!(started.len(), rb.sessions.len());
+        for (d, l) in started.iter().zip(rb.sessions.iter()) {
+            assert_eq!(*d, &l.clone());
+        }
     }
 
     #[test]

@@ -99,8 +99,53 @@ pub fn generate(spec: &WorkloadSpec, vit: &VitDesc, seed: u64) -> Vec<RequestSpe
 /// generator and the lazy [`stream::WorkloadStream`] so all sample
 /// identical request sequences.
 pub(crate) fn image_pool(spec: &WorkloadSpec) -> ZipfTable {
-    let pool = ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64;
-    ZipfTable::new(pool, 1.2)
+    ZipfTable::new(image_pool_size(spec), 1.2)
+}
+
+/// The Zipf pool size [`image_pool`] builds its table over — exposed
+/// separately so the closed-loop client pool can record the size at
+/// construction but defer the O(pool) table build to the first image draw
+/// (population-scale pools must construct in O(1) of the client count).
+pub(crate) fn image_pool_size(spec: &WorkloadSpec) -> u64 {
+    ((spec.num_requests as f64) * (1.0 - spec.image_reuse)).max(1.0) as u64
+}
+
+/// Bit-exact digest of an arrival trace: every field in a fixed order,
+/// f64s by raw bit pattern, FNV-1a over the serialization — the realized
+/// trace's analogue of `coordinator::metrics::records_digest`. The
+/// closed-loop pool streams the same per-arrival serialization through
+/// [`arrived_update`] so a non-retaining run ([`crate::config::ClientsSpec::
+/// retain_realized`] = false) still pins its realized timeline bit-exactly.
+pub fn arrivals_digest(arrivals: &[ArrivedRequest]) -> u64 {
+    let mut h = crate::util::hash::Fnv1a::new();
+    let mut buf = String::with_capacity(96);
+    for a in arrivals {
+        arrived_update(&mut h, &mut buf, a);
+    }
+    h.finish()
+}
+
+/// One arrival's contribution to [`arrivals_digest`], streamed through a
+/// reusable buffer (chunked FNV-1a hashes identically to the concatenation).
+pub(crate) fn arrived_update(h: &mut crate::util::hash::Fnv1a, buf: &mut String, a: &ArrivedRequest) {
+    use std::fmt::Write as _;
+    buf.clear();
+    let _ = write!(buf, "{}|", a.spec.id);
+    match &a.spec.image {
+        Some(i) => {
+            let _ = write!(buf, "{:016x}.{}x{}.{}|", i.key, i.width, i.height, i.visual_tokens);
+        }
+        None => buf.push_str("-|"),
+    }
+    let _ = write!(buf, "{}|{}|", a.spec.text_tokens, a.spec.output_tokens);
+    match a.spec.session {
+        Some(s) => {
+            let _ = write!(buf, "{}.{}|", s.id, s.turn);
+        }
+        None => buf.push_str("-|"),
+    }
+    let _ = write!(buf, "{:016x};", a.arrival.to_bits());
+    h.update(buf.as_bytes());
 }
 
 /// Sample one request from the dataset statistics. Shared by [`generate`]

@@ -425,7 +425,10 @@ pub enum ArrivalSource {
     /// `Iterator` interface. The serving engines detect it and pull due
     /// turns directly from the pool, feeding completions back. Presampling
     /// lanes never apply (no lanes are reported); every closed-loop arrival
-    /// is a coordination barrier in the sharded engine.
+    /// is a coordination barrier in the sharded engine. The pool is built
+    /// for population scale: its `peek_ns` stays `&self` and exact even
+    /// though clients the envelope has not yet admitted exist only as an
+    /// implicit admission frontier (no per-client state until first wake).
     ClosedLoop(ClientPool),
 }
 

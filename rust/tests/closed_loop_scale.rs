@@ -1,0 +1,190 @@
+//! Randomized differential suite for the population-scale client pool.
+//!
+//! PR 8's closed-loop pool had one pending `BinaryHeap`, eagerly
+//! materialized clients, and unbounded report vectors. The
+//! population-scale rebuild (timer wheel, lazy admission frontier,
+//! bounded-memory reporting) must be **indistinguishable** from that path
+//! on everything the simulator reports. These tests drive randomized
+//! scenarios — envelopes, fault storms, epoch routing — through every
+//! combination of:
+//!
+//! - `clients.pending_queue` ∈ {`heap`, `wheel`}: request records, session
+//!   records, realized trace, and concurrency walk must be bit-identical.
+//! - single loop ≡ sharded engine, for both queues.
+//! - `clients.retain_realized` ∈ {true, false}: the lean run must produce
+//!   the same streaming digests, peak concurrency, and summary stats as
+//!   the retaining run while holding no realized/concurrency vectors.
+//!
+//! The scenarios are generated from a seeded [`Rng`] so failures replay.
+
+use epd_serve::config::{Config, EnvelopePoint};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim, SimOutcome};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::util::rng::Rng;
+use epd_serve::workload::arrivals_digest;
+use epd_serve::workload::clients::concurrency_digest;
+
+fn base_cfg(clients: usize, turns: usize, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx2".to_string();
+    cfg.seed = seed;
+    cfg.clients.enabled = true;
+    cfg.clients.clients = clients;
+    cfg.clients.sessions = 1;
+    cfg.clients.turns = turns;
+    cfg.clients.think_mean_s = 0.4;
+    cfg.clients.think_min_s = 0.05;
+    cfg.workload.image_reuse = 0.3;
+    cfg
+}
+
+/// A random scenario: ramping envelope (always ending high enough to admit
+/// a majority, so every trial does real work), optionally a fault
+/// down/up pair, and epoch-batched affinity routing on odd trials.
+fn random_scenario(rng: &mut Rng, trial: u64) -> Config {
+    let clients = 6 + (rng.f64() * 8.0) as usize;
+    let turns = 2 + (trial % 2) as usize;
+    let mut cfg = base_cfg(clients, turns, 0x5ca1e + trial);
+    let knots = 2 + (rng.f64() * 3.0) as usize;
+    let mut t = 0.0;
+    let mut env = Vec::new();
+    for _ in 0..knots {
+        env.push(EnvelopePoint { t, active: (rng.f64() * clients as f64).floor() });
+        t += 0.5 + rng.f64() * 3.0;
+    }
+    env.push(EnvelopePoint { t, active: clients as f64 });
+    cfg.clients.envelope = env;
+    if rng.chance(0.5) {
+        let down = 0.5 + rng.f64() * 2.0;
+        cfg.faults.events = vec![
+            FaultEvent { t: down, kind: FaultKind::InstanceDown { inst: 1 } },
+            FaultEvent { t: down + 1.0 + rng.f64() * 3.0, kind: FaultKind::InstanceUp { inst: 1 } },
+        ];
+    }
+    if trial % 2 == 1 {
+        cfg.scheduler.route_policy = "session_affinity".to_string();
+        cfg.scheduler.route_epoch = 8;
+    }
+    cfg
+}
+
+fn run_single(cfg: &Config) -> SimOutcome {
+    run_serving(cfg).unwrap()
+}
+
+fn run_sharded(cfg: &Config) -> SimOutcome {
+    ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded()
+}
+
+#[test]
+fn wheel_is_bit_identical_to_heap_on_randomized_scenarios() {
+    let mut rng = Rng::new(0xd1ff);
+    for trial in 0..6 {
+        let heap_cfg = random_scenario(&mut rng, trial);
+        let mut wheel_cfg = heap_cfg.clone();
+        wheel_cfg.clients.pending_queue = "wheel".to_string();
+
+        let h1 = run_single(&heap_cfg);
+        let w1 = run_single(&wheel_cfg);
+        assert_eq!(
+            h1.metrics.records, w1.metrics.records,
+            "trial {trial}: wheel and heap must route/serve identical records"
+        );
+        assert_eq!(h1.closed_loop, w1.closed_loop, "trial {trial}: full report must match");
+        assert_eq!(h1.wheel_cascades, 0, "heap path must report no cascades");
+
+        let h2 = run_sharded(&heap_cfg);
+        let w2 = run_sharded(&wheel_cfg);
+        assert_eq!(h1.metrics.records, h2.metrics.records, "trial {trial}: heap single ≡ sharded");
+        assert_eq!(h1.closed_loop, h2.closed_loop);
+        assert_eq!(w1.metrics.records, w2.metrics.records, "trial {trial}: wheel single ≡ sharded");
+        assert_eq!(w1.closed_loop, w2.closed_loop);
+        // The scale counters are pool-side state, engine-invariant too.
+        assert_eq!(h1.pool_peak_pending, h2.pool_peak_pending);
+        assert_eq!(w1.wheel_cascades, w2.wheel_cascades);
+        assert_eq!(h1.clients_materialized, h2.clients_materialized);
+        assert_eq!(h1.clients_materialized, w1.clients_materialized);
+        assert!(h1.pool_peak_pending >= 1, "trial {trial}: some turn must have been pending");
+
+        let report = h1.closed_loop.as_ref().unwrap();
+        assert_eq!(report.completed + report.gave_up, report.issued);
+        // The streamed digests agree with digests recomputed from the
+        // retained vectors — on every path.
+        assert_eq!(report.realized_digest, arrivals_digest(&report.realized));
+        assert_eq!(report.concurrency_digest, concurrency_digest(&report.concurrency));
+    }
+}
+
+#[test]
+fn non_retaining_runs_match_retaining_digests_and_stats() {
+    let mut rng = Rng::new(0x1ea4);
+    for trial in 0..4 {
+        let retain_cfg = {
+            let mut c = random_scenario(&mut rng, trial);
+            c.clients.pending_queue = "wheel".to_string();
+            c
+        };
+        let mut lean_cfg = retain_cfg.clone();
+        lean_cfg.clients.retain_realized = false;
+
+        for (full, lean) in [
+            (run_single(&retain_cfg), run_single(&lean_cfg)),
+            (run_sharded(&retain_cfg), run_sharded(&lean_cfg)),
+        ] {
+            assert_eq!(
+                full.metrics.records, lean.metrics.records,
+                "trial {trial}: retention must not affect what gets served"
+            );
+            let (rf, rl) = (full.closed_loop.unwrap(), lean.closed_loop.unwrap());
+            assert!(rl.realized.is_empty(), "lean run must not retain the realized trace");
+            assert!(rl.concurrency.is_empty(), "lean run must not retain concurrency deltas");
+            assert_eq!((rf.issued, rf.completed, rf.gave_up), (rl.issued, rl.completed, rl.gave_up));
+            assert_eq!(rf.realized_digest, rl.realized_digest, "trial {trial}");
+            assert_eq!(rf.concurrency_digest, rl.concurrency_digest, "trial {trial}");
+            assert_eq!(rf.peak_concurrency, rl.peak_concurrency, "trial {trial}");
+            assert_eq!(rf.realized_digest, arrivals_digest(&rf.realized));
+            assert_eq!(rf.concurrency_digest, concurrency_digest(&rf.concurrency));
+            // Lean sessions are exactly the started subset of the dense
+            // vector, in (client, session) order.
+            let started: Vec<_> =
+                rf.sessions.iter().filter(|s| s.turns_issued > 0 || s.image_key.is_some()).collect();
+            assert_eq!(started.len(), rl.sessions.len(), "trial {trial}");
+            for (d, l) in started.into_iter().zip(rl.sessions.iter()) {
+                assert_eq!(d, l, "trial {trial}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_envelope_keeps_materialization_at_the_active_set() {
+    // 5 000 configured clients but the envelope never asks for more than 6:
+    // the lazy frontier must leave the other ~4 994 as pure arithmetic.
+    let mut cfg = base_cfg(5_000, 2, 7);
+    cfg.clients.pending_queue = "wheel".to_string();
+    cfg.clients.envelope = vec![
+        EnvelopePoint { t: 0.0, active: 6.0 },
+        EnvelopePoint { t: 600.0, active: 6.0 },
+    ];
+    let out = run_single(&cfg);
+    let report = out.closed_loop.as_ref().unwrap();
+    assert_eq!(report.issued, 12, "6 admitted clients x 2 turns");
+    assert_eq!(out.clients_materialized, 6, "parked clients must never materialize");
+    assert!(
+        out.pool_peak_pending <= 6,
+        "pending queue must be bounded by the active set, got {}",
+        out.pool_peak_pending
+    );
+    // The dense report still spans the whole configured population.
+    assert_eq!(report.sessions.len(), 5_000);
+    assert!(report.sessions[4_999].first_issue.is_infinite());
+
+    // Same scenario, same records, on the heap path — lazy admission is a
+    // pool property, not a queue property.
+    let mut heap_cfg = cfg.clone();
+    heap_cfg.clients.pending_queue = "heap".to_string();
+    let heap_out = run_single(&heap_cfg);
+    assert_eq!(out.metrics.records, heap_out.metrics.records);
+    assert_eq!(out.closed_loop, heap_out.closed_loop);
+    assert_eq!(heap_out.clients_materialized, 6);
+}

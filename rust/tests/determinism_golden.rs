@@ -377,6 +377,33 @@ fn closed_loop_trajectory_pinned() {
         "realized trace must replay open-loop to the same records"
     );
 
+    // Population-scale layers: the timer-wheel pending queue and the lazy
+    // admission frontier must be unobservable — same records, same full
+    // closed-loop report — on both engines.
+    let mut wheel_cfg = cfg.clone();
+    wheel_cfg.clients.pending_queue = "wheel".to_string();
+    let wheel = run_serving(&wheel_cfg).unwrap();
+    assert_eq!(
+        fused.metrics.records, wheel.metrics.records,
+        "wheel pending queue must be bit-identical to the heap path"
+    );
+    assert_eq!(fused.closed_loop, wheel.closed_loop);
+    let wheel_sharded = ServingSim::closed_loop(wheel_cfg).unwrap().run_sharded();
+    assert_eq!(fused.metrics.records, wheel_sharded.metrics.records);
+    assert_eq!(fused.closed_loop, wheel_sharded.closed_loop);
+
+    // Bounded-memory reporting: dropping the realized/concurrency vectors
+    // must leave the served records and the streaming digests untouched.
+    let mut lean_cfg = cfg.clone();
+    lean_cfg.clients.retain_realized = false;
+    let lean = run_serving(&lean_cfg).unwrap();
+    assert_eq!(fused.metrics.records, lean.metrics.records);
+    let lean_report = lean.closed_loop.as_ref().unwrap();
+    assert!(lean_report.realized.is_empty() && lean_report.concurrency.is_empty());
+    assert_eq!(report.realized_digest, lean_report.realized_digest);
+    assert_eq!(report.concurrency_digest, lean_report.concurrency_digest);
+    assert_eq!(report.peak_concurrency, lean_report.peak_concurrency);
+
     assert_golden("closed_loop_x2", records_digest(&fused.metrics.records));
 }
 
