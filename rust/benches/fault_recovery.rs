@@ -84,10 +84,12 @@ fn main() -> anyhow::Result<()> {
     )
     .opt_default("requests", "2000", "requests in the trace")
     .opt_default("rate", "8", "open-loop arrival rate, req/s")
+    .opt("recovery-slo-s", "recovery-time SLO: fail if the post-revival backlog drain exceeds this")
     .flag("bench", "ignored (cargo bench passes this to bench binaries)")
     .parse_env();
     let requests = args.get_usize("requests").unwrap();
     let rate = args.get_f64("rate").unwrap();
+    let recovery_slo_s = args.get_f64("recovery-slo-s");
 
     let mut cfg = Config::default();
     cfg.deployment = "E-P-D-Dx2".to_string();
@@ -244,6 +246,15 @@ fn main() -> anyhow::Result<()> {
         faulted.metrics.total_retries(),
         faulted.metrics.gave_up()
     );
+    // Optional recovery-time SLO gate: score the storm pass/fail against a
+    // drain-time budget (`--recovery-slo-s`), for CI regression tracking.
+    let recovery_slo_met = recovery_slo_s.map(|slo| recovery_s <= slo);
+    if let (Some(slo), Some(met)) = (recovery_slo_s, recovery_slo_met) {
+        println!(
+            "recovery SLO {slo:.1} s: {}",
+            if met { "PASS" } else { "FAIL" }
+        );
+    }
 
     // ---- JSON artifacts ---------------------------------------------------
     let mut dump = Json::obj();
@@ -263,11 +274,21 @@ fn main() -> anyhow::Result<()> {
         .set("faults_applied", faulted.faults_applied)
         .set("faults_skipped", faulted.faults_skipped)
         .set("engine_invariant", true);
+    if let Some(slo) = recovery_slo_s {
+        dump.set("recovery_slo_s", slo)
+            .set("recovery_slo_met", recovery_slo_met.unwrap_or(false));
+    }
 
     let root = repo_root().join("BENCH_fault_recovery.json");
     std::fs::write(&root, dump.to_string_pretty())?;
     println!("fault-recovery trajectory written to {}", root.display());
     let path = save_json("fault_recovery", &dump)?;
     println!("results saved to {path}");
+    if recovery_slo_met == Some(false) {
+        anyhow::bail!(
+            "recovery-time SLO violated: {recovery_s:.1} s > {:.1} s budget",
+            recovery_slo_s.unwrap()
+        );
+    }
     Ok(())
 }

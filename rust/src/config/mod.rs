@@ -7,6 +7,7 @@
 //! benches run without any file I/O.
 
 use crate::sim::faults::{FaultEvent, FaultKind};
+use crate::tenancy::TenantClass;
 use crate::util::json::Json;
 use crate::util::toml;
 use anyhow::{bail, Context, Result};
@@ -430,6 +431,17 @@ pub struct SchedulerSpec {
     /// (`tests/residency_census.rs` pins it), kept for baseline
     /// measurement and bisection like `fuse_decode_steps`.
     pub residency_deltas: bool,
+    /// `priority_preempt` starvation bound: a queued request bypassed this
+    /// many times by higher-priority tiers is promoted to the top tier for
+    /// its next selection (aging). Must be >= 1; only read by the
+    /// `priority_preempt` batch policy.
+    pub preempt_aging: usize,
+    /// `fault_aware` route/balance policies: a replica with a death,
+    /// revival, or brownout committed within this many seconds of the
+    /// routing decision is de-prioritized (skipped while any clean
+    /// candidate exists). Must be finite and >= 0; only read by the
+    /// `fault_aware` policies.
+    pub fault_penalty_s: f64,
 }
 
 /// P-D KV transmission strategy.
@@ -464,6 +476,8 @@ impl Default for SchedulerSpec {
             balance_kv_threshold: 0.9,
             balance_kv_penalty: 50.0,
             residency_deltas: true,
+            preempt_aging: 4,
+            fault_penalty_s: 60.0,
         }
     }
 }
@@ -667,6 +681,17 @@ pub struct ClientsSpec {
     /// multi-million-turn run holds O(in-flight + active clients) memory —
     /// at the cost of the replay-trace escape hatch.
     pub retain_realized: bool,
+    /// Client patience, seconds. `0` (default) = infinite patience: clients
+    /// wait forever for completions (the pre-patience behavior,
+    /// bit-identical). When positive, a client **abandons** a turn whose
+    /// completion has not arrived within `patience_s` of its issue: the
+    /// request is recorded as abandoned, the session advances (next turn
+    /// issues after a think from the abandonment time), and the server-side
+    /// work still runs to completion — so tail latency feeds back into
+    /// offered load. The abandonment deadline rides the same pending
+    /// heap/timer-wheel as turn wake-ups (wheel ≡ heap is pinned by
+    /// `tests/closed_loop_scale.rs`).
+    pub patience_s: f64,
 }
 
 impl Default for ClientsSpec {
@@ -681,8 +706,25 @@ impl Default for ClientsSpec {
             envelope: Vec::new(),
             pending_queue: "heap".to_string(),
             retain_realized: true,
+            patience_s: 0.0,
         }
     }
+}
+
+/// Multi-tenant serving classes (`[tenants]`; see [`crate::tenancy`]).
+///
+/// The default is an **empty class list**: no tenant is ever stamped, no
+/// RNG stream is consumed, no admission bucket exists — every run is
+/// bit-identical to the pre-tenancy simulator in both engines (the same
+/// zero-overhead off-path contract as `[faults]` and `[clients]`).
+/// Validation here is structural (shares sum to 1, priorities unique,
+/// budgets >= 0); semantic compilation happens in
+/// [`crate::tenancy::TenantSet::build`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenancySpec {
+    /// Tenant classes (`[[tenants.class]]`), in config order; a request's
+    /// `tenant` index refers into this list.
+    pub classes: Vec<TenantClass>,
 }
 
 /// Top-level experiment config.
@@ -704,6 +746,8 @@ pub struct Config {
     pub faults: FaultsSpec,
     /// Closed-loop client pool (disabled = open-loop arrivals).
     pub clients: ClientsSpec,
+    /// Multi-tenant serving classes (empty = untenanted).
+    pub tenants: TenancySpec,
     /// SLO constraints used for attainment accounting.
     pub slo: SloSpec,
     /// Deployment notation string, e.g. `"(E-P)-D"`.
@@ -726,6 +770,7 @@ impl Default for Config {
             simulator: SimulatorSpec::default(),
             faults: FaultsSpec::default(),
             clients: ClientsSpec::default(),
+            tenants: TenancySpec::default(),
             slo: SloSpec::decode_disagg(),
             deployment: "E-P-D".to_string(),
             rate: 2.0,
@@ -883,6 +928,18 @@ impl Config {
             }
             if let Some(v) = sc.get("residency_deltas").and_then(Json::as_bool) {
                 s.residency_deltas = v;
+            }
+            if let Some(v) = sc.get("preempt_aging").and_then(Json::as_f64) {
+                if v < 1.0 || v.fract() != 0.0 {
+                    bail!("scheduler.preempt_aging must be a positive integer, got {v}");
+                }
+                s.preempt_aging = v as usize;
+            }
+            if let Some(v) = sc.get("fault_penalty_s").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("scheduler.fault_penalty_s must be finite and >= 0, got {v}");
+                }
+                s.fault_penalty_s = v;
             }
         }
         if let Some(rc) = doc.get("reconfig") {
@@ -1093,6 +1150,100 @@ impl Config {
             }
             if let Some(v) = cl.get("retain_realized").and_then(Json::as_bool) {
                 c.retain_realized = v;
+            }
+            if let Some(v) = cl.get("patience_s").and_then(Json::as_f64) {
+                if !v.is_finite() || v < 0.0 {
+                    bail!(
+                        "clients.patience_s must be finite and >= 0 (0 = infinite patience), \
+                         got {v}"
+                    );
+                }
+                c.patience_s = v;
+            }
+        }
+        if let Some(ts) = doc.get("tenants") {
+            if let Some(classes) = ts.get("class").and_then(Json::as_arr) {
+                if classes.len() > 64 {
+                    bail!("tenants: at most 64 classes are supported, got {}", classes.len());
+                }
+                for (i, c) in classes.iter().enumerate() {
+                    let name = c
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("tenants.class[{i}]: missing 'name'"))?
+                        .to_string();
+                    if name.is_empty() {
+                        bail!("tenants.class[{i}]: name must be non-empty");
+                    }
+                    if cfg.tenants.classes.iter().any(|p| p.name == name) {
+                        bail!("tenants.class[{i}]: duplicate name '{name}'");
+                    }
+                    let share = c
+                        .get("share")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("tenants.class[{i}]: missing 'share'"))?;
+                    if !share.is_finite() || share <= 0.0 || share > 1.0 {
+                        bail!("tenants.class[{i}]: share must be in (0, 1], got {share}");
+                    }
+                    let priority = c.get("priority").and_then(Json::as_f64).ok_or_else(|| {
+                        anyhow::anyhow!("tenants.class[{i}]: missing 'priority'")
+                    })?;
+                    if priority < 0.0 || priority.fract() != 0.0 {
+                        bail!(
+                            "tenants.class[{i}]: priority must be a non-negative integer, \
+                             got {priority}"
+                        );
+                    }
+                    if cfg.tenants.classes.iter().any(|p| p.priority == priority as u32) {
+                        bail!(
+                            "tenants.class[{i}]: duplicate priority {priority} (tiers must be \
+                             unique so the preemption order is total)"
+                        );
+                    }
+                    let mut ttft_ms = 0.0;
+                    let mut tpot_ms = 0.0;
+                    for (key, field) in [("ttft_ms", &mut ttft_ms), ("tpot_ms", &mut tpot_ms)] {
+                        if let Some(v) = c.get(key).and_then(Json::as_f64) {
+                            if !v.is_finite() || v < 0.0 {
+                                bail!(
+                                    "tenants.class[{i}]: {key} must be finite and >= 0 \
+                                     (0 inherits [slo]), got {v}"
+                                );
+                            }
+                            *field = v;
+                        }
+                    }
+                    let mut rate_budget = 0.0;
+                    if let Some(v) = c.get("rate_budget").and_then(Json::as_f64) {
+                        if !v.is_finite() || v < 0.0 {
+                            bail!(
+                                "tenants.class[{i}]: rate_budget must be finite and >= 0 \
+                                 (0 = unlimited), got {v}"
+                            );
+                        }
+                        rate_budget = v;
+                    }
+                    let mut burst = 1.0;
+                    if let Some(v) = c.get("burst").and_then(Json::as_f64) {
+                        if !v.is_finite() || v < 1.0 {
+                            bail!("tenants.class[{i}]: burst must be finite and >= 1, got {v}");
+                        }
+                        burst = v;
+                    }
+                    cfg.tenants.classes.push(TenantClass {
+                        name,
+                        share,
+                        priority: priority as u32,
+                        ttft_ms,
+                        tpot_ms,
+                        rate_budget,
+                        burst,
+                    });
+                }
+                let sum: f64 = cfg.tenants.classes.iter().map(|c| c.share).sum();
+                if !cfg.tenants.classes.is_empty() && (sum - 1.0).abs() > 1e-6 {
+                    bail!("tenants: class shares must sum to 1 (got {sum})");
+                }
             }
         }
         Ok(cfg)
@@ -1484,6 +1635,106 @@ active = 50
             "[[clients.envelope]]\nt = 5\nactive = 10\n\n[[clients.envelope]]\nt = 5\nactive = 20\n",
             "[[clients.envelope]]\nt = 9\nactive = 10\n\n[[clients.envelope]]\nt = 3\nactive = 20\n",
             "[clients]\npending_queue = \"calendar\"\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
+        }
+    }
+
+    #[test]
+    fn tenants_section_round_trips() {
+        let doc = crate::util::toml::parse(
+            r#"
+[[tenants.class]]
+name = "premium"
+share = 0.2
+priority = 10
+ttft_ms = 1000
+tpot_ms = 40
+
+[[tenants.class]]
+name = "standard"
+share = 0.5
+priority = 5
+
+[[tenants.class]]
+name = "batch"
+share = 0.3
+priority = 1
+rate_budget = 2.5
+burst = 8
+"#,
+        )
+        .unwrap();
+        let t = Config::from_json(&doc).unwrap().tenants;
+        assert_eq!(t.classes.len(), 3);
+        assert_eq!(t.classes[0].name, "premium");
+        assert_eq!(t.classes[0].share, 0.2);
+        assert_eq!(t.classes[0].priority, 10);
+        assert_eq!(t.classes[0].ttft_ms, 1000.0);
+        assert_eq!(t.classes[0].tpot_ms, 40.0);
+        assert_eq!(t.classes[1].ttft_ms, 0.0, "0 = inherit [slo]");
+        assert_eq!(t.classes[1].rate_budget, 0.0, "0 = unlimited");
+        assert_eq!(t.classes[2].rate_budget, 2.5);
+        assert_eq!(t.classes[2].burst, 8.0);
+        // Default: untenanted — the bit-identical off path.
+        assert!(TenancySpec::default().classes.is_empty(), "tenancy must be opt-in");
+        assert!(Config::default().tenants.classes.is_empty());
+    }
+
+    #[test]
+    fn tenants_rejects_nonsense_at_parse_time() {
+        for bad in [
+            // Missing required keys.
+            "[[tenants.class]]\nshare = 1.0\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\n",
+            // Bad shares: out of range or not summing to 1.
+            "[[tenants.class]]\nname = \"a\"\nshare = 0\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.5\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = -0.5\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 0.4\npriority = 1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 0.6\npriority = 1\n\n\
+             [[tenants.class]]\nname = \"b\"\nshare = 0.6\npriority = 2\n",
+            // Duplicate names / priorities.
+            "[[tenants.class]]\nname = \"a\"\nshare = 0.5\npriority = 1\n\n\
+             [[tenants.class]]\nname = \"a\"\nshare = 0.5\npriority = 2\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 0.5\npriority = 1\n\n\
+             [[tenants.class]]\nname = \"b\"\nshare = 0.5\npriority = 1\n",
+            // Bad priorities / budgets / bursts / SLOs.
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = -1\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = 1.5\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = 1\nrate_budget = -2\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = 1\nburst = 0.5\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = 1\nttft_ms = -5\n",
+            "[[tenants.class]]\nname = \"a\"\nshare = 1.0\npriority = 1\ntpot_ms = -5\n",
+            "[[tenants.class]]\nname = \"\"\nshare = 1.0\npriority = 1\n",
+        ] {
+            let doc = crate::util::toml::parse(bad).unwrap();
+            assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");
+        }
+    }
+
+    #[test]
+    fn patience_and_preempt_knobs_round_trip() {
+        let doc = crate::util::toml::parse(
+            "[clients]\npatience_s = 12.5\n\n\
+             [scheduler]\npreempt_aging = 7\nfault_penalty_s = 30\n",
+        )
+        .unwrap();
+        let cfg = Config::from_json(&doc).unwrap();
+        assert_eq!(cfg.clients.patience_s, 12.5);
+        assert_eq!(cfg.scheduler.preempt_aging, 7);
+        assert_eq!(cfg.scheduler.fault_penalty_s, 30.0);
+        // Defaults: infinite patience, aging after 4 bypasses, 60 s window.
+        assert_eq!(ClientsSpec::default().patience_s, 0.0, "patience must be opt-in");
+        assert_eq!(SchedulerSpec::default().preempt_aging, 4);
+        assert_eq!(SchedulerSpec::default().fault_penalty_s, 60.0);
+        for bad in [
+            "[clients]\npatience_s = -1\n",
+            "[scheduler]\npreempt_aging = 0\n",
+            "[scheduler]\npreempt_aging = 2.5\n",
+            "[scheduler]\nfault_penalty_s = -3\n",
         ] {
             let doc = crate::util::toml::parse(bad).unwrap();
             assert!(Config::from_json(&doc).is_err(), "'{bad}' must be rejected at parse time");

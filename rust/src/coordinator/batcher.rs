@@ -24,6 +24,9 @@ pub struct PrefillItem {
     pub prompt_tokens: usize,
     /// Visual tokens to re-encode locally before prefill (recompute path).
     pub recompute_tokens: usize,
+    /// Tenant-priority rank of the request (0 = top tier; 0 on untenanted
+    /// runs). Read only by priority-aware batch policies.
+    pub priority: u8,
 }
 
 /// Items an encode batcher considers.
@@ -31,6 +34,9 @@ pub struct PrefillItem {
 pub struct EncodeItem {
     pub req: u64,
     pub visual_tokens: usize,
+    /// Tenant-priority rank of the request (0 = top tier; 0 on untenanted
+    /// runs). Read only by priority-aware batch policies.
+    pub priority: u8,
 }
 
 /// Pop an encode batch: up to `max_encode_batch` images FCFS.
@@ -80,13 +86,13 @@ mod tests {
     }
 
     fn pi(req: u64, tokens: usize) -> PrefillItem {
-        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0 }
+        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0, priority: 0 }
     }
 
     #[test]
     fn encode_batch_respects_cap_and_order() {
         let mut q: VecDeque<EncodeItem> =
-            (0..5).map(|i| EncodeItem { req: i, visual_tokens: 100 }).collect();
+            (0..5).map(|i| EncodeItem { req: i, visual_tokens: 100, priority: 0 }).collect();
         let b = form_encode_batch(&mut q, &cfg());
         assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(q.len(), 2);

@@ -3,6 +3,7 @@
 //! TTFT, TPOT — plus per-request records for the Fig 16 scatter plots.
 
 use crate::config::SloSpec;
+use crate::tenancy::TenantSet;
 use crate::util::clock::s_to_ms;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
@@ -30,6 +31,16 @@ pub struct RequestRecord {
     /// Closed-loop session membership as `(session uid, turn)`; `None` on
     /// every open-loop request.
     pub session: Option<(u64, u32)>,
+    /// Tenant class index (`[[tenants.class]]` order); `None` on untenanted
+    /// runs.
+    pub tenant: Option<u8>,
+    /// Rejected by admission control at route time: never served, `ttft`/
+    /// `tpot`/`finish` are `None`, and the request counts as an SLO miss
+    /// for its class.
+    pub shed: bool,
+    /// The closed-loop client walked away at its patience deadline; the
+    /// server-side completion stats are still recorded.
+    pub abandoned: bool,
 }
 
 /// Canonical, bit-exact digest of a record set: every f64 by its raw bit
@@ -68,6 +79,13 @@ pub fn records_digest(records: &[RequestRecord]) -> u64 {
             "{}|{}|{}|{}|",
             r.recomputed as u8, r.feature_reused as u8, r.retries, r.gave_up as u8
         );
+        match r.tenant {
+            Some(t) => {
+                let _ = write!(buf, "{t}|");
+            }
+            None => buf.push_str("-|"),
+        }
+        let _ = write!(buf, "{}|{}|", r.shed as u8, r.abandoned as u8);
         match r.session {
             Some((sid, turn)) => {
                 let _ = write!(buf, "{sid}.{turn};");
@@ -115,6 +133,16 @@ impl RunMetrics {
     /// Requests abandoned after exhausting the fault-retry budget.
     pub fn gave_up(&self) -> usize {
         self.records.iter().filter(|r| r.gave_up).count()
+    }
+
+    /// Requests rejected by admission control (never served).
+    pub fn shed(&self) -> usize {
+        self.records.iter().filter(|r| r.shed).count()
+    }
+
+    /// Closed-loop turns whose client left at the patience deadline.
+    pub fn abandoned(&self) -> usize {
+        self.records.iter().filter(|r| r.abandoned).count()
     }
 
     /// Total fault-recovery re-routes across all requests.
@@ -190,12 +218,66 @@ impl RunMetrics {
         self.tpot_samples().mean()
     }
 
+    /// Per-tenant attainment ledger: each class scored against its *own*
+    /// resolved SLO targets, with shed/abandoned rates and SLO-qualified
+    /// goodput (tokens/s over the run makespan). The bench witness for the
+    /// tentpole claim — priority classes hold attainment under overload
+    /// while best-effort classes degrade (shed/miss) first.
+    pub fn tenant_summary_json(&self, tenants: &TenantSet) -> Json {
+        let mut out = Vec::with_capacity(tenants.len());
+        for (idx, class) in tenants.classes().iter().enumerate() {
+            let slo = tenants.slo_of(idx as u8);
+            let mine: Vec<&RequestRecord> =
+                self.records.iter().filter(|r| r.tenant == Some(idx as u8)).collect();
+            let met = mine.iter().filter(|r| r.meets_slo(&slo)).count();
+            let shed = mine.iter().filter(|r| r.shed).count();
+            let abandoned = mine.iter().filter(|r| r.abandoned).count();
+            let completed = mine.iter().filter(|r| r.finish.is_some()).count();
+            let good_tokens: usize =
+                mine.iter().filter(|r| r.meets_slo(&slo)).map(|r| r.output_tokens).sum();
+            let mut ttft = Samples::new();
+            let mut tpot = Samples::new();
+            for r in &mine {
+                if let Some(t) = r.ttft {
+                    ttft.push(s_to_ms(t));
+                }
+                if let Some(t) = r.tpot {
+                    tpot.push(s_to_ms(t));
+                }
+            }
+            let n = mine.len();
+            let frac = |k: usize| if n == 0 { f64::NAN } else { k as f64 / n as f64 };
+            let mut o = Json::obj();
+            o.set("class", class.name.clone())
+                .set("priority", class.priority as f64)
+                .set("ttft_slo_ms", slo.ttft_ms)
+                .set("tpot_slo_ms", slo.tpot_ms)
+                .set("requests", n)
+                .set("completed", completed)
+                .set("shed", shed)
+                .set("shed_rate", frac(shed))
+                .set("abandoned", abandoned)
+                .set("slo_attainment", frac(met))
+                .set("goodput_tok_s", if self.makespan > 0.0 {
+                    good_tokens as f64 / self.makespan
+                } else {
+                    f64::NAN
+                })
+                .set("ttft", ttft.summary_json())
+                .set("tpot", tpot.summary_json());
+            out.push(o);
+        }
+        Json::Arr(out)
+    }
+
     /// JSON summary (for bench result files).
     pub fn summary_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", self.records.len())
             .set("completed", self.completed())
             .set("gave_up", self.gave_up())
+            .set("shed", self.shed())
+            .set("abandoned", self.abandoned())
             .set("retries", self.total_retries())
             .set("makespan_s", self.makespan)
             .set("num_npus", self.num_npus)
@@ -227,6 +309,9 @@ mod tests {
             retries: 0,
             gave_up: false,
             session: None,
+            tenant: None,
+            shed: false,
+            abandoned: false,
         }
     }
 
@@ -244,6 +329,9 @@ mod tests {
             retries: 0,
             gave_up: false,
             session: None,
+            tenant: None,
+            shed: false,
+            abandoned: false,
         }
     }
 
@@ -325,6 +413,73 @@ mod tests {
             records_digest(&other_turn),
             "turn index must be pinned"
         );
+    }
+
+    #[test]
+    fn digest_pins_tenant_shed_and_abandonment() {
+        let base = vec![rec(1, 10.0, 5.0)];
+        let mut tenanted = base.clone();
+        tenanted[0].tenant = Some(2);
+        let mut other_class = base.clone();
+        other_class[0].tenant = Some(1);
+        let mut shed = vec![failed(1)];
+        shed[0].shed = true;
+        let mut abandoned = base.clone();
+        abandoned[0].abandoned = true;
+        let d0 = records_digest(&base);
+        assert_ne!(d0, records_digest(&tenanted), "tenant class must be pinned");
+        assert_ne!(records_digest(&tenanted), records_digest(&other_class));
+        assert_ne!(records_digest(&[failed(1)]), records_digest(&shed), "shed must be pinned");
+        assert_ne!(d0, records_digest(&abandoned), "abandonment must be pinned");
+    }
+
+    #[test]
+    fn tenant_summary_scores_each_class_against_its_own_slo() {
+        use crate::config::TenancySpec;
+        use crate::tenancy::TenantClass;
+        let cls = |name: &str, share: f64, priority: u32, ttft_ms: f64| TenantClass {
+            name: name.to_string(),
+            share,
+            priority,
+            ttft_ms,
+            tpot_ms: 0.0, // inherit global
+            rate_budget: 0.0,
+            burst: 0.0,
+        };
+        // Premium demands 50 ms TTFT; best-effort tolerates 5000 ms.
+        let set = TenantSet::build(
+            &TenancySpec {
+                classes: vec![cls("premium", 0.5, 10, 50.0), cls("besteffort", 0.5, 1, 5000.0)],
+            },
+            &SloSpec::decode_disagg(),
+        );
+        let mut a = rec(1, 100.0, 5.0); // misses premium's 50 ms TTFT
+        a.tenant = Some(0);
+        let mut b = rec(2, 100.0, 5.0); // meets best-effort's 5000 ms
+        b.tenant = Some(1);
+        let mut c = failed(3);
+        c.tenant = Some(1);
+        c.shed = true;
+        let m = RunMetrics::new(vec![a, b, c], 10.0, 1, SloSpec::decode_disagg());
+        assert_eq!(m.shed(), 1);
+        let j = m.tenant_summary_json(&set);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let premium = &arr[0];
+        assert_eq!(premium.get("class").and_then(Json::as_str), Some("premium"));
+        assert_eq!(premium.get("slo_attainment").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(premium.get("ttft_slo_ms").and_then(Json::as_f64), Some(50.0));
+        let be = &arr[1];
+        // 1 of 2 best-effort requests met (the shed one is a miss).
+        assert_eq!(be.get("slo_attainment").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(be.get("shed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(be.get("shed_rate").and_then(Json::as_f64), Some(0.5));
+        // Goodput: one 64-token SLO-met request over 10 s.
+        assert_eq!(be.get("goodput_tok_s").and_then(Json::as_f64), Some(6.4));
+        // The run-level summary carries the new counters.
+        let s = m.summary_json();
+        assert_eq!(s.get("shed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("abandoned").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

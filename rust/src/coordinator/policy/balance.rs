@@ -90,6 +90,60 @@ impl BalancePolicy for WeightedLeastLoaded {
     }
 }
 
+/// Tenant-priority-aware least-loaded: top-tier picks (rank 0 in
+/// [`PickCtx::priority`], which includes every untenanted pick and every
+/// stage-scope pick) are plain least-loaded; lower tiers are kept off the
+/// least-loaded candidate when there is a choice, reserving it as
+/// headroom for premium traffic — the balance-level twin of
+/// `priority_route`, composable under any route policy that forwards the
+/// request's rank.
+pub struct PriorityBalance;
+
+impl BalancePolicy for PriorityBalance {
+    fn name(&self) -> &'static str {
+        "priority_balance"
+    }
+
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize> {
+        let rank = ctx.priority.unwrap_or(0);
+        if rank == 0 || candidates.len() < 2 {
+            return ctx.table.least_loaded(candidates);
+        }
+        let reserved = ctx.table.least_loaded(candidates)?;
+        let rest: Vec<usize> = candidates.iter().copied().filter(|&i| i != reserved).collect();
+        ctx.table.least_loaded(&rest)
+    }
+}
+
+/// Fault-recency-aware least-loaded: candidates whose replica saw a
+/// death/revival/brownout within `scheduler.fault_penalty_s` of the
+/// decision (read from [`PickCtx::faults`]) are dropped before the
+/// least-loaded rule runs; if that empties the set — or at stage scope,
+/// where no fault ctx is attached because a stage pick never crosses
+/// replicas — the policy degrades to plain least-loaded over the full
+/// set.
+pub struct FaultAwareBalance;
+
+impl BalancePolicy for FaultAwareBalance {
+    fn name(&self) -> &'static str {
+        "fault_aware"
+    }
+
+    fn pick(&mut self, ctx: &PickCtx, candidates: &[usize]) -> Option<usize> {
+        if let Some(f) = &ctx.faults {
+            if !f.history.is_empty() {
+                let window = ctx.scheduler.fault_penalty_s;
+                let clean: Vec<usize> =
+                    candidates.iter().copied().filter(|&i| !f.recent(i, window)).collect();
+                if !clean.is_empty() {
+                    return ctx.table.least_loaded(&clean);
+                }
+            }
+        }
+        ctx.table.least_loaded(candidates)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +222,64 @@ mod tests {
         let ctx = owner.pick(&t, PickScope::Entry);
         let cands = [0, 1, 2, 3];
         assert_eq!(WeightedLeastLoaded.pick(&ctx, &cands), LeastLoaded.pick(&ctx, &cands));
+    }
+
+    #[test]
+    fn priority_balance_reserves_headroom_for_rank_zero() {
+        let mut t = StatusTable::new(3);
+        t.update(0, InstanceStatus { queue_len: 5, ..Default::default() });
+        t.update(2, InstanceStatus { queue_len: 3, ..Default::default() });
+        let owner = owner();
+        // Top tier (and untenanted: priority None) takes the least loaded.
+        let mut ctx = owner.pick(&t, PickScope::Entry);
+        assert_eq!(PriorityBalance.pick(&ctx, &[0, 1, 2]), Some(1));
+        ctx.priority = Some(0);
+        assert_eq!(PriorityBalance.pick(&ctx, &[0, 1, 2]), Some(1));
+        // Lower tiers are kept off it: next-least-loaded instead.
+        ctx.priority = Some(2);
+        assert_eq!(PriorityBalance.pick(&ctx, &[0, 1, 2]), Some(2));
+        // With a single candidate there is no headroom to reserve.
+        assert_eq!(PriorityBalance.pick(&ctx, &[0]), Some(0));
+        assert_eq!(PriorityBalance.pick(&ctx, &[]), None);
+    }
+
+    #[test]
+    fn fault_aware_balance_drops_penalized_replicas_then_degrades() {
+        use crate::coordinator::policy::FaultCtx;
+        let t = StatusTable::new(3);
+        let owner = {
+            let mut o = owner();
+            o.faults.note_down(0, 99.0);
+            o
+        };
+        let mut ctx = owner.pick(&t, PickScope::Entry);
+        let fctx = FaultCtx { history: &owner.faults, dep: &owner.dep, now: 100.0 };
+        ctx.faults = Some(fctx);
+        // E-P-D is one replica — every candidate is penalized, so the
+        // policy must fall back to plain least-loaded, not return None.
+        assert_eq!(FaultAwareBalance.pick(&ctx, &[0, 1, 2]), Some(0));
+        // Outside the window (default 60 s) nothing is penalized.
+        ctx.faults = Some(FaultCtx { history: &owner.faults, dep: &owner.dep, now: 200.0 });
+        assert_eq!(FaultAwareBalance.pick(&ctx, &[0, 1, 2]), Some(0));
+        // Stage scope (no fault ctx): plain least-loaded.
+        ctx.faults = None;
+        assert_eq!(FaultAwareBalance.pick(&ctx, &[0, 1, 2]), Some(0));
+    }
+
+    #[test]
+    fn fault_aware_balance_prefers_the_clean_replica() {
+        use crate::coordinator::policy::FaultCtx;
+        let t = StatusTable::new(6);
+        let owner = {
+            let mut o = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+            o.faults.note_brownout(0, 99.5);
+            o
+        };
+        let mut ctx = owner.pick(&t, PickScope::Entry);
+        ctx.faults = Some(FaultCtx { history: &owner.faults, dep: &owner.dep, now: 100.0 });
+        // Ties would pick instance 1 (replica 0); the brownout penalty
+        // steers to replica 1's prefill instead.
+        assert_eq!(FaultAwareBalance.pick(&ctx, &[1, 4]), Some(4));
     }
 
     #[test]

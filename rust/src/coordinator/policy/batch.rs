@@ -5,7 +5,7 @@ use crate::coordinator::batcher::{
     decode_admission_quota, form_encode_batch, form_prefill_batch, EncodeItem, PrefillItem,
 };
 use crate::coordinator::policy::BatchPolicy;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Default: bounded greedy FCFS batching for Encode/Prefill (count + token
 /// caps) and cap-filling decode admission — the reference free functions in
@@ -100,6 +100,140 @@ impl BatchPolicy for SjfPrefillBatch {
     }
 }
 
+/// Tenant-priority preemptive batching: Encode and Prefill batches drain
+/// the waiting queue in ascending **effective-rank** order (tenant rank 0
+/// first; queue order breaks ties, so within one tier it is FCFS), and
+/// decode admission picks the highest-tier waiting sequence for each slot
+/// via the [`BatchPolicy::pick_decode_admit`] hook — higher tiers claim
+/// admission quota and jump queues ahead of best-effort work.
+///
+/// Starvation is bounded by aging: an item that has been **bypassed**
+/// (left waiting while a batch formed around it) `scheduler.preempt_aging`
+/// times is promoted to effective rank 0, after which FCFS ties guarantee
+/// it boards before any later arrival. So a best-effort request waits at
+/// most `preempt_aging` batch formations plus one queue drain, no matter
+/// how much premium traffic keeps arriving.
+///
+/// Bypass counts are keyed by request id. A request waits in exactly one
+/// instance's queue and both engines instantiate one policy per replica
+/// shard, so the state partitions identically in the single-loop and
+/// sharded engines — the same argument that makes `round_robin`'s
+/// scope-keyed cursors shard-safe. Counts are dropped on selection; a
+/// fault-retried request restarts its aging on the surviving replica.
+///
+/// Selection is O(queue) per admitted item; like `sjf_prefill` this is an
+/// experiment policy, not the million-request hot path.
+#[derive(Default)]
+pub struct PriorityPreempt {
+    /// Request id → times a forming batch bypassed it.
+    bypasses: HashMap<u64, usize>,
+}
+
+impl PriorityPreempt {
+    fn effective_rank(&self, req: u64, rank: u8, aging: usize) -> u8 {
+        if self.bypasses.get(&req).copied().unwrap_or(0) >= aging {
+            0
+        } else {
+            rank
+        }
+    }
+
+    /// Age everyone still waiting after a batch formed around them and
+    /// forget the boarded items' counts.
+    fn settle<I: Copy, F: Fn(&I) -> u64>(&mut self, batch: &[I], queue: &VecDeque<I>, id: F) {
+        for it in batch {
+            self.bypasses.remove(&id(it));
+        }
+        if !batch.is_empty() {
+            for it in queue {
+                *self.bypasses.entry(id(it)).or_insert(0) += 1;
+            }
+        }
+    }
+}
+
+impl BatchPolicy for PriorityPreempt {
+    fn name(&self) -> &'static str {
+        "priority_preempt"
+    }
+
+    fn form_encode_batch(
+        &mut self,
+        queue: &mut VecDeque<EncodeItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<EncodeItem> {
+        let aging = cfg.preempt_aging.max(1);
+        let cap = cfg.max_encode_batch.max(1);
+        let mut batch = Vec::new();
+        while batch.len() < cap {
+            let best = queue
+                .iter()
+                .enumerate()
+                .min_by_key(|&(pos, it)| {
+                    (self.effective_rank(it.req, it.priority, aging), pos)
+                })
+                .map(|(pos, &it)| (pos, it));
+            let Some((pos, item)) = best else { break };
+            batch.push(item);
+            queue.remove(pos);
+        }
+        self.settle(&batch, queue, |it| it.req);
+        batch
+    }
+
+    fn form_prefill_batch(
+        &mut self,
+        queue: &mut VecDeque<PrefillItem>,
+        cfg: &SchedulerSpec,
+    ) -> Vec<PrefillItem> {
+        let aging = cfg.preempt_aging.max(1);
+        let mut batch = Vec::new();
+        let mut tokens = 0usize;
+        loop {
+            let best = queue
+                .iter()
+                .enumerate()
+                .min_by_key(|&(pos, it)| {
+                    (self.effective_rank(it.req, it.priority, aging), pos)
+                })
+                .map(|(pos, &it)| (pos, it));
+            let Some((pos, item)) = best else { break };
+            let would = tokens + item.prompt_tokens;
+            if !batch.is_empty()
+                && (batch.len() >= cfg.max_prefill_batch.max(1) || would > cfg.max_prefill_tokens)
+            {
+                break;
+            }
+            tokens = would;
+            batch.push(item);
+            queue.remove(pos);
+            if batch.len() >= cfg.max_prefill_batch.max(1) {
+                break;
+            }
+        }
+        self.settle(&batch, queue, |it| it.req);
+        batch
+    }
+
+    fn decode_quota(&mut self, active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize {
+        decode_admission_quota(active, waiting, cfg)
+    }
+
+    fn wants_decode_pick(&self) -> bool {
+        true
+    }
+
+    fn pick_decode_admit(&mut self, waiting: &[(u64, u8)]) -> usize {
+        debug_assert!(!waiting.is_empty());
+        waiting
+            .iter()
+            .enumerate()
+            .min_by_key(|&(pos, &(_, rank))| (rank, pos))
+            .map(|(pos, _)| pos)
+            .unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,7 +247,11 @@ mod tests {
     }
 
     fn pi(req: u64, tokens: usize) -> PrefillItem {
-        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0 }
+        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0, priority: 0 }
+    }
+
+    fn pri(req: u64, tokens: usize, priority: u8) -> PrefillItem {
+        PrefillItem { req, prompt_tokens: tokens, recompute_tokens: 0, priority }
     }
 
     #[test]
@@ -146,8 +284,66 @@ mod tests {
     #[test]
     fn sjf_leaves_encode_fcfs() {
         let mut q: VecDeque<EncodeItem> =
-            (0..3).map(|i| EncodeItem { req: i, visual_tokens: 10 }).collect();
+            (0..3).map(|i| EncodeItem { req: i, visual_tokens: 10, priority: 0 }).collect();
         let b = SjfPrefillBatch.form_encode_batch(&mut q, &SchedulerSpec::default());
         assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn priority_preempt_boards_top_tier_first_fcfs_within_tier() {
+        let mut p = PriorityPreempt::default();
+        let mut q: VecDeque<PrefillItem> =
+            [pri(0, 100, 1), pri(1, 100, 0), pri(2, 100, 1), pri(3, 100, 0)].into();
+        let b = p.form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![1, 3, 0]);
+        assert_eq!(q.iter().map(|x| x.req).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn priority_preempt_honors_caps_and_oversized_singleton() {
+        let mut p = PriorityPreempt::default();
+        let mut q: VecDeque<PrefillItem> = [pri(0, 900, 1), pri(1, 200, 0)].into();
+        let b = p.form_prefill_batch(&mut q, &cfg());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![1]);
+        let mut q: VecDeque<PrefillItem> = [pri(0, 99_999, 3)].into();
+        assert_eq!(p.form_prefill_batch(&mut q, &cfg()).len(), 1);
+    }
+
+    #[test]
+    fn priority_preempt_aging_bounds_starvation() {
+        let aging_cfg = SchedulerSpec {
+            max_prefill_batch: 1,
+            max_prefill_tokens: 1000,
+            preempt_aging: 2,
+            ..Default::default()
+        };
+        let mut p = PriorityPreempt::default();
+        // A best-effort item at the front, with premium traffic arriving
+        // behind it every round.
+        let mut q: VecDeque<PrefillItem> = [pri(99, 100, 1), pri(0, 100, 0)].into();
+        assert_eq!(p.form_prefill_batch(&mut q, &aging_cfg)[0].req, 0, "bypass 1");
+        q.push_back(pri(1, 100, 0));
+        assert_eq!(p.form_prefill_batch(&mut q, &aging_cfg)[0].req, 1, "bypass 2");
+        q.push_back(pri(2, 100, 0));
+        // Two bypasses at preempt_aging = 2 promote req 99 to rank 0, and
+        // FCFS tie-break boards it ahead of the newer premium arrival.
+        assert_eq!(p.form_prefill_batch(&mut q, &aging_cfg)[0].req, 99, "aged to the top tier");
+    }
+
+    #[test]
+    fn priority_preempt_encode_and_decode_pick() {
+        let mut p = PriorityPreempt::default();
+        let mut q: VecDeque<EncodeItem> = [
+            EncodeItem { req: 0, visual_tokens: 10, priority: 2 },
+            EncodeItem { req: 1, visual_tokens: 10, priority: 0 },
+        ]
+        .into();
+        let b = p.form_encode_batch(&mut q, &SchedulerSpec::default());
+        assert_eq!(b.iter().map(|x| x.req).collect::<Vec<_>>(), vec![1, 0]);
+        assert!(p.wants_decode_pick());
+        assert_eq!(p.pick_decode_admit(&[(7, 1), (8, 0), (9, 0)]), 1, "top tier, FCFS ties");
+        assert_eq!(p.pick_decode_admit(&[(7, 2)]), 0);
+        // FCFS policies keep the allocation-free front-pop path.
+        assert!(!FcfsBatch.wants_decode_pick());
     }
 }

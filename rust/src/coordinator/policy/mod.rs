@@ -67,10 +67,10 @@ pub mod batch;
 pub mod elastic;
 pub mod route;
 
-pub use balance::{LeastLoaded, RoundRobin, WeightedLeastLoaded};
-pub use batch::{FcfsBatch, SjfPrefillBatch};
+pub use balance::{FaultAwareBalance, LeastLoaded, PriorityBalance, RoundRobin, WeightedLeastLoaded};
+pub use batch::{FcfsBatch, PriorityPreempt, SjfPrefillBatch};
 pub use elastic::{GreedyPressure, PressureHysteresis, ReconfigPolicy};
-pub use route::{CacheAffinity, ModalityPath, SessionAffinity, SloAware};
+pub use route::{CacheAffinity, FaultAware, ModalityPath, PriorityRoute, SessionAffinity, SloAware};
 
 use crate::config::{SchedulerSpec, SloSpec};
 use crate::coordinator::balancer::StatusTable;
@@ -78,6 +78,7 @@ use crate::coordinator::batcher::{EncodeItem, PrefillItem};
 use crate::coordinator::deployment::Deployment;
 use crate::coordinator::router::Route;
 use crate::mmstore::ResidencyDelta;
+use crate::tenancy::{FaultHistory, TenantSet};
 use crate::workload::RequestSpec;
 use anyhow::{bail, Result};
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -338,6 +339,16 @@ pub struct ClusterView {
     /// [`SessionDirectory`] for why this is not refresh-scoped). Always
     /// empty in open-loop runs.
     pub sessions: SessionDirectory,
+    /// Compiled `[tenants]` classes (empty = untenanted). Static for the
+    /// run; lives on the view so priority policies read tenancy through the
+    /// same snapshot surface as everything else.
+    pub tenants: TenantSet,
+    /// Per-replica death/brownout history, stamped by the coordination
+    /// boundary's `commit_fault` **in commit order** (like `sessions`,
+    /// commit order is the coordination-event order in both engines, so
+    /// what a policy observes at any decision is engine-invariant). Empty
+    /// on every fault-free run.
+    pub faults: FaultHistory,
     /// Topology generation `dep`/`cands` reflect — lets a refresh skip the
     /// deployment clone unless an elastic switch actually happened.
     pub(crate) topo_gen: u64,
@@ -356,6 +367,8 @@ impl ClusterView {
             cands: StageCands::build(dep),
             residency: ResidencyView::Fresh,
             sessions: SessionDirectory::default(),
+            tenants: TenantSet::default(),
+            faults: FaultHistory::new(dep.replicas),
             topo_gen: 0,
         }
     }
@@ -409,6 +422,11 @@ pub struct ViewCtx<'a> {
     /// Closed-loop session pins, current as of this routing decision (not
     /// the view stamp — see [`SessionDirectory`]). Empty when open-loop.
     pub sessions: &'a SessionDirectory,
+    /// Compiled tenant classes (empty = untenanted run).
+    pub tenants: &'a TenantSet,
+    /// Per-replica fault history, current as of this routing decision
+    /// (commit-order, like `sessions`). Empty on fault-free runs.
+    pub faults: &'a FaultHistory,
 }
 
 impl<'a> ViewCtx<'a> {
@@ -434,13 +452,54 @@ impl<'a> ViewCtx<'a> {
             prefill_tok_s,
             encode_tok_s,
             sessions: &view.sessions,
+            tenants: &view.tenants,
+            faults: &view.faults,
         }
     }
 
     /// The entry-scoped pick ctx a route policy hands to its
-    /// [`BalancePolicy`] — same snapshot table, [`PickScope::Entry`].
+    /// [`BalancePolicy`] — same snapshot table, [`PickScope::Entry`],
+    /// fault history attached so fault-aware balancing composes with any
+    /// route policy.
     pub fn pick_ctx(&self) -> PickCtx<'a> {
-        PickCtx { table: self.table, scheduler: self.scheduler, scope: PickScope::Entry }
+        PickCtx {
+            table: self.table,
+            scheduler: self.scheduler,
+            scope: PickScope::Entry,
+            priority: None,
+            faults: Some(FaultCtx { history: self.faults, dep: self.dep, now: self.now }),
+        }
+    }
+
+    /// Like [`Self::pick_ctx`] but carrying the request's tenant-priority
+    /// rank (0 = top tier) for priority-aware balancing.
+    pub fn pick_ctx_for(&self, spec: &RequestSpec) -> PickCtx<'a> {
+        let mut ctx = self.pick_ctx();
+        ctx.priority = Some(self.tenants.rank_of(spec.tenant));
+        ctx
+    }
+}
+
+/// Fault-history borrow attached to entry-scoped picks (`None` at stage
+/// scope, where no replica-crossing choice exists anyway — a stage pick
+/// stays inside one replica).
+#[derive(Clone, Copy)]
+pub struct FaultCtx<'a> {
+    pub history: &'a FaultHistory,
+    /// Instance → replica mapping source for recency lookups.
+    pub dep: &'a Deployment,
+    /// Decision time the recency window is anchored at.
+    pub now: f64,
+}
+
+impl<'a> FaultCtx<'a> {
+    /// Did instance `inst`'s replica see a death/revival/brownout within
+    /// `scheduler.fault_penalty_s` of the decision?
+    pub fn recent(&self, inst: usize, window: f64) -> bool {
+        self.dep
+            .instances
+            .get(inst)
+            .is_some_and(|i| self.history.recent(i.replica, self.now, window))
     }
 }
 
@@ -461,6 +520,14 @@ pub struct PickCtx<'a> {
     /// The decision site — the state key for stateful balance policies
     /// (see [`PickScope`]).
     pub scope: PickScope,
+    /// Tenant-priority rank of the request being placed (0 = top tier),
+    /// when the decision site knows it. `None` on untenanted runs and at
+    /// stage scope.
+    pub priority: Option<u8>,
+    /// Fault-history borrow for fault-aware balancing. `None` at stage
+    /// scope (a stage pick never crosses replicas, so recency can't change
+    /// the outcome) — fault-aware policies must degrade gracefully.
+    pub faults: Option<FaultCtx<'a>>,
 }
 
 /// Instance selection among a candidate set — subsumes the hardwired
@@ -536,15 +603,30 @@ pub trait BatchPolicy: Send {
     /// How many waiting sequences a decode step may admit given the current
     /// batch size (KV admission is checked separately by the caller).
     fn decode_quota(&mut self, active: usize, waiting: usize, cfg: &SchedulerSpec) -> usize;
+    /// Whether this policy wants to *choose which* waiting sequence each
+    /// decode-admission slot goes to (not just how many). Default `false`
+    /// keeps the FCFS front-pop hot path allocation-free.
+    fn wants_decode_pick(&self) -> bool {
+        false
+    }
+    /// Pick the index (into `waiting`) of the next sequence to admit.
+    /// `waiting` is `(request id, tenant-priority rank)` in FCFS order;
+    /// only called when [`Self::wants_decode_pick`] is true and `waiting`
+    /// is non-empty. Must return a valid index.
+    fn pick_decode_admit(&mut self, waiting: &[(u64, u8)]) -> usize {
+        debug_assert!(!waiting.is_empty());
+        0
+    }
 }
 
 /// Registered [`RoutePolicy`] names, default first.
 pub const ROUTE_POLICIES: &[&str] =
-    &["modality_path", "cache_affinity", "slo_aware", "session_affinity"];
+    &["modality_path", "cache_affinity", "slo_aware", "session_affinity", "priority_route", "fault_aware"];
 /// Registered [`BalancePolicy`] names, default first.
-pub const BALANCE_POLICIES: &[&str] = &["least_loaded", "round_robin", "weighted_least_loaded"];
+pub const BALANCE_POLICIES: &[&str] =
+    &["least_loaded", "round_robin", "weighted_least_loaded", "priority_balance", "fault_aware"];
 /// Registered [`BatchPolicy`] names, default first.
-pub const BATCH_POLICIES: &[&str] = &["fcfs", "sjf_prefill"];
+pub const BATCH_POLICIES: &[&str] = &["fcfs", "sjf_prefill", "priority_preempt"];
 /// Registered [`ReconfigPolicy`] names, default first.
 pub const RECONFIG_POLICIES: &[&str] = &["pressure_hysteresis", "greedy_pressure"];
 
@@ -555,6 +637,8 @@ pub fn make_route_policy(name: &str) -> Result<Box<dyn RoutePolicy>> {
         "cache_affinity" => Ok(Box::new(CacheAffinity)),
         "slo_aware" => Ok(Box::new(SloAware)),
         "session_affinity" => Ok(Box::new(SessionAffinity)),
+        "priority_route" => Ok(Box::new(PriorityRoute)),
+        "fault_aware" => Ok(Box::new(FaultAware)),
         _ => bail!(
             "unknown route_policy '{name}'; registered: {}",
             ROUTE_POLICIES.join(", ")
@@ -568,6 +652,8 @@ pub fn make_balance_policy(name: &str) -> Result<Box<dyn BalancePolicy>> {
         "least_loaded" => Ok(Box::new(LeastLoaded)),
         "round_robin" => Ok(Box::new(RoundRobin::default())),
         "weighted_least_loaded" => Ok(Box::new(WeightedLeastLoaded)),
+        "priority_balance" => Ok(Box::new(PriorityBalance)),
+        "fault_aware" => Ok(Box::new(FaultAwareBalance)),
         _ => bail!(
             "unknown balance_policy '{name}'; registered: {}",
             BALANCE_POLICIES.join(", ")
@@ -580,6 +666,7 @@ pub fn make_batch_policy(name: &str) -> Result<Box<dyn BatchPolicy>> {
     match name {
         "fcfs" => Ok(Box::new(FcfsBatch)),
         "sjf_prefill" => Ok(Box::new(SjfPrefillBatch)),
+        "priority_preempt" => Ok(Box::new(PriorityPreempt::default())),
         _ => bail!(
             "unknown batch_policy '{name}'; registered: {}",
             BATCH_POLICIES.join(", ")
@@ -622,6 +709,8 @@ pub(crate) mod testutil {
         pub(crate) slo: SloSpec,
         pub(crate) tok_s: (f64, f64),
         pub(crate) sessions: SessionDirectory,
+        pub(crate) tenants: TenantSet,
+        pub(crate) faults: FaultHistory,
     }
 
     impl CtxOwner {
@@ -630,6 +719,7 @@ pub(crate) mod testutil {
         pub(crate) fn new(dep: &str, tok_s: (f64, f64)) -> Self {
             let dep = Deployment::parse(dep).unwrap();
             let cands = StageCands::build(&dep);
+            let faults = FaultHistory::new(dep.replicas);
             Self {
                 dep,
                 cands,
@@ -637,6 +727,8 @@ pub(crate) mod testutil {
                 slo: SloSpec::decode_disagg(),
                 tok_s,
                 sessions: SessionDirectory::default(),
+                tenants: TenantSet::default(),
+                faults,
             }
         }
 
@@ -654,12 +746,15 @@ pub(crate) mod testutil {
                 prefill_tok_s: self.tok_s.0,
                 encode_tok_s: self.tok_s.1,
                 sessions: &self.sessions,
+                tenants: &self.tenants,
+                faults: &self.faults,
             }
         }
 
-        /// A balance-pick ctx over `table` at an arbitrary scope.
+        /// A balance-pick ctx over `table` at an arbitrary scope (no tenant
+        /// priority, no fault history — what a shard-scope pick sees).
         pub(crate) fn pick<'a>(&'a self, table: &'a StatusTable, scope: PickScope) -> PickCtx<'a> {
-            PickCtx { table, scheduler: &self.sched, scope }
+            PickCtx { table, scheduler: &self.sched, scope, priority: None, faults: None }
         }
     }
 }

@@ -239,6 +239,99 @@ impl RoutePolicy for SloAware {
     }
 }
 
+/// Tenant-priority headroom routing: top-tier requests (rank 0, which
+/// includes every request on an untenanted run) behave exactly like
+/// [`ModalityPath`]; lower tiers are kept **off the least-loaded entry
+/// instance**, reserving it as headroom for the next premium arrival.
+/// Under light load the reservation costs best-effort traffic one queue
+/// position; under overload it is what keeps premium TTFT flat while
+/// best-effort degrades — the multi-tenant bench's headline effect.
+///
+/// The request's priority rank also rides the [`PickCtx`]
+/// (via [`ViewCtx::pick_ctx_for`]), so a priority-aware balance policy
+/// composes. Staleness: the reservation reads the same snapshot rows as
+/// every load ranking — at `route_epoch = K` the reserved instance may be
+/// up to K−1 arrivals out of date, a worse reservation, never a wrong one.
+pub struct PriorityRoute;
+
+impl RoutePolicy for PriorityRoute {
+    fn name(&self) -> &'static str {
+        "priority_route"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &ViewCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let candidates = entry_candidates(ctx, want_encode);
+        if candidates.is_empty() {
+            return Err(no_entry_instance(want_encode));
+        }
+        let rank = ctx.tenants.rank_of(spec.tenant);
+        let pool: Vec<usize> = if rank > 0 && candidates.len() > 1 {
+            let reserved = ctx.table.least_loaded(&candidates).expect("non-empty");
+            candidates.iter().copied().filter(|&i| i != reserved).collect()
+        } else {
+            candidates
+        };
+        let instance = balance.pick(&ctx.pick_ctx_for(spec), &pool).expect("non-empty");
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
+/// Fault-recency-aware routing: filters out entry candidates on replicas
+/// that saw a death, revival, or brownout within the last
+/// `scheduler.fault_penalty_s` seconds (read from the commit-order
+/// [`ViewCtx::faults`] history that `commit_fault` stamps), then balances
+/// over the survivors. A just-revived replica comes back with cold
+/// caches and a just-browned-out one may still be degraded; steering
+/// around both for a recovery window avoids stacking new work on the
+/// cluster's weakest replicas. When **every** replica is inside the
+/// penalty window (or the run is fault-free) the full pool is used —
+/// fault history only ever shrinks the choice, never strands a request.
+///
+/// Staleness: fault commits force a view refresh (PR 6), so the history
+/// is never stale across a topology change; within an epoch only the load
+/// ranking ages, like every policy.
+pub struct FaultAware;
+
+impl RoutePolicy for FaultAware {
+    fn name(&self) -> &'static str {
+        "fault_aware"
+    }
+
+    fn route(
+        &mut self,
+        ctx: &ViewCtx,
+        spec: &RequestSpec,
+        feature_resident: bool,
+        balance: &mut dyn BalancePolicy,
+    ) -> Result<Route> {
+        let want_encode = spec.is_multimodal() && !feature_resident;
+        let candidates = entry_candidates(ctx, want_encode);
+        if candidates.is_empty() {
+            return Err(no_entry_instance(want_encode));
+        }
+        let window = ctx.scheduler.fault_penalty_s;
+        let clean: Vec<usize> = if ctx.faults.is_empty() {
+            Vec::new()
+        } else {
+            candidates
+                .iter()
+                .copied()
+                .filter(|&i| !ctx.faults.recent(ctx.dep.instances[i].replica, ctx.now, window))
+                .collect()
+        };
+        let pool = if clean.is_empty() { &candidates } else { &clean };
+        let instance = balance.pick(&ctx.pick_ctx(), pool).expect("non-empty");
+        Ok(to_route(spec, feature_resident, want_encode, instance))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,11 +347,19 @@ mod tests {
             text_tokens: 8,
             output_tokens: 64,
             session: None,
+            tenant: None,
         }
     }
 
     fn text() -> RequestSpec {
-        RequestSpec { id: 2, image: None, text_tokens: 8, output_tokens: 64, session: None }
+        RequestSpec {
+            id: 2,
+            image: None,
+            text_tokens: 8,
+            output_tokens: 64,
+            session: None,
+            tenant: None,
+        }
     }
 
     fn turn(key: u64, sid: u64, t: u32) -> RequestSpec {
@@ -389,6 +490,81 @@ mod tests {
         assert_eq!(r, Route::Prefill { instance: 1, feature_reused: false });
     }
 
+    fn two_tier_owner(dep: &str) -> CtxOwner {
+        use crate::config::TenancySpec;
+        use crate::tenancy::{TenantClass, TenantSet};
+        let mut owner = CtxOwner::new(dep, (0.0, 0.0));
+        let class = |name: &str, share: f64, priority: u32| TenantClass {
+            name: name.into(),
+            share,
+            priority,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        };
+        let spec = TenancySpec { classes: vec![class("premium", 0.5, 10), class("batch", 0.5, 1)] };
+        owner.tenants = TenantSet::build(&spec, &owner.slo);
+        owner
+    }
+
+    #[test]
+    fn priority_route_reserves_the_least_loaded_instance_for_the_top_tier() {
+        let mut table = StatusTable::new(6);
+        // Replica 1's prefill (instance 4) is the least loaded.
+        table.update(1, InstanceStatus { queue_len: 2, ..Default::default() });
+        let owner = two_tier_owner("E-P-Dx2");
+        let ctx = owner.ctx(&table);
+        // Premium (tenant 0 → rank 0) takes the least-loaded instance.
+        let premium = RequestSpec { tenant: Some(0), ..text() };
+        let r = PriorityRoute.route(&ctx, &premium, false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 4, feature_reused: false });
+        // Best-effort (tenant 1 → rank 1) is kept off it: headroom.
+        let batch = RequestSpec { tenant: Some(1), ..text() };
+        let r = PriorityRoute.route(&ctx, &batch, false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 1, feature_reused: false });
+        // Untenanted requests rank top and behave like modality_path.
+        let r = PriorityRoute.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 4, feature_reused: false });
+    }
+
+    #[test]
+    fn fault_aware_steers_around_recently_faulted_replicas() {
+        let table = StatusTable::new(6);
+        let mut owner = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+        // Replica 0 died and came back just before the decision.
+        owner.faults.note_down(0, 95.0);
+        owner.faults.note_up(0, 99.0);
+        let mut ctx = owner.ctx(&table);
+        ctx.now = 100.0;
+        // Ties would otherwise pick instance 0/1; the penalty window
+        // (default 60 s) steers both paths onto replica 1.
+        let r = FaultAware.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Encode(3));
+        let r = FaultAware.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Prefill { instance: 4, feature_reused: false });
+        // Outside the window the penalty expires and routing is normal.
+        ctx.now = 99.0 + owner.sched.fault_penalty_s + 1.0;
+        let r = FaultAware.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap();
+        assert_eq!(r, Route::Encode(0));
+    }
+
+    #[test]
+    fn fault_aware_uses_the_full_pool_when_every_replica_is_penalized() {
+        let table = StatusTable::new(6);
+        let mut owner = CtxOwner::new("E-P-Dx2", (0.0, 0.0));
+        owner.faults.note_brownout(0, 99.0);
+        owner.faults.note_brownout(1, 99.5);
+        let mut ctx = owner.ctx(&table);
+        ctx.now = 100.0;
+        let r = FaultAware.route(&ctx, &text(), false, &mut LeastLoaded).unwrap();
+        assert_eq!(
+            r,
+            Route::Prefill { instance: 1, feature_reused: false },
+            "all-penalized must degrade to plain balancing, not strand the request"
+        );
+    }
+
     #[test]
     fn all_policies_error_without_an_entry_stage() {
         let table = StatusTable::new(2);
@@ -399,6 +575,8 @@ mod tests {
             Box::new(CacheAffinity),
             Box::new(SloAware),
             Box::new(SessionAffinity),
+            Box::new(PriorityRoute),
+            Box::new(FaultAware),
         ];
         for p in &mut policies {
             let e = p.route(&ctx, &mm(7), false, &mut LeastLoaded).unwrap_err().to_string();

@@ -119,7 +119,14 @@ mod tests {
     use crate::workload::{ImageInput, RequestSpec};
 
     fn text_spec() -> RequestSpec {
-        RequestSpec { id: 1, image: None, text_tokens: 10, output_tokens: 64, session: None }
+        RequestSpec {
+            id: 1,
+            image: None,
+            text_tokens: 10,
+            output_tokens: 64,
+            session: None,
+            tenant: None,
+        }
     }
 
     fn mm_spec() -> RequestSpec {
@@ -129,6 +136,7 @@ mod tests {
             text_tokens: 10,
             output_tokens: 64,
             session: None,
+            tenant: None,
         }
     }
 

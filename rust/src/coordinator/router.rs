@@ -23,6 +23,7 @@ use crate::coordinator::deployment::Deployment;
 use crate::coordinator::policy::{
     LeastLoaded, ModalityPath, RoutePolicy, SessionDirectory, StageCands, ViewCtx,
 };
+use crate::tenancy::{FaultHistory, TenantSet};
 use crate::workload::RequestSpec;
 use anyhow::Result;
 
@@ -57,6 +58,10 @@ pub struct Router {
     /// Always empty — the facade routes open-loop requests; closed-loop
     /// session pins live in the serving system's `ClusterView`.
     sessions: SessionDirectory,
+    /// Always empty — tenancy and fault history live on the serving
+    /// system's `ClusterView`; the facade routes untenanted, fault-free.
+    tenants: TenantSet,
+    faults: FaultHistory,
 }
 
 impl Router {
@@ -67,6 +72,8 @@ impl Router {
             scheduler: SchedulerSpec::default(),
             slo: SloSpec::decode_disagg(),
             sessions: SessionDirectory::default(),
+            tenants: TenantSet::default(),
+            faults: FaultHistory::default(),
         }
     }
 
@@ -93,6 +100,8 @@ impl Router {
             prefill_tok_s: 0.0,
             encode_tok_s: 0.0,
             sessions: &self.sessions,
+            tenants: &self.tenants,
+            faults: &self.faults,
         };
         ModalityPath.route(&ctx, spec, feature_resident, &mut LeastLoaded)
     }
@@ -105,7 +114,14 @@ mod tests {
     use crate::workload::ImageInput;
 
     fn text() -> RequestSpec {
-        RequestSpec { id: 1, image: None, text_tokens: 8, output_tokens: 64, session: None }
+        RequestSpec {
+            id: 1,
+            image: None,
+            text_tokens: 8,
+            output_tokens: 64,
+            session: None,
+            tenant: None,
+        }
     }
 
     fn mm() -> RequestSpec {
@@ -115,6 +131,7 @@ mod tests {
             text_tokens: 8,
             output_tokens: 64,
             session: None,
+            tenant: None,
         }
     }
 

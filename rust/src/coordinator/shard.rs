@@ -76,6 +76,9 @@ pub(crate) struct SimShared {
     /// [`crate::coordinator::policy::ViewCtx`] (SLO projections).
     pub prefill_tok_s: f64,
     pub encode_tok_s: f64,
+    /// Compiled `[tenants]` classes (empty = untenanted). Shards read it to
+    /// stamp priority ranks onto stage-queue items.
+    pub tenants: crate::tenancy::TenantSet,
 }
 
 /// Simulation events. All variants except the coordination events
@@ -239,6 +242,10 @@ macro_rules! shard_ctx {
             table: &$self.table,
             scheduler: &$self.shared.cfg.scheduler,
             scope: PickScope::Stage { replica: $self.replica, need: $need },
+            // Stage picks never cross replicas, so neither tenant priority
+            // nor fault recency can change the outcome (see `PickCtx`).
+            priority: None,
+            faults: None,
         }
     };
 }
@@ -514,7 +521,11 @@ impl ReplicaShard {
                     self.pick_instance(StageNeed::Encode)
                 };
                 let img = spec.image.expect("multimodal");
-                let item = EncodeItem { req: rid, visual_tokens: img.visual_tokens };
+                let item = EncodeItem {
+                    req: rid,
+                    visual_tokens: img.visual_tokens,
+                    priority: self.shared.tenants.rank_of(spec.tenant),
+                };
                 self.reqs.get_mut(&rid).expect("just inserted").route.push(inst);
                 let li = inst - self.inst_base;
                 self.insts[li].push_encode(item);
@@ -718,15 +729,16 @@ impl ReplicaShard {
                 self.give_up(rid, now);
                 continue;
             }
-            let visual = {
+            let (visual, tenant) = {
                 let r = self.reqs.get_mut(&rid).expect("displaced request is live");
                 r.state = ReqState::EncodeQueued;
-                r.spec.image.expect("encode-phase request has an image").visual_tokens
+                (r.spec.image.expect("encode-phase request has an image").visual_tokens, r.spec.tenant)
             };
+            let priority = self.shared.tenants.rank_of(tenant);
             let e_inst = self.pick_instance(StageNeed::Encode);
             self.reqs.get_mut(&rid).expect("displaced request is live").route.push(e_inst);
             self.insts[e_inst - self.inst_base]
-                .push_encode(EncodeItem { req: rid, visual_tokens: visual });
+                .push_encode(EncodeItem { req: rid, visual_tokens: visual, priority });
             self.sync_status(e_inst);
             q.at(now, Ev::Kick { inst: e_inst });
         }
@@ -986,6 +998,9 @@ impl ReplicaShard {
                 retries: r.retries,
                 gave_up: r.gave_up,
                 session: r.spec.session.map(|s| (s.id, s.turn)),
+                tenant: r.spec.tenant,
+                shed: false,
+                abandoned: false,
             },
         ));
     }
@@ -1164,7 +1179,24 @@ impl ReplicaShard {
             &self.shared.cfg.scheduler,
         );
         for _ in 0..quota {
-            let Some(&rid) = self.insts[li].decode_waiting.front() else { break };
+            // Priority-aware policies pick *which* waiting sequence each
+            // admission slot goes to; the default stays the allocation-free
+            // FCFS front-pop.
+            let idx = if self.batch.wants_decode_pick() && self.insts[li].decode_waiting.len() > 1
+            {
+                let waiting: Vec<(u64, u8)> = self.insts[li]
+                    .decode_waiting
+                    .iter()
+                    .map(|&r| {
+                        let t = self.reqs.get(&r).expect("waiting request is live").spec.tenant;
+                        (r, self.shared.tenants.rank_of(t))
+                    })
+                    .collect();
+                self.batch.pick_decode_admit(&waiting)
+            } else {
+                0
+            };
+            let Some(&rid) = self.insts[li].decode_waiting.get(idx) else { break };
             let (ctx, need) = {
                 let r = self.reqs.get(&rid).expect("waiting request is live");
                 (r.ctx_tokens(), r.ctx_tokens() + r.spec.output_tokens)
@@ -1180,7 +1212,7 @@ impl ReplicaShard {
             if !admitted {
                 break; // KV pressure: stop admitting until sequences free.
             }
-            self.insts[li].decode_waiting.pop_front();
+            self.insts[li].decode_waiting.remove(idx);
             self.insts[li].decode_active.push(rid);
             self.insts[li].active_ctx += ctx;
             self.reqs.get_mut(&rid).expect("admitted request is live").state = ReqState::Decoding;
@@ -1371,6 +1403,9 @@ impl ReplicaShard {
         };
         let li = inst - self.inst_base;
         let local_encode = self.insts[li].spec.stages.encode;
+        let priority = self.shared.tenants.rank_of(
+            self.reqs.get(&rid).expect("transferring request is live").spec.tenant,
+        );
         let r = self.reqs.get_mut(&rid).expect("transferring request is live");
         let recompute_tokens = match &r.spec.image {
             Some(img) => {
@@ -1396,6 +1431,7 @@ impl ReplicaShard {
             req: rid,
             prompt_tokens: r.spec.prompt_tokens(),
             recompute_tokens,
+            priority,
         };
         self.insts[li].push_prefill(item);
         self.sync_status(inst);

@@ -65,7 +65,7 @@
 
 use crate::coordinator::shard::{Ev, ReplicaShard};
 use crate::coordinator::simserve::{
-    refresh_shard_rows, resident_in_view, ServingSim, SimOutcome,
+    refresh_shard_rows, resident_in_view, Routed, ServingSim, SimOutcome,
 };
 use crate::sim::engine::{self, EventQueue};
 use crate::workload::stream::{ArrivalSource, LaneFeed};
@@ -308,7 +308,9 @@ impl ServingSim {
             rounds = self.closed_loop_rounds(&pool, &mut slots, &mut cq, &mut ticker, horizon_ns);
         }
         while !self.closed_loop {
-            if self.stream_done && done_total(&slots) == self.arrived {
+            // Sheds consumed an id without reaching any shard; they count
+            // toward completion here, mirroring `ServingSim::done`.
+            if self.stream_done && done_total(&slots) + self.shed_records.len() == self.arrived {
                 break;
             }
             let (window_ns, coord_due) = match cq.next_event_ns() {
@@ -326,7 +328,7 @@ impl ServingSim {
             // Re-check after the round: the single loop stops at the
             // finishing event and never handles later-queued coordination
             // events.
-            if self.stream_done && done_total(&slots) == self.arrived {
+            if self.stream_done && done_total(&slots) + self.shed_records.len() == self.arrived {
                 break;
             }
             let (now, ev) = cq.pop_next().expect("coordination event due");
@@ -369,10 +371,21 @@ impl ServingSim {
                             s.as_ref().expect("slot home").shard.feature_resident(k)
                         })
                     });
-                    let (rid, route) = self.route_next(&spec, resident, now);
-                    let r = self.inst_replica[route.target_instance()];
-                    let slot = slots[r].as_mut().expect("slot home");
-                    slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
+                    match self.route_next(&spec, resident, now) {
+                        Routed::Admitted(rid, route) => {
+                            let r = self.inst_replica[route.target_instance()];
+                            let slot = slots[r].as_mut().expect("slot home");
+                            slot.shard.on_routed(
+                                rid,
+                                spec,
+                                arrived.arrival,
+                                route,
+                                now,
+                                &mut slot.q,
+                            );
+                        }
+                        Routed::Shed(rid) => self.record_shed(rid, &spec, arrived.arrival, now),
+                    }
                     // Epoch batcher: pre-route the rest of the epoch
                     // against the frozen view. Stop at the K-th arrival
                     // since the refresh, and at the next pending
@@ -406,13 +419,19 @@ impl ServingSim {
                         // raw arrival f64 — a policy reading ctx.now must
                         // see the same clock in both engines.
                         let decision_now = engine::sec_to_ns(next.arrival) as f64 / 1e9;
-                        let (rid, route) = self.route_next(&spec, resident, decision_now);
-                        let r = self.inst_replica[route.target_instance()];
-                        let slot = slots[r].as_mut().expect("slot home");
-                        slot.q.at_arrival(
-                            next.arrival,
-                            Ev::Deliver { req: rid, spec, arrival: next.arrival, route },
-                        );
+                        match self.route_next(&spec, resident, decision_now) {
+                            Routed::Admitted(rid, route) => {
+                                let r = self.inst_replica[route.target_instance()];
+                                let slot = slots[r].as_mut().expect("slot home");
+                                slot.q.at_arrival(
+                                    next.arrival,
+                                    Ev::Deliver { req: rid, spec, arrival: next.arrival, route },
+                                );
+                            }
+                            Routed::Shed(rid) => {
+                                self.record_shed(rid, &spec, next.arrival, decision_now)
+                            }
+                        }
                     }
                     // Epoch routed: ship the lanes back out with the slots
                     // so the next rounds' workers refill what was consumed.
@@ -504,7 +523,7 @@ impl ServingSim {
         let mut fb: Vec<(u64, f64, bool)> = Vec::new();
         loop {
             self.drain_pool_feedback(slots, &mut fb);
-            if self.stream_done && done_total(slots) == self.arrived {
+            if self.stream_done && done_total(slots) + self.shed_records.len() == self.arrived {
                 break;
             }
             let clients = self.source.pool().expect("closed loop implies pool");
@@ -564,10 +583,14 @@ impl ServingSim {
                 let resident = resident_in_view(&self.view, &spec, |k| {
                     slots.iter().any(|s| s.as_ref().expect("slot home").shard.feature_resident(k))
                 });
-                let (rid, route) = self.route_next(&spec, resident, now);
-                let r = self.inst_replica[route.target_instance()];
-                let slot = slots[r].as_mut().expect("slot home");
-                slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
+                match self.route_next(&spec, resident, now) {
+                    Routed::Admitted(rid, route) => {
+                        let r = self.inst_replica[route.target_instance()];
+                        let slot = slots[r].as_mut().expect("slot home");
+                        slot.shard.on_routed(rid, spec, arrived.arrival, route, now, &mut slot.q);
+                    }
+                    Routed::Shed(rid) => self.record_shed(rid, &spec, arrived.arrival, now),
+                }
             }
             if routed_any {
                 // A same-instant coordination event waits for the next

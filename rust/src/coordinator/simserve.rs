@@ -109,6 +109,7 @@ use crate::mmstore::StoreStats;
 use crate::npu::CostModel;
 use crate::sim::engine::{self, EventQueue, SimModel, Ticker};
 use crate::sim::faults::{FaultKind, FaultSchedule};
+use crate::tenancy::{AdmissionCtl, TenantSet};
 use crate::workload::clients::{ClientPool, ClosedLoopReport};
 use crate::workload::injector::Arrival;
 use crate::workload::stream::ArrivalSource;
@@ -264,6 +265,25 @@ pub struct ServingSim {
     pub(crate) fault_roles: Vec<Option<StageSet>>,
     pub(crate) faults_applied: u64,
     pub(crate) faults_skipped: u64,
+    /// Deterministic per-class token buckets evaluated at route time
+    /// ([`crate::tenancy::AdmissionCtl`]). Inert (always admits) when
+    /// `[tenants]` is empty or no class carries a budget.
+    pub(crate) admission: AdmissionCtl,
+    /// Records of admission-rejected requests, tagged by internal rid like
+    /// shard records and merged (and rid-sorted) with them at finish —
+    /// sheds are first-class outcomes, never silent drops.
+    pub(crate) shed_records: Vec<(u64, RequestRecord)>,
+}
+
+/// Outcome of routing one arrival at the coordination boundary.
+pub(crate) enum Routed {
+    /// Admitted and routed: deliver to the owning shard.
+    Admitted(u64, Route),
+    /// Rejected by admission control: record as shed; the rid and epoch
+    /// slot are consumed exactly as if the request had been admitted, so
+    /// tenancy never perturbs the ids or view-refresh schedule of the
+    /// requests around it.
+    Shed(u64),
 }
 
 impl ServingSim {
@@ -358,7 +378,17 @@ impl ServingSim {
         // view actually snapshots key residency (route_epoch > 1; at K=1
         // the Fresh view live-probes and no census exists to maintain).
         let residency_deltas = route_epoch > 1 && cfg.scheduler.residency_deltas;
-        let shared = Arc::new(SimShared { cfg, cm, prefill_tok_s, encode_tok_s });
+        // Compile `[tenants]` once and stamp the open-loop source at the
+        // yield point (identity when the set is empty, or for replay /
+        // closed-loop sources — traces carry tenants; the client pool
+        // partitions its population below).
+        let tenants = TenantSet::build(&cfg.tenants, &cfg.slo);
+        let mut source = source.stamped(&tenants, cfg.seed);
+        if let Some(pool) = source.pool_mut() {
+            pool.set_tenants(tenants.clone());
+        }
+        let admission = AdmissionCtl::new(&tenants);
+        let shared = Arc::new(SimShared { cfg, cm, prefill_tok_s, encode_tok_s, tenants });
         let closed_loop = source.pool().is_some();
         let mut shards = Vec::with_capacity(dep.replicas);
         for r in 0..dep.replicas {
@@ -374,7 +404,8 @@ impl ServingSim {
         }
         let inst_replica = dep.instances.iter().map(|i| i.replica).collect();
         let npu_replica = (0..dep.num_npus()).map(|n| n / dep.npus_per_replica).collect();
-        let view = ClusterView::new(&dep);
+        let mut view = ClusterView::new(&dep);
+        view.tenants = shared.tenants.clone();
         let cands = StageCands::build(&dep);
         let last_arrival = source.last_arrival();
         let fault_roles = vec![None; dep.instances.len()];
@@ -408,6 +439,8 @@ impl ServingSim {
             fault_roles,
             faults_applied: 0,
             faults_skipped: 0,
+            admission,
+            shed_records: Vec::new(),
         })
     }
 
@@ -529,16 +562,24 @@ impl ServingSim {
     }
 
     /// Route the next arrival against the current view: staleness
-    /// bookkeeping, request-id assignment, policy dispatch, arrival-count
-    /// increment — in that order. The single loop's arrival handler and
-    /// both of the sharded engine's routing sites (barrier arrival,
-    /// epoch-internal pre-route) all go through here, so the recipe —
-    /// including the increment ordering the K=1 bit-exactness and the
-    /// epoch accounting depend on — lives in exactly one place. `now` must
-    /// be the integer-ns-grid decision time (what an event pop delivers).
-    pub(crate) fn route_next(&mut self, spec: &RequestSpec, resident: bool, now: f64) -> (u64, Route) {
+    /// bookkeeping, request-id assignment, admission verdict, policy
+    /// dispatch, arrival-count increment — in that order. The single
+    /// loop's arrival handler and both of the sharded engine's routing
+    /// sites (barrier arrival, epoch-internal pre-route) all go through
+    /// here, so the recipe — including the increment ordering the K=1
+    /// bit-exactness and the epoch accounting depend on — lives in exactly
+    /// one place. `now` must be the integer-ns-grid decision time (what an
+    /// event pop delivers). A shed consumes the rid and the epoch slot but
+    /// never reaches a policy or a shard.
+    pub(crate) fn route_next(&mut self, spec: &RequestSpec, resident: bool, now: f64) -> Routed {
         self.note_route_staleness();
         let rid = self.arrived as u64;
+        if let Some(t) = spec.tenant {
+            if !self.admission.admit(t, now, &self.shared.tenants) {
+                self.arrived += 1;
+                return Routed::Shed(rid);
+            }
+        }
         let route = self.route_one(spec, resident, now);
         if let Some(s) = spec.session {
             // Session directory: routing-order state, not epoch-scoped —
@@ -548,7 +589,40 @@ impl ServingSim {
             self.view.sessions.pin(s.id, self.inst_replica[route.target_instance()]);
         }
         self.arrived += 1;
-        (rid, route)
+        Routed::Admitted(rid, route)
+    }
+
+    /// Record an admission rejection as a first-class outcome: a
+    /// [`RequestRecord`] with `shed = true`, no service timestamps, tagged
+    /// by rid so [`Self::finish`] merges it into trace order. Closed-loop
+    /// sheds additionally feed the client pool (the turn resolves as a
+    /// give-up at the decision time, so the session advances and offered
+    /// load reacts — a shed never strands a client).
+    pub(crate) fn record_shed(&mut self, rid: u64, spec: &RequestSpec, arrival: f64, now: f64) {
+        self.shed_records.push((
+            rid,
+            RequestRecord {
+                id: spec.id,
+                multimodal: spec.image.is_some(),
+                arrival,
+                ttft: None,
+                tpot: None,
+                output_tokens: spec.output_tokens,
+                finish: None,
+                recomputed: false,
+                feature_reused: false,
+                retries: 0,
+                gave_up: false,
+                session: spec.session.map(|s| (s.id, s.turn)),
+                tenant: spec.tenant,
+                shed: true,
+                abandoned: false,
+            },
+        ));
+        if self.closed_loop {
+            let pool = self.source.pool_mut().expect("closed loop implies pool");
+            pool.on_result(rid, now, true);
+        }
     }
 
     /// Evaluate one reconfiguration epoch against collected loads; on a
@@ -576,7 +650,7 @@ impl ServingSim {
     /// generation, view dirtiness — and return the shard-side action for
     /// the owning replica. Shared verbatim by both engines; the caller
     /// applies the action via [`ReplicaShard::apply_fault`].
-    pub(crate) fn commit_fault(&mut self, idx: usize, _now: f64) -> Option<(usize, ShardFaultAction)> {
+    pub(crate) fn commit_fault(&mut self, idx: usize, now: f64) -> Option<(usize, ShardFaultAction)> {
         let f = *self.faults.get(idx);
         match f.kind {
             FaultKind::InstanceDown { inst } => {
@@ -596,7 +670,11 @@ impl ServingSim {
                 self.topo_gen += 1;
                 self.view_dirty = true;
                 self.faults_applied += 1;
-                Some((self.inst_replica[inst], ShardFaultAction::InstanceDown { inst }))
+                let replica = self.inst_replica[inst];
+                // Stamp the view's fault history in commit order — the
+                // signal `fault_aware` route/balance policies steer by.
+                self.view.faults.note_down(replica, now);
+                Some((replica, ShardFaultAction::InstanceDown { inst }))
             }
             FaultKind::InstanceUp { inst } => {
                 let Some(stages) = self.fault_roles[inst].take() else {
@@ -608,18 +686,24 @@ impl ServingSim {
                 self.topo_gen += 1;
                 self.view_dirty = true;
                 self.faults_applied += 1;
-                Some((self.inst_replica[inst], ShardFaultAction::InstanceUp { inst, stages }))
+                let replica = self.inst_replica[inst];
+                self.view.faults.note_up(replica, now);
+                Some((replica, ShardFaultAction::InstanceUp { inst, stages }))
             }
             FaultKind::NpuSlowdown { npu, factor } => {
                 self.faults_applied += 1;
-                Some((self.npu_replica[npu], ShardFaultAction::NpuSlowdown { npu, factor }))
+                let replica = self.npu_replica[npu];
+                self.view.faults.note_brownout(replica, now);
+                Some((replica, ShardFaultAction::NpuSlowdown { npu, factor }))
             }
             FaultKind::LinkDegrade { replica, factor } => {
                 self.faults_applied += 1;
+                self.view.faults.note_brownout(replica, now);
                 Some((replica, ShardFaultAction::LinkDegrade { factor }))
             }
             FaultKind::StoreLoss { replica } => {
                 self.faults_applied += 1;
+                self.view.faults.note_brownout(replica, now);
                 Some((replica, ShardFaultAction::StoreLoss))
             }
         }
@@ -666,9 +750,13 @@ impl ServingSim {
             });
         // Internal request ids are arrival indices (== spec ids for
         // generated workloads; trace replays may carry arbitrary spec ids).
-        let (rid, route) = self.route_next(&spec, resident, now);
-        let r = self.inst_replica[route.target_instance()];
-        self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+        match self.route_next(&spec, resident, now) {
+            Routed::Admitted(rid, route) => {
+                let r = self.inst_replica[route.target_instance()];
+                self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+            }
+            Routed::Shed(rid) => self.record_shed(rid, &spec, arrived.arrival, now),
+        }
         // Keep exactly one pending arrival: schedule the next one now.
         match self.source.next() {
             Some(next) => q.at_arrival(next.arrival, Ev::Arrive(next)),
@@ -707,9 +795,13 @@ impl ServingSim {
         let resident = resident_in_view(&self.view, &spec, |k| {
             self.shards.iter().any(|s| s.feature_resident(k))
         });
-        let (rid, route) = self.route_next(&spec, resident, now);
-        let r = self.inst_replica[route.target_instance()];
-        self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+        match self.route_next(&spec, resident, now) {
+            Routed::Admitted(rid, route) => {
+                let r = self.inst_replica[route.target_instance()];
+                self.shards[r].on_routed(rid, spec, arrived.arrival, route, now, q);
+            }
+            Routed::Shed(rid) => self.record_shed(rid, &spec, arrived.arrival, now),
+        }
     }
 
     /// Close the feedback loop after an event: drain every shard's
@@ -802,8 +894,11 @@ impl ServingSim {
             s.retire_leftovers();
             tagged.append(&mut s.take_records());
         }
+        // Admission sheds are first-class records: merge them back into rid
+        // order so the trace reads exactly as the arrival stream ran.
+        tagged.append(&mut self.shed_records);
         tagged.sort_unstable_by_key(|&(rid, _)| rid);
-        let records: Vec<RequestRecord> = tagged.into_iter().map(|(_, r)| r).collect();
+        let mut records: Vec<RequestRecord> = tagged.into_iter().map(|(_, r)| r).collect();
 
         let makespan = records
             .iter()
@@ -829,15 +924,24 @@ impl ServingSim {
             .map(|p| (p.peak_pending(), p.wheel_cascades(), p.clients_materialized()))
             .unwrap_or((0, 0, 0));
         let closed_loop = self.source.pool_mut().map(|p| p.take_report());
+        // Patience expiries left the request in flight shard-side; stamp
+        // the abandonment on the record so per-tenant accounting sees it.
+        // Records are rid-sorted and rids are dense arrival indices.
+        if let Some(cl) = &closed_loop {
+            for &rid in &cl.abandoned_rids {
+                if let Some(r) = records.get_mut(rid as usize) {
+                    r.abandoned = true;
+                }
+            }
+        }
         // Coordinator-serial-fraction accounting: with a lane-split source,
         // arrivals buffered by `LaneFeed::fill` ahead of the merge were
         // sampled off the serial path (on shard workers in the sharded
-        // engine); everything else was sampled at the consume point.
-        let (arrivals_presampled, arrivals_inline) = match &self.source {
-            ArrivalSource::Lanes(m) => {
-                (m.yielded().saturating_sub(m.sampled_inline()), m.sampled_inline())
-            }
-            _ => (0, self.arrived as u64),
+        // engine); everything else was sampled at the consume point. The
+        // see-through accessor keeps this working under tenant stamping.
+        let (arrivals_presampled, arrivals_inline) = match self.source.lanes() {
+            Some(m) => (m.yielded().saturating_sub(m.sampled_inline()), m.sampled_inline()),
+            None => (0, self.arrived as u64),
         };
         SimOutcome {
             metrics: RunMetrics::new(records, makespan, num_npus, self.shared.cfg.slo),
@@ -984,7 +1088,9 @@ impl SimModel for ServingSim {
     }
 
     fn done(&self) -> bool {
-        self.stream_done && self.done_total() == self.arrived
+        // Shed arrivals consumed an id but never reached a shard, so they
+        // count toward completion here rather than in any shard's tally.
+        self.stream_done && self.done_total() + self.shed_records.len() == self.arrived
     }
 }
 

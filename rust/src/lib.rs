@@ -41,6 +41,7 @@ pub mod npu;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod tenancy;
 pub mod testkit;
 pub mod transport;
 pub mod util;

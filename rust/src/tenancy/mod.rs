@@ -1,0 +1,467 @@
+//! Multi-tenant serving: SLO classes, admission budgets, priority tiers.
+//!
+//! A production deployment serves tenant classes with different latency
+//! contracts competing for the same disaggregated E/P/D capacity. This
+//! module is the single source of truth for tenancy semantics:
+//!
+//! - [`TenantClass`] — one named class: traffic share, priority tier,
+//!   per-class TTFT/TPOT targets, optional admission budget (token bucket).
+//! - [`TenantSet`] — the compiled `[tenants]` section. Stamps open-loop
+//!   arrivals (one RNG draw per request on the dedicated `TENANT_STREAM`)
+//!   and partitions closed-loop clients by index (`client_class`, a pure
+//!   function of the client id — bit-identical under heap/wheel pending
+//!   queues and lazy client admission). Also owns the priority→rank table.
+//! - [`AdmissionCtl`] — deterministic per-class token buckets evaluated at
+//!   route time on the coordination boundary. Both engines route arrivals
+//!   in identical global order with identical decision times, so admission
+//!   verdicts are engine-invariant by construction. Rejected requests are
+//!   recorded as `shed` (never silently dropped) and tallied per class.
+//!
+//! An empty `[tenants]` section compiles to an empty `TenantSet`: no RNG
+//! stream is constructed, no draw happens, no bucket exists — the
+//! simulator is bit-identical to the pre-tenancy code in both engines.
+
+use crate::config::{SloSpec, TenancySpec};
+use crate::util::rng::Rng;
+
+/// Dedicated RNG stream selector for open-loop tenant stamping. Tenants are
+/// drawn at the arrival source in global id order, independent of the
+/// arrival-lane split, so lane counts never change tenant assignment.
+pub const TENANT_STREAM: u64 = 0x7e4a;
+
+/// One tenant class, resolved from `[[tenants.class]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    /// Fraction of open-loop traffic / closed-loop clients (shares sum to 1).
+    pub share: f64,
+    /// Priority tier: larger = more important. Ties are rejected at config
+    /// validation so the rank order is total.
+    pub priority: u32,
+    /// Per-class SLO targets (ms). `0` inherits the global `[slo]` value.
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    /// Admission budget in requests/s; `0` = unlimited (never shed).
+    pub rate_budget: f64,
+    /// Token-bucket burst capacity (requests). Only meaningful with a budget.
+    pub burst: f64,
+}
+
+/// Compiled tenant table: classes plus cumulative shares and the
+/// priority→rank mapping (rank 0 = highest-priority tier).
+#[derive(Debug, Clone, Default)]
+pub struct TenantSet {
+    classes: Vec<TenantClass>,
+    /// Cumulative shares, `cum[i] = share[0] + … + share[i]`; last entry
+    /// forced to exactly 1.0 so draws and client partitions never fall off
+    /// the end from float residue.
+    cum: Vec<f64>,
+    /// `ranks[i]` = dense rank of class `i` (0 = top tier).
+    ranks: Vec<u8>,
+}
+
+impl TenantSet {
+    /// Compile a validated `[tenants]` spec. `Config::validate` has already
+    /// checked shares/priorities/budgets; this only normalizes.
+    pub fn build(spec: &TenancySpec, global_slo: &SloSpec) -> Self {
+        let mut classes = spec.classes.clone();
+        for c in &mut classes {
+            if c.ttft_ms <= 0.0 {
+                c.ttft_ms = global_slo.ttft_ms;
+            }
+            if c.tpot_ms <= 0.0 {
+                c.tpot_ms = global_slo.tpot_ms;
+            }
+        }
+        let mut cum = Vec::with_capacity(classes.len());
+        let mut acc = 0.0;
+        for c in &classes {
+            acc += c.share;
+            cum.push(acc);
+        }
+        if let Some(last) = cum.last_mut() {
+            *last = 1.0;
+        }
+        // Dense ranks: sort distinct priorities descending; rank 0 = largest.
+        let mut prios: Vec<u32> = classes.iter().map(|c| c.priority).collect();
+        prios.sort_unstable_by(|a, b| b.cmp(a));
+        prios.dedup();
+        let ranks = classes
+            .iter()
+            .map(|c| prios.iter().position(|&p| p == c.priority).unwrap_or(0) as u8)
+            .collect();
+        Self { classes, cum, ranks }
+    }
+
+    /// No classes configured — tenancy is inert.
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn classes(&self) -> &[TenantClass] {
+        &self.classes
+    }
+
+    pub fn class(&self, t: u8) -> &TenantClass {
+        &self.classes[t as usize]
+    }
+
+    /// Draw a tenant for one open-loop arrival. Consumes exactly one f64
+    /// from the dedicated tenant RNG; callers must not invoke this when the
+    /// set is empty (no draw = bit-identical no-tenancy behavior).
+    pub fn draw(&self, rng: &mut Rng) -> u8 {
+        debug_assert!(!self.is_empty());
+        let u = rng.f64();
+        for (i, &c) in self.cum.iter().enumerate() {
+            if u < c {
+                return i as u8;
+            }
+        }
+        (self.classes.len() - 1) as u8
+    }
+
+    /// Partition closed-loop client `c` of a population of `n` into a class:
+    /// class `i` owns client indices `[floor(cum[i-1]·n), floor(cum[i]·n))`,
+    /// with the last class absorbing the remainder. A pure function of the
+    /// client index — independent of materialization order, pending-queue
+    /// kind, and admission laziness.
+    pub fn client_class(&self, c: usize, n: usize) -> u8 {
+        debug_assert!(!self.is_empty());
+        for (i, &cf) in self.cum.iter().enumerate() {
+            if c < (cf * n as f64).floor() as usize {
+                return i as u8;
+            }
+        }
+        (self.classes.len() - 1) as u8
+    }
+
+    /// Dense priority rank of a stamped tenant (0 = top tier). Untenanted
+    /// requests rank 0 so priority policies are neutral when tenancy is off.
+    pub fn rank_of(&self, tenant: Option<u8>) -> u8 {
+        match tenant {
+            Some(t) if (t as usize) < self.ranks.len() => self.ranks[t as usize],
+            _ => 0,
+        }
+    }
+
+    /// Per-class SLO with global fallbacks already resolved at build time.
+    pub fn slo_of(&self, t: u8) -> SloSpec {
+        let c = self.class(t);
+        SloSpec { ttft_ms: c.ttft_ms, tpot_ms: c.tpot_ms }
+    }
+}
+
+/// Per-class token-bucket state.
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens: f64,
+    last: f64,
+}
+
+/// Deterministic admission controller living on the coordination boundary.
+/// One bucket per budgeted class; refills are a pure function of the
+/// decision timestamps `route_next` receives, which are identical across
+/// engines (both route arrivals in the same global order at the same times).
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionCtl {
+    buckets: Vec<Option<Bucket>>,
+    shed: Vec<u64>,
+    admitted: Vec<u64>,
+}
+
+impl AdmissionCtl {
+    pub fn new(set: &TenantSet) -> Self {
+        let buckets = set
+            .classes()
+            .iter()
+            .map(|c| {
+                (c.rate_budget > 0.0)
+                    .then(|| Bucket { tokens: c.burst.max(1.0), last: 0.0 })
+            })
+            .collect();
+        Self { buckets, shed: vec![0; set.len()], admitted: vec![0; set.len()] }
+    }
+
+    /// Admission verdict for one arrival of class `t` at decision time
+    /// `now` (seconds). Unbudgeted classes always admit. Monotone `now` is
+    /// guaranteed by arrival ordering; a zero-or-negative elapsed interval
+    /// refills nothing.
+    pub fn admit(&mut self, t: u8, now: f64, set: &TenantSet) -> bool {
+        let verdict = match self.buckets.get_mut(t as usize).and_then(|b| b.as_mut()) {
+            None => true,
+            Some(b) => {
+                let c = set.class(t);
+                let dt = (now - b.last).max(0.0);
+                b.tokens = (b.tokens + dt * c.rate_budget).min(c.burst.max(1.0));
+                b.last = now;
+                if b.tokens >= 1.0 {
+                    b.tokens -= 1.0;
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if verdict {
+            self.admitted[t as usize] += 1;
+        } else {
+            self.shed[t as usize] += 1;
+        }
+        verdict
+    }
+
+    /// Per-class shed tally (the ledger: every rejection is accounted).
+    pub fn shed_by_class(&self) -> &[u64] {
+        &self.shed
+    }
+
+    pub fn admitted_by_class(&self) -> &[u64] {
+        &self.admitted
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+}
+
+/// Per-replica fault history stamped by `commit_fault` on the
+/// `ClusterView` (satellite: fault-aware routing). Commit order is the
+/// coordination-event order, identical in both engines, so the history a
+/// policy observes at any routing decision is engine-invariant.
+#[derive(Debug, Clone, Default)]
+pub struct FaultHistory {
+    replicas: Vec<ReplicaFaults>,
+}
+
+/// Death/brownout record for one replica. Times are `f64::NEG_INFINITY`
+/// until the first event so "recently faulted" tests need no Option.
+#[derive(Debug, Clone)]
+pub struct ReplicaFaults {
+    pub downs: u32,
+    pub brownouts: u32,
+    pub last_down: f64,
+    pub last_up: f64,
+    pub last_brownout: f64,
+}
+
+impl Default for ReplicaFaults {
+    fn default() -> Self {
+        Self {
+            downs: 0,
+            brownouts: 0,
+            last_down: f64::NEG_INFINITY,
+            last_up: f64::NEG_INFINITY,
+            last_brownout: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl FaultHistory {
+    pub fn new(replicas: usize) -> Self {
+        Self { replicas: vec![ReplicaFaults::default(); replicas] }
+    }
+
+    fn slot(&mut self, replica: usize) -> &mut ReplicaFaults {
+        if replica >= self.replicas.len() {
+            self.replicas.resize_with(replica + 1, ReplicaFaults::default);
+        }
+        &mut self.replicas[replica]
+    }
+
+    /// Instance death on `replica` committed at `t`.
+    pub fn note_down(&mut self, replica: usize, t: f64) {
+        let s = self.slot(replica);
+        s.downs += 1;
+        s.last_down = s.last_down.max(t);
+    }
+
+    /// Instance revival on `replica` committed at `t`. A revival is itself a
+    /// "recent fault" signal: the replica comes back with cold caches.
+    pub fn note_up(&mut self, replica: usize, t: f64) {
+        let s = self.slot(replica);
+        s.last_up = s.last_up.max(t);
+    }
+
+    /// Brownout (NPU slowdown, KV-link degradation, store-partition loss)
+    /// on `replica` committed at `t`.
+    pub fn note_brownout(&mut self, replica: usize, t: f64) {
+        let s = self.slot(replica);
+        s.brownouts += 1;
+        s.last_brownout = s.last_brownout.max(t);
+    }
+
+    pub fn get(&self, replica: usize) -> Option<&ReplicaFaults> {
+        self.replicas.get(replica)
+    }
+
+    /// Any death/revival/brownout on `replica` within `window` seconds of
+    /// `now`? Replicas with no history are never recent.
+    pub fn recent(&self, replica: usize, now: f64, window: f64) -> bool {
+        match self.replicas.get(replica) {
+            None => false,
+            Some(s) => {
+                let cut = now - window;
+                s.last_down >= cut || s.last_up >= cut || s.last_brownout >= cut
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.iter().all(|s| s.downs == 0 && s.brownouts == 0 && s.last_up == f64::NEG_INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TenancySpec;
+
+    fn three_classes() -> TenancySpec {
+        TenancySpec {
+            classes: vec![
+                TenantClass {
+                    name: "premium".into(),
+                    share: 0.2,
+                    priority: 10,
+                    ttft_ms: 1000.0,
+                    tpot_ms: 40.0,
+                    rate_budget: 0.0,
+                    burst: 1.0,
+                },
+                TenantClass {
+                    name: "standard".into(),
+                    share: 0.5,
+                    priority: 5,
+                    ttft_ms: 0.0,
+                    tpot_ms: 0.0,
+                    rate_budget: 0.0,
+                    burst: 1.0,
+                },
+                TenantClass {
+                    name: "batch".into(),
+                    share: 0.3,
+                    priority: 1,
+                    ttft_ms: 8000.0,
+                    tpot_ms: 200.0,
+                    rate_budget: 2.0,
+                    burst: 4.0,
+                },
+            ],
+        }
+    }
+
+    fn set() -> TenantSet {
+        TenantSet::build(&three_classes(), &SloSpec::decode_disagg())
+    }
+
+    #[test]
+    fn build_resolves_slo_inheritance_and_ranks() {
+        let s = set();
+        assert_eq!(s.len(), 3);
+        // standard inherits the global 2000/50.
+        assert!((s.slo_of(1).ttft_ms - 2000.0).abs() < 1e-12);
+        assert!((s.slo_of(1).tpot_ms - 50.0).abs() < 1e-12);
+        assert!((s.slo_of(0).ttft_ms - 1000.0).abs() < 1e-12);
+        // priority 10 > 5 > 1 → ranks 0, 1, 2.
+        assert_eq!(s.rank_of(Some(0)), 0);
+        assert_eq!(s.rank_of(Some(1)), 1);
+        assert_eq!(s.rank_of(Some(2)), 2);
+        assert_eq!(s.rank_of(None), 0, "untenanted requests are rank-neutral");
+    }
+
+    #[test]
+    fn draw_matches_shares_statistically() {
+        let s = set();
+        let mut rng = Rng::with_stream(42, TENANT_STREAM);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[s.draw(&mut rng) as usize] += 1;
+        }
+        assert!((counts[0] as f64 / n as f64 - 0.2).abs() < 0.01);
+        assert!((counts[1] as f64 / n as f64 - 0.5).abs() < 0.01);
+        assert!((counts[2] as f64 / n as f64 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn client_partition_is_exhaustive_ordered_and_share_proportional() {
+        let s = set();
+        let n = 1000;
+        let mut counts = [0usize; 3];
+        let mut last = 0u8;
+        for c in 0..n {
+            let t = s.client_class(c, n);
+            assert!(t >= last, "class blocks are contiguous in client order");
+            last = t;
+            counts[t as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), n);
+        assert_eq!(counts[0], 200);
+        assert_eq!(counts[1], 500);
+        assert_eq!(counts[2], 300);
+    }
+
+    #[test]
+    fn client_partition_is_a_pure_function_of_index() {
+        let s = set();
+        // Same answers regardless of query order (lazy materialization).
+        let forward: Vec<u8> = (0..64).map(|c| s.client_class(c, 64)).collect();
+        let mut backward: Vec<u8> = (0..64).rev().map(|c| s.client_class(c, 64)).collect();
+        backward.reverse();
+        assert_eq!(forward, backward);
+    }
+
+    #[test]
+    fn admission_bucket_refills_and_sheds() {
+        let s = set();
+        let mut ctl = AdmissionCtl::new(&s);
+        // Unbudgeted classes always admit.
+        for i in 0..100 {
+            assert!(ctl.admit(0, i as f64 * 1e-3, &s));
+        }
+        // Class 2: burst 4, 2 req/s. Burst drains, then sheds.
+        for _ in 0..4 {
+            assert!(ctl.admit(2, 0.0, &s));
+        }
+        assert!(!ctl.admit(2, 0.0, &s));
+        assert_eq!(ctl.shed_by_class()[2], 1);
+        // After 1 s, 2 tokens refilled.
+        assert!(ctl.admit(2, 1.0, &s));
+        assert!(ctl.admit(2, 1.0, &s));
+        assert!(!ctl.admit(2, 1.0, &s));
+        assert_eq!(ctl.total_shed(), 2);
+        assert_eq!(ctl.admitted_by_class()[0], 100);
+        assert_eq!(ctl.admitted_by_class()[2], 6);
+    }
+
+    #[test]
+    fn admission_is_a_pure_function_of_decision_times() {
+        let s = set();
+        let times = [0.0, 0.1, 0.2, 0.9, 1.4, 1.4, 2.0, 3.3];
+        let run = || {
+            let mut ctl = AdmissionCtl::new(&s);
+            times.iter().map(|&t| ctl.admit(2, t, &s)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "identical decision times ⇒ identical verdicts");
+    }
+
+    #[test]
+    fn fault_history_recency_window() {
+        let mut h = FaultHistory::new(3);
+        assert!(h.is_empty());
+        h.note_down(1, 10.0);
+        h.note_up(1, 14.0);
+        h.note_brownout(2, 5.0);
+        assert!(!h.is_empty());
+        assert!(h.recent(1, 20.0, 10.0), "revival at 14 within 10 s of 20");
+        assert!(!h.recent(1, 80.0, 10.0));
+        assert!(h.recent(2, 12.0, 10.0));
+        assert!(!h.recent(0, 12.0, 10.0), "clean replica never recent");
+        assert!(!h.recent(99, 12.0, 10.0), "unknown replica never recent");
+        assert_eq!(h.get(1).unwrap().downs, 1);
+    }
+}

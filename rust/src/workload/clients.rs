@@ -62,6 +62,7 @@
 
 use crate::config::{ClientsSpec, EnvelopePoint, VitDesc, WorkloadSpec};
 use crate::sim::engine::sec_to_ns;
+use crate::tenancy::TenantSet;
 use crate::util::hash::Fnv1a;
 use crate::util::rng::{Rng, ZipfTable};
 use crate::util::timerwheel::TimerWheel;
@@ -70,7 +71,7 @@ use crate::workload::{
     ImageInput, RequestSpec, SessionRef,
 };
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 /// RNG stream family for client think/shape draws; lane = client index.
 pub(crate) const CLIENT_STREAM: u64 = 0xc11e;
@@ -286,13 +287,28 @@ struct Client {
     image: Option<ImageInput>,
 }
 
-/// A scheduled next turn, ordered by `(arrival_ns, client)` — the
-/// engine-invariant issue order.
+/// Queue entry payload: a scheduled next turn, or the patience deadline of
+/// an in-flight request (armed at issue when `clients.patience_s > 0`). A
+/// deadline whose request already completed is stale and dropped silently
+/// when it surfaces.
+#[derive(Debug)]
+enum Pending {
+    Turn(RequestSpec),
+    Deadline { rid: u64 },
+}
+
+/// A scheduled pool event, ordered by `(at_ns, client)` — the
+/// engine-invariant issue order. A client never has a live deadline and a
+/// pending turn for the *same* instant with the same semantics riding on
+/// order: while a request is in flight its client has no pending turn, and
+/// by the time a same-instant key collision could occur (completion-timed
+/// turn vs. the old stale deadline) the deadline is stale, so either
+/// processing order yields identical outcomes.
 #[derive(Debug)]
 struct PendingTurn {
     at_ns: u64,
     client: usize,
-    spec: RequestSpec,
+    payload: Pending,
 }
 
 impl PartialEq for PendingTurn {
@@ -319,7 +335,7 @@ impl Ord for PendingTurn {
 #[derive(Debug)]
 enum PendingQueue {
     Heap(BinaryHeap<Reverse<PendingTurn>>),
-    Wheel(TimerWheel<RequestSpec>),
+    Wheel(TimerWheel<Pending>),
 }
 
 impl PendingQueue {
@@ -335,7 +351,7 @@ impl PendingQueue {
     fn push(&mut self, turn: PendingTurn) {
         match self {
             Self::Heap(h) => h.push(Reverse(turn)),
-            Self::Wheel(w) => w.insert(turn.at_ns, turn.client as u64, turn.spec),
+            Self::Wheel(w) => w.insert(turn.at_ns, turn.client as u64, turn.payload),
         }
     }
 
@@ -349,9 +365,9 @@ impl PendingQueue {
     fn pop(&mut self) -> Option<PendingTurn> {
         match self {
             Self::Heap(h) => h.pop().map(|Reverse(p)| p),
-            Self::Wheel(w) => {
-                w.pop().map(|(at_ns, key, spec)| PendingTurn { at_ns, client: key as usize, spec })
-            }
+            Self::Wheel(w) => w
+                .pop()
+                .map(|(at_ns, key, payload)| PendingTurn { at_ns, client: key as usize, payload }),
         }
     }
 
@@ -386,6 +402,9 @@ pub struct SessionRecord {
     pub turns_issued: u32,
     pub turns_completed: u32,
     pub turns_gave_up: u32,
+    /// Turns the client walked away from at its patience deadline
+    /// (`clients.patience_s`); the server-side work still completed.
+    pub turns_abandoned: u32,
     /// First turn's arrival (`f64::INFINITY` if the session never started).
     pub first_issue: f64,
     /// Last observed completion (`f64::NEG_INFINITY` if none yet).
@@ -401,6 +420,7 @@ impl SessionRecord {
             turns_issued: 0,
             turns_completed: 0,
             turns_gave_up: 0,
+            turns_abandoned: 0,
             first_issue: f64::INFINITY,
             last_finish: f64::NEG_INFINITY,
         }
@@ -432,6 +452,11 @@ pub struct ClosedLoopReport {
     pub issued: u64,
     pub completed: u64,
     pub gave_up: u64,
+    /// Turns abandoned at their patience deadline (`clients.patience_s`).
+    pub abandoned: u64,
+    /// Request ids of abandoned turns, sorted — engines stamp the matching
+    /// request records from this list at run finish.
+    pub abandoned_rids: Vec<u64>,
     /// Per-session aggregates. With `clients.retain_realized = true` this
     /// is the full dense `clients × sessions` vector (blank records for
     /// sessions that never started); with `false` only sessions that
@@ -480,6 +505,15 @@ pub struct ClientPool {
     issued: u64,
     completed: u64,
     gave_up: u64,
+    abandoned: u64,
+    /// Ids of abandoned requests, in deadline-processing order (which is
+    /// `(deadline_ns, client)` order — engine-invariant).
+    abandoned_rids: Vec<u64>,
+    /// Same ids, for O(1) membership when a late completion arrives.
+    abandoned_set: HashSet<u64>,
+    /// Tenant classes partitioning the client population (empty on
+    /// untenanted runs: requests stamp `tenant: None`).
+    tenants: TenantSet,
     /// Lazy admission frontier: clients `>= frontier` are not yet
     /// materialized; `frontier_wake_ns` is the envelope's exact admission
     /// time for client `frontier` (`None` = every remaining client parks
@@ -535,6 +569,10 @@ impl ClientPool {
             issued: 0,
             completed: 0,
             gave_up: 0,
+            abandoned: 0,
+            abandoned_rids: Vec::new(),
+            abandoned_set: HashSet::new(),
+            tenants: TenantSet::default(),
             frontier: 0,
             frontier_wake_ns: None,
             cursor: EnvelopeCursor::default(),
@@ -554,6 +592,16 @@ impl ClientPool {
         pool.frontier_wake_ns = pool.next_admission();
         pool.settle();
         pool
+    }
+
+    /// Partition the client population into tenant classes. Client `c`'s
+    /// class is a pure function of its index and the configured population
+    /// ([`TenantSet::client_class`] over cumulative-share boundaries), so
+    /// the mapping is independent of engine, queue kind, and lazy-admission
+    /// order — stamped at issue, it perturbs no RNG draw. A no-op when the
+    /// set is empty (untenanted runs stamp `tenant: None`).
+    pub fn set_tenants(&mut self, set: TenantSet) {
+        self.tenants = set;
     }
 
     /// The envelope's exact admission time for the current frontier client,
@@ -638,13 +686,14 @@ impl ClientPool {
                 self.pending.push(PendingTurn {
                     at_ns,
                     client: c,
-                    spec: RequestSpec {
+                    payload: Pending::Turn(RequestSpec {
                         id: 0, // assigned at issue so id order == arrival order
                         image,
                         text_tokens,
                         output_tokens: self.workload.output_tokens,
                         session: Some(SessionRef { id: uid, turn }),
-                    },
+                        tenant: None, // stamped at issue from the client index
+                    }),
                 });
                 self.peak_pending = self.peak_pending.max(self.pending.len());
             }
@@ -663,30 +712,78 @@ impl ClientPool {
 
     /// Issue the head turn if it is due at `now_ns`. Callers loop until
     /// `None` to drain all same-instant arrivals in `(t, client)` order.
+    /// Due patience deadlines are processed internally along the way: a
+    /// deadline whose request is still in flight abandons it (the client
+    /// moves on); one whose request already completed is dropped.
     pub fn pop_due(&mut self, now_ns: u64) -> Option<ArrivedRequest> {
-        if self.pending.peek_ns()? > now_ns {
-            return None;
+        loop {
+            if self.pending.peek_ns()? > now_ns {
+                return None;
+            }
+            let p = self.pending.pop().unwrap();
+            let mut spec = match p.payload {
+                Pending::Deadline { rid } => {
+                    self.expire(rid, p.at_ns);
+                    continue;
+                }
+                Pending::Turn(spec) => spec,
+            };
+            spec.id = self.next_id;
+            if !self.tenants.is_empty() {
+                spec.tenant = Some(self.tenants.client_class(p.client, self.spec.clients));
+            }
+            self.next_id += 1;
+            self.issued += 1;
+            self.in_flight.insert(spec.id, p.client);
+            self.push_conc((p.at_ns, 1, spec.id), now_ns);
+            if self.spec.patience_s > 0.0 {
+                // The deadline is anchored at the scheduled arrival (not the
+                // pop instant), so it is engine-invariant by construction.
+                self.pending.push(PendingTurn {
+                    at_ns: p.at_ns + sec_to_ns(self.spec.patience_s),
+                    client: p.client,
+                    payload: Pending::Deadline { rid: spec.id },
+                });
+            }
+            let uid = spec.session.unwrap().id;
+            let arrival = p.at_ns as f64 / 1e9;
+            let rec = self.sessions.get_mut(&uid).expect("issue against a started session");
+            rec.turns_issued += 1;
+            if arrival < rec.first_issue {
+                rec.first_issue = arrival;
+            }
+            let req = ArrivedRequest { spec, arrival };
+            arrived_update(&mut self.realized_fnv, &mut self.digest_buf, &req);
+            if self.retain {
+                self.realized.push(req);
+            }
+            self.settle();
+            return Some(req);
         }
-        let mut p = self.pending.pop().unwrap();
-        p.spec.id = self.next_id;
-        self.next_id += 1;
-        self.issued += 1;
-        self.in_flight.insert(p.spec.id, p.client);
-        self.push_conc((p.at_ns, 1, p.spec.id), now_ns);
-        let uid = p.spec.session.unwrap().id;
-        let arrival = p.at_ns as f64 / 1e9;
-        let rec = self.sessions.get_mut(&uid).expect("issue against a started session");
-        rec.turns_issued += 1;
-        if arrival < rec.first_issue {
-            rec.first_issue = arrival;
-        }
-        let req = ArrivedRequest { spec: p.spec, arrival };
-        arrived_update(&mut self.realized_fnv, &mut self.digest_buf, &req);
-        if self.retain {
-            self.realized.push(req);
-        }
-        self.settle();
-        Some(req)
+    }
+
+    /// A patience deadline came due. If the request is still in flight the
+    /// client abandons it: the turn counts as abandoned, the session
+    /// advances, and the next turn is scheduled a think past the deadline.
+    /// The server-side work is untouched — its eventual completion is
+    /// swallowed by [`ClientPool::on_result`]. Stale deadlines (request
+    /// already completed) are dropped.
+    fn expire(&mut self, rid: u64, deadline_ns: u64) {
+        let Some(c) = self.in_flight.remove(&rid) else {
+            // Completed within patience; nothing to do. Re-settle anyway:
+            // dropping the queue head may expose the admission frontier.
+            self.settle();
+            return;
+        };
+        self.conc_buf.push((deadline_ns, -1, rid));
+        self.abandoned += 1;
+        self.abandoned_rids.push(rid);
+        self.abandoned_set.insert(rid);
+        let session = self.clients[&c].session;
+        let uid = (c * self.spec.sessions + session) as u64;
+        let rec = self.sessions.get_mut(&uid).expect("abandonment against a started session");
+        rec.turns_abandoned += 1;
+        self.advance_client(c, deadline_ns as f64 / 1e9);
     }
 
     /// Feed a completion (or a PR 6 give-up) back: advance the client's
@@ -694,10 +791,16 @@ impl ClientPool {
     /// session like completions — the client retries with its *next* turn,
     /// which is what produces the post-recovery surge.
     pub fn on_result(&mut self, rid: u64, t_finish: f64, gave_up: bool) {
-        let c = self
-            .in_flight
-            .remove(&rid)
-            .expect("closed-loop completion for a request the pool never issued");
+        let Some(c) = self.in_flight.remove(&rid) else {
+            // The client abandoned this request at its patience deadline
+            // and has already moved on; the late server-side completion is
+            // ignored (its concurrency −1 was recorded at the deadline).
+            assert!(
+                self.abandoned_set.contains(&rid),
+                "closed-loop completion for a request the pool never issued"
+            );
+            return;
+        };
         self.conc_buf.push((sec_to_ns(t_finish), -1, rid));
         let session = self.clients[&c].session;
         let uid = (c * self.spec.sessions + session) as u64;
@@ -712,7 +815,14 @@ impl ClientPool {
         if t_finish > rec.last_finish {
             rec.last_finish = t_finish;
         }
-        let cl = self.clients.get_mut(&c).expect("completion for a live client");
+        self.advance_client(c, t_finish);
+    }
+
+    /// Advance a client's turn/session cursor after a turn resolves
+    /// (completion, give-up, or abandonment) and schedule what follows at
+    /// `t_s` plus a think.
+    fn advance_client(&mut self, c: usize, t_s: f64) {
+        let cl = self.clients.get_mut(&c).expect("advance on a live client");
         cl.turn += 1;
         if cl.turn as usize >= self.spec.turns {
             cl.turn = 0;
@@ -724,7 +834,7 @@ impl ClientPool {
             }
             self.start_session(c);
         }
-        self.schedule_turn(c, t_finish);
+        self.schedule_turn(c, t_s);
         self.settle();
     }
 
@@ -772,6 +882,9 @@ impl ClientPool {
     /// No arrival will ever come again: nothing pending, nothing in flight
     /// (every non-done client always has exactly one of the two, and the
     /// settle invariant folds the admission frontier into "pending").
+    /// Stale patience deadlines count as pending until they surface — the
+    /// engines keep pumping [`ClientPool::pop_due`] at `peek_ns` wakes, so
+    /// they self-drain without issuing anything.
     pub fn exhausted(&self) -> bool {
         self.pending.is_empty() && self.in_flight.is_empty()
     }
@@ -839,10 +952,14 @@ impl ClientPool {
             v.sort_unstable_by_key(|r| (r.client, r.session));
             v
         };
+        let mut abandoned_rids = std::mem::take(&mut self.abandoned_rids);
+        abandoned_rids.sort_unstable();
         ClosedLoopReport {
             issued: self.issued,
             completed: self.completed,
             gave_up: self.gave_up,
+            abandoned: self.abandoned,
+            abandoned_rids,
             sessions,
             concurrency: std::mem::take(&mut self.conc_done),
             realized: std::mem::take(&mut self.realized),
@@ -874,6 +991,7 @@ mod tests {
             envelope: vec![],
             pending_queue: "heap".to_string(),
             retain_realized: true,
+            patience_s: 0.0,
         }
     }
 
@@ -1192,5 +1310,124 @@ mod tests {
         let hint = pool.horizon_hint();
         let log = drive(&mut pool, 0.5);
         assert!(log.iter().all(|r| r.arrival < hint));
+    }
+
+    #[test]
+    fn untriggered_patience_is_bit_identical_to_infinite_patience() {
+        // Service is far below patience, so every deadline surfaces stale;
+        // the run must be indistinguishable from patience_s = 0.
+        let wl = WorkloadSpec::sharegpt4o();
+        let mut patient = spec(6, 2, 3);
+        patient.patience_s = 1000.0;
+        let mut a = ClientPool::new(&spec(6, 2, 3), &wl, &vit(), 19);
+        let mut b = ClientPool::new(&patient, &wl, &vit(), 19);
+        assert_eq!(drive(&mut a, 0.2), drive(&mut b, 0.2));
+        assert_eq!(a.take_report(), b.take_report());
+    }
+
+    #[test]
+    fn impatient_clients_abandon_slow_turns_and_move_on() {
+        let mut s = spec(2, 1, 3);
+        s.patience_s = 0.05;
+        // Service 0.5 >> patience 0.05: every turn is abandoned at its
+        // deadline, yet clients still walk their full session scripts.
+        let mut pool = ClientPool::new(&s, &WorkloadSpec::sharegpt4o(), &vit(), 23);
+        let log = drive(&mut pool, 0.5);
+        let report = pool.take_report();
+        assert_eq!(log.len(), 6, "2 clients x 3 turns all issue");
+        assert_eq!(report.issued, 6);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.gave_up, 0);
+        assert_eq!(report.abandoned, 6);
+        assert_eq!(report.abandoned_rids, vec![0, 1, 2, 3, 4, 5]);
+        for rec in report.sessions.iter() {
+            assert_eq!(rec.turns_issued, 3);
+            assert_eq!(rec.turns_abandoned, 3);
+            assert_eq!(rec.turns_completed, 0);
+        }
+        // Concurrency deltas balance: the −1 lands at the deadline, and the
+        // late completion is swallowed without a second decrement.
+        assert_eq!(report.concurrency.iter().map(|&(_, d, _)| d as i64).sum::<i64>(), 0);
+        assert_eq!(report.concurrency.len(), 12);
+        // Consecutive turns of a client are separated by at least
+        // patience + think_min, not by the (much longer) service time.
+        let mut by_client: HashMap<u64, Vec<f64>> = HashMap::new();
+        for r in &log {
+            by_client.entry(r.spec.session.unwrap().id).or_default().push(r.arrival);
+        }
+        for arrivals in by_client.values() {
+            for w in arrivals.windows(2) {
+                let gap = w[1] - w[0];
+                assert!(gap >= 0.05 + 0.01 - 1e-9, "gap {gap} below patience + think floor");
+                assert!(gap < 0.5, "abandonment must not wait out the service time");
+            }
+        }
+    }
+
+    #[test]
+    fn patience_wheel_matches_heap() {
+        let wl = WorkloadSpec::sharegpt4o();
+        for service in [0.04, 0.3] {
+            let mut hs = spec(7, 2, 2);
+            hs.patience_s = 0.12;
+            let mut ws = hs.clone();
+            ws.pending_queue = "wheel".to_string();
+            let mut heap = ClientPool::new(&hs, &wl, &vit(), 29);
+            let mut wheel = ClientPool::new(&ws, &wl, &vit(), 29);
+            assert_eq!(drive(&mut heap, service), drive(&mut wheel, service));
+            let (rh, rw) = (heap.take_report(), wheel.take_report());
+            assert_eq!(rh, rw);
+            if service > 0.12 {
+                assert!(rh.abandoned > 0, "slow service must trigger abandonment");
+            } else {
+                assert_eq!(rh.abandoned, 0, "fast service must beat every deadline");
+            }
+        }
+    }
+
+    fn three_class_set() -> crate::tenancy::TenantSet {
+        use crate::config::{SloSpec, TenancySpec};
+        use crate::tenancy::TenantClass;
+        let cls = |name: &str, share: f64, priority: u32| TenantClass {
+            name: name.to_string(),
+            share,
+            priority,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            rate_budget: 0.0,
+            burst: 0.0,
+        };
+        crate::tenancy::TenantSet::build(
+            &TenancySpec {
+                classes: vec![cls("premium", 0.2, 10), cls("standard", 0.5, 5), cls("batch", 0.3, 1)],
+            },
+            &SloSpec::decode_disagg(),
+        )
+    }
+
+    #[test]
+    fn tenant_partition_is_a_pure_function_of_the_client_index() {
+        let wl = WorkloadSpec::sharegpt4o();
+        let set = three_class_set();
+        let mut plain = ClientPool::new(&spec(10, 1, 2), &wl, &vit(), 31);
+        let mut tenanted = ClientPool::new(&spec(10, 1, 2), &wl, &vit(), 31);
+        tenanted.set_tenants(set.clone());
+        let (pl, tl) = (drive(&mut plain, 0.1), drive(&mut tenanted, 0.1));
+        assert_eq!(pl.len(), tl.len());
+        for (p, t) in pl.iter().zip(tl.iter()) {
+            // Stamping consumes no RNG and shifts no arrival.
+            assert_eq!(p.arrival, t.arrival);
+            assert_eq!(p.spec.id, t.spec.id);
+            assert_eq!(p.spec.tenant, None);
+            // sessions = 1, so session uid == client index.
+            let client = t.spec.session.unwrap().id as usize;
+            assert_eq!(t.spec.tenant, Some(set.client_class(client, 10)));
+        }
+        // Share boundaries over 10 clients: 0.2/0.5/0.3 → 2/5/3 clients.
+        let mut counts = [0usize; 3];
+        for t in &tl {
+            counts[t.spec.tenant.unwrap() as usize] += 1;
+        }
+        assert_eq!(counts, [2 * 2, 5 * 2, 3 * 2], "each client issues 2 turns");
     }
 }

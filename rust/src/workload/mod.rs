@@ -53,6 +53,11 @@ pub struct RequestSpec {
     /// Multi-turn session membership (closed-loop workloads only; `None`
     /// for every open-loop request, keeping those paths byte-identical).
     pub session: Option<SessionRef>,
+    /// Tenant-class index into the `[tenants]` class list; `None` on every
+    /// untenanted run (the bit-identical off path). Stamped at the arrival
+    /// source (open-loop, dedicated RNG stream) or at client partitioning
+    /// (closed-loop); see [`crate::tenancy`].
+    pub tenant: Option<u8>,
 }
 
 impl RequestSpec {
@@ -144,6 +149,12 @@ pub(crate) fn arrived_update(h: &mut crate::util::hash::Fnv1a, buf: &mut String,
         }
         None => buf.push_str("-|"),
     }
+    match a.spec.tenant {
+        Some(t) => {
+            let _ = write!(buf, "{t}|");
+        }
+        None => buf.push_str("-|"),
+    }
     let _ = write!(buf, "{:016x};", a.arrival.to_bits());
     h.update(buf.as_bytes());
 }
@@ -162,7 +173,14 @@ pub(crate) fn sample_spec(
 ) -> RequestSpec {
     let image = sample_image(rng, spec, vit, zipf, seed);
     let text_tokens = sample_text_tokens(rng, spec);
-    RequestSpec { id, image, text_tokens, output_tokens: spec.output_tokens, session: None }
+    RequestSpec {
+        id,
+        image,
+        text_tokens,
+        output_tokens: spec.output_tokens,
+        session: None,
+        tenant: None,
+    }
 }
 
 /// Draw a request's (optional) image: presence by `image_fraction`, identity

@@ -44,6 +44,7 @@
 //! stays exactly what it was before streaming existed.
 
 use crate::config::{VitDesc, WorkloadSpec};
+use crate::tenancy::{TenantSet, TENANT_STREAM};
 use crate::util::rng::{Rng, ZipfTable};
 use crate::workload::clients::ClientPool;
 use crate::workload::injector::{Arrival, ARRIVAL_STREAM};
@@ -51,6 +52,23 @@ use crate::workload::phases::{phased_image_pool, PhasePlan, PhasedStream};
 use crate::workload::{image_pool, sample_spec, ArrivedRequest, SPEC_STREAM};
 use std::collections::VecDeque;
 use std::sync::Arc;
+
+/// Draws a tenant class per yielded request from the dedicated
+/// [`TENANT_STREAM`] RNG stream, in **global id order** — one draw per
+/// request regardless of how many arrival lanes sampled it, so the
+/// tenant sequence is identical for any lane count and for both engines
+/// (the source is consumed only at the coordination boundary).
+pub struct TenantStamper {
+    set: TenantSet,
+    rng: Rng,
+}
+
+impl TenantStamper {
+    pub fn new(set: TenantSet, seed: u64) -> Self {
+        debug_assert!(!set.is_empty(), "stamper over an empty tenant set");
+        Self { set, rng: Rng::with_stream(seed, TENANT_STREAM) }
+    }
+}
 
 /// Lazily samples the exact request sequence of
 /// `inject(&generate(spec, vit, seed), rate, process, seed)` — or, for
@@ -430,6 +448,14 @@ pub enum ArrivalSource {
     /// though clients the envelope has not yet admitted exist only as an
     /// implicit admission frontier (no per-client state until first wake).
     ClosedLoop(ClientPool),
+    /// An open-loop lazy source wrapped with tenant-class stamping
+    /// ([`TenantStamper`]): each yielded request's `spec.tenant` is drawn
+    /// at the yield point, post lane-merge, in global id order. Built by
+    /// [`ArrivalSource::stamped`] on tenanted runs; never nests, never
+    /// wraps Replay (traces carry their own tenants) or ClosedLoop
+    /// (clients are partitioned into tenants at the pool, a pure function
+    /// of client index).
+    Tenanted(Box<ArrivalSource>, TenantStamper),
 }
 
 impl ArrivalSource {
@@ -490,10 +516,28 @@ impl ArrivalSource {
         ArrivalSource::ClosedLoop(pool)
     }
 
+    /// Wrap this source with tenant-class stamping. Identity when the set
+    /// is empty (untenanted runs stay bit-identical to the pre-tenancy
+    /// simulator: no wrapper, no RNG creation, no draws) and for
+    /// Replay/ClosedLoop sources (traces carry their own tenants;
+    /// closed-loop clients are partitioned at the pool).
+    pub fn stamped(self, set: &TenantSet, seed: u64) -> Self {
+        if set.is_empty() {
+            return self;
+        }
+        match self {
+            s @ (ArrivalSource::Replay(_)
+            | ArrivalSource::ClosedLoop(_)
+            | ArrivalSource::Tenanted(..)) => s,
+            s => ArrivalSource::Tenanted(Box::new(s), TenantStamper::new(set.clone(), seed)),
+        }
+    }
+
     /// The closed-loop pool, if this source is one.
     pub fn pool(&self) -> Option<&ClientPool> {
         match self {
             ArrivalSource::ClosedLoop(p) => Some(p),
+            ArrivalSource::Tenanted(inner, _) => inner.pool(),
             _ => None,
         }
     }
@@ -503,15 +547,27 @@ impl ArrivalSource {
     pub fn pool_mut(&mut self) -> Option<&mut ClientPool> {
         match self {
             ArrivalSource::ClosedLoop(p) => Some(p),
+            ArrivalSource::Tenanted(inner, _) => inner.pool_mut(),
             _ => None,
         }
     }
 
     /// The lane-split merge, if this source is one — the sharded engine
-    /// detaches lanes from it to pre-sample on shard workers.
+    /// detaches lanes from it to pre-sample on shard workers (tenant
+    /// stamping happens above the merge, so detachment composes).
     pub(crate) fn lanes_mut(&mut self) -> Option<&mut MergedArrivals> {
         match self {
             ArrivalSource::Lanes(m) => Some(m),
+            ArrivalSource::Tenanted(inner, _) => inner.lanes_mut(),
+            _ => None,
+        }
+    }
+
+    /// The lane-split merge, read-only (presampling accounting).
+    pub(crate) fn lanes(&self) -> Option<&MergedArrivals> {
+        match self {
+            ArrivalSource::Lanes(m) => Some(m),
+            ArrivalSource::Tenanted(inner, _) => inner.lanes(),
             _ => None,
         }
     }
@@ -529,6 +585,7 @@ impl ArrivalSource {
             }
             ArrivalSource::Phased(s) => s.last_arrival(),
             ArrivalSource::Lanes(m) => m.last_arrival(),
+            ArrivalSource::Tenanted(inner, _) => inner.last_arrival(),
             // The pool cannot know its realized last arrival up-front; it
             // reports a generous horizon hint minus the engines' uniform
             // `+3600 s` drain margin, so existing `last_arrival + 3600`
@@ -550,6 +607,7 @@ impl ArrivalSource {
             ArrivalSource::Phased(s) => s.len_total(),
             ArrivalSource::Lanes(m) => m.len_total(),
             ArrivalSource::ClosedLoop(p) => p.len_total(),
+            ArrivalSource::Tenanted(inner, _) => inner.len_total(),
         }
     }
 }
@@ -566,6 +624,10 @@ impl Iterator for ArrivalSource {
             // Endogenous arrivals are pulled via the pool API, never the
             // open-loop iterator (the engines branch before calling next).
             ArrivalSource::ClosedLoop(_) => None,
+            ArrivalSource::Tenanted(inner, st) => inner.next().map(|mut a| {
+                a.spec.tenant = Some(st.set.draw(&mut st.rng));
+                a
+            }),
         }
     }
 }
@@ -771,6 +833,101 @@ mod tests {
         assert_eq!(lanes.last_arrival(), 0.0);
         assert_eq!(lanes.len_total(), 0);
         assert_eq!(lanes.count(), 0);
+    }
+
+    fn three_class_set() -> TenantSet {
+        use crate::config::TenancySpec;
+        use crate::tenancy::TenantClass;
+        let class = |name: &str, share: f64, priority: u32| TenantClass {
+            name: name.into(),
+            share,
+            priority,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        };
+        TenantSet::build(
+            &TenancySpec {
+                classes: vec![
+                    class("premium", 0.2, 10),
+                    class("standard", 0.5, 5),
+                    class("batch", 0.3, 1),
+                ],
+            },
+            &crate::config::SloSpec::decode_disagg(),
+        )
+    }
+
+    #[test]
+    fn empty_tenant_set_is_the_identity_wrap() {
+        let spec = WorkloadSpec::sharegpt4o();
+        let src = ArrivalSource::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1)
+            .stamped(&TenantSet::default(), 42);
+        assert!(matches!(src, ArrivalSource::Stream(_)), "empty set must not wrap");
+        let arrivals: Vec<ArrivedRequest> = src.collect();
+        assert!(arrivals.iter().all(|a| a.spec.tenant.is_none()));
+        // And it matches the unstamped source bit-exactly.
+        let plain: Vec<ArrivedRequest> =
+            ArrivalSource::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1).collect();
+        assert_eq!(arrivals, plain);
+    }
+
+    #[test]
+    fn tenant_stamping_is_lane_count_invariant() {
+        // The tenant sequence is a function of global id order alone: the
+        // same workload split over 1/2/5 lanes stamps identically (only
+        // the Uniform process makes the lane merge itself bit-identical
+        // across lane counts, so use it to isolate the stamper).
+        let set = three_class_set();
+        let mut spec = WorkloadSpec::sharegpt4o();
+        spec.num_requests = 64;
+        let runs: Vec<Vec<Option<u8>>> = [1usize, 2, 5]
+            .into_iter()
+            .map(|lanes| {
+                ArrivalSource::streamed(&spec, &vit(), 4.0, Arrival::Uniform, 7, lanes)
+                    .stamped(&set, 7)
+                    .map(|a| a.spec.tenant)
+                    .collect()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+        assert!(runs[0].iter().all(|t| t.is_some()));
+        // All three classes actually show up over 64 draws.
+        let classes: std::collections::HashSet<u8> = runs[0].iter().map(|t| t.unwrap()).collect();
+        assert_eq!(classes.len(), 3, "{classes:?}");
+    }
+
+    #[test]
+    fn stamping_leaves_shapes_and_arrivals_untouched() {
+        let set = three_class_set();
+        let spec = WorkloadSpec::sharegpt4o();
+        let plain: Vec<ArrivedRequest> =
+            ArrivalSource::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1).collect();
+        let stamped: Vec<ArrivedRequest> =
+            ArrivalSource::streamed(&spec, &vit(), 3.0, Arrival::Poisson, 42, 1)
+                .stamped(&set, 42)
+                .collect();
+        assert_eq!(plain.len(), stamped.len());
+        for (p, s) in plain.iter().zip(&stamped) {
+            assert_eq!(p.arrival, s.arrival, "dedicated RNG stream: arrivals unperturbed");
+            assert_eq!(p.spec.text_tokens, s.spec.text_tokens);
+            assert_eq!(p.spec.output_tokens, s.spec.output_tokens);
+            assert_eq!(p.spec.image, s.spec.image);
+            assert!(s.spec.tenant.is_some());
+        }
+    }
+
+    #[test]
+    fn replay_sources_pass_through_stamping() {
+        let set = three_class_set();
+        let spec = WorkloadSpec::sharegpt4o();
+        let arrivals = inject(&generate(&spec, &vit(), 1), 4.0, Arrival::Uniform, 1);
+        let src = ArrivalSource::replay(arrivals.clone()).stamped(&set, 1);
+        assert!(matches!(src, ArrivalSource::Replay(_)), "traces carry their own tenants");
+        let back: Vec<ArrivedRequest> = src.collect();
+        assert_eq!(back, arrivals);
     }
 
     #[test]

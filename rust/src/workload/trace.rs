@@ -21,6 +21,9 @@ pub fn to_json(r: &ArrivedRequest) -> Json {
         sj.set("id", s.id).set("turn", s.turn as u64);
         o.set("session", sj);
     }
+    if let Some(t) = r.spec.tenant {
+        o.set("tenant", t as u64);
+    }
     if let Some(img) = &r.spec.image {
         let mut im = Json::obj();
         // The interned u64 key is serialized as fixed-width hex: JSON
@@ -68,6 +71,7 @@ pub fn from_json(v: &Json) -> Result<ArrivedRequest> {
         }
         None => None,
     };
+    let tenant = v.get("tenant").and_then(Json::as_f64).map(|t| t as u8);
     Ok(ArrivedRequest {
         spec: RequestSpec {
             id: get_num("id")? as u64,
@@ -75,6 +79,7 @@ pub fn from_json(v: &Json) -> Result<ArrivedRequest> {
             text_tokens: get_num("text_tokens")? as usize,
             output_tokens: get_num("output_tokens")? as usize,
             session,
+            tenant,
         },
         arrival: get_num("arrival")?,
     })
@@ -150,12 +155,14 @@ mod tests {
                 text_tokens: 4,
                 output_tokens: 8,
                 session: Some(SessionRef { id: 9, turn: 3 }),
+                tenant: Some(2),
             },
             arrival: 0.5,
         };
         let back = from_json(&to_json(&r)).unwrap();
         assert_eq!(back.spec.image.unwrap().key, 0xfedc_ba98_7654_3210);
         assert_eq!(back.spec.session, Some(SessionRef { id: 9, turn: 3 }));
+        assert_eq!(back.spec.tenant, Some(2), "tenant class survives the trace round trip");
     }
 
     #[test]
@@ -167,6 +174,7 @@ mod tests {
                 text_tokens: 1,
                 output_tokens: 1,
                 session: None,
+                tenant: None,
             },
             arrival: 0.0,
         });

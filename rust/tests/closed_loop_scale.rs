@@ -116,6 +116,64 @@ fn wheel_is_bit_identical_to_heap_on_randomized_scenarios() {
 }
 
 #[test]
+fn patience_abandonment_is_queue_and_engine_invariant() {
+    // `clients.patience_s` (ISSUE 10 satellite): a client walks away from a
+    // turn whose completion misses its patience deadline — the deadline
+    // rides the same pending queue as scheduled turns, so wheel ≡ heap and
+    // single ≡ sharded must keep holding bit for bit, and the `abandoned`
+    // stamp on the served records must be exactly the pool's rid ledger.
+    let mut rng = Rng::new(0xab4d0);
+    let mut any_abandoned = false;
+    for trial in 0..4 {
+        let mut heap_cfg = random_scenario(&mut rng, trial);
+        // Trial 0 pins the guaranteed-trigger end (no turn serves in 50 ms
+        // on this fleet); the rest sample the contested range where only
+        // slow turns — faults, queueing — blow the deadline.
+        heap_cfg.clients.patience_s =
+            if trial == 0 { 0.05 } else { 0.3 + rng.f64() * 0.9 };
+        let mut wheel_cfg = heap_cfg.clone();
+        wheel_cfg.clients.pending_queue = "wheel".to_string();
+
+        let h = run_single(&heap_cfg);
+        let w = run_single(&wheel_cfg);
+        assert_eq!(
+            h.metrics.records, w.metrics.records,
+            "trial {trial}: patience deadlines must fire identically on wheel and heap"
+        );
+        assert_eq!(h.closed_loop, w.closed_loop, "trial {trial}");
+        let hs = run_sharded(&heap_cfg);
+        let ws = run_sharded(&wheel_cfg);
+        assert_eq!(h.metrics.records, hs.metrics.records, "trial {trial}: heap single ≡ sharded");
+        assert_eq!(h.closed_loop, hs.closed_loop, "trial {trial}");
+        assert_eq!(w.metrics.records, ws.metrics.records, "trial {trial}: wheel single ≡ sharded");
+        assert_eq!(w.closed_loop, ws.closed_loop, "trial {trial}");
+
+        let report = h.closed_loop.as_ref().unwrap();
+        assert_eq!(
+            report.completed + report.gave_up + report.abandoned,
+            report.issued,
+            "trial {trial}: every issued turn completes, gives up, or is abandoned"
+        );
+        // The record stamp is the ledger: same rids, nothing else flagged.
+        let stamped: Vec<u64> =
+            h.metrics.records.iter().filter(|r| r.abandoned).map(|r| r.id).collect();
+        assert_eq!(stamped, report.abandoned_rids, "trial {trial}");
+        // Abandonment is client-side only — unless a fault independently
+        // killed the work, the server still finishes it, so abandoned
+        // records carry full service timings.
+        for r in h.metrics.records.iter().filter(|r| r.abandoned) {
+            assert!(
+                r.finish.is_some() || r.gave_up,
+                "trial {trial}: abandoned rid {} must still be served to completion",
+                r.id
+            );
+        }
+        any_abandoned |= report.abandoned > 0;
+    }
+    assert!(any_abandoned, "the tight-patience trial must trigger abandonment");
+}
+
+#[test]
 fn non_retaining_runs_match_retaining_digests_and_stats() {
     let mut rng = Rng::new(0x1ea4);
     for trial in 0..4 {

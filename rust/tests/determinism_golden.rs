@@ -329,6 +329,92 @@ fn fault_storm_trajectory_pinned() {
 }
 
 #[test]
+fn tenant_storm_trajectory_pinned() {
+    // The multi-tenant stack end to end (ISSUE 10): stamped open-loop
+    // arrivals, admission sheds on the coordination boundary, priority
+    // routing/balancing/preemption, and a fault storm feeding the
+    // `fault_aware`-visible history — all through every equivalence layer
+    // (fused/unfused, streamed/materialized replay, single/sharded,
+    // K ∈ {1, 8}) and pinned under tests/golden. Shed records consume ids
+    // without touching a shard, so this scenario is also the regression
+    // net for the shed-aware termination rule in both engines.
+    use epd_serve::sim::faults::{FaultEvent, FaultKind};
+    use epd_serve::tenancy::TenantClass;
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 10.0;
+    cfg.workload.num_requests = 128;
+    cfg.workload.image_reuse = 0.3;
+    cfg.scheduler.route_policy = "priority_route".to_string();
+    cfg.scheduler.balance_policy = "priority_balance".to_string();
+    cfg.scheduler.batch_policy = "priority_preempt".to_string();
+    cfg.tenants.classes = vec![
+        TenantClass {
+            name: "premium".into(),
+            share: 0.2,
+            priority: 10,
+            ttft_ms: 2000.0,
+            tpot_ms: 50.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        },
+        TenantClass {
+            name: "standard".into(),
+            share: 0.5,
+            priority: 5,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        },
+        TenantClass {
+            name: "besteffort".into(),
+            share: 0.3,
+            priority: 1,
+            ttft_ms: 8000.0,
+            tpot_ms: 200.0,
+            rate_budget: 1.0,
+            burst: 2.0,
+        },
+    ];
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 3.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 2 } },
+        FaultEvent { t: 7.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 1.0 } },
+    ];
+    check_scenario("tenant_storm_x2", &cfg);
+    let out = run_serving(&cfg).unwrap();
+    assert!(out.metrics.shed() > 0, "the scenario must exercise admission sheds");
+    assert!(out.metrics.records.iter().all(|r| r.tenant.is_some()));
+    assert_eq!(out.faults_applied, 4);
+}
+
+#[test]
+fn fault_aware_trajectory_pinned() {
+    // The fault-aware route/balance pair steers by the death/brownout
+    // history `commit_fault` stamps on the ClusterView — stateful inputs
+    // that exist only at the coordination boundary, so the policy's whole
+    // trajectory is pinned across fusion, replay, sharding, and epochs.
+    use epd_serve::sim::faults::{FaultEvent, FaultKind};
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = 128;
+    cfg.workload.image_reuse = 0.3;
+    cfg.scheduler.route_policy = "fault_aware".to_string();
+    cfg.scheduler.balance_policy = "fault_aware".to_string();
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 3.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+        FaultEvent { t: 8.0, kind: FaultKind::InstanceUp { inst: 2 } },
+    ];
+    check_scenario("fault_aware_x2", &cfg);
+    let out = run_serving(&cfg).unwrap();
+    assert_eq!(out.faults_applied, 3, "the history the policy reads must be non-trivial");
+}
+
+#[test]
 fn closed_loop_trajectory_pinned() {
     // Closed-loop clients make arrivals *endogenous* — a session's next
     // turn exists only after the previous one completes — so layer 3's

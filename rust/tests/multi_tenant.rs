@@ -1,0 +1,292 @@
+//! Multi-tenant serving invariants (ISSUE 10).
+//!
+//! The tenancy contract, pinned end to end:
+//!
+//! - **Per-class conservation**: every arrival of every class ends in
+//!   exactly one of completed / shed / gave-up — admission rejections are
+//!   first-class records, never silent drops.
+//! - **Empty `[tenants]` is inert**: no stamp, no shed, no admission
+//!   state; and with every request at the neutral rank, the
+//!   `priority_preempt` batcher degenerates to exactly the FCFS reference
+//!   (bit-identical records), so priority machinery costs nothing when
+//!   tenancy is off. The golden layers in `tests/determinism_golden.rs`
+//!   carry the cross-PR identity proof.
+//! - **Determinism & engine invariance**: tenant draws, admission
+//!   verdicts, and priority picks are bit-identical run-to-run, between
+//!   the single-loop and sharded engines, at route epochs K ∈ {1, 8},
+//!   and through a fault storm.
+//! - **Starvation bound**: under sustained overload with the priority
+//!   stack, aging (`scheduler.preempt_aging`) keeps the bottom tier
+//!   flowing — best-effort work interleaves with premium instead of
+//!   waiting for the premium stream to drain (the per-bypass bound itself
+//!   is unit-pinned in `policy/batch.rs`).
+//! - **Closed-loop partition**: with `[clients]` enabled, clients split
+//!   into contiguous share-proportional class blocks and every issued
+//!   turn carries its owner's stamp, identically in both engines.
+
+use epd_serve::config::Config;
+use epd_serve::coordinator::metrics::{records_digest, RequestRecord};
+use epd_serve::coordinator::simserve::{run_serving, ServingSim};
+use epd_serve::sim::faults::{FaultEvent, FaultKind};
+use epd_serve::tenancy::TenantClass;
+
+/// premium 20 % / standard 50 % / besteffort 30 %, with only the bottom
+/// tier budgeted (2 req/s, burst 4) so overload sheds exactly one class.
+fn classes() -> Vec<TenantClass> {
+    vec![
+        TenantClass {
+            name: "premium".into(),
+            share: 0.2,
+            priority: 10,
+            ttft_ms: 2000.0,
+            tpot_ms: 50.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        },
+        TenantClass {
+            name: "standard".into(),
+            share: 0.5,
+            priority: 5,
+            ttft_ms: 0.0,
+            tpot_ms: 0.0,
+            rate_budget: 0.0,
+            burst: 1.0,
+        },
+        TenantClass {
+            name: "besteffort".into(),
+            share: 0.3,
+            priority: 1,
+            ttft_ms: 8000.0,
+            tpot_ms: 200.0,
+            rate_budget: 2.0,
+            burst: 4.0,
+        },
+    ]
+}
+
+fn tenanted_cfg(n: usize, rate: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = rate;
+    cfg.workload.num_requests = n;
+    cfg.workload.image_reuse = 0.3;
+    cfg.tenants.classes = classes();
+    cfg
+}
+
+fn priority_stack(cfg: &mut Config) {
+    cfg.scheduler.route_policy = "priority_route".to_string();
+    cfg.scheduler.balance_policy = "priority_balance".to_string();
+    cfg.scheduler.batch_policy = "priority_preempt".to_string();
+}
+
+/// (issued, completed, shed, gave_up) for class `t`, from the records.
+fn per_class(records: &[RequestRecord], t: u8) -> (usize, usize, usize, usize) {
+    let of: Vec<&RequestRecord> = records.iter().filter(|r| r.tenant == Some(t)).collect();
+    (
+        of.len(),
+        of.iter().filter(|r| r.finish.is_some()).count(),
+        of.iter().filter(|r| r.shed).count(),
+        of.iter().filter(|r| r.gave_up).count(),
+    )
+}
+
+#[test]
+fn per_class_conservation_under_overload_and_storm() {
+    // 18 req/s over a fleet that saturates well below that, plus a
+    // death/revival pair mid-trace: every class must still conserve.
+    let mut cfg = tenanted_cfg(160, 18.0);
+    priority_stack(&mut cfg);
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 2 } },
+    ];
+    let out = run_serving(&cfg).unwrap();
+    assert_eq!(out.faults_applied, 2);
+    assert_eq!(out.metrics.records.len(), 160, "every arrival leaves a record");
+    assert!(out.metrics.records.iter().all(|r| r.tenant.is_some()));
+
+    let mut issued_total = 0;
+    for t in 0..3u8 {
+        let (issued, completed, shed, gave_up) = per_class(&out.metrics.records, t);
+        assert!(issued > 0, "class {t} must receive traffic at these shares");
+        assert_eq!(
+            completed + shed + gave_up,
+            issued,
+            "class {t}: completed + shed + gave_up must equal issued"
+        );
+        issued_total += issued;
+        if t == 2 {
+            assert!(shed > 0, "the budgeted class must shed at 5.4 req/s offered vs 2 budgeted");
+        } else {
+            assert_eq!(shed, 0, "unbudgeted class {t} must never shed");
+        }
+    }
+    assert_eq!(issued_total, 160, "tenant stamps partition the trace");
+
+    // Shed records are rejections, not failures: no service timestamps,
+    // no retries, not conflated with fault give-ups.
+    for r in out.metrics.records.iter().filter(|r| r.shed) {
+        assert!(r.finish.is_none() && r.ttft.is_none(), "shed rid {} never served", r.id);
+        assert!(!r.gave_up && r.retries == 0, "shed rid {} is not a fault casualty", r.id);
+    }
+}
+
+#[test]
+fn empty_tenants_is_inert() {
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-D-Dx2".to_string();
+    cfg.rate = 6.0;
+    cfg.workload.num_requests = 96;
+    cfg.workload.image_reuse = 0.3;
+    assert!(cfg.tenants.classes.is_empty(), "tenancy is opt-in");
+
+    let single = run_serving(&cfg).unwrap();
+    let sharded = ServingSim::streamed(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(single.metrics.records, sharded.metrics.records);
+    for r in &single.metrics.records {
+        assert!(r.tenant.is_none() && !r.shed && !r.abandoned, "no tenancy observables");
+    }
+    assert_eq!(single.metrics.shed(), 0);
+
+    // With every request at the neutral rank, priority_preempt's
+    // (rank, position) selection is always the queue front — the FCFS
+    // reference formers exactly, bit for bit, in both engines.
+    let mut preempt_cfg = cfg.clone();
+    preempt_cfg.scheduler.batch_policy = "priority_preempt".to_string();
+    let preempt = run_serving(&preempt_cfg).unwrap();
+    assert_eq!(
+        single.metrics.records, preempt.metrics.records,
+        "rank-neutral priority_preempt must be bit-identical to fcfs"
+    );
+    let preempt_sharded = ServingSim::streamed(preempt_cfg).unwrap().run_sharded();
+    assert_eq!(single.metrics.records, preempt_sharded.metrics.records);
+}
+
+#[test]
+fn tenanted_runs_are_deterministic_and_engine_invariant() {
+    // The full stack — stamping, admission sheds, priority picks — through
+    // a fault storm, at route epochs K ∈ {1, 8}, on both engines, twice.
+    let mut cfg = tenanted_cfg(128, 12.0);
+    priority_stack(&mut cfg);
+    cfg.faults.events = vec![
+        FaultEvent { t: 2.0, kind: FaultKind::InstanceDown { inst: 2 } },
+        FaultEvent { t: 3.0, kind: FaultKind::NpuSlowdown { npu: 1, factor: 0.5 } },
+        FaultEvent { t: 6.0, kind: FaultKind::InstanceUp { inst: 2 } },
+    ];
+
+    let a = run_serving(&cfg).unwrap();
+    let b = run_serving(&cfg).unwrap();
+    assert_eq!(
+        records_digest(&a.metrics.records),
+        records_digest(&b.metrics.records),
+        "tenant draws and admission verdicts must be deterministic"
+    );
+
+    let sharded = ServingSim::streamed(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(
+        a.metrics.records, sharded.metrics.records,
+        "K=1: tenanted + faulted trajectory must be engine-invariant"
+    );
+    assert_eq!(a.metrics.shed(), sharded.metrics.shed());
+    assert_eq!(a.faults_applied, sharded.faults_applied);
+    assert!(a.metrics.shed() > 0, "the scenario must exercise admission");
+
+    let mut k8 = cfg.clone();
+    k8.scheduler.route_epoch = 8;
+    let k8_single = ServingSim::streamed(k8.clone()).unwrap().run();
+    let k8_sharded = ServingSim::streamed(k8).unwrap().run_sharded();
+    assert_eq!(
+        k8_single.metrics.records, k8_sharded.metrics.records,
+        "K=8: epoch-batched routing must shed and prioritize identically"
+    );
+
+    // Admission without priority scheduling (default policies) is also
+    // engine-invariant — the controller lives on the coordination
+    // boundary, not in any policy.
+    let plain = tenanted_cfg(128, 12.0);
+    let p_single = run_serving(&plain).unwrap();
+    let p_sharded = ServingSim::streamed(plain).unwrap().run_sharded();
+    assert_eq!(p_single.metrics.records, p_sharded.metrics.records);
+    assert!(p_single.metrics.shed() > 0);
+}
+
+#[test]
+fn starvation_bounded_under_sustained_overload() {
+    // 20 req/s of mixed traffic, no faults, priority stack: premium keeps
+    // arriving for the whole span, so without aging the bottom tier would
+    // only drain at the end. With the default `preempt_aging`, admitted
+    // best-effort work must interleave: some of it finishes while most of
+    // the premium stream is still in flight.
+    let mut cfg = tenanted_cfg(200, 20.0);
+    priority_stack(&mut cfg);
+    let out = run_serving(&cfg).unwrap();
+
+    let (issued, completed, shed, gave_up) = per_class(&out.metrics.records, 2);
+    assert_eq!(completed + shed + gave_up, issued);
+    assert!(completed > 0, "the bottom tier must not be starved out of completion");
+    assert!(
+        out.metrics.records.iter().filter(|r| r.tenant == Some(2) && !r.shed).all(|r| r.ttft.is_some()),
+        "every admitted best-effort request must reach its first token"
+    );
+
+    let premium_finishes: Vec<f64> = out
+        .metrics
+        .records
+        .iter()
+        .filter(|r| r.tenant == Some(0))
+        .filter_map(|r| r.finish)
+        .collect();
+    let premium_median = {
+        let mut v = premium_finishes.clone();
+        v.sort_by(f64::total_cmp);
+        v[v.len() / 2]
+    };
+    let early_besteffort = out
+        .metrics
+        .records
+        .iter()
+        .filter(|r| r.tenant == Some(2))
+        .filter_map(|r| r.finish)
+        .filter(|&f| f < premium_median)
+        .count();
+    assert!(
+        early_besteffort > 0,
+        "aging must let best-effort work finish while premium traffic is still flowing"
+    );
+}
+
+#[test]
+fn closed_loop_clients_partition_into_contiguous_class_blocks() {
+    // 12 clients at shares 0.2/0.5/0.3 → blocks of 2/6/4 clients; every
+    // turn carries its owner's stamp, on both engines.
+    let mut cfg = Config::default();
+    cfg.deployment = "E-P-Dx2".to_string();
+    cfg.clients.enabled = true;
+    cfg.clients.clients = 12;
+    cfg.clients.sessions = 1;
+    cfg.clients.turns = 2;
+    cfg.clients.think_mean_s = 0.4;
+    cfg.clients.think_min_s = 0.05;
+    cfg.workload.image_reuse = 0.3;
+    cfg.tenants.classes = classes();
+
+    let single = run_serving(&cfg).unwrap();
+    let sharded = ServingSim::closed_loop(cfg.clone()).unwrap().run_sharded();
+    assert_eq!(
+        single.metrics.records, sharded.metrics.records,
+        "closed-loop tenancy must be engine-invariant"
+    );
+    assert_eq!(single.closed_loop, sharded.closed_loop);
+
+    assert!(single.metrics.records.iter().all(|r| r.tenant.is_some()));
+    let mut issued = [0usize; 3];
+    for t in 0..3u8 {
+        let (n, completed, shed, gave_up) = per_class(&single.metrics.records, t);
+        assert_eq!(completed + shed + gave_up, n, "class {t} conserves");
+        issued[t as usize] = n;
+    }
+    // 2/6/4 clients × 2 turns each; a shed turn still advances the session
+    // (`on_result`), so per-class issue counts are exact.
+    assert_eq!(issued, [4, 12, 8], "share-proportional contiguous client blocks");
+}
